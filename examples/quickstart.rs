@@ -1,0 +1,36 @@
+//! Quickstart: search the optimal hybrid parallel plan for Mixtral-8x7B
+//! on a 4×A6000 node under the paper's long-context/constrained-output
+//! scenario, and compare against the static TP baseline.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::planner::HapPlanner;
+
+fn main() -> anyhow::Result<()> {
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let scenario = Scenario::long_constrained(); // 4096-token ctx, 64-token gen
+
+    // Train the module-level latency simulation models (η/ρ random
+    // forests on the platform's microbenchmark protocol) and solve the
+    // strategy ILP.
+    let planner = HapPlanner::new(&model, &node);
+    let plan = planner.plan(&scenario, scenario.generate)?;
+    println!("{plan}\n");
+
+    let tp = planner.tp_baseline(&scenario);
+    println!(
+        "static TP predicts {:.0} ms; HAP predicts {:.0} ms → {:.2}x speedup",
+        tp * 1e3,
+        plan.predicted_total * 1e3,
+        tp / plan.predicted_total
+    );
+
+    // The same call adapts across platforms: NVLink changes the answer.
+    let a100 = NodeConfig::a100x(4);
+    let planner_a100 = HapPlanner::new(&model, &a100);
+    let plan_a100 = planner_a100.plan(&scenario, scenario.generate)?;
+    println!("\non 4xA100 (NVLink) HAP instead picks: {}", plan_a100.signature());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! End-to-end serving driver (the required full-system validation):
+//! loads the real ~14M-parameter tiny-MoE AOT artifacts through the
+//! PJRT CPU runtime, plans with HAP, then serves a batched workload of
+//! generation requests through router → batcher → executor with REAL
+//! compute on the request path (Python is not involved), reporting
+//! latency/throughput under the HAP plan vs forced static TP.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_moe`
+
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::planner::HapPlanner;
+use hap::runtime::PjrtRuntime;
+use hap::serving::{serve_workload, Request, ServeConfig};
+use hap::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        anyhow::bail!("artifacts/ not built — run `make artifacts` first");
+    }
+
+    println!("loading + compiling AOT artifacts through PJRT ...");
+    let rt = PjrtRuntime::load(dir)?;
+    let m = rt.manifest.model.clone();
+    println!(
+        "tiny-moe: {} layers, hidden {}, {} experts (top-{}), batch {}, prompt {} — {} artifacts\n",
+        m.layers,
+        m.hidden,
+        m.num_experts,
+        m.top_k,
+        m.batch,
+        m.prefill_len,
+        rt.artifact_names().len()
+    );
+
+    // Ask the HAP planner what it would do for this shape on the demo
+    // node (the planner runs the same ILP the paper describes).
+    let model_cfg = MoEModelConfig::tiny_moe();
+    let node = NodeConfig::cpu_sim(4);
+    let scenario = Scenario::new("serve-demo", m.prefill_len, 24, m.batch);
+    let planner = HapPlanner::new(&model_cfg, &node);
+    let plan = planner.plan(&scenario, scenario.generate)?;
+    println!("HAP plan for the demo node: {}\n", plan.signature());
+
+    // Workload: 24 requests with varied prompts/budgets.
+    let make_workload = |seed: u64| -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        (0..24u64)
+            .map(|id| {
+                let len = rng.range(m.prefill_len / 2, m.prefill_len);
+                let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+                Request::new(id, prompt, 16)
+            })
+            .collect()
+    };
+
+    // HAP-style phase-specific plan (EP prefill → TP decode, the
+    // paper's dynamic parallelism transition) vs static TP.
+    for config in [ServeConfig::hap_transition(4), ServeConfig::tp(4)] {
+        println!("=== serving under {} ===", config.label());
+        let report = serve_workload(&rt, &config, make_workload(7))?;
+        println!("{}", report.metrics.summary());
+        println!(
+            "measured compute split: prefill {:.2} s | decode {:.2} s\n",
+            report.prefill_time, report.decode_time
+        );
+    }
+
+    println!(
+        "note: on this single-CPU demo node both configs do the same\n\
+         arithmetic, so throughput is similar — the point is that the\n\
+         full three-layer stack (Pallas kernels → HLO artifacts → PJRT →\n\
+         router/batcher/executor with a mid-request strategy transition)\n\
+         composes and produces identical tokens (asserted in\n\
+         rust/tests/runtime_e2e.rs). Platform-shaped latency effects are\n\
+         measured by the cluster-simulator benches (cargo bench)."
+    );
+    Ok(())
+}

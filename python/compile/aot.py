@@ -1,0 +1,194 @@
+"""AOT lowering: every (module, stage, shard) variant → HLO text.
+
+Python's last act: after ``make artifacts`` produces
+``artifacts/*.hlo.txt`` + ``manifest.json`` + ``weights.bin``, the Rust
+binary is self-contained and Python never runs on the request path.
+
+HLO **text** (not serialized proto) is the interchange format: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md). Everything is
+lowered with ``return_tuple=True`` and unwrapped with ``to_tuple`` on
+the Rust side.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .model import TINY
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shape_entry(s):
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+
+def build_artifacts(cfg=TINY):
+    """Yield (name, jitted_fn, input_specs, meta) for every artifact."""
+    b, s, m = cfg.batch, cfg.prefill_len, cfg.max_len
+    h, d, v = cfg.hidden, cfg.head_dim, cfg.vocab
+    e, i = cfg.num_experts, cfg.inter
+    arts = []
+
+    for t in (1, 2, 4):
+        hq_l = cfg.q_heads // t
+        kv_l = max(cfg.kv_heads // t, 1)
+        fn = functools.partial(
+            M.attn_prefill_module, q_heads=hq_l, kv_heads=kv_l, head_dim=d
+        )
+        ins = [
+            spec((b, s, h)),
+            spec((h,)),
+            spec((h, hq_l * d)),
+            spec((h, kv_l * d)),
+            spec((h, kv_l * d)),
+            spec((hq_l * d, h)),
+        ]
+        arts.append((f"attn_prefill_tp{t}", fn, ins, {"module": "attention", "stage": "prefill", "tp": t, "kv_local": kv_l, "q_local": hq_l}))
+
+        fn = functools.partial(
+            M.attn_decode_module, q_heads=hq_l, kv_heads=kv_l, head_dim=d
+        )
+        ins = [
+            spec((b, 1, h)),
+            spec((b, m, kv_l, d)),
+            spec((b, m, kv_l, d)),
+            spec((), jnp.int32),
+            spec((h,)),
+            spec((h, hq_l * d)),
+            spec((h, kv_l * d)),
+            spec((h, kv_l * d)),
+            spec((hq_l * d, h)),
+        ]
+        arts.append((f"attn_decode_tp{t}", fn, ins, {"module": "attention", "stage": "decode", "tp": t, "kv_local": kv_l, "q_local": hq_l}))
+
+    t_pre = b * s
+    t_dec = b
+    for t in (1, 2, 4):
+        i_l = i // t
+        for stage, tok, tile in (("prefill", t_pre, min(128, t_pre)), ("decode", t_dec, t_dec)):
+            fn = functools.partial(M.expert_module_tp, top_k=cfg.top_k, token_tile=tile)
+            ins = [
+                spec((tok, h)),
+                spec((h,)),
+                spec((h, e)),
+                spec((e, h, i_l)),
+                spec((e, h, i_l)),
+                spec((e, i_l, h)),
+            ]
+            arts.append((f"expert_{stage}_tp{t}", fn, ins, {"module": "expert", "stage": stage, "tp": t, "ep": 1}))
+
+    for ep in (2, 4):
+        e_l = e // ep
+        for stage, tok, tile in (("prefill", t_pre, min(128, t_pre)), ("decode", t_dec, t_dec)):
+            fn = functools.partial(M.expert_module_ep, top_k=cfg.top_k, token_tile=tile)
+            ins = [
+                spec((tok, h)),
+                spec((h,)),
+                spec((h, e)),
+                spec((e_l, e)),
+                spec((e_l, h, i)),
+                spec((e_l, h, i)),
+                spec((e_l, i, h)),
+            ]
+            arts.append((f"expert_{stage}_ep{ep}", fn, ins, {"module": "expert", "stage": stage, "tp": 1, "ep": ep}))
+
+    arts.append(
+        ("embed_prefill", M.embed_module, [spec((b, s), jnp.int32), spec((v, h))], {"module": "embed", "stage": "prefill"})
+    )
+    arts.append(
+        ("embed_decode", M.embed_module, [spec((b, 1), jnp.int32), spec((v, h))], {"module": "embed", "stage": "decode"})
+    )
+    arts.append(
+        ("head", M.head_module, [spec((b, h)), spec((h,)), spec((h, v))], {"module": "head", "stage": "both"})
+    )
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = TINY
+    weights = M.init_weights(args.seed, cfg)
+    M.write_weights_bin(weights, os.path.join(args.out_dir, "weights.bin"), cfg)
+    wtable = []
+    offset = 0
+    for name in M.weight_order(cfg):
+        shape = list(M.weight_shape(name, cfg))
+        n = int(np.prod(shape))
+        wtable.append({"name": name, "shape": shape, "offset_floats": offset})
+        offset += n
+
+    entries = []
+    for name, fn, ins, meta in build_artifacts(cfg):
+        lowered = jax.jit(fn).lower(*ins)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = jax.eval_shape(fn, *ins)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "meta": meta,
+                "inputs": [shape_entry(x) for x in ins],
+                "outputs": [shape_entry(x) for x in out_shapes],
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    manifest = {
+        "model": {
+            "name": "tiny-moe",
+            "batch": cfg.batch,
+            "prefill_len": cfg.prefill_len,
+            "max_len": cfg.max_len,
+            "hidden": cfg.hidden,
+            "q_heads": cfg.q_heads,
+            "kv_heads": cfg.kv_heads,
+            "head_dim": cfg.head_dim,
+            "num_experts": cfg.num_experts,
+            "top_k": cfg.top_k,
+            "inter": cfg.inter,
+            "vocab": cfg.vocab,
+            "layers": cfg.layers,
+            "seed": args.seed,
+        },
+        "weights_file": "weights.bin",
+        "weights": wtable,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(entries)} artifacts, {offset} weight floats")
+
+
+if __name__ == "__main__":
+    main()

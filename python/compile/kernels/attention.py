@@ -1,0 +1,162 @@
+"""L1 Pallas kernels: tiled causal attention (prefill) and KV-cache
+decode.
+
+GPU flash-attention stages K/V tiles through shared memory per
+threadblock; the TPU rethink expresses the same HBM→VMEM schedule with
+a Pallas grid over (batch·head, q-tile) and an inner fori_loop over
+k-tiles with online-softmax accumulators held in VMEM scratch
+(DESIGN.md §Hardware-Adaptation).
+
+Decode is a single-query attention against a padded KV cache with a
+position mask — one grid step per (batch, head), the whole cache row
+streamed through VMEM.
+
+``interpret=True`` — the CPU PJRT plugin cannot execute Mosaic calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_TILE = 64
+K_TILE = 64
+NEG_INF = -1e30
+
+
+def _prefill_kernel(q_ref, k_ref, v_ref, o_ref, *, k_tile, seq):
+    """Grid: (batch, q_heads, q tiles). Blocks:
+
+    q_ref: [Q_TILE, D]; k_ref/v_ref: [S, D] (whole row for this bh);
+    o_ref: [Q_TILE, D]. Online softmax over k-tiles.
+    """
+    qi = pl.program_id(2)
+    # Blocks arrive with leading singleton (batch, head) dims.
+    q = q_ref[0, 0]
+    d = q.shape[-1]
+    scale = 1.0 / (d ** 0.5)
+    q_tile = q.shape[0]
+
+    m = jnp.full((q_tile, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((q_tile, 1), jnp.float32)
+    acc = jnp.zeros((q_tile, d), jnp.float32)
+
+    n_k_tiles = seq // k_tile
+
+    def body(kt, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0, 0], kt * k_tile, k_tile, axis=0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0, 0], kt * k_tile, k_tile, axis=0)
+        s = (q @ k.T) * scale  # [Q_TILE, K_TILE]
+        # Causal mask: query row (qi*Q_TILE + r) attends keys ≤ itself.
+        q_pos = qi * q_tile + jax.lax.broadcasted_iota(jnp.int32, (q_tile, k_tile), 0)
+        k_pos = kt * k_tile + jax.lax.broadcasted_iota(jnp.int32, (q_tile, k_tile), 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(axis=-1, keepdims=True)
+        acc_new = alpha * acc + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, n_k_tiles, body, (m, l, acc))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "k_tile"))
+def attention_core_pallas(q, k, v, q_tile=Q_TILE, k_tile=K_TILE):
+    """Causal attention core (post-projection, pre-output-projection).
+
+    q: [B, S, Hq, D]; k/v: [B, S, Hq, D] (KV already repeated to Hq).
+    Returns ctx [B, S, Hq, D].
+    """
+    b, s, hq, d = q.shape
+    # Clamp tiles for short sequences (static shapes, so this happens
+    # once at trace time).
+    q_tile = min(q_tile, s)
+    k_tile = min(k_tile, s)
+    assert s % q_tile == 0 and s % k_tile == 0, (s, q_tile, k_tile)
+    # Layout: [B, H, S, D] so the grid can tile S per (b, h).
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    grid = (b, hq, s // q_tile)
+    out = pl.pallas_call(
+        functools.partial(_prefill_kernel, k_tile=k_tile, seq=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_tile, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_tile, d), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), q.dtype),
+        interpret=True,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, pos_ref, o_ref):
+    """Grid: (batch, q_heads). Single query vs padded cache row.
+
+    q_ref: [1, D]; k_ref/v_ref: [M, D]; pos_ref: [1] (valid length − 1,
+    i.e. the index of the newest token); o_ref: [1, D].
+    """
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    pos = pos_ref[0]
+    d = q.shape[-1]
+    m_len = k.shape[0]
+    scale = 1.0 / (d ** 0.5)
+    s = (q @ k.T) * scale  # [1, M]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, m_len), 1)
+    s = jnp.where(idx <= pos, s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o_ref[0, 0] = (p @ v / p.sum(axis=-1, keepdims=True)).astype(o_ref.dtype)
+
+
+@jax.jit
+def decode_core_pallas(q, k_cache, v_cache, pos):
+    """Single-step attention core against a padded cache.
+
+    q: [B, 1, Hq, D]; k_cache/v_cache: [B, M, Hq, D] (repeated to Hq);
+    pos: scalar int32 index of the newest valid token.
+    Returns ctx [B, 1, Hq, D].
+    """
+    b, _, hq, d = q.shape
+    m = k_cache.shape[1]
+    qt = q.transpose(0, 2, 1, 3)  # [B, H, 1, D]
+    kt = k_cache.transpose(0, 2, 1, 3)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+    grid = (b, hq)
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, m, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, m, d), lambda bi, hi: (bi, hi, 0, 0)),
+            pl.BlockSpec((1,), lambda bi, hi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bi, hi: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        interpret=True,
+    )(qt, kt, vt, pos_arr)
+    return out.transpose(0, 2, 1, 3)
+
+
+def vmem_footprint_bytes(seq, head_dim, q_tile=Q_TILE, dtype_bytes=4):
+    """Prefill kernel VMEM working set per grid step (§Perf)."""
+    return dtype_bytes * (
+        q_tile * head_dim  # q tile
+        + 2 * seq * head_dim  # k, v rows
+        + q_tile * head_dim  # acc
+        + 2 * q_tile  # m, l
+        + q_tile * head_dim  # out
+    )

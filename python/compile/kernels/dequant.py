@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: INT4 per-group dequantization.
+
+The transition path's device-side half: codes arrive packed two per
+byte (as int32 lanes of 8 nibbles for TPU-friendly layout here we keep
+one code per int32 lane — the packing is host-side), and each group of
+``group_size`` values shares an affine (scale, zero).
+
+Bandwidth-bound by design: 1 int32 read + 1 f32 write per element with
+a broadcast multiply-add — the VPU saturates HBM, which is what the
+``T_dequant`` dictionary in the Rust transition model assumes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP_TILE = 8  # groups per grid step
+
+
+def _dequant_kernel(codes_ref, scales_ref, zeros_ref, o_ref):
+    """Blocks: codes [GT, G] int32; scales/zeros [GT, 1]; out [GT, G]."""
+    c = codes_ref[...].astype(jnp.float32)
+    o_ref[...] = (c - zeros_ref[...]) * scales_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("group_size",))
+def dequant_int4_pallas(codes, scales, zeros, group_size):
+    """codes: int32 [N] in [-8, 7]; scales/zeros: f32 [N / group_size]."""
+    n = codes.shape[0]
+    g = n // group_size
+    assert g % GROUP_TILE == 0, (g, GROUP_TILE)
+    c2 = codes.reshape(g, group_size)
+    s2 = scales.reshape(g, 1)
+    z2 = zeros.reshape(g, 1)
+    out = pl.pallas_call(
+        _dequant_kernel,
+        grid=(g // GROUP_TILE,),
+        in_specs=[
+            pl.BlockSpec((GROUP_TILE, group_size), lambda i: (i, 0)),
+            pl.BlockSpec((GROUP_TILE, 1), lambda i: (i, 0)),
+            pl.BlockSpec((GROUP_TILE, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((GROUP_TILE, group_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, group_size), jnp.float32),
+        interpret=True,
+    )(c2, s2, z2)
+    return out.reshape(n)

@@ -1,0 +1,101 @@
+"""L1 Pallas kernel: fused MoE expert FFN (SwiGLU grouped matmul).
+
+The paper's compute hot-spot is the Expert module. On GPU this is a
+grouped GEMM over warps; the TPU rethink (DESIGN.md §Hardware-Adaptation)
+expresses the same schedule with a Pallas grid over (expert, token-tile)
+and BlockSpecs that stage one expert's weight panel plus one token tile
+through VMEM, hitting the MXU with (tile × H) @ (H × I) matmuls instead
+of WMMA fragments.
+
+Per-token routing weights arrive as a dense [T, E] matrix (zero outside
+the top-k), so the kernel is shape-static: every expert processes every
+token tile but multiplies its contribution by the (mostly zero) gate
+column. For the tiny demo model (E=8, I=512) this dense formulation is
+both MXU-friendly and exactly equal to the sparse dispatch semantics —
+the oracle in ref.py computes the sparse form.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Token-tile size: multiple of 8 sublanes; 128 aligns with the MXU'd
+# matmul dimension on real TPUs while staying small enough for the
+# interpret-mode tests to be fast.
+TOKEN_TILE = 128
+
+
+def _moe_ffn_kernel(x_ref, gates_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """Grid: (experts, token tiles). VMEM blocks:
+
+    x_ref:     [TILE, H]      — token tile (same for every expert step)
+    gates_ref: [TILE, 1]      — this expert's gate column for the tile
+    wg_ref/wu_ref: [H, I]     — expert e's gate/up panels
+    wd_ref:    [I, H]         — expert e's down panel
+    o_ref:     [TILE, H]      — accumulated output tile
+    """
+    e = pl.program_id(0)
+    x = x_ref[...]
+    # Weight blocks carry a leading singleton expert dim — index it off.
+    g = x @ wg_ref[0]
+    u = x @ wu_ref[0]
+    act = g * (1.0 / (1.0 + jnp.exp(-g))) * u
+    y = act @ wd_ref[0]
+    contrib = gates_ref[...] * y
+
+    # First expert initializes the accumulator, later ones add.
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(e > 0)
+    def _acc():
+        o_ref[...] += contrib
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile",))
+def moe_ffn_pallas(x, gates, w_gate, w_up, w_down, token_tile=TOKEN_TILE):
+    """Fused expert FFN over pre-computed dense gates.
+
+    x: [T, H] (T divisible by token_tile); gates: [T, E];
+    w_gate/w_up: [E, H, I]; w_down: [E, I, H] → [T, H].
+    """
+    t, h = x.shape
+    e = w_gate.shape[0]
+    i = w_gate.shape[2]
+    assert t % token_tile == 0, f"T={t} not divisible by tile {token_tile}"
+    grid = (e, t // token_tile)
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((token_tile, h), lambda ei, ti: (ti, 0)),
+            pl.BlockSpec((token_tile, 1), lambda ei, ti: (ti, ei)),
+            pl.BlockSpec((1, h, i), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, h, i), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, i, h), lambda ei, ti: (ei, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, h), lambda ei, ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h), x.dtype),
+        interpret=True,
+    )(x, gates, w_gate, w_up, w_down)
+
+
+def vmem_footprint_bytes(h, i, token_tile=TOKEN_TILE, dtype_bytes=4):
+    """Estimated VMEM working set of one grid step (for DESIGN.md §Perf):
+    token tile + gate column + three weight panels + output tile."""
+    return dtype_bytes * (
+        token_tile * h  # x tile
+        + token_tile  # gate column
+        + 2 * h * i  # gate/up panels
+        + i * h  # down panel
+        + token_tile * h  # output tile
+        + 2 * token_tile * i  # activations g/u
+    )

@@ -1,0 +1,137 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness).
+
+These are the ground truth the kernels are validated against in
+``python/tests/test_kernels.py`` (assert_allclose + hypothesis sweeps)
+and the semantics the Rust engine's combine logic assumes:
+
+- TP partials across devices **sum** to the unsharded output;
+- EP per-device contributions (owned experts only) **sum** to the full
+  routed output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down):
+    """SwiGLU expert FFN: (silu(x·Wg) ⊙ (x·Wu))·Wd.
+
+    x: [T, H]; w_gate/w_up: [H, I]; w_down: [I, H] → [T, H].
+    """
+    g = x @ w_gate
+    u = x @ w_up
+    act = jnp.asarray(silu(g) * u, x.dtype)
+    return act @ w_down
+
+
+def softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def topk_gate(x, w_router, top_k):
+    """Top-k router: returns weights [T, E] (zero outside the top-k).
+
+    Weights are the softmax over the selected experts' logits
+    renormalized over the top-k set — the Mixtral formulation.
+    """
+    logits = x @ w_router  # [T, E]
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    thresh = sorted_desc[:, top_k - 1 : top_k]
+    mask = (logits >= thresh).astype(x.dtype)
+    neg = jnp.finfo(jnp.float32).min
+    masked_logits = jnp.where(mask > 0, logits, neg)
+    weights = softmax(masked_logits, axis=-1) * mask
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    return weights
+
+
+def moe_ffn(x, w_router, w_gate, w_up, w_down, top_k, owned_mask=None):
+    """Full routed-expert module on tokens x: [T, H].
+
+    w_router: [H, E]; w_gate/w_up: [E, H, I]; w_down: [E, I, H].
+    owned_mask: optional [E] 0/1 vector — an EP shard owns a subset of
+    experts; non-owned contributions are dropped so that summing over
+    EP shards reconstructs the full output.
+    """
+    weights = topk_gate(x, w_router, top_k)
+    if owned_mask is not None:
+        weights = weights * owned_mask[None, :]
+    out = jnp.zeros_like(x)
+    num_experts = w_gate.shape[0]
+    for e in range(num_experts):
+        y = swiglu_ffn(x, w_gate[e], w_up[e], w_down[e])
+        out = out + weights[:, e : e + 1] * y
+    return out
+
+
+def rms_norm(x, scale, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(var + eps)) * scale
+
+
+def attention_prefill(x, wq, wk, wv, wo, q_heads, kv_heads, head_dim):
+    """Causal GQA prefill attention. x: [B, S, H].
+
+    Returns (out [B, S, H], k [B, S, KVH, D], v [B, S, KVH, D]).
+    """
+    b, s, _ = x.shape
+    q = (x @ wq).reshape(b, s, q_heads, head_dim)
+    k = (x @ wk).reshape(b, s, kv_heads, head_dim)
+    v = (x @ wv).reshape(b, s, kv_heads, head_dim)
+    rep = q_heads // kv_heads
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, x.dtype))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf) * scale  # [B, Hq, S, S]
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(causal[None, None, :, :], scores, jnp.finfo(jnp.float32).min)
+    probs = softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, vf).reshape(b, s, q_heads * head_dim)
+    return ctx @ wo, k, v
+
+
+def attention_decode(x, k_cache, v_cache, pos, wq, wk, wv, wo, q_heads, kv_heads, head_dim):
+    """Single-step GQA decode against a padded KV cache.
+
+    x: [B, 1, H]; k_cache/v_cache: [B, M, KVH, D]; pos: scalar int32 —
+    tokens 0..pos-1 are valid and the new token writes at index pos.
+    Returns (out [B, 1, H], new_k_cache, new_v_cache).
+    """
+    b, _, _ = x.shape
+    m = k_cache.shape[1]
+    q = (x @ wq).reshape(b, 1, q_heads, head_dim)
+    k_new = (x @ wk).reshape(b, 1, kv_heads, head_dim)
+    v_new = (x @ wv).reshape(b, 1, kv_heads, head_dim)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, pos, axis=1)
+    rep = q_heads // kv_heads
+    kf = jnp.repeat(k_cache, rep, axis=2)
+    vf = jnp.repeat(v_cache, rep, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(head_dim, x.dtype))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kf) * scale  # [B, Hq, 1, M]
+    valid = jnp.arange(m)[None, None, None, :] <= pos
+    scores = jnp.where(valid, scores, jnp.finfo(jnp.float32).min)
+    probs = softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", probs, vf).reshape(b, 1, q_heads * head_dim)
+    return ctx @ wo, k_cache, v_cache
+
+
+def dequant_int4_per_group(codes, scales, zeros, group_size):
+    """INT4 per-group dequantization reference.
+
+    codes: int32 [N] values in [-8, 7] (already unpacked); scales/zeros:
+    [N // group_size] f32. Matches the Rust `quant` module's affine form
+    x ≈ (code − zero) · scale.
+    """
+    n = codes.shape[0]
+    g = n // group_size
+    c = codes.reshape(g, group_size).astype(jnp.float32)
+    return ((c - zeros[:, None]) * scales[:, None]).reshape(n)

@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: softmax top-k expert gating.
+
+Computes dense routing weights [T, E]: softmax over the top-k experts'
+logits, zero elsewhere (the Mixtral formulation, matching
+``ref.topk_gate``). Dense output feeds the fused MoE FFN kernel and
+keeps shapes static for AOT lowering.
+
+Grid tiles tokens; each step holds a [TILE, H] activation block and the
+[H, E] router matrix in VMEM (E is small: 8–64).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TOKEN_TILE = 128
+NEG_INF = -1e30
+
+
+def _gate_kernel(x_ref, wr_ref, o_ref, *, top_k):
+    x = x_ref[...]
+    logits = x @ wr_ref[...]  # [TILE, E]
+    e = logits.shape[-1]
+
+    # Iteratively peel the max k times to find the k-th largest value
+    # (no jnp.sort in the kernel: keep ops MXU/VPU friendly).
+    def peel(i, carry):
+        work, kth = carry
+        cur = work.max(axis=-1, keepdims=True)
+        work = jnp.where(work >= cur, NEG_INF, work)
+        return work, cur
+
+    _, kth = jax.lax.fori_loop(0, top_k, peel, (logits, jnp.full((logits.shape[0], 1), NEG_INF)))
+    mask = logits >= kth
+    masked = jnp.where(mask, logits, NEG_INF)
+    m = masked.max(axis=-1, keepdims=True)
+    p = jnp.exp(masked - m)
+    w = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o_ref[...] = jnp.where(mask, w, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "token_tile"))
+def topk_gate_pallas(x, w_router, top_k, token_tile=TOKEN_TILE):
+    """x: [T, H]; w_router: [H, E] → weights [T, E]."""
+    t, h = x.shape
+    e = w_router.shape[1]
+    assert t % token_tile == 0, (t, token_tile)
+    return pl.pallas_call(
+        functools.partial(_gate_kernel, top_k=top_k),
+        grid=(t // token_tile,),
+        in_specs=[
+            pl.BlockSpec((token_tile, h), lambda ti: (ti, 0)),
+            pl.BlockSpec((h, e), lambda ti: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((token_tile, e), lambda ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, e), x.dtype),
+        interpret=True,
+    )(x, w_router)

@@ -1,0 +1,337 @@
+"""L2: the tiny-MoE JAX model — per-device module functions that the
+Rust coordinator composes on the request path.
+
+Contract with ``rust/src/model`` (see DESIGN.md):
+
+- The model is decomposed exactly as the paper decomposes MoE layers:
+  an **Attention module** and an **Expert module**, each lowered per
+  (stage, shard) variant to its own HLO artifact.
+- TP partial outputs **sum** across devices to the unsharded output;
+  EP per-device contributions (owned experts only) also **sum**. The
+  Rust runtime implements the combines (its "collectives").
+- RMS norms run *inside* each module (they need the combined residual
+  stream, which Rust holds between module calls).
+- Weights are runtime inputs (not baked constants) so one artifact per
+  shard degree serves every layer; Rust slices shards from
+  ``artifacts/weights.bin`` with the same layout as `shard_*` below.
+
+The tiny config must match `MoEModelConfig::tiny_moe()` on the Rust
+side.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.attention import attention_core_pallas, decode_core_pallas
+from .kernels.moe_ffn import moe_ffn_pallas
+from .kernels.topk_gate import topk_gate_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class TinyConfig:
+    """Demo model — ~27M params, runs for real on the CPU PJRT client."""
+
+    batch: int = 4
+    prefill_len: int = 64
+    max_len: int = 192  # prefill + decode budget
+    hidden: int = 256
+    q_heads: int = 8
+    kv_heads: int = 4
+    head_dim: int = 32
+    num_experts: int = 8
+    top_k: int = 2
+    inter: int = 512
+    vocab: int = 512
+    layers: int = 4
+
+
+TINY = TinyConfig()
+
+
+# --------------------------------------------------------------------------
+# Weight generation (seeded) and the on-disk layout for weights.bin.
+# --------------------------------------------------------------------------
+
+def layer_weight_names(l):
+    return [
+        f"layer{l}.ln1",
+        f"layer{l}.wq",
+        f"layer{l}.wk",
+        f"layer{l}.wv",
+        f"layer{l}.wo",
+        f"layer{l}.ln2",
+        f"layer{l}.router",
+        f"layer{l}.wg",
+        f"layer{l}.wu",
+        f"layer{l}.wd",
+    ]
+
+
+def weight_order(cfg=TINY):
+    """Deterministic tensor order in weights.bin."""
+    names = ["embed"]
+    for l in range(cfg.layers):
+        names.extend(layer_weight_names(l))
+    names.extend(["ln_f", "unembed"])
+    return names
+
+
+def weight_shape(name, cfg=TINY):
+    h, d = cfg.hidden, cfg.head_dim
+    if name == "embed":
+        return (cfg.vocab, h)
+    if name == "unembed":
+        return (h, cfg.vocab)
+    if name in ("ln_f",) or name.endswith((".ln1", ".ln2")):
+        return (h,)
+    if name.endswith(".wq"):
+        return (h, cfg.q_heads * d)
+    if name.endswith((".wk", ".wv")):
+        return (h, cfg.kv_heads * d)
+    if name.endswith(".wo"):
+        return (cfg.q_heads * d, h)
+    if name.endswith(".router"):
+        return (h, cfg.num_experts)
+    if name.endswith((".wg", ".wu")):
+        return (cfg.num_experts, h, cfg.inter)
+    if name.endswith(".wd"):
+        return (cfg.num_experts, cfg.inter, h)
+    raise KeyError(name)
+
+
+def init_weights(seed=0, cfg=TINY):
+    """Seeded random weights (std 0.02 for matmuls, ones for norms)."""
+    rng = np.random.default_rng(seed)
+    weights = {}
+    for name in weight_order(cfg):
+        shape = weight_shape(name, cfg)
+        if name.endswith((".ln1", ".ln2")) or name == "ln_f":
+            weights[name] = np.ones(shape, np.float32)
+        else:
+            weights[name] = rng.normal(0.0, 0.02, shape).astype(np.float32)
+    return weights
+
+
+def write_weights_bin(weights, path, cfg=TINY):
+    """Raw little-endian f32 concatenation in `weight_order`."""
+    with open(path, "wb") as f:
+        for name in weight_order(cfg):
+            f.write(np.ascontiguousarray(weights[name], np.float32).tobytes())
+
+
+# --------------------------------------------------------------------------
+# Shard slicing — the layout contract mirrored by rust/src/model.
+# --------------------------------------------------------------------------
+
+def shard_attn(weights, l, t, d, cfg=TINY):
+    """TP shard `d` of `t` for layer `l`'s attention weights.
+
+    Q/O shard by query head; K/V shard by kv head (t ≤ kv_heads).
+    """
+    hd = cfg.head_dim
+    hq_l = cfg.q_heads // t
+    kv_l = max(cfg.kv_heads // t, 1)
+    wq = weights[f"layer{l}.wq"].reshape(cfg.hidden, cfg.q_heads, hd)
+    wk = weights[f"layer{l}.wk"].reshape(cfg.hidden, cfg.kv_heads, hd)
+    wv = weights[f"layer{l}.wv"].reshape(cfg.hidden, cfg.kv_heads, hd)
+    wo = weights[f"layer{l}.wo"].reshape(cfg.q_heads, hd, cfg.hidden)
+    return dict(
+        ln=weights[f"layer{l}.ln1"],
+        wq=wq[:, d * hq_l : (d + 1) * hq_l].reshape(cfg.hidden, hq_l * hd),
+        wk=wk[:, d * kv_l : (d + 1) * kv_l].reshape(cfg.hidden, kv_l * hd),
+        wv=wv[:, d * kv_l : (d + 1) * kv_l].reshape(cfg.hidden, kv_l * hd),
+        wo=wo[d * hq_l : (d + 1) * hq_l].reshape(hq_l * hd, cfg.hidden),
+    )
+
+
+def shard_expert_tp(weights, l, t, d, cfg=TINY):
+    """TP shard: every expert's intermediate dim sliced to I/t."""
+    i_l = cfg.inter // t
+    wg = weights[f"layer{l}.wg"][:, :, d * i_l : (d + 1) * i_l]
+    wu = weights[f"layer{l}.wu"][:, :, d * i_l : (d + 1) * i_l]
+    wd = weights[f"layer{l}.wd"][:, d * i_l : (d + 1) * i_l, :]
+    return dict(
+        ln=weights[f"layer{l}.ln2"],
+        router=weights[f"layer{l}.router"],
+        wg=wg,
+        wu=wu,
+        wd=wd,
+    )
+
+
+def shard_expert_ep(weights, l, e, d, cfg=TINY):
+    """EP shard: device `d` of `e` owns a contiguous expert block."""
+    e_l = cfg.num_experts // e
+    sel = np.zeros((e_l, cfg.num_experts), np.float32)
+    for j in range(e_l):
+        sel[j, d * e_l + j] = 1.0
+    sl = slice(d * e_l, (d + 1) * e_l)
+    return dict(
+        ln=weights[f"layer{l}.ln2"],
+        router=weights[f"layer{l}.router"],
+        sel=sel,
+        wg=weights[f"layer{l}.wg"][sl],
+        wu=weights[f"layer{l}.wu"][sl],
+        wd=weights[f"layer{l}.wd"][sl],
+    )
+
+
+# --------------------------------------------------------------------------
+# Per-device module functions (the artifact bodies).
+# --------------------------------------------------------------------------
+
+def attn_prefill_module(x, ln, wq, wk, wv, wo, *, q_heads, kv_heads, head_dim):
+    """x: [B, S, H] residual stream → (partial_out, k_cache_slice,
+    v_cache_slice). Sum of partial_out over TP shards = full output."""
+    b, s, _ = x.shape
+    xn = ref.rms_norm(x, ln)
+    q = (xn @ wq).reshape(b, s, q_heads, head_dim)
+    k = (xn @ wk).reshape(b, s, kv_heads, head_dim)
+    v = (xn @ wv).reshape(b, s, kv_heads, head_dim)
+    rep = q_heads // kv_heads
+    ctx = attention_core_pallas(q, jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2))
+    out = ctx.reshape(b, s, q_heads * head_dim) @ wo
+    return out, k, v
+
+
+def attn_decode_module(
+    x, k_cache, v_cache, pos, ln, wq, wk, wv, wo, *, q_heads, kv_heads, head_dim
+):
+    """x: [B, 1, H]; caches [B, M, KVH_local, D]; pos: scalar int32.
+    Returns (partial_out, new_k_cache, new_v_cache)."""
+    b = x.shape[0]
+    xn = ref.rms_norm(x, ln)
+    q = (xn @ wq).reshape(b, 1, q_heads, head_dim)
+    k_new = (xn @ wk).reshape(b, 1, kv_heads, head_dim)
+    v_new = (xn @ wv).reshape(b, 1, kv_heads, head_dim)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new, pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new, pos, axis=1)
+    rep = q_heads // kv_heads
+    ctx = decode_core_pallas(
+        q, jnp.repeat(k_cache, rep, 2), jnp.repeat(v_cache, rep, 2), pos
+    )
+    out = ctx.reshape(b, 1, q_heads * head_dim) @ wo
+    return out, k_cache, v_cache
+
+
+def expert_module_tp(x, ln, router, wg, wu, wd, *, top_k, token_tile):
+    """x: [T, H] combined residual → partial FFN output [T, H]
+    (sum over TP shards = full)."""
+    xn = ref.rms_norm(x, ln)
+    gates = topk_gate_pallas(xn, router, top_k, token_tile=token_tile)
+    return moe_ffn_pallas(xn, gates, wg, wu, wd, token_tile=token_tile)
+
+
+def expert_module_ep(x, ln, router, sel, wg, wu, wd, *, top_k, token_tile):
+    """EP shard: `sel` [E_local, E] selects this device's experts from
+    the full gate matrix; contributions sum over EP shards."""
+    xn = ref.rms_norm(x, ln)
+    gates = topk_gate_pallas(xn, router, top_k, token_tile=token_tile)
+    gates_local = gates @ sel.T
+    return moe_ffn_pallas(xn, gates_local, wg, wu, wd, token_tile=token_tile)
+
+
+def valid_token_tile(t, preferred=128):
+    """Largest tile ≤ preferred that divides t (static-shape helper)."""
+    if t <= preferred:
+        return t
+    if t % preferred == 0:
+        return preferred
+    return math.gcd(t, preferred)
+
+
+def embed_module(tokens, embed):
+    """tokens: int32 [B, S] → [B, S, H]."""
+    return jnp.take(embed, tokens, axis=0)
+
+
+def head_module(x_last, ln_f, unembed):
+    """x_last: [B, H] final residual → logits [B, V]."""
+    return ref.rms_norm(x_last, ln_f) @ unembed
+
+
+# --------------------------------------------------------------------------
+# Unsharded reference model (test oracle for the Rust composition).
+# --------------------------------------------------------------------------
+
+def tiny_prefill_reference(tokens, weights, cfg=TINY):
+    """Full prefill: returns (logits_last [B, V], residual [B, S, H],
+    caches: list of (k, v) per layer)."""
+    x = embed_module(tokens, jnp.asarray(weights["embed"]))
+    caches = []
+    for l in range(cfg.layers):
+        w = {k.split(".")[-1]: jnp.asarray(v) for k, v in weights.items() if k.startswith(f"layer{l}.")}
+        a_out, k, v = attn_prefill_module(
+            x,
+            w["ln1"],
+            w["wq"],
+            w["wk"],
+            w["wv"],
+            w["wo"],
+            q_heads=cfg.q_heads,
+            kv_heads=cfg.kv_heads,
+            head_dim=cfg.head_dim,
+        )
+        x = x + a_out
+        b, s, h = x.shape
+        e_out = expert_module_tp(
+            x.reshape(b * s, h),
+            w["ln2"],
+            w["router"],
+            w["wg"],
+            w["wu"],
+            w["wd"],
+            top_k=cfg.top_k,
+            token_tile=valid_token_tile(b * s),
+        )
+        x = x + e_out.reshape(b, s, h)
+        caches.append((k, v))
+    logits = head_module(x[:, -1], jnp.asarray(weights["ln_f"]), jnp.asarray(weights["unembed"]))
+    return logits, x, caches
+
+
+def tiny_decode_reference(token, padded_caches, pos, weights, cfg=TINY):
+    """One decode step with padded caches [B, M, KVH, D] per layer.
+    Returns (logits [B, V], updated caches)."""
+    x = embed_module(token, jnp.asarray(weights["embed"]))
+    new_caches = []
+    for l in range(cfg.layers):
+        w = {k.split(".")[-1]: jnp.asarray(v) for k, v in weights.items() if k.startswith(f"layer{l}.")}
+        kc, vc = padded_caches[l]
+        a_out, kc, vc = attn_decode_module(
+            x,
+            kc,
+            vc,
+            pos,
+            w["ln1"],
+            w["wq"],
+            w["wk"],
+            w["wv"],
+            w["wo"],
+            q_heads=cfg.q_heads,
+            kv_heads=cfg.kv_heads,
+            head_dim=cfg.head_dim,
+        )
+        x = x + a_out
+        b, s, h = x.shape
+        e_out = expert_module_tp(
+            x.reshape(b * s, h),
+            w["ln2"],
+            w["router"],
+            w["wg"],
+            w["wu"],
+            w["wd"],
+            top_k=cfg.top_k,
+            token_tile=b * s,
+        )
+        x = x + e_out.reshape(b, s, h)
+        new_caches.append((kc, vc))
+    logits = head_module(x[:, -1], jnp.asarray(weights["ln_f"]), jnp.asarray(weights["unembed"]))
+    return logits, new_caches

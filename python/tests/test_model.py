@@ -1,0 +1,179 @@
+"""L2 correctness: model-level invariants the Rust composition relies on.
+
+- TP shard partials sum to the unsharded module output (attention and
+  expert), for prefill and decode;
+- EP shard contributions sum to the full expert output;
+- decode(prefill(x)) is consistent: caches built by prefill + one decode
+  step equal prefill over the extended sequence;
+- the sharded composition of a *whole layer* matches the reference
+  model.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile.kernels import ref
+from compile.model import TINY
+
+TOL = dict(rtol=5e-5, atol=5e-5)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return M.init_weights(seed=0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(42)
+    return jnp.asarray(rng.integers(0, TINY.vocab, (TINY.batch, TINY.prefill_len)), jnp.int32)
+
+
+def embed(tokens, weights):
+    return M.embed_module(tokens, jnp.asarray(weights["embed"]))
+
+
+def test_attn_prefill_tp_shards_sum_to_full(weights, tokens):
+    x = embed(tokens, weights)
+    l = 0
+    full_w = M.shard_attn(weights, l, 1, 0)
+    full, k_full, v_full = M.attn_prefill_module(
+        x, **{k: jnp.asarray(v) for k, v in full_w.items()},
+        q_heads=TINY.q_heads, kv_heads=TINY.kv_heads, head_dim=TINY.head_dim,
+    )
+    for t in (2, 4):
+        acc = jnp.zeros_like(full)
+        ks, vs = [], []
+        for d in range(t):
+            w = M.shard_attn(weights, l, t, d)
+            out, k, v = M.attn_prefill_module(
+                x, **{k2: jnp.asarray(v2) for k2, v2 in w.items()},
+                q_heads=TINY.q_heads // t,
+                kv_heads=max(TINY.kv_heads // t, 1),
+                head_dim=TINY.head_dim,
+            )
+            acc = acc + out
+            ks.append(k)
+            vs.append(v)
+        assert_allclose(np.asarray(acc), np.asarray(full), **TOL)
+        # Concatenated KV shards = full KV.
+        assert_allclose(np.asarray(jnp.concatenate(ks, axis=2)), np.asarray(k_full), **TOL)
+        assert_allclose(np.asarray(jnp.concatenate(vs, axis=2)), np.asarray(v_full), **TOL)
+
+
+def test_expert_tp_shards_sum_to_full(weights, tokens):
+    x = embed(tokens, weights).reshape(-1, TINY.hidden)
+    l = 1
+    fw = M.shard_expert_tp(weights, l, 1, 0)
+    full = M.expert_module_tp(
+        x, *(jnp.asarray(fw[k]) for k in ("ln", "router", "wg", "wu", "wd")),
+        top_k=TINY.top_k, token_tile=128,
+    )
+    for t in (2, 4):
+        acc = jnp.zeros_like(full)
+        for d in range(t):
+            w = M.shard_expert_tp(weights, l, t, d)
+            acc = acc + M.expert_module_tp(
+                x, *(jnp.asarray(w[k]) for k in ("ln", "router", "wg", "wu", "wd")),
+                top_k=TINY.top_k, token_tile=128,
+            )
+        assert_allclose(np.asarray(acc), np.asarray(full), **TOL)
+
+
+def test_expert_ep_shards_sum_to_full(weights, tokens):
+    x = embed(tokens, weights).reshape(-1, TINY.hidden)
+    l = 2
+    fw = M.shard_expert_tp(weights, l, 1, 0)
+    full = M.expert_module_tp(
+        x, *(jnp.asarray(fw[k]) for k in ("ln", "router", "wg", "wu", "wd")),
+        top_k=TINY.top_k, token_tile=128,
+    )
+    for e in (2, 4):
+        acc = jnp.zeros_like(full)
+        for d in range(e):
+            w = M.shard_expert_ep(weights, l, e, d)
+            acc = acc + M.expert_module_ep(
+                x, *(jnp.asarray(w[k]) for k in ("ln", "router", "sel", "wg", "wu", "wd")),
+                top_k=TINY.top_k, token_tile=128,
+            )
+        assert_allclose(np.asarray(acc), np.asarray(full), **TOL)
+
+
+def test_prefill_then_decode_consistent_with_longer_prefill(weights):
+    """Decode-step invariant: prefill(s) + decode(token) must equal
+    prefill(s+1) at the last position."""
+    rng = np.random.default_rng(7)
+    toks_full = jnp.asarray(
+        rng.integers(0, TINY.vocab, (TINY.batch, TINY.prefill_len)), jnp.int32
+    )
+    toks_short = toks_full[:, :-1]
+    # Reference prefill over s−1 tokens with padding-free caches.
+    # Build padded caches of width max_len from the prefill caches.
+    cfg = TINY
+    logits_short, _, caches = M.tiny_prefill_reference(toks_short, weights)
+    padded = []
+    for (k, v) in caches:
+        kc = jnp.zeros((cfg.batch, cfg.max_len, cfg.kv_heads, cfg.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[:, : cfg.prefill_len - 1].set(k)
+        vc = vc.at[:, : cfg.prefill_len - 1].set(v)
+        padded.append((kc, vc))
+    last_tok = toks_full[:, -1:]
+    logits_dec, _ = M.tiny_decode_reference(last_tok, padded, cfg.prefill_len - 1, weights)
+    logits_full, _, _ = M.tiny_prefill_reference(toks_full, weights)
+    assert_allclose(np.asarray(logits_dec), np.asarray(logits_full), rtol=2e-4, atol=2e-4)
+
+
+def test_sharded_layer_composition_matches_reference(weights, tokens):
+    """One full layer composed the way Rust composes it (TP-2 attention
+    partial-sum + residual, EP-4 expert contribution-sum + residual)
+    equals the reference layer."""
+    cfg = TINY
+    x = embed(tokens, weights)
+    l = 3
+    # Reference layer.
+    w = {k.split(".")[-1]: jnp.asarray(v) for k, v in weights.items() if k.startswith(f"layer{l}.")}
+    a_full, _, _ = M.attn_prefill_module(
+        x, w["ln1"], w["wq"], w["wk"], w["wv"], w["wo"],
+        q_heads=cfg.q_heads, kv_heads=cfg.kv_heads, head_dim=cfg.head_dim,
+    )
+    h1 = x + a_full
+    e_full = M.expert_module_tp(
+        h1.reshape(-1, cfg.hidden), w["ln2"], w["router"], w["wg"], w["wu"], w["wd"],
+        top_k=cfg.top_k, token_tile=128,
+    )
+    want = h1 + e_full.reshape(h1.shape)
+
+    # Sharded composition.
+    t = 2
+    a_acc = jnp.zeros_like(x)
+    for d in range(t):
+        sw = M.shard_attn(weights, l, t, d)
+        out, _, _ = M.attn_prefill_module(
+            x, **{k2: jnp.asarray(v2) for k2, v2 in sw.items()},
+            q_heads=cfg.q_heads // t, kv_heads=cfg.kv_heads // t, head_dim=cfg.head_dim,
+        )
+        a_acc = a_acc + out
+    h1s = x + a_acc
+    e_acc = jnp.zeros((cfg.batch * cfg.prefill_len, cfg.hidden), jnp.float32)
+    for d in range(4):
+        sw = M.shard_expert_ep(weights, l, 4, d)
+        e_acc = e_acc + M.expert_module_ep(
+            h1s.reshape(-1, cfg.hidden),
+            *(jnp.asarray(sw[k]) for k in ("ln", "router", "sel", "wg", "wu", "wd")),
+            top_k=cfg.top_k, token_tile=128,
+        )
+    got = h1s + e_acc.reshape(h1s.shape)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_weight_order_and_shapes_cover_all_tensors():
+    names = M.weight_order()
+    assert names[0] == "embed" and names[-1] == "unembed"
+    total = sum(int(np.prod(M.weight_shape(n))) for n in names)
+    # ≈ 27M params for the tiny demo model? (embed+unembed 0.26M, layers ~6.5M)
+    assert 5_000_000 < total < 40_000_000
+    assert len(set(names)) == len(names)

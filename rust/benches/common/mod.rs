@@ -1,0 +1,85 @@
+//! Shared helpers for the paper-figure benches.
+
+use hap::benchkit::Table;
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::engine::Engine;
+use hap::planner::HapPlanner;
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::json::Json;
+
+/// Measured (cluster-simulator) TP-baseline end-to-end latency.
+pub fn measured_tp(model: &MoEModelConfig, node: &NodeConfig, sc: &Scenario, seed: u64) -> f64 {
+    let engine = Engine::new(model, node);
+    let n = node.num_devices;
+    engine
+        .run_static(&AttnStrategy::new(n, 1), &ExpertStrategy::new(n, 1), sc, seed)
+        .total()
+}
+
+/// One figure row: plan with HAP, measure both on the engine.
+pub struct SpeedupRow {
+    pub model: String,
+    pub scenario: String,
+    pub batch: usize,
+    pub tp_s: f64,
+    pub hap_s: f64,
+    pub speedup: f64,
+    pub plan: String,
+}
+
+pub fn speedup_row(
+    model: &MoEModelConfig,
+    node: &NodeConfig,
+    sc: &Scenario,
+    seed: u64,
+) -> anyhow::Result<SpeedupRow> {
+    let planner = HapPlanner::new(model, node);
+    let engine = Engine::new(model, node);
+    let plan = planner.plan(sc, sc.generate)?;
+    let tp_s = measured_tp(model, node, sc, seed);
+    let hap_s = engine.run_plan(&plan, sc, seed).total();
+    Ok(SpeedupRow {
+        model: model.name.clone(),
+        scenario: sc.name.clone(),
+        batch: sc.batch,
+        tp_s,
+        hap_s,
+        speedup: tp_s / hap_s,
+        plan: plan.signature(),
+    })
+}
+
+/// Render speedup rows as a paper-style table + JSON dump.
+pub fn report(id: &str, what: &str, rows: &[SpeedupRow]) {
+    hap::benchkit::banner(id, what);
+    let mut t = Table::new(&["model", "scenario", "batch", "TP (s)", "HAP (s)", "speedup", "plan"]);
+    let mut json_rows = Vec::new();
+    for r in rows {
+        t.row(&[
+            r.model.clone(),
+            r.scenario.clone(),
+            format!("{}", r.batch),
+            format!("{:.3}", r.tp_s),
+            format!("{:.3}", r.hap_s),
+            format!("{:.2}x", r.speedup),
+            r.plan.clone(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("model", r.model.as_str().into()),
+            ("scenario", r.scenario.as_str().into()),
+            ("batch", r.batch.into()),
+            ("tp_s", r.tp_s.into()),
+            ("hap_s", r.hap_s.into()),
+            ("speedup", r.speedup.into()),
+            ("plan", r.plan.as_str().into()),
+        ]));
+    }
+    t.print();
+    let max = rows.iter().map(|r| r.speedup).fold(0.0, f64::max);
+    let min = rows.iter().map(|r| r.speedup).fold(f64::INFINITY, f64::min);
+    println!("speedup range: {min:.2}x – {max:.2}x");
+    hap::benchkit::write_results(id, &Json::obj(vec![("rows", Json::Arr(json_rows))]));
+}
+
+/// The batch sizes the paper's per-figure bars sweep.
+pub const BATCHES: [usize; 3] = [8, 16, 32];

@@ -1,0 +1,67 @@
+//! Paper Fig 2: per-layer latency breakdown of Mixtral-8x7B inference
+//! under TP vs EP on 4×A6000 (PCIe), sequence length 2K, for both the
+//! prefill and decoding stages.
+//!
+//! Shape to hold: prefill TP comm ≫ EP comm (TP loses on PCIe);
+//! decode EP expert compute > TP expert compute (load imbalance).
+
+mod common;
+
+use hap::benchkit::{banner, write_results, Table};
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::engine::Engine;
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::json::Json;
+
+fn main() {
+    banner("fig2", "per-layer latency breakdown, Mixtral-8x7B, 4xA6000, seq 2K");
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let sc = Scenario::new("fig2", 2048, 64, 16);
+    let engine = Engine::new(&model, &node);
+
+    // EP deployment = DP attention + EP experts (DeepSpeed-MoE).
+    let tp = engine.run_static(&AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), &sc, 1);
+    let ep = engine.run_static(&AttnStrategy::new(1, 4), &ExpertStrategy::new(1, 4), &sc, 1);
+
+    let nl = model.layers as f64;
+    let mut t = Table::new(&["stage", "strategy", "attn (ms)", "expert (ms)", "comm (ms)"]);
+    let mut json = Vec::new();
+    for (stage, strat, b) in [
+        ("prefill", "TP", &tp.prefill),
+        ("prefill", "EP", &ep.prefill),
+        ("decode", "TP", &tp.decode),
+        ("decode", "EP", &ep.decode),
+    ] {
+        let steps = if stage == "decode" { sc.generate as f64 } else { 1.0 };
+        let (a, e, c) = (b.attn / nl / steps, b.expert / nl / steps, b.comm / nl / steps);
+        t.row(&[
+            stage.into(),
+            strat.into(),
+            format!("{:.3}", a * 1e3),
+            format!("{:.3}", e * 1e3),
+            format!("{:.3}", c * 1e3),
+        ]);
+        json.push(Json::obj(vec![
+            ("stage", stage.into()),
+            ("strategy", strat.into()),
+            ("attn_ms", (a * 1e3).into()),
+            ("expert_ms", (e * 1e3).into()),
+            ("comm_ms", (c * 1e3).into()),
+        ]));
+    }
+    t.print();
+
+    let pre_ratio = tp.prefill.comm / ep.prefill.comm;
+    let dec_ratio = ep.decode.expert / tp.decode.expert;
+    println!("\nprefill comm TP/EP = {pre_ratio:.2} (paper: TP ≫ EP on PCIe)");
+    println!("decode expert EP/TP = {dec_ratio:.2} (paper: EP > TP from load imbalance)");
+    assert!(pre_ratio > 1.5, "fig2 prefill shape lost");
+    assert!(dec_ratio > 1.1, "fig2 decode shape lost");
+    write_results("fig2", &Json::obj(vec![
+        ("rows", Json::Arr(json)),
+        ("prefill_comm_tp_over_ep", pre_ratio.into()),
+        ("decode_expert_ep_over_tp", dec_ratio.into()),
+    ]));
+    println!("fig2 OK");
+}

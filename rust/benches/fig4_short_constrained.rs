@@ -1,0 +1,33 @@
+//! Paper Fig 4: short-context (256) / constrained-generation (64)
+//! speedups of HAP vs static TP for the three Table III models on
+//! 4×A6000 and 4×A100, across batch sizes.
+//!
+//! Shape to hold: HAP ≥ TP everywhere (never loses); modest max
+//! speedups (paper: up to 1.13–1.18× on A6000, 1.11–1.37× on A100).
+
+mod common;
+
+use common::{report, speedup_row, BATCHES};
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    for node in [NodeConfig::a6000x(4), NodeConfig::a100x(4)] {
+        let mut rows = Vec::new();
+        for model in MoEModelConfig::paper_models() {
+            for b in BATCHES {
+                let sc = Scenario::short_constrained().with_batch(b);
+                rows.push(speedup_row(&model, &node, &sc, 1)?);
+            }
+        }
+        report(
+            &format!("fig4_{}", node.label()),
+            &format!("short ctx (256) / constrained gen (64) on {}", node.label()),
+            &rows,
+        );
+        for r in &rows {
+            assert!(r.speedup > 0.97, "HAP lost to TP: {} {} {}", r.model, r.batch, r.speedup);
+        }
+    }
+    println!("fig4 OK");
+    Ok(())
+}

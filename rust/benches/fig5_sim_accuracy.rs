@@ -1,0 +1,50 @@
+//! Paper Fig 5: prediction accuracy of the computational and
+//! communication simulation models (η and ρ random-forest regressors)
+//! against held-out measured operator latencies.
+//!
+//! Shape to hold: communication error < 5%, computational error < 10%.
+
+mod common;
+
+use hap::benchkit::{banner, write_results, Table};
+use hap::config::GpuSpec;
+use hap::sim::latency::heldout_errors;
+use hap::sim::LatencyModel;
+use hap::util::json::Json;
+use hap::util::stats;
+
+fn main() {
+    banner("fig5", "simulation-model prediction error (held-out)");
+    let mut t = Table::new(&["platform", "compute mean err", "compute p95", "comm mean err", "comm p95"]);
+    let mut json = Vec::new();
+    let mut worst_comp = 0.0f64;
+    let mut worst_comm = 0.0f64;
+    for gpu in [GpuSpec::a6000(), GpuSpec::a100(), GpuSpec::v100()] {
+        let lm = LatencyModel::train(&gpu, 0x4A9);
+        let (comp, comm) = heldout_errors(&lm, &gpu, 400);
+        let cm = stats::mean(&comp);
+        let cq = stats::percentile(&comp, 95.0);
+        let mm = stats::mean(&comm);
+        let mq = stats::percentile(&comm, 95.0);
+        worst_comp = worst_comp.max(cm);
+        worst_comm = worst_comm.max(mm);
+        t.row(&[
+            gpu.name.clone(),
+            format!("{:.1}%", cm * 100.0),
+            format!("{:.1}%", cq * 100.0),
+            format!("{:.1}%", mm * 100.0),
+            format!("{:.1}%", mq * 100.0),
+        ]);
+        json.push(Json::obj(vec![
+            ("platform", gpu.name.as_str().into()),
+            ("compute_mean_err", cm.into()),
+            ("comm_mean_err", mm.into()),
+        ]));
+    }
+    t.print();
+    println!("\npaper targets: compute <10%, comm <5%");
+    assert!(worst_comp < 0.10, "compute error {worst_comp:.3} exceeds 10%");
+    assert!(worst_comm < 0.05, "comm error {worst_comm:.3} exceeds 5%");
+    write_results("fig5", &Json::obj(vec![("rows", Json::Arr(json))]));
+    println!("fig5 OK");
+}

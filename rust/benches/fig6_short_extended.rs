@@ -1,0 +1,38 @@
+//! Paper Fig 6: short-context (256) / extended-generation (2048)
+//! speedups. Decode-dominated: the planner should pick TP-like expert
+//! configs for decode and HAP ≈ TP (paper: ≤1.01–1.23×).
+
+mod common;
+
+use common::{report, speedup_row, BATCHES};
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::planner::HapPlanner;
+
+fn main() -> anyhow::Result<()> {
+    for node in [NodeConfig::a6000x(4), NodeConfig::a100x(4)] {
+        let mut rows = Vec::new();
+        for model in MoEModelConfig::paper_models() {
+            for b in BATCHES {
+                let sc = Scenario::short_extended().with_batch(b);
+                rows.push(speedup_row(&model, &node, &sc, 1)?);
+            }
+        }
+        report(
+            &format!("fig6_{}", node.label()),
+            &format!("short ctx (256) / extended gen (2048) on {}", node.label()),
+            &rows,
+        );
+        for r in &rows {
+            assert!(r.speedup > 0.95, "HAP lost badly: {} {}", r.model, r.speedup);
+            assert!(r.speedup < 1.6, "implausible speedup in decode-bound scenario: {}", r.speedup);
+        }
+    }
+    // Decode-dominated ⇒ expert decode strategy should be TP.
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let planner = HapPlanner::new(&model, &node);
+    let plan = planner.plan(&Scenario::short_extended(), 2048)?;
+    assert_eq!(plan.expert_decode.ep, 1, "decode should favor TP: {plan}");
+    println!("fig6 OK (decode picks {})", plan.expert_decode);
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Paper Fig 8: (a) 8×A100, 2048-ctx/128-gen; (b) 8×V100,
+//! 2048-ctx/64-gen; (c) TP vs EP vs HAP prefill/decode latency split
+//! on 4×A6000 — the dynamic-transition money shot: HAP prefill ≈ EP
+//! prefill, HAP decode ≈ TP decode.
+
+mod common;
+
+use common::{report, speedup_row, BATCHES};
+use hap::benchkit::{banner, write_results, Table};
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::engine::Engine;
+use hap::planner::HapPlanner;
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let model = MoEModelConfig::mixtral_8x7b();
+
+    // (a) + (b): 8-GPU scaling.
+    for (node, sc) in [
+        (NodeConfig::a100x(8), Scenario::fig8_a100()),
+        (NodeConfig::v100x(8), Scenario::fig8_v100()),
+    ] {
+        let mut rows = Vec::new();
+        for b in BATCHES {
+            rows.push(speedup_row(&model, &node, &sc.with_batch(b), 1)?);
+        }
+        report(
+            &format!("fig8_{}", node.label()),
+            &format!("Mixtral-8x7B {} on {}", sc.name, node.label()),
+            &rows,
+        );
+        for r in &rows {
+            assert!(r.speedup > 0.97, "HAP lost on {}: {}", node.label(), r.speedup);
+        }
+    }
+
+    // (c): prefill/decode split, TP vs EP vs HAP on 4×A6000.
+    banner("fig8c", "prefill/decode latency: TP vs EP vs HAP (4xA6000)");
+    let node = NodeConfig::a6000x(4);
+    let sc = Scenario::new("fig8c", 2048, 64, 16);
+    let engine = Engine::new(&model, &node);
+    let planner = HapPlanner::new(&model, &node);
+    let plan = planner.plan(&sc, sc.generate)?;
+
+    let tp = engine.run_static(&AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), &sc, 1);
+    let ep = engine.run_static(&AttnStrategy::new(1, 4), &ExpertStrategy::new(1, 4), &sc, 1);
+    let hap = engine.run_plan(&plan, &sc, 1);
+
+    let mut t = Table::new(&["config", "prefill (s)", "decode (s)", "transition (s)", "total (s)"]);
+    for (name, r) in [("TP", &tp), ("EP", &ep), ("HAP", &hap)] {
+        t.row(&[
+            name.into(),
+            format!("{:.3}", r.prefill.total()),
+            format!("{:.3}", r.decode.total() - r.decode.transition),
+            format!("{:.3}", r.decode.transition),
+            format!("{:.3}", r.total()),
+        ]);
+    }
+    t.print();
+    println!("HAP plan: {}", plan.signature());
+
+    // Shape assertions: EP prefill < TP prefill; EP decode > TP decode;
+    // HAP ≤ best of both per stage (within tolerance + transition).
+    assert!(ep.prefill.total() < tp.prefill.total(), "EP should win prefill");
+    assert!(ep.decode.total() > tp.decode.total(), "TP should win decode");
+    assert!(
+        hap.prefill.total() < tp.prefill.total() * 1.02,
+        "HAP prefill should track the better strategy"
+    );
+    assert!(
+        hap.decode.total() - hap.decode.transition < ep.decode.total(),
+        "HAP decode should beat EP decode"
+    );
+    write_results(
+        "fig8c",
+        &Json::obj(vec![
+            ("tp_prefill", tp.prefill.total().into()),
+            ("ep_prefill", ep.prefill.total().into()),
+            ("hap_prefill", hap.prefill.total().into()),
+            ("tp_decode", tp.decode.total().into()),
+            ("ep_decode", ep.decode.total().into()),
+            ("hap_decode", hap.decode.total().into()),
+            ("hap_transition", hap.decode.transition.into()),
+            ("plan", plan.signature().as_str().into()),
+        ]),
+    );
+    println!("fig8 OK");
+    Ok(())
+}

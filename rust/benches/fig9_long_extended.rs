@@ -1,0 +1,42 @@
+//! Paper Fig 9: long-context (4096) / extended-generation (2048) —
+//! dual-phase workload. Phase-specific strategies (EP-ish prefill →
+//! TP decode with the dynamic transition) win modestly (paper ≤1.13×).
+
+mod common;
+
+use common::{report, speedup_row, BATCHES};
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::planner::HapPlanner;
+
+fn main() -> anyhow::Result<()> {
+    for node in [NodeConfig::a6000x(4), NodeConfig::a100x(4)] {
+        let mut rows = Vec::new();
+        for model in MoEModelConfig::paper_models() {
+            for b in BATCHES {
+                let sc = Scenario::long_extended().with_batch(b);
+                rows.push(speedup_row(&model, &node, &sc, 1)?);
+            }
+        }
+        report(
+            &format!("fig9_{}", node.label()),
+            &format!("long ctx (4096) / extended gen (2048) on {}", node.label()),
+            &rows,
+        );
+        for r in &rows {
+            assert!(r.speedup > 0.95, "HAP lost: {} {}", r.model, r.speedup);
+        }
+    }
+    // Check the phase-specific structure exists for at least one model
+    // on the PCIe node: prefill strategy != decode strategy.
+    let node = NodeConfig::a6000x(4);
+    let mut any_transition = false;
+    for model in MoEModelConfig::paper_models() {
+        let planner = HapPlanner::new(&model, &node);
+        let plan = planner.plan(&Scenario::long_extended(), 2048)?;
+        println!("{}: {}", model.name, plan.signature());
+        any_transition |= plan.has_transition() || plan.attn.dp > 1;
+    }
+    assert!(any_transition, "expected phase-specific or low-comm structure somewhere");
+    println!("fig9 OK");
+    Ok(())
+}

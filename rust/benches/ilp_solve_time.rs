@@ -1,0 +1,64 @@
+//! Paper claim (§III-C): "For typical limited-scale deployment
+//! scenarios (e.g., single-machine 8-GPU configurations), the
+//! optimization completes consistently within one second."
+//!
+//! Measures the full plan() call (search-space build + cost tables +
+//! ILP formulate + solve) and the bare ILP solve across models/nodes.
+
+mod common;
+
+use hap::benchkit::{banner, bench, write_results, Table};
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::planner::HapPlanner;
+use hap::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    banner("ilp", "ILP + full-plan solve times (paper: < 1 s)");
+    let mut t = Table::new(&["model", "node", "scenario", "full plan (ms)", "ILP only (ms)", "nodes"]);
+    let mut json = Vec::new();
+    let mut worst = 0.0f64;
+    for model in MoEModelConfig::paper_models() {
+        for node in [NodeConfig::a6000x(4), NodeConfig::a100x(8)] {
+            let planner = HapPlanner::new(&model, &node);
+            for sc in [Scenario::long_constrained(), Scenario::long_extended()] {
+                let space = planner.search_space(&sc);
+                let tables = planner.cost_tables(&space, &sc);
+                let (problem, _) = planner.formulate(&space, &tables, &sc);
+                let ilp_t = bench("ilp", 2, 0.15, || {
+                    let out = hap::ilp::solve(&problem);
+                    std::hint::black_box(out.optimal().map(|(_, o)| o));
+                });
+                let plan_t = bench("plan", 1, 0.3, || {
+                    let p = planner.plan(&sc, sc.generate).unwrap();
+                    std::hint::black_box(p.predicted_total);
+                });
+                let nodes_explored = match hap::ilp::solve(&problem) {
+                    hap::ilp::Outcome::Optimal { nodes_explored, .. } => nodes_explored,
+                    _ => 0,
+                };
+                worst = worst.max(plan_t.median);
+                t.row(&[
+                    model.name.clone(),
+                    node.label(),
+                    sc.name.clone(),
+                    format!("{:.1}", plan_t.median * 1e3),
+                    format!("{:.2}", ilp_t.median * 1e3),
+                    format!("{nodes_explored}"),
+                ]);
+                json.push(Json::obj(vec![
+                    ("model", model.name.as_str().into()),
+                    ("node", node.label().as_str().into()),
+                    ("scenario", sc.name.as_str().into()),
+                    ("plan_ms", (plan_t.median * 1e3).into()),
+                    ("ilp_ms", (ilp_t.median * 1e3).into()),
+                ]));
+            }
+        }
+    }
+    t.print();
+    println!("\nworst full-plan median: {:.1} ms (paper budget: 1000 ms)", worst * 1e3);
+    assert!(worst < 1.0, "plan exceeded the paper's 1 s budget");
+    write_results("ilp_solve_time", &Json::obj(vec![("rows", Json::Arr(json))]));
+    println!("ilp_solve_time OK");
+    Ok(())
+}

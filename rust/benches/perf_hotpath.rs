@@ -1,0 +1,179 @@
+//! §Perf hot-path benchmarks — the before/after measurements recorded
+//! in EXPERIMENTS.md §Perf. Covers each layer's L3-visible hot path:
+//!
+//!  - planner: full plan() (target < 50 ms) and its pieces
+//!  - latency model: single layer_latency query (planner inner loop)
+//!  - engine: one simulated layer step
+//!  - ILP: solve on the 8-GPU formulation
+//!  - quant: INT4 quantize/dequant throughput (transition path)
+//!  - forest: regressor predict throughput
+//!  - serving (if artifacts exist): PJRT decode-step wall time and
+//!    serving-loop overhead on top of raw execute.
+
+mod common;
+
+use hap::benchkit::{banner, bench, write_results, Table};
+use hap::config::{GpuSpec, MoEModelConfig, NodeConfig, Scenario};
+use hap::engine::Engine;
+use hap::planner::HapPlanner;
+use hap::quant::{self, Scheme};
+use hap::sim::flops::Stage;
+use hap::sim::LatencyModel;
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::json::Json;
+use hap::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    banner("perf", "hot-path timings");
+    let mut t = Table::new(&["path", "median", "p95", "iters"]);
+    let mut json = Vec::new();
+    let mut record = |name: &str, timing: hap::benchkit::Timing| {
+        t.row(&[
+            name.into(),
+            hap::util::fmt_secs(timing.median),
+            hap::util::fmt_secs(timing.p95),
+            format!("{}", timing.iters),
+        ]);
+        json.push(Json::obj(vec![
+            ("path", name.into()),
+            ("median_s", timing.median.into()),
+            ("p95_s", timing.p95.into()),
+        ]));
+        timing
+    };
+
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a100x(8);
+    let sc = Scenario::long_extended();
+
+    // Latency-model training (planner construction cost).
+    let train = record(
+        "latency-model train",
+        bench("train", 1, 0.5, || {
+            let lm = LatencyModel::train(&GpuSpec::a100(), 1);
+            std::hint::black_box(lm.gpu.peak_flops);
+        }),
+    );
+
+    // Planner full plan.
+    let planner = HapPlanner::new(&model, &node);
+    let plan_t = record(
+        "planner full plan()",
+        bench("plan", 1, 0.5, || {
+            let p = planner.plan(&sc, sc.generate).unwrap();
+            std::hint::black_box(p.predicted_total);
+        }),
+    );
+
+    // Single latency query (planner inner loop).
+    let lm = LatencyModel::train(&GpuSpec::a100(), 1);
+    record(
+        "layer_latency query",
+        bench("layer", 10, 0.2, || {
+            let l = lm.layer_latency(
+                &model,
+                &AttnStrategy::new(8, 1),
+                &ExpertStrategy::new(1, 8),
+                Stage::Prefill,
+                16,
+                4096,
+            );
+            std::hint::black_box(l.total());
+        }),
+    );
+
+    // Engine: full static run (32-layer model, prefill + decode).
+    let engine = Engine::new(&model, &node);
+    record(
+        "engine full run",
+        bench("engine", 1, 0.5, || {
+            let r = engine.run_static(
+                &AttnStrategy::new(8, 1),
+                &ExpertStrategy::new(8, 1),
+                &sc,
+                1,
+            );
+            std::hint::black_box(r.total());
+        }),
+    );
+
+    // ILP solve.
+    let space = planner.search_space(&sc);
+    let tables = planner.cost_tables(&space, &sc);
+    let (problem, _) = planner.formulate(&space, &tables, &sc);
+    record(
+        "ilp solve (8-gpu)",
+        bench("ilp", 2, 0.2, || {
+            std::hint::black_box(hap::ilp::solve(&problem).optimal().map(|(_, o)| o));
+        }),
+    );
+
+    // Quant hot path (16 MB panel).
+    let mut rng = Rng::new(1);
+    let data = rng.normal_vec_f32(4 * 1024 * 1024, 0.02);
+    let qt = bench("quant", 1, 0.4, || {
+        let q = quant::quantize(&data, 2048, 2048, Scheme::PerGroup { group_size: 128 });
+        std::hint::black_box(q.packed.len());
+    });
+    println!(
+        "quant throughput: {:.2} GB/s",
+        (data.len() * 4) as f64 / qt.median / 1e9
+    );
+    record("int4 quantize 16MB", qt);
+    let q = quant::quantize(&data, 2048, 2048, Scheme::PerGroup { group_size: 128 });
+    let dq = bench("dequant", 1, 0.4, || {
+        std::hint::black_box(quant::dequantize(&q).len());
+    });
+    println!(
+        "dequant throughput: {:.2} GB/s (output)",
+        (data.len() * 4) as f64 / dq.median / 1e9
+    );
+    record("int4 dequantize 16MB", dq);
+
+    // PJRT serving hot path (needs artifacts).
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        let rt = hap::runtime::PjrtRuntime::load(dir)?;
+        let m = rt.manifest.model.clone();
+        let tokens: Vec<i32> =
+            (0..m.batch * m.prefill_len).map(|i| ((i * 13 + 5) % m.vocab) as i32).collect();
+        let mut exec = hap::model::ModelExecutor::new(&rt)?;
+        let strat = hap::model::StageStrategy::tp(4);
+        exec.prefill(&tokens, &strat)?;
+        let last = vec![1i32; m.batch];
+        record(
+            "pjrt decode step (tp4)",
+            bench("decode", 2, 1.0, || {
+                // Reset position to avoid cache exhaustion during reps.
+                if exec.pos >= m.max_len - 1 {
+                    exec.prefill(&tokens, &strat).unwrap();
+                }
+                let l = exec.decode_step(&last, &strat).unwrap();
+                std::hint::black_box(l.data[0]);
+            }),
+        );
+        let mut exec1 = hap::model::ModelExecutor::new(&rt)?;
+        let strat1 = hap::model::StageStrategy::tp(1);
+        exec1.prefill(&tokens, &strat1)?;
+        record(
+            "pjrt decode step (tp1)",
+            bench("decode1", 2, 1.0, || {
+                if exec1.pos >= m.max_len - 1 {
+                    exec1.prefill(&tokens, &strat1).unwrap();
+                }
+                let l = exec1.decode_step(&last, &strat1).unwrap();
+                std::hint::black_box(l.data[0]);
+            }),
+        );
+    } else {
+        println!("(artifacts/ not built — skipping PJRT hot path)");
+    }
+
+    t.print();
+    write_results("perf_hotpath", &Json::obj(vec![("rows", Json::Arr(json))]));
+    // Perf targets from DESIGN.md §7.
+    assert!(plan_t.median < 0.5, "plan too slow: {:.3}s", plan_t.median);
+    let _ = train;
+    println!("perf_hotpath OK");
+    Ok(())
+}

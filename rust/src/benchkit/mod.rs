@@ -1,0 +1,162 @@
+//! Benchmark harness (std-only `criterion` stand-in).
+//!
+//! Used by every `rust/benches/*.rs` target (built with
+//! `harness = false`, run by `cargo bench`). Provides warmed-up timing
+//! with outlier-robust statistics, aligned table printing for
+//! paper-style rows, and JSON result dumps under
+//! `target/bench_results/`.
+
+use crate::util::json::Json;
+use crate::util::stats;
+use std::time::Instant;
+
+/// Timing statistics of one measured function.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub p95: f64,
+    pub std_dev: f64,
+}
+
+impl Timing {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("iters", self.iters.into()),
+            ("mean_s", self.mean.into()),
+            ("median_s", self.median.into()),
+            ("p95_s", self.p95.into()),
+            ("std_s", self.std_dev.into()),
+        ])
+    }
+}
+
+/// Measure `f`, auto-scaling iterations to ~`budget_s` seconds after
+/// `warmup` calls. Returns robust statistics over per-iteration times.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, budget_s: f64, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    // Estimate cost to pick iteration count.
+    let probe = {
+        let t0 = Instant::now();
+        f();
+        t0.elapsed().as_secs_f64().max(1e-9)
+    };
+    let iters = ((budget_s / probe) as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean: stats::mean(&samples),
+        median: stats::median(&samples),
+        p95: stats::percentile(&samples, 95.0),
+        std_dev: stats::std_dev(&samples),
+    }
+}
+
+/// Aligned table printer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column widths.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Write a bench's result JSON under `target/bench_results/<id>.json`.
+pub fn write_results(id: &str, value: &Json) {
+    let dir = std::path::Path::new("target/bench_results");
+    if std::fs::create_dir_all(dir).is_ok() {
+        let path = dir.join(format!("{id}.json"));
+        let _ = std::fs::write(path, value.to_string_pretty());
+    }
+}
+
+/// Standard bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let t = bench("noop-ish", 2, 0.02, || {
+            std::hint::black_box((0..100).sum::<usize>());
+        });
+        assert!(t.iters >= 5);
+        assert!(t.mean > 0.0);
+        assert!(t.median <= t.p95 * 1.0001);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["model", "speedup"]);
+        t.row(&["mixtral-8x7b".into(), "1.68x".into()]);
+        t.row(&["qwen".into(), "1.1x".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("model"));
+        assert!(lines[2].contains("1.68x"));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into()]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Collective schedules over the modeled topology.
+//!
+//! Turns abstract [`CommEvent`]s into group timings using the noise-free
+//! ground-truth link model, including *imbalanced* All-to-All where
+//! per-device send volumes differ (EP dispatch under skewed routing):
+//! the op completes when the busiest link drains.
+
+use crate::cluster::topology::Topology;
+#[cfg(test)]
+use crate::sim::comm::Collective;
+use crate::sim::comm::CommEvent;
+
+use crate::sim::microbench;
+
+/// Ground-truth time of a (possibly imbalanced) collective on the
+/// topology. `per_device_wire` overrides the event's uniform volume
+/// when provided (one entry per group member).
+pub fn collective_time(
+    topo: &Topology,
+    event: &CommEvent,
+    per_device_wire: Option<&[f64]>,
+) -> f64 {
+    let gpu = &topo.devices[0].spec;
+    match per_device_wire {
+        None => microbench::true_comm_time(gpu, event),
+        Some(wires) => {
+            assert_eq!(wires.len(), event.group);
+            // The collective drains when the hottest device's traffic
+            // is done; keep the event's rounds for the latency floor.
+            let max_wire = wires.iter().cloned().fold(0.0, f64::max);
+            let ev = CommEvent { wire_bytes: max_wire, ..event.clone() };
+            microbench::true_comm_time(gpu, &ev)
+        }
+    }
+}
+
+/// Per-device All-to-All send volumes for EP dispatch given per-group
+/// routed token counts. `token_bytes` is bytes per routed token copy.
+pub fn ep_dispatch_wires(group_loads: &[f64], total_tokens: f64, token_bytes: f64) -> Vec<f64> {
+    let g = group_loads.len() as f64;
+    // Each device owns total/g tokens and sends the fraction routed to
+    // other groups; receiving-side hotness shows up via the load vector.
+    group_loads
+        .iter()
+        .map(|&recv_load| {
+            let send = total_tokens / g * (g - 1.0) / g;
+            // The hot receiver's link also carries its inbound surplus.
+            let recv = recv_load - total_tokens / g / g;
+            (send.max(recv.max(0.0))) * token_bytes
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+    use crate::sim::comm::CommEvent;
+
+    fn event(wire: f64, group: usize) -> CommEvent {
+        CommEvent {
+            collective: Collective::AllToAll,
+            group,
+            wire_bytes: wire,
+            rounds: group - 1,
+            label: "t",
+        }
+    }
+
+    #[test]
+    fn balanced_matches_uniform() {
+        let topo = Topology::from_node(&NodeConfig::a6000x(4));
+        let ev = event(1e8, 4);
+        let uniform = collective_time(&topo, &ev, None);
+        let balanced = collective_time(&topo, &ev, Some(&[1e8, 1e8, 1e8, 1e8]));
+        assert!((uniform - balanced).abs() / uniform < 1e-9);
+    }
+
+    #[test]
+    fn hot_device_slows_collective() {
+        let topo = Topology::from_node(&NodeConfig::a6000x(4));
+        let ev = event(1e8, 4);
+        let balanced = collective_time(&topo, &ev, Some(&[1e8; 4]));
+        let skewed = collective_time(&topo, &ev, Some(&[1e8, 1e8, 1e8, 3e8]));
+        assert!(skewed > balanced * 1.5);
+    }
+
+    #[test]
+    fn dispatch_wires_reflect_hot_group() {
+        let total = 4000.0;
+        let loads = vec![1000.0, 1000.0, 1000.0, 1000.0];
+        let w = ep_dispatch_wires(&loads, total, 2.0);
+        // Balanced: send side dominates: 1000·(3/4)·2B = 1500B.
+        for &x in &w {
+            assert!((x - 1500.0).abs() < 1e-9, "{w:?}");
+        }
+        let hot = vec![400.0, 400.0, 400.0, 2800.0];
+        let wh = ep_dispatch_wires(&hot, total, 2.0);
+        assert!(wh[3] > wh[0], "{wh:?}");
+    }
+}

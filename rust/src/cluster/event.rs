@@ -1,0 +1,187 @@
+//! Discrete-event execution timeline.
+//!
+//! Tracks a clock per device; the engine issues per-device compute
+//! spans and group-synchronous collectives. Collectives act as
+//! barriers within their group: they start when the last participant
+//! arrives and all participants leave together. Time per op category
+//! is accumulated for breakdown reports (paper Fig 2).
+
+use std::collections::HashMap;
+
+/// Category of a simulated span (for breakdowns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Attention,
+    Expert,
+    Comm,
+    Transition,
+    Other,
+}
+
+/// One recorded span (device, category, start, duration).
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub device: usize,
+    pub kind: OpKind,
+    pub start: f64,
+    pub dur: f64,
+    pub label: &'static str,
+}
+
+/// Discrete-event simulator over `n` device timelines.
+#[derive(Debug, Clone)]
+pub struct EventSim {
+    clocks: Vec<f64>,
+    spans: Vec<Span>,
+    /// Wall-clock time spent per category (max over devices per phase,
+    /// accumulated — i.e. critical-path attribution).
+    critical: HashMap<OpKind, f64>,
+}
+
+impl EventSim {
+    pub fn new(n: usize) -> EventSim {
+        EventSim { clocks: vec![0.0; n], spans: Vec::new(), critical: HashMap::new() }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.clocks.len()
+    }
+
+    /// Issue one compute span on a single device.
+    pub fn compute(&mut self, device: usize, kind: OpKind, dur: f64, label: &'static str) {
+        let start = self.clocks[device];
+        self.clocks[device] += dur;
+        self.spans.push(Span { device, kind, start, dur, label });
+    }
+
+    /// Issue per-device compute durations as one parallel phase and
+    /// attribute the phase's critical path (max duration after sync
+    /// skew) to `kind`.
+    pub fn parallel_compute(&mut self, durs: &[(usize, f64)], kind: OpKind, label: &'static str) {
+        let before = durs
+            .iter()
+            .map(|&(d, _)| self.clocks[d])
+            .fold(0.0f64, f64::max);
+        for &(device, dur) in durs {
+            self.compute(device, kind, dur, label);
+        }
+        let after = durs
+            .iter()
+            .map(|&(d, _)| self.clocks[d])
+            .fold(0.0f64, f64::max);
+        *self.critical.entry(kind).or_insert(0.0) += after - before;
+    }
+
+    /// Group-synchronous collective: all `group` devices sync, then
+    /// advance together by `dur`.
+    pub fn collective(&mut self, group: &[usize], dur: f64, label: &'static str) {
+        let start = group.iter().map(|&d| self.clocks[d]).fold(0.0f64, f64::max);
+        for &d in group {
+            self.spans.push(Span { device: d, kind: OpKind::Comm, start, dur, label });
+            self.clocks[d] = start + dur;
+        }
+        *self.critical.entry(OpKind::Comm).or_insert(0.0) += dur;
+    }
+
+    /// Global barrier: align all clocks to the max.
+    pub fn barrier(&mut self) {
+        let t = self.now();
+        for c in &mut self.clocks {
+            *c = t;
+        }
+    }
+
+    /// Charge a transition overhead on all devices (post-barrier).
+    pub fn transition(&mut self, dur: f64, label: &'static str) {
+        self.barrier();
+        let start = self.now();
+        for d in 0..self.clocks.len() {
+            self.spans.push(Span { device: d, kind: OpKind::Transition, start, dur, label });
+            self.clocks[d] = start + dur;
+        }
+        *self.critical.entry(OpKind::Transition).or_insert(0.0) += dur;
+    }
+
+    /// Current makespan (max device clock).
+    pub fn now(&self) -> f64 {
+        self.clocks.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Critical-path time attributed to a category.
+    pub fn critical_time(&self, kind: OpKind) -> f64 {
+        *self.critical.get(&kind).unwrap_or(&0.0)
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Busy fraction of a device (busy time / makespan).
+    pub fn utilization(&self, device: usize) -> f64 {
+        let busy: f64 = self
+            .spans
+            .iter()
+            .filter(|s| s.device == device && s.kind != OpKind::Comm)
+            .map(|s| s.dur)
+            .sum();
+        let total = self.now();
+        if total == 0.0 {
+            0.0
+        } else {
+            busy / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_compute_advances_clock() {
+        let mut sim = EventSim::new(2);
+        sim.compute(0, OpKind::Attention, 1.0, "a");
+        sim.compute(0, OpKind::Expert, 2.0, "e");
+        assert_eq!(sim.now(), 3.0);
+    }
+
+    #[test]
+    fn collective_waits_for_stragglers() {
+        let mut sim = EventSim::new(2);
+        sim.compute(0, OpKind::Attention, 1.0, "a");
+        sim.compute(1, OpKind::Attention, 5.0, "a");
+        sim.collective(&[0, 1], 1.0, "ar");
+        assert_eq!(sim.now(), 6.0);
+        // Device 0 idled 4 s waiting.
+        assert!(sim.utilization(0) < sim.utilization(1));
+    }
+
+    #[test]
+    fn parallel_compute_critical_path() {
+        let mut sim = EventSim::new(4);
+        sim.parallel_compute(&[(0, 1.0), (1, 3.0), (2, 2.0), (3, 1.5)], OpKind::Expert, "e");
+        assert_eq!(sim.critical_time(OpKind::Expert), 3.0);
+        assert_eq!(sim.now(), 3.0);
+    }
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut sim = EventSim::new(2);
+        sim.parallel_compute(&[(0, 1.0), (1, 1.0)], OpKind::Attention, "a");
+        sim.collective(&[0, 1], 0.5, "c");
+        sim.parallel_compute(&[(0, 2.0), (1, 2.0)], OpKind::Expert, "e");
+        assert_eq!(sim.critical_time(OpKind::Attention), 1.0);
+        assert_eq!(sim.critical_time(OpKind::Comm), 0.5);
+        assert_eq!(sim.critical_time(OpKind::Expert), 2.0);
+        assert_eq!(sim.now(), 3.5);
+    }
+
+    #[test]
+    fn transition_is_global() {
+        let mut sim = EventSim::new(2);
+        sim.compute(0, OpKind::Attention, 1.0, "a");
+        sim.transition(0.3, "reshard");
+        assert!((sim.now() - 1.3).abs() < 1e-12);
+        assert_eq!(sim.critical_time(OpKind::Transition), 0.3);
+    }
+}

@@ -1,0 +1,157 @@
+//! Expert-parallel load-imbalance model.
+//!
+//! Under EP, tokens route to the devices owning their top-k experts.
+//! Expert popularity is not uniform (hot experts exist), and with few
+//! tokens (the decode stage) the multinomial sampling noise is large —
+//! the hottest device gets far more than the mean. The paper observes
+//! exactly this: "the load imbalance introduced by EP leads to
+//! inefficient computation of the Expert module" during decoding.
+//!
+//! `expected_imbalance` returns E[max_device_load / mean_device_load]
+//! for routing `tokens × top_k` assignments over `ep` device groups,
+//! combining a Zipf-skewed expert-popularity prior with an analytic
+//! extreme-value approximation of the multinomial maximum; it is
+//! validated against Monte Carlo in the tests.
+
+use crate::util::rng::Rng;
+
+/// Zipf-like expert popularity skew exponent. 0 = uniform. Empirically
+/// MoE routers exhibit mild skew; 0.2 keeps prefill near-balanced while
+/// reproducing the decode-stage EP penalty the paper measures.
+pub const DEFAULT_SKEW: f64 = 0.2;
+
+/// Per-expert routing probabilities under a Zipf(`skew`) prior.
+pub fn expert_probs(num_experts: usize, skew: f64) -> Vec<f64> {
+    let mut p: Vec<f64> = (1..=num_experts).map(|r| (r as f64).powf(-skew)).collect();
+    let z: f64 = p.iter().sum();
+    for x in &mut p {
+        *x /= z;
+    }
+    p
+}
+
+/// Device-group probabilities: experts are assigned to `ep` groups
+/// round-robin by popularity rank (the standard contiguity-free
+/// placement that spreads hot experts).
+pub fn group_probs(num_experts: usize, ep: usize, skew: f64) -> Vec<f64> {
+    let p = expert_probs(num_experts, skew);
+    let mut g = vec![0.0; ep];
+    for (i, pi) in p.iter().enumerate() {
+        g[i % ep] += pi;
+    }
+    g
+}
+
+/// Expected ratio of the hottest device's routed-token count to the
+/// balanced share, for `assignments = tokens × top_k` total routings.
+///
+/// Uses a Gaussian extreme-value approximation: for group probability
+/// `p_i` and `n` assignments, load_i ≈ Normal(n·p_i, n·p_i(1-p_i));
+/// E[max_i load_i] ≈ max_i(n·p_i) + σ_max · √(2 ln ep).
+pub fn expected_imbalance(num_experts: usize, ep: usize, tokens: usize, top_k: usize, skew: f64) -> f64 {
+    if ep <= 1 || tokens == 0 {
+        return 1.0;
+    }
+    let n = (tokens * top_k) as f64;
+    let g = group_probs(num_experts, ep, skew);
+    let mean_share = n / ep as f64;
+    let max_mean = g.iter().cloned().fold(0.0, f64::max) * n;
+    let sigma = g
+        .iter()
+        .map(|&p| (n * p * (1.0 - p)).sqrt())
+        .fold(0.0, f64::max);
+    let ev = max_mean + sigma * (2.0 * (ep as f64).ln()).sqrt();
+    // Max load can't drop below the balanced share.
+    (ev / mean_share).max(1.0)
+}
+
+/// Monte Carlo estimate of the same quantity (used for validation and
+/// by the discrete-event engine when it wants sampled, not expected,
+/// loads).
+pub fn sampled_imbalance(
+    num_experts: usize,
+    ep: usize,
+    tokens: usize,
+    top_k: usize,
+    skew: f64,
+    rng: &mut Rng,
+) -> f64 {
+    if ep <= 1 || tokens == 0 {
+        return 1.0;
+    }
+    let p = expert_probs(num_experts, skew);
+    let mut loads = vec![0usize; ep];
+    for _ in 0..tokens {
+        // Draw top_k distinct experts per token (without replacement).
+        let mut chosen: Vec<usize> = Vec::with_capacity(top_k);
+        while chosen.len() < top_k {
+            let e = rng.weighted(&p);
+            if !chosen.contains(&e) {
+                chosen.push(e);
+            }
+        }
+        for e in chosen {
+            loads[e % ep] += 1;
+        }
+    }
+    let max = *loads.iter().max().unwrap() as f64;
+    let mean = (tokens * top_k) as f64 / ep as f64;
+    (max / mean).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_skew_zero() {
+        let p = expert_probs(8, 0.0);
+        for x in &p {
+            assert!((x - 0.125).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn probs_sum_to_one() {
+        for e in [8, 60, 64] {
+            let s: f64 = expert_probs(e, DEFAULT_SKEW).iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn decode_imbalance_exceeds_prefill() {
+        // Few tokens (decode) → high variance → worse imbalance than
+        // many tokens (prefill). This is the paper's Fig 2 decode story.
+        let dec = expected_imbalance(8, 4, 16, 2, DEFAULT_SKEW);
+        let pre = expected_imbalance(8, 4, 16 * 2048, 2, DEFAULT_SKEW);
+        assert!(dec > pre + 0.2, "decode {dec} vs prefill {pre}");
+        assert!(pre < 1.15, "prefill {pre}");
+        assert!(dec > 1.3, "decode {dec}");
+    }
+
+    #[test]
+    fn single_group_is_balanced() {
+        assert_eq!(expected_imbalance(8, 1, 100, 2, DEFAULT_SKEW), 1.0);
+    }
+
+    #[test]
+    fn analytic_close_to_monte_carlo() {
+        let mut rng = Rng::new(99);
+        let trials = 300;
+        let mc: f64 = (0..trials)
+            .map(|_| sampled_imbalance(8, 4, 64, 2, DEFAULT_SKEW, &mut rng))
+            .sum::<f64>()
+            / trials as f64;
+        let analytic = expected_imbalance(8, 4, 64, 2, DEFAULT_SKEW);
+        let rel = (mc - analytic).abs() / mc;
+        assert!(rel < 0.25, "mc {mc} vs analytic {analytic}");
+    }
+
+    #[test]
+    fn more_groups_more_imbalance() {
+        let e2 = expected_imbalance(64, 2, 128, 8, DEFAULT_SKEW);
+        let e8 = expected_imbalance(64, 8, 128, 8, DEFAULT_SKEW);
+        assert!(e8 > e2);
+    }
+}

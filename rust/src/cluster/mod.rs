@@ -1,0 +1,17 @@
+//! Simulated multi-GPU cluster substrate.
+//!
+//! The paper's testbed is a single node with 4–8 GPUs connected by
+//! NVLink or PCIe. This module provides the substitute substrate
+//! (DESIGN.md §2): device/link topology ([`topology`]), a discrete-event
+//! execution timeline ([`event`]), collective schedules over real link
+//! models ([`collective`]), and the expert load-imbalance model
+//! ([`imbalance`]) that makes EP decode slower than TP decode (paper
+//! Fig 2).
+
+pub mod collective;
+pub mod event;
+pub mod imbalance;
+pub mod topology;
+
+pub use event::{EventSim, OpKind};
+pub use topology::Topology;

@@ -1,0 +1,82 @@
+//! Node topology: devices and links.
+//!
+//! NVLink nodes are modeled as a full mesh (NVSwitch); PCIe nodes as a
+//! star through the host bridge, where concurrent peer flows share the
+//! per-device link and the collective pattern penalty captures bridge
+//! contention (see [`crate::sim::microbench`]).
+
+use crate::config::hardware::{GpuSpec, Interconnect, NodeConfig};
+
+/// A device in the simulated node.
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub id: usize,
+    pub spec: GpuSpec,
+}
+
+/// The node topology.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub devices: Vec<Device>,
+    pub interconnect: Interconnect,
+}
+
+impl Topology {
+    pub fn from_node(node: &NodeConfig) -> Topology {
+        Topology {
+            devices: (0..node.num_devices)
+                .map(|id| Device { id, spec: node.gpu.clone() })
+                .collect(),
+            interconnect: node.gpu.interconnect,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Point-to-point bandwidth between two distinct devices (bytes/s).
+    pub fn p2p_bw(&self, a: usize, b: usize) -> f64 {
+        assert_ne!(a, b);
+        self.devices[a].spec.link_bw
+    }
+
+    /// Device groups for a strategy axis: `n` devices split into
+    /// `groups` contiguous groups (TP groups innermost, standard
+    /// Megatron layout).
+    pub fn contiguous_groups(&self, groups: usize) -> Vec<Vec<usize>> {
+        let n = self.len();
+        assert_eq!(n % groups, 0);
+        let per = n / groups;
+        (0..groups)
+            .map(|g| (g * per..(g + 1) * per).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+
+    #[test]
+    fn builds_from_node() {
+        let t = Topology::from_node(&NodeConfig::a100x(8));
+        assert_eq!(t.len(), 8);
+        assert_eq!(t.interconnect, Interconnect::NvLink);
+        assert_eq!(t.devices[5].id, 5);
+    }
+
+    #[test]
+    fn groups_partition_devices() {
+        let t = Topology::from_node(&NodeConfig::a6000x(4));
+        let g = t.contiguous_groups(2);
+        assert_eq!(g, vec![vec![0, 1], vec![2, 3]]);
+        let all: Vec<usize> = g.into_iter().flatten().collect();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Hardware platform descriptions.
+//!
+//! The paper evaluates on 4–8 GPU single nodes: A100 (NVLink), A6000
+//! (PCIe 4.0), V100 (PCIe 3.0). The interconnect asymmetry — high-BW
+//! NVLink vs low-BW PCIe — is what flips the TP/EP decision (paper
+//! Fig 2/7), so it is modeled explicitly.
+
+use crate::util::json::Json;
+
+/// Intra-node interconnect type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Interconnect {
+    /// NVLink/NVSwitch: all-to-all, high bandwidth, low latency.
+    NvLink,
+    /// PCIe through a host bridge: shared, lower bandwidth.
+    Pcie,
+}
+
+impl Interconnect {
+    pub fn name(self) -> &'static str {
+        match self {
+            Interconnect::NvLink => "nvlink",
+            Interconnect::Pcie => "pcie",
+        }
+    }
+}
+
+/// A single accelerator's capabilities.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Peak dense BF16/FP16 FLOP/s (tensor cores / MXU equivalent).
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// Device memory capacity, bytes (M_gpu).
+    pub mem_bytes: f64,
+    /// Per-direction interconnect bandwidth, bytes/s.
+    pub link_bw: f64,
+    /// Interconnect kind.
+    pub interconnect: Interconnect,
+    /// Per-message collective launch latency, seconds.
+    pub link_latency: f64,
+    /// Host→device (PCIe) bandwidth, bytes/s — the INT4-backup upload path.
+    pub h2d_bw: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA A100-SXM 80GB: 312 TFLOP/s BF16, 2.0 TB/s HBM,
+    /// NVLink3 300 GB/s per direction.
+    pub fn a100() -> Self {
+        GpuSpec {
+            name: "A100".into(),
+            peak_flops: 312e12,
+            hbm_bw: 2.0e12,
+            mem_bytes: 80e9,
+            link_bw: 300e9,
+            interconnect: Interconnect::NvLink,
+            link_latency: 6e-6,
+            h2d_bw: 25e9, // PCIe 4.0 x16 effective
+        }
+    }
+
+    /// NVIDIA RTX A6000 48GB: 155 TFLOP/s FP16 tensor, 768 GB/s HBM.
+    /// PCIe 4.0 x16 is ~25 GB/s line rate per direction, but 4-GPU
+    /// collectives share the host bridge — measured ring-allreduce
+    /// bus bandwidth lands near 12 GB/s, which is what the collectives
+    /// actually see.
+    pub fn a6000() -> Self {
+        GpuSpec {
+            name: "A6000".into(),
+            peak_flops: 155e12,
+            hbm_bw: 768e9,
+            mem_bytes: 48e9,
+            link_bw: 12e9,
+            interconnect: Interconnect::Pcie,
+            link_latency: 12e-6,
+            h2d_bw: 25e9,
+        }
+    }
+
+    /// NVIDIA V100 32GB: 125 TFLOP/s FP16, 900 GB/s HBM, PCIe 3.0 x16
+    /// (paper's V100 node uses PCIe, not NVLink) — ~12 GB/s line rate,
+    /// ~7 GB/s effective collective bandwidth through the host bridge.
+    pub fn v100() -> Self {
+        GpuSpec {
+            name: "V100".into(),
+            peak_flops: 125e12,
+            hbm_bw: 900e9,
+            mem_bytes: 32e9,
+            link_bw: 7e9,
+            interconnect: Interconnect::Pcie,
+            link_latency: 12e-6,
+            h2d_bw: 12e9,
+        }
+    }
+
+    /// The CPU PJRT "device" used by the real tiny-MoE serving path.
+    /// Rough numbers for a modern server core-set; used only for
+    /// simulated-comm charging in the demo.
+    pub fn cpu_sim() -> Self {
+        GpuSpec {
+            name: "CPU-sim".into(),
+            peak_flops: 200e9,
+            hbm_bw: 40e9,
+            mem_bytes: 16e9,
+            link_bw: 20e9,
+            interconnect: Interconnect::Pcie,
+            link_latency: 2e-6,
+            h2d_bw: 20e9,
+        }
+    }
+
+    pub fn preset(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" => Some(Self::a100()),
+            "a6000" => Some(Self::a6000()),
+            "v100" => Some(Self::v100()),
+            "cpu-sim" | "cpu" => Some(Self::cpu_sim()),
+            _ => None,
+        }
+    }
+}
+
+/// A single-node multi-GPU configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeConfig {
+    pub gpu: GpuSpec,
+    /// Number of devices (N in the ILP).
+    pub num_devices: usize,
+}
+
+impl NodeConfig {
+    pub fn new(gpu: GpuSpec, num_devices: usize) -> Self {
+        assert!(num_devices.is_power_of_two(), "device count must be a power of two");
+        NodeConfig { gpu, num_devices }
+    }
+
+    /// 4× or 8× A100 node (NVLink).
+    pub fn a100x(n: usize) -> Self {
+        Self::new(GpuSpec::a100(), n)
+    }
+
+    /// 4× A6000 node (PCIe).
+    pub fn a6000x(n: usize) -> Self {
+        Self::new(GpuSpec::a6000(), n)
+    }
+
+    /// 8× V100 node (PCIe).
+    pub fn v100x(n: usize) -> Self {
+        Self::new(GpuSpec::v100(), n)
+    }
+
+    /// Demo node of simulated CPU devices.
+    pub fn cpu_sim(n: usize) -> Self {
+        Self::new(GpuSpec::cpu_sim(), n)
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.num_devices, self.gpu.name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gpu", self.gpu.name.as_str().into()),
+            ("num_devices", self.num_devices.into()),
+            ("interconnect", self.gpu.interconnect.name().into()),
+            ("peak_flops", self.gpu.peak_flops.into()),
+            ("link_bw", self.gpu.link_bw.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interconnect_asymmetry() {
+        // The core hardware fact behind Fig 2/7: A100 NVLink BW is an
+        // order of magnitude above A6000/V100 PCIe BW.
+        let a100 = GpuSpec::a100();
+        let a6000 = GpuSpec::a6000();
+        let v100 = GpuSpec::v100();
+        assert_eq!(a100.interconnect, Interconnect::NvLink);
+        assert_eq!(a6000.interconnect, Interconnect::Pcie);
+        assert!(a100.link_bw / a6000.link_bw > 10.0);
+        assert!(a100.link_bw / v100.link_bw > 20.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn rejects_non_power_of_two() {
+        NodeConfig::a100x(3);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(NodeConfig::a6000x(4).label(), "4xA6000");
+        assert_eq!(NodeConfig::v100x(8).label(), "8xV100");
+    }
+}

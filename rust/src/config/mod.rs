@@ -1,0 +1,11 @@
+//! Configuration: MoE model presets (paper Table III), hardware platform
+//! presets (A100/A6000/V100 nodes), and inference scenario presets
+//! (paper Table II).
+
+pub mod hardware;
+pub mod model;
+pub mod scenario;
+
+pub use hardware::{GpuSpec, Interconnect, NodeConfig};
+pub use model::MoEModelConfig;
+pub use scenario::Scenario;

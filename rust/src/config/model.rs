@@ -1,0 +1,264 @@
+//! MoE model configurations.
+//!
+//! Presets encode paper Table III exactly, plus the `tiny-moe` demo model
+//! that the end-to-end PJRT serving path executes for real on CPU.
+
+use crate::util::json::Json;
+
+/// Architecture description of a decoder-only MoE transformer.
+///
+/// Shapes follow the paper's notation: `hidden` = Dim, `moe_inter_size` =
+/// Dim_exp, `num_experts` = N_experts; GQA is modeled via `kv_heads`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MoEModelConfig {
+    /// Preset name (e.g. "mixtral-8x7b").
+    pub name: String,
+    /// Total parameter count in billions (reported, for memory checks).
+    pub params_b: f64,
+    /// Number of transformer layers (N_layer).
+    pub layers: usize,
+    /// Query attention heads.
+    pub q_heads: usize,
+    /// Key/value heads (GQA; == q_heads for MHA).
+    pub kv_heads: usize,
+    /// Hidden size (Dim).
+    pub hidden: usize,
+    /// Head dimension (hidden / q_heads unless overridden).
+    pub head_dim: usize,
+    /// Routed experts per layer (N_experts).
+    pub num_experts: usize,
+    /// Experts activated per token (top-k).
+    pub top_k: usize,
+    /// Shared (always-active) experts per layer; 0 when absent.
+    pub shared_experts: usize,
+    /// Expert FFN intermediate size (Dim_exp).
+    pub moe_inter_size: usize,
+    /// Shared-expert FFN intermediate size (== moe_inter_size * n for
+    /// Qwen-style fused shared experts).
+    pub shared_inter_size: usize,
+    /// Vocabulary size (for embedding/unembedding memory + logits).
+    pub vocab: usize,
+    /// Bytes per parameter at serving precision (2 for BF16/FP16).
+    pub dtype_bytes: usize,
+}
+
+impl MoEModelConfig {
+    /// Mixtral-8x7B (Table III row 1): 46.7B params, 32 layers, 32 heads,
+    /// hidden 4096, 8 experts (top-2), expert inter 14336, GQA 8 KV heads.
+    pub fn mixtral_8x7b() -> Self {
+        MoEModelConfig {
+            name: "mixtral-8x7b".into(),
+            params_b: 46.7,
+            layers: 32,
+            q_heads: 32,
+            kv_heads: 8,
+            hidden: 4096,
+            head_dim: 128,
+            num_experts: 8,
+            top_k: 2,
+            shared_experts: 0,
+            moe_inter_size: 14336,
+            shared_inter_size: 0,
+            vocab: 32000,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Qwen1.5-MoE-A2.7B (Table III row 2): 14.3B params, 24 layers, 16
+    /// heads, hidden 2048, 60 experts (top-4) + 4 shared, inter 1408.
+    pub fn qwen15_moe_a27b() -> Self {
+        MoEModelConfig {
+            name: "qwen1.5-moe-a2.7b".into(),
+            params_b: 14.3,
+            layers: 24,
+            q_heads: 16,
+            kv_heads: 16,
+            hidden: 2048,
+            head_dim: 128,
+            num_experts: 60,
+            top_k: 4,
+            shared_experts: 4,
+            moe_inter_size: 1408,
+            shared_inter_size: 5632,
+            vocab: 151936,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// Qwen2-57B-A14B (Table III row 3): 57.4B params, 28 layers, 28
+    /// heads (4 KV), hidden 3584, 64 experts (top-8) + shared, inter 2560.
+    pub fn qwen2_57b_a14b() -> Self {
+        MoEModelConfig {
+            name: "qwen2-57b-a14b".into(),
+            params_b: 57.4,
+            layers: 28,
+            q_heads: 28,
+            kv_heads: 4,
+            hidden: 3584,
+            head_dim: 128,
+            num_experts: 64,
+            top_k: 8,
+            shared_experts: 1,
+            moe_inter_size: 2560,
+            shared_inter_size: 20480,
+            vocab: 151936,
+            dtype_bytes: 2,
+        }
+    }
+
+    /// The ~27M-parameter demo model that the end-to-end serving path
+    /// runs for real through PJRT: 4 layers, hidden 256, 8 heads
+    /// (4 KV), 8 experts (top-2), inter 512. Must match
+    /// `python/compile/model.py::TINY`.
+    pub fn tiny_moe() -> Self {
+        MoEModelConfig {
+            name: "tiny-moe".into(),
+            params_b: 0.027,
+            layers: 4,
+            q_heads: 8,
+            kv_heads: 4,
+            hidden: 256,
+            head_dim: 32,
+            num_experts: 8,
+            top_k: 2,
+            shared_experts: 0,
+            moe_inter_size: 512,
+            shared_inter_size: 0,
+            vocab: 512,
+            dtype_bytes: 4, // f32 on the CPU PJRT path
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "mixtral-8x7b" => Some(Self::mixtral_8x7b()),
+            "qwen1.5-moe-a2.7b" | "qwen15-moe-a2.7b" => Some(Self::qwen15_moe_a27b()),
+            "qwen2-57b-a14b" => Some(Self::qwen2_57b_a14b()),
+            "tiny-moe" => Some(Self::tiny_moe()),
+            _ => None,
+        }
+    }
+
+    /// All paper evaluation models (Table III).
+    pub fn paper_models() -> Vec<Self> {
+        vec![Self::mixtral_8x7b(), Self::qwen15_moe_a27b(), Self::qwen2_57b_a14b()]
+    }
+
+    /// Attention-module weight parameters per layer:
+    /// Q/K/V/O projections under GQA.
+    pub fn attn_params_per_layer(&self) -> usize {
+        let h = self.hidden;
+        let q = h * self.q_heads * self.head_dim; // Wq
+        let kv = 2 * h * self.kv_heads * self.head_dim; // Wk, Wv
+        let o = self.q_heads * self.head_dim * h; // Wo
+        q + kv + o
+    }
+
+    /// Routed-expert weight parameters per layer (SwiGLU: 3 matrices).
+    pub fn expert_params_per_layer(&self) -> usize {
+        self.num_experts * 3 * self.hidden * self.moe_inter_size
+    }
+
+    /// Shared-expert weight parameters per layer.
+    pub fn shared_expert_params_per_layer(&self) -> usize {
+        if self.shared_experts == 0 {
+            0
+        } else {
+            3 * self.hidden * self.shared_inter_size
+        }
+    }
+
+    /// KV-cache bytes per token (all layers).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.layers * self.kv_heads * self.head_dim * self.dtype_bytes
+    }
+
+    /// Total weight bytes (approximate: layers + embeddings).
+    pub fn weight_bytes(&self) -> usize {
+        let per_layer = self.attn_params_per_layer()
+            + self.expert_params_per_layer()
+            + self.shared_expert_params_per_layer()
+            // router/gate + layer norms
+            + self.hidden * self.num_experts
+            + 2 * self.hidden;
+        (self.layers * per_layer + 2 * self.vocab * self.hidden) * self.dtype_bytes
+    }
+
+    /// Fraction of weights held by the Expert module (the paper notes
+    /// ~90% for typical MoE models — drives the transition-cost model).
+    pub fn expert_weight_fraction(&self) -> f64 {
+        let e = self.layers * self.expert_params_per_layer();
+        let total = self.weight_bytes() / self.dtype_bytes;
+        e as f64 / total as f64
+    }
+
+    /// Serialize for manifests/plan dumps.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("params_b", self.params_b.into()),
+            ("layers", self.layers.into()),
+            ("q_heads", self.q_heads.into()),
+            ("kv_heads", self.kv_heads.into()),
+            ("hidden", self.hidden.into()),
+            ("head_dim", self.head_dim.into()),
+            ("num_experts", self.num_experts.into()),
+            ("top_k", self.top_k.into()),
+            ("shared_experts", self.shared_experts.into()),
+            ("moe_inter_size", self.moe_inter_size.into()),
+            ("shared_inter_size", self.shared_inter_size.into()),
+            ("vocab", self.vocab.into()),
+            ("dtype_bytes", self.dtype_bytes.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_values_encoded() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        assert_eq!((m.layers, m.q_heads, m.hidden), (32, 32, 4096));
+        assert_eq!((m.num_experts, m.moe_inter_size), (8, 14336));
+        let q = MoEModelConfig::qwen15_moe_a27b();
+        assert_eq!((q.layers, q.q_heads, q.hidden), (24, 16, 2048));
+        assert_eq!((q.num_experts, q.moe_inter_size), (60, 1408));
+        let q2 = MoEModelConfig::qwen2_57b_a14b();
+        assert_eq!((q2.layers, q2.q_heads, q2.hidden), (28, 28, 3584));
+        assert_eq!((q2.num_experts, q2.moe_inter_size), (64, 2560));
+    }
+
+    #[test]
+    fn weight_bytes_close_to_reported_params() {
+        // Mixtral-8x7B is 46.7B params; our analytic count should be
+        // within 5% (we approximate norms/router).
+        let m = MoEModelConfig::mixtral_8x7b();
+        let params = m.weight_bytes() as f64 / m.dtype_bytes as f64 / 1e9;
+        assert!((params - m.params_b).abs() / m.params_b < 0.05, "params {params}");
+    }
+
+    #[test]
+    fn expert_fraction_dominates() {
+        // Paper III-D: expert weights ≈ 90% of total for Mixtral.
+        let m = MoEModelConfig::mixtral_8x7b();
+        let f = m.expert_weight_fraction();
+        assert!(f > 0.85 && f < 0.99, "fraction {f}");
+    }
+
+    #[test]
+    fn kv_bytes_per_token_mixtral() {
+        // 2 * 32 layers * 8 kv heads * 128 dim * 2 bytes = 131072.
+        assert_eq!(MoEModelConfig::mixtral_8x7b().kv_bytes_per_token(), 131072);
+    }
+
+    #[test]
+    fn presets_resolve() {
+        for n in ["mixtral-8x7b", "qwen1.5-moe-a2.7b", "qwen2-57b-a14b", "tiny-moe"] {
+            assert!(MoEModelConfig::preset(n).is_some(), "{n}");
+        }
+        assert!(MoEModelConfig::preset("nope").is_none());
+    }
+}

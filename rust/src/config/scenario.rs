@@ -1,0 +1,121 @@
+//! Inference scenarios (paper Table II) and workload parameters.
+//!
+//! Four orthogonal scenarios along (context scale × generation length):
+//! short/long context × constrained/extended output, plus the two 8-GPU
+//! variants used in Fig 8.
+
+use crate::util::json::Json;
+
+/// One evaluation scenario: prompt length, generation length, batch size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Input (prompt) sequence length S_input.
+    pub context: usize,
+    /// Output generation length S_output.
+    pub generate: usize,
+    /// Global batch size B.
+    pub batch: usize,
+}
+
+impl Scenario {
+    pub fn new(name: &str, context: usize, generate: usize, batch: usize) -> Self {
+        Scenario { name: name.into(), context, generate, batch }
+    }
+
+    /// Table II row 1: 256-token context, 64-token generation.
+    pub fn short_constrained() -> Self {
+        Self::new("short-constrained", 256, 64, 16)
+    }
+
+    /// Table II row 2: 256-token context, 2048-token generation.
+    pub fn short_extended() -> Self {
+        Self::new("short-extended", 256, 2048, 16)
+    }
+
+    /// Table II row 3: 4096-token context, 64-token generation.
+    pub fn long_constrained() -> Self {
+        Self::new("long-constrained", 4096, 64, 16)
+    }
+
+    /// Table II row 4: 4096-token context, 2048-token generation.
+    pub fn long_extended() -> Self {
+        Self::new("long-extended", 4096, 2048, 16)
+    }
+
+    /// Fig 8(a): 2048-token context, 128-token output (8×A100).
+    pub fn fig8_a100() -> Self {
+        Self::new("fig8-a100", 2048, 128, 16)
+    }
+
+    /// Fig 8(b): 2048-token context, 64-token output (8×V100).
+    pub fn fig8_v100() -> Self {
+        Self::new("fig8-v100", 2048, 64, 16)
+    }
+
+    /// All four Table II scenarios.
+    pub fn table2() -> Vec<Self> {
+        vec![
+            Self::short_constrained(),
+            Self::short_extended(),
+            Self::long_constrained(),
+            Self::long_extended(),
+        ]
+    }
+
+    /// Same scenario with a different global batch size (the paper's
+    /// per-figure bars sweep batch sizes).
+    pub fn with_batch(&self, batch: usize) -> Self {
+        Scenario { batch, ..self.clone() }
+    }
+
+    /// Total sequence length at end of generation.
+    pub fn total_len(&self) -> usize {
+        self.context + self.generate
+    }
+
+    /// Prefill-to-total token ratio — the scenario statistic that
+    /// governs which phase dominates (paper IV-C).
+    pub fn prefill_fraction(&self) -> f64 {
+        self.context as f64 / self.total_len() as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.as_str().into()),
+            ("context", self.context.into()),
+            ("generate", self.generate.into()),
+            ("batch", self.batch.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_values() {
+        let t = Scenario::table2();
+        assert_eq!(t.len(), 4);
+        assert_eq!((t[0].context, t[0].generate), (256, 64));
+        assert_eq!((t[1].context, t[1].generate), (256, 2048));
+        assert_eq!((t[2].context, t[2].generate), (4096, 64));
+        assert_eq!((t[3].context, t[3].generate), (4096, 2048));
+    }
+
+    #[test]
+    fn prefill_fraction_ordering() {
+        // long-constrained is prefill-dominated; short-extended is
+        // decode-dominated — the axis HAP adapts along.
+        assert!(Scenario::long_constrained().prefill_fraction() > 0.98);
+        assert!(Scenario::short_extended().prefill_fraction() < 0.12);
+    }
+
+    #[test]
+    fn with_batch_overrides() {
+        let s = Scenario::short_constrained().with_batch(32);
+        assert_eq!(s.batch, 32);
+        assert_eq!(s.context, 256);
+    }
+}

@@ -1,0 +1,115 @@
+//! KV-cache accounting for the simulated engine.
+//!
+//! Tracks per-sequence cache growth and per-device memory pressure
+//! under an attention strategy; the serving batcher uses it for
+//! admission control, and it enforces the eq. 5 memory constraint at
+//! run time (the planner enforces it statically).
+
+use crate::config::model::MoEModelConfig;
+use crate::strategy::AttnStrategy;
+
+/// One sequence's cache state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeqCache {
+    pub tokens: usize,
+}
+
+/// KV-cache manager for a fixed attention layout.
+#[derive(Debug, Clone)]
+pub struct KvCacheManager {
+    /// Bytes per cached token per device.
+    bytes_per_token_per_device: f64,
+    /// Device memory budget for KV (bytes).
+    budget: f64,
+    seqs: Vec<SeqCache>,
+}
+
+impl KvCacheManager {
+    /// `kv_budget` is the per-device byte budget reserved for KV.
+    pub fn new(model: &MoEModelConfig, attn: &AttnStrategy, kv_budget: f64) -> Self {
+        // TP shards KV heads across tp; DP partitions sequences (so the
+        // per-device share of a *global* token is 1/dp on average).
+        let per_tok = model.kv_bytes_per_token() as f64 / (attn.tp * attn.dp) as f64;
+        KvCacheManager { bytes_per_token_per_device: per_tok, budget: kv_budget, seqs: Vec::new() }
+    }
+
+    /// Current per-device KV bytes.
+    pub fn used_bytes(&self) -> f64 {
+        let tokens: usize = self.seqs.iter().map(|s| s.tokens).sum();
+        tokens as f64 * self.bytes_per_token_per_device
+    }
+
+    /// Can a new sequence of `prompt + gen` tokens be admitted?
+    pub fn can_admit(&self, total_tokens: usize) -> bool {
+        self.used_bytes() + total_tokens as f64 * self.bytes_per_token_per_device <= self.budget
+    }
+
+    /// Admit a sequence (panics if over budget — callers must check).
+    pub fn admit(&mut self, prompt_tokens: usize) -> usize {
+        assert!(self.can_admit(prompt_tokens), "KV budget exceeded");
+        self.seqs.push(SeqCache { tokens: prompt_tokens });
+        self.seqs.len() - 1
+    }
+
+    /// Append one generated token to a sequence.
+    pub fn extend(&mut self, seq: usize) {
+        self.seqs[seq].tokens += 1;
+    }
+
+    /// Release a finished sequence's cache.
+    pub fn release(&mut self, seq: usize) {
+        self.seqs[seq].tokens = 0;
+    }
+
+    pub fn active_tokens(&self) -> usize {
+        self.seqs.iter().map(|s| s.tokens).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mgr(budget: f64) -> KvCacheManager {
+        let m = MoEModelConfig::mixtral_8x7b();
+        KvCacheManager::new(&m, &AttnStrategy::new(4, 1), budget)
+    }
+
+    #[test]
+    fn admission_respects_budget() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let per_tok = m.kv_bytes_per_token() as f64 / 4.0;
+        let mut mgr = mgr(per_tok * 100.0);
+        assert!(mgr.can_admit(100));
+        assert!(!mgr.can_admit(101));
+        mgr.admit(60);
+        assert!(mgr.can_admit(40));
+        assert!(!mgr.can_admit(41));
+    }
+
+    #[test]
+    fn extend_and_release() {
+        let mut mgr = mgr(1e12);
+        let s = mgr.admit(10);
+        mgr.extend(s);
+        mgr.extend(s);
+        assert_eq!(mgr.active_tokens(), 12);
+        mgr.release(s);
+        assert_eq!(mgr.active_tokens(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV budget exceeded")]
+    fn over_admit_panics() {
+        let mut mgr = mgr(1.0);
+        mgr.admit(1000);
+    }
+
+    #[test]
+    fn tp_shards_kv() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let tp4 = KvCacheManager::new(&m, &AttnStrategy::new(4, 1), 1e9);
+        let tp1 = KvCacheManager::new(&m, &AttnStrategy::new(1, 1), 1e9);
+        assert!((tp1.bytes_per_token_per_device / tp4.bytes_per_token_per_device - 4.0).abs() < 1e-9);
+    }
+}

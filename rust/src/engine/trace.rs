@@ -1,0 +1,96 @@
+//! Execution-trace export: spans → Chrome trace-event JSON, plus
+//! aligned-text timelines for quick terminal inspection.
+
+use crate::cluster::event::{EventSim, OpKind, Span};
+use crate::util::json::Json;
+
+fn kind_name(kind: OpKind) -> &'static str {
+    match kind {
+        OpKind::Attention => "attention",
+        OpKind::Expert => "expert",
+        OpKind::Comm => "comm",
+        OpKind::Transition => "transition",
+        OpKind::Other => "other",
+    }
+}
+
+/// Export spans in Chrome `chrome://tracing` format (one complete event
+/// per span; device = tid).
+pub fn to_chrome_trace(sim: &EventSim) -> Json {
+    let events: Vec<Json> = sim
+        .spans()
+        .iter()
+        .map(|s: &Span| {
+            Json::obj(vec![
+                ("name", s.label.into()),
+                ("cat", kind_name(s.kind).into()),
+                ("ph", "X".into()),
+                ("ts", (s.start * 1e6).into()),
+                ("dur", (s.dur * 1e6).into()),
+                ("pid", 0usize.into()),
+                ("tid", s.device.into()),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+/// A coarse ASCII timeline (one row per device, `width` columns).
+pub fn ascii_timeline(sim: &EventSim, width: usize) -> String {
+    let total = sim.now().max(1e-12);
+    let n = sim.num_devices();
+    let mut rows = vec![vec!['.'; width]; n];
+    for s in sim.spans() {
+        let c = match s.kind {
+            OpKind::Attention => 'A',
+            OpKind::Expert => 'E',
+            OpKind::Comm => 'c',
+            OpKind::Transition => 'T',
+            OpKind::Other => '?',
+        };
+        let lo = ((s.start / total) * width as f64) as usize;
+        let hi = (((s.start + s.dur) / total) * width as f64).ceil() as usize;
+        for x in lo..hi.min(width) {
+            rows[s.device][x] = c;
+        }
+    }
+    rows.iter()
+        .enumerate()
+        .map(|(d, r)| format!("dev{d}: {}", r.iter().collect::<String>()))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{EventSim, OpKind};
+
+    fn sample_sim() -> EventSim {
+        let mut sim = EventSim::new(2);
+        sim.parallel_compute(&[(0, 1.0), (1, 1.0)], OpKind::Attention, "attn");
+        sim.collective(&[0, 1], 0.5, "ar");
+        sim.parallel_compute(&[(0, 2.0), (1, 1.0)], OpKind::Expert, "exp");
+        sim
+    }
+
+    #[test]
+    fn chrome_trace_structure() {
+        let sim = sample_sim();
+        let j = to_chrome_trace(&sim);
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), sim.spans().len());
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+    }
+
+    #[test]
+    fn ascii_has_all_devices() {
+        let sim = sample_sim();
+        let art = ascii_timeline(&sim, 40);
+        assert!(art.contains("dev0:"));
+        assert!(art.contains("dev1:"));
+        assert!(art.contains('A'));
+        assert!(art.contains('E'));
+        assert!(art.contains('c'));
+    }
+}

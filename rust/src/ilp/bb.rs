@@ -1,0 +1,222 @@
+//! Best-first branch & bound over LP relaxations.
+//!
+//! Standard 0-1 B&B: solve the relaxation, bound-prune against the
+//! incumbent, branch on the most fractional variable (ties → lowest
+//! index), explore best-bound-first via a priority queue. Exact for the
+//! problem sizes HAP produces, typically a handful of nodes because the
+//! one-hot structure makes relaxations nearly integral.
+
+use super::simplex::{solve_relaxation, LpResult};
+use super::{Outcome, Problem};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+const INT_TOL: f64 = 1e-6;
+
+struct Node {
+    bound: f64,
+    fixed: Vec<Option<f64>>,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on bound via reversed comparison.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Solve a 0-1 ILP exactly.
+pub fn branch_and_bound(problem: &Problem) -> Outcome {
+    let n = problem.num_vars;
+    let root_fixed = vec![None; n];
+    let mut heap = BinaryHeap::new();
+    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    let mut nodes_explored = 0usize;
+
+    match solve_relaxation(problem, &root_fixed) {
+        LpResult::Infeasible => return Outcome::Infeasible,
+        LpResult::Optimal { x, objective } => {
+            if let Some(frac) = most_fractional(&x, &root_fixed) {
+                heap.push(Node { bound: objective, fixed: root_fixed.clone() });
+                let _ = frac;
+            } else {
+                return Outcome::Optimal { x, objective, nodes_explored: 1 };
+            }
+        }
+    }
+
+    while let Some(node) = heap.pop() {
+        nodes_explored += 1;
+        if nodes_explored > 200_000 {
+            break; // safety valve; never hit at HAP sizes
+        }
+        // Bound prune.
+        if let Some((_, inc_obj)) = &incumbent {
+            if node.bound >= *inc_obj - 1e-12 {
+                continue;
+            }
+        }
+        let LpResult::Optimal { x, objective } = solve_relaxation(problem, &node.fixed) else {
+            continue;
+        };
+        if let Some((_, inc_obj)) = &incumbent {
+            if objective >= *inc_obj - 1e-12 {
+                continue;
+            }
+        }
+        match most_fractional(&x, &node.fixed) {
+            None => {
+                // Integral: candidate incumbent (round off LP fuzz).
+                let xi: Vec<f64> =
+                    x.iter().map(|&v| if v > 0.5 { 1.0 } else { 0.0 }).collect();
+                if problem.feasible(&xi, 1e-6) {
+                    let obj = problem.objective_value(&xi);
+                    if incumbent.as_ref().map_or(true, |(_, o)| obj < *o) {
+                        incumbent = Some((xi, obj));
+                    }
+                }
+            }
+            Some(branch_var) => {
+                for v in [1.0, 0.0] {
+                    let mut fixed = node.fixed.clone();
+                    fixed[branch_var] = Some(v);
+                    if let LpResult::Optimal { objective: child_bound, .. } =
+                        solve_relaxation(problem, &fixed)
+                    {
+                        let prune = incumbent
+                            .as_ref()
+                            .map_or(false, |(_, o)| child_bound >= *o - 1e-12);
+                        if !prune {
+                            heap.push(Node { bound: child_bound, fixed });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    match incumbent {
+        Some((x, objective)) => Outcome::Optimal { x, objective, nodes_explored },
+        None => Outcome::Infeasible,
+    }
+}
+
+/// Index of the most fractional unfixed variable, or None if integral.
+fn most_fractional(x: &[f64], fixed: &[Option<f64>]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &v) in x.iter().enumerate() {
+        if fixed[i].is_some() {
+            continue;
+        }
+        let frac = (v - v.round()).abs();
+        if frac > INT_TOL && best.map_or(true, |(_, f)| frac > f) {
+            best = Some((i, frac));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ilp::{solve, LinExpr, Problem, Sense};
+    use crate::util::rng::Rng;
+
+    /// Brute-force 0-1 enumeration for cross-checking.
+    fn brute_force(p: &Problem) -> Option<f64> {
+        let n = p.num_vars;
+        assert!(n <= 20);
+        let mut best: Option<f64> = None;
+        for mask in 0u32..(1 << n) {
+            let x: Vec<f64> = (0..n).map(|i| ((mask >> i) & 1) as f64).collect();
+            if p.feasible(&x, 1e-9) {
+                let obj = p.objective_value(&x);
+                if best.map_or(true, |b| obj < b) {
+                    best = Some(obj);
+                }
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn matches_brute_force_on_random_problems() {
+        let mut rng = Rng::new(2025);
+        for trial in 0..60 {
+            let n = rng.range(3, 9);
+            let mut p = Problem::new();
+            let vars = p.binaries("x", n);
+            for &v in &vars {
+                p.set_objective_term(v, rng.range_f64(-10.0, 10.0));
+            }
+            // Random ≤ constraints.
+            for ci in 0..rng.range(1, 4) {
+                let mut e = LinExpr::new();
+                for &v in &vars {
+                    if rng.chance(0.7) {
+                        e.add_term(v, rng.range_f64(-3.0, 5.0));
+                    }
+                }
+                p.constrain(&format!("c{ci}"), e, Sense::Le, rng.range_f64(0.0, 6.0));
+            }
+            // Sometimes a one-hot over a subset.
+            if rng.chance(0.5) {
+                let k = rng.range(2, n);
+                p.exactly_one("pick", &vars[0..k]);
+            }
+            let bf = brute_force(&p);
+            let out = solve(&p);
+            match (bf, out.optimal()) {
+                (None, None) => {}
+                (Some(b), Some((_, o))) => {
+                    assert!(
+                        (b - o).abs() < 1e-6,
+                        "trial {trial}: brute {b} vs bb {o}"
+                    );
+                }
+                (b, o) => panic!("trial {trial}: feasibility mismatch {b:?} vs {o:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn larger_one_hot_structure_fast() {
+        // HAP-like: 3 one-hot groups of 8 + pairwise AND variables.
+        let mut p = Problem::new();
+        let s = p.binaries("s", 8);
+        let ei = p.binaries("ei", 8);
+        let ej = p.binaries("ej", 8);
+        p.exactly_one("s1", &s);
+        p.exactly_one("e1", &ei);
+        p.exactly_one("e2", &ej);
+        let mut rng = Rng::new(7);
+        for (gi, g) in [&s, &ei, &ej].into_iter().enumerate() {
+            for (k, &v) in g.iter().enumerate() {
+                p.set_objective_term(v, rng.range_f64(1.0, 5.0) + (gi + k) as f64 * 0.01);
+            }
+        }
+        for (i, &a) in ei.iter().enumerate() {
+            for (j, &b) in ej.iter().enumerate() {
+                let y = p.and_var(&format!("y[{i}][{j}]"), a, b);
+                p.set_objective_term(y, rng.range_f64(0.0, 0.5));
+            }
+        }
+        let out = solve(&p);
+        let (x, _) = out.optimal().expect("feasible");
+        // Exactly one of each group selected.
+        for g in [&s, &ei, &ej] {
+            let sum: f64 = g.iter().map(|v| x[v.0]).sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+}

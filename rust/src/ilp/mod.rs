@@ -1,0 +1,256 @@
+//! 0-1 Integer Linear Programming (paper §III-C).
+//!
+//! The paper formulates strategy selection as an ILP and solves it with
+//! PuLP; this is the in-tree equivalent: a problem builder with named
+//! binary variables and linear constraints, solved exactly by branch &
+//! bound ([`bb`]) over LP relaxations computed with a two-phase dense
+//! simplex ([`simplex`]). Problems at HAP's scale (≤ a few hundred
+//! binaries) solve in well under a millisecond.
+
+pub mod bb;
+pub mod simplex;
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Variable handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Var(pub usize);
+
+/// Constraint comparison sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Ge,
+    Eq,
+}
+
+/// A linear expression `Σ coeff_i · x_i`.
+#[derive(Debug, Clone, Default)]
+pub struct LinExpr {
+    /// Sparse terms var-index → coefficient.
+    pub terms: HashMap<usize, f64>,
+}
+
+impl LinExpr {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn term(mut self, var: Var, coeff: f64) -> Self {
+        *self.terms.entry(var.0).or_insert(0.0) += coeff;
+        self
+    }
+
+    pub fn add_term(&mut self, var: Var, coeff: f64) {
+        *self.terms.entry(var.0).or_insert(0.0) += coeff;
+    }
+
+    /// Sum of unit terms over vars.
+    pub fn sum(vars: &[Var]) -> Self {
+        let mut e = Self::new();
+        for &v in vars {
+            e.add_term(v, 1.0);
+        }
+        e
+    }
+
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        self.terms.iter().map(|(&i, &c)| c * x[i]).sum()
+    }
+}
+
+/// A linear constraint `expr (≤|=|≥) rhs`.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub expr: LinExpr,
+    pub sense: Sense,
+    pub rhs: f64,
+    pub name: String,
+}
+
+impl Constraint {
+    pub fn satisfied(&self, x: &[f64], tol: f64) -> bool {
+        let v = self.expr.eval(x);
+        match self.sense {
+            Sense::Le => v <= self.rhs + tol,
+            Sense::Ge => v >= self.rhs - tol,
+            Sense::Eq => (v - self.rhs).abs() <= tol,
+        }
+    }
+}
+
+/// A 0-1 ILP minimization problem.
+#[derive(Debug, Clone, Default)]
+pub struct Problem {
+    pub num_vars: usize,
+    pub var_names: Vec<String>,
+    pub objective: LinExpr,
+    pub constraints: Vec<Constraint>,
+}
+
+impl Problem {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a binary variable.
+    pub fn binary(&mut self, name: &str) -> Var {
+        let v = Var(self.num_vars);
+        self.num_vars += 1;
+        self.var_names.push(name.to_string());
+        v
+    }
+
+    /// Add `n` binary variables with an indexed name prefix.
+    pub fn binaries(&mut self, prefix: &str, n: usize) -> Vec<Var> {
+        (0..n).map(|i| self.binary(&format!("{prefix}[{i}]"))).collect()
+    }
+
+    /// Set a coefficient in the (minimization) objective.
+    pub fn set_objective_term(&mut self, var: Var, coeff: f64) {
+        self.objective.add_term(var, coeff);
+    }
+
+    pub fn constrain(&mut self, name: &str, expr: LinExpr, sense: Sense, rhs: f64) {
+        self.constraints.push(Constraint { expr, sense, rhs, name: name.to_string() });
+    }
+
+    /// `Σ vars = 1` (one-hot selection).
+    pub fn exactly_one(&mut self, name: &str, vars: &[Var]) {
+        self.constrain(name, LinExpr::sum(vars), Sense::Eq, 1.0);
+    }
+
+    /// Linearized conjunction: `y = a ∧ b` for binaries.
+    pub fn and_var(&mut self, name: &str, a: Var, b: Var) -> Var {
+        let y = self.binary(name);
+        self.constrain(
+            &format!("{name}.ge"),
+            LinExpr::new().term(y, 1.0).term(a, -1.0).term(b, -1.0),
+            Sense::Ge,
+            -1.0,
+        );
+        self.constrain(&format!("{name}.le_a"), LinExpr::new().term(y, 1.0).term(a, -1.0), Sense::Le, 0.0);
+        self.constrain(&format!("{name}.le_b"), LinExpr::new().term(y, 1.0).term(b, -1.0), Sense::Le, 0.0);
+        y
+    }
+
+    /// Objective value at an assignment.
+    pub fn objective_value(&self, x: &[f64]) -> f64 {
+        self.objective.eval(x)
+    }
+
+    /// All constraints satisfied at tolerance?
+    pub fn feasible(&self, x: &[f64], tol: f64) -> bool {
+        self.constraints.iter().all(|c| c.satisfied(x, tol))
+    }
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone)]
+pub enum Outcome {
+    /// Optimal assignment (0/1 values) and objective.
+    Optimal { x: Vec<f64>, objective: f64, nodes_explored: usize },
+    Infeasible,
+}
+
+impl Outcome {
+    pub fn optimal(&self) -> Option<(&[f64], f64)> {
+        match self {
+            Outcome::Optimal { x, objective, .. } => Some((x, *objective)),
+            Outcome::Infeasible => None,
+        }
+    }
+}
+
+impl fmt::Display for Outcome {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Outcome::Optimal { objective, nodes_explored, .. } => {
+                write!(f, "optimal obj={objective:.6e} ({nodes_explored} nodes)")
+            }
+            Outcome::Infeasible => write!(f, "infeasible"),
+        }
+    }
+}
+
+/// Solve a 0-1 ILP exactly (branch & bound with LP-relaxation bounds).
+pub fn solve(problem: &Problem) -> Outcome {
+    bb::branch_and_bound(problem)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_hot_picks_min_cost() {
+        let mut p = Problem::new();
+        let xs = p.binaries("x", 4);
+        for (i, &v) in xs.iter().enumerate() {
+            p.set_objective_term(v, [5.0, 2.0, 7.0, 3.0][i]);
+        }
+        p.exactly_one("pick", &xs);
+        let out = solve(&p);
+        let (x, obj) = out.optimal().expect("feasible");
+        assert_eq!(obj, 2.0);
+        assert_eq!(x[1], 1.0);
+    }
+
+    #[test]
+    fn and_var_linearization() {
+        // min -(a ∧ b) with a forced on and b forced off → y must be 0.
+        let mut p = Problem::new();
+        let a = p.binary("a");
+        let b = p.binary("b");
+        let y = p.and_var("y", a, b);
+        p.set_objective_term(y, -1.0);
+        p.constrain("a_on", LinExpr::new().term(a, 1.0), Sense::Eq, 1.0);
+        p.constrain("b_off", LinExpr::new().term(b, 1.0), Sense::Eq, 0.0);
+        let out = solve(&p);
+        let (x, obj) = out.optimal().unwrap();
+        assert_eq!(obj, 0.0);
+        assert_eq!(x[y.0], 0.0);
+
+        // Now allow both on: y should be 1 (objective rewards it).
+        let mut p = Problem::new();
+        let a = p.binary("a");
+        let b = p.binary("b");
+        let y = p.and_var("y", a, b);
+        p.set_objective_term(y, -1.0);
+        let out = solve(&p);
+        let (x, _) = out.optimal().unwrap();
+        assert_eq!(x[y.0], 1.0);
+        assert_eq!(x[a.0], 1.0);
+        assert_eq!(x[b.0], 1.0);
+    }
+
+    #[test]
+    fn infeasible_detected() {
+        let mut p = Problem::new();
+        let xs = p.binaries("x", 2);
+        p.exactly_one("one", &xs);
+        p.constrain("none", LinExpr::sum(&xs), Sense::Eq, 0.0);
+        assert!(matches!(solve(&p), Outcome::Infeasible));
+    }
+
+    #[test]
+    fn knapsack_small() {
+        // max 6x0+10x1+12x2 s.t. x0+2x1+3x2 <= 4  → min form.
+        let mut p = Problem::new();
+        let xs = p.binaries("x", 3);
+        for (i, &v) in xs.iter().enumerate() {
+            p.set_objective_term(v, [-6.0, -10.0, -12.0][i]);
+        }
+        let mut cap = LinExpr::new();
+        for (i, &v) in xs.iter().enumerate() {
+            cap.add_term(v, [1.0, 2.0, 3.0][i]);
+        }
+        p.constrain("cap", cap, Sense::Le, 4.0);
+        let out = solve(&p);
+        let (x, obj) = out.optimal().unwrap();
+        // Best: x1 + x2? weight 5 > 4. x0+x2 weight 4 value 18. ✓
+        assert_eq!(obj, -18.0);
+        assert_eq!((x[0], x[1], x[2]), (1.0, 0.0, 1.0));
+    }
+}

@@ -1,0 +1,348 @@
+//! Two-phase dense simplex for LP relaxations of 0-1 problems.
+//!
+//! Solves `min cᵀx  s.t.  A·x {≤,=,≥} b,  0 ≤ x ≤ 1` by converting to
+//! standard form with slack/surplus variables, using explicit upper
+//! bounds as additional `x_i ≤ 1` rows (simple and robust at the sizes
+//! HAP needs: tens of variables, hundreds of rows). Phase 1 minimizes
+//! artificial-variable sum; Phase 2 optimizes the true objective.
+//! Bland's rule guards against cycling.
+
+use super::{Problem, Sense};
+
+/// LP relaxation result.
+#[derive(Debug, Clone)]
+pub enum LpResult {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP relaxation of `problem` with extra variable fixings:
+/// `fixed[i] = Some(v)` pins x_i = v (used by branch & bound).
+pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
+    let n = problem.num_vars;
+    assert_eq!(fixed.len(), n);
+
+    // Collect rows: constraints + upper bounds x_i ≤ 1 for unfixed vars.
+    // Fixed vars are substituted out (their contribution moves to rhs).
+    let free: Vec<usize> = (0..n).filter(|&i| fixed[i].is_none()).collect();
+    let col_of: Vec<Option<usize>> = {
+        let mut m = vec![None; n];
+        for (c, &i) in free.iter().enumerate() {
+            m[i] = Some(c);
+        }
+        m
+    };
+    let nf = free.len();
+
+    struct Row {
+        coeffs: Vec<f64>,
+        sense: Sense,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for c in &problem.constraints {
+        let mut coeffs = vec![0.0; nf];
+        let mut rhs = c.rhs;
+        for (&i, &a) in &c.expr.terms {
+            match (col_of[i], fixed[i]) {
+                (Some(col), _) => coeffs[col] += a,
+                (None, Some(v)) => rhs -= a * v,
+                (None, None) => unreachable!(),
+            }
+        }
+        rows.push(Row { coeffs, sense: c.sense, rhs });
+    }
+    for c in 0..nf {
+        let mut coeffs = vec![0.0; nf];
+        coeffs[c] = 1.0;
+        rows.push(Row { coeffs, sense: Sense::Le, rhs: 1.0 });
+    }
+
+    // Normalize to rhs ≥ 0.
+    for r in rows.iter_mut() {
+        if r.rhs < 0.0 {
+            for a in &mut r.coeffs {
+                *a = -*a;
+            }
+            r.rhs = -r.rhs;
+            r.sense = match r.sense {
+                Sense::Le => Sense::Ge,
+                Sense::Ge => Sense::Le,
+                Sense::Eq => Sense::Eq,
+            };
+        }
+    }
+
+    // Standard form: columns = free vars + slacks + artificials.
+    let m = rows.len();
+    let mut n_slack = 0;
+    for r in &rows {
+        if r.sense != Sense::Eq {
+            n_slack += 1;
+        }
+    }
+    // Artificials for ≥ and = rows.
+    let mut n_art = 0;
+    for r in &rows {
+        if r.sense != Sense::Le {
+            n_art += 1;
+        }
+    }
+    let total = nf + n_slack + n_art;
+
+    // Tableau: m rows × (total + 1) columns (last = rhs).
+    let mut t = vec![vec![0.0; total + 1]; m];
+    let mut basis = vec![usize::MAX; m];
+    let mut s_i = nf;
+    let mut a_i = nf + n_slack;
+    for (r_i, r) in rows.iter().enumerate() {
+        for c in 0..nf {
+            t[r_i][c] = r.coeffs[c];
+        }
+        t[r_i][total] = r.rhs;
+        match r.sense {
+            Sense::Le => {
+                t[r_i][s_i] = 1.0;
+                basis[r_i] = s_i;
+                s_i += 1;
+            }
+            Sense::Ge => {
+                t[r_i][s_i] = -1.0; // surplus
+                s_i += 1;
+                t[r_i][a_i] = 1.0;
+                basis[r_i] = a_i;
+                a_i += 1;
+            }
+            Sense::Eq => {
+                t[r_i][a_i] = 1.0;
+                basis[r_i] = a_i;
+                a_i += 1;
+            }
+        }
+    }
+
+    // Phase 1: minimize sum of artificials.
+    if n_art > 0 {
+        let mut z = vec![0.0; total + 1];
+        for c in nf + n_slack..total {
+            z[c] = 1.0;
+        }
+        // Make reduced costs consistent with the basis (price out).
+        for (r_i, &b) in basis.iter().enumerate() {
+            if b >= nf + n_slack {
+                for c in 0..=total {
+                    z[c] -= t[r_i][c];
+                }
+            }
+        }
+        if !pivot_loop(&mut t, &mut z, &mut basis, total) {
+            return LpResult::Infeasible; // unbounded phase 1 can't happen
+        }
+        if -z[total] > 1e-7 {
+            return LpResult::Infeasible;
+        }
+        // Drive remaining artificials out of the basis when possible.
+        for r_i in 0..m {
+            if basis[r_i] >= nf + n_slack {
+                if let Some(c) = (0..nf + n_slack).find(|&c| t[r_i][c].abs() > EPS) {
+                    do_pivot(&mut t, &mut basis, r_i, c, total);
+                }
+            }
+        }
+    }
+
+    // Phase 2: true objective over free vars only (fixed contribute a
+    // constant added back at the end).
+    let mut z = vec![0.0; total + 1];
+    for (&i, &cf) in &problem.objective.terms {
+        if let Some(col) = col_of[i] {
+            z[col] = cf;
+        }
+    }
+    // Zero out artificial columns so they never re-enter.
+    // (Columns stay in the tableau; give them +inf-ish cost.)
+    for c in nf + n_slack..total {
+        z[c] = 1e18;
+    }
+    for (r_i, &b) in basis.iter().enumerate() {
+        if z[b].abs() > EPS {
+            let coef = z[b];
+            for c in 0..=total {
+                z[c] -= coef * t[r_i][c];
+            }
+        }
+    }
+    if !pivot_loop(&mut t, &mut z, &mut basis, total) {
+        // Unbounded below can't occur with 0 ≤ x ≤ 1 box, but guard.
+        return LpResult::Infeasible;
+    }
+
+    // Extract solution.
+    let mut xf = vec![0.0; nf];
+    for (r_i, &b) in basis.iter().enumerate() {
+        if b < nf {
+            xf[b] = t[r_i][total];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for (c, &i) in free.iter().enumerate() {
+        x[i] = xf[c].clamp(0.0, 1.0);
+    }
+    for i in 0..n {
+        if let Some(v) = fixed[i] {
+            x[i] = v;
+        }
+    }
+    let objective = problem.objective.eval(&x);
+    LpResult::Optimal { x, objective }
+}
+
+/// Run simplex pivots until optimal. Returns false on unboundedness.
+fn pivot_loop(
+    t: &mut [Vec<f64>],
+    z: &mut [f64],
+    basis: &mut [usize],
+    total: usize,
+) -> bool {
+    let m = t.len();
+    let max_iters = 50 * (m + total);
+    for _ in 0..max_iters {
+        // Bland's rule: smallest-index entering column with negative
+        // reduced cost.
+        let Some(enter) = (0..total).find(|&c| z[c] < -1e-9) else {
+            return true; // optimal
+        };
+        // Ratio test.
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for r in 0..m {
+            if t[r][enter] > EPS {
+                let ratio = t[r][total] / t[r][enter];
+                if ratio < best - EPS || (ratio < best + EPS && leave.map_or(true, |l| basis[r] < basis[l]))
+                {
+                    best = ratio;
+                    leave = Some(r);
+                }
+            }
+        }
+        let Some(leave) = leave else {
+            return false; // unbounded
+        };
+        do_pivot_with_z(t, z, basis, leave, enter, total);
+    }
+    true // iteration cap: treat as converged (tolerances loose enough)
+}
+
+fn do_pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let piv = t[row][col];
+    for c in 0..=total {
+        t[row][c] /= piv;
+    }
+    for r in 0..t.len() {
+        if r != row && t[r][col].abs() > EPS {
+            let f = t[r][col];
+            for c in 0..=total {
+                t[r][c] -= f * t[row][c];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+fn do_pivot_with_z(
+    t: &mut [Vec<f64>],
+    z: &mut [f64],
+    basis: &mut [usize],
+    row: usize,
+    col: usize,
+    total: usize,
+) {
+    do_pivot(t, basis, row, col, total);
+    let f = z[col];
+    if f.abs() > EPS {
+        for c in 0..=total {
+            z[c] -= f * t[row][c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ilp::{LinExpr, Problem, Sense};
+
+    #[test]
+    fn simple_lp() {
+        // min -x0 - x1 s.t. x0 + x1 ≤ 1.5, 0 ≤ x ≤ 1 → obj -1.5.
+        let mut p = Problem::new();
+        let a = p.binary("a");
+        let b = p.binary("b");
+        p.set_objective_term(a, -1.0);
+        p.set_objective_term(b, -1.0);
+        p.constrain("cap", LinExpr::sum(&[a, b]), Sense::Le, 1.5);
+        match solve_relaxation(&p, &[None, None]) {
+            LpResult::Optimal { objective, .. } => assert!((objective + 1.5).abs() < 1e-6),
+            _ => panic!("expected optimal"),
+        }
+    }
+
+    #[test]
+    fn equality_constraint() {
+        // min x0 + 2x1 s.t. x0 + x1 = 1 → x0 = 1.
+        let mut p = Problem::new();
+        let a = p.binary("a");
+        let b = p.binary("b");
+        p.set_objective_term(a, 1.0);
+        p.set_objective_term(b, 2.0);
+        p.exactly_one("one", &[a, b]);
+        match solve_relaxation(&p, &[None, None]) {
+            LpResult::Optimal { x, objective } => {
+                assert!((objective - 1.0).abs() < 1e-6);
+                assert!((x[0] - 1.0).abs() < 1e-6);
+            }
+            _ => panic!("expected optimal"),
+        }
+    }
+
+    #[test]
+    fn infeasible_lp() {
+        let mut p = Problem::new();
+        let a = p.binary("a");
+        p.constrain("hi", LinExpr::new().term(a, 1.0), Sense::Ge, 2.0); // x ≤ 1 conflicts
+        assert!(matches!(solve_relaxation(&p, &[None]), LpResult::Infeasible));
+    }
+
+    #[test]
+    fn fixing_respected() {
+        let mut p = Problem::new();
+        let a = p.binary("a");
+        let b = p.binary("b");
+        p.set_objective_term(a, -3.0);
+        p.set_objective_term(b, -1.0);
+        match solve_relaxation(&p, &[Some(0.0), None]) {
+            LpResult::Optimal { x, objective } => {
+                assert_eq!(x[0], 0.0);
+                assert!((x[1] - 1.0).abs() < 1e-6);
+                assert!((objective + 1.0).abs() < 1e-6);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn ge_constraints() {
+        // min x0 + x1 s.t. x0 + x1 ≥ 1.2 → obj 1.2.
+        let mut p = Problem::new();
+        let a = p.binary("a");
+        let b = p.binary("b");
+        p.set_objective_term(a, 1.0);
+        p.set_objective_term(b, 1.0);
+        p.constrain("lo", LinExpr::sum(&[a, b]), Sense::Ge, 1.2);
+        match solve_relaxation(&p, &[None, None]) {
+            LpResult::Optimal { objective, .. } => assert!((objective - 1.2).abs() < 1e-6),
+            _ => panic!(),
+        }
+    }
+}

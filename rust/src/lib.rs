@@ -1,0 +1,54 @@
+//! # HAP — Hybrid Adaptive Parallelism for Efficient MoE Inference
+//!
+//! Reproduction of *"HAP: Hybrid Adaptive Parallelism for Efficient
+//! Mixture-of-Experts Inference"* (Lin et al., CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the coordinator: latency simulation models
+//!   ([`sim`]), the parallel-strategy search space ([`strategy`]), an
+//!   exact 0-1 ILP solver ([`ilp`]), the HAP planner ([`planner`]), the
+//!   dynamic parallelism-transition mechanism ([`transition`], [`quant`]),
+//!   a discrete-event multi-GPU cluster simulator ([`cluster`]) with an
+//!   MoE execution engine ([`engine`]), and a real serving runtime
+//!   ([`serving`], [`model`]) that executes AOT-compiled JAX/Pallas
+//!   artifacts through PJRT ([`runtime`]).
+//! - **L2 (python/compile/model.py)** — the tiny-MoE JAX model, lowered
+//!   once to HLO text (`artifacts/*.hlo.txt`).
+//! - **L1 (python/compile/kernels/)** — Pallas kernels (expert FFN,
+//!   attention, top-k gating, INT4 dequant), validated against pure-jnp
+//!   oracles at build time.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! Rust binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use hap::config::{hardware::NodeConfig, model::MoEModelConfig, scenario::Scenario};
+//! use hap::planner::HapPlanner;
+//!
+//! let model = MoEModelConfig::mixtral_8x7b();
+//! let node = NodeConfig::a6000x(4);
+//! let scenario = Scenario::long_constrained(); // 4096-token ctx, 64-token gen
+//! let planner = HapPlanner::new(&model, &node);
+//! let plan = planner.plan(&scenario, 8).expect("feasible plan");
+//! println!("{plan}");
+//! ```
+
+pub mod benchkit;
+pub mod cluster;
+pub mod config;
+pub mod engine;
+pub mod ilp;
+pub mod model;
+pub mod planner;
+pub mod quant;
+pub mod runtime;
+pub mod serving;
+pub mod sim;
+pub mod strategy;
+pub mod transition;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,314 @@
+//! `hap` — the CLI entrypoint for the HAP coordinator.
+//!
+//! Subcommands:
+//!   plan        Search the optimal hybrid parallel strategy (ILP).
+//!   breakdown   Per-layer latency breakdown, TP vs EP (paper Fig 2).
+//!   sweep       Speedup table across scenarios/platforms (Fig 4–9).
+//!   serve       Serve a synthetic workload on the real tiny-MoE via
+//!               PJRT under a chosen plan.
+//!   quant-eval  Quantization scheme quality report (Table I).
+//!   microbench  η/ρ simulation-model accuracy (Fig 5).
+
+use hap::benchkit::Table;
+use hap::config::{GpuSpec, MoEModelConfig, NodeConfig, Scenario};
+use hap::engine::Engine;
+use hap::planner::HapPlanner;
+use hap::quant::{self, Scheme};
+use hap::serving::{serve_workload, Request, ServeConfig};
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::args::ArgSpec;
+use hap::util::rng::Rng;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest = if args.is_empty() { &[] } else { &args[1..] };
+    let result = match cmd {
+        "plan" => cmd_plan(rest),
+        "breakdown" => cmd_breakdown(rest),
+        "sweep" => cmd_sweep(rest),
+        "serve" => cmd_serve(rest),
+        "quant-eval" => cmd_quant(rest),
+        "microbench" => cmd_microbench(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            Err(anyhow::anyhow!("unknown command"))
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "hap — Hybrid Adaptive Parallelism for MoE inference (paper reproduction)\n\n\
+         Usage: hap <command> [flags]\n\n\
+         Commands:\n  \
+         plan        search the optimal hybrid parallel strategy (ILP)\n  \
+         breakdown   per-layer latency breakdown TP vs EP (Fig 2)\n  \
+         sweep       HAP vs TP speedups across scenarios (Fig 4/6/7/9)\n  \
+         serve       serve a workload on the real tiny-MoE via PJRT\n  \
+         quant-eval  INT4 scheme quality (Table I)\n  \
+         microbench  η/ρ simulation-model accuracy (Fig 5)\n\n\
+         Run `hap <command> --help` for flags."
+    );
+}
+
+fn parse_node(gpu: &str, gpus: usize) -> anyhow::Result<NodeConfig> {
+    let spec = GpuSpec::preset(gpu)
+        .ok_or_else(|| anyhow::anyhow!("unknown GPU preset '{gpu}' (a100|a6000|v100|cpu-sim)"))?;
+    Ok(NodeConfig::new(spec, gpus))
+}
+
+fn parse_model(name: &str) -> anyhow::Result<MoEModelConfig> {
+    MoEModelConfig::preset(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown model preset '{name}' (mixtral-8x7b|qwen1.5-moe-a2.7b|qwen2-57b-a14b|tiny-moe)"
+        )
+    })
+}
+
+fn parse_scenario(name: &str, batch: usize) -> anyhow::Result<Scenario> {
+    let s = match name {
+        "short-constrained" => Scenario::short_constrained(),
+        "short-extended" => Scenario::short_extended(),
+        "long-constrained" => Scenario::long_constrained(),
+        "long-extended" => Scenario::long_extended(),
+        other => anyhow::bail!("unknown scenario '{other}'"),
+    };
+    Ok(s.with_batch(batch))
+}
+
+fn usize_flag(p: &hap::util::args::ParsedArgs, name: &str) -> anyhow::Result<usize> {
+    p.get_usize(name).map_err(anyhow::Error::msg)
+}
+
+fn cmd_plan(args: &[String]) -> anyhow::Result<()> {
+    let mut spec = ArgSpec::new("hap plan", "Search the optimal hybrid parallel strategy");
+    spec.flag("model", "mixtral-8x7b", "model preset");
+    spec.flag("gpu", "a6000", "GPU preset");
+    spec.flag("gpus", "4", "number of devices");
+    spec.flag("scenario", "long-constrained", "scenario preset");
+    spec.flag("batch", "16", "global batch size");
+    spec.bool_flag("verbose", "print the search space and pruning");
+    let p = spec.parse(args).map_err(anyhow::Error::msg)?;
+
+    let model = parse_model(p.get("model"))?;
+    let node = parse_node(p.get("gpu"), usize_flag(&p, "gpus")?)?;
+    let scenario = parse_scenario(p.get("scenario"), usize_flag(&p, "batch")?)?;
+
+    let planner = HapPlanner::new(&model, &node);
+    if p.get_bool("verbose") {
+        let space = planner.search_space(&scenario);
+        println!(
+            "search space: K_a={} ({:?}) K_e={} ({:?}), {} decisions",
+            space.k_a(),
+            space.attn.iter().map(|a| a.label()).collect::<Vec<_>>(),
+            space.k_e(),
+            space.expert.iter().map(|e| e.label()).collect::<Vec<_>>(),
+            space.decision_count()
+        );
+        for (label, why) in &space.pruned {
+            println!("  pruned {label}: {why:?}");
+        }
+    }
+    let plan = planner.plan(&scenario, scenario.generate)?;
+    println!("{plan}");
+    let tp = planner.tp_baseline(&scenario);
+    println!(
+        "\nTP baseline: {:.1} ms → predicted speedup {:.2}x",
+        tp * 1e3,
+        tp / plan.predicted_total
+    );
+    Ok(())
+}
+
+fn cmd_breakdown(args: &[String]) -> anyhow::Result<()> {
+    let mut spec = ArgSpec::new("hap breakdown", "Per-layer latency breakdown (Fig 2)");
+    spec.flag("model", "mixtral-8x7b", "model preset");
+    spec.flag("gpu", "a6000", "GPU preset");
+    spec.flag("gpus", "4", "number of devices");
+    spec.flag("seq", "2048", "sequence length");
+    spec.flag("batch", "16", "batch size");
+    let p = spec.parse(args).map_err(anyhow::Error::msg)?;
+
+    let model = parse_model(p.get("model"))?;
+    let node = parse_node(p.get("gpu"), usize_flag(&p, "gpus")?)?;
+    let n = node.num_devices;
+    let sc = Scenario::new("breakdown", usize_flag(&p, "seq")?, 64, usize_flag(&p, "batch")?);
+    let engine = Engine::new(&model, &node);
+
+    let tp = engine.run_static(&AttnStrategy::new(n, 1), &ExpertStrategy::new(n, 1), &sc, 1);
+    let ep = engine.run_static(&AttnStrategy::new(1, n), &ExpertStrategy::new(1, n), &sc, 1);
+
+    let nl = model.layers as f64;
+    let mut t =
+        Table::new(&["stage", "strategy", "attn (ms)", "expert (ms)", "comm (ms)", "total (ms)"]);
+    for (name, run) in [("TP", &tp), ("EP", &ep)] {
+        t.row(&[
+            "prefill".into(),
+            name.into(),
+            format!("{:.2}", run.prefill.attn / nl * 1e3),
+            format!("{:.2}", run.prefill.expert / nl * 1e3),
+            format!("{:.2}", run.prefill.comm / nl * 1e3),
+            format!("{:.2}", run.prefill.total() / nl * 1e3),
+        ]);
+    }
+    for (name, run) in [("TP", &tp), ("EP", &ep)] {
+        let steps = sc.generate as f64;
+        t.row(&[
+            "decode".into(),
+            name.into(),
+            format!("{:.3}", run.decode.attn / nl / steps * 1e3),
+            format!("{:.3}", run.decode.expert / nl / steps * 1e3),
+            format!("{:.3}", run.decode.comm / nl / steps * 1e3),
+            format!("{:.3}", run.decode.total() / nl / steps * 1e3),
+        ]);
+    }
+    println!(
+        "per-layer latency breakdown, {} on {} (seq {}):",
+        model.name,
+        node.label(),
+        sc.context
+    );
+    t.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
+    let mut spec = ArgSpec::new("hap sweep", "HAP vs TP speedups across scenarios");
+    spec.flag("gpu", "a6000", "GPU preset");
+    spec.flag("gpus", "4", "number of devices");
+    spec.flag("batch", "16", "global batch size");
+    let p = spec.parse(args).map_err(anyhow::Error::msg)?;
+    let node = parse_node(p.get("gpu"), usize_flag(&p, "gpus")?)?;
+    let batch = usize_flag(&p, "batch")?;
+
+    let mut t = Table::new(&["model", "scenario", "TP (s)", "HAP (s)", "speedup", "HAP plan"]);
+    for model in MoEModelConfig::paper_models() {
+        let planner = HapPlanner::new(&model, &node);
+        let engine = Engine::new(&model, &node);
+        for sc in Scenario::table2() {
+            let sc = sc.with_batch(batch);
+            let plan = planner.plan(&sc, sc.generate)?;
+            let n = node.num_devices;
+            let tp = engine
+                .run_static(&AttnStrategy::new(n, 1), &ExpertStrategy::new(n, 1), &sc, 1)
+                .total();
+            let hap = engine.run_plan(&plan, &sc, 1).total();
+            t.row(&[
+                model.name.clone(),
+                sc.name.clone(),
+                format!("{:.3}", tp),
+                format!("{:.3}", hap),
+                format!("{:.2}x", tp / hap),
+                plan.signature(),
+            ]);
+        }
+    }
+    println!("HAP vs static TP on {} (measured on the cluster simulator):", node.label());
+    t.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
+    let mut spec = ArgSpec::new("hap serve", "Serve a synthetic workload on the real tiny-MoE");
+    spec.flag("artifacts", "artifacts", "artifact directory");
+    spec.flag("requests", "16", "number of requests");
+    spec.flag("gen", "16", "tokens to generate per request");
+    spec.flag("plan", "hap", "plan: hap | tp");
+    spec.flag("tp", "4", "device count (attention TP degree)");
+    let p = spec.parse(args).map_err(anyhow::Error::msg)?;
+
+    let dir = Path::new(p.get("artifacts"));
+    let rt = hap::runtime::PjrtRuntime::load(dir)?;
+    let n = usize_flag(&p, "tp")?;
+    let config = match p.get("plan") {
+        "tp" => ServeConfig::tp(n),
+        "hap" => ServeConfig::hap_transition(n),
+        other => anyhow::bail!("unknown plan '{other}'"),
+    };
+    let m = rt.manifest.model.clone();
+    let mut rng = Rng::new(7);
+    let nreq = usize_flag(&p, "requests")?;
+    let gen = usize_flag(&p, "gen")?;
+    let workload: Vec<Request> = (0..nreq as u64)
+        .map(|id| {
+            let len = rng.range(m.prefill_len / 2, m.prefill_len);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+            Request::new(id, prompt, gen)
+        })
+        .collect();
+
+    println!("serving {nreq} requests ({} plan: {}) ...", p.get("plan"), config.label());
+    let report = serve_workload(&rt, &config, workload)?;
+    println!("{}", report.metrics.summary());
+    println!(
+        "compute split: prefill {:.2} s, decode {:.2} s",
+        report.prefill_time, report.decode_time
+    );
+    Ok(())
+}
+
+fn cmd_quant(args: &[String]) -> anyhow::Result<()> {
+    let mut spec = ArgSpec::new("hap quant-eval", "INT4 scheme quality (Table I)");
+    spec.flag("rows", "512", "matrix rows");
+    spec.flag("cols", "1024", "matrix cols");
+    spec.flag("seed", "3", "weight seed");
+    let p = spec.parse(args).map_err(anyhow::Error::msg)?;
+    let rows = usize_flag(&p, "rows")?;
+    let cols = usize_flag(&p, "cols")?;
+    let mut rng = Rng::new(usize_flag(&p, "seed")? as u64);
+    let mut data = rng.normal_vec_f32(rows * cols, 0.02);
+    for r in 0..rows {
+        data[r * cols] = if r % 2 == 0 { 0.3 } else { -0.3 }; // outliers
+    }
+    let mut t = Table::new(&["scheme", "cosine sim", "rmse", "max err", "compression"]);
+    for scheme in
+        [Scheme::PerTensor, Scheme::PerChannel, Scheme::PerGroup { group_size: 128 }]
+    {
+        let rep = quant::evaluate(&data, rows, cols, scheme);
+        t.row(&[
+            rep.scheme.name(),
+            format!("{:.5}", rep.cosine_similarity),
+            format!("{:.2e}", rep.rmse),
+            format!("{:.2e}", rep.max_abs_err),
+            format!("{:.2}x", rep.compression_ratio()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_microbench(args: &[String]) -> anyhow::Result<()> {
+    let mut spec = ArgSpec::new("hap microbench", "η/ρ simulation-model accuracy (Fig 5)");
+    spec.flag("gpu", "a6000", "GPU preset");
+    spec.flag("samples", "300", "held-out samples");
+    let p = spec.parse(args).map_err(anyhow::Error::msg)?;
+    let gpu = GpuSpec::preset(p.get("gpu")).ok_or_else(|| anyhow::anyhow!("unknown gpu"))?;
+    let lm = hap::sim::LatencyModel::train(&gpu, 0x4A9);
+    let n = usize_flag(&p, "samples")?;
+
+    let (comp_err, comm_err) = hap::sim::latency::heldout_errors(&lm, &gpu, n);
+    println!(
+        "computational model: mean err {:.1}% (paper target <10%)",
+        hap::util::stats::mean(&comp_err) * 100.0
+    );
+    println!(
+        "communication model: mean err {:.1}% (paper target <5%)",
+        hap::util::stats::mean(&comm_err) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,379 @@
+//! The model executor: composes per-device AOT artifacts into full
+//! prefill/decode steps under a hybrid parallel plan.
+//!
+//! One logical device per shard; combines (TP partial sums, EP
+//! contribution sums) are performed on host between artifact calls —
+//! the demo node's "collectives". The attention strategy is pinned
+//! across stages (KV cache layout); the expert strategy may differ
+//! between prefill and decode, exercising the paper's dynamic
+//! parallelism transition on the real compute path.
+
+use crate::runtime::literal::{self, HostTensor};
+use crate::runtime::PjrtRuntime;
+use crate::strategy::ExpertStrategy;
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::HashMap;
+
+/// Per-stage execution strategy on the demo node.
+///
+/// The real-compute path supports TP for attention (DP needs per-group
+/// batches, which the artifact set fixes at B — covered by the
+/// simulation stack instead; see DESIGN.md) and TP *or* EP for experts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageStrategy {
+    pub attn_tp: usize,
+    pub expert: ExpertStrategy,
+}
+
+impl StageStrategy {
+    pub fn tp(n: usize) -> StageStrategy {
+        StageStrategy { attn_tp: n, expert: ExpertStrategy::new(n, 1) }
+    }
+
+    pub fn expert_label(&self) -> String {
+        self.expert.label()
+    }
+}
+
+/// KV cache for one layer on one device: padded [B, M, KVH_local, D].
+struct LayerCache {
+    k: HostTensor,
+    v: HostTensor,
+}
+
+/// The executor. Weight literals are sliced and cached per
+/// (strategy, layer, device) on first use; the per-token hot path only
+/// builds activation literals.
+pub struct ModelExecutor<'rt> {
+    pub rt: &'rt PjrtRuntime,
+    pub weights: super::WeightStore,
+    /// (kind, layer, device) → device-resident weight buffers. kind
+    /// encodes the artifact family + shard degree, e.g. "attn_tp2",
+    /// "expert_ep4". Uploaded once (§Perf: keeps ~50 MB of parameters
+    /// off the per-step H2D path). The source literal is retained with
+    /// its buffer: `BufferFromHostLiteral` is asynchronous, so the
+    /// literal must outlive the transfer.
+    weight_cache: HashMap<(String, usize, usize), Vec<(xla::Literal, xla::PjRtBuffer)>>,
+    /// Embedding/head buffers (uploaded once; literal retained).
+    embed_buf: Option<(xla::Literal, xla::PjRtBuffer)>,
+    head_bufs: Option<[(xla::Literal, xla::PjRtBuffer); 2]>,
+    /// Per-layer per-device caches (attention shards).
+    caches: Vec<Vec<LayerCache>>,
+    /// Current sequence position (tokens stored so far).
+    pub pos: usize,
+    attn_tp: Option<usize>,
+}
+
+impl<'rt> ModelExecutor<'rt> {
+    pub fn new(rt: &'rt PjrtRuntime) -> Result<ModelExecutor<'rt>> {
+        let blob = rt.read_weights()?;
+        let weights = super::WeightStore::from_blob(&rt.manifest, &blob)?;
+        Ok(ModelExecutor {
+            rt,
+            weights,
+            weight_cache: HashMap::new(),
+            embed_buf: None,
+            head_bufs: None,
+            caches: Vec::new(),
+            pos: 0,
+            attn_tp: None,
+        })
+    }
+
+    fn meta(&self) -> &crate::runtime::TinyModelMeta {
+        &self.rt.manifest.model
+    }
+
+    fn weight_pairs(
+        &mut self,
+        kind: &str,
+        layer: usize,
+        device: usize,
+    ) -> Result<&Vec<(xla::Literal, xla::PjRtBuffer)>> {
+        let key = (kind.to_string(), layer, device);
+        if !self.weight_cache.contains_key(&key) {
+            let tensors = if let Some(t) = kind.strip_prefix("attn_tp") {
+                self.weights.shard_attn(layer, t.parse()?, device)?
+            } else if let Some(t) = kind.strip_prefix("expert_tp") {
+                self.weights.shard_expert_tp(layer, t.parse()?, device)?
+            } else if let Some(e) = kind.strip_prefix("expert_ep") {
+                self.weights.shard_expert_ep(layer, e.parse()?, device)?
+            } else {
+                anyhow::bail!("unknown weight kind {kind}");
+            };
+            let bufs = tensors
+                .iter()
+                .map(|t| {
+                    let lit = t.to_literal()?;
+                    let buf = self.rt.to_device(&lit)?;
+                    Ok((lit, buf))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            self.weight_cache.insert(key.clone(), bufs);
+        }
+        Ok(&self.weight_cache[&key])
+    }
+
+    fn weight_buffers(
+        &mut self,
+        kind: &str,
+        layer: usize,
+        device: usize,
+    ) -> Result<()> {
+        self.weight_pairs(kind, layer, device).map(|_| ())
+    }
+
+    fn embed_buffer(&mut self) -> Result<()> {
+        if self.embed_buf.is_none() {
+            let lit = self.weights.get("embed")?.to_literal()?;
+            let buf = self.rt.to_device(&lit)?;
+            self.embed_buf = Some((lit, buf));
+        }
+        Ok(())
+    }
+
+    /// Run prefill for a [B, S] token batch; returns last-position
+    /// logits [B, V]. Initializes the KV caches under `strategy`.
+    pub fn prefill(&mut self, tokens: &[i32], strategy: &StageStrategy) -> Result<HostTensor> {
+        let m = self.meta().clone();
+        let (b, s) = (m.batch, m.prefill_len);
+        if tokens.len() != b * s {
+            anyhow::bail!("prefill expects {}x{} tokens, got {}", b, s, tokens.len());
+        }
+        self.validate(strategy)?;
+        self.attn_tp = Some(strategy.attn_tp);
+
+        // Embed (embedding table resident on device).
+        let tok_lit = literal::tokens_literal(tokens, &[b, s])?;
+        let tok_buf = self.rt.to_device(&tok_lit)?;
+        self.embed_buffer()?;
+        let outs = {
+            let embed = &self.embed_buf.as_ref().unwrap().1;
+            self.rt.execute_buffers("embed_prefill", &[&tok_buf, embed])?
+        };
+        let mut x = HostTensor::from_literal(&outs[0], vec![b, s, m.hidden])?;
+
+        // Layers.
+        self.caches.clear();
+        let t = strategy.attn_tp;
+        let kv_l = (m.kv_heads / t).max(1);
+        for l in 0..m.layers {
+            // Attention module: sum TP partials, collect KV shards.
+            let x_lit = x.to_literal()?;
+            let x_buf = self.rt.to_device(&x_lit)?;
+            let mut a_sum: Option<HostTensor> = None;
+            let mut layer_caches = Vec::with_capacity(t);
+            for d in 0..t {
+                let kind = format!("attn_tp{t}");
+                self.weight_buffers(&kind, l, d)?;
+                let w = &self.weight_cache[&(kind, l, d)];
+                let mut inputs: Vec<&xla::PjRtBuffer> = vec![&x_buf];
+                inputs.extend(w.iter().map(|(_, b)| b));
+                let outs = self.rt.execute_buffers(&format!("attn_prefill_tp{t}"), &inputs)?;
+                let partial = HostTensor::from_literal(&outs[0], vec![b, s, m.hidden])?;
+                match &mut a_sum {
+                    None => a_sum = Some(partial),
+                    Some(acc) => acc.add_assign(&partial),
+                }
+                // Pad prefill KV [B,S,kv_l,D] into [B,M,kv_l,D].
+                let k = HostTensor::from_literal(&outs[1], vec![b, s, kv_l, m.head_dim])?;
+                let v = HostTensor::from_literal(&outs[2], vec![b, s, kv_l, m.head_dim])?;
+                layer_caches.push(LayerCache {
+                    k: pad_cache(&k, m.max_len),
+                    v: pad_cache(&v, m.max_len),
+                });
+            }
+            self.caches.push(layer_caches);
+            x.add_assign(&a_sum.expect("t >= 1"));
+
+            // Expert module: sum shard outputs.
+            let e_out = self.expert_module(&x, l, strategy, "prefill")?;
+            x.add_assign(&e_out);
+        }
+
+        self.pos = s;
+        self.head(&x)
+    }
+
+    /// One decode step: `last_tokens` [B] (previous outputs), returns
+    /// logits [B, V]. `strategy.attn_tp` must match prefill's.
+    pub fn decode_step(
+        &mut self,
+        last_tokens: &[i32],
+        strategy: &StageStrategy,
+    ) -> Result<HostTensor> {
+        let m = self.meta().clone();
+        let b = m.batch;
+        if last_tokens.len() != b {
+            anyhow::bail!("decode expects {} tokens, got {}", b, last_tokens.len());
+        }
+        if self.pos + 1 > m.max_len {
+            anyhow::bail!("KV cache exhausted at pos {}", self.pos);
+        }
+        self.validate(strategy)?;
+        let t = self.attn_tp.ok_or_else(|| anyhow!("decode before prefill"))?;
+        if strategy.attn_tp != t {
+            anyhow::bail!("attention strategy is pinned by the KV cache (tp{t})");
+        }
+
+        // Embed one token per sequence.
+        let tok_lit = literal::tokens_literal(last_tokens, &[b, 1])?;
+        let tok_buf = self.rt.to_device(&tok_lit)?;
+        self.embed_buffer()?;
+        let outs = {
+            let embed = &self.embed_buf.as_ref().unwrap().1;
+            self.rt.execute_buffers("embed_decode", &[&tok_buf, embed])?
+        };
+        let mut x = HostTensor::from_literal(&outs[0], vec![b, 1, m.hidden])?;
+
+        let kv_l = (m.kv_heads / t).max(1);
+        let pos_lit = literal::scalar_i32(self.pos as i32);
+        let pos_buf = self.rt.to_device(&pos_lit)?;
+        for l in 0..m.layers {
+            let x_lit = x.to_literal()?;
+            let x_buf = self.rt.to_device(&x_lit)?;
+            let mut a_sum: Option<HostTensor> = None;
+            for d in 0..t {
+                let kind = format!("attn_tp{t}");
+                // Assemble inputs: x, k_cache, v_cache, pos, ln, wq..wo.
+                let k_lit = self.caches[l][d].k.to_literal()?;
+                let v_lit = self.caches[l][d].v.to_literal()?;
+                let k_buf = self.rt.to_device(&k_lit)?;
+                let v_buf = self.rt.to_device(&v_lit)?;
+                self.weight_buffers(&kind, l, d)?;
+                let w = &self.weight_cache[&(kind, l, d)];
+                let mut inputs: Vec<&xla::PjRtBuffer> = vec![&x_buf, &k_buf, &v_buf, &pos_buf];
+                inputs.extend(w.iter().map(|(_, b)| b));
+                let outs = self.rt.execute_buffers(&format!("attn_decode_tp{t}"), &inputs)?;
+                let partial = HostTensor::from_literal(&outs[0], vec![b, 1, m.hidden])?;
+                match &mut a_sum {
+                    None => a_sum = Some(partial),
+                    Some(acc) => acc.add_assign(&partial),
+                }
+                self.caches[l][d].k =
+                    HostTensor::from_literal(&outs[1], vec![b, m.max_len, kv_l, m.head_dim])?;
+                self.caches[l][d].v =
+                    HostTensor::from_literal(&outs[2], vec![b, m.max_len, kv_l, m.head_dim])?;
+            }
+            x.add_assign(&a_sum.expect("t >= 1"));
+            let e_out = self.expert_module(&x, l, strategy, "decode")?;
+            x.add_assign(&e_out);
+        }
+
+        self.pos += 1;
+        self.head(&x)
+    }
+
+    /// Expert module under the stage strategy: returns the combined
+    /// output with the same shape as `x` ([B, S|1, H]).
+    fn expert_module(
+        &mut self,
+        x: &HostTensor,
+        layer: usize,
+        strategy: &StageStrategy,
+        stage: &str,
+    ) -> Result<HostTensor> {
+        let m = self.meta().clone();
+        let tokens: usize = x.shape[..2].iter().product();
+        let x2 = HostTensor::new(vec![tokens, m.hidden], x.data.clone());
+        let x2_lit = x2.to_literal()?;
+        let x_buf = self.rt.to_device(&x2_lit)?;
+        let (kind, artifact, devices) = if strategy.expert.ep > 1 {
+            let e = strategy.expert.ep;
+            (format!("expert_ep{e}"), format!("expert_{stage}_ep{e}"), e)
+        } else {
+            let t = strategy.expert.tp;
+            (format!("expert_tp{t}"), format!("expert_{stage}_tp{t}"), t)
+        };
+        let mut sum: Option<HostTensor> = None;
+        for d in 0..devices {
+            self.weight_buffers(&kind, layer, d)?;
+            let w = &self.weight_cache[&(kind.clone(), layer, d)];
+            let mut inputs: Vec<&xla::PjRtBuffer> = vec![&x_buf];
+            inputs.extend(w.iter().map(|(_, b)| b));
+            let outs = self.rt.execute_buffers(&artifact, &inputs)?;
+            let partial = HostTensor::from_literal(&outs[0], vec![tokens, m.hidden])?;
+            match &mut sum {
+                None => sum = Some(partial),
+                Some(acc) => acc.add_assign(&partial),
+            }
+        }
+        let out = sum.expect("devices >= 1");
+        Ok(HostTensor::new(x.shape.clone(), out.data))
+    }
+
+    /// Final norm + unembed on the last position.
+    fn head(&mut self, x: &HostTensor) -> Result<HostTensor> {
+        let m = self.meta();
+        let (b, h, v) = (m.batch, m.hidden, m.vocab);
+        let s = x.shape[1];
+        // Slice last position [B, H].
+        let mut last = Vec::with_capacity(b * h);
+        for bi in 0..b {
+            let base = (bi * s + (s - 1)) * h;
+            last.extend_from_slice(&x.data[base..base + h]);
+        }
+        let last = HostTensor::new(vec![b, h], last);
+        if self.head_bufs.is_none() {
+            let ln_lit = self.weights.get("ln_f")?.to_literal()?;
+            let ln = self.rt.to_device(&ln_lit)?;
+            let un_lit = self.weights.get("unembed")?.to_literal()?;
+            let un = self.rt.to_device(&un_lit)?;
+            self.head_bufs = Some([(ln_lit, ln), (un_lit, un)]);
+        }
+        let last_lit = last.to_literal()?;
+        let last_buf = self.rt.to_device(&last_lit)?;
+        let [(_, ln), (_, un)] = self.head_bufs.as_ref().unwrap();
+        let outs = self.rt.execute_buffers("head", &[&last_buf, ln, un])?;
+        HostTensor::from_literal(&outs[0], vec![b, v])
+    }
+
+    fn validate(&self, strategy: &StageStrategy) -> Result<()> {
+        let ok_attn = matches!(strategy.attn_tp, 1 | 2 | 4);
+        let e = &strategy.expert;
+        let ok_expert = (e.ep == 1 && matches!(e.tp, 1 | 2 | 4)) || (e.tp == 1 && matches!(e.ep, 2 | 4));
+        if !ok_attn || !ok_expert {
+            anyhow::bail!(
+                "unsupported demo strategy attn_tp={} expert={} (artifact set covers attn tp 1/2/4, expert tp 1/2/4 or ep 2/4)",
+                strategy.attn_tp,
+                e.label()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Pad a [B, S, KVH, D] prefill cache to [B, M, KVH, D] with zeros.
+fn pad_cache(c: &HostTensor, max_len: usize) -> HostTensor {
+    let (b, s, kvh, d) = (c.shape[0], c.shape[1], c.shape[2], c.shape[3]);
+    let mut out = HostTensor::zeros(vec![b, max_len, kvh, d]);
+    let row = kvh * d;
+    for bi in 0..b {
+        let src = bi * s * row;
+        let dst = bi * max_len * row;
+        out.data[dst..dst + s * row].copy_from_slice(&c.data[src..src + s * row]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_cache_places_rows() {
+        let c = HostTensor::new(vec![1, 2, 1, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let p = pad_cache(&c, 4);
+        assert_eq!(p.shape, vec![1, 4, 1, 2]);
+        assert_eq!(p.data, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn stage_strategy_labels() {
+        let s = StageStrategy::tp(4);
+        assert_eq!(s.expert_label(), "TP4");
+        let e = StageStrategy { attn_tp: 2, expert: ExpertStrategy::new(1, 4) };
+        assert_eq!(e.expert_label(), "EP4");
+    }
+}

@@ -1,0 +1,15 @@
+//! Real tiny-MoE execution: weights, sharding, and the per-layer
+//! composition of AOT artifacts under a hybrid parallel plan.
+//!
+//! The Rust side plays the role of the multi-GPU runtime: it holds one
+//! logical device per shard, calls each device's artifact, and performs
+//! the combines (sum for TP partials and EP contributions — the
+//! "collectives" of the demo node). Simulated communication time for
+//! the modeled platform can be charged on top by callers that want
+//! platform-shaped latencies; the numerics are exact either way.
+
+pub mod exec;
+pub mod weights;
+
+pub use exec::{ModelExecutor, StageStrategy};
+pub use weights::WeightStore;

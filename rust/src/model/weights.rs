@@ -1,0 +1,269 @@
+//! Weight storage and shard slicing — mirrors `model.py`'s `shard_*`
+//! layout contract exactly (validated end-to-end by
+//! `rust/tests/runtime_e2e.rs` against the jax reference outputs).
+
+use crate::runtime::literal::HostTensor;
+use crate::runtime::{Manifest, TinyModelMeta};
+use crate::Result;
+use anyhow::anyhow;
+use std::collections::HashMap;
+
+/// All model weights, resident on host, addressable by name.
+pub struct WeightStore {
+    pub meta: TinyModelMeta,
+    tensors: HashMap<String, HostTensor>,
+}
+
+impl WeightStore {
+    /// Build from the manifest's weight table + raw f32 blob.
+    pub fn from_blob(manifest: &Manifest, blob: &[f32]) -> Result<WeightStore> {
+        let mut tensors = HashMap::new();
+        for w in &manifest.weights {
+            let n = w.elements();
+            let end = w.offset_floats + n;
+            if end > blob.len() {
+                anyhow::bail!("weight {} extends past blob ({} > {})", w.name, end, blob.len());
+            }
+            tensors.insert(
+                w.name.clone(),
+                HostTensor::new(w.shape.clone(), blob[w.offset_floats..end].to_vec()),
+            );
+        }
+        Ok(WeightStore { meta: manifest.model.clone(), tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("missing weight '{name}'"))
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.tensors.values().map(|t| t.elements()).sum()
+    }
+
+    /// Attention TP shard `d` of `t` for layer `l`:
+    /// `[ln, wq, wk, wv, wo]` in artifact input order.
+    ///
+    /// Q/O shard by query head; K/V by kv head (t ≤ kv_heads).
+    pub fn shard_attn(&self, l: usize, t: usize, d: usize) -> Result<Vec<HostTensor>> {
+        let m = &self.meta;
+        let hd = m.head_dim;
+        let hq_l = m.q_heads / t;
+        let kv_l = (m.kv_heads / t).max(1);
+        let h = m.hidden;
+
+        let ln = self.get(&format!("layer{l}.ln1"))?.clone();
+        // wq stored [H, q_heads*hd]: take head columns [d*hq_l, (d+1)*hq_l).
+        let wq = slice_head_cols(self.get(&format!("layer{l}.wq"))?, h, m.q_heads, hd, d * hq_l, hq_l);
+        // KV heads shard when t ≤ kv_heads; beyond that each device
+        // replicates the kv head its query heads map to (GQA).
+        let kv_start = if t <= m.kv_heads { d * kv_l } else { d / (t / m.kv_heads) };
+        let wk = slice_head_cols(self.get(&format!("layer{l}.wk"))?, h, m.kv_heads, hd, kv_start, kv_l);
+        let wv = slice_head_cols(self.get(&format!("layer{l}.wv"))?, h, m.kv_heads, hd, kv_start, kv_l);
+        // wo stored [q_heads*hd, H]: take head *rows*.
+        let wo_full = self.get(&format!("layer{l}.wo"))?;
+        let row_start = d * hq_l * hd;
+        let rows = hq_l * hd;
+        let wo = HostTensor::new(
+            vec![rows, h],
+            wo_full.data[row_start * h..(row_start + rows) * h].to_vec(),
+        );
+        Ok(vec![ln, wq, wk, wv, wo])
+    }
+
+    /// Expert TP shard: `[ln, router, wg, wu, wd]` with inter sliced.
+    pub fn shard_expert_tp(&self, l: usize, t: usize, d: usize) -> Result<Vec<HostTensor>> {
+        let m = &self.meta;
+        let (h, e, i) = (m.hidden, m.num_experts, m.inter);
+        let i_l = i / t;
+        let ln = self.get(&format!("layer{l}.ln2"))?.clone();
+        let router = self.get(&format!("layer{l}.router"))?.clone();
+        // wg/wu [E, H, I] → slice last axis.
+        let wg = slice_last_axis(self.get(&format!("layer{l}.wg"))?, e * h, i, d * i_l, i_l);
+        let wu = slice_last_axis(self.get(&format!("layer{l}.wu"))?, e * h, i, d * i_l, i_l);
+        // wd [E, I, H] → slice middle axis = rows of each expert block.
+        let wd_full = self.get(&format!("layer{l}.wd"))?;
+        let mut wd_data = Vec::with_capacity(e * i_l * h);
+        for ei in 0..e {
+            let base = ei * i * h + d * i_l * h;
+            wd_data.extend_from_slice(&wd_full.data[base..base + i_l * h]);
+        }
+        let wg = HostTensor::new(vec![e, h, i_l], wg.data);
+        let wu = HostTensor::new(vec![e, h, i_l], wu.data);
+        let wd = HostTensor::new(vec![e, i_l, h], wd_data);
+        Ok(vec![ln, router, wg, wu, wd])
+    }
+
+    /// Expert EP shard: `[ln, router, sel, wg, wu, wd]` — device `d` of
+    /// `ep` owns the contiguous expert block `[d·E/ep, (d+1)·E/ep)`.
+    pub fn shard_expert_ep(&self, l: usize, ep: usize, d: usize) -> Result<Vec<HostTensor>> {
+        let m = &self.meta;
+        let (h, e, i) = (m.hidden, m.num_experts, m.inter);
+        let e_l = e / ep;
+        let ln = self.get(&format!("layer{l}.ln2"))?.clone();
+        let router = self.get(&format!("layer{l}.router"))?.clone();
+        // Selection matrix [e_l, E].
+        let mut sel = vec![0.0f32; e_l * e];
+        for j in 0..e_l {
+            sel[j * e + d * e_l + j] = 1.0;
+        }
+        let sel = HostTensor::new(vec![e_l, e], sel);
+        let take_block = |t: &HostTensor, per_expert: usize| -> HostTensor {
+            let start = d * e_l * per_expert;
+            HostTensor::new(
+                {
+                    let mut s = t.shape.clone();
+                    s[0] = e_l;
+                    s
+                },
+                t.data[start..start + e_l * per_expert].to_vec(),
+            )
+        };
+        let wg = take_block(self.get(&format!("layer{l}.wg"))?, h * i);
+        let wu = take_block(self.get(&format!("layer{l}.wu"))?, h * i);
+        let wd = take_block(self.get(&format!("layer{l}.wd"))?, i * h);
+        Ok(vec![ln, router, sel, wg, wu, wd])
+    }
+
+    /// Expert-module weights of one layer as flat f32 (for quantized
+    /// backup in the transition demo).
+    pub fn expert_layer_flat(&self, l: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for name in ["wg", "wu", "wd"] {
+            out.extend_from_slice(&self.get(&format!("layer{l}.{name}"))?.data);
+        }
+        Ok(out)
+    }
+}
+
+/// Slice head-blocked columns: tensor [rows, heads*hd] → [rows, n*hd]
+/// taking heads [start, start+n).
+fn slice_head_cols(
+    t: &HostTensor,
+    rows: usize,
+    heads: usize,
+    hd: usize,
+    start: usize,
+    n: usize,
+) -> HostTensor {
+    let cols = heads * hd;
+    assert_eq!(t.shape, vec![rows, cols]);
+    let mut data = Vec::with_capacity(rows * n * hd);
+    for r in 0..rows {
+        let base = r * cols + start * hd;
+        data.extend_from_slice(&t.data[base..base + n * hd]);
+    }
+    HostTensor::new(vec![rows, n * hd], data)
+}
+
+/// Slice the last axis of a tensor flattened as [outer, last]:
+/// takes [start, start+n) of `last` for every outer row.
+fn slice_last_axis(t: &HostTensor, outer: usize, last: usize, start: usize, n: usize) -> HostTensor {
+    assert_eq!(t.elements(), outer * last);
+    let mut data = Vec::with_capacity(outer * n);
+    for r in 0..outer {
+        let base = r * last + start;
+        data.extend_from_slice(&t.data[base..base + n]);
+    }
+    HostTensor::new(vec![outer, n], data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn tiny_manifest() -> Manifest {
+        // Minimal manifest for a 1-layer miniature (h=4, heads=2, kv=1,
+        // hd=2, E=2, I=4, V=8).
+        Manifest::parse(
+            r#"{
+          "model": {"batch": 1, "prefill_len": 4, "max_len": 8, "hidden": 4,
+                    "q_heads": 2, "kv_heads": 1, "head_dim": 2,
+                    "num_experts": 2, "top_k": 1, "inter": 4, "vocab": 8,
+                    "layers": 1},
+          "weights_file": "weights.bin",
+          "weights": [
+            {"name": "embed", "shape": [8, 4], "offset_floats": 0},
+            {"name": "layer0.ln1", "shape": [4], "offset_floats": 32},
+            {"name": "layer0.wq", "shape": [4, 4], "offset_floats": 36},
+            {"name": "layer0.wk", "shape": [4, 2], "offset_floats": 52},
+            {"name": "layer0.wv", "shape": [4, 2], "offset_floats": 60},
+            {"name": "layer0.wo", "shape": [4, 4], "offset_floats": 68},
+            {"name": "layer0.ln2", "shape": [4], "offset_floats": 84},
+            {"name": "layer0.router", "shape": [4, 2], "offset_floats": 88},
+            {"name": "layer0.wg", "shape": [2, 4, 4], "offset_floats": 96},
+            {"name": "layer0.wu", "shape": [2, 4, 4], "offset_floats": 128},
+            {"name": "layer0.wd", "shape": [2, 4, 4], "offset_floats": 160},
+            {"name": "ln_f", "shape": [4], "offset_floats": 192},
+            {"name": "unembed", "shape": [4, 8], "offset_floats": 196}
+          ],
+          "entries": []
+        }"#,
+        )
+        .unwrap()
+    }
+
+    fn store() -> WeightStore {
+        let m = tiny_manifest();
+        let blob: Vec<f32> = (0..228).map(|i| i as f32).collect();
+        WeightStore::from_blob(&m, &blob).unwrap()
+    }
+
+    #[test]
+    fn loads_all_weights() {
+        let s = store();
+        assert_eq!(s.num_params(), 228);
+        assert_eq!(s.get("layer0.wq").unwrap().shape, vec![4, 4]);
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn attn_shards_partition_columns() {
+        let s = store();
+        let full = s.shard_attn(0, 1, 0).unwrap();
+        let d0 = s.shard_attn(0, 2, 0).unwrap();
+        let d1 = s.shard_attn(0, 2, 1).unwrap();
+        // wq (index 1): [4,4] split into [4,2]+[4,2] by head columns.
+        assert_eq!(d0[1].shape, vec![4, 2]);
+        for r in 0..4 {
+            assert_eq!(d0[1].data[r * 2..r * 2 + 2], full[1].data[r * 4..r * 4 + 2]);
+            assert_eq!(d1[1].data[r * 2..r * 2 + 2], full[1].data[r * 4 + 2..r * 4 + 4]);
+        }
+        // wo (index 4): rows split.
+        assert_eq!(d0[4].shape, vec![2, 4]);
+        assert_eq!(d0[4].data[..], full[4].data[..8]);
+        assert_eq!(d1[4].data[..], full[4].data[8..]);
+    }
+
+    #[test]
+    fn expert_tp_shards_slice_inter() {
+        let s = store();
+        let full = s.shard_expert_tp(0, 1, 0).unwrap();
+        let d0 = s.shard_expert_tp(0, 2, 0).unwrap();
+        let d1 = s.shard_expert_tp(0, 2, 1).unwrap();
+        assert_eq!(d0[2].shape, vec![2, 4, 2]); // wg [E, H, I/2]
+        // First row of expert 0: full wg row is [0..4) of that row.
+        assert_eq!(d0[2].data[0..2], full[2].data[0..2]);
+        assert_eq!(d1[2].data[0..2], full[2].data[2..4]);
+        // wd rows: [E, I/2, H].
+        assert_eq!(d0[4].shape, vec![2, 2, 4]);
+        assert_eq!(d0[4].data[0..8], full[4].data[0..8]);
+        assert_eq!(d1[4].data[0..8], full[4].data[8..16]);
+    }
+
+    #[test]
+    fn expert_ep_shards_take_expert_blocks() {
+        let s = store();
+        let d0 = s.shard_expert_ep(0, 2, 0).unwrap();
+        let d1 = s.shard_expert_ep(0, 2, 1).unwrap();
+        let full_wg = s.get("layer0.wg").unwrap();
+        // wg index 3 in [ln, router, sel, wg, wu, wd].
+        assert_eq!(d0[3].shape, vec![1, 4, 4]);
+        assert_eq!(d0[3].data[..], full_wg.data[..16]);
+        assert_eq!(d1[3].data[..], full_wg.data[16..]);
+        // sel matrices select disjoint experts.
+        assert_eq!(d0[2].data, vec![1.0, 0.0]);
+        assert_eq!(d1[2].data, vec![0.0, 1.0]);
+    }
+}

@@ -1,0 +1,156 @@
+//! The planner's output: a hybrid parallel execution plan.
+
+use crate::config::scenario::Scenario;
+use crate::sim::latency::ModuleLatency;
+use crate::strategy::{AttnStrategy, ExpertStrategy};
+use crate::transition::TransitionCost;
+use crate::util::json::Json;
+use std::fmt;
+
+/// A complete HAP decision: one attention strategy (both stages), one
+/// expert strategy per stage, and the transition mechanism between them.
+#[derive(Debug, Clone)]
+pub struct HybridPlan {
+    pub model: String,
+    pub node: String,
+    pub scenario: Scenario,
+    /// Attention-module strategy (pinned across stages by the KV cache).
+    pub attn: AttnStrategy,
+    /// Expert-module strategy during prefill.
+    pub expert_prefill: ExpertStrategy,
+    /// Expert-module strategy during decoding.
+    pub expert_decode: ExpertStrategy,
+    /// Transition mechanism and overhead between the two.
+    pub transition: TransitionCost,
+    /// Predicted stage latencies (whole stage, all layers).
+    pub predicted_prefill: ModuleLatency,
+    pub predicted_decode: ModuleLatency,
+    /// ILP objective = predicted end-to-end latency (seconds).
+    pub predicted_total: f64,
+    /// Wall-clock of the full search incl. simulation + ILP (seconds).
+    pub solve_time: f64,
+    /// Search-space sizes (diagnostics).
+    pub k_a: usize,
+    pub k_e: usize,
+}
+
+impl HybridPlan {
+    /// True if the expert strategy changes between stages.
+    pub fn has_transition(&self) -> bool {
+        self.expert_prefill != self.expert_decode
+    }
+
+    /// Short strategy signature, e.g. `attn=DP4 experts=EP4→TP4`.
+    pub fn signature(&self) -> String {
+        if self.has_transition() {
+            format!(
+                "attn={} experts={}→{} via {}",
+                self.attn,
+                self.expert_prefill,
+                self.expert_decode,
+                self.transition.method.name()
+            )
+        } else {
+            format!("attn={} experts={}", self.attn, self.expert_prefill)
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", self.model.as_str().into()),
+            ("node", self.node.as_str().into()),
+            ("scenario", self.scenario.to_json()),
+            ("attn", self.attn.to_json()),
+            ("expert_prefill", self.expert_prefill.to_json()),
+            ("expert_decode", self.expert_decode.to_json()),
+            ("transition", self.transition.method.name().into()),
+            ("transition_overhead_s", self.transition.overhead.into()),
+            ("predicted_total_s", self.predicted_total.into()),
+            ("solve_time_s", self.solve_time.into()),
+        ])
+    }
+}
+
+impl fmt::Display for HybridPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "HAP plan for {} on {} ({}: ctx={} gen={} batch={})",
+            self.model,
+            self.node,
+            self.scenario.name,
+            self.scenario.context,
+            self.scenario.generate,
+            self.scenario.batch
+        )?;
+        writeln!(f, "  attention       : {}", self.attn)?;
+        writeln!(f, "  experts@prefill : {}", self.expert_prefill)?;
+        writeln!(f, "  experts@decode  : {}", self.expert_decode)?;
+        writeln!(
+            f,
+            "  transition      : {} (overhead {:.3} ms)",
+            self.transition.method.name(),
+            self.transition.overhead * 1e3
+        )?;
+        writeln!(
+            f,
+            "  predicted       : prefill {:.1} ms + decode {:.1} ms = {:.1} ms total",
+            self.predicted_prefill.total() * 1e3,
+            self.predicted_decode.total() * 1e3,
+            self.predicted_total * 1e3
+        )?;
+        write!(
+            f,
+            "  search          : K_a={} K_e={} solved in {:.1} ms",
+            self.k_a,
+            self.k_e,
+            self.solve_time * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transition::{TransitionCost, TransitionMethod};
+
+    fn dummy_plan(pre: ExpertStrategy, dec: ExpertStrategy) -> HybridPlan {
+        HybridPlan {
+            model: "mixtral-8x7b".into(),
+            node: "4xA6000".into(),
+            scenario: Scenario::long_constrained(),
+            attn: AttnStrategy::new(1, 4),
+            expert_prefill: pre,
+            expert_decode: dec,
+            transition: TransitionCost {
+                method: TransitionMethod::Int4Backup,
+                overhead: 0.001,
+                raw_pipeline: 0.1,
+                reshard: 0.2,
+            },
+            predicted_prefill: Default::default(),
+            predicted_decode: Default::default(),
+            predicted_total: 1.5,
+            solve_time: 0.02,
+            k_a: 3,
+            k_e: 3,
+        }
+    }
+
+    #[test]
+    fn transition_detection() {
+        let p = dummy_plan(ExpertStrategy::new(1, 4), ExpertStrategy::new(4, 1));
+        assert!(p.has_transition());
+        assert!(p.signature().contains("EP4→TP4"));
+        let q = dummy_plan(ExpertStrategy::new(4, 1), ExpertStrategy::new(4, 1));
+        assert!(!q.has_transition());
+    }
+
+    #[test]
+    fn json_has_key_fields() {
+        let p = dummy_plan(ExpertStrategy::new(1, 4), ExpertStrategy::new(4, 1));
+        let j = p.to_json();
+        assert_eq!(j.get("model").unwrap().as_str(), Some("mixtral-8x7b"));
+        assert!(j.get("predicted_total_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

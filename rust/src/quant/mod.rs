@@ -1,0 +1,278 @@
+//! INT4 weight quantization (paper §III-D, Table I).
+//!
+//! The dynamic parallelism-transition mechanism keeps a 4-bit quantized
+//! backup of expert weights in CPU memory, uploaded and dequantized
+//! instead of resharding over the interconnect. The paper evaluates
+//! per-tensor, per-channel, and per-group schemes and adopts fine-
+//! grained per-group quantization (group size 128) for its near-lossless
+//! quality.
+//!
+//! Values are mapped to signed 4-bit integers in [-8, 7] with an
+//! asymmetric affine transform `q = clamp(round(x / scale) + zero)`;
+//! two nibbles pack per byte.
+
+use crate::util::stats;
+
+/// Quantization granularity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// One (scale, zero) pair for the whole tensor.
+    PerTensor,
+    /// One pair per output channel (row of a `rows × cols` matrix).
+    PerChannel,
+    /// One pair per contiguous group of `group_size` values within a row.
+    PerGroup { group_size: usize },
+}
+
+impl Scheme {
+    pub fn name(&self) -> String {
+        match self {
+            Scheme::PerTensor => "per-tensor".into(),
+            Scheme::PerChannel => "per-channel".into(),
+            Scheme::PerGroup { group_size } => format!("per-group({group_size})"),
+        }
+    }
+}
+
+/// An INT4-quantized tensor: packed nibbles + per-block parameters.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    /// Packed 4-bit codes, two per byte (low nibble first).
+    pub packed: Vec<u8>,
+    /// Per-block scale.
+    pub scales: Vec<f32>,
+    /// Per-block zero point (in quantized units, f32 for affine math).
+    pub zeros: Vec<f32>,
+    /// Elements per block.
+    pub block_len: usize,
+    /// Original element count.
+    pub len: usize,
+    pub scheme: Scheme,
+}
+
+impl QuantizedTensor {
+    /// Bytes of storage (codes + parameters) — the V_dequant payload.
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len() + 8 * self.scales.len()
+    }
+}
+
+/// Quantize a row-major `rows × cols` matrix.
+pub fn quantize(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> QuantizedTensor {
+    assert_eq!(data.len(), rows * cols, "shape mismatch");
+    let block_len = match scheme {
+        Scheme::PerTensor => data.len(),
+        Scheme::PerChannel => cols,
+        Scheme::PerGroup { group_size } => {
+            assert!(group_size > 0 && cols % group_size == 0, "group must divide cols");
+            group_size
+        }
+    };
+    let n_blocks = data.len().div_ceil(block_len);
+    let mut scales = Vec::with_capacity(n_blocks);
+    let mut zeros = Vec::with_capacity(n_blocks);
+    // §Perf: pack nibbles directly (no intermediate code vector);
+    // inner loops use multiply-by-inverse instead of division.
+    let mut packed = vec![0u8; data.len().div_ceil(2)];
+
+    for (b, block) in data.chunks(block_len).enumerate() {
+        // Single-pass min/max (auto-vectorizes).
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in block {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        // Asymmetric affine over [-8, 7].
+        let range = (hi - lo).max(1e-12);
+        let scale = range / 15.0;
+        let inv_scale = 15.0 / range;
+        let zero = (-8.0 - lo * inv_scale).round();
+        scales.push(scale);
+        zeros.push(zero);
+        let base = b * block_len;
+        // Branch-free nibble: shift codes to [0,15], round-half-up via
+        // +0.5 and truncation (stays within the ≤scale/2 error bound),
+        // then map back to the two's-complement nibble with (+8 & 0xF).
+        let quantize1 = |x: f32| -> u8 {
+            let shifted = (x * inv_scale + zero + 8.5).clamp(0.0, 15.0) as u8;
+            (shifted.wrapping_add(8)) & 0x0F
+        };
+        if base % 2 == 0 {
+            let bytes = &mut packed[base / 2..(base + block.len()).div_ceil(2)];
+            let mut pairs = block.chunks_exact(2);
+            for (byte, pair) in bytes.iter_mut().zip(&mut pairs) {
+                *byte = quantize1(pair[0]) | (quantize1(pair[1]) << 4);
+            }
+            if let [last] = pairs.remainder() {
+                bytes[block.len() / 2] = quantize1(*last);
+            }
+        } else {
+            for (j, &x) in block.iter().enumerate() {
+                let i = base + j;
+                let nib = quantize1(x);
+                if i % 2 == 0 {
+                    packed[i / 2] = (packed[i / 2] & 0xF0) | nib;
+                } else {
+                    packed[i / 2] = (packed[i / 2] & 0x0F) | (nib << 4);
+                }
+            }
+        }
+    }
+
+    QuantizedTensor { packed, scales, zeros, block_len, len: data.len(), scheme }
+}
+
+/// Dequantize back to f32.
+///
+/// Hot path of the INT4-backup transition (§Perf): a 16-entry
+/// nibble→f32 lookup table replaces per-element sign-extension, and
+/// per-block `(scale, -zero·scale)` are hoisted so the inner loop is a
+/// fused multiply-add over byte pairs.
+pub fn dequantize(q: &QuantizedTensor) -> Vec<f32> {
+    // code value for each nibble pattern (sign-extended 4-bit).
+    const LUT: [f32; 16] = [
+        0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, -8.0, -7.0, -6.0, -5.0, -4.0, -3.0, -2.0, -1.0,
+    ];
+    let mut out = vec![0.0f32; q.len];
+    let block_len = q.block_len;
+    for (b, chunk) in out.chunks_mut(block_len).enumerate() {
+        let scale = q.scales[b];
+        let bias = -q.zeros[b] * scale;
+        let base = b * block_len; // element index of block start
+        // Blocks are element-aligned but may start mid-byte when
+        // block_len is odd; handle the general case per element pair.
+        if base % 2 == 0 && chunk.len() % 2 == 0 {
+            let bytes = &q.packed[base / 2..(base + chunk.len()) / 2];
+            for (pair, &byte) in chunk.chunks_exact_mut(2).zip(bytes) {
+                pair[0] = LUT[(byte & 0x0F) as usize] * scale + bias;
+                pair[1] = LUT[(byte >> 4) as usize] * scale + bias;
+            }
+        } else {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                let i = base + j;
+                let byte = q.packed[i / 2];
+                let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+                *v = LUT[nib as usize] * scale + bias;
+            }
+        }
+    }
+    out
+}
+
+/// Quality report for one scheme on one tensor (Table I's measurement
+/// primitives).
+#[derive(Debug, Clone)]
+pub struct QuantReport {
+    pub scheme: Scheme,
+    pub cosine_similarity: f64,
+    pub rmse: f64,
+    pub max_abs_err: f64,
+    pub storage_bytes: usize,
+    pub original_bytes: usize,
+}
+
+impl QuantReport {
+    pub fn compression_ratio(&self) -> f64 {
+        self.original_bytes as f64 / self.storage_bytes as f64
+    }
+}
+
+/// Quantize→dequantize round trip quality evaluation.
+pub fn evaluate(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> QuantReport {
+    let q = quantize(data, rows, cols, scheme);
+    let deq = dequantize(&q);
+    QuantReport {
+        scheme,
+        cosine_similarity: stats::cosine_similarity(data, &deq),
+        rmse: stats::rmse_f32(data, &deq),
+        max_abs_err: stats::max_abs_diff(data, &deq),
+        storage_bytes: q.storage_bytes(),
+        original_bytes: data.len() * 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian_matrix(rows: usize, cols: usize, seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec_f32(rows * cols, 0.02)
+    }
+
+    #[test]
+    fn round_trip_error_bounded_by_half_scale() {
+        let data = gaussian_matrix(16, 128, 1);
+        let q = quantize(&data, 16, 128, Scheme::PerGroup { group_size: 64 });
+        let deq = dequantize(&q);
+        for (i, (&x, &y)) in data.iter().zip(&deq).enumerate() {
+            let block = i / q.block_len;
+            let half_scale = q.scales[block] * 0.5 + 1e-7;
+            assert!((x - y).abs() <= half_scale, "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn per_group_beats_per_tensor() {
+        // With outliers, fine granularity wins — Table I's structure.
+        let mut data = gaussian_matrix(32, 256, 2);
+        // Inject row-local outliers that blow up the global scale.
+        for r in 0..32 {
+            data[r * 256] = if r % 2 == 0 { 0.5 } else { -0.5 };
+        }
+        let pt = evaluate(&data, 32, 256, Scheme::PerTensor);
+        let pg = evaluate(&data, 32, 256, Scheme::PerGroup { group_size: 128 });
+        assert!(pg.rmse < pt.rmse * 0.5, "pg {} vs pt {}", pg.rmse, pt.rmse);
+        assert!(pg.cosine_similarity > pt.cosine_similarity);
+    }
+
+    #[test]
+    fn cosine_similarity_above_paper_threshold() {
+        // Paper: quant→dequant keeps >99.5% cosine similarity.
+        let data = gaussian_matrix(64, 512, 3);
+        let rep = evaluate(&data, 64, 512, Scheme::PerGroup { group_size: 64 });
+        assert!(rep.cosine_similarity > 0.995, "cos {}", rep.cosine_similarity);
+    }
+
+    #[test]
+    fn compression_near_8x_minus_overhead() {
+        let data = gaussian_matrix(128, 1024, 4);
+        let rep = evaluate(&data, 128, 1024, Scheme::PerGroup { group_size: 128 });
+        let ratio = rep.compression_ratio();
+        assert!(ratio > 6.0 && ratio <= 8.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn per_channel_block_structure() {
+        let data = gaussian_matrix(8, 32, 5);
+        let q = quantize(&data, 8, 32, Scheme::PerChannel);
+        assert_eq!(q.scales.len(), 8);
+        assert_eq!(q.block_len, 32);
+    }
+
+    #[test]
+    fn odd_length_packs() {
+        let data = vec![0.1f32, -0.2, 0.3];
+        let q = quantize(&data, 1, 3, Scheme::PerTensor);
+        assert_eq!(q.packed.len(), 2);
+        let deq = dequantize(&q);
+        assert_eq!(deq.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "group must divide")]
+    fn bad_group_size_rejected() {
+        let data = vec![0.0f32; 64];
+        quantize(&data, 8, 8, Scheme::PerGroup { group_size: 3 });
+    }
+
+    #[test]
+    fn constant_tensor_survives() {
+        let data = vec![0.25f32; 256];
+        let q = quantize(&data, 16, 16, Scheme::PerTensor);
+        let deq = dequantize(&q);
+        for &v in &deq {
+            assert!((v - 0.25).abs() < 0.05);
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Host tensor ↔ XLA literal helpers.
+
+use crate::Result;
+use anyhow::anyhow;
+use std::path::Path;
+
+/// A simple host-side f32 tensor (row major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> HostTensor {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an XLA literal with this shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    /// Read back from an XLA literal (f32).
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<HostTensor> {
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+        if data.len() != shape.iter().product::<usize>() {
+            anyhow::bail!("literal has {} elements, shape wants {:?}", data.len(), shape);
+        }
+        Ok(HostTensor { shape, data })
+    }
+
+    /// Element-wise in-place add (the TP/EP "all-reduce" combine).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Row-major slice of the last axis? Not needed; helpers below are
+    /// shape-specific where used.
+    pub fn view(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+/// i32 tokens literal of a given shape.
+pub fn tokens_literal(tokens: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), tokens.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(tokens)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape tokens: {e:?}"))
+}
+
+/// Scalar i32 literal (decode position).
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Read a raw little-endian f32 file.
+pub fn read_f32_file(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % 4 != 0 {
+        anyhow::bail!("{}: size {} not a multiple of 4", path.display(), bytes.len());
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for chunk in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]));
+    }
+    Ok(out)
+}
+
+/// Argmax over the last axis of a [rows, cols] tensor (greedy decode).
+pub fn argmax_rows(t: &HostTensor) -> Vec<usize> {
+    assert_eq!(t.shape.len(), 2);
+    let cols = t.shape[1];
+    t.data
+        .chunks_exact(cols)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_add() {
+        let mut a = HostTensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::new(vec![2, 2], vec![10.0, 20.0, 30.0, 40.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data, vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = HostTensor::new(vec![2, 3], vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0]);
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+
+    #[test]
+    fn f32_file_round_trip() {
+        let dir = std::env::temp_dir().join("hap_lit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let vals = [1.5f32, -2.25, 0.0, 3.75];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        assert_eq!(read_f32_file(&path).unwrap(), vals);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = HostTensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, vec![2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,220 @@
+//! `artifacts/manifest.json` parsing (written by python/compile/aot.py).
+
+use crate::util::json::Json;
+use crate::Result;
+use anyhow::anyhow;
+use std::path::Path;
+
+/// Tensor shape + dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Option<TensorSpec> {
+        let shape = j
+            .get("shape")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_usize())
+            .collect::<Option<Vec<_>>>()?;
+        let dtype = j.get("dtype")?.as_str()?.to_string();
+        Some(TensorSpec { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// "attention" | "expert" | "embed" | "head".
+    pub module: String,
+    /// "prefill" | "decode" | "both".
+    pub stage: String,
+    pub tp: usize,
+    pub ep: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One tensor in weights.bin.
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_floats: usize,
+}
+
+impl WeightEntry {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The tiny demo model's hyperparameters (mirrors model.py::TINY).
+#[derive(Debug, Clone)]
+pub struct TinyModelMeta {
+    pub batch: usize,
+    pub prefill_len: usize,
+    pub max_len: usize,
+    pub hidden: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub num_experts: usize,
+    pub top_k: usize,
+    pub inter: usize,
+    pub vocab: usize,
+    pub layers: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: TinyModelMeta,
+    pub weights_file: String,
+    pub weights: Vec<WeightEntry>,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let m = j.req("model").map_err(|e| anyhow!("{e}"))?;
+        let geti = |k: &str| -> Result<usize> {
+            m.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest model.{k} missing"))
+        };
+        let model = TinyModelMeta {
+            batch: geti("batch")?,
+            prefill_len: geti("prefill_len")?,
+            max_len: geti("max_len")?,
+            hidden: geti("hidden")?,
+            q_heads: geti("q_heads")?,
+            kv_heads: geti("kv_heads")?,
+            head_dim: geti("head_dim")?,
+            num_experts: geti("num_experts")?,
+            top_k: geti("top_k")?,
+            inter: geti("inter")?,
+            vocab: geti("vocab")?,
+            layers: geti("layers")?,
+        };
+        let weights_file = j
+            .get("weights_file")
+            .and_then(|v| v.as_str())
+            .unwrap_or("weights.bin")
+            .to_string();
+        let weights = j
+            .get("weights")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|w| {
+                Some(WeightEntry {
+                    name: w.get("name")?.as_str()?.to_string(),
+                    shape: w
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Option<Vec<_>>>()?,
+                    offset_floats: w.get("offset_floats")?.as_usize()?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("bad weights table"))?;
+        let entries = j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|e| {
+                let meta = e.get("meta")?;
+                Some(ArtifactEntry {
+                    name: e.get("name")?.as_str()?.to_string(),
+                    file: e.get("file")?.as_str()?.to_string(),
+                    module: meta.get("module")?.as_str()?.to_string(),
+                    stage: meta.get("stage")?.as_str()?.to_string(),
+                    tp: meta.get("tp").and_then(|v| v.as_usize()).unwrap_or(1),
+                    ep: meta.get("ep").and_then(|v| v.as_usize()).unwrap_or(1),
+                    inputs: e
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Option<Vec<_>>>()?,
+                    outputs: e
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(TensorSpec::from_json)
+                        .collect::<Option<Vec<_>>>()?,
+                })
+            })
+            .collect::<Option<Vec<_>>>()
+            .ok_or_else(|| anyhow!("bad entries table"))?;
+        Ok(Manifest { model, weights_file, weights, entries })
+    }
+
+    pub fn weight(&self, name: &str) -> Option<&WeightEntry> {
+        self.weights.iter().find(|w| w.name == name)
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": {"name": "tiny-moe", "batch": 4, "prefill_len": 64,
+                "max_len": 192, "hidden": 256, "q_heads": 8, "kv_heads": 4,
+                "head_dim": 32, "num_experts": 8, "top_k": 2, "inter": 512,
+                "vocab": 512, "layers": 4, "seed": 0},
+      "weights_file": "weights.bin",
+      "weights": [
+        {"name": "embed", "shape": [512, 256], "offset_floats": 0},
+        {"name": "layer0.ln1", "shape": [256], "offset_floats": 131072}
+      ],
+      "entries": [
+        {"name": "head", "file": "head.hlo.txt",
+         "meta": {"module": "head", "stage": "both"},
+         "inputs": [{"shape": [4, 256], "dtype": "float32"}],
+         "outputs": [{"shape": [4, 512], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model.hidden, 256);
+        assert_eq!(m.weights.len(), 2);
+        assert_eq!(m.weight("embed").unwrap().elements(), 512 * 256);
+        let e = m.entry("head").unwrap();
+        assert_eq!(e.module, "head");
+        assert_eq!(e.inputs[0].shape, vec![4, 256]);
+        assert_eq!(e.tp, 1);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"model": {}}"#).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! The artifact set and their shapes come from `artifacts/manifest.json`
+//! written by `python/compile/aot.py`; Python never runs here.
+//!
+//! Weights live as device buffers (`PjRtBuffer`) via
+//! `buffer_from_host_literal`, uploaded once at load; per-step
+//! activations go through `execute_b` so the hot loop never re-uploads
+//! parameters.
+
+pub mod literal;
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest, TinyModelMeta, WeightEntry};
+
+use crate::Result;
+use anyhow::{anyhow, Context};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded, compiled artifact set backed by one PJRT CPU client.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Load `artifacts/` (manifest + HLO files), compiling every entry.
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut executables = HashMap::new();
+        for entry in &manifest.entries {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+            executables.insert(entry.name.clone(), exe);
+        }
+        Ok(PjrtRuntime { client, manifest, dir: dir.to_path_buf(), executables })
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute by name with literal inputs; returns the flattened tuple
+    /// outputs as literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Execute with device-resident buffers (hot path: weights stay on
+    /// device). Returns output literals.
+    pub fn execute_buffers(
+        &self,
+        name: &str,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    /// Upload a literal to the device once (for weights).
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("uploading buffer: {e:?}"))
+    }
+
+    /// Read the raw weights file as f32s.
+    pub fn read_weights(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.manifest.weights_file);
+        literal::read_f32_file(&path)
+    }
+}

@@ -1,0 +1,122 @@
+//! Continuous batcher: packs queued requests into the fixed artifact
+//! batch, padding prompts to the artifact prompt length and retiring
+//! finished sequences each decode step.
+//!
+//! The AOT artifacts fix (B, S): prompts shorter than S are left-padded
+//! with token 0 (position masking comes free from causal attention +
+//! greedy decode reading only the last position), and batches smaller
+//! than B are padded with inert dummy sequences.
+
+use super::Request;
+
+/// One packed batch ready for prefill.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// The real requests occupying the first `live` slots.
+    pub requests: Vec<Request>,
+    /// Flattened [B, S] prompt tokens (padded).
+    pub tokens: Vec<i32>,
+    /// Per-slot remaining generation budget (0 for padding slots).
+    pub remaining: Vec<usize>,
+    pub batch: usize,
+    pub prompt_len: usize,
+}
+
+impl Batch {
+    /// Live (non-padding) slots.
+    pub fn live(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// True when every live sequence has exhausted its budget.
+    pub fn done(&self) -> bool {
+        self.remaining.iter().all(|&r| r == 0)
+    }
+
+    /// Max decode steps this batch still needs.
+    pub fn max_remaining(&self) -> usize {
+        self.remaining.iter().cloned().max().unwrap_or(0)
+    }
+}
+
+/// Packs requests into artifact-shaped batches.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub batch: usize,
+    pub prompt_len: usize,
+    /// Decode-step budget cap per batch (bounded by the KV cache).
+    pub max_new_tokens: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, prompt_len: usize, max_new_tokens: usize) -> Batcher {
+        Batcher { batch, prompt_len, max_new_tokens }
+    }
+
+    /// Pack up to `batch` requests (fewer → padding slots).
+    pub fn pack(&self, requests: Vec<Request>) -> Batch {
+        assert!(!requests.is_empty(), "cannot pack an empty batch");
+        assert!(requests.len() <= self.batch);
+        let mut tokens = vec![0i32; self.batch * self.prompt_len];
+        let mut remaining = vec![0usize; self.batch];
+        for (slot, req) in requests.iter().enumerate() {
+            let p = &req.prompt;
+            // Left-pad: place the prompt tail-aligned so the last
+            // position is the newest prompt token.
+            let n = p.len().min(self.prompt_len);
+            let dst = slot * self.prompt_len + (self.prompt_len - n);
+            tokens[dst..dst + n].copy_from_slice(&p[p.len() - n..]);
+            remaining[slot] = req.max_new_tokens.min(self.max_new_tokens);
+        }
+        Batch {
+            requests,
+            tokens,
+            remaining,
+            batch: self.batch,
+            prompt_len: self.prompt_len,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
+        Request::new(id, (0..prompt_len as i32).map(|i| i + 1).collect(), gen)
+    }
+
+    #[test]
+    fn pads_prompts_left() {
+        let b = Batcher::new(2, 8, 16);
+        let batch = b.pack(vec![req(0, 3, 4)]);
+        // Slot 0: 5 zeros then 1,2,3.
+        assert_eq!(&batch.tokens[..8], &[0, 0, 0, 0, 0, 1, 2, 3]);
+        // Slot 1 is padding.
+        assert_eq!(&batch.tokens[8..], &[0; 8]);
+        assert_eq!(batch.remaining, vec![4, 0]);
+        assert_eq!(batch.live(), 1);
+    }
+
+    #[test]
+    fn truncates_long_prompts_keeping_tail() {
+        let b = Batcher::new(1, 4, 16);
+        let batch = b.pack(vec![req(0, 10, 1)]);
+        assert_eq!(&batch.tokens[..], &[7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn caps_generation_budget() {
+        let b = Batcher::new(1, 4, 8);
+        let batch = b.pack(vec![req(0, 2, 100)]);
+        assert_eq!(batch.remaining[0], 8);
+        assert_eq!(batch.max_remaining(), 8);
+        assert!(!batch.done());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty batch")]
+    fn empty_batch_rejected() {
+        Batcher::new(2, 4, 8).pack(vec![]);
+    }
+}

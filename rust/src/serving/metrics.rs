@@ -1,0 +1,88 @@
+//! Serving metrics: counters + latency histograms with percentile
+//! queries (p50/p95/p99), and a throughput window.
+
+use crate::util::stats;
+
+/// Accumulating metrics for a serving run.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    pub requests_completed: usize,
+    pub tokens_generated: usize,
+    pub batches_prefilled: usize,
+    pub decode_steps: usize,
+    pub transitions: usize,
+    latencies: Vec<f64>,
+    ttfts: Vec<f64>,
+    /// Wall-clock duration of the run (set by the server at the end).
+    pub wall_time: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn observe_request(&mut self, latency: f64, ttft: f64, tokens: usize) {
+        self.requests_completed += 1;
+        self.tokens_generated += tokens;
+        self.latencies.push(latency);
+        self.ttfts.push(ttft);
+    }
+
+    pub fn latency_p(&self, q: f64) -> f64 {
+        stats::percentile(&self.latencies, q)
+    }
+
+    pub fn ttft_p(&self, q: f64) -> f64 {
+        stats::percentile(&self.ttfts, q)
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        stats::mean(&self.latencies)
+    }
+
+    /// Generated tokens per second over the run.
+    pub fn throughput(&self) -> f64 {
+        if self.wall_time <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.wall_time
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | {:.1} tok/s | {} prefills, {} decode steps, {} transitions",
+            self.requests_completed,
+            self.tokens_generated,
+            self.latency_p(50.0) * 1e3,
+            self.latency_p(95.0) * 1e3,
+            self.latency_p(99.0) * 1e3,
+            self.ttft_p(50.0) * 1e3,
+            self.throughput(),
+            self.batches_prefilled,
+            self.decode_steps,
+            self.transitions,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_and_throughput() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.observe_request(i as f64 / 1000.0, i as f64 / 2000.0, 10);
+        }
+        m.wall_time = 2.0;
+        assert_eq!(m.requests_completed, 100);
+        assert_eq!(m.tokens_generated, 1000);
+        assert!((m.latency_p(50.0) - 0.0505).abs() < 1e-3);
+        assert!(m.latency_p(99.0) > 0.098);
+        assert_eq!(m.throughput(), 500.0);
+        assert!(m.summary().contains("100 requests"));
+    }
+}

@@ -1,0 +1,50 @@
+//! The serving runtime: router → continuous batcher → engine, with
+//! Python never on the request path (the DeepSpeed-FastGen role in the
+//! paper's evaluation).
+//!
+//! Thread-based (`std::thread` + `mpsc`): clients submit
+//! [`Request`]s through a [`ServerHandle`]; the server thread admits
+//! them through the router, forms fixed-size batches (the AOT artifact
+//! batch), runs prefill once per batch and decode steps until every
+//! sequence finishes, and answers with per-request metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::Metrics;
+pub use router::{Router, RouterPolicy};
+pub use server::{serve_workload, ServeConfig, ServeReport};
+
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt token ids (truncated/padded to the artifact prompt len).
+    pub prompt: Vec<i32>,
+    /// Tokens to generate.
+    pub max_new_tokens: usize,
+    /// Submission time.
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Request {
+        Request { id, prompt, max_new_tokens, arrived: Instant::now() }
+    }
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// Time from arrival to completion.
+    pub latency: f64,
+    /// Time from arrival to first generated token.
+    pub ttft: f64,
+}

@@ -1,0 +1,109 @@
+//! Request router: admission, queueing, and batch-slot assignment.
+//!
+//! Modeled on the vLLM router's role: requests land in a bounded FIFO
+//! (backpressure by rejection when full), and the batcher drains them
+//! in arrival order or shortest-job-first.
+
+use super::Request;
+use std::collections::VecDeque;
+
+/// Queue discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    /// First come, first served.
+    Fcfs,
+    /// Shortest (requested generation) job first — reduces p50 at some
+    /// tail cost.
+    Sjf,
+}
+
+/// Bounded admission queue.
+#[derive(Debug)]
+pub struct Router {
+    queue: VecDeque<Request>,
+    pub capacity: usize,
+    pub policy: RouterPolicy,
+    pub rejected: usize,
+    pub admitted: usize,
+}
+
+impl Router {
+    pub fn new(capacity: usize, policy: RouterPolicy) -> Router {
+        Router { queue: VecDeque::new(), capacity, policy, rejected: 0, admitted: 0 }
+    }
+
+    /// Admit a request; `false` = backpressure (queue full).
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.capacity {
+            self.rejected += 1;
+            return false;
+        }
+        self.admitted += 1;
+        match self.policy {
+            RouterPolicy::Fcfs => self.queue.push_back(req),
+            RouterPolicy::Sjf => {
+                let pos = self
+                    .queue
+                    .iter()
+                    .position(|r| r.max_new_tokens > req.max_new_tokens)
+                    .unwrap_or(self.queue.len());
+                self.queue.insert(pos, req);
+            }
+        }
+        true
+    }
+
+    /// Take up to `n` requests for the next batch.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        let k = n.min(self.queue.len());
+        self.queue.drain(..k).collect()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, gen: usize) -> Request {
+        Request::new(id, vec![1, 2, 3], gen)
+    }
+
+    #[test]
+    fn fcfs_preserves_order() {
+        let mut r = Router::new(10, RouterPolicy::Fcfs);
+        for i in 0..5 {
+            assert!(r.submit(req(i, 10)));
+        }
+        let batch = r.take(3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(r.pending(), 2);
+    }
+
+    #[test]
+    fn sjf_orders_by_generation_length() {
+        let mut r = Router::new(10, RouterPolicy::Sjf);
+        r.submit(req(0, 100));
+        r.submit(req(1, 10));
+        r.submit(req(2, 50));
+        let batch = r.take(3);
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn backpressure_on_full_queue() {
+        let mut r = Router::new(2, RouterPolicy::Fcfs);
+        assert!(r.submit(req(0, 1)));
+        assert!(r.submit(req(1, 1)));
+        assert!(!r.submit(req(2, 1)));
+        assert_eq!(r.rejected, 1);
+        assert_eq!(r.admitted, 2);
+    }
+}

@@ -1,0 +1,229 @@
+//! The serving loop: drains the router, packs batches, executes
+//! prefill + decode on the real PJRT model under a hybrid plan, and
+//! reports per-request + aggregate metrics.
+//!
+//! `serve_workload` is the synchronous core used by the examples,
+//! benches, and the `hap serve` CLI; `spawn_server` wraps it in a
+//! worker thread with mpsc channels for concurrent submitters.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::router::{Router, RouterPolicy};
+use super::{Request, Response};
+use crate::model::{ModelExecutor, StageStrategy};
+use crate::runtime::literal::argmax_rows;
+use crate::runtime::PjrtRuntime;
+use crate::strategy::ExpertStrategy;
+use crate::Result;
+use std::time::Instant;
+
+/// Serving configuration: the hybrid plan to execute.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub attn_tp: usize,
+    pub expert_prefill: ExpertStrategy,
+    pub expert_decode: ExpertStrategy,
+    pub policy: RouterPolicy,
+    pub queue_capacity: usize,
+}
+
+impl ServeConfig {
+    /// Static TP-n baseline.
+    pub fn tp(n: usize) -> ServeConfig {
+        ServeConfig {
+            attn_tp: n,
+            expert_prefill: ExpertStrategy::new(n, 1),
+            expert_decode: ExpertStrategy::new(n, 1),
+            policy: RouterPolicy::Fcfs,
+            queue_capacity: 1024,
+        }
+    }
+
+    /// HAP-style phase-specific plan: EP prefill → TP decode.
+    pub fn hap_transition(n: usize) -> ServeConfig {
+        ServeConfig {
+            attn_tp: n,
+            expert_prefill: ExpertStrategy::new(1, n),
+            expert_decode: ExpertStrategy::new(n, 1),
+            policy: RouterPolicy::Fcfs,
+            queue_capacity: 1024,
+        }
+    }
+
+    pub fn has_transition(&self) -> bool {
+        self.expert_prefill != self.expert_decode
+    }
+
+    pub fn label(&self) -> String {
+        if self.has_transition() {
+            format!(
+                "attn=TP{} experts={}→{}",
+                self.attn_tp,
+                self.expert_prefill.label(),
+                self.expert_decode.label()
+            )
+        } else {
+            format!("attn=TP{} experts={}", self.attn_tp, self.expert_prefill.label())
+        }
+    }
+}
+
+/// Aggregate results of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub metrics: Metrics,
+    pub responses: Vec<Response>,
+    /// Measured compute split (seconds).
+    pub prefill_time: f64,
+    pub decode_time: f64,
+}
+
+/// Serve a whole workload to completion (synchronous; the unit the
+/// worker thread loops over).
+pub fn serve_workload(
+    rt: &PjrtRuntime,
+    config: &ServeConfig,
+    workload: Vec<Request>,
+) -> Result<ServeReport> {
+    let m = &rt.manifest.model;
+    let batcher = Batcher::new(m.batch, m.prefill_len, m.max_len - m.prefill_len);
+    let mut router = Router::new(config.queue_capacity, config.policy);
+    for req in workload {
+        if !router.submit(req) {
+            anyhow::bail!("router rejected request (queue capacity {})", config.queue_capacity);
+        }
+    }
+
+    let prefill_strategy =
+        StageStrategy { attn_tp: config.attn_tp, expert: config.expert_prefill };
+    let decode_strategy = StageStrategy { attn_tp: config.attn_tp, expert: config.expert_decode };
+
+    let mut metrics = Metrics::new();
+    let mut responses = Vec::new();
+    let mut prefill_time = 0.0;
+    let mut decode_time = 0.0;
+    let run_start = Instant::now();
+
+    while !router.is_empty() {
+        let batch = batcher.pack(router.take(m.batch));
+        let mut exec = ModelExecutor::new(rt)?;
+
+        // ---- Prefill.
+        let t0 = Instant::now();
+        let logits = exec.prefill(&batch.tokens, &prefill_strategy)?;
+        prefill_time += t0.elapsed().as_secs_f64();
+        metrics.batches_prefilled += 1;
+        if config.has_transition() {
+            metrics.transitions += 1;
+        }
+
+        let first = argmax_rows(&logits);
+        let first_time = Instant::now();
+        let mut generated: Vec<Vec<i32>> = (0..batch.live())
+            .map(|slot| vec![first[slot] as i32])
+            .collect();
+        let mut last: Vec<i32> = first.iter().map(|&t| t as i32).collect();
+        let mut remaining = batch.remaining.clone();
+        for r in remaining.iter_mut().take(batch.live()) {
+            *r = r.saturating_sub(1);
+        }
+
+        // ---- Decode until every live slot finishes.
+        let t0 = Instant::now();
+        while remaining.iter().take(batch.live()).any(|&r| r > 0) {
+            let logits = exec.decode_step(&last, &decode_strategy)?;
+            metrics.decode_steps += 1;
+            let next = argmax_rows(&logits);
+            for slot in 0..batch.live() {
+                if remaining[slot] > 0 {
+                    generated[slot].push(next[slot] as i32);
+                    remaining[slot] -= 1;
+                }
+            }
+            last = next.iter().map(|&t| t as i32).collect();
+        }
+        decode_time += t0.elapsed().as_secs_f64();
+
+        // ---- Retire.
+        let now = Instant::now();
+        for (slot, req) in batch.requests.iter().enumerate() {
+            let latency = now.duration_since(req.arrived).as_secs_f64();
+            let ttft = first_time.duration_since(req.arrived).as_secs_f64();
+            metrics.observe_request(latency, ttft, generated[slot].len());
+            responses.push(Response {
+                id: req.id,
+                tokens: generated[slot].clone(),
+                latency,
+                ttft,
+            });
+        }
+    }
+
+    metrics.wall_time = run_start.elapsed().as_secs_f64();
+    Ok(ServeReport { metrics, responses, prefill_time, decode_time })
+}
+
+/// Spawn the server on a worker thread; returns a submission handle.
+pub struct ServerHandle {
+    tx: std::sync::mpsc::Sender<Request>,
+    done_rx: std::sync::mpsc::Receiver<ServeReport>,
+}
+
+impl ServerHandle {
+    pub fn submit(&self, req: Request) -> Result<()> {
+        self.tx
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("server thread terminated"))
+    }
+
+    /// Close the submission channel and wait for the final report.
+    pub fn finish(self) -> Result<ServeReport> {
+        drop(self.tx);
+        self.done_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server thread panicked"))
+    }
+}
+
+/// Run the server on its own thread, collecting requests until the
+/// handle is finished, then serving everything and reporting.
+///
+/// The PJRT runtime is not `Send` (FFI handles), so the thread owns its
+/// own runtime loaded from `artifacts_dir`.
+pub fn spawn_server(
+    artifacts_dir: std::path::PathBuf,
+    config: ServeConfig,
+) -> Result<ServerHandle> {
+    let (tx, rx) = std::sync::mpsc::channel::<Request>();
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<ServeReport>();
+    std::thread::spawn(move || {
+        let rt = match PjrtRuntime::load(&artifacts_dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("server: failed to load artifacts: {e:#}");
+                return;
+            }
+        };
+        let workload: Vec<Request> = rx.iter().collect();
+        match serve_workload(&rt, &config, workload) {
+            Ok(report) => {
+                let _ = done_tx.send(report);
+            }
+            Err(e) => eprintln!("server: serving failed: {e:#}"),
+        }
+    });
+    Ok(ServerHandle { tx, done_rx })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn configs_label_correctly() {
+        assert_eq!(ServeConfig::tp(4).label(), "attn=TP4 experts=TP4");
+        let h = ServeConfig::hap_transition(4);
+        assert!(h.has_transition());
+        assert_eq!(h.label(), "attn=TP4 experts=EP4→TP4");
+    }
+}

@@ -1,0 +1,319 @@
+//! Collective-communication volume models (paper §III-B).
+//!
+//! Parallel strategies impose distinct communication patterns —
+//! AllReduce for TP, All-to-All for EP (paper challenge #2). This module
+//! derives, per layer and stage, the exact sequence of collectives a
+//! given (Attention, Expert) strategy pair requires and their
+//! per-device wire volumes `V_data`, which the latency model turns into
+//! `T_comm = (V / Bandwidth) × ρ`.
+//!
+//! Layout conventions (single node, N devices):
+//! - Attention TP groups of size `A_t`; DP groups of size `A_d`
+//!   (`A_t × A_d = N`). After attention TP AllReduce, activations are
+//!   replicated within each TP group; each DP group owns `B/A_d`
+//!   sequences.
+//! - Expert module spans all N devices as `E_e` expert groups × `E_t`
+//!   tensor shards. Tokens are owner-partitioned evenly across devices
+//!   for EP dispatch.
+//!
+//! Event sequence per layer:
+//! 1. `A_t > 1`: AllReduce(group A_t) of local activations (post O-proj);
+//! 2. expert **TP-only** (`E_e = 1`): if `A_d > 1`, AllGather(group A_d)
+//!    so every device sees all tokens; then AllReduce(group E_t) of all
+//!    tokens (post down-proj). Results end fully replicated — no
+//!    return traffic.
+//! 3. expert **EP** (`E_e > 1`): All-to-All dispatch of routed tokens
+//!    (top-k copies), optional AllReduce(group E_t) for EP×TP hybrids,
+//!    All-to-All combine back to owners, and — when `A_t > 1` — an
+//!    AllGather(group A_t) to re-replicate within attention TP groups.
+
+use crate::config::model::MoEModelConfig;
+use crate::sim::flops::Stage;
+use crate::strategy::{AttnStrategy, ExpertStrategy};
+
+/// Collective kind (communication pattern).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Collective {
+    AllReduce,
+    AllGather,
+    AllToAll,
+}
+
+impl Collective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Collective::AllReduce => "all_reduce",
+            Collective::AllGather => "all_gather",
+            Collective::AllToAll => "all_to_all",
+        }
+    }
+}
+
+/// One collective operation in a layer's schedule.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommEvent {
+    pub collective: Collective,
+    /// Participants.
+    pub group: usize,
+    /// Bytes crossing this device's link (send side), ring-style.
+    pub wire_bytes: f64,
+    /// Number of sequential message rounds (latency term multiplier).
+    pub rounds: usize,
+    /// Human-readable role, e.g. "attn-tp-allreduce".
+    pub label: &'static str,
+}
+
+impl CommEvent {
+    fn all_reduce(group: usize, payload: f64, label: &'static str) -> Self {
+        // Ring AllReduce: 2(g-1)/g × payload per device, 2(g-1) rounds.
+        CommEvent {
+            collective: Collective::AllReduce,
+            group,
+            wire_bytes: 2.0 * (group as f64 - 1.0) / group as f64 * payload,
+            rounds: 2 * (group - 1),
+            label,
+        }
+    }
+
+    fn all_gather(group: usize, shard_payload: f64, label: &'static str) -> Self {
+        // Ring AllGather: (g-1) × shard per device, g-1 rounds.
+        CommEvent {
+            collective: Collective::AllGather,
+            group,
+            wire_bytes: (group as f64 - 1.0) * shard_payload,
+            rounds: group - 1,
+            label,
+        }
+    }
+
+    fn all_to_all(group: usize, send_payload: f64, label: &'static str) -> Self {
+        // Pairwise exchange: (g-1)/g of the payload leaves the device.
+        CommEvent {
+            collective: Collective::AllToAll,
+            group,
+            wire_bytes: (group as f64 - 1.0) / group as f64 * send_payload,
+            rounds: group - 1,
+            label,
+        }
+    }
+}
+
+/// Per-layer collective schedule for an (attention, expert) strategy
+/// pair at a given stage. `batch` is global; `seq` is prompt length
+/// (prefill) or 1 decode step's token count source (decode processes
+/// `batch` single tokens).
+pub fn layer_comm_events(
+    m: &MoEModelConfig,
+    attn: &AttnStrategy,
+    expert: &ExpertStrategy,
+    stage: Stage,
+    batch: usize,
+    seq: usize,
+) -> Vec<CommEvent> {
+    let dt = m.dtype_bytes as f64;
+    let h = m.hidden as f64;
+    let tokens_global = match stage {
+        Stage::Prefill => (batch * seq) as f64,
+        Stage::Decode => batch as f64,
+    };
+    let tokens_per_dp_group = tokens_global / attn.dp as f64;
+    let mut events = Vec::new();
+
+    // 1. Attention TP AllReduce of the local activation slice.
+    if attn.tp > 1 {
+        events.push(CommEvent::all_reduce(
+            attn.tp,
+            tokens_per_dp_group * h * dt,
+            "attn-tp-allreduce",
+        ));
+    }
+
+    if expert.ep == 1 {
+        // 2. Expert TP-only path.
+        if attn.dp > 1 {
+            // Every device must see all tokens before the sharded FFN.
+            events.push(CommEvent::all_gather(
+                attn.dp,
+                tokens_per_dp_group * h * dt,
+                "dp-to-expert-allgather",
+            ));
+        }
+        if expert.tp > 1 {
+            events.push(CommEvent::all_reduce(
+                expert.tp,
+                tokens_global * h * dt,
+                "expert-tp-allreduce",
+            ));
+        }
+    } else {
+        // 3. Expert EP path: owner-partitioned dispatch/combine.
+        let n = expert.devices();
+        let tokens_per_device = tokens_global / n as f64;
+        // Each owned token is sent to top_k experts; all copies counted,
+        // the (g-1)/g survival factor is applied inside all_to_all().
+        let dispatch_payload = tokens_per_device * m.top_k as f64 * h * dt;
+        events.push(CommEvent::all_to_all(expert.ep, dispatch_payload, "ep-dispatch-a2a"));
+        if expert.tp > 1 {
+            // EP×TP hybrid: reduce partial FFN outputs within each
+            // expert's tensor shard group.
+            let routed_here = tokens_global * m.top_k as f64 / expert.ep as f64;
+            events.push(CommEvent::all_reduce(
+                expert.tp,
+                routed_here * h * dt,
+                "expert-tp-allreduce",
+            ));
+        }
+        events.push(CommEvent::all_to_all(expert.ep, dispatch_payload, "ep-combine-a2a"));
+        if attn.tp > 1 {
+            // Re-replicate combined outputs within attention TP groups.
+            events.push(CommEvent::all_gather(
+                attn.tp,
+                tokens_per_dp_group / attn.tp as f64 * h * dt,
+                "expert-to-attn-allgather",
+            ));
+        }
+    }
+
+    events
+}
+
+/// Total per-device wire bytes of a layer's schedule.
+pub fn layer_comm_bytes(events: &[CommEvent]) -> f64 {
+    events.iter().map(|e| e.wire_bytes).sum()
+}
+
+/// Total latency rounds of a layer's schedule.
+pub fn layer_comm_rounds(events: &[CommEvent]) -> usize {
+    events.iter().map(|e| e.rounds).sum()
+}
+
+/// Wire volume of resharding expert weights from `from` to `to`
+/// strategies via collectives (the T_reshard input of eq. 6): every
+/// device must end holding its new shard; with disjoint layouts this is
+/// an AllGather-style redistribution of the per-device shard delta.
+pub fn reshard_wire_bytes(m: &MoEModelConfig, from: &ExpertStrategy, to: &ExpertStrategy) -> f64 {
+    if from == to {
+        return 0.0;
+    }
+    let n = from.devices() as f64;
+    let total_expert_bytes =
+        (m.layers * m.expert_params_per_layer()) as f64 * m.dtype_bytes as f64;
+    let per_device_new = total_expert_bytes / n;
+    // Fraction of the new shard already resident locally: layouts
+    // overlap by min(share) when both strategies slice the same tensor
+    // dimension family; disjoint axes (EP vs TP) overlap by 1/n.
+    let overlap = if from.ep == to.ep || from.tp == to.tp {
+        1.0 / n * (from.tp.max(to.tp) as f64 / from.tp.min(to.tp).max(1) as f64).min(n)
+    } else {
+        1.0 / n
+    };
+    per_device_new * (1.0 - overlap.min(1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::MoEModelConfig;
+
+    fn m() -> MoEModelConfig {
+        MoEModelConfig::mixtral_8x7b()
+    }
+
+    fn total_bytes(attn: (usize, usize), exp: (usize, usize), stage: Stage) -> f64 {
+        let events = layer_comm_events(
+            &m(),
+            &AttnStrategy::new(attn.0, attn.1),
+            &ExpertStrategy::new(exp.0, exp.1),
+            stage,
+            16,
+            2048,
+        );
+        layer_comm_bytes(&events)
+    }
+
+    #[test]
+    fn prefill_tp_costs_more_than_ep() {
+        // Paper Fig 2: during prefill TP incurs higher comm volume than
+        // EP (with DP attention, EP dispatch moves only top-k copies of
+        // owned tokens).
+        let tp_tp = total_bytes((4, 1), (4, 1), Stage::Prefill);
+        let dp_ep = total_bytes((1, 4), (1, 4), Stage::Prefill);
+        assert!(
+            tp_tp > 2.0 * dp_ep,
+            "TP {tp_tp:.3e} should be ≫ DP+EP {dp_ep:.3e}"
+        );
+    }
+
+    #[test]
+    fn dp_attention_eliminates_attention_comm() {
+        let events = layer_comm_events(
+            &m(),
+            &AttnStrategy::new(1, 4),
+            &ExpertStrategy::new(1, 4),
+            Stage::Prefill,
+            16,
+            2048,
+        );
+        assert!(events.iter().all(|e| e.label != "attn-tp-allreduce"));
+    }
+
+    #[test]
+    fn decode_volumes_are_small() {
+        // Decode moves only batch×hidden activations — orders of
+        // magnitude below prefill.
+        let pre = total_bytes((4, 1), (4, 1), Stage::Prefill);
+        let dec = total_bytes((4, 1), (4, 1), Stage::Decode);
+        assert!(pre / dec > 1000.0);
+    }
+
+    #[test]
+    fn ep_tp_hybrid_has_all_three_patterns() {
+        let events = layer_comm_events(
+            &m(),
+            &AttnStrategy::new(4, 1),
+            &ExpertStrategy::new(2, 2),
+            Stage::Prefill,
+            16,
+            1024,
+        );
+        let kinds: Vec<Collective> = events.iter().map(|e| e.collective).collect();
+        assert!(kinds.contains(&Collective::AllReduce));
+        assert!(kinds.contains(&Collective::AllToAll));
+        assert!(kinds.contains(&Collective::AllGather));
+    }
+
+    #[test]
+    fn allreduce_wire_formula() {
+        let e = CommEvent::all_reduce(4, 1000.0, "t");
+        assert!((e.wire_bytes - 1500.0).abs() < 1e-9);
+        assert_eq!(e.rounds, 6);
+    }
+
+    #[test]
+    fn reshard_zero_for_same_strategy() {
+        let s = ExpertStrategy::new(4, 1);
+        assert_eq!(reshard_wire_bytes(&m(), &s, &s), 0.0);
+    }
+
+    #[test]
+    fn reshard_moves_most_of_the_shard() {
+        // EP4 → TP4 reshard must move nearly the whole per-device shard.
+        let bytes = reshard_wire_bytes(&m(), &ExpertStrategy::new(1, 4), &ExpertStrategy::new(4, 1));
+        let per_dev = (m().layers * m().expert_params_per_layer() * 2) as f64 / 4.0;
+        assert!(bytes > 0.7 * per_dev, "{bytes} vs {per_dev}");
+    }
+
+    #[test]
+    fn comm_identity_strategy_is_free() {
+        // Single device: no collectives at all.
+        let events = layer_comm_events(
+            &m(),
+            &AttnStrategy::new(1, 1),
+            &ExpertStrategy::new(1, 1),
+            Stage::Prefill,
+            4,
+            128,
+        );
+        assert!(events.is_empty());
+    }
+}

@@ -1,0 +1,231 @@
+//! Analytic FLOP and byte counts for the Attention and Expert modules.
+//!
+//! These are the `F_module` inputs of the paper's computational
+//! simulation model. Counts are *per layer* and *per device* given a
+//! parallel strategy; byte counts feed the roofline term that dominates
+//! the memory-bound decode stage.
+
+use crate::config::model::MoEModelConfig;
+use crate::strategy::{AttnStrategy, ExpertStrategy};
+
+/// Inference stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Prompt processing: `seq` tokens per sequence, compute-bound.
+    Prefill,
+    /// Single-token generation against a KV cache of length `seq`,
+    /// memory-bound.
+    Decode,
+}
+
+/// FLOPs + memory traffic of one module invocation on one device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpCost {
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Bytes read+written from/to HBM (weights + activations + KV).
+    pub bytes: f64,
+}
+
+impl OpCost {
+    pub const ZERO: OpCost = OpCost { flops: 0.0, bytes: 0.0 };
+
+    pub fn add(self, other: OpCost) -> OpCost {
+        OpCost { flops: self.flops + other.flops, bytes: self.bytes + other.bytes }
+    }
+
+    /// Arithmetic intensity (FLOPs per byte).
+    pub fn intensity(self) -> f64 {
+        if self.bytes == 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.bytes
+        }
+    }
+}
+
+/// Per-device Attention-module cost for one layer.
+///
+/// `batch` is the *global* batch; DP divides it, TP divides heads.
+/// `seq` is the prompt length (prefill) or current context length
+/// (decode). GQA: K/V projections use `kv_heads`.
+pub fn attention_cost(
+    m: &MoEModelConfig,
+    s: &AttnStrategy,
+    stage: Stage,
+    batch: usize,
+    seq: usize,
+) -> OpCost {
+    let b = (batch as f64 / s.dp as f64).ceil();
+    let hd = m.head_dim as f64;
+    let qh = m.q_heads as f64 / s.tp as f64; // heads per device
+    let kvh = (m.kv_heads as f64 / s.tp as f64).max(1.0); // replicated if tp > kv_heads
+    let h = m.hidden as f64;
+    let dt = m.dtype_bytes as f64;
+
+    let (tokens, ctx) = match stage {
+        Stage::Prefill => (seq as f64, seq as f64),
+        Stage::Decode => (1.0, seq as f64),
+    };
+
+    // Projections: Q (h -> qh*hd), K,V (h -> kvh*hd), O (qh*hd -> h).
+    let proj_flops = 2.0 * b * tokens * h * (qh * hd + 2.0 * kvh * hd + qh * hd);
+    let proj_weight_bytes = dt * h * (qh * hd + 2.0 * kvh * hd + qh * hd);
+    let proj_act_bytes = dt * b * tokens * (2.0 * h + qh * hd + 2.0 * kvh * hd + qh * hd);
+
+    // Score + value matmuls. Causal prefill does ~half the s×s work.
+    let causal = match stage {
+        Stage::Prefill => 0.5,
+        Stage::Decode => 1.0,
+    };
+    let attn_flops = 2.0 * 2.0 * b * qh * hd * tokens * ctx * causal;
+    // KV traffic: decode re-reads the whole cache each step.
+    let kv_bytes = dt * b * 2.0 * kvh * hd * ctx;
+    let attn_act_bytes = dt * b * tokens * qh * (hd + ctx * causal).min(1e18);
+
+    OpCost {
+        flops: proj_flops + attn_flops,
+        bytes: proj_weight_bytes + proj_act_bytes + kv_bytes + attn_act_bytes,
+    }
+}
+
+/// Per-device Expert-module cost for one layer under a given strategy.
+///
+/// `imbalance` multiplies the routed-token count on the hottest device
+/// (1.0 = perfectly balanced; EP decode typically > 1, see
+/// [`crate::cluster::imbalance`]). TP shards every expert's intermediate
+/// dim, so it sees all tokens but `inter/tp` columns; EP assigns
+/// `num_experts/ep` whole experts per device.
+pub fn expert_cost(
+    m: &MoEModelConfig,
+    s: &ExpertStrategy,
+    stage: Stage,
+    batch: usize,
+    seq: usize,
+    imbalance: f64,
+) -> OpCost {
+    let tokens_global = match stage {
+        Stage::Prefill => (batch * seq) as f64,
+        Stage::Decode => batch as f64,
+    };
+    let h = m.hidden as f64;
+    let inter = m.moe_inter_size as f64 / s.tp as f64;
+    let dt = m.dtype_bytes as f64;
+
+    // Routed expert work: token-expert pairs this device processes.
+    // EP: tokens route to experts held here — balanced share × imbalance.
+    let pairs_here = tokens_global * m.top_k as f64 / s.ep as f64 * imbalance;
+    // SwiGLU: gate, up, down = 3 matmuls of (h × inter).
+    let routed_flops = 2.0 * 3.0 * pairs_here * h * inter;
+
+    // Weight traffic: which experts actually get touched on this device.
+    let experts_here = (m.num_experts as f64 / s.ep as f64).min(m.num_experts as f64);
+    // During decode only a few experts are hit; cap by pairs.
+    let touched = experts_here.min(pairs_here.max(1.0));
+    // Capacity-factor padding under EP: the grouped GEMM pads every
+    // owned expert's token block to the hottest load, re-streaming
+    // weight panels for overflow blocks — the hot device's effective
+    // weight traffic scales with the imbalance (this is the decode-stage
+    // EP inefficiency of paper Fig 2).
+    let weight_factor = if s.ep > 1 { imbalance } else { 1.0 };
+    let routed_weight_bytes = dt * touched * 3.0 * h * inter * weight_factor;
+    let routed_act_bytes = dt * pairs_here * (2.0 * h + 2.0 * inter);
+
+    // Shared experts: always active for every token; sharded by TP only
+    // (they are replicated across EP groups).
+    let (shared_flops, shared_bytes) = if m.shared_experts > 0 {
+        let sh_inter = m.shared_inter_size as f64 / s.tp as f64;
+        let tokens_here = tokens_global / s.ep as f64; // data-split across EP group
+        (
+            2.0 * 3.0 * tokens_here * h * sh_inter,
+            dt * (3.0 * h * sh_inter + tokens_here * (2.0 * h + 2.0 * sh_inter)),
+        )
+    } else {
+        (0.0, 0.0)
+    };
+
+    // Gating network: tokens × num_experts logits (tiny but real).
+    let gate_flops = 2.0 * tokens_global / s.ep as f64 * h * m.num_experts as f64;
+
+    OpCost {
+        flops: routed_flops + shared_flops + gate_flops,
+        bytes: routed_weight_bytes + routed_act_bytes + shared_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategy::{AttnStrategy, ExpertStrategy};
+
+    fn mixtral() -> MoEModelConfig {
+        MoEModelConfig::mixtral_8x7b()
+    }
+
+    #[test]
+    fn tp_divides_attention_flops() {
+        let m = mixtral();
+        let full = attention_cost(&m, &AttnStrategy::new(1, 1), Stage::Prefill, 4, 1024);
+        let tp4 = attention_cost(&m, &AttnStrategy::new(4, 1), Stage::Prefill, 4, 1024);
+        let ratio = full.flops / tp4.flops;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn dp_divides_attention_flops() {
+        let m = mixtral();
+        let full = attention_cost(&m, &AttnStrategy::new(1, 1), Stage::Prefill, 8, 512);
+        let dp4 = attention_cost(&m, &AttnStrategy::new(1, 4), Stage::Prefill, 8, 512);
+        assert!((full.flops / dp4.flops - 4.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn decode_is_memory_bound_prefill_compute_bound() {
+        let m = mixtral();
+        let s = AttnStrategy::new(1, 1);
+        let pre = attention_cost(&m, &s, Stage::Prefill, 4, 2048);
+        let dec = attention_cost(&m, &s, Stage::Decode, 4, 2048);
+        assert!(pre.intensity() > 100.0, "prefill intensity {}", pre.intensity());
+        assert!(dec.intensity() < 10.0, "decode intensity {}", dec.intensity());
+    }
+
+    #[test]
+    fn expert_tp_and_ep_equal_when_balanced() {
+        // With perfect balance, TP-4 and EP-4 do the same routed FLOPs.
+        let m = mixtral();
+        let tp = expert_cost(&m, &ExpertStrategy::new(4, 1), Stage::Prefill, 4, 1024, 1.0);
+        let ep = expert_cost(&m, &ExpertStrategy::new(1, 4), Stage::Prefill, 4, 1024, 1.0);
+        let rel = (tp.flops - ep.flops).abs() / tp.flops;
+        assert!(rel < 0.02, "rel {rel}");
+    }
+
+    #[test]
+    fn imbalance_increases_ep_compute() {
+        let m = mixtral();
+        let bal = expert_cost(&m, &ExpertStrategy::new(1, 4), Stage::Decode, 8, 512, 1.0);
+        let imb = expert_cost(&m, &ExpertStrategy::new(1, 4), Stage::Decode, 8, 512, 1.8);
+        assert!(imb.flops > bal.flops * 1.7);
+    }
+
+    #[test]
+    fn decode_weight_traffic_dominated_by_touched_experts() {
+        // Decode with tiny batch should not charge all 8 experts' weights
+        // under EP-1 (TP): only top_k experts per token are touched.
+        let m = mixtral();
+        let c = expert_cost(&m, &ExpertStrategy::new(4, 1), Stage::Decode, 1, 512, 1.0);
+        let one_expert_bytes =
+            (m.dtype_bytes * 3 * m.hidden * m.moe_inter_size / 4) as f64;
+        assert!(c.bytes < one_expert_bytes * 3.0, "bytes {}", c.bytes);
+    }
+
+    #[test]
+    fn shared_experts_add_cost() {
+        let q = MoEModelConfig::qwen15_moe_a27b();
+        let with = expert_cost(&q, &ExpertStrategy::new(1, 4), Stage::Prefill, 4, 256, 1.0);
+        let mut no_shared = q.clone();
+        no_shared.shared_experts = 0;
+        let without =
+            expert_cost(&no_shared, &ExpertStrategy::new(1, 4), Stage::Prefill, 4, 256, 1.0);
+        assert!(with.flops > without.flops);
+    }
+}

@@ -1,0 +1,370 @@
+//! The inference latency estimator (paper §III-B, eq. 1–3):
+//!
+//! ```text
+//! T_total   = T_prefill + T_decoding                       (1)
+//! T_prefill = N_layer · (T_attn + T_experts + T_comm)      (2)
+//! T_decoding = S_output · N_layer · (T_attn + T_experts + T_comm)   (3)
+//! T_cal  = F_module / Max_FLOPs × η      (η: random forest)
+//! T_comm = V_data / Bandwidth × ρ        (ρ: random forest)
+//! ```
+//!
+//! [`LatencyModel`] owns the η regressors (one per module, as the paper
+//! builds module-specific simulation models) and the ρ regressor,
+//! trained at construction on [`microbench`] samples. Decode-stage cost
+//! is integrated over the growing context length by sampling a few
+//! quadrature points instead of simulating every step.
+
+use crate::cluster::imbalance;
+use crate::config::{hardware::GpuSpec, model::MoEModelConfig, scenario::Scenario};
+use crate::sim::comm::{self, CommEvent};
+use crate::sim::flops::{self, OpCost, Stage};
+use crate::sim::forest::{ForestParams, RandomForest};
+use crate::sim::microbench;
+use crate::strategy::{AttnStrategy, ExpertStrategy};
+
+/// Latency of one module class within one layer (seconds).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ModuleLatency {
+    pub attn: f64,
+    pub expert: f64,
+    pub comm: f64,
+}
+
+impl ModuleLatency {
+    pub fn total(&self) -> f64 {
+        self.attn + self.expert + self.comm
+    }
+
+    pub fn scale(&self, k: f64) -> ModuleLatency {
+        ModuleLatency { attn: self.attn * k, expert: self.expert * k, comm: self.comm * k }
+    }
+
+    pub fn add(&self, o: &ModuleLatency) -> ModuleLatency {
+        ModuleLatency {
+            attn: self.attn + o.attn,
+            expert: self.expert + o.expert,
+            comm: self.comm + o.comm,
+        }
+    }
+}
+
+/// Per-stage latency plus the end-to-end total for a scenario.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageLatency {
+    /// Whole prefill stage (all layers).
+    pub prefill: ModuleLatency,
+    /// Whole decoding stage (all layers × S_output steps).
+    pub decode: ModuleLatency,
+}
+
+impl StageLatency {
+    pub fn total(&self) -> f64 {
+        self.prefill.total() + self.decode.total()
+    }
+}
+
+/// Module-specific inference latency simulation model.
+pub struct LatencyModel {
+    pub gpu: GpuSpec,
+    eta_attn: RandomForest,
+    eta_expert: RandomForest,
+    rho: RandomForest,
+    /// Number of decode quadrature points (see `decode_layer`).
+    quad_points: usize,
+}
+
+impl LatencyModel {
+    /// Train the η/ρ regressors for a GPU platform. Deterministic for a
+    /// given seed; takes a few milliseconds.
+    pub fn train(gpu: &GpuSpec, seed: u64) -> LatencyModel {
+        let params = ForestParams { n_trees: 24, max_depth: 12, min_split: 3, ..Default::default() };
+        // Module-specific training sets: attention sweeps lower
+        // intensity (KV reads), experts sweep the full GEMM range. The
+        // sets are disjoint draws from the same benchmarking protocol.
+        let attn_set = microbench::compute_training_set(gpu, 900, seed ^ 0xA77);
+        let expert_set = microbench::compute_training_set(gpu, 900, seed ^ 0xE4);
+        // The ρ surface has a sharp latency-floor knee at small message
+        // sizes — give it a denser sweep and a deeper forest.
+        let comm_set = microbench::comm_training_set(gpu, 2000, seed ^ 0xC0);
+
+        let fit = |rows: &[microbench::ComputeSample]| {
+            let xs: Vec<Vec<f64>> = rows.iter().map(|s| s.features.clone()).collect();
+            let ys: Vec<f64> = rows.iter().map(|s| s.eta.ln()).collect();
+            RandomForest::fit(&xs, &ys, &params)
+        };
+        let eta_attn = fit(&attn_set);
+        let eta_expert = fit(&expert_set);
+        let xs: Vec<Vec<f64>> = comm_set.iter().map(|s| s.features.clone()).collect();
+        let ys: Vec<f64> = comm_set.iter().map(|s| s.rho.ln()).collect();
+        let rho_params = ForestParams { n_trees: 32, max_depth: 14, ..params.clone() };
+        let rho = RandomForest::fit(&xs, &ys, &rho_params);
+
+        LatencyModel { gpu: gpu.clone(), eta_attn, eta_expert, rho, quad_points: 8 }
+    }
+
+    /// T_cal for an attention-module invocation: `flops/peak × η̂`.
+    pub fn attn_time(&self, cost: &OpCost) -> f64 {
+        if cost.flops <= 0.0 {
+            return 0.0;
+        }
+        let eta = self.eta_attn.predict(&microbench::compute_features(cost)).exp();
+        cost.flops / self.gpu.peak_flops * eta
+    }
+
+    /// T_cal for an expert-module invocation.
+    pub fn expert_time(&self, cost: &OpCost) -> f64 {
+        if cost.flops <= 0.0 {
+            return 0.0;
+        }
+        let eta = self.eta_expert.predict(&microbench::compute_features(cost)).exp();
+        cost.flops / self.gpu.peak_flops * eta
+    }
+
+    /// T_comm for one collective: `V/BW × ρ̂`.
+    pub fn comm_time(&self, event: &CommEvent) -> f64 {
+        if event.wire_bytes <= 0.0 || event.group <= 1 {
+            return 0.0;
+        }
+        let rho = self.rho.predict(&microbench::comm_features(event)).exp();
+        event.wire_bytes / self.gpu.link_bw * rho
+    }
+
+    /// Total comm time of a layer's schedule.
+    pub fn comm_time_all(&self, events: &[CommEvent]) -> f64 {
+        events.iter().map(|e| self.comm_time(e)).sum()
+    }
+
+    /// Per-layer latency at one point of one stage.
+    ///
+    /// `seq` = prompt length for prefill, current context length for
+    /// decode. The EP imbalance factor multiplies routed-expert work.
+    pub fn layer_latency(
+        &self,
+        model: &MoEModelConfig,
+        attn: &AttnStrategy,
+        expert: &ExpertStrategy,
+        stage: Stage,
+        batch: usize,
+        seq: usize,
+    ) -> ModuleLatency {
+        let tokens = match stage {
+            Stage::Prefill => batch * seq,
+            Stage::Decode => batch,
+        };
+        let imb = imbalance::expected_imbalance(
+            model.num_experts,
+            expert.ep,
+            tokens,
+            model.top_k,
+            imbalance::DEFAULT_SKEW,
+        );
+        let a_cost = flops::attention_cost(model, attn, stage, batch, seq);
+        let e_cost = flops::expert_cost(model, expert, stage, batch, seq, imb);
+        let events = comm::layer_comm_events(model, attn, expert, stage, batch, seq);
+        ModuleLatency {
+            attn: self.attn_time(&a_cost),
+            expert: self.expert_time(&e_cost),
+            comm: self.comm_time_all(&events),
+        }
+    }
+
+    /// Whole-prefill latency (eq. 2).
+    pub fn prefill_latency(
+        &self,
+        model: &MoEModelConfig,
+        attn: &AttnStrategy,
+        expert: &ExpertStrategy,
+        scenario: &Scenario,
+    ) -> ModuleLatency {
+        self.layer_latency(model, attn, expert, Stage::Prefill, scenario.batch, scenario.context)
+            .scale(model.layers as f64)
+    }
+
+    /// Whole-decoding latency (eq. 3), integrating the growing context
+    /// with `quad_points` midpoint-rule samples.
+    pub fn decode_latency(
+        &self,
+        model: &MoEModelConfig,
+        attn: &AttnStrategy,
+        expert: &ExpertStrategy,
+        scenario: &Scenario,
+    ) -> ModuleLatency {
+        if scenario.generate == 0 {
+            return ModuleLatency::default();
+        }
+        let q = self.quad_points.min(scenario.generate).max(1);
+        let step = scenario.generate as f64 / q as f64;
+        let mut acc = ModuleLatency::default();
+        for i in 0..q {
+            let ctx = scenario.context as f64 + (i as f64 + 0.5) * step;
+            let per_layer = self.layer_latency(
+                model,
+                attn,
+                expert,
+                Stage::Decode,
+                scenario.batch,
+                ctx as usize,
+            );
+            acc = acc.add(&per_layer.scale(step));
+        }
+        acc.scale(model.layers as f64)
+    }
+
+    /// End-to-end latency (eq. 1) for a fixed strategy pair used in both
+    /// stages (no transition).
+    pub fn total_latency(
+        &self,
+        model: &MoEModelConfig,
+        attn: &AttnStrategy,
+        expert: &ExpertStrategy,
+        scenario: &Scenario,
+    ) -> StageLatency {
+        StageLatency {
+            prefill: self.prefill_latency(model, attn, expert, scenario),
+            decode: self.decode_latency(model, attn, expert, scenario),
+        }
+    }
+}
+
+/// Held-out prediction errors of the η and ρ regressors against fresh
+/// "measured" samples (paper Fig 5's evaluation protocol). Returns
+/// (compute relative errors, comm relative errors).
+pub fn heldout_errors(lm: &LatencyModel, gpu: &GpuSpec, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let comp = microbench::compute_training_set(gpu, n, 0xDEAD_BEEF);
+    let comm = microbench::comm_training_set(gpu, n, 0xFEED_FACE);
+    let comp_err = comp
+        .iter()
+        .map(|s| {
+            // Reconstruct the op from its features: [0]=ln flops,
+            // [2]=ln intensity.
+            let flops = s.features[0].exp();
+            let bytes = flops / s.features[2].exp();
+            let t = lm.expert_time(&OpCost { flops, bytes });
+            let eta_hat = t * gpu.peak_flops / flops;
+            ((eta_hat - s.eta) / s.eta).abs()
+        })
+        .collect();
+    let comm_err = comm
+        .iter()
+        .map(|s| {
+            let wire = s.features[0].exp();
+            let group = s.features[1] as usize;
+            let rounds = s.features[2] as usize;
+            let collective = match s.features[3] as usize {
+                0 => comm::Collective::AllReduce,
+                1 => comm::Collective::AllGather,
+                _ => comm::Collective::AllToAll,
+            };
+            let ev = CommEvent { collective, group, wire_bytes: wire, rounds, label: "heldout" };
+            let t = lm.comm_time(&ev);
+            let rho_hat = t * gpu.link_bw / wire;
+            ((rho_hat - s.rho) / s.rho).abs()
+        })
+        .collect();
+    (comp_err, comm_err)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NodeConfig;
+
+    fn model_for(gpu: &GpuSpec) -> LatencyModel {
+        LatencyModel::train(gpu, 42)
+    }
+
+    #[test]
+    fn eta_regressor_tracks_ground_truth() {
+        let gpu = GpuSpec::a6000();
+        let lm = model_for(&gpu);
+        // Held-out op: a chunky prefill GEMM.
+        let cost = OpCost { flops: 5e12, bytes: 4e10 };
+        let truth = microbench::true_compute_time(&gpu, &cost);
+        let pred = lm.expert_time(&cost);
+        let rel = (pred - truth).abs() / truth;
+        assert!(rel < 0.15, "rel err {rel}");
+    }
+
+    #[test]
+    fn rho_regressor_tracks_ground_truth() {
+        let gpu = GpuSpec::a6000();
+        let lm = model_for(&gpu);
+        let ev = CommEvent {
+            collective: crate::sim::comm::Collective::AllReduce,
+            group: 4,
+            wire_bytes: 2e8,
+            rounds: 6,
+            label: "t",
+        };
+        let truth = microbench::true_comm_time(&gpu, &ev);
+        let pred = lm.comm_time(&ev);
+        let rel = (pred - truth).abs() / truth;
+        assert!(rel < 0.12, "rel err {rel}");
+    }
+
+    #[test]
+    fn fig2_shape_prefill_tp_comm_dominates_on_pcie() {
+        // Paper Fig 2 (4×A6000, seq 2K): prefill TP has much higher comm
+        // latency than EP.
+        let node = NodeConfig::a6000x(4);
+        let lm = model_for(&node.gpu);
+        let m = MoEModelConfig::mixtral_8x7b();
+        let sc = Scenario::new("fig2", 2048, 64, 16);
+        // EP baseline pairs DP attention with EP experts (the
+        // DeepSpeed-MoE deployment the paper benchmarks).
+        let tp = lm.prefill_latency(&m, &AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), &sc);
+        let ep = lm.prefill_latency(&m, &AttnStrategy::new(1, 4), &ExpertStrategy::new(1, 4), &sc);
+        assert!(tp.comm > 1.5 * ep.comm, "TP comm {} vs EP comm {}", tp.comm, ep.comm);
+    }
+
+    #[test]
+    fn fig2_shape_decode_ep_expert_slower() {
+        // Paper Fig 2 decode: EP expert compute beats by load imbalance.
+        let node = NodeConfig::a6000x(4);
+        let lm = model_for(&node.gpu);
+        let m = MoEModelConfig::mixtral_8x7b();
+        let sc = Scenario::new("fig2", 2048, 64, 16);
+        let tp = lm.decode_latency(&m, &AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), &sc);
+        let ep = lm.decode_latency(&m, &AttnStrategy::new(1, 4), &ExpertStrategy::new(1, 4), &sc);
+        assert!(
+            ep.expert > 1.1 * tp.expert,
+            "EP expert {} vs TP expert {}",
+            ep.expert,
+            tp.expert
+        );
+    }
+
+    #[test]
+    fn decode_scales_with_output_length() {
+        let gpu = GpuSpec::a100();
+        let lm = model_for(&gpu);
+        let m = MoEModelConfig::mixtral_8x7b();
+        let short = Scenario::new("s", 256, 64, 8);
+        let long = Scenario::new("l", 256, 2048, 8);
+        let a = AttnStrategy::new(4, 1);
+        let e = ExpertStrategy::new(4, 1);
+        let t_short = lm.decode_latency(&m, &a, &e, &short).total();
+        let t_long = lm.decode_latency(&m, &a, &e, &long).total();
+        let ratio = t_long / t_short;
+        assert!(ratio > 20.0 && ratio < 50.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn latencies_positive_and_finite() {
+        let gpu = GpuSpec::v100();
+        let lm = model_for(&gpu);
+        let m = MoEModelConfig::qwen15_moe_a27b();
+        let sc = Scenario::short_constrained();
+        for (tp, dp) in [(1, 4), (2, 2), (4, 1)] {
+            for (etp, eep) in [(1, 4), (2, 2), (4, 1)] {
+                let t = lm.total_latency(
+                    &m,
+                    &AttnStrategy::new(tp, dp),
+                    &ExpertStrategy::new(etp, eep),
+                    &sc,
+                );
+                assert!(t.total().is_finite() && t.total() > 0.0);
+            }
+        }
+    }
+}

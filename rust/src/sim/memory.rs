@@ -1,0 +1,135 @@
+//! Memory-consumption model (paper §III-A2 and the constraint in eq. 5):
+//!
+//! `(M_KV + A_d × M_attn + M_exp) / N + 2 × M_act < M_gpu`
+//!
+//! - Attention DP replicates attention weights `A_d×`;
+//! - Expert weights have identical per-device footprints across EP/TP;
+//! - EP's imbalanced All-to-All dispatch gets the paper's conservative
+//!   2× activation upper bound (we apply the 2× when the expert strategy
+//!   uses EP, and the baseline activation footprint otherwise).
+
+use crate::config::model::MoEModelConfig;
+use crate::config::scenario::Scenario;
+use crate::strategy::{AttnStrategy, ExpertStrategy};
+
+/// Model-level memory quantities (bytes, whole model / whole batch).
+#[derive(Debug, Clone)]
+pub struct MemoryModel {
+    /// KV cache for the full batch at max sequence length (M_KV).
+    pub kv_bytes: f64,
+    /// All attention weights (M_attn).
+    pub attn_weight_bytes: f64,
+    /// All expert + shared-expert weights (M_exp).
+    pub expert_weight_bytes: f64,
+    /// Baseline (TP) peak activation bytes per device (M_act).
+    pub act_bytes: f64,
+    /// Embedding + unembedding weights (replicated).
+    pub embed_bytes: f64,
+}
+
+impl MemoryModel {
+    pub fn new(model: &MoEModelConfig, scenario: &Scenario) -> Self {
+        let dt = model.dtype_bytes as f64;
+        let kv_bytes =
+            (scenario.batch * scenario.total_len()) as f64 * model.kv_bytes_per_token() as f64;
+        let attn_weight_bytes = (model.layers * model.attn_params_per_layer()) as f64 * dt;
+        let expert_weight_bytes = (model.layers
+            * (model.expert_params_per_layer() + model.shared_expert_params_per_layer()))
+            as f64
+            * dt;
+        // Peak activations: a few live tensors of [batch, seq, hidden]
+        // during prefill plus expert intermediates for routed tokens.
+        let tokens = (scenario.batch * scenario.context) as f64;
+        let act_bytes = dt
+            * (4.0 * tokens * model.hidden as f64
+                + tokens * model.top_k as f64 * model.moe_inter_size as f64 * 0.25);
+        let embed_bytes = 2.0 * (model.vocab * model.hidden) as f64 * dt;
+        MemoryModel { kv_bytes, attn_weight_bytes, expert_weight_bytes, act_bytes, embed_bytes }
+    }
+
+    /// Per-device bytes for an (attention, expert) strategy pair on an
+    /// `n`-device node — the left side of the eq. 5 constraint.
+    pub fn per_device_bytes(
+        &self,
+        attn: &AttnStrategy,
+        expert: &ExpertStrategy,
+        n: usize,
+    ) -> f64 {
+        let nf = n as f64;
+        let weights =
+            (self.kv_bytes + attn.dp as f64 * self.attn_weight_bytes + self.expert_weight_bytes)
+                / nf;
+        // EP activation upper bound: double the TP baseline (paper's
+        // conservative bound for All-to-All imbalance).
+        let act_factor = if expert.ep > 1 { 2.0 } else { 1.0 };
+        weights + act_factor * self.act_bytes + self.embed_bytes
+    }
+}
+
+/// Does the (attn, expert) pair fit in per-device capacity `cap`?
+pub fn pair_fits(
+    mem: &MemoryModel,
+    attn: &AttnStrategy,
+    expert: &ExpertStrategy,
+    n: usize,
+    cap: f64,
+) -> bool {
+    mem.per_device_bytes(attn, expert, n) < cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    fn model() -> MoEModelConfig {
+        MoEModelConfig::mixtral_8x7b()
+    }
+
+    #[test]
+    fn dp_multiplies_attention_weights() {
+        let mem = MemoryModel::new(&model(), &Scenario::short_constrained());
+        let tp = mem.per_device_bytes(&AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), 4);
+        let dp = mem.per_device_bytes(&AttnStrategy::new(1, 4), &ExpertStrategy::new(4, 1), 4);
+        let delta = dp - tp;
+        let expected = 3.0 * mem.attn_weight_bytes / 4.0;
+        assert!((delta - expected).abs() / expected < 1e-9);
+    }
+
+    #[test]
+    fn ep_doubles_activations() {
+        let mem = MemoryModel::new(&model(), &Scenario::short_constrained());
+        let tp = mem.per_device_bytes(&AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), 4);
+        let ep = mem.per_device_bytes(&AttnStrategy::new(4, 1), &ExpertStrategy::new(1, 4), 4);
+        assert!((ep - tp - mem.act_bytes).abs() / mem.act_bytes < 1e-9);
+    }
+
+    #[test]
+    fn expert_weights_strategy_invariant() {
+        // Per-device expert weight footprint is the same for EP and TP
+        // (paper III-A2): both divide total expert bytes by N.
+        let mem = MemoryModel::new(&model(), &Scenario::short_constrained());
+        // Same act_factor for both by comparing EP2xTP2 vs EP4 (both EP>1).
+        let a = AttnStrategy::new(4, 1);
+        let e1 = mem.per_device_bytes(&a, &ExpertStrategy::new(2, 2), 4);
+        let e2 = mem.per_device_bytes(&a, &ExpertStrategy::new(1, 4), 4);
+        assert!((e1 - e2).abs() < 1.0);
+    }
+
+    #[test]
+    fn mixtral_fits_4xa6000_with_tp() {
+        let mem = MemoryModel::new(&model(), &Scenario::short_constrained());
+        let bytes =
+            mem.per_device_bytes(&AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), 4);
+        // 46.7B params × 2B / 4 devices ≈ 23.4 GB + KV + act < 48 GB.
+        assert!(bytes < 48e9, "bytes {bytes}");
+        assert!(bytes > 20e9, "bytes {bytes}");
+    }
+
+    #[test]
+    fn long_context_grows_kv() {
+        let short = MemoryModel::new(&model(), &Scenario::short_constrained());
+        let long = MemoryModel::new(&model(), &Scenario::long_extended());
+        assert!(long.kv_bytes > short.kv_bytes * 10.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Inference latency simulation models (paper §III-B).
+//!
+//! The paper estimates per-module latency as
+//! `T_cal = (F_module / Max_FLOPs) × η` and communication as
+//! `T_comm = (V_data / Bandwidth) × ρ`, with η and ρ fitted by random
+//! forest regressors over polynomial-expanded features, trained on
+//! measured operator latencies.
+//!
+//! Here the "measured" latencies come from [`microbench`] — a synthetic
+//! ground-truth operator model (roofline × occupancy × noise) standing
+//! in for the paper's GPU benchmarking protocol (see DESIGN.md §2). The
+//! regressors ([`forest`]) are trained on those samples and the
+//! estimator ([`latency`]) mirrors eq. 1–3.
+
+pub mod comm;
+pub mod flops;
+pub mod forest;
+pub mod latency;
+pub mod memory;
+pub mod microbench;
+
+pub use latency::{LatencyModel, ModuleLatency, StageLatency};

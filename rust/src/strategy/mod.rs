@@ -1,0 +1,129 @@
+//! Parallel strategies and the hierarchical search space (paper §III-C).
+//!
+//! The Attention module may use DP, TP, or DP×TP hybrids; the Expert
+//! module may use EP, TP, or EP×TP hybrids (DP excluded for experts —
+//! their weights dominate the model, so replication is memory-infeasible,
+//! and the paper additionally prunes DP+EP+TP triples from prior
+//! experience). TP degrees grow as powers of two.
+
+pub mod space;
+
+pub use space::{SearchSpace, StrategyPruning};
+
+use crate::util::json::Json;
+use std::fmt;
+
+/// Attention-module parallel strategy: `tp × dp = N` devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct AttnStrategy {
+    /// Tensor-parallel degree A_t (shards heads).
+    pub tp: usize,
+    /// Data-parallel degree A_d (replicates weights, splits batch).
+    pub dp: usize,
+}
+
+impl AttnStrategy {
+    pub fn new(tp: usize, dp: usize) -> Self {
+        assert!(tp >= 1 && dp >= 1);
+        AttnStrategy { tp, dp }
+    }
+
+    /// Total devices used.
+    pub fn devices(&self) -> usize {
+        self.tp * self.dp
+    }
+
+    /// Human-readable name matching the paper's plots (e.g. `TP4`,
+    /// `DP2xTP2`, `DP4`).
+    pub fn label(&self) -> String {
+        match (self.dp, self.tp) {
+            (1, t) => format!("TP{t}"),
+            (d, 1) => format!("DP{d}"),
+            (d, t) => format!("DP{d}xTP{t}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("tp", self.tp.into()), ("dp", self.dp.into())])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(AttnStrategy::new(
+            j.get("tp")?.as_usize()?,
+            j.get("dp")?.as_usize()?,
+        ))
+    }
+}
+
+impl fmt::Display for AttnStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// Expert-module parallel strategy: `tp × ep = N` devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExpertStrategy {
+    /// Tensor-parallel degree E_t (shards every expert's intermediate dim).
+    pub tp: usize,
+    /// Expert-parallel degree E_e (distributes whole experts).
+    pub ep: usize,
+}
+
+impl ExpertStrategy {
+    pub fn new(tp: usize, ep: usize) -> Self {
+        assert!(tp >= 1 && ep >= 1);
+        ExpertStrategy { tp, ep }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.tp * self.ep
+    }
+
+    pub fn label(&self) -> String {
+        match (self.ep, self.tp) {
+            (1, t) => format!("TP{t}"),
+            (e, 1) => format!("EP{e}"),
+            (e, t) => format!("EP{e}xTP{t}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("tp", self.tp.into()), ("ep", self.ep.into())])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(ExpertStrategy::new(
+            j.get("tp")?.as_usize()?,
+            j.get("ep")?.as_usize()?,
+        ))
+    }
+}
+
+impl fmt::Display for ExpertStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(AttnStrategy::new(4, 1).label(), "TP4");
+        assert_eq!(AttnStrategy::new(1, 4).label(), "DP4");
+        assert_eq!(AttnStrategy::new(2, 2).label(), "DP2xTP2");
+        assert_eq!(ExpertStrategy::new(1, 8).label(), "EP8");
+        assert_eq!(ExpertStrategy::new(2, 4).label(), "EP4xTP2");
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let a = AttnStrategy::new(2, 4);
+        assert_eq!(AttnStrategy::from_json(&a.to_json()), Some(a));
+        let e = ExpertStrategy::new(4, 2);
+        assert_eq!(ExpertStrategy::from_json(&e.to_json()), Some(e));
+    }
+}

@@ -1,0 +1,238 @@
+//! Declarative CLI flag parsing (std-only `clap` stand-in).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; generates usage text from the declarations.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// One declared flag.
+#[derive(Debug, Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// Declarative argument parser.
+///
+/// ```no_run
+/// # // no_run: rustdoc test binaries miss the xla_extension rpath in
+/// # // this offline environment (libstdc++ lives there).
+/// use hap::util::args::ArgSpec;
+/// let mut spec = ArgSpec::new("hap plan", "Search a hybrid parallel plan");
+/// spec.flag("model", "mixtral-8x7b", "model preset name");
+/// spec.flag("gpus", "4", "number of devices");
+/// spec.bool_flag("verbose", "print the full search space");
+/// let parsed = spec.parse(&["--model".into(), "qwen2-57b".into()]).unwrap();
+/// assert_eq!(parsed.get("model"), "qwen2-57b");
+/// assert_eq!(parsed.get_usize("gpus").unwrap(), 4);
+/// assert!(!parsed.get_bool("verbose"));
+/// ```
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    program: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct ParsedArgs {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: &str, about: &str) -> Self {
+        ArgSpec { program: program.to_string(), about: about.to_string(), flags: Vec::new() }
+    }
+
+    /// Declare a valued flag with a default.
+    pub fn flag(&mut self, name: &str, default: &str, help: &str) -> &mut Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a required valued flag (no default).
+    pub fn required_flag(&mut self, name: &str, help: &str) -> &mut Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag (defaults to false).
+    pub fn bool_flag(&mut self, name: &str, help: &str) -> &mut Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\nOptions:");
+        for f in &self.flags {
+            let meta = if f.is_bool { String::new() } else { " <value>".to_string() };
+            let def = match (&f.default, f.is_bool) {
+                (Some(d), _) => format!(" [default: {d}]"),
+                (None, false) => " [required]".to_string(),
+                _ => String::new(),
+            };
+            let _ = writeln!(s, "  --{}{:<14} {}{}", f.name, meta, f.help, def);
+        }
+        s
+    }
+
+    /// Parse a raw argument list (without the program name).
+    pub fn parse(&self, args: &[String]) -> Result<ParsedArgs, String> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        for f in &self.flags {
+            if f.is_bool {
+                bools.insert(f.name.clone(), false);
+            } else if let Some(d) = &f.default {
+                values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| format!("unknown flag --{name}\n\n{}", self.usage()))?;
+                if spec.is_bool {
+                    if let Some(v) = inline {
+                        bools.insert(name, v == "true" || v == "1");
+                    } else {
+                        bools.insert(name, true);
+                    }
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if !f.is_bool && !values.contains_key(&f.name) {
+                return Err(format!("missing required flag --{}\n\n{}", f.name, self.usage()));
+            }
+        }
+        Ok(ParsedArgs { values, bools, positional })
+    }
+}
+
+impl ParsedArgs {
+    /// Get a valued flag (panics if not declared — programming error).
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self.bools.get(name).unwrap_or(&false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected integer, got '{}'", self.get(name)))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.get(name)
+            .parse()
+            .map_err(|_| format!("--{name}: expected number, got '{}'", self.get(name)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        let mut s = ArgSpec::new("t", "test");
+        s.flag("model", "mixtral-8x7b", "model");
+        s.flag("gpus", "4", "gpus");
+        s.bool_flag("verbose", "verbose");
+        s
+    }
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&[]).unwrap();
+        assert_eq!(p.get("model"), "mixtral-8x7b");
+        assert_eq!(p.get_usize("gpus").unwrap(), 4);
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_and_space_forms() {
+        let p = spec().parse(&sv(&["--gpus=8", "--model", "q", "--verbose"])).unwrap();
+        assert_eq!(p.get_usize("gpus").unwrap(), 8);
+        assert_eq!(p.get("model"), "q");
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(spec().parse(&sv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = spec().parse(&sv(&["plan", "--gpus", "2"])).unwrap();
+        assert_eq!(p.positional, vec!["plan"]);
+    }
+
+    #[test]
+    fn required_flag_enforced() {
+        let mut s = ArgSpec::new("t", "test");
+        s.required_flag("out", "output path");
+        assert!(s.parse(&[]).is_err());
+        assert!(s.parse(&sv(&["--out", "x"])).is_ok());
+    }
+}

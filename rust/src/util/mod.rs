@@ -1,0 +1,59 @@
+//! Standard-library-only utilities.
+//!
+//! The offline build environment ships no general-purpose crates (no
+//! `rand`, `serde`, `clap`, `proptest`), so this module provides the
+//! small, well-tested subset the rest of the crate needs: a seedable
+//! PRNG ([`rng`]), a JSON parser/writer ([`json`]), a declarative CLI
+//! flag parser ([`args`]), descriptive statistics ([`stats`]), and a
+//! property-test harness ([`prop`]).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count with binary units (e.g. `1.50 GiB`).
+pub fn fmt_bytes(bytes: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{:.2} {}", v, UNITS[u])
+}
+
+/// Format a duration in seconds with an adaptive unit (ns/µs/ms/s).
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(fmt_bytes(512.0), "512.00 B");
+        assert_eq!(fmt_bytes(1536.0), "1.50 KiB");
+        assert_eq!(fmt_bytes(3.0 * 1024.0 * 1024.0 * 1024.0), "3.00 GiB");
+    }
+
+    #[test]
+    fn secs_units() {
+        assert_eq!(fmt_secs(2.5e-9), "2.5 ns");
+        assert_eq!(fmt_secs(2.5e-5), "25.0 µs");
+        assert_eq!(fmt_secs(2.5e-2), "25.00 ms");
+        assert_eq!(fmt_secs(2.5), "2.500 s");
+    }
+}

@@ -1,0 +1,81 @@
+//! Property-based testing harness (std-only `proptest` stand-in).
+//!
+//! Runs a property against many seeded random inputs and, on failure,
+//! reports the seed and iteration so the case can be replayed
+//! deterministically. Set `HAP_PROP_CASES` to change the case count.
+
+use super::rng::Rng;
+
+/// Number of cases per property (env-overridable).
+pub fn default_cases() -> usize {
+    std::env::var("HAP_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `prop` for `cases` seeded inputs; panics with the failing seed.
+///
+/// The property receives a fresh `Rng` per case and should draw its own
+/// inputs from it, returning `Err(description)` on violation.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base_seed: u64 = 0xC0FFEE_5EED_2025;
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Run with the default number of cases.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, default_cases(), prop)
+}
+
+/// Assert helper: returns Err with a formatted message when false.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 17, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_reports_seed() {
+        check("fails", 8, |r| {
+            let x = r.below(100);
+            if x < 1000 {
+                Err(format!("x = {x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,210 @@
+//! Cross-module integration tests: planner ↔ engine ↔ transition ↔
+//! simulation stack, over the paper's models, platforms, and scenarios.
+
+use hap::config::{GpuSpec, MoEModelConfig, NodeConfig, Scenario};
+use hap::engine::Engine;
+use hap::planner::HapPlanner;
+use hap::sim::LatencyModel;
+use hap::strategy::{AttnStrategy, ExpertStrategy, SearchSpace};
+use hap::transition::{TransitionMethod, TransitionModel};
+
+/// The planner's predicted ordering should agree with the engine's
+/// measured ordering for clearly separated strategy pairs (prediction
+/// is useful iff it ranks correctly).
+#[test]
+fn predicted_ordering_matches_measured_ordering() {
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let planner = HapPlanner::new(&model, &node);
+    let engine = Engine::new(&model, &node);
+    let sc = Scenario::long_constrained();
+
+    let configs = [
+        (AttnStrategy::new(4, 1), ExpertStrategy::new(4, 1)),
+        (AttnStrategy::new(1, 4), ExpertStrategy::new(1, 4)),
+        (AttnStrategy::new(1, 4), ExpertStrategy::new(4, 1)),
+    ];
+    let mut rows: Vec<(f64, f64)> = Vec::new();
+    for (a, e) in &configs {
+        let pred = planner.predict_fixed(&sc, a, e);
+        let meas = engine.run_static(a, e, &sc, 3).total();
+        rows.push((pred, meas));
+    }
+    // Pairwise ordering agreement for pairs separated by >15% measured.
+    for i in 0..rows.len() {
+        for j in 0..rows.len() {
+            let (pi, mi) = rows[i];
+            let (pj, mj) = rows[j];
+            if mi < mj * 0.85 {
+                assert!(
+                    pi < pj,
+                    "ordering disagreement: measured {mi:.3}<{mj:.3} but predicted {pi:.3}>={pj:.3}"
+                );
+            }
+        }
+    }
+}
+
+/// HAP's measured latency should never be meaningfully worse than the
+/// measured TP baseline on any (model, node, scenario) triple — the
+/// paper's "comparable or superior" claim, end to end.
+#[test]
+fn hap_measured_never_meaningfully_worse_than_tp() {
+    for model in MoEModelConfig::paper_models() {
+        for node in [NodeConfig::a6000x(4), NodeConfig::a100x(4)] {
+            let planner = HapPlanner::new(&model, &node);
+            let engine = Engine::new(&model, &node);
+            for sc in Scenario::table2() {
+                let plan = planner.plan(&sc, sc.generate).unwrap();
+                let n = node.num_devices;
+                let tp = engine
+                    .run_static(&AttnStrategy::new(n, 1), &ExpertStrategy::new(n, 1), &sc, 1)
+                    .total();
+                let hap = engine.run_plan(&plan, &sc, 1).total();
+                assert!(
+                    hap <= tp * 1.08,
+                    "{} {} on {}: HAP {hap:.3}s vs TP {tp:.3}s",
+                    model.name,
+                    sc.name,
+                    node.label()
+                );
+            }
+        }
+    }
+}
+
+/// Paper IV-C3: long-context/constrained-output on PCIe is the
+/// headline case — HAP must beat TP by a wide margin there.
+#[test]
+fn long_context_headline_speedup_on_pcie() {
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let planner = HapPlanner::new(&model, &node);
+    let engine = Engine::new(&model, &node);
+    let sc = Scenario::long_constrained();
+    let plan = planner.plan(&sc, sc.generate).unwrap();
+    let tp = engine
+        .run_static(&AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), &sc, 1)
+        .total();
+    let hap = engine.run_plan(&plan, &sc, 1).total();
+    let speedup = tp / hap;
+    assert!(speedup > 1.2, "headline speedup too small: {speedup:.2}x ({plan})");
+}
+
+/// NVLink vs PCIe adaptivity: the chosen prefill configuration should
+/// differ (or at least the PCIe win should exceed the NVLink win).
+#[test]
+fn interconnect_changes_the_decision_or_the_margin() {
+    let model = MoEModelConfig::mixtral_8x7b();
+    let sc = Scenario::long_constrained();
+    let mut wins = Vec::new();
+    for node in [NodeConfig::a6000x(4), NodeConfig::a100x(4)] {
+        let planner = HapPlanner::new(&model, &node);
+        let engine = Engine::new(&model, &node);
+        let plan = planner.plan(&sc, sc.generate).unwrap();
+        let n = node.num_devices;
+        let tp = engine
+            .run_static(&AttnStrategy::new(n, 1), &ExpertStrategy::new(n, 1), &sc, 1)
+            .total();
+        let hap = engine.run_plan(&plan, &sc, 1).total();
+        wins.push(tp / hap);
+    }
+    assert!(
+        wins[0] > wins[1] * 0.95,
+        "PCIe win {:.2}x should generally exceed NVLink win {:.2}x",
+        wins[0],
+        wins[1]
+    );
+}
+
+/// Transition model: eq. 6's minimum is honored for every (i, j) pair
+/// in a real cost-table build.
+#[test]
+fn switching_matrix_respects_eq6_minimum() {
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let planner = HapPlanner::new(&model, &node);
+    let sc = Scenario::long_extended();
+    let space = planner.search_space(&sc);
+    let tables = planner.cost_tables(&space, &sc);
+    for (i, row) in tables.switching.iter().enumerate() {
+        for (j, cost) in row.iter().enumerate() {
+            if i == j {
+                assert_eq!(cost.method, TransitionMethod::None);
+                assert_eq!(cost.overhead, 0.0);
+            } else {
+                assert!(cost.overhead <= cost.reshard + 1e-12);
+                assert!(cost.overhead >= 0.0);
+            }
+        }
+    }
+}
+
+/// The INT4-backup path should be chosen (and ~free) when a long
+/// prefill hides the upload on a PCIe platform.
+#[test]
+fn int4_backup_free_under_long_prefill() {
+    let model = MoEModelConfig::mixtral_8x7b();
+    let gpu = GpuSpec::a6000();
+    let lm = LatencyModel::train(&gpu, 1);
+    let tm = TransitionModel::new(&model, &gpu);
+    let c = tm.cost(&lm, &ExpertStrategy::new(1, 4), &ExpertStrategy::new(4, 1), 5.0);
+    assert_eq!(c.method, TransitionMethod::Int4Backup);
+    assert_eq!(c.overhead, 0.0);
+}
+
+/// Search spaces stay feasible and within expected sizes for all
+/// paper configurations.
+#[test]
+fn search_spaces_feasible_for_all_paper_configs() {
+    for model in MoEModelConfig::paper_models() {
+        for node in [NodeConfig::a6000x(4), NodeConfig::a100x(4), NodeConfig::a100x(8)] {
+            if model.name == "mixtral-8x7b" && node.gpu.mem_bytes < 40e9 {
+                continue;
+            }
+            for sc in Scenario::table2() {
+                let space = SearchSpace::enumerate(&model, &node, &sc);
+                assert!(
+                    space.is_feasible(),
+                    "{} on {} {} infeasible",
+                    model.name,
+                    node.label(),
+                    sc.name
+                );
+                let max_k = (node.num_devices as f64).log2() as usize + 1;
+                assert!(space.k_a() <= max_k);
+                assert!(space.k_e() <= max_k);
+            }
+        }
+    }
+}
+
+/// 8×V100 (32 GB, PCIe) Fig 8(b) configuration end-to-end.
+#[test]
+fn fig8b_v100_plan_beats_tp() {
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::v100x(8);
+    let planner = HapPlanner::new(&model, &node);
+    let engine = Engine::new(&model, &node);
+    let sc = Scenario::fig8_v100();
+    let plan = planner.plan(&sc, sc.generate).unwrap();
+    let tp = engine
+        .run_static(&AttnStrategy::new(8, 1), &ExpertStrategy::new(8, 1), &sc, 1)
+        .total();
+    let hap = engine.run_plan(&plan, &sc, 1).total();
+    assert!(tp / hap > 1.1, "V100 speedup {:.2}x too small ({plan})", tp / hap);
+}
+
+/// Qwen models (many small experts, shared experts) plan successfully
+/// and respect expert-count divisibility.
+#[test]
+fn qwen_plans_respect_divisibility() {
+    let model = MoEModelConfig::qwen15_moe_a27b(); // 60 experts
+    let node = NodeConfig::a100x(8);
+    let planner = HapPlanner::new(&model, &node);
+    let plan = planner.plan(&Scenario::short_constrained(), 64).unwrap();
+    for e in [plan.expert_prefill, plan.expert_decode] {
+        assert_eq!(model.num_experts % e.ep, 0, "EP {} doesn't divide 60", e.ep);
+        assert_eq!(model.moe_inter_size % e.tp, 0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Property-based invariant tests (seeded random-input harness from
+//! `hap::util::prop` — the offline stand-in for proptest).
+
+use hap::cluster::imbalance;
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::ilp::{solve, LinExpr, Problem, Sense};
+use hap::quant::{self, Scheme};
+use hap::sim::comm::{layer_comm_bytes, layer_comm_events};
+use hap::sim::flops::{attention_cost, expert_cost, Stage};
+use hap::strategy::{space::power_of_two_divisors, AttnStrategy, ExpertStrategy, SearchSpace};
+use hap::util::prop;
+use hap::util::rng::Rng;
+
+fn random_model(rng: &mut Rng) -> MoEModelConfig {
+    let mut m = MoEModelConfig::mixtral_8x7b();
+    m.q_heads = [8, 16, 32][rng.below(3)];
+    m.kv_heads = m.q_heads / [1, 2, 4][rng.below(3)];
+    m.hidden = [2048, 4096][rng.below(2)] as usize;
+    m.head_dim = 128;
+    m.num_experts = [8, 16, 64][rng.below(3)];
+    m.top_k = rng.range(1, 4);
+    m.moe_inter_size = [1408, 2560, 14336][rng.below(3)];
+    m.layers = rng.range(2, 48);
+    m
+}
+
+/// ILP solver vs brute force on random HAP-shaped instances.
+#[test]
+fn prop_ilp_matches_bruteforce_on_hap_shaped_problems() {
+    prop::check("ilp-vs-brute", 40, |rng| {
+        let ka = rng.range(2, 4);
+        let ke = rng.range(2, 4);
+        let mut p = Problem::new();
+        let s = p.binaries("s", ka);
+        let ei = p.binaries("ei", ke);
+        let ej = p.binaries("ej", ke);
+        p.exactly_one("s", &s);
+        p.exactly_one("ei", &ei);
+        p.exactly_one("ej", &ej);
+        for g in [&s, &ei, &ej] {
+            for &v in g.iter() {
+                p.set_objective_term(v, rng.range_f64(0.1, 10.0));
+            }
+        }
+        for (i, &a) in ei.iter().enumerate() {
+            for (j, &b) in ej.iter().enumerate() {
+                let y = p.and_var(&format!("y{i}{j}"), a, b);
+                p.set_objective_term(y, rng.range_f64(0.0, 2.0));
+            }
+        }
+        // Random forbidden pairs (memory constraints).
+        for (k, &a) in s.iter().enumerate() {
+            for (i, &b) in ei.iter().enumerate() {
+                if rng.chance(0.15) {
+                    p.constrain(
+                        &format!("mem{k}{i}"),
+                        LinExpr::new().term(a, 1.0).term(b, 1.0),
+                        Sense::Le,
+                        1.0,
+                    );
+                }
+            }
+        }
+        // Brute force over one-hot triples (AND vars determined).
+        let mut best: Option<f64> = None;
+        for k in 0..ka {
+            for i in 0..ke {
+                for j in 0..ke {
+                    let mut x = vec![0.0; p.num_vars];
+                    x[s[k].0] = 1.0;
+                    x[ei[i].0] = 1.0;
+                    x[ej[j].0] = 1.0;
+                    // AND vars: y_ij = ei_i ∧ ej_j in construction order.
+                    let y_base = ka + 2 * ke;
+                    x[y_base + i * ke + j] = 1.0;
+                    if p.feasible(&x, 1e-9) {
+                        let obj = p.objective_value(&x);
+                        if best.map_or(true, |b| obj < b) {
+                            best = Some(obj);
+                        }
+                    }
+                }
+            }
+        }
+        let got = solve(&p).optimal().map(|(_, o)| o);
+        match (best, got) {
+            (Some(b), Some(g)) => {
+                prop_ok((g - b).abs() < 1e-6, format!("brute {b} vs ilp {g}"))
+            }
+            (None, None) => Ok(()),
+            (b, g) => Err(format!("feasibility mismatch: {b:?} vs {g:?}")),
+        }
+    });
+}
+
+fn prop_ok(cond: bool, msg: String) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg)
+    }
+}
+
+/// Search-space constraint satisfaction (eq. 5) for random models.
+#[test]
+fn prop_search_space_respects_eq5() {
+    prop::check("space-eq5", 60, |rng| {
+        let m = random_model(rng);
+        let n = [4usize, 8][rng.below(2)];
+        let node = if rng.chance(0.5) {
+            NodeConfig::a100x(n)
+        } else {
+            NodeConfig::new(hap::config::GpuSpec::a6000(), n)
+        };
+        let sc = Scenario::table2()[rng.below(4)].clone();
+        let space = SearchSpace::enumerate(&m, &node, &sc);
+        for a in &space.attn {
+            prop_ok(a.tp * a.dp == n, format!("attn {} devices", a.label()))?;
+            prop_ok(m.q_heads % a.tp == 0, format!("heads % {}", a.tp))?;
+            prop_ok(a.tp.is_power_of_two(), "tp pow2".into())?;
+        }
+        for e in &space.expert {
+            prop_ok(e.tp * e.ep == n, format!("expert {} devices", e.label()))?;
+            prop_ok(m.num_experts % e.ep == 0, format!("experts % {}", e.ep))?;
+            prop_ok(m.moe_inter_size % e.tp == 0, format!("inter % {}", e.tp))?;
+        }
+        Ok(())
+    });
+}
+
+/// FLOPs conservation: per-device work × devices ≈ total work for TP
+/// and balanced EP (no sharding should create or destroy FLOPs beyond
+/// the replicated gate).
+#[test]
+fn prop_flops_conservation() {
+    prop::check("flops-conservation", 60, |rng| {
+        let m = random_model(rng);
+        let batch = rng.range(1, 64);
+        let seq = [128usize, 512, 2048][rng.below(3)];
+        let stage = if rng.chance(0.5) { Stage::Prefill } else { Stage::Decode };
+        let full = expert_cost(&m, &ExpertStrategy::new(1, 1), stage, batch, seq, 1.0);
+        for n in [2usize, 4] {
+            if m.num_experts % n != 0 || m.moe_inter_size % n != 0 {
+                continue;
+            }
+            let tp = expert_cost(&m, &ExpertStrategy::new(n, 1), stage, batch, seq, 1.0);
+            let ep = expert_cost(&m, &ExpertStrategy::new(1, n), stage, batch, seq, 1.0);
+            let rel_tp = (tp.flops * n as f64 - full.flops).abs() / full.flops;
+            let rel_ep = (ep.flops * n as f64 - full.flops).abs() / full.flops;
+            // Gate is replicated across shards → small over-count allowed.
+            prop_ok(rel_tp < 0.05, format!("tp{n} rel {rel_tp}"))?;
+            prop_ok(rel_ep < 0.05, format!("ep{n} rel {rel_ep}"))?;
+        }
+        let a_full = attention_cost(&m, &AttnStrategy::new(1, 1), stage, batch, seq);
+        for n in [2usize, 4] {
+            if m.q_heads % n != 0 {
+                continue;
+            }
+            let a_tp = attention_cost(&m, &AttnStrategy::new(n, 1), stage, batch, seq);
+            let rel = (a_tp.flops * n as f64 - a_full.flops).abs() / a_full.flops;
+            // KV replication under GQA allows a modest over-count.
+            prop_ok(rel < 0.35, format!("attn tp{n} rel {rel}"))?;
+        }
+        Ok(())
+    });
+}
+
+/// Comm volumes are non-negative, zero on one device, and monotone in
+/// token count.
+#[test]
+fn prop_comm_volume_sanity() {
+    prop::check("comm-sanity", 60, |rng| {
+        let m = random_model(rng);
+        let batch = rng.range(1, 32);
+        let seq = rng.range(64, 4096);
+        let n = 4;
+        let strategies: Vec<(AttnStrategy, ExpertStrategy)> = vec![
+            (AttnStrategy::new(n, 1), ExpertStrategy::new(n, 1)),
+            (AttnStrategy::new(1, n), ExpertStrategy::new(1, n)),
+            (AttnStrategy::new(2, 2), ExpertStrategy::new(2, 2)),
+        ];
+        for (a, e) in &strategies {
+            if m.q_heads % a.tp != 0 || m.num_experts % e.ep != 0 || m.moe_inter_size % e.tp != 0 {
+                continue;
+            }
+            let small = layer_comm_bytes(&layer_comm_events(&m, a, e, Stage::Prefill, batch, seq));
+            let big =
+                layer_comm_bytes(&layer_comm_events(&m, a, e, Stage::Prefill, batch, seq * 2));
+            prop_ok(small >= 0.0 && big >= small, format!("monotone {} {}", a.label(), e.label()))?;
+        }
+        let none = layer_comm_events(
+            &m,
+            &AttnStrategy::new(1, 1),
+            &ExpertStrategy::new(1, 1),
+            Stage::Prefill,
+            batch,
+            seq,
+        );
+        prop_ok(none.is_empty(), "single device must not communicate".into())
+    });
+}
+
+/// INT4 round trip: error bounded by half the block scale, for every
+/// scheme and random shapes.
+#[test]
+fn prop_quant_round_trip_error_bound() {
+    prop::check("quant-bound", 40, |rng| {
+        let rows = rng.range(1, 32);
+        let group = [32usize, 64, 128][rng.below(3)];
+        let cols = group * rng.range(1, 4);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| (rng.gauss() as f32) * rng.range_f64(0.001, 0.1) as f32)
+            .collect();
+        for scheme in
+            [Scheme::PerTensor, Scheme::PerChannel, Scheme::PerGroup { group_size: group }]
+        {
+            let q = quant::quantize(&data, rows, cols, scheme);
+            let deq = quant::dequantize(&q);
+            for (i, (&x, &y)) in data.iter().zip(&deq).enumerate() {
+                let s = q.scales[i / q.block_len];
+                if (x - y).abs() > s * 0.5 + 1e-6 {
+                    return Err(format!("{}: elem {i} err {} scale {s}", scheme.name(), (x - y).abs()));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Imbalance model: ≥ 1 always, → 1 with many tokens, grows with skew.
+#[test]
+fn prop_imbalance_limits() {
+    prop::check("imbalance", 60, |rng| {
+        let experts = [8usize, 16, 60, 64][rng.below(4)];
+        let ep = [2usize, 4][rng.below(2)];
+        if experts % ep != 0 {
+            return Ok(());
+        }
+        let top_k = rng.range(1, 4);
+        let few = imbalance::expected_imbalance(experts, ep, rng.range(1, 32), top_k, 0.3);
+        let many = imbalance::expected_imbalance(experts, ep, 1_000_000, top_k, 0.3);
+        prop_ok(few >= 1.0 && many >= 1.0, "imbalance >= 1".into())?;
+        prop_ok(few >= many - 1e-9, format!("few {few} < many {many}"))?;
+        let flat = imbalance::expected_imbalance(experts, ep, 1_000_000, top_k, 0.0);
+        prop_ok(flat < 1.05, format!("uniform large-token imbalance {flat}"))?;
+        Ok(())
+    });
+}
+
+/// Power-of-two divisor enumeration is exact.
+#[test]
+fn prop_pow2_divisors() {
+    prop::check("pow2", 20, |rng| {
+        let n = 1usize << rng.below(7);
+        let d = power_of_two_divisors(n);
+        prop_ok(
+            d.iter().all(|x| n % x == 0) && d.len() == (n.trailing_zeros() as usize + 1),
+            format!("{n}: {d:?}"),
+        )
+    });
+}

@@ -1,0 +1,153 @@
+//! End-to-end runtime tests: load the AOT artifacts through PJRT and
+//! verify that the Rust composition of per-device artifacts is
+//! numerically consistent across parallel strategies.
+//!
+//! Strategy-invariance is the core correctness property of the whole
+//! stack: TP1 (single device, no sharding) must produce the same
+//! logits as TP2/TP4 attention × TP/EP experts, because the sharding +
+//! host combines are mathematically exact re-partitionings. A failure
+//! anywhere — kernel, lowering, manifest, weight slicing, combine —
+//! breaks the equality.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use hap::model::{ModelExecutor, StageStrategy};
+use hap::runtime::literal::argmax_rows;
+use hap::runtime::PjrtRuntime;
+use hap::strategy::ExpertStrategy;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn test_tokens(rt: &PjrtRuntime) -> Vec<i32> {
+    let m = &rt.manifest.model;
+    // Deterministic pseudo-prompt.
+    (0..m.batch * m.prefill_len)
+        .map(|i| ((i * 37 + 11) % m.vocab) as i32)
+        .collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn artifacts_load_and_have_expected_entries() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).expect("load artifacts");
+    for name in [
+        "attn_prefill_tp1",
+        "attn_prefill_tp4",
+        "attn_decode_tp2",
+        "expert_prefill_tp4",
+        "expert_decode_ep4",
+        "expert_prefill_ep2",
+        "embed_prefill",
+        "embed_decode",
+        "head",
+    ] {
+        assert!(rt.has(name), "missing artifact {name}");
+    }
+    assert_eq!(rt.manifest.model.hidden, 256);
+}
+
+#[test]
+fn prefill_logits_invariant_across_strategies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).expect("load artifacts");
+    let tokens = test_tokens(&rt);
+
+    let mut base_exec = ModelExecutor::new(&rt).unwrap();
+    let base = base_exec.prefill(&tokens, &StageStrategy::tp(1)).unwrap();
+
+    let variants = [
+        StageStrategy::tp(2),
+        StageStrategy::tp(4),
+        StageStrategy { attn_tp: 4, expert: ExpertStrategy::new(1, 4) },
+        StageStrategy { attn_tp: 2, expert: ExpertStrategy::new(1, 2) },
+        StageStrategy { attn_tp: 1, expert: ExpertStrategy::new(4, 1) },
+    ];
+    for v in variants {
+        let mut exec = ModelExecutor::new(&rt).unwrap();
+        let got = exec.prefill(&tokens, &v).unwrap();
+        let d = max_abs_diff(&base.data, &got.data);
+        assert!(
+            d < 1e-3,
+            "strategy attn_tp{} expert {} diverges from TP1: max|Δ|={d}",
+            v.attn_tp,
+            v.expert_label()
+        );
+    }
+}
+
+#[test]
+fn greedy_decode_consistent_and_transition_preserves_tokens() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).expect("load artifacts");
+    let tokens = test_tokens(&rt);
+    let b = rt.manifest.model.batch;
+    let steps = 8;
+
+    // Reference: static TP4 for both stages.
+    let run = |prefill_s: StageStrategy, decode_s: StageStrategy| -> Vec<Vec<usize>> {
+        let mut exec = ModelExecutor::new(&rt).unwrap();
+        let logits = exec.prefill(&tokens, &prefill_s).unwrap();
+        let mut out = vec![argmax_rows(&logits)];
+        let mut last: Vec<i32> = out[0].iter().map(|&t| t as i32).collect();
+        for _ in 0..steps {
+            let logits = exec.decode_step(&last, &decode_s).unwrap();
+            let next = argmax_rows(&logits);
+            last = next.iter().map(|&t| t as i32).collect();
+            out.push(next);
+        }
+        out
+    };
+
+    let tp = run(StageStrategy::tp(4), StageStrategy::tp(4));
+    // HAP-style: EP4 experts for prefill, transition to TP4 for decode
+    // (attention stays TP4 — pinned by the KV cache).
+    let hap = run(
+        StageStrategy { attn_tp: 4, expert: ExpertStrategy::new(1, 4) },
+        StageStrategy { attn_tp: 4, expert: ExpertStrategy::new(4, 1) },
+    );
+    assert_eq!(tp, hap, "dynamic parallelism transition changed generated tokens");
+    assert_eq!(tp.len(), steps + 1);
+    assert_eq!(tp[0].len(), b);
+}
+
+#[test]
+fn decode_positions_advance_and_cache_limits_enforced() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).expect("load artifacts");
+    let tokens = test_tokens(&rt);
+    let mut exec = ModelExecutor::new(&rt).unwrap();
+    let s = StageStrategy::tp(2);
+    exec.prefill(&tokens, &s).unwrap();
+    assert_eq!(exec.pos, rt.manifest.model.prefill_len);
+    let last = vec![1i32; rt.manifest.model.batch];
+    exec.decode_step(&last, &s).unwrap();
+    assert_eq!(exec.pos, rt.manifest.model.prefill_len + 1);
+    // Attention strategy is pinned.
+    let other = StageStrategy::tp(4);
+    assert!(exec.decode_step(&last, &other).is_err());
+}
+
+#[test]
+fn unsupported_strategies_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = PjrtRuntime::load(dir).expect("load artifacts");
+    let tokens = test_tokens(&rt);
+    let mut exec = ModelExecutor::new(&rt).unwrap();
+    let bad = StageStrategy { attn_tp: 8, expert: ExpertStrategy::new(1, 1) };
+    assert!(exec.prefill(&tokens, &bad).is_err());
+    let bad2 = StageStrategy { attn_tp: 2, expert: ExpertStrategy::new(2, 2) };
+    assert!(exec.prefill(&tokens, &bad2).is_err());
+}

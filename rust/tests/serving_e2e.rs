@@ -1,0 +1,96 @@
+//! Serving-pipeline end-to-end tests over the real PJRT model:
+//! router → batcher → executor, with the HAP phase-specific plan.
+//! Requires `make artifacts` (skips otherwise).
+
+use hap::runtime::PjrtRuntime;
+use hap::serving::{serve_workload, Request, RouterPolicy, ServeConfig};
+use hap::util::rng::Rng;
+use std::path::Path;
+
+fn artifacts() -> Option<PjrtRuntime> {
+    let p = Path::new("artifacts");
+    if !p.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(PjrtRuntime::load(p).expect("load artifacts"))
+}
+
+fn workload(rt: &PjrtRuntime, n: usize, gen: usize, seed: u64) -> Vec<Request> {
+    let m = &rt.manifest.model;
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|id| {
+            let len = rng.range(4, m.prefill_len);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+            Request::new(id, prompt, gen)
+        })
+        .collect()
+}
+
+#[test]
+fn serves_all_requests_with_exact_token_counts() {
+    let Some(rt) = artifacts() else { return };
+    let config = ServeConfig::tp(2);
+    let report = serve_workload(&rt, &config, workload(&rt, 10, 6, 1)).unwrap();
+    assert_eq!(report.metrics.requests_completed, 10);
+    assert_eq!(report.responses.len(), 10);
+    for r in &report.responses {
+        assert_eq!(r.tokens.len(), 6, "request {} got {} tokens", r.id, r.tokens.len());
+        assert!(r.latency >= r.ttft);
+        assert!(r.tokens.iter().all(|&t| t >= 0 && (t as usize) < rt.manifest.model.vocab));
+    }
+    assert_eq!(report.metrics.tokens_generated, 60);
+    assert!(report.metrics.throughput() > 0.0);
+}
+
+#[test]
+fn hap_plan_and_tp_plan_generate_identical_tokens() {
+    // The dynamic parallelism transition must be invisible in outputs.
+    let Some(rt) = artifacts() else { return };
+    let w1 = workload(&rt, 6, 5, 2);
+    let w2 = workload(&rt, 6, 5, 2);
+    let tp = serve_workload(&rt, &ServeConfig::tp(4), w1).unwrap();
+    let hap = serve_workload(&rt, &ServeConfig::hap_transition(4), w2).unwrap();
+    assert_eq!(hap.metrics.transitions, hap.metrics.batches_prefilled);
+    let mut tp_tokens: Vec<(u64, Vec<i32>)> =
+        tp.responses.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    let mut hap_tokens: Vec<(u64, Vec<i32>)> =
+        hap.responses.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    tp_tokens.sort();
+    hap_tokens.sort();
+    assert_eq!(tp_tokens, hap_tokens, "transition changed generated tokens");
+}
+
+#[test]
+fn partial_batches_and_multiple_batches_work() {
+    let Some(rt) = artifacts() else { return };
+    let b = rt.manifest.model.batch;
+    // 1 more request than one batch → two batches, second partial.
+    let report =
+        serve_workload(&rt, &ServeConfig::tp(1), workload(&rt, b + 1, 3, 3)).unwrap();
+    assert_eq!(report.metrics.requests_completed, b + 1);
+    assert_eq!(report.metrics.batches_prefilled, 2);
+}
+
+#[test]
+fn sjf_policy_served_and_counted() {
+    let Some(rt) = artifacts() else { return };
+    let mut config = ServeConfig::tp(1);
+    config.policy = RouterPolicy::Sjf;
+    let report = serve_workload(&rt, &config, workload(&rt, 5, 4, 4)).unwrap();
+    assert_eq!(report.metrics.requests_completed, 5);
+}
+
+#[test]
+fn generation_capped_by_kv_budget() {
+    let Some(rt) = artifacts() else { return };
+    let m = &rt.manifest.model;
+    let budget = m.max_len - m.prefill_len;
+    // Ask for far more than the cache allows; the batcher must cap it.
+    let report =
+        serve_workload(&rt, &ServeConfig::tp(1), workload(&rt, 2, budget + 50, 5)).unwrap();
+    for r in &report.responses {
+        assert!(r.tokens.len() <= budget, "generated past the KV budget");
+    }
+}
