@@ -7,7 +7,8 @@
 use hap::benchkit::Table;
 use hap::config::{MoEModelConfig, NodeConfig, Scenario};
 use hap::engine::Engine;
-use hap::planner::HapPlanner;
+use hap::planner::{HapPlanner, PLANNER_SEED};
+use hap::sim::LatencyModel;
 use hap::strategy::{AttnStrategy, ExpertStrategy};
 
 fn main() -> anyhow::Result<()> {
@@ -22,7 +23,11 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = Table::new(&["node", "interconnect", "HAP plan", "TP (s)", "HAP (s)", "speedup"]);
     for node in &nodes {
-        let planner = HapPlanner::new(&model, node);
+        // One trained latency model per GPU platform: the 4x and 8x
+        // A100 nodes share the same cached forests instead of each
+        // sweep iteration retraining them.
+        let latency = LatencyModel::cached(&node.gpu, PLANNER_SEED);
+        let planner = HapPlanner::with_latency(&model, node, latency);
         let engine = Engine::new(&model, node);
         let plan = planner.plan(&scenario, scenario.generate)?;
         let n = node.num_devices;

@@ -9,18 +9,22 @@ use common::{report, speedup_row, BATCHES};
 use hap::benchkit::{banner, write_results, Table};
 use hap::config::{MoEModelConfig, NodeConfig, Scenario};
 use hap::engine::Engine;
-use hap::planner::HapPlanner;
+use hap::planner::{HapPlanner, PLANNER_SEED};
+use hap::sim::LatencyModel;
 use hap::strategy::{AttnStrategy, ExpertStrategy};
 use hap::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let model = MoEModelConfig::mixtral_8x7b();
 
-    // (a) + (b): 8-GPU scaling.
+    // (a) + (b): 8-GPU scaling. Warm the per-platform model cache once
+    // up front; every speedup_row's planner then reuses the same
+    // trained forests across the batch sweep instead of retraining.
     for (node, sc) in [
         (NodeConfig::a100x(8), Scenario::fig8_a100()),
         (NodeConfig::v100x(8), Scenario::fig8_v100()),
     ] {
+        let _ = LatencyModel::cached(&node.gpu, PLANNER_SEED);
         let mut rows = Vec::new();
         for b in BATCHES {
             rows.push(speedup_row(&model, &node, &sc.with_batch(b), 1)?);
@@ -40,7 +44,8 @@ fn main() -> anyhow::Result<()> {
     let node = NodeConfig::a6000x(4);
     let sc = Scenario::new("fig8c", 2048, 64, 16);
     let engine = Engine::new(&model, &node);
-    let planner = HapPlanner::new(&model, &node);
+    let planner =
+        HapPlanner::with_latency(&model, &node, LatencyModel::cached(&node.gpu, PLANNER_SEED));
     let plan = planner.plan(&sc, sc.generate)?;
 
     let tp = engine.run_static(&AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), &sc, 1);

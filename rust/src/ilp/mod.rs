@@ -8,6 +8,7 @@
 //! binaries) solve in well under a millisecond.
 
 pub mod bb;
+pub mod reference;
 pub mod simplex;
 
 use std::collections::HashMap;
@@ -177,6 +178,12 @@ impl fmt::Display for Outcome {
 /// Solve a 0-1 ILP exactly (branch & bound with LP-relaxation bounds).
 pub fn solve(problem: &Problem) -> Outcome {
     bb::branch_and_bound(problem)
+}
+
+/// Solve with the pre-optimization reference solver (perf baselines,
+/// cross-checks). Same optima, slower.
+pub fn solve_reference(problem: &Problem) -> Outcome {
+    reference::solve(problem)
 }
 
 #[cfg(test)]

@@ -1,0 +1,398 @@
+//! The pre-optimization ILP solver, kept verbatim as a reference:
+//! per-row `Vec<Vec<f64>>` tableau, Bland's-rule-only pivoting, full
+//! `x ≤ 1` bound rows, and branch & bound that re-solves each node's LP
+//! on pop. `benches/perf_hotpath.rs` measures the production solver
+//! against it, and the property tests cross-check that both return the
+//! same optima on random HAP-shaped problems.
+
+use super::{Outcome, Problem, Sense};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+const INT_TOL: f64 = 1e-6;
+const EPS: f64 = 1e-9;
+
+enum LpResult {
+    Optimal { x: Vec<f64>, objective: f64 },
+    Infeasible,
+}
+
+/// Solve a 0-1 ILP exactly with the reference implementation.
+pub fn solve(problem: &Problem) -> Outcome {
+    branch_and_bound(problem)
+}
+
+struct Node {
+    bound: f64,
+    fixed: Vec<Option<f64>>,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap on bound via reversed comparison.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+fn branch_and_bound(problem: &Problem) -> Outcome {
+    let n = problem.num_vars;
+    let root_fixed = vec![None; n];
+    let mut heap = BinaryHeap::new();
+    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    let mut nodes_explored = 0usize;
+
+    match solve_relaxation(problem, &root_fixed) {
+        LpResult::Infeasible => return Outcome::Infeasible,
+        LpResult::Optimal { x, objective } => {
+            if most_fractional(&x, &root_fixed).is_some() {
+                heap.push(Node { bound: objective, fixed: root_fixed.clone() });
+            } else {
+                return Outcome::Optimal { x, objective, nodes_explored: 1 };
+            }
+        }
+    }
+
+    while let Some(node) = heap.pop() {
+        nodes_explored += 1;
+        if nodes_explored > 200_000 {
+            break; // safety valve; never hit at HAP sizes
+        }
+        if let Some((_, inc_obj)) = &incumbent {
+            if node.bound >= *inc_obj - 1e-12 {
+                continue;
+            }
+        }
+        let LpResult::Optimal { x, objective } = solve_relaxation(problem, &node.fixed) else {
+            continue;
+        };
+        if let Some((_, inc_obj)) = &incumbent {
+            if objective >= *inc_obj - 1e-12 {
+                continue;
+            }
+        }
+        match most_fractional(&x, &node.fixed) {
+            None => {
+                let xi: Vec<f64> = x.iter().map(|&v| if v > 0.5 { 1.0 } else { 0.0 }).collect();
+                if problem.feasible(&xi, 1e-6) {
+                    let obj = problem.objective_value(&xi);
+                    if incumbent.as_ref().map_or(true, |(_, o)| obj < *o) {
+                        incumbent = Some((xi, obj));
+                    }
+                }
+            }
+            Some(branch_var) => {
+                for v in [1.0, 0.0] {
+                    let mut fixed = node.fixed.clone();
+                    fixed[branch_var] = Some(v);
+                    if let LpResult::Optimal { objective: child_bound, .. } =
+                        solve_relaxation(problem, &fixed)
+                    {
+                        let prune = incumbent
+                            .as_ref()
+                            .map_or(false, |(_, o)| child_bound >= *o - 1e-12);
+                        if !prune {
+                            heap.push(Node { bound: child_bound, fixed });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    match incumbent {
+        Some((x, objective)) => Outcome::Optimal { x, objective, nodes_explored },
+        None => Outcome::Infeasible,
+    }
+}
+
+fn most_fractional(x: &[f64], fixed: &[Option<f64>]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &v) in x.iter().enumerate() {
+        if fixed[i].is_some() {
+            continue;
+        }
+        let frac = (v - v.round()).abs();
+        if frac > INT_TOL && best.map_or(true, |(_, f)| frac > f) {
+            best = Some((i, frac));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
+    let n = problem.num_vars;
+    assert_eq!(fixed.len(), n);
+
+    let free: Vec<usize> = (0..n).filter(|&i| fixed[i].is_none()).collect();
+    let col_of: Vec<Option<usize>> = {
+        let mut m = vec![None; n];
+        for (c, &i) in free.iter().enumerate() {
+            m[i] = Some(c);
+        }
+        m
+    };
+    let nf = free.len();
+
+    struct Row {
+        coeffs: Vec<f64>,
+        sense: Sense,
+        rhs: f64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for c in &problem.constraints {
+        let mut coeffs = vec![0.0; nf];
+        let mut rhs = c.rhs;
+        for (&i, &a) in &c.expr.terms {
+            match (col_of[i], fixed[i]) {
+                (Some(col), _) => coeffs[col] += a,
+                (None, Some(v)) => rhs -= a * v,
+                (None, None) => unreachable!(),
+            }
+        }
+        rows.push(Row { coeffs, sense: c.sense, rhs });
+    }
+    for c in 0..nf {
+        let mut coeffs = vec![0.0; nf];
+        coeffs[c] = 1.0;
+        rows.push(Row { coeffs, sense: Sense::Le, rhs: 1.0 });
+    }
+
+    for r in rows.iter_mut() {
+        if r.rhs < 0.0 {
+            for a in &mut r.coeffs {
+                *a = -*a;
+            }
+            r.rhs = -r.rhs;
+            r.sense = match r.sense {
+                Sense::Le => Sense::Ge,
+                Sense::Ge => Sense::Le,
+                Sense::Eq => Sense::Eq,
+            };
+        }
+    }
+
+    let m = rows.len();
+    let mut n_slack = 0;
+    for r in &rows {
+        if r.sense != Sense::Eq {
+            n_slack += 1;
+        }
+    }
+    let mut n_art = 0;
+    for r in &rows {
+        if r.sense != Sense::Le {
+            n_art += 1;
+        }
+    }
+    let total = nf + n_slack + n_art;
+
+    let mut t = vec![vec![0.0; total + 1]; m];
+    let mut basis = vec![usize::MAX; m];
+    let mut s_i = nf;
+    let mut a_i = nf + n_slack;
+    for (r_i, r) in rows.iter().enumerate() {
+        for c in 0..nf {
+            t[r_i][c] = r.coeffs[c];
+        }
+        t[r_i][total] = r.rhs;
+        match r.sense {
+            Sense::Le => {
+                t[r_i][s_i] = 1.0;
+                basis[r_i] = s_i;
+                s_i += 1;
+            }
+            Sense::Ge => {
+                t[r_i][s_i] = -1.0; // surplus
+                s_i += 1;
+                t[r_i][a_i] = 1.0;
+                basis[r_i] = a_i;
+                a_i += 1;
+            }
+            Sense::Eq => {
+                t[r_i][a_i] = 1.0;
+                basis[r_i] = a_i;
+                a_i += 1;
+            }
+        }
+    }
+
+    if n_art > 0 {
+        let mut z = vec![0.0; total + 1];
+        for c in nf + n_slack..total {
+            z[c] = 1.0;
+        }
+        for (r_i, &b) in basis.iter().enumerate() {
+            if b >= nf + n_slack {
+                for c in 0..=total {
+                    z[c] -= t[r_i][c];
+                }
+            }
+        }
+        if !pivot_loop(&mut t, &mut z, &mut basis, total) {
+            return LpResult::Infeasible;
+        }
+        if -z[total] > 1e-7 {
+            return LpResult::Infeasible;
+        }
+        for r_i in 0..m {
+            if basis[r_i] >= nf + n_slack {
+                if let Some(c) = (0..nf + n_slack).find(|&c| t[r_i][c].abs() > EPS) {
+                    do_pivot(&mut t, &mut basis, r_i, c, total);
+                }
+            }
+        }
+    }
+
+    let mut z = vec![0.0; total + 1];
+    for (&i, &cf) in &problem.objective.terms {
+        if let Some(col) = col_of[i] {
+            z[col] = cf;
+        }
+    }
+    for c in nf + n_slack..total {
+        z[c] = 1e18;
+    }
+    for (r_i, &b) in basis.iter().enumerate() {
+        if z[b].abs() > EPS {
+            let coef = z[b];
+            for c in 0..=total {
+                z[c] -= coef * t[r_i][c];
+            }
+        }
+    }
+    if !pivot_loop(&mut t, &mut z, &mut basis, total) {
+        return LpResult::Infeasible;
+    }
+
+    let mut xf = vec![0.0; nf];
+    for (r_i, &b) in basis.iter().enumerate() {
+        if b < nf {
+            xf[b] = t[r_i][total];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for (c, &i) in free.iter().enumerate() {
+        x[i] = xf[c].clamp(0.0, 1.0);
+    }
+    for i in 0..n {
+        if let Some(v) = fixed[i] {
+            x[i] = v;
+        }
+    }
+    let objective = problem.objective.eval(&x);
+    LpResult::Optimal { x, objective }
+}
+
+fn pivot_loop(t: &mut [Vec<f64>], z: &mut [f64], basis: &mut [usize], total: usize) -> bool {
+    let m = t.len();
+    let max_iters = 50 * (m + total);
+    for _ in 0..max_iters {
+        // Bland's rule: smallest-index entering column with negative
+        // reduced cost.
+        let Some(enter) = (0..total).find(|&c| z[c] < -1e-9) else {
+            return true; // optimal
+        };
+        let mut leave: Option<usize> = None;
+        let mut best = f64::INFINITY;
+        for r in 0..m {
+            if t[r][enter] > EPS {
+                let ratio = t[r][total] / t[r][enter];
+                if ratio < best - EPS
+                    || (ratio < best + EPS && leave.map_or(true, |l| basis[r] < basis[l]))
+                {
+                    best = ratio;
+                    leave = Some(r);
+                }
+            }
+        }
+        let Some(leave) = leave else {
+            return false; // unbounded
+        };
+        do_pivot(t, basis, leave, enter, total);
+        let f = z[enter];
+        if f.abs() > EPS {
+            for c in 0..=total {
+                z[c] -= f * t[leave][c];
+            }
+        }
+    }
+    true
+}
+
+fn do_pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
+    let piv = t[row][col];
+    for c in 0..=total {
+        t[row][c] /= piv;
+    }
+    for r in 0..t.len() {
+        if r != row && t[r][col].abs() > EPS {
+            let f = t[r][col];
+            for c in 0..=total {
+                t[r][c] -= f * t[row][c];
+            }
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ilp::{solve, LinExpr, Problem, Sense};
+    use crate::util::rng::Rng;
+
+    /// The production solver and the reference solver must agree on
+    /// random problems (same optimum; both or neither infeasible).
+    #[test]
+    fn reference_and_production_solvers_agree() {
+        let mut rng = Rng::new(0xBEEF);
+        for trial in 0..40 {
+            let n = rng.range(3, 10);
+            let mut p = Problem::new();
+            let vars = p.binaries("x", n);
+            for &v in &vars {
+                p.set_objective_term(v, rng.range_f64(-8.0, 8.0));
+            }
+            for ci in 0..rng.range(1, 4) {
+                let mut e = LinExpr::new();
+                for &v in &vars {
+                    if rng.chance(0.6) {
+                        e.add_term(v, rng.range_f64(-3.0, 5.0));
+                    }
+                }
+                p.constrain(&format!("c{ci}"), e, Sense::Le, rng.range_f64(0.0, 6.0));
+            }
+            if rng.chance(0.6) {
+                let k = rng.range(2, n);
+                p.exactly_one("pick", &vars[0..k]);
+            }
+            if rng.chance(0.5) {
+                let a = vars[rng.below(n)];
+                let b = vars[rng.below(n)];
+                if a != b {
+                    let y = p.and_var("y", a, b);
+                    p.set_objective_term(y, rng.range_f64(-1.0, 1.0));
+                }
+            }
+            let fast = solve(&p);
+            let slow = super::solve(&p);
+            match (fast.optimal(), slow.optimal()) {
+                (None, None) => {}
+                (Some((_, f)), Some((_, s))) => {
+                    assert!((f - s).abs() < 1e-6, "trial {trial}: fast {f} vs reference {s}");
+                }
+                (f, s) => panic!("trial {trial}: feasibility mismatch {f:?} vs {s:?}"),
+            }
+        }
+    }
+}

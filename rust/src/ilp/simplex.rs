@@ -1,11 +1,24 @@
 //! Two-phase dense simplex for LP relaxations of 0-1 problems.
 //!
 //! Solves `min cᵀx  s.t.  A·x {≤,=,≥} b,  0 ≤ x ≤ 1` by converting to
-//! standard form with slack/surplus variables, using explicit upper
-//! bounds as additional `x_i ≤ 1` rows (simple and robust at the sizes
-//! HAP needs: tens of variables, hundreds of rows). Phase 1 minimizes
+//! standard form with slack/surplus variables. Phase 1 minimizes the
 //! artificial-variable sum; Phase 2 optimizes the true objective.
-//! Bland's rule guards against cycling.
+//!
+//! This is the planner's second hot loop (every branch-and-bound node
+//! solves one of these), so the implementation is laid out for speed:
+//!
+//! - the tableau is a **single flattened row-major `Vec<f64>`** (not a
+//!   `Vec<Vec<f64>>`), so pivots stream contiguous memory and each LP
+//!   does two allocations instead of one per row;
+//! - explicit `x_i ≤ 1` rows are **elided when provably redundant** —
+//!   a variable in an all-ones `Σx = 1` one-hot row, or one bounded by
+//!   a `y − a ≤ 0` AND-linearization row whose bounder is itself
+//!   bounded, can never exceed 1. In HAP formulations this removes
+//!   every upper-bound row;
+//! - the entering column uses **Dantzig's most-negative rule**, which
+//!   takes far fewer pivots than Bland's rule on these LPs; after an
+//!   iteration budget it falls back to Bland's rule, which guarantees
+//!   termination (no cycling), so exactness is unaffected.
 
 use super::{Problem, Sense};
 
@@ -18,14 +31,76 @@ pub enum LpResult {
 
 const EPS: f64 = 1e-9;
 
+/// Variables whose `x ≤ 1` bound is implied by the constraints:
+/// members of all-ones `Σ x = 1` rows, plus (transitively) variables
+/// `y` with a `y − a ≤ 0` row where `a` is already known bounded.
+/// Depends only on the problem, not on branch fixings — branch & bound
+/// computes it once and passes it to [`solve_relaxation_with`].
+pub fn implied_ub(problem: &Problem) -> Vec<bool> {
+    let n = problem.num_vars;
+    let mut bounded = vec![false; n];
+    // Seed: one-hot equality rows (all coefficients exactly 1, rhs 1).
+    for c in &problem.constraints {
+        if c.sense == Sense::Eq
+            && c.rhs == 1.0
+            && !c.expr.terms.is_empty()
+            && c.expr.terms.values().all(|&a| a == 1.0)
+        {
+            for &i in c.expr.terms.keys() {
+                bounded[i] = true;
+            }
+        }
+    }
+    // Propagate through `y - a ≤ 0` rows (AND-var linearizations).
+    // Every non-implied variable still gets an explicit bound row, so
+    // `a` being non-implied is also fine — but propagating lets whole
+    // chains drop their rows. A couple of passes reach the fixpoint.
+    loop {
+        let mut changed = false;
+        for c in &problem.constraints {
+            if c.sense != Sense::Le || c.rhs != 0.0 || c.expr.terms.len() != 2 {
+                continue;
+            }
+            let mut pos: Option<usize> = None;
+            let mut neg: Option<usize> = None;
+            for (&i, &a) in &c.expr.terms {
+                if a == 1.0 {
+                    pos = Some(i);
+                } else if a == -1.0 {
+                    neg = Some(i);
+                }
+            }
+            if let (Some(y), Some(a)) = (pos, neg) {
+                if bounded[a] && !bounded[y] {
+                    bounded[y] = true;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    bounded
+}
+
 /// Solve the LP relaxation of `problem` with extra variable fixings:
 /// `fixed[i] = Some(v)` pins x_i = v (used by branch & bound).
 pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
+    solve_relaxation_with(problem, fixed, &implied_ub(problem))
+}
+
+/// [`solve_relaxation`] with a precomputed [`implied_ub`] mask (branch
+/// & bound amortizes the analysis over all of a problem's LP solves).
+pub fn solve_relaxation_with(
+    problem: &Problem,
+    fixed: &[Option<f64>],
+    implied: &[bool],
+) -> LpResult {
     let n = problem.num_vars;
     assert_eq!(fixed.len(), n);
+    assert_eq!(implied.len(), n);
 
-    // Collect rows: constraints + upper bounds x_i ≤ 1 for unfixed vars.
-    // Fixed vars are substituted out (their contribution moves to rhs).
     let free: Vec<usize> = (0..n).filter(|&i| fixed[i].is_none()).collect();
     let col_of: Vec<Option<usize>> = {
         let mut m = vec![None; n];
@@ -41,7 +116,7 @@ pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
         sense: Sense,
         rhs: f64,
     }
-    let mut rows: Vec<Row> = Vec::new();
+    let mut rows: Vec<Row> = Vec::with_capacity(problem.constraints.len() + nf);
     for c in &problem.constraints {
         let mut coeffs = vec![0.0; nf];
         let mut rhs = c.rhs;
@@ -54,7 +129,12 @@ pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
         }
         rows.push(Row { coeffs, sense: c.sense, rhs });
     }
-    for c in 0..nf {
+    // Upper bounds x_i ≤ 1 only where the constraints don't already
+    // imply them.
+    for (c, &i) in free.iter().enumerate() {
+        if implied[i] {
+            continue;
+        }
         let mut coeffs = vec![0.0; nf];
         coeffs[c] = 1.0;
         rows.push(Row { coeffs, sense: Sense::Le, rhs: 1.0 });
@@ -91,53 +171,55 @@ pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
         }
     }
     let total = nf + n_slack + n_art;
+    let stride = total + 1; // last column = rhs
 
-    // Tableau: m rows × (total + 1) columns (last = rhs).
-    let mut t = vec![vec![0.0; total + 1]; m];
+    // Flattened row-major tableau: row r occupies t[r*stride..(r+1)*stride].
+    let mut t = vec![0.0f64; m * stride];
     let mut basis = vec![usize::MAX; m];
     let mut s_i = nf;
     let mut a_i = nf + n_slack;
     for (r_i, r) in rows.iter().enumerate() {
-        for c in 0..nf {
-            t[r_i][c] = r.coeffs[c];
-        }
-        t[r_i][total] = r.rhs;
+        let row = &mut t[r_i * stride..(r_i + 1) * stride];
+        row[..nf].copy_from_slice(&r.coeffs);
+        row[total] = r.rhs;
         match r.sense {
             Sense::Le => {
-                t[r_i][s_i] = 1.0;
+                row[s_i] = 1.0;
                 basis[r_i] = s_i;
                 s_i += 1;
             }
             Sense::Ge => {
-                t[r_i][s_i] = -1.0; // surplus
+                row[s_i] = -1.0; // surplus
                 s_i += 1;
-                t[r_i][a_i] = 1.0;
+                row[a_i] = 1.0;
                 basis[r_i] = a_i;
                 a_i += 1;
             }
             Sense::Eq => {
-                t[r_i][a_i] = 1.0;
+                row[a_i] = 1.0;
                 basis[r_i] = a_i;
                 a_i += 1;
             }
         }
     }
+    let mut scratch = vec![0.0f64; stride];
 
     // Phase 1: minimize sum of artificials.
     if n_art > 0 {
-        let mut z = vec![0.0; total + 1];
+        let mut z = vec![0.0; stride];
         for c in nf + n_slack..total {
             z[c] = 1.0;
         }
         // Make reduced costs consistent with the basis (price out).
         for (r_i, &b) in basis.iter().enumerate() {
             if b >= nf + n_slack {
-                for c in 0..=total {
-                    z[c] -= t[r_i][c];
+                let row = &t[r_i * stride..(r_i + 1) * stride];
+                for (zc, rc) in z.iter_mut().zip(row) {
+                    *zc -= rc;
                 }
             }
         }
-        if !pivot_loop(&mut t, &mut z, &mut basis, total) {
+        if !pivot_loop(&mut t, &mut z, &mut basis, total, &mut scratch) {
             return LpResult::Infeasible; // unbounded phase 1 can't happen
         }
         if -z[total] > 1e-7 {
@@ -146,8 +228,9 @@ pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
         // Drive remaining artificials out of the basis when possible.
         for r_i in 0..m {
             if basis[r_i] >= nf + n_slack {
-                if let Some(c) = (0..nf + n_slack).find(|&c| t[r_i][c].abs() > EPS) {
-                    do_pivot(&mut t, &mut basis, r_i, c, total);
+                let row = &t[r_i * stride..(r_i + 1) * stride];
+                if let Some(c) = (0..nf + n_slack).find(|&c| row[c].abs() > EPS) {
+                    do_pivot(&mut t, &mut basis, r_i, c, stride, &mut scratch);
                 }
             }
         }
@@ -155,26 +238,26 @@ pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
 
     // Phase 2: true objective over free vars only (fixed contribute a
     // constant added back at the end).
-    let mut z = vec![0.0; total + 1];
+    let mut z = vec![0.0; stride];
     for (&i, &cf) in &problem.objective.terms {
         if let Some(col) = col_of[i] {
             z[col] = cf;
         }
     }
-    // Zero out artificial columns so they never re-enter.
-    // (Columns stay in the tableau; give them +inf-ish cost.)
+    // Artificial columns must never re-enter: effectively +inf cost.
     for c in nf + n_slack..total {
         z[c] = 1e18;
     }
     for (r_i, &b) in basis.iter().enumerate() {
         if z[b].abs() > EPS {
             let coef = z[b];
-            for c in 0..=total {
-                z[c] -= coef * t[r_i][c];
+            let row = &t[r_i * stride..(r_i + 1) * stride];
+            for (zc, rc) in z.iter_mut().zip(row) {
+                *zc -= coef * rc;
             }
         }
     }
-    if !pivot_loop(&mut t, &mut z, &mut basis, total) {
+    if !pivot_loop(&mut t, &mut z, &mut basis, total, &mut scratch) {
         // Unbounded below can't occur with 0 ≤ x ≤ 1 box, but guard.
         return LpResult::Infeasible;
     }
@@ -183,7 +266,7 @@ pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
     let mut xf = vec![0.0; nf];
     for (r_i, &b) in basis.iter().enumerate() {
         if b < nf {
-            xf[b] = t[r_i][total];
+            xf[b] = t[r_i * stride + total];
         }
     }
     let mut x = vec![0.0; n];
@@ -200,27 +283,47 @@ pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
 }
 
 /// Run simplex pivots until optimal. Returns false on unboundedness.
+///
+/// Entering rule: Dantzig (most negative reduced cost) for speed, with
+/// a switch to Bland's rule (smallest index) after `bland_after`
+/// iterations to guarantee finite termination on degenerate LPs.
 fn pivot_loop(
-    t: &mut [Vec<f64>],
+    t: &mut [f64],
     z: &mut [f64],
     basis: &mut [usize],
     total: usize,
+    scratch: &mut [f64],
 ) -> bool {
-    let m = t.len();
+    let stride = total + 1;
+    let m = t.len() / stride;
     let max_iters = 50 * (m + total);
-    for _ in 0..max_iters {
-        // Bland's rule: smallest-index entering column with negative
-        // reduced cost.
-        let Some(enter) = (0..total).find(|&c| z[c] < -1e-9) else {
+    let bland_after = 2 * (m + total);
+    for iter in 0..max_iters {
+        let enter = if iter < bland_after {
+            // Dantzig: most negative reduced cost.
+            let mut best: Option<(usize, f64)> = None;
+            for (c, &zc) in z[..total].iter().enumerate() {
+                if zc < -1e-9 && best.map_or(true, |(_, bz)| zc < bz) {
+                    best = Some((c, zc));
+                }
+            }
+            best.map(|(c, _)| c)
+        } else {
+            // Bland: smallest-index negative column (anti-cycling).
+            (0..total).find(|&c| z[c] < -1e-9)
+        };
+        let Some(enter) = enter else {
             return true; // optimal
         };
         // Ratio test.
         let mut leave: Option<usize> = None;
         let mut best = f64::INFINITY;
         for r in 0..m {
-            if t[r][enter] > EPS {
-                let ratio = t[r][total] / t[r][enter];
-                if ratio < best - EPS || (ratio < best + EPS && leave.map_or(true, |l| basis[r] < basis[l]))
+            let row = &t[r * stride..(r + 1) * stride];
+            if row[enter] > EPS {
+                let ratio = row[total] / row[enter];
+                if ratio < best - EPS
+                    || (ratio < best + EPS && leave.map_or(true, |l| basis[r] < basis[l]))
                 {
                     best = ratio;
                     leave = Some(r);
@@ -230,42 +333,51 @@ fn pivot_loop(
         let Some(leave) = leave else {
             return false; // unbounded
         };
-        do_pivot_with_z(t, z, basis, leave, enter, total);
+        do_pivot(t, basis, leave, enter, stride, scratch);
+        let f = z[enter];
+        if f.abs() > EPS {
+            for (zc, rc) in z.iter_mut().zip(&scratch[..stride]) {
+                *zc -= f * rc;
+            }
+        }
     }
     true // iteration cap: treat as converged (tolerances loose enough)
 }
 
-fn do_pivot(t: &mut [Vec<f64>], basis: &mut [usize], row: usize, col: usize, total: usize) {
-    let piv = t[row][col];
-    for c in 0..=total {
-        t[row][c] /= piv;
+/// Pivot on (row, col): normalize the pivot row, eliminate the column
+/// from every other row. The normalized pivot row is left in `scratch`
+/// so callers can update their reduced-cost vector without re-reading
+/// the tableau.
+fn do_pivot(
+    t: &mut [f64],
+    basis: &mut [usize],
+    row: usize,
+    col: usize,
+    stride: usize,
+    scratch: &mut [f64],
+) {
+    let m = t.len() / stride;
+    {
+        let prow = &mut t[row * stride..(row + 1) * stride];
+        let piv = prow[col];
+        for v in prow.iter_mut() {
+            *v /= piv;
+        }
+        scratch[..stride].copy_from_slice(prow);
     }
-    for r in 0..t.len() {
-        if r != row && t[r][col].abs() > EPS {
-            let f = t[r][col];
-            for c in 0..=total {
-                t[r][c] -= f * t[row][c];
+    for r in 0..m {
+        if r == row {
+            continue;
+        }
+        let rrow = &mut t[r * stride..(r + 1) * stride];
+        let f = rrow[col];
+        if f.abs() > EPS {
+            for (v, p) in rrow.iter_mut().zip(&scratch[..stride]) {
+                *v -= f * p;
             }
         }
     }
     basis[row] = col;
-}
-
-fn do_pivot_with_z(
-    t: &mut [Vec<f64>],
-    z: &mut [f64],
-    basis: &mut [usize],
-    row: usize,
-    col: usize,
-    total: usize,
-) {
-    do_pivot(t, basis, row, col, total);
-    let f = z[col];
-    if f.abs() > EPS {
-        for c in 0..=total {
-            z[c] -= f * t[row][c];
-        }
-    }
 }
 
 #[cfg(test)]
@@ -342,6 +454,36 @@ mod tests {
         p.constrain("lo", LinExpr::sum(&[a, b]), Sense::Ge, 1.2);
         match solve_relaxation(&p, &[None, None]) {
             LpResult::Optimal { objective, .. } => assert!((objective - 1.2).abs() < 1e-6),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn one_hot_members_have_implied_bounds() {
+        let mut p = Problem::new();
+        let vars = p.binaries("x", 3);
+        p.exactly_one("pick", &vars);
+        let y = p.and_var("y", vars[0], vars[1]);
+        let implied = implied_ub(&p);
+        for v in &vars {
+            assert!(implied[v.0], "one-hot member should be implied");
+        }
+        assert!(implied[y.0], "AND var bounded through its .le rows");
+    }
+
+    #[test]
+    fn implied_bound_elision_keeps_objective_below_one() {
+        // max x0 (min -x0) with only a one-hot: the elided x ≤ 1 row
+        // must still be enforced through the one-hot equality.
+        let mut p = Problem::new();
+        let vars = p.binaries("x", 2);
+        p.exactly_one("pick", &vars);
+        p.set_objective_term(vars[0], -1.0);
+        match solve_relaxation(&p, &[None, None]) {
+            LpResult::Optimal { x, objective } => {
+                assert!((objective + 1.0).abs() < 1e-6);
+                assert!(x[0] <= 1.0 + 1e-9);
+            }
             _ => panic!(),
         }
     }

@@ -14,20 +14,51 @@
 //! (i,j) pair) are linearized with AND variables, so the formulation is
 //! a faithful 0-1 ILP, solved exactly by [`crate::ilp`]. The brute-force
 //! cross-check in the tests guarantees the linearization is tight.
+//!
+//! # Cost-table hot path
+//!
+//! `cost_tables` is the planner's inner loop: it evaluates the latency
+//! model over every strategy/stage/pair point. It is built on the
+//! **batched** simulation API — one `predict_batch` walk per regressor
+//! per table block instead of per-entry forest walks — and the comm
+//! tables no longer pay for the unused compute predictions the old
+//! per-pair `layer_latency` calls made. The four independent table
+//! blocks (attention, expert, comm-prefill, comm-decode) run under
+//! `std::thread::scope` when the pair grid is large enough to amortize
+//! spawning; the switching matrix (which needs the prefill tables for
+//! its overlap budgets) follows as one batched `TransitionModel::
+//! cost_matrix` call. `cost_tables_scalar` preserves the original
+//! serial per-entry implementation as the reference for equivalence
+//! tests and the perf-hotpath before/after measurement.
+//!
+//! Trained latency models are shared per platform through
+//! [`LatencyModel::cached`], so sweeps and the serving router construct
+//! planners without retraining forests.
 
 pub mod plan;
 
 pub use plan::HybridPlan;
 
+use crate::cluster::imbalance;
 use crate::config::{hardware::NodeConfig, model::MoEModelConfig, scenario::Scenario};
 use crate::ilp::{self, LinExpr, Problem, Sense};
-use crate::sim::flops::Stage;
+use crate::sim::comm;
+use crate::sim::flops::{self, OpCost, Stage};
 use crate::sim::latency::{LatencyModel, ModuleLatency};
 use crate::sim::memory::MemoryModel;
 use crate::strategy::{AttnStrategy, ExpertStrategy, SearchSpace};
 use crate::transition::{TransitionCost, TransitionModel};
 use crate::Result;
+use std::sync::Arc;
 use std::time::Instant;
+
+/// Seed used for planner-trained latency models (kept stable so the
+/// per-platform model cache is shared across planners).
+pub const PLANNER_SEED: u64 = 0x4A9;
+
+/// Minimum (K_a × K_e) pair-grid size before `cost_tables` spawns
+/// scoped threads for the independent table blocks.
+const PARALLEL_PAIR_THRESHOLD: usize = 8;
 
 /// Per-candidate cost tables the ILP consumes (also useful diagnostics).
 #[derive(Debug, Clone)]
@@ -49,20 +80,21 @@ pub struct CostTables {
 pub struct HapPlanner<'a> {
     pub model: &'a MoEModelConfig,
     pub node: &'a NodeConfig,
-    pub latency: LatencyModel,
+    pub latency: Arc<LatencyModel>,
 }
 
 impl<'a> HapPlanner<'a> {
-    /// Train the simulation models for this platform (milliseconds).
+    /// Plan against the platform's (cached) simulation models — trains
+    /// them on first use for a platform, reuses them afterwards.
     pub fn new(model: &'a MoEModelConfig, node: &'a NodeConfig) -> Self {
-        HapPlanner { model, node, latency: LatencyModel::train(&node.gpu, 0x4A9) }
+        HapPlanner { model, node, latency: LatencyModel::cached(&node.gpu, PLANNER_SEED) }
     }
 
-    /// Reuse an existing latency model (avoids retraining in sweeps).
+    /// Reuse an existing latency model (sweeps, serving, tests).
     pub fn with_latency(
         model: &'a MoEModelConfig,
         node: &'a NodeConfig,
-        latency: LatencyModel,
+        latency: Arc<LatencyModel>,
     ) -> Self {
         HapPlanner { model, node, latency }
     }
@@ -72,17 +104,140 @@ impl<'a> HapPlanner<'a> {
         SearchSpace::enumerate(self.model, self.node, scenario)
     }
 
-    /// Evaluate all cost tables for the ILP.
+    /// Evaluate all cost tables for the ILP on the batched simulation
+    /// API, with independent blocks in parallel (see module docs).
     pub fn cost_tables(&self, space: &SearchSpace, scenario: &Scenario) -> CostTables {
-        let lm = &self.latency;
+        let lm = &*self.latency;
         let m = self.model;
         let b = scenario.batch;
         // Decode context representative point: mid-generation.
         let decode_ctx = scenario.context + scenario.generate / 2;
 
-        // Module compute times are strategy-separable; comm is pairwise.
+        // Compute terms are strategy-separable: batch each table as one
+        // vector of op costs → one forest walk per regressor per stage.
+        let attn_tables = || -> (Vec<f64>, Vec<f64>) {
+            let pre: Vec<OpCost> = space
+                .attn
+                .iter()
+                .map(|a| flops::attention_cost(m, a, Stage::Prefill, b, scenario.context))
+                .collect();
+            let dec: Vec<OpCost> = space
+                .attn
+                .iter()
+                .map(|a| flops::attention_cost(m, a, Stage::Decode, b, decode_ctx))
+                .collect();
+            (lm.attn_time_batch(&pre), lm.attn_time_batch(&dec))
+        };
+        let expert_tables = || -> (Vec<f64>, Vec<f64>) {
+            let cost_for = |e: &ExpertStrategy, stage: Stage, seq: usize| {
+                let tokens = match stage {
+                    Stage::Prefill => b * seq,
+                    Stage::Decode => b,
+                };
+                let imb = imbalance::expected_imbalance(
+                    m.num_experts,
+                    e.ep,
+                    tokens,
+                    m.top_k,
+                    imbalance::DEFAULT_SKEW,
+                );
+                flops::expert_cost(m, e, stage, b, seq, imb)
+            };
+            let pre: Vec<OpCost> = space
+                .expert
+                .iter()
+                .map(|e| cost_for(e, Stage::Prefill, scenario.context))
+                .collect();
+            let dec: Vec<OpCost> =
+                space.expert.iter().map(|e| cost_for(e, Stage::Decode, decode_ctx)).collect();
+            (lm.expert_time_batch(&pre), lm.expert_time_batch(&dec))
+        };
+        // Comm is pairwise: flatten every pair's event schedule into one
+        // ρ batch, then reduce back per pair. (The old path evaluated a
+        // full layer_latency per pair, paying two compute predictions
+        // per entry just to read `.comm`.)
+        let comm_table = |stage: Stage, seq: usize| -> Vec<Vec<f64>> {
+            let ke = space.k_e();
+            let mut events = Vec::new();
+            let mut offsets = Vec::with_capacity(space.k_a() * ke + 1);
+            offsets.push(0usize);
+            for a in &space.attn {
+                for e in &space.expert {
+                    events.extend(comm::layer_comm_events(m, a, e, stage, b, seq));
+                    offsets.push(events.len());
+                }
+            }
+            let times = lm.comm_time_batch(&events);
+            (0..space.k_a())
+                .map(|k| {
+                    (0..ke)
+                        .map(|i| {
+                            let s = k * ke + i;
+                            times[offsets[s]..offsets[s + 1]].iter().sum()
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+
+        let ((attn_prefill, attn_decode), (expert_prefill, expert_decode), comm_prefill, comm_decode) =
+            if space.k_a() * space.k_e() >= PARALLEL_PAIR_THRESHOLD {
+                std::thread::scope(|s| {
+                    let pre = s.spawn(|| comm_table(Stage::Prefill, scenario.context));
+                    let dec = s.spawn(|| comm_table(Stage::Decode, decode_ctx));
+                    let at = attn_tables();
+                    let et = expert_tables();
+                    (
+                        at,
+                        et,
+                        pre.join().expect("comm-prefill table thread"),
+                        dec.join().expect("comm-decode table thread"),
+                    )
+                })
+            } else {
+                (
+                    attn_tables(),
+                    expert_tables(),
+                    comm_table(Stage::Prefill, scenario.context),
+                    comm_table(Stage::Decode, decode_ctx),
+                )
+            };
+
+        // Switching costs: overlap budget is the whole prefill stage
+        // time under (probe attention, source expert strategy) — the
+        // pipeline overlaps upload with prefill compute (paper Fig 3).
+        let tm = TransitionModel::new(m, &self.node.gpu);
+        let nl = m.layers as f64;
+        let budgets: Vec<f64> = (0..space.k_e())
+            .map(|i| nl * (attn_prefill[0] + expert_prefill[i] + comm_prefill[0][i]))
+            .collect();
+        let switching = tm.cost_matrix(lm, &space.expert, &budgets);
+
+        CostTables {
+            attn_prefill,
+            attn_decode,
+            expert_prefill,
+            expert_decode,
+            comm_prefill,
+            comm_decode,
+            switching,
+        }
+    }
+
+    /// The original serial, per-entry cost-table build (uncached scalar
+    /// forest walks, full `layer_latency` per pair). Retained as the
+    /// reference implementation: equivalence tests pin `cost_tables`
+    /// to it and `benches/perf_hotpath.rs` uses it as the before
+    /// measurement. Combine with `LatencyModel::set_memo_enabled(false)`
+    /// to reproduce pre-batching performance exactly.
+    pub fn cost_tables_scalar(&self, space: &SearchSpace, scenario: &Scenario) -> CostTables {
+        let lm = &*self.latency;
+        let m = self.model;
+        let b = scenario.batch;
+        let decode_ctx = scenario.context + scenario.generate / 2;
+
         let eval = |attn: &AttnStrategy, expert: &ExpertStrategy, stage: Stage, seq: usize| {
-            lm.layer_latency(m, attn, expert, stage, b, seq)
+            lm.layer_latency_uncached(m, attn, expert, stage, b, seq)
         };
 
         // For separable tables, pair each candidate with a fixed partner
@@ -133,9 +288,6 @@ impl<'a> HapPlanner<'a> {
             })
             .collect();
 
-        // Switching costs: overlap budget is the whole prefill stage
-        // time under (probe attention, source expert strategy) — the
-        // pipeline overlaps upload with prefill compute (paper Fig 3).
         let tm = TransitionModel::new(m, &self.node.gpu);
         let nl = m.layers as f64;
         let switching: Vec<Vec<TransitionCost>> = space
@@ -143,15 +295,9 @@ impl<'a> HapPlanner<'a> {
             .iter()
             .enumerate()
             .map(|(i, from)| {
-                let prefill_budget = nl
-                    * (attn_prefill[0]
-                        + expert_prefill[i]
-                        + comm_prefill[0][i]);
-                space
-                    .expert
-                    .iter()
-                    .map(|to| tm.cost(&self.latency, from, to, prefill_budget))
-                    .collect()
+                let prefill_budget =
+                    nl * (attn_prefill[0] + expert_prefill[i] + comm_prefill[0][i]);
+                space.expert.iter().map(|to| tm.cost(lm, from, to, prefill_budget)).collect()
             })
             .collect();
 
@@ -255,24 +401,19 @@ impl<'a> HapPlanner<'a> {
         (p, IlpVars { s, ei, ej })
     }
 
-    /// Run the full HAP search: enumerate → cost → formulate → solve.
-    ///
-    /// `s_output` overrides the scenario's generation length when the
-    /// caller wants a custom horizon (the benches sweep it); pass
-    /// `scenario.generate` normally.
-    pub fn plan(&self, scenario: &Scenario, _s_output: usize) -> Result<HybridPlan> {
-        let t0 = Instant::now();
-        let space = self.search_space(scenario);
-        if !space.is_feasible() {
-            anyhow::bail!(
-                "no feasible parallel strategy for {} on {}",
-                self.model.name,
-                self.node.label()
-            );
-        }
-        let tables = self.cost_tables(&space, scenario);
-        let (problem, vars) = self.formulate(&space, &tables, scenario);
-        let outcome = ilp::solve(&problem);
+    /// Shared tail of `plan` / `plan_reference`: formulate, solve, and
+    /// assemble the winning plan from prebuilt tables.
+    fn plan_from_tables(
+        &self,
+        space: &SearchSpace,
+        tables: &CostTables,
+        scenario: &Scenario,
+        t0: Instant,
+        reference_solver: bool,
+    ) -> Result<HybridPlan> {
+        let (problem, vars) = self.formulate(space, tables, scenario);
+        let outcome =
+            if reference_solver { ilp::solve_reference(&problem) } else { ilp::solve(&problem) };
         let Some((x, objective)) = outcome.optimal() else {
             anyhow::bail!("ILP infeasible for {} on {}", self.model.name, self.node.label());
         };
@@ -309,6 +450,44 @@ impl<'a> HapPlanner<'a> {
             k_a: space.k_a(),
             k_e: space.k_e(),
         })
+    }
+
+    /// Run the full HAP search: enumerate → cost → formulate → solve.
+    ///
+    /// `s_output` overrides the scenario's generation length when the
+    /// caller wants a custom horizon (the benches sweep it); pass
+    /// `scenario.generate` normally.
+    pub fn plan(&self, scenario: &Scenario, _s_output: usize) -> Result<HybridPlan> {
+        let t0 = Instant::now();
+        let space = self.search_space(scenario);
+        if !space.is_feasible() {
+            anyhow::bail!(
+                "no feasible parallel strategy for {} on {}",
+                self.model.name,
+                self.node.label()
+            );
+        }
+        let tables = self.cost_tables(&space, scenario);
+        self.plan_from_tables(&space, &tables, scenario, t0, false)
+    }
+
+    /// `plan` over the pre-optimization code path end to end: scalar
+    /// serial cost tables AND the reference ILP solver. Used as the
+    /// before measurement in `benches/perf_hotpath.rs`. Selects the
+    /// same plan (tables are numerically identical; both solvers are
+    /// exact).
+    pub fn plan_reference(&self, scenario: &Scenario) -> Result<HybridPlan> {
+        let t0 = Instant::now();
+        let space = self.search_space(scenario);
+        if !space.is_feasible() {
+            anyhow::bail!(
+                "no feasible parallel strategy for {} on {}",
+                self.model.name,
+                self.node.label()
+            );
+        }
+        let tables = self.cost_tables_scalar(&space, scenario);
+        self.plan_from_tables(&space, &tables, scenario, t0, true)
     }
 
     /// Predicted end-to-end latency for a *fixed* strategy triple
@@ -476,5 +655,55 @@ mod tests {
         let planner = HapPlanner::new(&m, &node);
         let plan = planner.plan(&Scenario::short_extended(), 2048).unwrap();
         assert_eq!(plan.expert_decode.ep, 1, "decode should be TP: {plan}");
+    }
+
+    #[test]
+    fn batched_tables_match_scalar_reference() {
+        // The vectorized/parallel cost tables must be numerically
+        // identical to the original per-entry build, entry for entry.
+        let m = MoEModelConfig::mixtral_8x7b();
+        for node in [NodeConfig::a6000x(4), NodeConfig::a100x(8)] {
+            let planner = HapPlanner::new(&m, &node);
+            for sc in [Scenario::long_constrained(), Scenario::short_extended()] {
+                let space = planner.search_space(&sc);
+                let fast = planner.cost_tables(&space, &sc);
+                let slow = planner.cost_tables_scalar(&space, &sc);
+                let eq = |a: &[f64], b: &[f64], what: &str| {
+                    assert_eq!(a.len(), b.len(), "{what} len");
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{what}: {x} vs {y}");
+                    }
+                };
+                eq(&fast.attn_prefill, &slow.attn_prefill, "attn_prefill");
+                eq(&fast.attn_decode, &slow.attn_decode, "attn_decode");
+                eq(&fast.expert_prefill, &slow.expert_prefill, "expert_prefill");
+                eq(&fast.expert_decode, &slow.expert_decode, "expert_decode");
+                for (fr, sr) in fast.comm_prefill.iter().zip(&slow.comm_prefill) {
+                    eq(fr, sr, "comm_prefill");
+                }
+                for (fr, sr) in fast.comm_decode.iter().zip(&slow.comm_decode) {
+                    eq(fr, sr, "comm_decode");
+                }
+                for (fr, sr) in fast.switching.iter().zip(&slow.switching) {
+                    for (fc, sc_) in fr.iter().zip(sr) {
+                        assert_eq!(fc.method, sc_.method);
+                        assert_eq!(fc.overhead.to_bits(), sc_.overhead.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reference_selects_the_same_plan() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let sc = Scenario::long_constrained();
+        let fast = planner.plan(&sc, sc.generate).unwrap();
+        let slow = planner.plan_reference(&sc).unwrap();
+        assert_eq!(fast.signature(), slow.signature());
+        let rel = (fast.predicted_total - slow.predicted_total).abs() / slow.predicted_total;
+        assert!(rel < 1e-12, "fast {} vs slow {}", fast.predicted_total, slow.predicted_total);
     }
 }

@@ -1,12 +1,33 @@
-//! Random-forest regression from scratch (CART trees + bagging).
+//! Random-forest regression from scratch (CART trees + bagging), laid
+//! out for the planner's batch-evaluation hot path.
 //!
 //! The paper fits the η and ρ correction factors with "an efficient
 //! random forest regression model" over polynomially expanded features.
 //! This is that regressor: variance-reduction split search over sorted
 //! feature columns, bootstrap-bagged ensemble, deterministic under a
 //! seed. Fitting a few hundred samples with 16 trees takes < 10 ms.
-
-use crate::util::rng::Rng;
+//!
+//! # Storage layout (SoA)
+//!
+//! Trees are built into a conventional enum-node arena
+//! ([`reference::ArenaForest`]) and then **flattened** into one
+//! structure-of-arrays over all trees: parallel `feature` / `threshold`
+//! / `left` / `right` vectors indexed by a forest-global node id, plus
+//! one root id per tree. Leaves are encoded with the sentinel
+//! `feature == LEAF_SENTINEL` and store their value in `threshold`, so
+//! traversal touches exactly two small arrays per step instead of
+//! pattern-matching 40-byte enum nodes scattered across per-tree
+//! allocations.
+//!
+//! # Batch evaluation
+//!
+//! [`RandomForest::predict_batch`] walks **tree-major** over a whole
+//! batch of feature rows: each tree's (hot, contiguous) node range is
+//! reused across all rows before moving to the next tree, which is what
+//! makes the planner's vectorized cost tables cheap. Per-row results
+//! are bit-identical to [`RandomForest::predict`] — both accumulate
+//! per-tree predictions in tree order and divide once — and the
+//! property tests in `rust/tests/prop_invariants.rs` pin that down.
 
 /// Hyperparameters.
 #[derive(Debug, Clone)]
@@ -26,125 +47,8 @@ impl Default for ForestParams {
     }
 }
 
-#[derive(Debug, Clone)]
-enum Node {
-    Leaf {
-        value: f64,
-    },
-    Split {
-        feature: usize,
-        threshold: f64,
-        left: usize,  // node index
-        right: usize, // node index
-    },
-}
-
-/// One CART regression tree stored as a flat arena.
-#[derive(Debug, Clone)]
-struct Tree {
-    nodes: Vec<Node>,
-}
-
-impl Tree {
-    fn fit(
-        xs: &[Vec<f64>],
-        ys: &[f64],
-        idx: &mut [usize],
-        params: &ForestParams,
-        rng: &mut Rng,
-    ) -> Tree {
-        let mut tree = Tree { nodes: Vec::new() };
-        tree.build(xs, ys, idx, 0, params, rng);
-        tree
-    }
-
-    fn build(
-        &mut self,
-        xs: &[Vec<f64>],
-        ys: &[f64],
-        idx: &mut [usize],
-        depth: usize,
-        params: &ForestParams,
-        rng: &mut Rng,
-    ) -> usize {
-        let mean = idx.iter().map(|&i| ys[i]).sum::<f64>() / idx.len() as f64;
-        if depth >= params.max_depth || idx.len() < params.min_split {
-            self.nodes.push(Node::Leaf { value: mean });
-            return self.nodes.len() - 1;
-        }
-        let n_features = xs[0].len();
-        let k = params.max_features.unwrap_or(n_features).min(n_features);
-        // Sample candidate features without replacement.
-        let mut feats: Vec<usize> = (0..n_features).collect();
-        rng.shuffle(&mut feats);
-        feats.truncate(k);
-
-        let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
-        for &f in &feats {
-            if let Some((thr, score)) = best_split_on_feature(xs, ys, idx, f) {
-                if best.map_or(true, |(_, _, s)| score < s) {
-                    best = Some((f, thr, score));
-                }
-            }
-        }
-        let Some((feature, threshold, _)) = best else {
-            self.nodes.push(Node::Leaf { value: mean });
-            return self.nodes.len() - 1;
-        };
-        // Partition indices in place.
-        let mut lo = 0;
-        let mut hi = idx.len();
-        while lo < hi {
-            if xs[idx[lo]][feature] <= threshold {
-                lo += 1;
-            } else {
-                hi -= 1;
-                idx.swap(lo, hi);
-            }
-        }
-        if lo == 0 || lo == idx.len() {
-            self.nodes.push(Node::Leaf { value: mean });
-            return self.nodes.len() - 1;
-        }
-        // Reserve our slot, then build children.
-        let my_slot = self.nodes.len();
-        self.nodes.push(Node::Leaf { value: mean }); // placeholder
-        let (left_idx, right_idx) = {
-            let (l, r) = idx.split_at_mut(lo);
-            let li = self.build(xs, ys, l, depth + 1, params, rng);
-            let ri = self.build(xs, ys, r, depth + 1, params, rng);
-            (li, ri)
-        };
-        self.nodes[my_slot] = Node::Split { feature, threshold, left: left_idx, right: right_idx };
-        my_slot
-    }
-
-    fn predict(&self, x: &[f64]) -> f64 {
-        // Root is the first node pushed for the full index set — but our
-        // recursive build pushes leaves before parents; track the root
-        // explicitly: the *last* call frame's slot is node 0 only when
-        // the root is a leaf. We store root at build time instead.
-        self.predict_from(self.root(), x)
-    }
-
-    fn root(&self) -> usize {
-        // The root is the first slot reserved in `build`'s outermost
-        // call: a leaf pushed at index 0 (pure leaf tree) or the
-        // placeholder slot 0 (split). Either way it is index 0.
-        0
-    }
-
-    fn predict_from(&self, mut node: usize, x: &[f64]) -> f64 {
-        loop {
-            match &self.nodes[node] {
-                Node::Leaf { value } => return *value,
-                Node::Split { feature, threshold, left, right } => {
-                    node = if x[*feature] <= *threshold { *left } else { *right };
-                }
-            }
-        }
-    }
-}
+/// `feature` value marking a leaf node (its `threshold` is the value).
+const LEAF_SENTINEL: u32 = u32::MAX;
 
 /// Best variance-reduction split for one feature: returns (threshold,
 /// weighted child SSE).
@@ -182,43 +86,269 @@ fn best_split_on_feature(
     best
 }
 
-/// Bagged ensemble of CART regression trees.
+/// The pre-flattening enum-arena representation. Kept as the build
+/// intermediate and as the reference implementation the SoA layout is
+/// validated against (see `prop_soa_forest_matches_arena_reference`).
+pub mod reference {
+    use super::{best_split_on_feature, ForestParams};
+    use crate::util::rng::Rng;
+
+    #[derive(Debug, Clone)]
+    pub(super) enum Node {
+        Leaf {
+            value: f64,
+        },
+        Split {
+            feature: usize,
+            threshold: f64,
+            left: usize,  // node index
+            right: usize, // node index
+        },
+    }
+
+    /// One CART regression tree stored as a flat arena of enum nodes.
+    #[derive(Debug, Clone)]
+    pub struct Tree {
+        pub(super) nodes: Vec<Node>,
+    }
+
+    impl Tree {
+        pub(super) fn fit(
+            xs: &[Vec<f64>],
+            ys: &[f64],
+            idx: &mut [usize],
+            params: &ForestParams,
+            rng: &mut Rng,
+        ) -> Tree {
+            let mut tree = Tree { nodes: Vec::new() };
+            tree.build(xs, ys, idx, 0, params, rng);
+            tree
+        }
+
+        fn build(
+            &mut self,
+            xs: &[Vec<f64>],
+            ys: &[f64],
+            idx: &mut [usize],
+            depth: usize,
+            params: &ForestParams,
+            rng: &mut Rng,
+        ) -> usize {
+            let mean = idx.iter().map(|&i| ys[i]).sum::<f64>() / idx.len() as f64;
+            if depth >= params.max_depth || idx.len() < params.min_split {
+                self.nodes.push(Node::Leaf { value: mean });
+                return self.nodes.len() - 1;
+            }
+            let n_features = xs[0].len();
+            let k = params.max_features.unwrap_or(n_features).min(n_features);
+            // Sample candidate features without replacement.
+            let mut feats: Vec<usize> = (0..n_features).collect();
+            rng.shuffle(&mut feats);
+            feats.truncate(k);
+
+            let mut best: Option<(usize, f64, f64)> = None; // (feature, threshold, score)
+            for &f in &feats {
+                if let Some((thr, score)) = best_split_on_feature(xs, ys, idx, f) {
+                    if best.map_or(true, |(_, _, s)| score < s) {
+                        best = Some((f, thr, score));
+                    }
+                }
+            }
+            let Some((feature, threshold, _)) = best else {
+                self.nodes.push(Node::Leaf { value: mean });
+                return self.nodes.len() - 1;
+            };
+            // Partition indices in place.
+            let mut lo = 0;
+            let mut hi = idx.len();
+            while lo < hi {
+                if xs[idx[lo]][feature] <= threshold {
+                    lo += 1;
+                } else {
+                    hi -= 1;
+                    idx.swap(lo, hi);
+                }
+            }
+            if lo == 0 || lo == idx.len() {
+                self.nodes.push(Node::Leaf { value: mean });
+                return self.nodes.len() - 1;
+            }
+            // Reserve our slot, then build children.
+            let my_slot = self.nodes.len();
+            self.nodes.push(Node::Leaf { value: mean }); // placeholder
+            let (left_idx, right_idx) = {
+                let (l, r) = idx.split_at_mut(lo);
+                let li = self.build(xs, ys, l, depth + 1, params, rng);
+                let ri = self.build(xs, ys, r, depth + 1, params, rng);
+                (li, ri)
+            };
+            self.nodes[my_slot] =
+                Node::Split { feature, threshold, left: left_idx, right: right_idx };
+            my_slot
+        }
+
+        /// The root is the slot reserved by the outermost `build` call:
+        /// index 0 whether leaf or split.
+        fn predict(&self, x: &[f64]) -> f64 {
+            let mut node = 0;
+            loop {
+                match &self.nodes[node] {
+                    Node::Leaf { value } => return *value,
+                    Node::Split { feature, threshold, left, right } => {
+                        node = if x[*feature] <= *threshold { *left } else { *right };
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bagged ensemble over enum-arena trees — the pre-SoA
+    /// implementation, kept for equivalence testing and as the build
+    /// intermediate.
+    #[derive(Debug, Clone)]
+    pub struct ArenaForest {
+        pub(super) trees: Vec<Tree>,
+    }
+
+    impl ArenaForest {
+        /// Fit on feature rows `xs` and targets `ys`. Consumes the RNG
+        /// stream exactly like [`super::RandomForest::fit`], so the two
+        /// produce identical ensembles for identical params.
+        pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: &ForestParams) -> ArenaForest {
+            assert_eq!(xs.len(), ys.len());
+            assert!(!xs.is_empty(), "empty training set");
+            let mut rng = Rng::new(params.seed);
+            let n = xs.len();
+            let trees = (0..params.n_trees)
+                .map(|_| {
+                    // Bootstrap sample.
+                    let mut idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+                    Tree::fit(xs, ys, &mut idx, params, &mut rng)
+                })
+                .collect();
+            ArenaForest { trees }
+        }
+
+        /// Mean prediction across trees.
+        pub fn predict(&self, x: &[f64]) -> f64 {
+            let s: f64 = self.trees.iter().map(|t| t.predict(x)).sum();
+            s / self.trees.len() as f64
+        }
+
+        pub fn n_trees(&self) -> usize {
+            self.trees.len()
+        }
+    }
+}
+
+/// Bagged ensemble of CART regression trees in the flattened SoA
+/// layout (see the module docs).
 #[derive(Debug, Clone)]
 pub struct RandomForest {
-    trees: Vec<Tree>,
+    /// Split feature per node; [`LEAF_SENTINEL`] marks a leaf.
+    feature: Vec<u32>,
+    /// Split threshold per node; the leaf *value* at leaf nodes.
+    threshold: Vec<f64>,
+    /// Child node ids (forest-global indices); 0 at leaves.
+    left: Vec<u32>,
+    right: Vec<u32>,
+    /// Root node id of each tree.
+    roots: Vec<u32>,
 }
 
 impl RandomForest {
     /// Fit on feature rows `xs` and targets `ys`.
     pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: &ForestParams) -> RandomForest {
-        assert_eq!(xs.len(), ys.len());
-        assert!(!xs.is_empty(), "empty training set");
-        let mut rng = Rng::new(params.seed);
-        let n = xs.len();
-        let trees = (0..params.n_trees)
-            .map(|_| {
-                // Bootstrap sample.
-                let mut idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
-                Tree::fit(xs, ys, &mut idx, params, &mut rng)
-            })
-            .collect();
-        RandomForest { trees }
+        Self::flatten(&reference::ArenaForest::fit(xs, ys, params))
+    }
+
+    /// Flatten an enum-arena ensemble into the SoA layout. Node order
+    /// within each tree is preserved, with per-tree indices rebased by
+    /// the tree's offset in the global arrays.
+    pub fn flatten(arena: &reference::ArenaForest) -> RandomForest {
+        let total: usize = arena.trees.iter().map(|t| t.nodes.len()).sum();
+        let mut f = RandomForest {
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+            roots: Vec::with_capacity(arena.trees.len()),
+        };
+        for tree in &arena.trees {
+            let base = f.feature.len() as u32;
+            f.roots.push(base); // arena root is always slot 0
+            for node in &tree.nodes {
+                match node {
+                    reference::Node::Leaf { value } => {
+                        f.feature.push(LEAF_SENTINEL);
+                        f.threshold.push(*value);
+                        f.left.push(0);
+                        f.right.push(0);
+                    }
+                    reference::Node::Split { feature, threshold, left, right } => {
+                        f.feature.push(*feature as u32);
+                        f.threshold.push(*threshold);
+                        f.left.push(base + *left as u32);
+                        f.right.push(base + *right as u32);
+                    }
+                }
+            }
+        }
+        f
+    }
+
+    /// Walk one tree for one row.
+    #[inline]
+    fn predict_tree(&self, root: u32, x: &[f64]) -> f64 {
+        let mut i = root as usize;
+        loop {
+            let f = self.feature[i];
+            let t = self.threshold[i];
+            if f == LEAF_SENTINEL {
+                return t;
+            }
+            i = if x[f as usize] <= t { self.left[i] as usize } else { self.right[i] as usize };
+        }
     }
 
     /// Mean prediction across trees.
     pub fn predict(&self, x: &[f64]) -> f64 {
-        let s: f64 = self.trees.iter().map(|t| t.predict(x)).sum();
-        s / self.trees.len() as f64
+        let s: f64 = self.roots.iter().map(|&r| self.predict_tree(r, x)).sum();
+        s / self.roots.len() as f64
+    }
+
+    /// Batch prediction, traversing tree-major for cache locality.
+    /// Per-row results are bit-identical to [`Self::predict`].
+    pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        let mut acc = vec![0.0f64; xs.len()];
+        for &root in &self.roots {
+            for (a, x) in acc.iter_mut().zip(xs) {
+                *a += self.predict_tree(root, x);
+            }
+        }
+        let n = self.roots.len() as f64;
+        for a in &mut acc {
+            // Same final op as `predict` (divide, not multiply-by-inverse)
+            // to stay bit-identical.
+            *a /= n;
+        }
+        acc
     }
 
     pub fn n_trees(&self) -> usize {
-        self.trees.len()
+        self.roots.len()
+    }
+
+    /// Total nodes across all trees (diagnostics).
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
     use crate::util::stats;
 
     fn make_dataset(n: usize, seed: u64, f: impl Fn(f64, f64) -> f64) -> (Vec<Vec<f64>>, Vec<f64>) {
@@ -277,5 +407,36 @@ mod tests {
         let forest = RandomForest::fit(&xs, &ys, &ForestParams::default());
         assert!(forest.predict(&[1.0]) < 2.5);
         assert!(forest.predict(&[2.0]) > 2.5);
+    }
+
+    #[test]
+    fn batch_matches_scalar_bitwise() {
+        let (xs, ys) = make_dataset(400, 6, |a, b| a * b + (b * 0.7).cos());
+        let forest = RandomForest::fit(&xs, &ys, &ForestParams::default());
+        let (qs, _) = make_dataset(97, 7, |a, b| a + b);
+        let batch = forest.predict_batch(&qs);
+        assert_eq!(batch.len(), qs.len());
+        for (x, &b) in qs.iter().zip(&batch) {
+            assert_eq!(forest.predict(x).to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn soa_matches_arena_reference() {
+        let (xs, ys) = make_dataset(300, 8, |a, b| (a + 2.0 * b).tanh());
+        let params = ForestParams { n_trees: 12, max_depth: 8, ..Default::default() };
+        let arena = reference::ArenaForest::fit(&xs, &ys, &params);
+        let soa = RandomForest::fit(&xs, &ys, &params);
+        assert_eq!(arena.n_trees(), soa.n_trees());
+        for x in xs.iter().take(64) {
+            assert_eq!(arena.predict(x).to_bits(), soa.predict(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let (xs, ys) = make_dataset(50, 9, |a, _| a);
+        let forest = RandomForest::fit(&xs, &ys, &ForestParams::default());
+        assert!(forest.predict_batch(&[]).is_empty());
     }
 }

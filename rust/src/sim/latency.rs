@@ -13,6 +13,33 @@
 //! trained at construction on [`microbench`] samples. Decode-stage cost
 //! is integrated over the growing context length by sampling a few
 //! quadrature points instead of simulating every step.
+//!
+//! # Batch API (planner hot path)
+//!
+//! The planner evaluates hundreds of (strategy, stage, context) points
+//! per `plan()` call. Instead of walking the forests one query at a
+//! time, callers assemble [`LayerQuery`] rows up front and call
+//! [`LatencyModel::layer_latency_batch`]: all η_attn features go through
+//! **one** [`RandomForest::predict_batch`] call, likewise η_expert and ρ
+//! (comm events are flattened across queries with offsets). Lower-level
+//! batch entry points ([`LatencyModel::attn_time_batch`],
+//! [`LatencyModel::expert_time_batch`], [`LatencyModel::comm_time_batch`])
+//! serve callers that only need one table family — the vectorized cost
+//! tables use them directly so comm tables no longer pay for unused
+//! compute predictions.
+//!
+//! The scalar [`LatencyModel::layer_latency`] remains as a thin wrapper
+//! over the same feature assembly and **memoizes** η/ρ lookups keyed on
+//! the quantized (bit-exact) feature vectors, so repeated scalar
+//! queries — identical op shapes across table rows, repeated baselines —
+//! hit a hash map instead of re-walking the forest. Memoized and batch
+//! paths return bit-identical values (exact-match keys; the forest is
+//! deterministic). `layer_latency_uncached` preserves the pre-batching
+//! behavior for reference baselines and perf comparisons.
+//!
+//! Trained models are cached per (GpuSpec, seed) — see
+//! [`LatencyModel::cached`] — so platform sweeps, benches, and the
+//! serving router stop retraining identical forests.
 
 use crate::cluster::imbalance;
 use crate::config::{hardware::GpuSpec, model::MoEModelConfig, scenario::Scenario};
@@ -21,6 +48,8 @@ use crate::sim::flops::{self, OpCost, Stage};
 use crate::sim::forest::{ForestParams, RandomForest};
 use crate::sim::microbench;
 use crate::strategy::{AttnStrategy, ExpertStrategy};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Latency of one module class within one layer (seconds).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -63,15 +92,59 @@ impl StageLatency {
     }
 }
 
+/// One point of the per-layer latency surface: everything
+/// [`LatencyModel::layer_latency`] takes besides the model config.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerQuery {
+    pub attn: AttnStrategy,
+    pub expert: ExpertStrategy,
+    pub stage: Stage,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Feature-vector width of both regressor families.
+const FEAT_DIM: usize = 5;
+
+/// Memo key: the feature vector quantized to exact f64 bit patterns
+/// (features are already log-scale, so exact-match keys capture every
+/// genuine repeat without ever aliasing distinct queries).
+type FeatKey = [u64; FEAT_DIM];
+
+fn feat_key(feats: &[f64]) -> FeatKey {
+    debug_assert!(feats.len() <= FEAT_DIM);
+    let mut key = [0u64; FEAT_DIM];
+    for (slot, f) in key.iter_mut().zip(feats) {
+        *slot = f.to_bits();
+    }
+    key
+}
+
+/// Per-regressor prediction memos (raw forest outputs, pre-`exp`).
+#[derive(Debug, Default)]
+struct Memo {
+    attn: Mutex<HashMap<FeatKey, f64>>,
+    expert: Mutex<HashMap<FeatKey, f64>>,
+    comm: Mutex<HashMap<FeatKey, f64>>,
+}
+
 /// Module-specific inference latency simulation model.
+#[derive(Debug)]
 pub struct LatencyModel {
     pub gpu: GpuSpec,
     eta_attn: RandomForest,
     eta_expert: RandomForest,
     rho: RandomForest,
-    /// Number of decode quadrature points (see `decode_layer`).
+    /// Number of decode quadrature points (see `decode_latency`).
     quad_points: usize,
+    memo: Memo,
+    /// Scalar-path memoization switch (on by default; reference
+    /// baselines turn it off to reproduce pre-batching behavior).
+    memo_enabled: bool,
 }
+
+/// Global (GpuSpec, seed) → trained model cache.
+static MODEL_CACHE: OnceLock<Mutex<Vec<((GpuSpec, u64), Arc<LatencyModel>)>>> = OnceLock::new();
 
 impl LatencyModel {
     /// Train the η/ρ regressors for a GPU platform. Deterministic for a
@@ -99,7 +172,56 @@ impl LatencyModel {
         let rho_params = ForestParams { n_trees: 32, max_depth: 14, ..params.clone() };
         let rho = RandomForest::fit(&xs, &ys, &rho_params);
 
-        LatencyModel { gpu: gpu.clone(), eta_attn, eta_expert, rho, quad_points: 8 }
+        LatencyModel {
+            gpu: gpu.clone(),
+            eta_attn,
+            eta_expert,
+            rho,
+            quad_points: 8,
+            memo: Memo::default(),
+            memo_enabled: true,
+        }
+    }
+
+    /// Shared, trained model for a platform: trains on first use and
+    /// returns the cached instance afterwards. Sweeps, benches, and the
+    /// serving router all hit the same forests instead of retraining.
+    pub fn cached(gpu: &GpuSpec, seed: u64) -> Arc<LatencyModel> {
+        let cache = MODEL_CACHE.get_or_init(|| Mutex::new(Vec::new()));
+        let mut guard = cache.lock().unwrap();
+        if let Some((_, lm)) = guard.iter().find(|((g, s), _)| *s == seed && g == gpu) {
+            return lm.clone();
+        }
+        // Training under the lock keeps concurrent callers from
+        // duplicating the (few-ms) fit; contention here is cold-path.
+        let lm = Arc::new(LatencyModel::train(gpu, seed));
+        guard.push(((gpu.clone(), seed), lm.clone()));
+        lm
+    }
+
+    /// Disable (or re-enable) the scalar-path η/ρ memo. Used by the
+    /// perf baseline to reproduce the pre-batching code path; values
+    /// are identical either way.
+    pub fn set_memo_enabled(&mut self, on: bool) {
+        self.memo_enabled = on;
+    }
+
+    fn predict_memo(
+        &self,
+        cache: &Mutex<HashMap<FeatKey, f64>>,
+        forest: &RandomForest,
+        feats: &[f64],
+    ) -> f64 {
+        if !self.memo_enabled {
+            return forest.predict(feats);
+        }
+        let key = feat_key(feats);
+        if let Some(&v) = cache.lock().unwrap().get(&key) {
+            return v;
+        }
+        let v = forest.predict(feats);
+        cache.lock().unwrap().insert(key, v);
+        v
     }
 
     /// T_cal for an attention-module invocation: `flops/peak × η̂`.
@@ -107,7 +229,9 @@ impl LatencyModel {
         if cost.flops <= 0.0 {
             return 0.0;
         }
-        let eta = self.eta_attn.predict(&microbench::compute_features(cost)).exp();
+        let eta =
+            self.predict_memo(&self.memo.attn, &self.eta_attn, &microbench::compute_features(cost))
+                .exp();
         cost.flops / self.gpu.peak_flops * eta
     }
 
@@ -116,7 +240,9 @@ impl LatencyModel {
         if cost.flops <= 0.0 {
             return 0.0;
         }
-        let eta = self.eta_expert.predict(&microbench::compute_features(cost)).exp();
+        let eta = self
+            .predict_memo(&self.memo.expert, &self.eta_expert, &microbench::compute_features(cost))
+            .exp();
         cost.flops / self.gpu.peak_flops * eta
     }
 
@@ -125,7 +251,9 @@ impl LatencyModel {
         if event.wire_bytes <= 0.0 || event.group <= 1 {
             return 0.0;
         }
-        let rho = self.rho.predict(&microbench::comm_features(event)).exp();
+        let rho = self
+            .predict_memo(&self.memo.comm, &self.rho, &microbench::comm_features(event))
+            .exp();
         event.wire_bytes / self.gpu.link_bw * rho
     }
 
@@ -134,7 +262,79 @@ impl LatencyModel {
         events.iter().map(|e| self.comm_time(e)).sum()
     }
 
-    /// Per-layer latency at one point of one stage.
+    /// Batched `attn_time` over many op costs: one `predict_batch`
+    /// walk for every non-degenerate row.
+    pub fn attn_time_batch(&self, costs: &[OpCost]) -> Vec<f64> {
+        self.compute_time_batch(&self.eta_attn, costs)
+    }
+
+    /// Batched `expert_time`.
+    pub fn expert_time_batch(&self, costs: &[OpCost]) -> Vec<f64> {
+        self.compute_time_batch(&self.eta_expert, costs)
+    }
+
+    fn compute_time_batch(&self, forest: &RandomForest, costs: &[OpCost]) -> Vec<f64> {
+        let mut rows: Vec<Vec<f64>> = Vec::with_capacity(costs.len());
+        let mut live: Vec<usize> = Vec::with_capacity(costs.len());
+        for (i, c) in costs.iter().enumerate() {
+            if c.flops > 0.0 {
+                live.push(i);
+                rows.push(microbench::compute_features(c));
+            }
+        }
+        let preds = forest.predict_batch(&rows);
+        let mut out = vec![0.0; costs.len()];
+        for (slot, &i) in live.iter().enumerate() {
+            let eta = preds[slot].exp();
+            out[i] = costs[i].flops / self.gpu.peak_flops * eta;
+        }
+        out
+    }
+
+    /// Batched `comm_time` over a flat event list.
+    pub fn comm_time_batch(&self, events: &[CommEvent]) -> Vec<f64> {
+        let mut rows: Vec<Vec<f64>> = Vec::with_capacity(events.len());
+        let mut live: Vec<usize> = Vec::with_capacity(events.len());
+        for (i, e) in events.iter().enumerate() {
+            if e.wire_bytes > 0.0 && e.group > 1 {
+                live.push(i);
+                rows.push(microbench::comm_features(e));
+            }
+        }
+        let preds = self.rho.predict_batch(&rows);
+        let mut out = vec![0.0; events.len()];
+        for (slot, &i) in live.iter().enumerate() {
+            let rho = preds[slot].exp();
+            out[i] = events[i].wire_bytes / self.gpu.link_bw * rho;
+        }
+        out
+    }
+
+    /// Assemble the analytic inputs of one layer query (shared by the
+    /// scalar and batch paths so they stay numerically identical).
+    fn query_parts(
+        model: &MoEModelConfig,
+        q: &LayerQuery,
+    ) -> (OpCost, OpCost, Vec<CommEvent>) {
+        let tokens = match q.stage {
+            Stage::Prefill => q.batch * q.seq,
+            Stage::Decode => q.batch,
+        };
+        let imb = imbalance::expected_imbalance(
+            model.num_experts,
+            q.expert.ep,
+            tokens,
+            model.top_k,
+            imbalance::DEFAULT_SKEW,
+        );
+        let a_cost = flops::attention_cost(model, &q.attn, q.stage, q.batch, q.seq);
+        let e_cost = flops::expert_cost(model, &q.expert, q.stage, q.batch, q.seq, imb);
+        let events = comm::layer_comm_events(model, &q.attn, &q.expert, q.stage, q.batch, q.seq);
+        (a_cost, e_cost, events)
+    }
+
+    /// Per-layer latency at one point of one stage (thin wrapper over
+    /// the shared feature assembly, with memoized η/ρ lookups).
     ///
     /// `seq` = prompt length for prefill, current context length for
     /// decode. The EP imbalance factor multiplies routed-expert work.
@@ -147,25 +347,85 @@ impl LatencyModel {
         batch: usize,
         seq: usize,
     ) -> ModuleLatency {
-        let tokens = match stage {
-            Stage::Prefill => batch * seq,
-            Stage::Decode => batch,
-        };
-        let imb = imbalance::expected_imbalance(
-            model.num_experts,
-            expert.ep,
-            tokens,
-            model.top_k,
-            imbalance::DEFAULT_SKEW,
-        );
-        let a_cost = flops::attention_cost(model, attn, stage, batch, seq);
-        let e_cost = flops::expert_cost(model, expert, stage, batch, seq, imb);
-        let events = comm::layer_comm_events(model, attn, expert, stage, batch, seq);
+        let q = LayerQuery { attn: *attn, expert: *expert, stage, batch, seq };
+        let (a_cost, e_cost, events) = Self::query_parts(model, &q);
         ModuleLatency {
             attn: self.attn_time(&a_cost),
             expert: self.expert_time(&e_cost),
             comm: self.comm_time_all(&events),
         }
+    }
+
+    /// `layer_latency` without memoization — the pre-batching reference
+    /// path, kept for perf baselines and equivalence tests.
+    pub fn layer_latency_uncached(
+        &self,
+        model: &MoEModelConfig,
+        attn: &AttnStrategy,
+        expert: &ExpertStrategy,
+        stage: Stage,
+        batch: usize,
+        seq: usize,
+    ) -> ModuleLatency {
+        let q = LayerQuery { attn: *attn, expert: *expert, stage, batch, seq };
+        let (a_cost, e_cost, events) = Self::query_parts(model, &q);
+        let attn_t = if a_cost.flops <= 0.0 {
+            0.0
+        } else {
+            a_cost.flops / self.gpu.peak_flops
+                * self.eta_attn.predict(&microbench::compute_features(&a_cost)).exp()
+        };
+        let expert_t = if e_cost.flops <= 0.0 {
+            0.0
+        } else {
+            e_cost.flops / self.gpu.peak_flops
+                * self.eta_expert.predict(&microbench::compute_features(&e_cost)).exp()
+        };
+        let comm_t: f64 = events
+            .iter()
+            .map(|e| {
+                if e.wire_bytes <= 0.0 || e.group <= 1 {
+                    0.0
+                } else {
+                    e.wire_bytes / self.gpu.link_bw
+                        * self.rho.predict(&microbench::comm_features(e)).exp()
+                }
+            })
+            .sum();
+        ModuleLatency { attn: attn_t, expert: expert_t, comm: comm_t }
+    }
+
+    /// Batched per-layer latency: all attention features go through one
+    /// `predict_batch`, likewise expert features and (flattened) comm
+    /// events. Bit-identical per query to [`Self::layer_latency`].
+    pub fn layer_latency_batch(
+        &self,
+        model: &MoEModelConfig,
+        queries: &[LayerQuery],
+    ) -> Vec<ModuleLatency> {
+        let n = queries.len();
+        let mut a_costs = Vec::with_capacity(n);
+        let mut e_costs = Vec::with_capacity(n);
+        let mut events: Vec<CommEvent> = Vec::new();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0usize);
+        for q in queries {
+            let (a, e, ev) = Self::query_parts(model, q);
+            a_costs.push(a);
+            e_costs.push(e);
+            events.extend(ev);
+            offsets.push(events.len());
+        }
+        let attn_t = self.attn_time_batch(&a_costs);
+        let expert_t = self.expert_time_batch(&e_costs);
+        let comm_t = self.comm_time_batch(&events);
+        (0..n)
+            .map(|i| ModuleLatency {
+                attn: attn_t[i],
+                expert: expert_t[i],
+                comm: comm_t[offsets[i]..offsets[i + 1]].iter().sum(),
+            })
+            .collect()
     }
 
     /// Whole-prefill latency (eq. 2).
@@ -181,7 +441,8 @@ impl LatencyModel {
     }
 
     /// Whole-decoding latency (eq. 3), integrating the growing context
-    /// with `quad_points` midpoint-rule samples.
+    /// with `quad_points` midpoint-rule samples — evaluated as one
+    /// batch of quadrature points.
     pub fn decode_latency(
         &self,
         model: &MoEModelConfig,
@@ -194,17 +455,20 @@ impl LatencyModel {
         }
         let q = self.quad_points.min(scenario.generate).max(1);
         let step = scenario.generate as f64 / q as f64;
+        let queries: Vec<LayerQuery> = (0..q)
+            .map(|i| {
+                let ctx = scenario.context as f64 + (i as f64 + 0.5) * step;
+                LayerQuery {
+                    attn: *attn,
+                    expert: *expert,
+                    stage: Stage::Decode,
+                    batch: scenario.batch,
+                    seq: ctx as usize,
+                }
+            })
+            .collect();
         let mut acc = ModuleLatency::default();
-        for i in 0..q {
-            let ctx = scenario.context as f64 + (i as f64 + 0.5) * step;
-            let per_layer = self.layer_latency(
-                model,
-                attn,
-                expert,
-                Stage::Decode,
-                scenario.batch,
-                ctx as usize,
-            );
+        for per_layer in self.layer_latency_batch(model, &queries) {
             acc = acc.add(&per_layer.scale(step));
         }
         acc.scale(model.layers as f64)
@@ -366,5 +630,43 @@ mod tests {
                 assert!(t.total().is_finite() && t.total() > 0.0);
             }
         }
+    }
+
+    #[test]
+    fn batch_layer_latency_matches_scalar_bitwise() {
+        let gpu = GpuSpec::a6000();
+        let lm = model_for(&gpu);
+        let m = MoEModelConfig::mixtral_8x7b();
+        let mut queries = Vec::new();
+        for (tp, dp) in [(4, 1), (1, 4), (2, 2)] {
+            for stage in [Stage::Prefill, Stage::Decode] {
+                queries.push(LayerQuery {
+                    attn: AttnStrategy::new(tp, dp),
+                    expert: ExpertStrategy::new(dp, tp),
+                    stage,
+                    batch: 16,
+                    seq: 1024,
+                });
+            }
+        }
+        let batch = lm.layer_latency_batch(&m, &queries);
+        for (q, b) in queries.iter().zip(&batch) {
+            let s = lm.layer_latency(&m, &q.attn, &q.expert, q.stage, q.batch, q.seq);
+            assert_eq!(s.attn.to_bits(), b.attn.to_bits(), "{q:?}");
+            assert_eq!(s.expert.to_bits(), b.expert.to_bits(), "{q:?}");
+            assert_eq!(s.comm.to_bits(), b.comm.to_bits(), "{q:?}");
+            let u = lm.layer_latency_uncached(&m, &q.attn, &q.expert, q.stage, q.batch, q.seq);
+            assert_eq!(u.total().to_bits(), s.total().to_bits(), "{q:?}");
+        }
+    }
+
+    #[test]
+    fn cached_models_are_shared() {
+        let gpu = GpuSpec::a6000();
+        let a = LatencyModel::cached(&gpu, 0x4A9);
+        let b = LatencyModel::cached(&gpu, 0x4A9);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = LatencyModel::cached(&gpu, 0x4AA);
+        assert!(!Arc::ptr_eq(&a, &c));
     }
 }

@@ -119,6 +119,13 @@ pub struct CommSample {
 /// Feature vector for a compute op: raw + log + ratio features; the
 /// forest handles interactions, matching the paper's "polynomial
 /// feature expansion" in expressive power.
+///
+/// This is the row format consumed one-at-a-time by the scalar
+/// `LatencyModel` predictors and row-by-row by the batched API
+/// (`attn_time_batch` / `expert_time_batch` assemble one `Vec` per op
+/// and make a single `RandomForest::predict_batch` call). Keep it in
+/// sync with [`comm_features`]' width: both regressor families share
+/// the 5-wide layout the latency memo keys on.
 pub fn compute_features(cost: &OpCost) -> Vec<f64> {
     let f = cost.flops.max(1.0);
     let b = cost.bytes.max(1.0);
@@ -131,7 +138,9 @@ pub fn compute_features(cost: &OpCost) -> Vec<f64> {
     ]
 }
 
-/// Feature vector for a collective event.
+/// Feature vector for a collective event (5-wide, see
+/// [`compute_features`]); the ρ batch path flattens many layers'
+/// events into one `predict_batch` call over these rows.
 pub fn comm_features(event: &CommEvent) -> Vec<f64> {
     let v = event.wire_bytes.max(1.0);
     vec![

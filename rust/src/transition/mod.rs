@@ -150,6 +150,22 @@ impl<'a> TransitionModel<'a> {
         (self.model.layers * self.model.expert_params_per_layer()) as f64 / s.devices() as f64
     }
 
+    /// Eq. 6's minimum for one (from, to) pair, given precomputed
+    /// T_reshard and T_upload+T_dequant.
+    fn decide(reshard: f64, raw_pipeline: f64, prefill_stage_time: f64) -> TransitionCost {
+        let overlapped = (raw_pipeline - prefill_stage_time).max(0.0);
+        if reshard <= overlapped {
+            TransitionCost { method: TransitionMethod::Reshard, overhead: reshard, raw_pipeline, reshard }
+        } else {
+            TransitionCost {
+                method: TransitionMethod::Int4Backup,
+                overhead: overlapped,
+                raw_pipeline,
+                reshard,
+            }
+        }
+    }
+
     /// C_ij per eq. 6. `prefill_stage_time` is the prefill-stage term
     /// `Sₖᵀ·T_a + E_i·T_e + T_Cₖᵢ` the pipeline overlaps with.
     pub fn cost(
@@ -169,17 +185,70 @@ impl<'a> TransitionModel<'a> {
         }
         let reshard = self.reshard_time(lm, from, to);
         let raw_pipeline = self.upload_time(to) + self.dequant_time(to);
-        let overlapped = (raw_pipeline - prefill_stage_time).max(0.0);
-        if reshard <= overlapped {
-            TransitionCost { method: TransitionMethod::Reshard, overhead: reshard, raw_pipeline, reshard }
-        } else {
-            TransitionCost {
-                method: TransitionMethod::Int4Backup,
-                overhead: overlapped,
-                raw_pipeline,
-                reshard,
+        Self::decide(reshard, raw_pipeline, prefill_stage_time)
+    }
+
+    /// The whole K_e × K_e switching-cost matrix in one shot: all
+    /// reshard collectives go through a single batched ρ prediction and
+    /// the per-destination upload/dequant terms are computed once per
+    /// column. `prefill_budget[i]` is the overlap window when leaving
+    /// strategy `i`. Entry-for-entry identical to calling
+    /// [`Self::cost`] per pair.
+    pub fn cost_matrix(
+        &self,
+        lm: &LatencyModel,
+        experts: &[ExpertStrategy],
+        prefill_budget: &[f64],
+    ) -> Vec<Vec<TransitionCost>> {
+        assert_eq!(experts.len(), prefill_budget.len());
+        let k = experts.len();
+        // Per-destination INT4 pipeline (pure arithmetic, reused per row).
+        let raw: Vec<f64> =
+            experts.iter().map(|to| self.upload_time(to) + self.dequant_time(to)).collect();
+        // One reshard event per off-diagonal pair; zero-wire events are
+        // mapped to zero time inside `comm_time_batch`, mirroring the
+        // scalar early-out.
+        let mut events = Vec::with_capacity(k * k);
+        let mut slots = Vec::with_capacity(k * k);
+        for (i, from) in experts.iter().enumerate() {
+            for (j, to) in experts.iter().enumerate() {
+                if from == to {
+                    continue;
+                }
+                let n = from.devices();
+                events.push(CommEvent {
+                    collective: comm::Collective::AllGather,
+                    group: n,
+                    wire_bytes: comm::reshard_wire_bytes(self.model, from, to),
+                    rounds: n - 1,
+                    label: "reshard",
+                });
+                slots.push((i, j));
             }
         }
+        let times = lm.comm_time_batch(&events);
+        let mut reshard = vec![vec![0.0f64; k]; k];
+        for (s, &(i, j)) in slots.iter().enumerate() {
+            reshard[i][j] = times[s];
+        }
+        (0..k)
+            .map(|i| {
+                (0..k)
+                    .map(|j| {
+                        if experts[i] == experts[j] {
+                            TransitionCost {
+                                method: TransitionMethod::None,
+                                overhead: 0.0,
+                                raw_pipeline: 0.0,
+                                reshard: 0.0,
+                            }
+                        } else {
+                            Self::decide(reshard[i][j], raw[j], prefill_budget[i])
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
     }
 }
 
@@ -250,6 +319,30 @@ mod tests {
         let t2 = tm.upload_time(&ExpertStrategy::new(2, 1));
         // Note: devices() = tp×ep; (2,1) has 2 devices.
         assert!((t2 / t4 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn cost_matrix_matches_per_pair_cost() {
+        let (m, g) = setup();
+        let lm = LatencyModel::train(&g, 1);
+        let tm = TransitionModel::new(&m, &g);
+        let experts =
+            [ExpertStrategy::new(4, 1), ExpertStrategy::new(2, 2), ExpertStrategy::new(1, 4)];
+        let budgets = [0.0, 0.05, 0.4];
+        let matrix = tm.cost_matrix(&lm, &experts, &budgets);
+        for i in 0..experts.len() {
+            for j in 0..experts.len() {
+                let c = tm.cost(&lm, &experts[i], &experts[j], budgets[i]);
+                assert_eq!(matrix[i][j].method, c.method, "({i},{j})");
+                assert_eq!(matrix[i][j].overhead.to_bits(), c.overhead.to_bits(), "({i},{j})");
+                assert_eq!(matrix[i][j].reshard.to_bits(), c.reshard.to_bits(), "({i},{j})");
+                assert_eq!(
+                    matrix[i][j].raw_pipeline.to_bits(),
+                    c.raw_pipeline.to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@ use hap::ilp::{solve, LinExpr, Problem, Sense};
 use hap::quant::{self, Scheme};
 use hap::sim::comm::{layer_comm_bytes, layer_comm_events};
 use hap::sim::flops::{attention_cost, expert_cost, Stage};
+use hap::sim::forest::{reference::ArenaForest, ForestParams, RandomForest};
 use hap::strategy::{space::power_of_two_divisors, AttnStrategy, ExpertStrategy, SearchSpace};
 use hap::util::prop;
 use hap::util::rng::Rng;
@@ -243,6 +244,72 @@ fn prop_imbalance_limits() {
         prop_ok(few >= many - 1e-9, format!("few {few} < many {many}"))?;
         let flat = imbalance::expected_imbalance(experts, ep, 1_000_000, top_k, 0.0);
         prop_ok(flat < 1.05, format!("uniform large-token imbalance {flat}"))?;
+        Ok(())
+    });
+}
+
+/// Draw a random regression problem + forest hyperparameters.
+fn random_forest_setup(rng: &mut Rng) -> (Vec<Vec<f64>>, Vec<f64>, ForestParams) {
+    let n = rng.range(20, 200);
+    let dim = rng.range(1, 6);
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<f64> = (0..dim).map(|_| rng.range_f64(-5.0, 5.0)).collect();
+        ys.push(row.iter().sum::<f64>().sin() + 0.1 * row[0]);
+        xs.push(row);
+    }
+    let params = ForestParams {
+        n_trees: rng.range(1, 16),
+        max_depth: rng.range(2, 10),
+        min_split: rng.range(2, 6),
+        max_features: if rng.chance(0.3) { Some(rng.range(1, dim)) } else { None },
+        seed: rng.next_u64(),
+    };
+    (xs, ys, params)
+}
+
+/// `predict_batch` must be bit-identical to per-row `predict` — the
+/// planner's vectorized cost tables rely on this equivalence.
+#[test]
+fn prop_forest_predict_batch_bit_identical_to_scalar() {
+    prop::check("forest-batch", 25, |rng| {
+        let (xs, ys, params) = random_forest_setup(rng);
+        let dim = xs[0].len();
+        let forest = RandomForest::fit(&xs, &ys, &params);
+        let queries: Vec<Vec<f64>> = (0..rng.range(1, 64))
+            .map(|_| (0..dim).map(|_| rng.range_f64(-6.0, 6.0)).collect())
+            .collect();
+        let batch = forest.predict_batch(&queries);
+        prop_ok(batch.len() == queries.len(), "batch length".into())?;
+        for (x, b) in queries.iter().zip(&batch) {
+            let s = forest.predict(x);
+            if s.to_bits() != b.to_bits() {
+                return Err(format!("scalar {s:?} vs batch {b:?} for {x:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The flattened SoA forest must reproduce the enum-arena reference
+/// forest exactly under the same seed (same RNG stream, same trees).
+#[test]
+fn prop_soa_forest_matches_arena_reference() {
+    prop::check("forest-soa-vs-arena", 25, |rng| {
+        let (xs, ys, params) = random_forest_setup(rng);
+        let dim = xs[0].len();
+        let arena = ArenaForest::fit(&xs, &ys, &params);
+        let soa = RandomForest::fit(&xs, &ys, &params);
+        prop_ok(arena.n_trees() == soa.n_trees(), "tree count".into())?;
+        for _ in 0..32 {
+            let x: Vec<f64> = (0..dim).map(|_| rng.range_f64(-6.0, 6.0)).collect();
+            let a = arena.predict(&x);
+            let s = soa.predict(&x);
+            if a.to_bits() != s.to_bits() {
+                return Err(format!("arena {a:?} vs soa {s:?} for {x:?}"));
+            }
+        }
         Ok(())
     });
 }

@@ -1,0 +1,189 @@
+//! Minimal, std-only shim of the `anyhow` API surface this workspace
+//! uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`] macros, and
+//! the [`Context`] extension trait.
+//!
+//! The offline build environment has no crates.io access, so this
+//! in-tree crate stands in for the real `anyhow`. Errors are stored as
+//! a context chain of rendered strings (outermost first); `{e}` prints
+//! the outermost message, `{e:#}` and `{e:?}` print the whole chain.
+
+use std::fmt;
+
+/// A dynamically typed error with a chain of context messages,
+/// outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>` — defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn from_std<E: std::error::Error + ?Sized>(err: &E) -> Error {
+        let mut chain = vec![err.to_string()];
+        let mut source = err.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost message.
+    pub fn root_message(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the full chain, colon-separated (anyhow style).
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Blanket conversion from any std error. `Error` itself deliberately
+// does not implement `std::error::Error`, which keeps this coherent
+// with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::from_std(&err)
+    }
+}
+
+mod private {
+    /// Sealed unifier over `anyhow::Error` and std errors so `Context`
+    /// has a single blanket impl (the real anyhow's `ext::StdError`
+    /// trick).
+    pub trait IntoAnyhow {
+        fn into_anyhow(self) -> super::Error;
+    }
+
+    impl IntoAnyhow for super::Error {
+        fn into_anyhow(self) -> super::Error {
+            self
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> IntoAnyhow for E {
+        fn into_anyhow(self) -> super::Error {
+            super::Error::from_std(&self)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// results over both std errors and [`Error`].
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: private::IntoAnyhow> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = io_err().into();
+        let e = e.context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(format!("{e}"), "bad value 42");
+        fn fails() -> Result<()> {
+            bail!("nope: {}", "reason");
+        }
+        assert!(fails().is_err());
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            let _ = "abc".parse::<usize>()?;
+            Ok(())
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        use super::Context as _;
+        let r: Result<()> = Err(anyhow!("inner"));
+        let r = r.with_context(|| "outer");
+        assert_eq!(format!("{:#}", r.unwrap_err()), "outer: inner");
+    }
+}
