@@ -1,0 +1,88 @@
+//! §Adaptive serving replay bench — the headline comparison for the
+//! online adaptation loop: adaptive re-planning vs static TP vs the
+//! best a-priori single plan vs the free-switch oracle, replayed over
+//! deterministic traffic traces on the cluster simulator (no PJRT
+//! artifacts needed). Overwrites BENCH_adaptive_serving.json at the
+//! repo root with release-profile numbers and enforces the acceptance
+//! bars (beats static TP; within 10% of oracle; >90% plan-cache hits).
+
+use hap::adapt::replay::{self, ReplayComparison, WorkloadTrace};
+use hap::adapt::ControllerConfig;
+use hap::benchkit::{banner, write_results, Table};
+use hap::config::{MoEModelConfig, NodeConfig};
+use hap::planner::HapPlanner;
+use hap::util::json::Json;
+
+fn report_row(t: &mut Table, cmp: &ReplayComparison) {
+    for r in cmp.policies() {
+        let mut cells = vec![cmp.trace.clone()];
+        cells.extend(cmp.row_cells(r));
+        t.row(&cells);
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("adaptive_serving", "trace-driven replay: adaptive vs static vs oracle");
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let planner = HapPlanner::new(&model, &node);
+    let config = ControllerConfig::default();
+
+    let phase_shift = WorkloadTrace::phase_shift(80, 16, 17);
+    let diurnal = WorkloadTrace::diurnal(120, 30, 32, 17);
+    let ramp = WorkloadTrace::ramp(120, 16, 17);
+
+    let mut t =
+        Table::new(&["trace", "policy", "total (s)", "switches", "switch (s)", "vs adaptive"]);
+    let ps = replay::compare(&planner, &phase_shift, &config, 32)?;
+    report_row(&mut t, &ps);
+    let di = replay::compare(&planner, &diurnal, &config, 32)?;
+    report_row(&mut t, &di);
+    let ra = replay::compare(&planner, &ramp, &config, 32)?;
+    report_row(&mut t, &ra);
+    t.print();
+
+    println!("phase-shift: {}", ps.summary_line());
+
+    let summary = Json::obj(vec![
+        ("bench", "adaptive_serving".into()),
+        ("profile", "release".into()),
+        ("model", model.name.as_str().into()),
+        ("node", node.label().into()),
+        ("phase_shift", ps.to_json()),
+        ("diurnal", di.to_json()),
+        ("ramp", ra.to_json()),
+    ]);
+    write_results("adaptive_serving", &summary);
+    let root_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_adaptive_serving.json");
+    if let Err(e) = std::fs::write(&root_path, summary.to_string_pretty()) {
+        eprintln!("could not write {}: {e}", root_path.display());
+    } else {
+        println!("wrote {}", root_path.display());
+    }
+
+    // Acceptance bars (ISSUE 2), enforced under the release profile.
+    assert!(
+        ps.adaptive.total_s < ps.static_tp.total_s,
+        "adaptive {:.3}s did not beat static TP {:.3}s",
+        ps.adaptive.total_s,
+        ps.static_tp.total_s
+    );
+    assert!(
+        ps.adaptive.total_s <= ps.static_first.total_s * 1.0005,
+        "adaptive lost to the static first-phase plan"
+    );
+    assert!(
+        ps.vs_oracle() <= 1.10,
+        "adaptive is {:.1}% over the oracle (>10%)",
+        (ps.vs_oracle() - 1.0) * 100.0
+    );
+    assert!(
+        ps.adaptive.cache_hit_rate > 0.90,
+        "plan cache hit rate {:.1}% <= 90%",
+        ps.adaptive.cache_hit_rate * 100.0
+    );
+    println!("adaptive_serving OK");
+    Ok(())
+}

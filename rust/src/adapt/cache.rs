@@ -1,0 +1,146 @@
+//! Per-scenario plan cache (ROADMAP open item, now closed).
+//!
+//! Memoizes [`HapPlanner::plan`] results keyed on (model, quantized
+//! scenario) so the serving router's re-planning under shifting traffic
+//! is a hash lookup, not an ILP solve. The cache is pinned to one
+//! platform: any change to the [`NodeConfig`] it last planned against
+//! (a different [`crate::config::hardware::GpuSpec`], device count, or
+//! interconnect) invalidates every entry, because cost tables — and
+//! therefore optimal plans — are platform-specific.
+//!
+//! Cached plans are returned as clones of the original solve, so they
+//! are bit-identical to a fresh `plan()` for the same key (the planner
+//! is deterministic per platform; the property tests pin this down).
+
+use crate::adapt::window::QuantizedScenario;
+use crate::config::hardware::NodeConfig;
+use crate::planner::{HapPlanner, HybridPlan};
+use crate::Result;
+use std::collections::HashMap;
+
+/// Cache key: model preset + quantized traffic. The platform is held
+/// out of the key on purpose — a platform change *invalidates* rather
+/// than coexists, mirroring a serving node whose hardware is fixed
+/// until a redeploy.
+type PlanKey = (String, QuantizedScenario);
+
+/// Memoized planner front-end with hit/miss accounting.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    entries: HashMap<PlanKey, HybridPlan>,
+    platform: Option<NodeConfig>,
+    pub hits: usize,
+    pub misses: usize,
+    /// Number of whole-cache invalidations due to platform change.
+    pub invalidations: usize,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Plan for a quantized scenario through the cache: a hit returns
+    /// the memoized plan; a miss solves and memoizes. Detects platform
+    /// changes against the planner's node and flushes stale entries.
+    pub fn plan(&mut self, planner: &HapPlanner, key: QuantizedScenario) -> Result<HybridPlan> {
+        if self.platform.as_ref() != Some(planner.node) {
+            if self.platform.is_some() {
+                self.invalidations += 1;
+            }
+            self.entries.clear();
+            self.platform = Some(planner.node.clone());
+        }
+        let full_key = (planner.model.name.clone(), key);
+        if let Some(plan) = self.entries.get(&full_key) {
+            self.hits += 1;
+            return Ok(plan.clone());
+        }
+        self.misses += 1;
+        let scenario = key.to_scenario();
+        let plan = planner.plan(&scenario, scenario.generate)?;
+        self.entries.insert(full_key, plan.clone());
+        Ok(plan)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Hit fraction over all lookups so far (0 when unused).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MoEModelConfig, Scenario};
+
+    fn key_for(sc: &Scenario) -> QuantizedScenario {
+        QuantizedScenario::from_scenario(sc)
+    }
+
+    #[test]
+    fn cache_hit_returns_bit_identical_plan() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let mut cache = PlanCache::new();
+        let key = key_for(&Scenario::long_constrained());
+        let first = cache.plan(&planner, key).unwrap();
+        let second = cache.plan(&planner, key).unwrap();
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(first.signature(), second.signature());
+        assert_eq!(first.predicted_total.to_bits(), second.predicted_total.to_bits());
+        // And identical to a fresh uncached solve of the same key.
+        let sc = key.to_scenario();
+        let fresh = planner.plan(&sc, sc.generate).unwrap();
+        assert_eq!(first.signature(), fresh.signature());
+        assert_eq!(first.predicted_total.to_bits(), fresh.predicted_total.to_bits());
+    }
+
+    #[test]
+    fn distinct_keys_solve_separately() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let mut cache = PlanCache::new();
+        cache.plan(&planner, key_for(&Scenario::long_constrained())).unwrap();
+        cache.plan(&planner, key_for(&Scenario::short_extended())).unwrap();
+        assert_eq!(cache.misses, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn platform_change_invalidates() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let pcie = NodeConfig::a6000x(4);
+        let nvlink = NodeConfig::a100x(4);
+        let key = key_for(&Scenario::long_constrained());
+        let mut cache = PlanCache::new();
+        let on_pcie = cache.plan(&HapPlanner::new(&m, &pcie), key).unwrap();
+        assert_eq!(cache.len(), 1);
+        // New platform: the PCIe entry must not be served.
+        let on_nvlink = cache.plan(&HapPlanner::new(&m, &nvlink), key).unwrap();
+        assert_eq!(cache.invalidations, 1);
+        assert_eq!(cache.misses, 2);
+        assert_eq!(on_nvlink.node, nvlink.label());
+        assert_eq!(on_pcie.node, pcie.label());
+        // Returning to the original platform re-solves (no stale reuse).
+        cache.plan(&HapPlanner::new(&m, &pcie), key).unwrap();
+        assert_eq!(cache.invalidations, 2);
+        assert_eq!(cache.misses, 3);
+    }
+}

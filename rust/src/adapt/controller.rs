@@ -1,0 +1,392 @@
+//! Strategy-switch controller: hysteresis over break-even analysis.
+//!
+//! Re-planning is cheap once the [`crate::adapt::PlanCache`] is warm,
+//! but *acting* on a new plan is not: adopting a different expert
+//! layout redistributes ~90% of model weights (paper §III-D). The
+//! controller therefore treats a plan switch as an investment decision:
+//!
+//! ```text
+//! switch ⇔ (T_active − T_candidate) · E[dwell batches]
+//!            ≥ breakeven_factor · C_switch
+//! ```
+//!
+//! where `T_·` are predicted per-batch latencies on *current* traffic,
+//! `E[dwell]` is an EWMA of observed phase lengths (how long a traffic
+//! key persisted before changing), and `C_switch` is the weight-
+//! redistribution cost from [`crate::transition`]. Two further guards
+//! damp flapping:
+//!
+//! - **debounce** — a new traffic key must persist `confirm_batches`
+//!   consecutive batches before it can trigger a switch, so a single
+//!   outlier batch never moves weights;
+//! - **cooldown** — at least `cooldown_batches` batches must pass
+//!   between switches, bounding worst-case switch frequency even under
+//!   adversarial traffic.
+//!
+//! The structural invariant (asserted by the no-thrash property tests):
+//! the controller **never** switches when the projected dwell-time
+//! savings fail to cover `breakeven_factor ×` the switch cost.
+
+use crate::adapt::window::QuantizedScenario;
+use crate::planner::HybridPlan;
+
+/// Tunables for the hysteresis logic.
+#[derive(Debug, Clone)]
+pub struct ControllerConfig {
+    /// Projected savings must exceed this multiple of the switch cost
+    /// (≥ 1.0; higher = more conservative).
+    pub breakeven_factor: f64,
+    /// Consecutive batches a new key must persist before acting.
+    pub confirm_batches: usize,
+    /// Minimum batches between weight-moving switches.
+    pub cooldown_batches: usize,
+    /// Initial / maximum value of the dwell estimate (batches).
+    pub initial_dwell_batches: f64,
+    pub max_dwell_batches: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            breakeven_factor: 2.0,
+            confirm_batches: 2,
+            cooldown_batches: 8,
+            initial_dwell_batches: 32.0,
+            max_dwell_batches: 4096.0,
+        }
+    }
+}
+
+/// Outcome of one controller step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SwitchDecision {
+    /// First plan adoption (no resident weights yet) — free.
+    Adopt,
+    /// Keep executing the active plan.
+    Stay,
+    /// Move weights to the candidate plan's layout.
+    Switch {
+        /// `(T_active − T_candidate) · E[dwell]`, seconds.
+        projected_savings: f64,
+        /// Charged switch cost, seconds.
+        cost: f64,
+    },
+}
+
+/// Hysteresis controller; owns the active plan between steps.
+#[derive(Debug)]
+pub struct SwitchController {
+    pub config: ControllerConfig,
+    active: Option<HybridPlan>,
+    active_key: Option<QuantizedScenario>,
+    /// (key, consecutive observations) for the debounce guard.
+    pending: Option<(QuantizedScenario, usize)>,
+    batches_since_switch: usize,
+    /// Batches the current key has been active (dwell-so-far).
+    current_dwell: usize,
+    /// EWMA of completed phase lengths, in batches.
+    dwell_ewma: f64,
+    pub switches: usize,
+    pub suppressed: usize,
+}
+
+impl SwitchController {
+    pub fn new(config: ControllerConfig) -> SwitchController {
+        assert!(config.breakeven_factor >= 1.0, "breakeven_factor must be >= 1");
+        let dwell = config.initial_dwell_batches;
+        SwitchController {
+            config,
+            active: None,
+            active_key: None,
+            pending: None,
+            batches_since_switch: 0,
+            current_dwell: 0,
+            dwell_ewma: dwell,
+            switches: 0,
+            suppressed: 0,
+        }
+    }
+
+    /// The plan currently executing (None before the first adoption).
+    pub fn active(&self) -> Option<&HybridPlan> {
+        self.active.as_ref()
+    }
+
+    /// The traffic key the active plan is pinned to. Lets callers skip
+    /// computing latency economics on the steady-state path: when the
+    /// incoming key equals this, [`Self::step`] returns `Stay` without
+    /// reading its latency/cost arguments.
+    pub fn active_key(&self) -> Option<QuantizedScenario> {
+        self.active_key
+    }
+
+    /// Whether a [`Self::step`] with `key` *now* could reach the
+    /// break-even economics: a resident plan pinned to a different key,
+    /// the debounce about to be satisfied, and the cooldown expired.
+    /// When this is false, `step` is guaranteed to ignore its
+    /// latency/cost arguments, so callers can skip computing them —
+    /// including on every batch of an alternating-key flap, where the
+    /// debounce never confirms.
+    pub fn would_evaluate(&self, key: QuantizedScenario) -> bool {
+        let Some(active_key) = self.active_key else {
+            return false;
+        };
+        if key == active_key {
+            return false;
+        }
+        let seen = match self.pending {
+            Some((k, n)) if k == key => n + 1,
+            _ => 1,
+        };
+        // `step` increments batches_since_switch before its cooldown
+        // check, hence the +1 here.
+        seen >= self.config.confirm_batches
+            && self.batches_since_switch + 1 >= self.config.cooldown_batches
+    }
+
+    /// Current expected-dwell estimate (batches).
+    pub fn expected_dwell(&self) -> f64 {
+        self.dwell_ewma.clamp(1.0, self.config.max_dwell_batches)
+    }
+
+    /// One control step, called once per batch *before* executing it.
+    ///
+    /// `candidate` is the plan-cache answer for `key`; `active_latency`
+    /// / `candidate_latency` are predicted per-batch latencies on the
+    /// current traffic; `switch_cost` is the weight-move cost from the
+    /// active layout to the candidate's. Returns the decision and
+    /// updates the active plan accordingly.
+    pub fn step(
+        &mut self,
+        key: QuantizedScenario,
+        candidate: &HybridPlan,
+        active_latency: f64,
+        candidate_latency: f64,
+        switch_cost: f64,
+    ) -> SwitchDecision {
+        self.batches_since_switch += 1;
+
+        let Some(active_key) = self.active_key else {
+            // Cold start: nothing resident, adopting is free.
+            self.active = Some(candidate.clone());
+            self.active_key = Some(key);
+            self.current_dwell = 1;
+            return SwitchDecision::Adopt;
+        };
+
+        if key == active_key {
+            self.pending = None;
+            self.current_dwell += 1;
+            return SwitchDecision::Stay;
+        }
+
+        // Key differs from the active phase: debounce it.
+        let seen = match self.pending {
+            Some((k, n)) if k == key => n + 1,
+            _ => 1,
+        };
+        self.pending = Some((key, seen));
+        if seen < self.config.confirm_batches {
+            return SwitchDecision::Stay;
+        }
+
+        // Same layout under a new key: relabel for free (no weights move).
+        let active_plan = self.active.as_ref().expect("active plan when key set");
+        if active_plan.attn == candidate.attn
+            && active_plan.expert_prefill == candidate.expert_prefill
+            && active_plan.expert_decode == candidate.expert_decode
+        {
+            self.finish_phase(key);
+            self.active = Some(candidate.clone());
+            return SwitchDecision::Stay;
+        }
+
+        if self.batches_since_switch < self.config.cooldown_batches {
+            self.suppressed += 1;
+            return SwitchDecision::Stay;
+        }
+
+        // Break-even economics: only switch when the projected savings
+        // over the expected dwell clear the cost with margin.
+        let gain_per_batch = active_latency - candidate_latency;
+        let projected_savings = gain_per_batch * self.expected_dwell();
+        if gain_per_batch <= 0.0 || projected_savings < self.config.breakeven_factor * switch_cost
+        {
+            self.suppressed += 1;
+            return SwitchDecision::Stay;
+        }
+
+        self.finish_phase(key);
+        self.active = Some(candidate.clone());
+        self.switches += 1;
+        self.batches_since_switch = 0;
+        SwitchDecision::Switch { projected_savings, cost: switch_cost }
+    }
+
+    /// Close out the current phase: fold its observed length into the
+    /// dwell EWMA and reset per-phase state for `new_key`.
+    fn finish_phase(&mut self, new_key: QuantizedScenario) {
+        if self.current_dwell > 0 {
+            self.dwell_ewma = 0.5 * self.dwell_ewma + 0.5 * self.current_dwell as f64;
+        }
+        self.active_key = Some(new_key);
+        self.pending = None;
+        self.current_dwell = 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+    use crate::sim::latency::ModuleLatency;
+    use crate::strategy::{AttnStrategy, ExpertStrategy};
+    use crate::transition::{TransitionCost, TransitionMethod};
+
+    fn plan(attn_tp: usize, pre_ep: usize, dec_ep: usize) -> HybridPlan {
+        let n = 4;
+        HybridPlan {
+            model: "test".into(),
+            node: "4xTest".into(),
+            scenario: Scenario::short_constrained(),
+            attn: AttnStrategy::new(attn_tp, n / attn_tp),
+            expert_prefill: ExpertStrategy::new(n / pre_ep, pre_ep),
+            expert_decode: ExpertStrategy::new(n / dec_ep, dec_ep),
+            transition: TransitionCost {
+                method: TransitionMethod::None,
+                overhead: 0.0,
+                raw_pipeline: 0.0,
+                reshard: 0.0,
+            },
+            predicted_prefill: ModuleLatency::default(),
+            predicted_decode: ModuleLatency::default(),
+            predicted_total: 1.0,
+            solve_time: 0.0,
+            k_a: 1,
+            k_e: 1,
+        }
+    }
+
+    fn key(ctx: usize) -> QuantizedScenario {
+        QuantizedScenario { context: ctx, generate: 64, batch: 16 }
+    }
+
+    #[test]
+    fn first_plan_adopted_free() {
+        let mut c = SwitchController::new(ControllerConfig::default());
+        let p = plan(4, 1, 1);
+        assert_eq!(c.step(key(256), &p, 0.0, 1.0, 9.9), SwitchDecision::Adopt);
+        assert!(c.active().is_some());
+        assert_eq!(c.switches, 0);
+    }
+
+    #[test]
+    fn switches_when_savings_clear_cost() {
+        let cfg = ControllerConfig { cooldown_batches: 0, ..Default::default() };
+        let mut c = SwitchController::new(cfg);
+        let a = plan(4, 1, 1);
+        let b = plan(4, 4, 1);
+        c.step(key(256), &a, 0.0, 1.0, 0.0);
+        for _ in 0..4 {
+            c.step(key(256), &a, 1.0, 1.0, 0.0);
+        }
+        // New phase: candidate saves 0.5 s/batch, dwell estimate 32 →
+        // 16 s projected vs 2×0.1 s cost → switch on the confirming
+        // observation.
+        assert_eq!(c.step(key(4096), &b, 1.5, 1.0, 0.1), SwitchDecision::Stay);
+        match c.step(key(4096), &b, 1.5, 1.0, 0.1) {
+            SwitchDecision::Switch { projected_savings, cost } => {
+                assert!(projected_savings >= 2.0 * cost);
+            }
+            other => panic!("expected switch, got {other:?}"),
+        }
+        assert_eq!(c.switches, 1);
+    }
+
+    #[test]
+    fn never_switches_below_breakeven() {
+        let cfg = ControllerConfig { cooldown_batches: 0, ..Default::default() };
+        let mut c = SwitchController::new(cfg);
+        let a = plan(4, 1, 1);
+        let b = plan(4, 4, 1);
+        c.step(key(256), &a, 0.0, 1.0, 0.0);
+        // Gain 1 ms/batch × dwell 32 = 32 ms << 2 × 10 s cost.
+        for _ in 0..20 {
+            let d = c.step(key(4096), &b, 1.001, 1.0, 10.0);
+            assert_ne!(d, SwitchDecision::Switch { projected_savings: 0.0, cost: 0.0 });
+            assert!(matches!(d, SwitchDecision::Stay));
+        }
+        assert_eq!(c.switches, 0);
+        assert!(c.suppressed > 0);
+    }
+
+    #[test]
+    fn alternating_keys_never_confirm() {
+        // Period-1 oscillation: each key lasts one batch, below the
+        // 2-batch debounce — weights must never move.
+        let mut c = SwitchController::new(ControllerConfig::default());
+        let a = plan(4, 1, 1);
+        let b = plan(4, 4, 1);
+        c.step(key(256), &a, 0.0, 1.0, 0.0);
+        for i in 0..50 {
+            let (k, p) = if i % 2 == 0 { (key(4096), &b) } else { (key(256), &a) };
+            c.step(k, p, 10.0, 1.0, 0.001);
+        }
+        assert_eq!(c.switches, 0);
+    }
+
+    #[test]
+    fn identical_layout_relabels_without_switch() {
+        let mut c = SwitchController::new(ControllerConfig::default());
+        let a = plan(4, 1, 1);
+        c.step(key(256), &a, 0.0, 1.0, 0.0);
+        for _ in 0..3 {
+            c.step(key(512), &a, 1.0, 1.0, 5.0);
+        }
+        assert_eq!(c.switches, 0);
+        // The key was re-pinned: staying on 512 is now Stay-with-reset.
+        assert_eq!(c.step(key(512), &a, 1.0, 1.0, 5.0), SwitchDecision::Stay);
+    }
+
+    #[test]
+    fn would_evaluate_mirrors_step_gating() {
+        let cfg = ControllerConfig {
+            confirm_batches: 2,
+            cooldown_batches: 0,
+            ..Default::default()
+        };
+        let mut c = SwitchController::new(cfg);
+        let a = plan(4, 1, 1);
+        assert!(!c.would_evaluate(key(256)), "no resident plan yet");
+        c.step(key(256), &a, 0.0, 1.0, 0.0);
+        assert!(!c.would_evaluate(key(256)), "steady state");
+        assert!(!c.would_evaluate(key(4096)), "debounce: first sighting");
+        c.step(key(4096), &a, 1.0, 1.0, 0.0);
+        assert!(c.would_evaluate(key(4096)), "confirming step reaches economics");
+        assert!(!c.would_evaluate(key(512)), "a different new key restarts debounce");
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_switches() {
+        let cfg = ControllerConfig {
+            cooldown_batches: 10,
+            confirm_batches: 1,
+            ..Default::default()
+        };
+        let mut c = SwitchController::new(cfg);
+        let a = plan(4, 1, 1);
+        let b = plan(4, 4, 1);
+        c.step(key(256), &a, 0.0, 1.0, 0.0);
+        for _ in 0..10 {
+            c.step(key(256), &a, 1.0, 1.0, 0.0);
+        }
+        assert!(matches!(
+            c.step(key(4096), &b, 9.0, 1.0, 0.001),
+            SwitchDecision::Switch { .. }
+        ));
+        // Immediately profitable to go back — but cooldown holds it.
+        let d = c.step(key(256), &a, 9.0, 1.0, 0.001);
+        assert!(matches!(d, SwitchDecision::Stay));
+        assert_eq!(c.switches, 1);
+    }
+}

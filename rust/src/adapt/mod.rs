@@ -1,0 +1,162 @@
+//! Online adaptive re-planning (paper §III "adaptive" loop, closed).
+//!
+//! The planner ([`crate::planner`]) solves for the optimal hybrid
+//! strategy of *one* scenario; this module is the control loop that
+//! keeps consulting it while traffic shifts — the half of "Hybrid
+//! **Adaptive** Parallelism" that a one-shot offline solve leaves on
+//! the table (cf. HD-MoE's dynamic TP/EP scheduling, arXiv 2509.09420,
+//! and EPS-MoE's phase-aware pipeline scheduling, arXiv 2410.12247).
+//!
+//! Four cooperating parts:
+//!
+//! - [`window`] — a sliding-window traffic monitor fed by the router/
+//!   batcher that tracks batch-size, prompt-length, and generation-
+//!   length distributions and emits a **quantized**
+//!   [`window::QuantizedScenario`], bucketed so nearby traffic maps to
+//!   the same key;
+//! - [`cache`] — memoized `plan()` results keyed on (model, quantized
+//!   scenario) with hit/miss counters, invalidated when the platform
+//!   ([`crate::config::hardware::GpuSpec`] / device count) changes;
+//! - [`controller`] — hysteresis logic that only re-shards weights when
+//!   the projected per-batch gain of the candidate plan, amortized over
+//!   an estimated phase dwell time, clears the strategy-switch cost by
+//!   a configurable safety factor — with debounce + cooldown so
+//!   oscillating traffic cannot thrash weights across layouts;
+//! - [`replay`] — a trace-driven replay harness: synthetic workload
+//!   traces (diurnal swell, chat→long-doc phase shift, context ramp,
+//!   fast oscillation) replayed through [`crate::cluster::EventSim`]
+//!   with [`crate::sim::LatencyModel`] durations, so adaptive vs
+//!   static vs oracle comparisons run deterministically without PJRT
+//!   artifacts.
+//!
+//! The serving loop consumes the same parts through
+//! [`crate::serving::ServeConfig::adaptive`], and the `hap adapt-replay`
+//! CLI command drives [`replay::compare`] directly.
+
+pub mod cache;
+pub mod controller;
+pub mod replay;
+pub mod window;
+
+pub use cache::PlanCache;
+pub use controller::{ControllerConfig, SwitchController, SwitchDecision};
+pub use replay::{ReplayComparison, ReplayReport, TracePoint, WorkloadTrace};
+pub use window::{QuantizedScenario, TrafficSample, TrafficWindow};
+
+use crate::config::hardware::NodeConfig;
+use crate::config::scenario::Scenario;
+use crate::planner::{HapPlanner, HybridPlan};
+use crate::Result;
+
+/// The assembled adaptation loop — window → cache → controller — as
+/// one per-batch step. Both the serving loop
+/// ([`crate::serving::ServeConfig::adaptive`]) and the replay harness
+/// ([`replay::replay_adaptive`]) drive this same implementation, so
+/// the behavior the replay acceptance tests validate is exactly what
+/// production serving executes.
+pub struct AdaptLoop {
+    pub window: TrafficWindow,
+    pub cache: PlanCache,
+    pub controller: SwitchController,
+    /// Platform the controller's resident plan was selected for; a
+    /// change resets the controller (the cache flushes itself).
+    platform: Option<NodeConfig>,
+}
+
+impl AdaptLoop {
+    pub fn new(config: ControllerConfig, window_capacity: usize) -> AdaptLoop {
+        AdaptLoop {
+            window: TrafficWindow::new(window_capacity),
+            cache: PlanCache::new(),
+            controller: SwitchController::new(config),
+            platform: None,
+        }
+    }
+
+    /// One batch: feed `samples` to the window, consult the plan cache
+    /// for the quantized key, and let the controller decide. Returns
+    /// the plan to execute this batch under, plus the decision (so a
+    /// caller can charge `SwitchDecision::Switch` costs to its
+    /// timeline).
+    ///
+    /// `eval` is the scenario the controller's latency economics are
+    /// evaluated on: the replay harness passes the actual trace point;
+    /// pass `None` to use the quantized key's representative (the
+    /// serving loop, which only has the window's view).
+    pub fn step<I: IntoIterator<Item = TrafficSample>>(
+        &mut self,
+        planner: &HapPlanner,
+        samples: I,
+        eval: Option<&Scenario>,
+    ) -> Result<(HybridPlan, SwitchDecision)> {
+        for s in samples {
+            self.window.observe(s);
+        }
+        // A platform change orphans the resident plan — its strategies
+        // target devices that no longer exist — so the controller is
+        // re-seeded (counters carry over) and the next step re-adopts
+        // from the freshly invalidated cache.
+        if self.platform.as_ref() != Some(planner.node) {
+            if self.platform.is_some() {
+                let mut fresh = SwitchController::new(self.controller.config.clone());
+                fresh.switches = self.controller.switches;
+                fresh.suppressed = self.controller.suppressed;
+                self.controller = fresh;
+            }
+            self.platform = Some(planner.node.clone());
+        }
+        let key = self.window.scenario().expect("step requires at least one observed sample");
+        let candidate = self.cache.plan(planner, key)?;
+        // Latency economics only matter when the controller could reach
+        // its break-even check this step; on the steady-state,
+        // cold-start, debounce, and cooldown paths `step` ignores them,
+        // so skip the forest evaluations entirely.
+        let (active_latency, candidate_latency, cost) = if self.controller.would_evaluate(key) {
+            let active = self.controller.active().expect("would_evaluate implies a resident plan");
+            let representative = key.to_scenario();
+            let sc = eval.unwrap_or(&representative);
+            (
+                replay::predicted_plan_latency(planner, active, sc),
+                replay::predicted_plan_latency(planner, &candidate, sc),
+                replay::switch_cost(planner, &active.expert_decode, &candidate.expert_prefill),
+            )
+        } else if self.controller.active().is_none() {
+            (f64::INFINITY, 0.0, 0.0)
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+        let decision =
+            self.controller.step(key, &candidate, active_latency, candidate_latency, cost);
+        let plan = self.controller.active().expect("plan adopted on first step").clone();
+        Ok((plan, decision))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MoEModelConfig;
+
+    #[test]
+    fn adapt_loop_readopts_after_platform_change() {
+        // A redeploy (different node) must not leak the old platform's
+        // resident plan, even when the traffic key never changes.
+        let m = MoEModelConfig::mixtral_8x7b();
+        let pcie = NodeConfig::a6000x(4);
+        let nvlink = NodeConfig::a100x(8);
+        let mut al = AdaptLoop::new(ControllerConfig::default(), 16);
+        let samples =
+            || (0..4).map(|_| TrafficSample { prompt: 4096, generate: 64, batch: 4 });
+        let p1 = HapPlanner::new(&m, &pcie);
+        let (plan, d) = al.step(&p1, samples(), None).unwrap();
+        assert_eq!(d, SwitchDecision::Adopt);
+        assert_eq!(plan.node, pcie.label());
+        let p2 = HapPlanner::new(&m, &nvlink);
+        let (plan, d) = al.step(&p2, samples(), None).unwrap();
+        assert_eq!(d, SwitchDecision::Adopt, "stale plan served after redeploy");
+        assert_eq!(plan.node, nvlink.label());
+        assert_eq!(al.cache.invalidations, 1);
+        // Re-adoption is not a weight-moving switch.
+        assert_eq!(al.controller.switches, 0);
+    }
+}

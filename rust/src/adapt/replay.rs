@@ -1,0 +1,559 @@
+//! Trace-driven replay: adaptive vs static vs oracle, without PJRT.
+//!
+//! A [`WorkloadTrace`] is a sequence of per-batch traffic points
+//! (prompt length, generation length, batch size). The replay harness
+//! runs each policy over the trace on a [`EventSim`] device timeline
+//! with durations from the platform's [`crate::sim::LatencyModel`]:
+//!
+//! - **adaptive** — the full loop: [`TrafficWindow`] → quantized key →
+//!   [`PlanCache`] → [`SwitchController`]; weight-moving switches are
+//!   charged as global transition spans;
+//! - **static** — one fixed strategy triple for the whole trace (pure
+//!   TP-N, or the best plan for the *first* phase chosen a priori);
+//! - **oracle** — the per-phase optimal plan with *free* switches: the
+//!   lower bound an online policy is judged against.
+//!
+//! Everything is deterministic: traces are seeded, the latency model is
+//! deterministic per platform, and the simulator is exact, so replay
+//! results are reproducible in tests and CI.
+
+use crate::adapt::cache::PlanCache;
+use crate::adapt::controller::{ControllerConfig, SwitchDecision};
+use crate::adapt::window::{QuantizedScenario, TrafficSample};
+use crate::adapt::AdaptLoop;
+use crate::cluster::{EventSim, OpKind};
+use crate::config::scenario::Scenario;
+use crate::planner::{HapPlanner, HybridPlan};
+use crate::sim::latency::ModuleLatency;
+use crate::strategy::{AttnStrategy, ExpertStrategy};
+use crate::transition::TransitionModel;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::Result;
+
+/// One batch worth of traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TracePoint {
+    pub context: usize,
+    pub generate: usize,
+    pub batch: usize,
+}
+
+impl TracePoint {
+    /// The exact (un-quantized) scenario this batch executes under.
+    pub fn scenario(&self) -> Scenario {
+        Scenario::new("trace-point", self.context, self.generate, self.batch)
+    }
+
+    fn jittered(rng: &mut Rng, context: usize, generate: usize, batch: usize) -> TracePoint {
+        let j = |rng: &mut Rng, x: usize| {
+            (((x as f64) * rng.range_f64(0.94, 1.06)).round() as usize).max(1)
+        };
+        TracePoint { context: j(rng, context), generate: j(rng, generate), batch: j(rng, batch) }
+    }
+}
+
+/// (context, generate) of the "bursty chat" phase: short prompts,
+/// extended generation — decode-dominated.
+pub const CHAT_PHASE: (usize, usize) = (256, 2048);
+/// (context, generate) of the "long document" phase: long prompts,
+/// constrained generation — prefill-dominated.
+pub const DOC_PHASE: (usize, usize) = (4096, 64);
+
+/// A named, deterministic sequence of per-batch traffic points.
+#[derive(Debug, Clone)]
+pub struct WorkloadTrace {
+    pub name: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl WorkloadTrace {
+    /// Chat → long-doc phase change: `batches_per_phase` batches of
+    /// [`CHAT_PHASE`] traffic, then the same of [`DOC_PHASE`], each
+    /// point jittered ±6% (within one quantization bucket).
+    pub fn phase_shift(batches_per_phase: usize, batch: usize, seed: u64) -> WorkloadTrace {
+        let mut rng = Rng::new(seed);
+        let mut points = Vec::with_capacity(2 * batches_per_phase);
+        for (ctx, gen) in [CHAT_PHASE, DOC_PHASE] {
+            for _ in 0..batches_per_phase {
+                points.push(TracePoint::jittered(&mut rng, ctx, gen, batch));
+            }
+        }
+        WorkloadTrace { name: "phase-shift".into(), points }
+    }
+
+    /// Diurnal load swell: fixed request shape, batch size sweeping
+    /// 4 → `peak_batch` → 4 sinusoidally with period `period` batches.
+    pub fn diurnal(batches: usize, period: usize, peak_batch: usize, seed: u64) -> WorkloadTrace {
+        let mut rng = Rng::new(seed);
+        let swing = peak_batch.max(5) as f64 - 4.0;
+        let points = (0..batches)
+            .map(|i| {
+                let phase = (i as f64) / (period.max(1) as f64) * std::f64::consts::TAU;
+                let batch = (4.0 + swing * 0.5 * (1.0 + phase.sin())).round() as usize;
+                TracePoint::jittered(&mut rng, 512, 256, batch.max(1))
+            })
+            .collect();
+        WorkloadTrace { name: "diurnal".into(), points }
+    }
+
+    /// Context ramp: prompt length grows geometrically 128 → 8192 over
+    /// the trace (a fleet gradually shifting to long-document traffic).
+    pub fn ramp(batches: usize, batch: usize, seed: u64) -> WorkloadTrace {
+        let mut rng = Rng::new(seed);
+        let points = (0..batches)
+            .map(|i| {
+                let t = i as f64 / (batches.max(2) - 1) as f64;
+                let ctx = (128.0 * (2.0f64).powf(6.0 * t)).round() as usize;
+                TracePoint::jittered(&mut rng, ctx, 128, batch)
+            })
+            .collect();
+        WorkloadTrace { name: "ramp".into(), points }
+    }
+
+    /// Fast oscillation between [`CHAT_PHASE`] and [`DOC_PHASE`] every
+    /// `period` batches — the flap-damping stress test.
+    pub fn oscillating(batches: usize, period: usize, batch: usize, seed: u64) -> WorkloadTrace {
+        let mut rng = Rng::new(seed);
+        let points = (0..batches)
+            .map(|i| {
+                let (ctx, gen) =
+                    if (i / period.max(1)) % 2 == 0 { CHAT_PHASE } else { DOC_PHASE };
+                TracePoint::jittered(&mut rng, ctx, gen, batch)
+            })
+            .collect();
+        WorkloadTrace { name: "oscillating".into(), points }
+    }
+
+    /// CLI-facing lookup; `batches` is the total trace length.
+    pub fn preset(name: &str, batches: usize, batch: usize, seed: u64) -> Option<WorkloadTrace> {
+        match name {
+            "phase-shift" => {
+                // Honor odd totals exactly: build ceil(b/2) per phase,
+                // then trim the tail so points.len() == batches.
+                let mut t = Self::phase_shift(batches.div_ceil(2).max(1), batch, seed);
+                t.points.truncate(batches.max(1));
+                Some(t)
+            }
+            "diurnal" => Some(Self::diurnal(batches, (batches / 4).max(2), batch.max(8), seed)),
+            "ramp" => Some(Self::ramp(batches.max(2), batch, seed)),
+            "oscillating" => Some(Self::oscillating(batches, 1, batch, seed)),
+            _ => None,
+        }
+    }
+}
+
+/// Predicted per-batch cost of running a strategy triple on a scenario.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchCost {
+    pub prefill: ModuleLatency,
+    pub decode: ModuleLatency,
+    /// The plan's own prefill→decode expert transition (eq. 6), charged
+    /// once per batch when the stages differ.
+    pub stage_transition: f64,
+}
+
+impl BatchCost {
+    pub fn total(&self) -> f64 {
+        self.prefill.total() + self.decode.total() + self.stage_transition
+    }
+}
+
+/// Evaluate a strategy triple on one scenario through the planner's
+/// latency model (prefill + decode + eq.-6 stage transition).
+pub fn batch_cost(
+    planner: &HapPlanner,
+    attn: &AttnStrategy,
+    expert_prefill: &ExpertStrategy,
+    expert_decode: &ExpertStrategy,
+    sc: &Scenario,
+) -> BatchCost {
+    let lm = &*planner.latency;
+    let prefill = lm.prefill_latency(planner.model, attn, expert_prefill, sc);
+    let decode = lm.decode_latency(planner.model, attn, expert_decode, sc);
+    let stage_transition = if expert_prefill == expert_decode {
+        0.0
+    } else {
+        let tm = TransitionModel::new(planner.model, &planner.node.gpu);
+        tm.cost(lm, expert_prefill, expert_decode, prefill.total()).overhead
+    };
+    BatchCost { prefill, decode, stage_transition }
+}
+
+/// Predicted per-batch latency of a whole plan on (possibly different)
+/// traffic — what the controller's economics compare.
+pub fn predicted_plan_latency(planner: &HapPlanner, plan: &HybridPlan, sc: &Scenario) -> f64 {
+    batch_cost(planner, &plan.attn, &plan.expert_prefill, &plan.expert_decode, sc).total()
+}
+
+/// Cost of moving resident weights from one expert layout to another
+/// between batches (no live prefill to overlap with → zero overlap
+/// budget). Attention weights ride along in the same redistribution;
+/// no KV cache moves because batches complete before a plan switch.
+pub fn switch_cost(planner: &HapPlanner, from: &ExpertStrategy, to: &ExpertStrategy) -> f64 {
+    if from == to {
+        return 0.0;
+    }
+    let tm = TransitionModel::new(planner.model, &planner.node.gpu);
+    tm.cost(&planner.latency, from, to, 0.0).overhead
+}
+
+fn execute_batch(sim: &mut EventSim, cost: &BatchCost) {
+    let n = sim.num_devices();
+    let attn_t = cost.prefill.attn + cost.decode.attn;
+    let expert_t = cost.prefill.expert + cost.decode.expert;
+    let comm_t = cost.prefill.comm + cost.decode.comm;
+    let attn_durs: Vec<(usize, f64)> = (0..n).map(|d| (d, attn_t)).collect();
+    sim.parallel_compute(&attn_durs, OpKind::Attention, "adapt-attn");
+    let expert_durs: Vec<(usize, f64)> = (0..n).map(|d| (d, expert_t)).collect();
+    sim.parallel_compute(&expert_durs, OpKind::Expert, "adapt-experts");
+    if comm_t > 0.0 {
+        let all: Vec<usize> = (0..n).collect();
+        sim.collective(&all, comm_t, "adapt-comm");
+    }
+    if cost.stage_transition > 0.0 {
+        sim.transition(cost.stage_transition, "stage-transition");
+    }
+}
+
+/// Aggregate result of replaying one policy over one trace.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub policy: String,
+    pub batches: usize,
+    /// End-to-end simulated makespan, seconds (switch costs included).
+    pub total_s: f64,
+    /// Weight-moving plan switches (inter-plan; oracle's are free).
+    pub switches: usize,
+    /// Seconds charged for inter-plan switches.
+    pub switch_time_s: f64,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    pub cache_hit_rate: f64,
+}
+
+impl ReplayReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", self.policy.as_str().into()),
+            ("batches", self.batches.into()),
+            ("total_s", self.total_s.into()),
+            ("switches", self.switches.into()),
+            ("switch_time_s", self.switch_time_s.into()),
+            ("cache_hits", self.cache_hits.into()),
+            ("cache_misses", self.cache_misses.into()),
+            ("cache_hit_rate", self.cache_hit_rate.into()),
+        ])
+    }
+}
+
+/// Replay the full adaptive loop (the shared [`AdaptLoop`]:
+/// window → cache → controller), charging weight-moving switches to
+/// the simulated timeline.
+pub fn replay_adaptive(
+    planner: &HapPlanner,
+    trace: &WorkloadTrace,
+    config: &ControllerConfig,
+    window_capacity: usize,
+) -> Result<ReplayReport> {
+    let mut sim = EventSim::new(planner.node.num_devices);
+    let mut control = AdaptLoop::new(config.clone(), window_capacity);
+    let mut switch_time = 0.0;
+
+    for point in &trace.points {
+        // The batcher feeds one sample per request in the batch.
+        let samples = (0..point.batch).map(|_| TrafficSample {
+            prompt: point.context,
+            generate: point.generate,
+            batch: point.batch,
+        });
+        let sc = point.scenario();
+        let (plan, decision) = control.step(planner, samples, Some(&sc))?;
+        if let SwitchDecision::Switch { cost, .. } = decision {
+            if cost > 0.0 {
+                sim.transition(cost, "replan-switch");
+                switch_time += cost;
+            }
+        }
+        let bc = batch_cost(planner, &plan.attn, &plan.expert_prefill, &plan.expert_decode, &sc);
+        execute_batch(&mut sim, &bc);
+    }
+
+    Ok(ReplayReport {
+        policy: "adaptive".into(),
+        batches: trace.points.len(),
+        total_s: sim.now(),
+        switches: control.controller.switches,
+        switch_time_s: switch_time,
+        cache_hits: control.cache.hits,
+        cache_misses: control.cache.misses,
+        cache_hit_rate: control.cache.hit_rate(),
+    })
+}
+
+/// Replay one fixed strategy triple over the whole trace.
+pub fn replay_fixed(
+    planner: &HapPlanner,
+    trace: &WorkloadTrace,
+    policy: &str,
+    attn: &AttnStrategy,
+    expert_prefill: &ExpertStrategy,
+    expert_decode: &ExpertStrategy,
+) -> ReplayReport {
+    let mut sim = EventSim::new(planner.node.num_devices);
+    for point in &trace.points {
+        let sc = point.scenario();
+        let bc = batch_cost(planner, attn, expert_prefill, expert_decode, &sc);
+        execute_batch(&mut sim, &bc);
+    }
+    ReplayReport {
+        policy: policy.into(),
+        batches: trace.points.len(),
+        total_s: sim.now(),
+        switches: 0,
+        switch_time_s: 0.0,
+        cache_hits: 0,
+        cache_misses: 0,
+        cache_hit_rate: 0.0,
+    }
+}
+
+/// Replay the clairvoyant baseline: per-phase optimal plan, free
+/// switches (no confirm delay, no weight-move cost).
+pub fn replay_oracle(planner: &HapPlanner, trace: &WorkloadTrace) -> Result<ReplayReport> {
+    let mut sim = EventSim::new(planner.node.num_devices);
+    let mut cache = PlanCache::new();
+    let mut switches = 0usize;
+    let mut last_sig: Option<String> = None;
+    for point in &trace.points {
+        let key = QuantizedScenario::from_estimates(point.context, point.generate, point.batch);
+        let plan = cache.plan(planner, key)?;
+        let sig = plan.signature();
+        if last_sig.as_deref().is_some_and(|s| s != sig.as_str()) {
+            switches += 1;
+        }
+        last_sig = Some(sig);
+        let sc = point.scenario();
+        let bc = batch_cost(planner, &plan.attn, &plan.expert_prefill, &plan.expert_decode, &sc);
+        execute_batch(&mut sim, &bc);
+    }
+    Ok(ReplayReport {
+        policy: "oracle".into(),
+        batches: trace.points.len(),
+        total_s: sim.now(),
+        switches,
+        switch_time_s: 0.0,
+        cache_hits: cache.hits,
+        cache_misses: cache.misses,
+        cache_hit_rate: cache.hit_rate(),
+    })
+}
+
+/// All four policies over one trace.
+#[derive(Debug, Clone)]
+pub struct ReplayComparison {
+    pub trace: String,
+    pub batches: usize,
+    pub adaptive: ReplayReport,
+    pub static_tp: ReplayReport,
+    /// Best single plan chosen a priori for the trace's *first* phase.
+    pub static_first: ReplayReport,
+    pub oracle: ReplayReport,
+}
+
+impl ReplayComparison {
+    /// Policies in presentation order: baselines first, oracle last.
+    pub fn policies(&self) -> [&ReplayReport; 4] {
+        [&self.static_tp, &self.static_first, &self.adaptive, &self.oracle]
+    }
+
+    /// Table cells for one policy row: policy, total (s), switches,
+    /// switch time (s), total relative to adaptive. Shared by the CLI
+    /// and the bench so the two renderings cannot drift.
+    pub fn row_cells(&self, r: &ReplayReport) -> Vec<String> {
+        vec![
+            r.policy.clone(),
+            format!("{:.3}", r.total_s),
+            format!("{}", r.switches),
+            format!("{:.3}", r.switch_time_s),
+            format!("{:.2}x", r.total_s / self.adaptive.total_s),
+        ]
+    }
+
+    /// Headline ratios + plan-cache stats as one human-readable line.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "adaptive: {:.2}x vs static TP, {:.2}x vs static first-phase plan, \
+             {:.1}% over oracle | plan cache: {} hits / {} misses ({:.0}% hit rate)",
+            self.vs_static_tp(),
+            self.vs_static_first(),
+            (self.vs_oracle() - 1.0) * 100.0,
+            self.adaptive.cache_hits,
+            self.adaptive.cache_misses,
+            self.adaptive.cache_hit_rate * 100.0
+        )
+    }
+
+    /// Speedup of adaptive over pure static TP (>1 = adaptive wins).
+    pub fn vs_static_tp(&self) -> f64 {
+        self.static_tp.total_s / self.adaptive.total_s
+    }
+
+    pub fn vs_static_first(&self) -> f64 {
+        self.static_first.total_s / self.adaptive.total_s
+    }
+
+    /// Adaptive excess over the free-switch oracle (1.0 = matches it).
+    pub fn vs_oracle(&self) -> f64 {
+        self.adaptive.total_s / self.oracle.total_s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace", self.trace.as_str().into()),
+            ("batches", self.batches.into()),
+            (
+                "policies",
+                Json::Arr(vec![
+                    self.adaptive.to_json(),
+                    self.static_tp.to_json(),
+                    self.static_first.to_json(),
+                    self.oracle.to_json(),
+                ]),
+            ),
+            ("adaptive_vs_static_tp", self.vs_static_tp().into()),
+            ("adaptive_vs_static_first", self.vs_static_first().into()),
+            ("adaptive_vs_oracle", self.vs_oracle().into()),
+            ("cache_hit_rate", self.adaptive.cache_hit_rate.into()),
+        ])
+    }
+}
+
+/// Run the standard four-way comparison on one trace.
+pub fn compare(
+    planner: &HapPlanner,
+    trace: &WorkloadTrace,
+    config: &ControllerConfig,
+    window_capacity: usize,
+) -> Result<ReplayComparison> {
+    let n = planner.node.num_devices;
+    let adaptive = replay_adaptive(planner, trace, config, window_capacity)?;
+    let tp = ExpertStrategy::new(n, 1);
+    let static_tp =
+        replay_fixed(planner, trace, "static-tp", &AttnStrategy::new(n, 1), &tp, &tp);
+    let first = trace.points.first().ok_or_else(|| anyhow::anyhow!("empty trace"))?;
+    let first_key = QuantizedScenario::from_estimates(first.context, first.generate, first.batch);
+    let first_sc = first_key.to_scenario();
+    let first_plan = planner.plan(&first_sc, first_sc.generate)?;
+    let static_first = replay_fixed(
+        planner,
+        trace,
+        "static-first-phase",
+        &first_plan.attn,
+        &first_plan.expert_prefill,
+        &first_plan.expert_decode,
+    );
+    let oracle = replay_oracle(planner, trace)?;
+    Ok(ReplayComparison {
+        trace: trace.name.clone(),
+        batches: trace.points.len(),
+        adaptive,
+        static_tp,
+        static_first,
+        oracle,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{MoEModelConfig, NodeConfig};
+
+    #[test]
+    fn traces_are_deterministic_and_sized() {
+        let a = WorkloadTrace::phase_shift(10, 16, 7);
+        let b = WorkloadTrace::phase_shift(10, 16, 7);
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.points.len(), 20);
+        assert_eq!(WorkloadTrace::diurnal(30, 10, 32, 1).points.len(), 30);
+        // The diurnal sweep honors the requested peak batch size.
+        let peak = WorkloadTrace::diurnal(40, 10, 32, 1)
+            .points
+            .iter()
+            .map(|p| p.batch)
+            .max()
+            .unwrap();
+        assert!((28..=36).contains(&peak), "peak batch {peak}");
+        assert_eq!(WorkloadTrace::ramp(12, 16, 1).points.len(), 12);
+        assert_eq!(WorkloadTrace::oscillating(16, 1, 16, 1).points.len(), 16);
+        assert!(WorkloadTrace::preset("phase-shift", 8, 16, 1).is_some());
+        // Odd totals are honored exactly.
+        assert_eq!(WorkloadTrace::preset("phase-shift", 25, 16, 1).unwrap().points.len(), 25);
+        assert!(WorkloadTrace::preset("nope", 8, 16, 1).is_none());
+    }
+
+    #[test]
+    fn ramp_context_grows_within_bounds() {
+        let t = WorkloadTrace::ramp(20, 16, 3);
+        assert!(t.points.first().unwrap().context < 200);
+        assert!(t.points.last().unwrap().context > 6000);
+    }
+
+    #[test]
+    fn oscillating_trace_never_thrashes_weights() {
+        // Batch-period flapping between chat and long-doc traffic with
+        // a one-tick window (16 samples = one 16-request batch): the
+        // traffic key truly alternates every batch, so the debounce
+        // guard must keep weights pinned — zero switches.
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let points: Vec<TracePoint> = (0..24)
+            .map(|i| {
+                let (ctx, gen) = if i % 2 == 0 { CHAT_PHASE } else { DOC_PHASE };
+                TracePoint { context: ctx, generate: gen, batch: 16 }
+            })
+            .collect();
+        let trace = WorkloadTrace { name: "osc-exact".into(), points };
+        let report =
+            replay_adaptive(&planner, &trace, &ControllerConfig::default(), 16).unwrap();
+        assert_eq!(report.switches, 0, "flapping trace moved weights");
+        assert_eq!(report.switch_time_s, 0.0);
+        assert!(report.total_s.is_finite() && report.total_s > 0.0);
+    }
+
+    #[test]
+    fn fixed_replay_accounts_every_batch() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let trace = WorkloadTrace::phase_shift(3, 16, 5);
+        let n = node.num_devices;
+        let r = replay_fixed(
+            &planner,
+            &trace,
+            "static-tp",
+            &AttnStrategy::new(n, 1),
+            &ExpertStrategy::new(n, 1),
+            &ExpertStrategy::new(n, 1),
+        );
+        assert_eq!(r.batches, 6);
+        // Sum of per-batch predictions equals the simulated makespan
+        // (uniform per-device durations → no straggler skew).
+        let expected: f64 = trace
+            .points
+            .iter()
+            .map(|p| {
+                batch_cost(
+                    &planner,
+                    &AttnStrategy::new(n, 1),
+                    &ExpertStrategy::new(n, 1),
+                    &ExpertStrategy::new(n, 1),
+                    &p.scenario(),
+                )
+                .total()
+            })
+            .sum();
+        assert!((r.total_s - expected).abs() < 1e-9 * expected.max(1.0));
+    }
+}

@@ -1,0 +1,214 @@
+//! Sliding-window traffic estimation → quantized scenario keys.
+//!
+//! The router/batcher feeds one [`TrafficSample`] per admitted request;
+//! the window keeps the last `capacity` samples, **quantizes each
+//! sample individually** to power-of-two buckets
+//! ([`QuantizedScenario`]), and emits the *modal* key — the bucket most
+//! of the recent traffic falls in, with ties broken toward the most
+//! recent samples. Voting over whole sample keys (rather than
+//! summarizing each dimension independently) means the emitted key is
+//! always one that real traffic produced: at a phase boundary the
+//! window flips from the old phase's key to the new one without ever
+//! synthesizing a "phantom" mixture (e.g. the old phase's generation
+//! length paired with the new phase's context), so the controller
+//! never pays a weight move toward traffic that does not exist.
+
+use crate::config::scenario::Scenario;
+use std::collections::{HashMap, VecDeque};
+
+/// One observed request (or batch-aggregate) fed to the monitor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficSample {
+    /// Prompt length in tokens.
+    pub prompt: usize,
+    /// Requested generation length in tokens.
+    pub generate: usize,
+    /// Batch size the request was (or will be) served under.
+    pub batch: usize,
+}
+
+/// A scenario quantized to power-of-two buckets — the plan-cache key.
+///
+/// The stored values are the bucket *representatives* (powers of two),
+/// so equal keys mean "same quantized traffic" and
+/// [`QuantizedScenario::to_scenario`] reconstructs the representative
+/// [`Scenario`] the planner solves for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QuantizedScenario {
+    pub context: usize,
+    pub generate: usize,
+    pub batch: usize,
+}
+
+/// Round `x` to the nearest power of two in log space (ties go up);
+/// `x = 0` maps to 1 so keys stay well-formed.
+pub fn quantize_pow2(x: usize) -> usize {
+    if x <= 1 {
+        return 1;
+    }
+    let exp = (x as f64).log2().round() as u32;
+    1usize << exp.min(usize::BITS - 2)
+}
+
+impl QuantizedScenario {
+    /// Quantize raw per-dimension estimates into a key.
+    pub fn from_estimates(context: usize, generate: usize, batch: usize) -> Self {
+        QuantizedScenario {
+            context: quantize_pow2(context),
+            generate: quantize_pow2(generate),
+            batch: quantize_pow2(batch),
+        }
+    }
+
+    /// Quantize a full scenario (oracle/static baselines reuse the same
+    /// bucketing the window applies).
+    pub fn from_scenario(sc: &Scenario) -> Self {
+        Self::from_estimates(sc.context, sc.generate, sc.batch)
+    }
+
+    /// The representative scenario this key stands for.
+    pub fn to_scenario(&self) -> Scenario {
+        Scenario::new(&self.label(), self.context, self.generate, self.batch)
+    }
+
+    pub fn label(&self) -> String {
+        format!("q-ctx{}-gen{}-b{}", self.context, self.generate, self.batch)
+    }
+}
+
+/// Sliding-window monitor over recent traffic.
+#[derive(Debug, Clone)]
+pub struct TrafficWindow {
+    samples: VecDeque<TrafficSample>,
+    capacity: usize,
+}
+
+impl TrafficWindow {
+    pub fn new(capacity: usize) -> TrafficWindow {
+        assert!(capacity > 0, "window capacity must be positive");
+        TrafficWindow { samples: VecDeque::with_capacity(capacity), capacity }
+    }
+
+    /// Record one sample, evicting the oldest beyond capacity.
+    pub fn observe(&mut self, sample: TrafficSample) {
+        if self.samples.len() == self.capacity {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(sample);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn key_of(s: &TrafficSample) -> QuantizedScenario {
+        QuantizedScenario::from_estimates(s.prompt, s.generate, s.batch)
+    }
+
+    /// Current quantized scenario estimate (None until any traffic):
+    /// the modal per-sample key, ties broken toward recency. Always a
+    /// key some real sample produced — never a cross-dimension mixture.
+    pub fn scenario(&self) -> Option<QuantizedScenario> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut counts: HashMap<QuantizedScenario, usize> = HashMap::new();
+        for s in &self.samples {
+            *counts.entry(Self::key_of(s)).or_insert(0) += 1;
+        }
+        let max = counts.values().copied().max().unwrap_or(0);
+        self.samples.iter().rev().map(Self::key_of).find(|k| counts[k] == max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_quantization_buckets_nearby_values() {
+        assert_eq!(quantize_pow2(0), 1);
+        assert_eq!(quantize_pow2(1), 1);
+        assert_eq!(quantize_pow2(3), 4);
+        assert_eq!(quantize_pow2(256), 256);
+        // ±10% around a bucket center stays in the bucket.
+        for x in [230, 256, 281] {
+            assert_eq!(quantize_pow2(x), 256, "x={x}");
+        }
+        for x in [3700, 4096, 4500] {
+            assert_eq!(quantize_pow2(x), 4096, "x={x}");
+        }
+    }
+
+    #[test]
+    fn window_emits_quantized_modal_key() {
+        let mut w = TrafficWindow::new(16);
+        assert!(w.scenario().is_none());
+        for i in 0..8 {
+            w.observe(TrafficSample { prompt: 250 + i, generate: 60 + i, batch: 16 });
+        }
+        let key = w.scenario().unwrap();
+        assert_eq!(key, QuantizedScenario { context: 256, generate: 64, batch: 16 });
+        assert_eq!(key.to_scenario().context, 256);
+    }
+
+    #[test]
+    fn mixed_window_never_emits_phantom_keys() {
+        // At a phase boundary the window holds both phases; the emitted
+        // key must be one of the two real keys (most-recent on a tie),
+        // never a cross-dimension mixture like (doc ctx, chat gen).
+        let chat = TrafficSample { prompt: 256, generate: 2048, batch: 16 };
+        let doc = TrafficSample { prompt: 4096, generate: 64, batch: 16 };
+        let chat_key = QuantizedScenario::from_estimates(256, 2048, 16);
+        let doc_key = QuantizedScenario::from_estimates(4096, 64, 16);
+        let mut w = TrafficWindow::new(8);
+        for _ in 0..8 {
+            w.observe(chat);
+        }
+        for pushed in 1..=8usize {
+            w.observe(doc);
+            let key = w.scenario().unwrap();
+            assert!(key == chat_key || key == doc_key, "phantom key {key:?}");
+            // Majority (or most-recent on the 4/4 tie) rules.
+            if pushed >= 4 {
+                assert_eq!(key, doc_key, "after {pushed} doc samples");
+            } else {
+                assert_eq!(key, chat_key, "after {pushed} doc samples");
+            }
+        }
+    }
+
+    #[test]
+    fn window_slides_to_new_phase() {
+        let mut w = TrafficWindow::new(8);
+        for _ in 0..8 {
+            w.observe(TrafficSample { prompt: 256, generate: 2048, batch: 16 });
+        }
+        let chat = w.scenario().unwrap();
+        // A full window of long-doc traffic flips the key.
+        for _ in 0..8 {
+            w.observe(TrafficSample { prompt: 4096, generate: 64, batch: 16 });
+        }
+        let doc = w.scenario().unwrap();
+        assert_ne!(chat, doc);
+        assert_eq!(doc.context, 4096);
+        assert_eq!(doc.generate, 64);
+    }
+
+    #[test]
+    fn jitter_within_a_phase_keeps_one_key() {
+        let mut w = TrafficWindow::new(32);
+        let mut keys = std::collections::HashSet::new();
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..200 {
+            let jit = |x: usize| ((x as f64) * rng.range_f64(0.92, 1.08)) as usize;
+            w.observe(TrafficSample { prompt: jit(4096), generate: jit(64), batch: jit(16) });
+            keys.insert(w.scenario().unwrap());
+        }
+        assert_eq!(keys.len(), 1, "jittered phase split into {keys:?}");
+    }
+}

@@ -42,10 +42,27 @@ impl Ord for Node {
 
 /// Solve a 0-1 ILP exactly.
 pub fn branch_and_bound(problem: &Problem) -> Outcome {
+    branch_and_bound_warm(problem, None)
+}
+
+/// [`branch_and_bound`] seeded with a warm-start incumbent: a feasible
+/// 0/1 assignment whose objective becomes the initial upper bound, so
+/// bound-pruning is active from the first node instead of only after
+/// the first integral solution is found. Infeasible or ill-sized warm
+/// assignments are ignored (cold start); the result is always the
+/// exact optimum, and the explored node count never exceeds the
+/// cold-start count for the same problem.
+pub fn branch_and_bound_warm(problem: &Problem, warm: Option<&[f64]>) -> Outcome {
     let n = problem.num_vars;
     let root_fixed = vec![None; n];
     let mut heap = BinaryHeap::new();
-    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    let mut incumbent: Option<(Vec<f64>, f64)> = warm.and_then(|x| {
+        if x.len() == n && problem.feasible(x, 1e-6) {
+            Some((x.to_vec(), problem.objective_value(x)))
+        } else {
+            None
+        }
+    });
     let mut nodes_explored = 0usize;
 
     // Bound-implication analysis depends only on the problem; do it
@@ -55,6 +72,17 @@ pub fn branch_and_bound(problem: &Problem) -> Outcome {
         LpResult::Infeasible => return Outcome::Infeasible,
         LpResult::Optimal { x, objective } => {
             if most_fractional(&x, &root_fixed).is_some() {
+                // Root bound already meets the warm incumbent → the
+                // incumbent is optimal; no nodes to explore.
+                if let Some((ix, io)) = &incumbent {
+                    if objective >= *io - 1e-12 {
+                        return Outcome::Optimal {
+                            x: ix.clone(),
+                            objective: *io,
+                            nodes_explored: 0,
+                        };
+                    }
+                }
                 heap.push(Node { bound: objective, fixed: root_fixed.clone(), x });
             } else {
                 return Outcome::Optimal { x, objective, nodes_explored: 1 };
@@ -185,6 +213,52 @@ mod tests {
                 }
                 (b, o) => panic!("trial {trial}: feasibility mismatch {b:?} vs {o:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn warm_start_same_optimum_never_more_nodes() {
+        use crate::ilp::{solve_warm, Outcome};
+        let mut rng = Rng::new(77);
+        for trial in 0..40 {
+            let n = rng.range(4, 10);
+            let mut p = Problem::new();
+            let vars = p.binaries("x", n);
+            for &v in &vars {
+                p.set_objective_term(v, rng.range_f64(-8.0, 8.0));
+            }
+            for ci in 0..rng.range(1, 3) {
+                let mut e = LinExpr::new();
+                for &v in &vars {
+                    if rng.chance(0.6) {
+                        e.add_term(v, rng.range_f64(-2.0, 4.0));
+                    }
+                }
+                p.constrain(&format!("c{ci}"), e, Sense::Le, rng.range_f64(1.0, 6.0));
+            }
+            let cold = solve(&p);
+            let Outcome::Optimal { x, objective, nodes_explored: cold_nodes } = cold else {
+                continue;
+            };
+            // Warm with the optimum itself (tightest possible bound).
+            let warm = solve_warm(&p, &x);
+            let Outcome::Optimal { objective: wo, nodes_explored: warm_nodes, .. } = warm
+            else {
+                panic!("trial {trial}: warm infeasible but cold optimal");
+            };
+            assert!((wo - objective).abs() < 1e-9, "trial {trial}: {wo} vs {objective}");
+            assert!(
+                warm_nodes <= cold_nodes,
+                "trial {trial}: warm explored {warm_nodes} > cold {cold_nodes}"
+            );
+            // A bogus warm vector must be ignored, not corrupt the solve.
+            let bogus = vec![1.0; p.num_vars + 3];
+            let Outcome::Optimal { objective: bo, .. } =
+                crate::ilp::bb::branch_and_bound_warm(&p, Some(&bogus))
+            else {
+                panic!("trial {trial}: bogus warm broke feasibility");
+            };
+            assert!((bo - objective).abs() < 1e-9);
         }
     }
 

@@ -180,6 +180,14 @@ pub fn solve(problem: &Problem) -> Outcome {
     bb::branch_and_bound(problem)
 }
 
+/// Solve with a warm-start incumbent: `warm` is a known-feasible 0/1
+/// assignment (e.g. the planner's brute-force-over-tables optimum)
+/// seeding branch & bound's upper bound so pruning starts at node one.
+/// Exact like [`solve`]; never explores more nodes than a cold start.
+pub fn solve_warm(problem: &Problem, warm: &[f64]) -> Outcome {
+    bb::branch_and_bound_warm(problem, Some(warm))
+}
+
 /// Solve with the pre-optimization reference solver (perf baselines,
 /// cross-checks). Same optima, slower.
 pub fn solve_reference(problem: &Problem) -> Outcome {

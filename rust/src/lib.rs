@@ -9,9 +9,11 @@
 //!   exact 0-1 ILP solver ([`ilp`]), the HAP planner ([`planner`]), the
 //!   dynamic parallelism-transition mechanism ([`transition`], [`quant`]),
 //!   a discrete-event multi-GPU cluster simulator ([`cluster`]) with an
-//!   MoE execution engine ([`engine`]), and a real serving runtime
-//!   ([`serving`], [`model`]) that executes AOT-compiled JAX/Pallas
-//!   artifacts through PJRT ([`runtime`]).
+//!   MoE execution engine ([`engine`]), an online adaptation loop
+//!   ([`adapt`]: traffic window → plan cache → switch controller →
+//!   trace replay), and a real serving runtime ([`serving`], [`model`])
+//!   that executes AOT-compiled JAX/Pallas artifacts through PJRT
+//!   ([`runtime`]).
 //! - **L2 (python/compile/model.py)** — the tiny-MoE JAX model, lowered
 //!   once to HLO text (`artifacts/*.hlo.txt`).
 //! - **L1 (python/compile/kernels/)** — Pallas kernels (expert FFN,
@@ -35,6 +37,7 @@
 //! println!("{plan}");
 //! ```
 
+pub mod adapt;
 pub mod benchkit;
 pub mod cluster;
 pub mod config;

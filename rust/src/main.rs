@@ -30,6 +30,7 @@ fn main() -> ExitCode {
         "breakdown" => cmd_breakdown(rest),
         "sweep" => cmd_sweep(rest),
         "serve" => cmd_serve(rest),
+        "adapt-replay" => cmd_adapt_replay(rest),
         "quant-eval" => cmd_quant(rest),
         "microbench" => cmd_microbench(rest),
         "help" | "--help" | "-h" => {
@@ -60,6 +61,7 @@ fn print_help() {
          breakdown   per-layer latency breakdown TP vs EP (Fig 2)\n  \
          sweep       HAP vs TP speedups across scenarios (Fig 4/6/7/9)\n  \
          serve       serve a workload on the real tiny-MoE via PJRT\n  \
+         adapt-replay  replay a traffic trace: adaptive vs static vs oracle\n  \
          quant-eval  INT4 scheme quality (Table I)\n  \
          microbench  η/ρ simulation-model accuracy (Fig 5)\n\n\
          Run `hap <command> --help` for flags."
@@ -228,7 +230,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     spec.flag("artifacts", "artifacts", "artifact directory");
     spec.flag("requests", "16", "number of requests");
     spec.flag("gen", "16", "tokens to generate per request");
-    spec.flag("plan", "hap", "plan: hap | tp");
+    spec.flag("plan", "hap", "plan: hap | tp | adaptive");
     spec.flag("tp", "4", "device count (attention TP degree)");
     let p = spec.parse(args).map_err(anyhow::Error::msg)?;
 
@@ -238,6 +240,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     let config = match p.get("plan") {
         "tp" => ServeConfig::tp(n),
         "hap" => ServeConfig::hap_transition(n),
+        "adaptive" => {
+            // Adapt for the model the loaded artifacts actually serve.
+            let mut c = ServeConfig::adaptive(n);
+            c.adaptive = c.adaptive.take().map(|a| a.with_manifest_model(&rt.manifest.model));
+            c
+        }
         other => anyhow::bail!("unknown plan '{other}'"),
     };
     let m = rt.manifest.model.clone();
@@ -259,6 +267,54 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "compute split: prefill {:.2} s, decode {:.2} s",
         report.prefill_time, report.decode_time
     );
+    Ok(())
+}
+
+fn cmd_adapt_replay(args: &[String]) -> anyhow::Result<()> {
+    let mut spec = ArgSpec::new(
+        "hap adapt-replay",
+        "Replay a traffic trace: adaptive re-planning vs static plans vs oracle",
+    );
+    spec.flag("model", "mixtral-8x7b", "model preset");
+    spec.flag("gpu", "a6000", "GPU preset");
+    spec.flag("gpus", "4", "number of devices");
+    spec.flag("trace", "phase-shift", "trace: phase-shift | diurnal | ramp | oscillating");
+    spec.flag("batches", "80", "total trace length in batches");
+    spec.flag("batch", "16", "nominal global batch size");
+    spec.flag("seed", "17", "trace jitter seed");
+    spec.flag("json", "", "write the comparison JSON to this path");
+    let p = spec.parse(args).map_err(anyhow::Error::msg)?;
+
+    let model = parse_model(p.get("model"))?;
+    let node = parse_node(p.get("gpu"), usize_flag(&p, "gpus")?)?;
+    let batches = usize_flag(&p, "batches")?;
+    let batch = usize_flag(&p, "batch")?;
+    let seed = usize_flag(&p, "seed")? as u64;
+    let trace = hap::adapt::WorkloadTrace::preset(p.get("trace"), batches, batch, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown trace '{}'", p.get("trace")))?;
+
+    let planner = HapPlanner::new(&model, &node);
+    let cmp =
+        hap::adapt::replay::compare(&planner, &trace, &hap::adapt::ControllerConfig::default(), 32)?;
+
+    println!(
+        "replaying '{}' ({} batches) for {} on {}:",
+        cmp.trace,
+        cmp.batches,
+        model.name,
+        node.label()
+    );
+    let mut t = Table::new(&["policy", "total (s)", "switches", "switch time (s)", "vs adaptive"]);
+    for r in cmp.policies() {
+        t.row(&cmp.row_cells(r));
+    }
+    t.print();
+    println!("{}", cmp.summary_line());
+    let out = p.get("json");
+    if !out.is_empty() {
+        std::fs::write(out, cmp.to_json().to_string_pretty())?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 

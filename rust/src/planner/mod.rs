@@ -345,8 +345,8 @@ impl<'a> HapPlanner<'a> {
 
         // Pairwise comm terms: Z[k][i] = S_k ∧ E_i (prefill), W[k][j]
         // (decode).
-        let mut z = Vec::with_capacity(ka);
-        let mut w = Vec::with_capacity(ka);
+        let mut z: Vec<Vec<ilp::Var>> = Vec::with_capacity(ka);
+        let mut w: Vec<Vec<ilp::Var>> = Vec::with_capacity(ka);
         for k in 0..ka {
             let mut zr = Vec::with_capacity(ke);
             let mut wr = Vec::with_capacity(ke);
@@ -363,7 +363,7 @@ impl<'a> HapPlanner<'a> {
         }
 
         // Switching cost: Y[i][j] = E_i ∧ E_j.
-        let mut y = Vec::with_capacity(ke);
+        let mut y: Vec<Vec<ilp::Var>> = Vec::with_capacity(ke);
         for i in 0..ke {
             let mut yr = Vec::with_capacity(ke);
             for j in 0..ke {
@@ -398,7 +398,7 @@ impl<'a> HapPlanner<'a> {
             }
         }
 
-        (p, IlpVars { s, ei, ej })
+        (p, IlpVars { s, ei, ej, z, w, y })
     }
 
     /// Shared tail of `plan` / `plan_reference`: formulate, solve, and
@@ -412,8 +412,19 @@ impl<'a> HapPlanner<'a> {
         reference_solver: bool,
     ) -> Result<HybridPlan> {
         let (problem, vars) = self.formulate(space, tables, scenario);
-        let outcome =
-            if reference_solver { ilp::solve_reference(&problem) } else { ilp::solve(&problem) };
+        // The brute-force-over-tables incumbent (cheap arithmetic over
+        // the already-built cost tables) seeds branch & bound with a
+        // tight upper bound; the reference path stays cold-start.
+        let outcome = if reference_solver {
+            ilp::solve_reference(&problem)
+        } else {
+            match self.brute_force_from_tables(space, tables, scenario) {
+                Some((k, i, j, _)) => {
+                    ilp::solve_warm(&problem, &vars.assignment(problem.num_vars, k, i, j))
+                }
+                None => ilp::solve(&problem),
+            }
+        };
         let Some((x, objective)) = outcome.optimal() else {
             anyhow::bail!("ILP infeasible for {} on {}", self.model.name, self.node.label());
         };
@@ -539,6 +550,18 @@ impl<'a> HapPlanner<'a> {
             return None;
         }
         let tables = self.cost_tables(&space, scenario);
+        self.brute_force_from_tables(&space, &tables, scenario)
+    }
+
+    /// [`Self::brute_force`] over prebuilt cost tables — O(K_a·K_e²)
+    /// arithmetic, no simulation. `plan` uses the result as the ILP
+    /// warm-start incumbent (ROADMAP: ILP warm starts).
+    pub fn brute_force_from_tables(
+        &self,
+        space: &SearchSpace,
+        tables: &CostTables,
+        scenario: &Scenario,
+    ) -> Option<(usize, usize, usize, f64)> {
         let mem = MemoryModel::new(self.model, scenario);
         let nl = self.model.layers as f64;
         let s_out = scenario.generate as f64;
@@ -574,11 +597,36 @@ impl<'a> HapPlanner<'a> {
     }
 }
 
-/// Handles to the decision variables (testing / introspection).
+/// Handles to the decision variables (testing / introspection), plus
+/// the linearization AND variables so a brute-force incumbent can be
+/// lifted into a complete warm-start assignment.
 pub struct IlpVars {
     pub s: Vec<ilp::Var>,
     pub ei: Vec<ilp::Var>,
     pub ej: Vec<ilp::Var>,
+    /// Z[k][i] = S_k ∧ Ei_i (prefill comm pairs).
+    pub z: Vec<Vec<ilp::Var>>,
+    /// W[k][j] = S_k ∧ Ej_j (decode comm pairs).
+    pub w: Vec<Vec<ilp::Var>>,
+    /// Y[i][j] = Ei_i ∧ Ej_j (switching pairs).
+    pub y: Vec<Vec<ilp::Var>>,
+}
+
+impl IlpVars {
+    /// The full 0/1 assignment selecting decision (k, i, j), with every
+    /// AND variable set consistently with its definition — feasible by
+    /// construction whenever (k, i) and (k, j) pass the memory
+    /// constraints, so it can seed the solver as a warm incumbent.
+    pub fn assignment(&self, num_vars: usize, k: usize, i: usize, j: usize) -> Vec<f64> {
+        let mut x = vec![0.0; num_vars];
+        x[self.s[k].0] = 1.0;
+        x[self.ei[i].0] = 1.0;
+        x[self.ej[j].0] = 1.0;
+        x[self.z[k][i].0] = 1.0;
+        x[self.w[k][j].0] = 1.0;
+        x[self.y[i][j].0] = 1.0;
+        x
+    }
 }
 
 #[cfg(test)]
@@ -690,6 +738,40 @@ mod tests {
                         assert_eq!(fc.overhead.to_bits(), sc_.overhead.to_bits());
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_never_explores_more_nodes_on_standard_scenarios() {
+        // ROADMAP satellite: seeding B&B with the brute-force-over-
+        // tables incumbent must keep the optimum and never increase the
+        // explored node count vs a cold start.
+        let m = MoEModelConfig::mixtral_8x7b();
+        for node in [NodeConfig::a6000x(4), NodeConfig::a100x(8)] {
+            let planner = HapPlanner::new(&m, &node);
+            for sc in Scenario::table2() {
+                let space = planner.search_space(&sc);
+                let tables = planner.cost_tables(&space, &sc);
+                let (problem, vars) = planner.formulate(&space, &tables, &sc);
+                let (k, i, j, bf_obj) =
+                    planner.brute_force_from_tables(&space, &tables, &sc).unwrap();
+                let warm = vars.assignment(problem.num_vars, k, i, j);
+                assert!(problem.feasible(&warm, 1e-9), "warm assignment infeasible");
+                assert!(
+                    (problem.objective_value(&warm) - bf_obj).abs() <= 1e-9 * bf_obj.max(1.0),
+                    "lifted assignment disagrees with brute-force objective"
+                );
+                let cold = ilp::solve(&problem);
+                let hot = ilp::solve_warm(&problem, &warm);
+                let (ilp::Outcome::Optimal { objective: co, nodes_explored: cn, .. },
+                     ilp::Outcome::Optimal { objective: ho, nodes_explored: hn, .. }) =
+                    (cold, hot)
+                else {
+                    panic!("{}: solver returned infeasible", sc.name);
+                };
+                assert!((co - ho).abs() <= 1e-9 * co.abs().max(1.0), "{}: {co} vs {ho}", sc.name);
+                assert!(hn <= cn, "{} on {}: warm {hn} nodes > cold {cn}", sc.name, node.label());
             }
         }
     }

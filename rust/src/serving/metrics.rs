@@ -11,6 +11,8 @@ pub struct Metrics {
     pub batches_prefilled: usize,
     pub decode_steps: usize,
     pub transitions: usize,
+    /// Weight-moving plan switches made by the adaptive controller.
+    pub replans: usize,
     latencies: Vec<f64>,
     ttfts: Vec<f64>,
     /// Wall-clock duration of the run (set by the server at the end).
@@ -52,7 +54,7 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | {:.1} tok/s | {} prefills, {} decode steps, {} transitions",
+            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | {:.1} tok/s | {} prefills, {} decode steps, {} transitions, {} replans",
             self.requests_completed,
             self.tokens_generated,
             self.latency_p(50.0) * 1e3,
@@ -63,6 +65,7 @@ impl Metrics {
             self.batches_prefilled,
             self.decode_steps,
             self.transitions,
+            self.replans,
         )
     }
 }

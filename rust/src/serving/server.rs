@@ -10,14 +10,61 @@ use super::batcher::Batcher;
 use super::metrics::Metrics;
 use super::router::{Router, RouterPolicy};
 use super::{Request, Response};
+use crate::adapt::controller::ControllerConfig;
+use crate::adapt::window::TrafficSample;
+use crate::adapt::AdaptLoop;
+use crate::config::{hardware::NodeConfig, model::MoEModelConfig};
 use crate::model::{ModelExecutor, StageStrategy};
+use crate::planner::{HapPlanner, PLANNER_SEED};
 use crate::runtime::literal::argmax_rows;
 use crate::runtime::PjrtRuntime;
 use crate::strategy::ExpertStrategy;
 use crate::Result;
 use std::time::Instant;
 
-/// Serving configuration: the hybrid plan to execute.
+/// Online-adaptation settings for the serving loop: the planner inputs
+/// (deployment model + platform) and the control-loop tunables.
+#[derive(Debug, Clone)]
+pub struct AdaptiveServing {
+    pub model: MoEModelConfig,
+    pub node: NodeConfig,
+    pub controller: ControllerConfig,
+    pub window_capacity: usize,
+}
+
+impl AdaptiveServing {
+    /// Replace the deployment model with one derived from a loaded
+    /// artifact manifest, so the adaptation economics describe the
+    /// model actually being served rather than a preset that may have
+    /// drifted from the artifacts on disk.
+    pub fn with_manifest_model(
+        mut self,
+        meta: &crate::runtime::manifest::TinyModelMeta,
+    ) -> AdaptiveServing {
+        let mut model = MoEModelConfig {
+            name: "manifest-model".into(),
+            params_b: 0.0,
+            layers: meta.layers,
+            q_heads: meta.q_heads,
+            kv_heads: meta.kv_heads,
+            hidden: meta.hidden,
+            head_dim: meta.head_dim,
+            num_experts: meta.num_experts,
+            top_k: meta.top_k,
+            shared_experts: 0,
+            moe_inter_size: meta.inter,
+            shared_inter_size: 0,
+            vocab: meta.vocab,
+            dtype_bytes: 4, // the CPU PJRT artifacts run f32
+        };
+        model.params_b = model.weight_bytes() as f64 / model.dtype_bytes as f64 / 1e9;
+        self.model = model;
+        self
+    }
+}
+
+/// Serving configuration: the hybrid plan to execute, or — when
+/// `adaptive` is set — the adaptation loop that re-selects it per batch.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub attn_tp: usize,
@@ -25,6 +72,10 @@ pub struct ServeConfig {
     pub expert_decode: ExpertStrategy,
     pub policy: RouterPolicy,
     pub queue_capacity: usize,
+    /// When set, each batch runs window → plan cache → controller and
+    /// executes under the controller's active plan; the fixed fields
+    /// above only serve as the pre-traffic fallback.
+    pub adaptive: Option<AdaptiveServing>,
 }
 
 impl ServeConfig {
@@ -36,6 +87,7 @@ impl ServeConfig {
             expert_decode: ExpertStrategy::new(n, 1),
             policy: RouterPolicy::Fcfs,
             queue_capacity: 1024,
+            adaptive: None,
         }
     }
 
@@ -47,7 +99,24 @@ impl ServeConfig {
             expert_decode: ExpertStrategy::new(n, 1),
             policy: RouterPolicy::Fcfs,
             queue_capacity: 1024,
+            adaptive: None,
         }
+    }
+
+    /// Online-adaptive serving: per-batch strategy selection driven by
+    /// the traffic window, plan cache, and switch controller, planned
+    /// for the real tiny-MoE deployment on `n` simulated CPU devices.
+    /// Override `adaptive.model` / `adaptive.node` to adapt for a
+    /// different deployment.
+    pub fn adaptive(n: usize) -> ServeConfig {
+        let mut config = Self::tp(n);
+        config.adaptive = Some(AdaptiveServing {
+            model: MoEModelConfig::tiny_moe(),
+            node: NodeConfig::cpu_sim(n),
+            controller: ControllerConfig::default(),
+            window_capacity: 64,
+        });
+        config
     }
 
     pub fn has_transition(&self) -> bool {
@@ -55,7 +124,9 @@ impl ServeConfig {
     }
 
     pub fn label(&self) -> String {
-        if self.has_transition() {
+        if self.adaptive.is_some() {
+            format!("adaptive (fallback attn=TP{})", self.attn_tp)
+        } else if self.has_transition() {
             format!(
                 "attn=TP{} experts={}→{}",
                 self.attn_tp,
@@ -65,6 +136,54 @@ impl ServeConfig {
         } else {
             format!("attn=TP{} experts={}", self.attn_tp, self.expert_prefill.label())
         }
+    }
+}
+
+/// Per-run state of the adaptation loop: the shared [`AdaptLoop`]
+/// (the exact implementation the replay acceptance tests validate)
+/// plus the platform's latency model, resolved once so the per-batch
+/// path never touches the global model-cache lock.
+struct AdaptState {
+    control: AdaptLoop,
+    latency: std::sync::Arc<crate::sim::LatencyModel>,
+}
+
+impl AdaptState {
+    fn new(cfg: &AdaptiveServing) -> AdaptState {
+        AdaptState {
+            control: AdaptLoop::new(cfg.controller.clone(), cfg.window_capacity),
+            latency: crate::sim::LatencyModel::cached(&cfg.node.gpu, PLANNER_SEED),
+        }
+    }
+
+    /// Observe one packed batch and return the (prefill, decode)
+    /// strategies the controller lands on.
+    fn select(
+        &mut self,
+        cfg: &AdaptiveServing,
+        requests: &[Request],
+    ) -> Result<(StageStrategy, StageStrategy)> {
+        let planner = HapPlanner::with_latency(&cfg.model, &cfg.node, self.latency.clone());
+        let samples = requests.iter().map(|req| TrafficSample {
+            prompt: req.prompt.len(),
+            generate: req.max_new_tokens,
+            batch: requests.len(),
+        });
+        let (plan, _) = self.control.step(&planner, samples, None)?;
+        // The demo executor covers pure-TP and pure-EP expert layouts;
+        // project hybrid EP×TP picks onto pure EP at the same device
+        // count (the simulation stack covers hybrids exactly).
+        let executable = |e: crate::strategy::ExpertStrategy| {
+            if e.ep > 1 && e.tp > 1 {
+                crate::strategy::ExpertStrategy::new(1, e.devices())
+            } else {
+                e
+            }
+        };
+        Ok((
+            StageStrategy { attn_tp: plan.attn.tp, expert: executable(plan.expert_prefill) },
+            StageStrategy { attn_tp: plan.attn.tp, expert: executable(plan.expert_decode) },
+        ))
     }
 }
 
@@ -94,9 +213,9 @@ pub fn serve_workload(
         }
     }
 
-    let prefill_strategy =
-        StageStrategy { attn_tp: config.attn_tp, expert: config.expert_prefill };
-    let decode_strategy = StageStrategy { attn_tp: config.attn_tp, expert: config.expert_decode };
+    let fixed_prefill = StageStrategy { attn_tp: config.attn_tp, expert: config.expert_prefill };
+    let fixed_decode = StageStrategy { attn_tp: config.attn_tp, expert: config.expert_decode };
+    let mut adapt = config.adaptive.as_ref().map(AdaptState::new);
 
     let mut metrics = Metrics::new();
     let mut responses = Vec::new();
@@ -106,6 +225,16 @@ pub fn serve_workload(
 
     while !router.is_empty() {
         let batch = batcher.pack(router.take(m.batch));
+        // Per-batch strategy selection (adaptive) or the fixed plan.
+        let (prefill_strategy, decode_strategy) = match (&mut adapt, &config.adaptive) {
+            (Some(state), Some(cfg)) => {
+                let switches_before = state.control.controller.switches;
+                let picked = state.select(cfg, &batch.requests)?;
+                metrics.replans += state.control.controller.switches - switches_before;
+                picked
+            }
+            _ => (fixed_prefill.clone(), fixed_decode.clone()),
+        };
         let mut exec = ModelExecutor::new(rt)?;
 
         // ---- Prefill.
@@ -113,7 +242,7 @@ pub fn serve_workload(
         let logits = exec.prefill(&batch.tokens, &prefill_strategy)?;
         prefill_time += t0.elapsed().as_secs_f64();
         metrics.batches_prefilled += 1;
-        if config.has_transition() {
+        if prefill_strategy.expert != decode_strategy.expert {
             metrics.transitions += 1;
         }
 
@@ -225,5 +354,29 @@ mod tests {
         let h = ServeConfig::hap_transition(4);
         assert!(h.has_transition());
         assert_eq!(h.label(), "attn=TP4 experts=EP4→TP4");
+        assert!(ServeConfig::adaptive(4).label().contains("adaptive"));
+    }
+
+    #[test]
+    fn adaptive_selection_yields_executable_strategies() {
+        // The adaptation loop itself needs no PJRT runtime: feed it a
+        // batch of requests and check it lands on a plan the demo
+        // executor accepts (attn tp 1/2/4; experts pure TP or pure EP).
+        let config = ServeConfig::adaptive(4);
+        let acfg = config.adaptive.as_ref().unwrap();
+        let mut state = AdaptState::new(acfg);
+        let reqs: Vec<Request> =
+            (0..4).map(|i| Request::new(i, vec![1; 24], 16)).collect();
+        let (pre, dec) = state.select(acfg, &reqs).unwrap();
+        assert!(matches!(pre.attn_tp, 1 | 2 | 4));
+        assert_eq!(pre.attn_tp, dec.attn_tp);
+        for e in [&pre.expert, &dec.expert] {
+            assert!(e.ep == 1 || e.tp == 1, "non-executable hybrid {}", e.label());
+        }
+        assert!(state.control.controller.active().is_some());
+        // A second identical batch is a cache hit, not a re-solve.
+        state.select(acfg, &reqs).unwrap();
+        assert_eq!(state.control.cache.hits, 1);
+        assert_eq!(state.control.cache.misses, 1);
     }
 }

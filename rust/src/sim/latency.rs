@@ -148,29 +148,55 @@ static MODEL_CACHE: OnceLock<Mutex<Vec<((GpuSpec, u64), Arc<LatencyModel>)>>> = 
 
 impl LatencyModel {
     /// Train the η/ρ regressors for a GPU platform. Deterministic for a
-    /// given seed; takes a few milliseconds.
+    /// given seed; takes a few milliseconds. The three forests are
+    /// independent (disjoint seeded training sets), so they fit under
+    /// `std::thread::scope` in parallel — bit-identical to the serial
+    /// path kept as [`Self::train_serial`] (ROADMAP: batched microbench
+    /// training).
     pub fn train(gpu: &GpuSpec, seed: u64) -> LatencyModel {
+        Self::train_inner(gpu, seed, true)
+    }
+
+    /// The original serial training path (reference for the parallel
+    /// fit's bit-exactness test; same forests, same order of draws).
+    pub fn train_serial(gpu: &GpuSpec, seed: u64) -> LatencyModel {
+        Self::train_inner(gpu, seed, false)
+    }
+
+    fn train_inner(gpu: &GpuSpec, seed: u64, parallel: bool) -> LatencyModel {
         let params = ForestParams { n_trees: 24, max_depth: 12, min_split: 3, ..Default::default() };
         // Module-specific training sets: attention sweeps lower
         // intensity (KV reads), experts sweep the full GEMM range. The
-        // sets are disjoint draws from the same benchmarking protocol.
-        let attn_set = microbench::compute_training_set(gpu, 900, seed ^ 0xA77);
-        let expert_set = microbench::compute_training_set(gpu, 900, seed ^ 0xE4);
-        // The ρ surface has a sharp latency-floor knee at small message
-        // sizes — give it a denser sweep and a deeper forest.
-        let comm_set = microbench::comm_training_set(gpu, 2000, seed ^ 0xC0);
-
-        let fit = |rows: &[microbench::ComputeSample]| {
+        // sets are disjoint draws from the same benchmarking protocol,
+        // each seeded independently — which is what makes the parallel
+        // fit trivially deterministic.
+        let fit_compute = |set_seed: u64| {
+            let rows = microbench::compute_training_set(gpu, 900, set_seed);
             let xs: Vec<Vec<f64>> = rows.iter().map(|s| s.features.clone()).collect();
             let ys: Vec<f64> = rows.iter().map(|s| s.eta.ln()).collect();
             RandomForest::fit(&xs, &ys, &params)
         };
-        let eta_attn = fit(&attn_set);
-        let eta_expert = fit(&expert_set);
-        let xs: Vec<Vec<f64>> = comm_set.iter().map(|s| s.features.clone()).collect();
-        let ys: Vec<f64> = comm_set.iter().map(|s| s.rho.ln()).collect();
-        let rho_params = ForestParams { n_trees: 32, max_depth: 14, ..params.clone() };
-        let rho = RandomForest::fit(&xs, &ys, &rho_params);
+        // The ρ surface has a sharp latency-floor knee at small message
+        // sizes — give it a denser sweep and a deeper forest.
+        let fit_comm = || {
+            let comm_set = microbench::comm_training_set(gpu, 2000, seed ^ 0xC0);
+            let xs: Vec<Vec<f64>> = comm_set.iter().map(|s| s.features.clone()).collect();
+            let ys: Vec<f64> = comm_set.iter().map(|s| s.rho.ln()).collect();
+            let rho_params = ForestParams { n_trees: 32, max_depth: 14, ..params.clone() };
+            RandomForest::fit(&xs, &ys, &rho_params)
+        };
+        let (eta_attn, eta_expert, rho) = if parallel {
+            std::thread::scope(|s| {
+                let attn = s.spawn(|| fit_compute(seed ^ 0xA77));
+                let expert = s.spawn(|| fit_compute(seed ^ 0xE4));
+                // The ρ fit is the largest block — keep it on this
+                // thread so the scope does useful work while joining.
+                let rho = fit_comm();
+                (attn.join().expect("attn fit thread"), expert.join().expect("expert fit thread"), rho)
+            })
+        } else {
+            (fit_compute(seed ^ 0xA77), fit_compute(seed ^ 0xE4), fit_comm())
+        };
 
         LatencyModel {
             gpu: gpu.clone(),
@@ -657,6 +683,36 @@ mod tests {
             assert_eq!(s.comm.to_bits(), b.comm.to_bits(), "{q:?}");
             let u = lm.layer_latency_uncached(&m, &q.attn, &q.expert, q.stage, q.batch, q.seq);
             assert_eq!(u.total().to_bits(), s.total().to_bits(), "{q:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_training_bit_identical_to_serial() {
+        // ROADMAP satellite: the scoped-thread fit must reproduce the
+        // serial path exactly — same seeded training sets, same forests.
+        let gpu = GpuSpec::a6000();
+        let par = LatencyModel::train(&gpu, 42);
+        let ser = LatencyModel::train_serial(&gpu, 42);
+        for &(flops, bytes) in
+            &[(1e9, 1e7), (5e12, 4e10), (3e10, 2e8), (7e13, 9e10), (2e8, 5e6)]
+        {
+            let c = OpCost { flops, bytes };
+            assert_eq!(par.attn_time(&c).to_bits(), ser.attn_time(&c).to_bits(), "attn {c:?}");
+            assert_eq!(
+                par.expert_time(&c).to_bits(),
+                ser.expert_time(&c).to_bits(),
+                "expert {c:?}"
+            );
+        }
+        for (group, wire) in [(2usize, 1e6), (4, 2e8), (8, 5e9)] {
+            let ev = CommEvent {
+                collective: crate::sim::comm::Collective::AllReduce,
+                group,
+                wire_bytes: wire,
+                rounds: group - 1,
+                label: "par-vs-ser",
+            };
+            assert_eq!(par.comm_time(&ev).to_bits(), ser.comm_time(&ev).to_bits(), "{ev:?}");
         }
     }
 

@@ -1,0 +1,119 @@
+//! Tier-1 acceptance for the online adaptation loop (ISSUE 2): on the
+//! chat→long-doc phase-shift trace, adaptive re-planning must beat the
+//! static baselines, land within 10% of the free-switch oracle with
+//! switch costs charged, and run >90% of batches off the plan cache.
+//! Results are recorded in BENCH_adaptive_serving.json at the repo root
+//! (benches/adaptive_serving.rs overwrites it with release numbers).
+
+use hap::adapt::replay::{self, WorkloadTrace};
+use hap::adapt::ControllerConfig;
+use hap::config::{MoEModelConfig, NodeConfig};
+use hap::planner::HapPlanner;
+use hap::util::json::Json;
+
+#[test]
+fn phase_shift_adaptive_beats_static_and_tracks_oracle() {
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let planner = HapPlanner::new(&model, &node);
+    let trace = WorkloadTrace::phase_shift(80, 16, 17);
+    let cmp = replay::compare(&planner, &trace, &ControllerConfig::default(), 32).unwrap();
+
+    let summary = Json::obj(vec![
+        ("bench", "adaptive_serving".into()),
+        ("profile", "test".into()),
+        ("model", model.name.as_str().into()),
+        ("node", node.label().into()),
+        ("phase_shift", cmp.to_json()),
+    ]);
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_adaptive_serving.json");
+    if let Err(e) = std::fs::write(&path, summary.to_string_pretty()) {
+        eprintln!("could not write {}: {e}", path.display());
+    }
+    println!(
+        "phase-shift: adaptive {:.2}s | static-tp {:.2}s | static-first {:.2}s | oracle {:.2}s \
+         | {} switches ({:.3}s) | cache {:.1}% hits",
+        cmp.adaptive.total_s,
+        cmp.static_tp.total_s,
+        cmp.static_first.total_s,
+        cmp.oracle.total_s,
+        cmp.adaptive.switches,
+        cmp.adaptive.switch_time_s,
+        cmp.adaptive.cache_hit_rate * 100.0
+    );
+
+    // Acceptance: beats static TP end to end, switch costs charged.
+    assert!(
+        cmp.adaptive.total_s < cmp.static_tp.total_s * 0.999,
+        "adaptive {:.3}s did not beat static TP {:.3}s",
+        cmp.adaptive.total_s,
+        cmp.static_tp.total_s
+    );
+    // Never loses to the best a-priori single plan for the first phase
+    // (strictly better whenever the two phases' optima differ).
+    assert!(
+        cmp.adaptive.total_s <= cmp.static_first.total_s * 1.0005,
+        "adaptive {:.3}s lost to the static first-phase plan {:.3}s",
+        cmp.adaptive.total_s,
+        cmp.static_first.total_s
+    );
+    // Within 10% of the per-phase oracle with free switches.
+    assert!(
+        cmp.adaptive.total_s <= cmp.oracle.total_s * 1.10,
+        "adaptive {:.3}s is {:.1}% over the oracle {:.3}s (>10%)",
+        cmp.adaptive.total_s,
+        (cmp.vs_oracle() - 1.0) * 100.0,
+        cmp.oracle.total_s
+    );
+    // Sanity: the oracle should not meaningfully lose to a fixed plan
+    // it could have picked. Generous 5% slack: the ILP prices decode at
+    // the single midpoint context while replay integrates it by
+    // quadrature, so a plan optimal under the planner's metric can be
+    // slightly off-optimal under the replay metric on the
+    // decode-heavy chat phase.
+    assert!(
+        cmp.oracle.total_s <= cmp.static_tp.total_s * 1.05,
+        "oracle {:.3}s vs static TP {:.3}s",
+        cmp.oracle.total_s,
+        cmp.static_tp.total_s
+    );
+    // Re-planning is a lookup: >90% plan-cache hit rate over the trace.
+    assert!(
+        cmp.adaptive.cache_hit_rate > 0.90,
+        "plan cache hit rate {:.1}% <= 90%",
+        cmp.adaptive.cache_hit_rate * 100.0
+    );
+}
+
+#[test]
+fn oscillating_trace_is_flap_damped_end_to_end() {
+    // The no-thrash invariant at the harness level. With a one-tick
+    // window the traffic key alternates every batch and the debounce
+    // guard must block every switch; with a two-tick window the
+    // alternating phases blend into one stable "mixture" key, so the
+    // controller may settle onto its plan at most once — but must
+    // never ping-pong.
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let planner = HapPlanner::new(&model, &node);
+    let points: Vec<replay::TracePoint> = (0..40)
+        .map(|i| {
+            let (context, generate) =
+                if i % 2 == 0 { replay::CHAT_PHASE } else { replay::DOC_PHASE };
+            replay::TracePoint { context, generate, batch: 16 }
+        })
+        .collect();
+    let trace = WorkloadTrace { name: "osc-exact".into(), points };
+    let strict =
+        replay::replay_adaptive(&planner, &trace, &ControllerConfig::default(), 16).unwrap();
+    assert_eq!(strict.switches, 0, "alternating keys thrashed weights");
+    assert_eq!(strict.switch_time_s, 0.0);
+    let blended =
+        replay::replay_adaptive(&planner, &trace, &ControllerConfig::default(), 32).unwrap();
+    assert!(
+        blended.switches <= 1,
+        "mixture-key oscillation ping-ponged: {} switches",
+        blended.switches
+    );
+}

@@ -326,3 +326,140 @@ fn prop_pow2_divisors() {
         )
     });
 }
+
+/// Plan cache: hits are bit-identical to a fresh solve of the same
+/// quantized key, and a platform change invalidates instead of serving
+/// a stale plan.
+#[test]
+fn prop_plan_cache_bit_identical_and_platform_safe() {
+    use hap::adapt::{PlanCache, QuantizedScenario};
+    use hap::planner::HapPlanner;
+    let m = MoEModelConfig::mixtral_8x7b();
+    let pcie = NodeConfig::a6000x(4);
+    let nvlink = NodeConfig::a100x(4);
+    prop::check("plan-cache", 10, |rng| {
+        let base = Scenario::table2()[rng.below(4)].clone();
+        let sc = base.with_batch([8, 16, 32][rng.below(3)]);
+        let key = QuantizedScenario::from_scenario(&sc);
+        let mut cache = PlanCache::new();
+        let planner = HapPlanner::new(&m, &pcie);
+        let missed = cache.plan(&planner, key).map_err(|e| e.to_string())?;
+        let hit = cache.plan(&planner, key).map_err(|e| e.to_string())?;
+        prop_ok(cache.hits == 1 && cache.misses == 1, "hit/miss accounting".into())?;
+        let rep = key.to_scenario();
+        let fresh = planner.plan(&rep, rep.generate).map_err(|e| e.to_string())?;
+        for (name, plan) in [("hit", &hit), ("fresh", &fresh)] {
+            prop_ok(
+                plan.signature() == missed.signature(),
+                format!("{name} signature {} vs {}", plan.signature(), missed.signature()),
+            )?;
+            prop_ok(
+                plan.predicted_total.to_bits() == missed.predicted_total.to_bits(),
+                format!("{name} objective differs"),
+            )?;
+        }
+        // Platform swap: the cached PCIe plan must not leak through.
+        let other = HapPlanner::new(&m, &nvlink);
+        let swapped = cache.plan(&other, key).map_err(|e| e.to_string())?;
+        prop_ok(cache.invalidations == 1, "platform change must invalidate".into())?;
+        prop_ok(swapped.node == nvlink.label(), "plan carries the new platform".into())?;
+        Ok(())
+    });
+}
+
+/// Controller no-thrash invariant: every Switch decision satisfies
+/// projected savings ≥ breakeven_factor × switch cost, and when the
+/// cost structurally exceeds any projectable savings there are zero
+/// switches.
+#[test]
+fn prop_controller_switch_economics() {
+    use hap::adapt::{ControllerConfig, QuantizedScenario, SwitchController, SwitchDecision};
+    use hap::planner::HybridPlan;
+    use hap::sim::latency::ModuleLatency;
+    use hap::transition::{TransitionCost, TransitionMethod};
+
+    fn dummy_plan(pre_ep: usize, dec_ep: usize) -> HybridPlan {
+        HybridPlan {
+            model: "prop".into(),
+            node: "4xProp".into(),
+            scenario: Scenario::short_constrained(),
+            attn: AttnStrategy::new(4, 1),
+            expert_prefill: ExpertStrategy::new(4 / pre_ep, pre_ep),
+            expert_decode: ExpertStrategy::new(4 / dec_ep, dec_ep),
+            transition: TransitionCost {
+                method: TransitionMethod::None,
+                overhead: 0.0,
+                raw_pipeline: 0.0,
+                reshard: 0.0,
+            },
+            predicted_prefill: ModuleLatency::default(),
+            predicted_decode: ModuleLatency::default(),
+            predicted_total: 1.0,
+            solve_time: 0.0,
+            k_a: 1,
+            k_e: 1,
+        }
+    }
+
+    prop::check("controller-economics", 64, |rng| {
+        let factor = rng.range_f64(1.0, 4.0);
+        let config = ControllerConfig {
+            breakeven_factor: factor,
+            confirm_batches: rng.range(1, 3),
+            cooldown_batches: rng.range(0, 6),
+            ..Default::default()
+        };
+        let mut c = SwitchController::new(config);
+        let plans = [dummy_plan(1, 1), dummy_plan(4, 1), dummy_plan(2, 2)];
+        let keys = [
+            QuantizedScenario { context: 256, generate: 2048, batch: 16 },
+            QuantizedScenario { context: 4096, generate: 64, batch: 16 },
+            QuantizedScenario { context: 1024, generate: 256, batch: 8 },
+        ];
+        for _ in 0..rng.range(20, 120) {
+            let key = keys[rng.below(3)];
+            let cand = &plans[rng.below(3)];
+            let active_lat = rng.range_f64(0.1, 10.0);
+            let cand_lat = rng.range_f64(0.1, 10.0);
+            let cost = rng.range_f64(0.0, 5.0);
+            let dwell_before = c.expected_dwell();
+            match c.step(key, cand, active_lat, cand_lat, cost) {
+                SwitchDecision::Switch { projected_savings, cost: charged } => {
+                    // Invariant: savings projected over the dwell
+                    // estimate in force at decision time must clear the
+                    // safety factor.
+                    let expect = (active_lat - cand_lat) * dwell_before;
+                    prop_ok(
+                        (projected_savings - expect).abs() <= 1e-9 * expect.abs().max(1.0),
+                        format!("savings {projected_savings} != gain×dwell {expect}"),
+                    )?;
+                    prop_ok(
+                        projected_savings >= factor * charged - 1e-12,
+                        format!(
+                            "switched below break-even: {projected_savings} < {factor}×{charged}"
+                        ),
+                    )?;
+                }
+                SwitchDecision::Adopt | SwitchDecision::Stay => {}
+            }
+        }
+        // Structural zero-switch case: cost beyond any projectable gain.
+        let mut never = SwitchController::new(ControllerConfig {
+            breakeven_factor: factor,
+            confirm_batches: 1,
+            cooldown_batches: 0,
+            ..Default::default()
+        });
+        let huge = 10.0 * never.expected_dwell().max(4096.0) * 10.0;
+        never.step(keys[0], &plans[0], f64::INFINITY, 1.0, 0.0);
+        for i in 0..40 {
+            let key = keys[1 + (i % 2)];
+            let d = never.step(key, &plans[1], 10.0, 0.1, huge);
+            prop_ok(
+                !matches!(d, SwitchDecision::Switch { .. }),
+                "switched when cost exceeds any projected savings".into(),
+            )?;
+        }
+        prop_ok(never.switches == 0, "no-thrash violated".into())
+    });
+}
