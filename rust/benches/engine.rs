@@ -1,0 +1,191 @@
+//! §Grid-engine benchmark — BENCH_engine.json at the repo root.
+//!
+//! Measures the execution engine itself, artifact-free (host kernels on
+//! seeded synthetic weights):
+//!
+//!  - parallel (scoped-thread per device) vs sequential shard
+//!    execution: full prefill + short decode under the hybrid
+//!    EP2×TP2 grid, with bit-identical outputs asserted;
+//!  - per-batch weight-upload counts: the old per-batch-executor
+//!    behavior (fresh executor every batch, as `serve_workload` did
+//!    before the persistent engine) vs one long-lived executor;
+//!  - measured resharding work of a plan switch.
+
+use hap::benchkit::{banner, bench, write_results, Table};
+use hap::model::{EngineMode, ModelExecutor, ShardPlan, WeightStore};
+use hap::runtime::TinyModelMeta;
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::json::Json;
+
+/// Bench model: bigger than the test meta so per-device compute
+/// dominates thread-spawn overhead, smaller than TINY so the bench
+/// stays in seconds.
+fn bench_meta() -> TinyModelMeta {
+    TinyModelMeta {
+        batch: 4,
+        prefill_len: 32,
+        max_len: 64,
+        hidden: 128,
+        q_heads: 8,
+        kv_heads: 4,
+        head_dim: 16,
+        num_experts: 8,
+        top_k: 2,
+        inter: 256,
+        vocab: 256,
+        layers: 2,
+    }
+}
+
+fn tokens(m: &TinyModelMeta) -> Vec<i32> {
+    (0..m.batch * m.prefill_len)
+        .map(|i| ((i * 37 + 11) % m.vocab) as i32)
+        .collect()
+}
+
+fn run_batch(exec: &mut ModelExecutor, toks: &[i32], plan: &ShardPlan, steps: usize) -> f32 {
+    exec.begin_batch(plan, plan).unwrap();
+    let logits = exec.prefill(toks, plan).unwrap();
+    let mut last: Vec<i32> = hap::runtime::literal::argmax_rows(&logits)
+        .iter()
+        .map(|&t| t as i32)
+        .collect();
+    let mut sink = logits.data[0];
+    for _ in 0..steps {
+        let l = exec.decode_step(&last, plan).unwrap();
+        last = hap::runtime::literal::argmax_rows(&l).iter().map(|&t| t as i32).collect();
+        sink += l.data[0];
+    }
+    sink
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("engine", "grid execution engine: parallel shards + persistent state");
+    let m = bench_meta();
+    let toks = tokens(&m);
+    let hybrid = ShardPlan::new(AttnStrategy::new(4, 1), ExpertStrategy::new(2, 2));
+    let tp = ShardPlan::tp(4);
+
+    // --- Correctness gate: parallel ≡ sequential, bit for bit.
+    let logits_of = |mode: EngineMode| {
+        let mut exec = ModelExecutor::host_with_mode(WeightStore::synthetic(&m, 42), mode);
+        exec.begin_batch(&hybrid, &hybrid).unwrap();
+        exec.prefill(&toks, &hybrid).unwrap()
+    };
+    let par = logits_of(EngineMode::Parallel);
+    let seq = logits_of(EngineMode::Sequential);
+    assert_eq!(
+        par.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        seq.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "parallel and sequential shard execution diverged"
+    );
+    println!("hybrid EP2xTP2 parallel == sequential (bit-identical)");
+
+    // --- Parallel vs sequential wall time (persistent executors, so
+    // only compute + collectives are measured, not shard slicing).
+    let mut t = Table::new(&["path", "median", "p95", "iters"]);
+    let mut exec_par =
+        ModelExecutor::host_with_mode(WeightStore::synthetic(&m, 42), EngineMode::Parallel);
+    run_batch(&mut exec_par, &toks, &hybrid, 2); // warm shards
+    let par_t = bench("engine-parallel", 1, 1.0, || {
+        std::hint::black_box(run_batch(&mut exec_par, &toks, &hybrid, 2));
+    });
+    let mut exec_seq =
+        ModelExecutor::host_with_mode(WeightStore::synthetic(&m, 42), EngineMode::Sequential);
+    run_batch(&mut exec_seq, &toks, &hybrid, 2);
+    let seq_t = bench("engine-sequential", 1, 1.0, || {
+        std::hint::black_box(run_batch(&mut exec_seq, &toks, &hybrid, 2));
+    });
+    let speedup = seq_t.median / par_t.median;
+    for (name, timing) in [("parallel shards", &par_t), ("sequential shards", &seq_t)] {
+        t.row(&[
+            name.into(),
+            hap::util::fmt_secs(timing.median),
+            hap::util::fmt_secs(timing.p95),
+            format!("{}", timing.iters),
+        ]);
+    }
+    t.print();
+    println!("parallel-vs-sequential shard execution: {speedup:.2}x");
+
+    // --- Weight-upload amortization: fresh executor per batch (the
+    // pre-refactor serve_workload behavior) vs one persistent executor.
+    let batches = 4usize;
+    let mut fresh_uploads = 0usize;
+    for _ in 0..batches {
+        let mut exec = ModelExecutor::host(WeightStore::synthetic(&m, 7));
+        run_batch(&mut exec, &toks, &tp, 1);
+        fresh_uploads += exec.stats().materializations;
+    }
+    let mut persistent = ModelExecutor::host(WeightStore::synthetic(&m, 7));
+    for _ in 0..batches {
+        run_batch(&mut persistent, &toks, &tp, 1);
+    }
+    let persistent_uploads = persistent.stats().materializations;
+    assert_eq!(
+        persistent_uploads * batches,
+        fresh_uploads,
+        "persistent executor should upload one batch's worth of shards once"
+    );
+    println!(
+        "weight uploads over {batches} batches: fresh-per-batch {fresh_uploads} vs persistent {persistent_uploads}"
+    );
+
+    // --- Measured resharding work of one plan switch.
+    let before = persistent.stats();
+    run_batch(&mut persistent, &toks, &hybrid, 1);
+    let after = persistent.stats();
+    let switch_uploads = after.materializations - before.materializations;
+    assert!(switch_uploads > 0, "plan switch moved no weights");
+    assert_eq!(after.reshards, before.reshards + 1);
+    println!(
+        "plan switch TP4 -> EP2xTP2: {} shard uploads, {:.3} ms measured",
+        switch_uploads,
+        (after.reshard_seconds - before.reshard_seconds) * 1e3
+    );
+
+    let summary = Json::obj(vec![
+        ("bench", "engine".into()),
+        ("profile", "release".into()),
+        (
+            "parallel_vs_sequential",
+            Json::obj(vec![
+                ("parallel_median_s", par_t.median.into()),
+                ("sequential_median_s", seq_t.median.into()),
+                ("speedup", speedup.into()),
+                ("devices", 4usize.into()),
+            ]),
+        ),
+        (
+            "weight_uploads",
+            Json::obj(vec![
+                ("batches", batches.into()),
+                ("fresh_per_batch_total", fresh_uploads.into()),
+                ("persistent_total", persistent_uploads.into()),
+                (
+                    "amortization",
+                    (fresh_uploads as f64 / persistent_uploads.max(1) as f64).into(),
+                ),
+            ]),
+        ),
+        (
+            "plan_switch",
+            Json::obj(vec![
+                ("uploads", switch_uploads.into()),
+                (
+                    "measured_s",
+                    (after.reshard_seconds - before.reshard_seconds).into(),
+                ),
+            ]),
+        ),
+    ]);
+    write_results("engine", &summary);
+    let root_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_engine.json");
+    if let Err(e) = std::fs::write(&root_path, summary.to_string_pretty()) {
+        eprintln!("could not write {}: {e}", root_path.display());
+    } else {
+        println!("wrote {}", root_path.display());
+    }
+    println!("engine bench OK");
+    Ok(())
+}

@@ -240,7 +240,7 @@ fn main() -> anyhow::Result<()> {
         let tokens: Vec<i32> =
             (0..m.batch * m.prefill_len).map(|i| ((i * 13 + 5) % m.vocab) as i32).collect();
         let mut exec = hap::model::ModelExecutor::new(&rt)?;
-        let strat = hap::model::StageStrategy::tp(4);
+        let strat = hap::model::ShardPlan::tp(4);
         exec.prefill(&tokens, &strat)?;
         let last = vec![1i32; m.batch];
         record(
@@ -255,7 +255,7 @@ fn main() -> anyhow::Result<()> {
             }),
         );
         let mut exec1 = hap::model::ModelExecutor::new(&rt)?;
-        let strat1 = hap::model::StageStrategy::tp(1);
+        let strat1 = hap::model::ShardPlan::tp(1);
         exec1.prefill(&tokens, &strat1)?;
         record(
             "pjrt decode step (tp1)",

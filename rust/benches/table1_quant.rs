@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
         let store = hap::model::WeightStore::from_blob(&rt.manifest, &blob)?;
         let _ = &store;
         let mut exec = hap::model::ModelExecutor::new(&rt)?;
-        let base = exec.prefill(&tokens, &hap::model::StageStrategy::tp(1))?;
+        let base = exec.prefill(&tokens, &hap::model::ShardPlan::tp(1))?;
         let base_tok = hap::runtime::literal::argmax_rows(&base);
 
         let mut t2 = Table::new(&["scheme", "logit rmse", "greedy agreement"]);
@@ -103,7 +103,7 @@ fn main() -> anyhow::Result<()> {
             let store_q = hap::model::WeightStore::from_blob(&rt.manifest, &blob_q)?;
             let mut exec_q = hap::model::ModelExecutor::new(&rt)?;
             exec_q.weights = store_q;
-            let got = exec_q.prefill(&tokens, &hap::model::StageStrategy::tp(1))?;
+            let got = exec_q.prefill(&tokens, &hap::model::ShardPlan::tp(1))?;
             let got_tok = hap::runtime::literal::argmax_rows(&got);
             let rmse = stats::rmse_f32(&base.data, &got.data);
             let agree = base_tok

@@ -14,9 +14,12 @@
 
 use crate::adapt::window::QuantizedScenario;
 use crate::config::hardware::NodeConfig;
+use crate::config::model::MoEModelConfig;
 use crate::planner::{HapPlanner, HybridPlan};
+use crate::util::json::Json;
 use crate::Result;
 use std::collections::HashMap;
+use std::path::Path;
 
 /// Cache key: model preset + quantized traffic. The platform is held
 /// out of the key on purpose — a platform change *invalidates* rather
@@ -33,6 +36,9 @@ pub struct PlanCache {
     pub misses: usize,
     /// Number of whole-cache invalidations due to platform change.
     pub invalidations: usize,
+    /// Entries restored for the requested model by [`PlanCache::load`]
+    /// (0 on fingerprint mismatch or a missing file).
+    pub restored: usize,
 }
 
 impl PlanCache {
@@ -80,6 +86,104 @@ impl PlanCache {
             self.hits as f64 / total as f64
         }
     }
+
+    /// Platform identity the cache is pinned to on disk. Everything
+    /// latency-relevant goes in: a changed interconnect or device count
+    /// orphans every cached plan.
+    fn platform_fingerprint(node: &NodeConfig) -> String {
+        let g = &node.gpu;
+        format!(
+            "{}x{}|{}|{}|{}|{}|{}",
+            node.num_devices,
+            g.name,
+            g.interconnect.name(),
+            g.peak_flops,
+            g.link_bw,
+            g.mem_bytes,
+            g.hbm_bw
+        )
+    }
+
+    /// Serialize entries + platform fingerprint for persistence.
+    pub fn to_json(&self) -> Json {
+        let platform = self
+            .platform
+            .as_ref()
+            .map(Self::platform_fingerprint)
+            .map(Json::from)
+            .unwrap_or(Json::Null);
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|((model, key), plan)| {
+                Json::obj(vec![
+                    ("model", model.as_str().into()),
+                    (
+                        "key",
+                        Json::obj(vec![
+                            ("context", key.context.into()),
+                            ("generate", key.generate.into()),
+                            ("batch", key.batch.into()),
+                        ]),
+                    ),
+                    ("plan", plan.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("kind", "hap-plan-cache".into()),
+            ("platform", platform),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Persist the cache (JSON via `util::json`).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Restore a cache for a (model, platform) deployment. A missing
+    /// file yields an empty warm-start; a platform-fingerprint mismatch
+    /// discards everything (counted as an invalidation). The model
+    /// fingerprint is the per-entry key: entries for *other* models are
+    /// preserved verbatim (so a shared cache file survives runs for a
+    /// different model and a later `save` does not destroy them) but
+    /// can never be served for `model` — `restored` counts only the
+    /// given model's entries. Restored plans are bit-identical to what
+    /// was saved (shortest-round-trip f64 formatting).
+    pub fn load(path: &Path, model: &MoEModelConfig, node: &NodeConfig) -> Result<PlanCache> {
+        let mut cache = PlanCache::new();
+        cache.platform = Some(node.clone());
+        if !path.exists() {
+            return Ok(cache);
+        }
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("plan cache json: {e}"))?;
+        let fp = Self::platform_fingerprint(node);
+        if j.get("platform").and_then(|p| p.as_str()) != Some(fp.as_str()) {
+            cache.invalidations += 1;
+            return Ok(cache);
+        }
+        for e in j.get("entries").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let Some(name) = e.get("model").and_then(|m| m.as_str()) else { continue };
+            let Some(k) = e.get("key") else { continue };
+            let key = (|| {
+                Some(QuantizedScenario {
+                    context: k.get("context")?.as_usize()?,
+                    generate: k.get("generate")?.as_usize()?,
+                    batch: k.get("batch")?.as_usize()?,
+                })
+            })();
+            let Some(key) = key else { continue };
+            let Some(plan) = e.get("plan").and_then(HybridPlan::from_json) else { continue };
+            if name == model.name {
+                cache.restored += 1;
+            }
+            cache.entries.insert((name.to_string(), key), plan);
+        }
+        Ok(cache)
+    }
 }
 
 #[cfg(test)]
@@ -121,6 +225,52 @@ mod tests {
         cache.plan(&planner, key_for(&Scenario::short_extended())).unwrap();
         assert_eq!(cache.misses, 2);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn save_load_round_trip_and_fingerprint_invalidation() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let mut cache = PlanCache::new();
+        let k1 = key_for(&Scenario::long_constrained());
+        let k2 = key_for(&Scenario::short_extended());
+        let p1 = cache.plan(&planner, k1).unwrap();
+        cache.plan(&planner, k2).unwrap();
+
+        let dir = std::env::temp_dir().join("hap_plan_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        cache.save(&path).unwrap();
+
+        // Same (model, platform): both entries restore, and a warm
+        // lookup is a hit with a bit-identical plan — no re-solve.
+        let mut warm = PlanCache::load(&path, &m, &node).unwrap();
+        assert_eq!(warm.restored, 2);
+        let from_disk = warm.plan(&planner, k1).unwrap();
+        assert_eq!(warm.hits, 1);
+        assert_eq!(warm.misses, 0);
+        assert_eq!(from_disk.signature(), p1.signature());
+        assert_eq!(from_disk.predicted_total.to_bits(), p1.predicted_total.to_bits());
+
+        // Platform fingerprint mismatch: nothing restores.
+        let other_node = NodeConfig::a100x(4);
+        let cold = PlanCache::load(&path, &m, &other_node).unwrap();
+        assert_eq!(cold.restored, 0);
+        assert_eq!(cold.invalidations, 1);
+
+        // Model mismatch: nothing restores *for* the other model (the
+        // per-entry model name is the model fingerprint), but the
+        // foreign entries are preserved so a later save keeps them.
+        let other_model = MoEModelConfig::qwen15_moe_a27b();
+        let cold2 = PlanCache::load(&path, &other_model, &node).unwrap();
+        assert_eq!(cold2.restored, 0);
+        assert_eq!(cold2.len(), 2, "other models' entries must survive the round trip");
+
+        // A missing file is an empty warm start, not an error.
+        let none = PlanCache::load(&dir.join("nope.json"), &m, &node).unwrap();
+        assert_eq!(none.restored, 0);
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -29,6 +29,17 @@
 
 use crate::adapt::window::QuantizedScenario;
 use crate::planner::HybridPlan;
+use std::collections::HashMap;
+
+/// Clamp on a single measured/predicted observation (guards against
+/// one-off stalls dominating the EWMA).
+const MISPREDICT_OBS_MAX: f64 = 8.0;
+const MISPREDICT_OBS_MIN: f64 = 0.25;
+/// Clamp on the correction factor applied in the economics. The floor
+/// of 1.0 means measurements only *demote* (a plan that overruns its
+/// prediction becomes easier to switch away from); they never make the
+/// controller cling to a plan that happens to beat its prediction.
+const MISPREDICT_FACTOR_MAX: f64 = 4.0;
 
 /// Tunables for the hysteresis logic.
 #[derive(Debug, Clone)]
@@ -86,6 +97,12 @@ pub struct SwitchController {
     current_dwell: usize,
     /// EWMA of completed phase lengths, in batches.
     dwell_ewma: f64,
+    /// EWMA of measured/predicted per-batch latency per plan signature
+    /// — the closed loop on mispredicted plans. A plan that keeps
+    /// running slower than its prediction gets its active latency
+    /// scaled up in the break-even economics, so a candidate can
+    /// displace it ("demotion") even when raw predictions would not.
+    mispredict: HashMap<String, f64>,
     pub switches: usize,
     pub suppressed: usize,
 }
@@ -102,9 +119,33 @@ impl SwitchController {
             batches_since_switch: 0,
             current_dwell: 0,
             dwell_ewma: dwell,
+            mispredict: HashMap::new(),
             switches: 0,
             suppressed: 0,
         }
+    }
+
+    /// Fold one measured-vs-predicted per-batch latency observation for
+    /// the plan with `signature` into its mispredict EWMA. Callers feed
+    /// this with the latency actually measured for the batch that
+    /// executed under that plan.
+    pub fn observe_measured(&mut self, signature: &str, measured: f64, predicted: f64) {
+        if !(measured > 0.0) || !(predicted > 0.0) {
+            return;
+        }
+        let ratio = (measured / predicted).clamp(MISPREDICT_OBS_MIN, MISPREDICT_OBS_MAX);
+        let e = self.mispredict.entry(signature.to_string()).or_insert(1.0);
+        *e = 0.5 * *e + 0.5 * ratio;
+    }
+
+    /// The correction applied to the active plan's predicted latency in
+    /// the break-even economics (1.0 when unmeasured or accurate).
+    pub fn mispredict_factor(&self, signature: &str) -> f64 {
+        self.mispredict
+            .get(signature)
+            .copied()
+            .unwrap_or(1.0)
+            .clamp(1.0, MISPREDICT_FACTOR_MAX)
     }
 
     /// The plan currently executing (None before the first adoption).
@@ -192,6 +233,7 @@ impl SwitchController {
 
         // Same layout under a new key: relabel for free (no weights move).
         let active_plan = self.active.as_ref().expect("active plan when key set");
+        let active_sig = active_plan.signature();
         if active_plan.attn == candidate.attn
             && active_plan.expert_prefill == candidate.expert_prefill
             && active_plan.expert_decode == candidate.expert_decode
@@ -207,8 +249,13 @@ impl SwitchController {
         }
 
         // Break-even economics: only switch when the projected savings
-        // over the expected dwell clear the cost with margin.
-        let gain_per_batch = active_latency - candidate_latency;
+        // over the expected dwell clear the cost with margin. Each
+        // plan's prediction is scaled by its own measured mispredict
+        // factor: a plan that keeps overrunning its prediction gets
+        // demoted, while a model-wide scale bias (both plans measured
+        // equally off) cancels instead of causing switch ping-pong.
+        let gain_per_batch = active_latency * self.mispredict_factor(&active_sig)
+            - candidate_latency * self.mispredict_factor(&candidate.signature());
         let projected_savings = gain_per_batch * self.expected_dwell();
         if gain_per_batch <= 0.0 || projected_savings < self.config.breakeven_factor * switch_cost
         {
@@ -364,6 +411,54 @@ mod tests {
         c.step(key(4096), &a, 1.0, 1.0, 0.0);
         assert!(c.would_evaluate(key(4096)), "confirming step reaches economics");
         assert!(!c.would_evaluate(key(512)), "a different new key restarts debounce");
+    }
+
+    #[test]
+    fn consistently_mispredicted_plan_gets_demoted() {
+        // Candidate B predicts slightly WORSE than active A (1.2 vs
+        // 1.0 s/batch): on predictions alone the controller never
+        // switches. Once measurements show A consistently running ~4×
+        // its prediction, the corrected economics demote A and adopt B.
+        let cfg = ControllerConfig { cooldown_batches: 0, ..Default::default() };
+        let mut c = SwitchController::new(cfg);
+        let a = plan(4, 1, 1);
+        let b = plan(4, 4, 1);
+        c.step(key(256), &a, 0.0, 1.0, 0.0);
+        for _ in 0..5 {
+            let d = c.step(key(4096), &b, 1.0, 1.2, 0.01);
+            assert!(matches!(d, SwitchDecision::Stay), "switched on raw predictions");
+        }
+        assert_eq!(c.switches, 0);
+        assert_eq!(c.mispredict_factor(&a.signature()), 1.0);
+        for _ in 0..4 {
+            c.observe_measured(&a.signature(), 4.0, 1.0);
+        }
+        assert!(c.mispredict_factor(&a.signature()) > 3.0);
+        match c.step(key(4096), &b, 1.0, 1.2, 0.01) {
+            SwitchDecision::Switch { projected_savings, .. } => {
+                assert!(projected_savings > 0.0);
+            }
+            other => panic!("mispredicted plan not demoted: {other:?}"),
+        }
+        assert_eq!(c.switches, 1);
+        // The candidate (now active) carries no correction of its own.
+        assert_eq!(c.mispredict_factor(&b.signature()), 1.0);
+
+        // A model-wide bias — both plans equally mispredicted — cancels
+        // in the two-sided economics: with equal predictions there is
+        // no gain, so no ping-pong back.
+        for _ in 0..4 {
+            c.observe_measured(&b.signature(), 4.0, 1.0);
+        }
+        assert_eq!(
+            c.mispredict_factor(&a.signature()),
+            c.mispredict_factor(&b.signature())
+        );
+        for _ in 0..5 {
+            let d = c.step(key(256), &a, 1.0, 1.0, 0.01);
+            assert!(matches!(d, SwitchDecision::Stay), "uniform bias caused ping-pong");
+        }
+        assert_eq!(c.switches, 1);
     }
 
     #[test]

@@ -61,6 +61,9 @@ pub struct AdaptLoop {
     /// Platform the controller's resident plan was selected for; a
     /// change resets the controller (the cache flushes itself).
     platform: Option<NodeConfig>,
+    /// Traffic key of the previous step — the traffic a caller-supplied
+    /// measured latency was observed under.
+    last_key: Option<window::QuantizedScenario>,
 }
 
 impl AdaptLoop {
@@ -70,6 +73,7 @@ impl AdaptLoop {
             cache: PlanCache::new(),
             controller: SwitchController::new(config),
             platform: None,
+            last_key: None,
         }
     }
 
@@ -83,12 +87,26 @@ impl AdaptLoop {
     /// evaluated on: the replay harness passes the actual trace point;
     /// pass `None` to use the quantized key's representative (the
     /// serving loop, which only has the window's view).
+    ///
+    /// `measured` closes the loop on mispredicted plans: the wall-clock
+    /// per-batch latency of the *previous* batch (which executed under
+    /// the current active plan on the previous key's traffic). It is
+    /// folded into the controller's mispredict EWMA for that plan, so a
+    /// plan that keeps overrunning its prediction gets demoted.
     pub fn step<I: IntoIterator<Item = TrafficSample>>(
         &mut self,
         planner: &HapPlanner,
         samples: I,
         eval: Option<&Scenario>,
+        measured: Option<f64>,
     ) -> Result<(HybridPlan, SwitchDecision)> {
+        // Measured-latency feedback for the batch that just ran.
+        if let (Some(m), Some(active), Some(lk)) =
+            (measured, self.controller.active().cloned(), self.last_key)
+        {
+            let predicted = replay::predicted_plan_latency(planner, &active, &lk.to_scenario());
+            self.controller.observe_measured(&active.signature(), m, predicted);
+        }
         for s in samples {
             self.window.observe(s);
         }
@@ -127,6 +145,7 @@ impl AdaptLoop {
         };
         let decision =
             self.controller.step(key, &candidate, active_latency, candidate_latency, cost);
+        self.last_key = Some(key);
         let plan = self.controller.active().expect("plan adopted on first step").clone();
         Ok((plan, decision))
     }
@@ -148,11 +167,11 @@ mod tests {
         let samples =
             || (0..4).map(|_| TrafficSample { prompt: 4096, generate: 64, batch: 4 });
         let p1 = HapPlanner::new(&m, &pcie);
-        let (plan, d) = al.step(&p1, samples(), None).unwrap();
+        let (plan, d) = al.step(&p1, samples(), None, None).unwrap();
         assert_eq!(d, SwitchDecision::Adopt);
         assert_eq!(plan.node, pcie.label());
         let p2 = HapPlanner::new(&m, &nvlink);
-        let (plan, d) = al.step(&p2, samples(), None).unwrap();
+        let (plan, d) = al.step(&p2, samples(), None, None).unwrap();
         assert_eq!(d, SwitchDecision::Adopt, "stale plan served after redeploy");
         assert_eq!(plan.node, nvlink.label());
         assert_eq!(al.cache.invalidations, 1);

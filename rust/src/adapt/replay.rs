@@ -256,8 +256,24 @@ pub fn replay_adaptive(
     config: &ControllerConfig,
     window_capacity: usize,
 ) -> Result<ReplayReport> {
+    replay_adaptive_seeded(planner, trace, config, window_capacity, None).map(|(r, _)| r)
+}
+
+/// [`replay_adaptive`] with an optional warm-start plan cache (e.g.
+/// restored from disk via [`PlanCache::load`]); returns the cache as
+/// warmed by the run so callers can persist it.
+pub fn replay_adaptive_seeded(
+    planner: &HapPlanner,
+    trace: &WorkloadTrace,
+    config: &ControllerConfig,
+    window_capacity: usize,
+    seed_cache: Option<PlanCache>,
+) -> Result<(ReplayReport, PlanCache)> {
     let mut sim = EventSim::new(planner.node.num_devices);
     let mut control = AdaptLoop::new(config.clone(), window_capacity);
+    if let Some(cache) = seed_cache {
+        control.cache = cache;
+    }
     let mut switch_time = 0.0;
 
     for point in &trace.points {
@@ -268,7 +284,7 @@ pub fn replay_adaptive(
             batch: point.batch,
         });
         let sc = point.scenario();
-        let (plan, decision) = control.step(planner, samples, Some(&sc))?;
+        let (plan, decision) = control.step(planner, samples, Some(&sc), None)?;
         if let SwitchDecision::Switch { cost, .. } = decision {
             if cost > 0.0 {
                 sim.transition(cost, "replan-switch");
@@ -279,7 +295,7 @@ pub fn replay_adaptive(
         execute_batch(&mut sim, &bc);
     }
 
-    Ok(ReplayReport {
+    let report = ReplayReport {
         policy: "adaptive".into(),
         batches: trace.points.len(),
         total_s: sim.now(),
@@ -288,7 +304,8 @@ pub fn replay_adaptive(
         cache_hits: control.cache.hits,
         cache_misses: control.cache.misses,
         cache_hit_rate: control.cache.hit_rate(),
-    })
+    };
+    Ok((report, control.cache))
 }
 
 /// Replay one fixed strategy triple over the whole trace.
@@ -436,8 +453,21 @@ pub fn compare(
     config: &ControllerConfig,
     window_capacity: usize,
 ) -> Result<ReplayComparison> {
+    compare_seeded(planner, trace, config, window_capacity, None).map(|(c, _)| c)
+}
+
+/// [`compare`] with an optional warm-start plan cache for the adaptive
+/// policy; returns the warmed cache for persistence.
+pub fn compare_seeded(
+    planner: &HapPlanner,
+    trace: &WorkloadTrace,
+    config: &ControllerConfig,
+    window_capacity: usize,
+    seed_cache: Option<PlanCache>,
+) -> Result<(ReplayComparison, PlanCache)> {
     let n = planner.node.num_devices;
-    let adaptive = replay_adaptive(planner, trace, config, window_capacity)?;
+    let (adaptive, warmed) =
+        replay_adaptive_seeded(planner, trace, config, window_capacity, seed_cache)?;
     let tp = ExpertStrategy::new(n, 1);
     let static_tp =
         replay_fixed(planner, trace, "static-tp", &AttnStrategy::new(n, 1), &tp, &tp);
@@ -454,14 +484,15 @@ pub fn compare(
         &first_plan.expert_decode,
     );
     let oracle = replay_oracle(planner, trace)?;
-    Ok(ReplayComparison {
+    let cmp = ReplayComparison {
         trace: trace.name.clone(),
         batches: trace.points.len(),
         adaptive,
         static_tp,
         static_first,
         oracle,
-    })
+    };
+    Ok((cmp, warmed))
 }
 
 #[cfg(test)]

@@ -88,6 +88,15 @@ impl Scenario {
             ("batch", self.batch.into()),
         ])
     }
+
+    pub fn from_json(j: &Json) -> Option<Scenario> {
+        Some(Scenario {
+            name: j.get("name")?.as_str()?.to_string(),
+            context: j.get("context")?.as_usize()?,
+            generate: j.get("generate")?.as_usize()?,
+            batch: j.get("batch")?.as_usize()?,
+        })
+    }
 }
 
 #[cfg(test)]

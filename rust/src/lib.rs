@@ -12,8 +12,10 @@
 //!   MoE execution engine ([`engine`]), an online adaptation loop
 //!   ([`adapt`]: traffic window → plan cache → switch controller →
 //!   trace replay), and a real serving runtime ([`serving`], [`model`])
-//!   that executes AOT-compiled JAX/Pallas artifacts through PJRT
-//!   ([`runtime`]).
+//!   built on a device-grid execution engine (`ShardPlan` →
+//!   `DeviceGrid` roles + collectives) that runs hybrid EP×TP / DP×TP
+//!   plans either on AOT-compiled JAX/Pallas artifacts through PJRT
+//!   ([`runtime`]) or artifact-free on host kernels.
 //! - **L2 (python/compile/model.py)** — the tiny-MoE JAX model, lowered
 //!   once to HLO text (`artifacts/*.hlo.txt`).
 //! - **L1 (python/compile/kernels/)** — Pallas kernels (expert FFN,

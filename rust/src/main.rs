@@ -4,8 +4,9 @@
 //!   plan        Search the optimal hybrid parallel strategy (ILP).
 //!   breakdown   Per-layer latency breakdown, TP vs EP (paper Fig 2).
 //!   sweep       Speedup table across scenarios/platforms (Fig 4–9).
-//!   serve       Serve a synthetic workload on the real tiny-MoE via
-//!               PJRT under a chosen plan.
+//!   serve       Serve a synthetic workload on the tiny-MoE grid
+//!               engine (PJRT artifacts, or --backend host for the
+//!               artifact-free host kernels) under a chosen plan.
 //!   quant-eval  Quantization scheme quality report (Table I).
 //!   microbench  η/ρ simulation-model accuracy (Fig 5).
 
@@ -60,7 +61,7 @@ fn print_help() {
          plan        search the optimal hybrid parallel strategy (ILP)\n  \
          breakdown   per-layer latency breakdown TP vs EP (Fig 2)\n  \
          sweep       HAP vs TP speedups across scenarios (Fig 4/6/7/9)\n  \
-         serve       serve a workload on the real tiny-MoE via PJRT\n  \
+         serve       serve a workload on the tiny-MoE grid engine (pjrt or host backend)\n  \
          adapt-replay  replay a traffic trace: adaptive vs static vs oracle\n  \
          quant-eval  INT4 scheme quality (Table I)\n  \
          microbench  η/ρ simulation-model accuracy (Fig 5)\n\n\
@@ -226,42 +227,88 @@ fn cmd_sweep(args: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
-    let mut spec = ArgSpec::new("hap serve", "Serve a synthetic workload on the real tiny-MoE");
-    spec.flag("artifacts", "artifacts", "artifact directory");
+    let mut spec = ArgSpec::new("hap serve", "Serve a synthetic workload on the tiny-MoE");
+    spec.flag("artifacts", "artifacts", "artifact directory (pjrt backend)");
+    spec.flag(
+        "backend",
+        "pjrt",
+        "execution backend: pjrt (AOT artifacts) | host (grid engine on synthetic weights)",
+    );
     spec.flag("requests", "16", "number of requests");
     spec.flag("gen", "16", "tokens to generate per request");
     spec.flag("plan", "hap", "plan: hap | tp | adaptive");
     spec.flag("tp", "4", "device count (attention TP degree)");
+    spec.flag("plan-cache", "", "persist the adaptive plan cache at this path");
     let p = spec.parse(args).map_err(anyhow::Error::msg)?;
 
-    let dir = Path::new(p.get("artifacts"));
-    let rt = hap::runtime::PjrtRuntime::load(dir)?;
     let n = usize_flag(&p, "tp")?;
-    let config = match p.get("plan") {
-        "tp" => ServeConfig::tp(n),
-        "hap" => ServeConfig::hap_transition(n),
-        "adaptive" => {
-            // Adapt for the model the loaded artifacts actually serve.
-            let mut c = ServeConfig::adaptive(n);
-            c.adaptive = c.adaptive.take().map(|a| a.with_manifest_model(&rt.manifest.model));
-            c
+    let make_config = |meta: &hap::runtime::TinyModelMeta| -> anyhow::Result<ServeConfig> {
+        let mut config = match p.get("plan") {
+            "tp" => ServeConfig::tp(n),
+            "hap" => ServeConfig::hap_transition(n),
+            "adaptive" => {
+                // Adapt for the model shape actually being served.
+                let mut c = ServeConfig::adaptive(n);
+                c.adaptive = c.adaptive.take().map(|a| a.with_manifest_model(meta));
+                c
+            }
+            other => anyhow::bail!("unknown plan '{other}'"),
+        };
+        let cache_path = p.get("plan-cache");
+        if !cache_path.is_empty() {
+            if let Some(a) = &mut config.adaptive {
+                a.plan_cache = Some(std::path::PathBuf::from(cache_path));
+            } else {
+                eprintln!("--plan-cache only applies to --plan adaptive (ignored)");
+            }
         }
-        other => anyhow::bail!("unknown plan '{other}'"),
+        Ok(config)
     };
-    let m = rt.manifest.model.clone();
-    let mut rng = Rng::new(7);
     let nreq = usize_flag(&p, "requests")?;
     let gen = usize_flag(&p, "gen")?;
-    let workload: Vec<Request> = (0..nreq as u64)
-        .map(|id| {
-            let len = rng.range(m.prefill_len / 2, m.prefill_len);
-            let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
-            Request::new(id, prompt, gen)
-        })
-        .collect();
+    let make_workload = |meta: &hap::runtime::TinyModelMeta| -> Vec<Request> {
+        let mut rng = Rng::new(7);
+        (0..nreq as u64)
+            .map(|id| {
+                let len = rng.range(meta.prefill_len / 2, meta.prefill_len);
+                let prompt: Vec<i32> =
+                    (0..len).map(|_| rng.below(meta.vocab) as i32).collect();
+                Request::new(id, prompt, gen)
+            })
+            .collect()
+    };
 
-    println!("serving {nreq} requests ({} plan: {}) ...", p.get("plan"), config.label());
-    let report = serve_workload(&rt, &config, workload)?;
+    let report = match p.get("backend") {
+        "pjrt" => {
+            let dir = Path::new(p.get("artifacts"));
+            let rt = hap::runtime::PjrtRuntime::load(dir)?;
+            let m = rt.manifest.model.clone();
+            let config = make_config(&m)?;
+            println!(
+                "serving {} requests ({} plan: {}) on pjrt ...",
+                nreq,
+                p.get("plan"),
+                config.label()
+            );
+            serve_workload(&rt, &config, make_workload(&m))?
+        }
+        "host" => {
+            // Artifact-free: the grid engine's host kernels over
+            // seeded synthetic weights.
+            let meta = hap::runtime::TinyModelMeta::host_demo();
+            let weights = hap::model::WeightStore::synthetic(&meta, 0);
+            let mut exec = hap::model::ModelExecutor::host(weights);
+            let config = make_config(&meta)?;
+            println!(
+                "serving {} requests ({} plan: {}) on the host grid engine ...",
+                nreq,
+                p.get("plan"),
+                config.label()
+            );
+            hap::serving::serve_on(&mut exec, &config, make_workload(&meta))?
+        }
+        other => anyhow::bail!("unknown backend '{other}' (pjrt | host)"),
+    };
     println!("{}", report.metrics.summary());
     println!(
         "compute split: prefill {:.2} s, decode {:.2} s",
@@ -283,6 +330,7 @@ fn cmd_adapt_replay(args: &[String]) -> anyhow::Result<()> {
     spec.flag("batch", "16", "nominal global batch size");
     spec.flag("seed", "17", "trace jitter seed");
     spec.flag("json", "", "write the comparison JSON to this path");
+    spec.flag("plan-cache", "", "load/save the adaptive plan cache at this path");
     let p = spec.parse(args).map_err(anyhow::Error::msg)?;
 
     let model = parse_model(p.get("model"))?;
@@ -294,8 +342,26 @@ fn cmd_adapt_replay(args: &[String]) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown trace '{}'", p.get("trace")))?;
 
     let planner = HapPlanner::new(&model, &node);
-    let cmp =
-        hap::adapt::replay::compare(&planner, &trace, &hap::adapt::ControllerConfig::default(), 32)?;
+    let cache_path = p.get("plan-cache");
+    let seed_cache = if cache_path.is_empty() {
+        None
+    } else {
+        let cache =
+            hap::adapt::PlanCache::load(Path::new(cache_path), &model, &node)?;
+        println!("plan cache: restored {} entries from {cache_path}", cache.restored);
+        Some(cache)
+    };
+    let (cmp, warmed) = hap::adapt::replay::compare_seeded(
+        &planner,
+        &trace,
+        &hap::adapt::ControllerConfig::default(),
+        32,
+        seed_cache,
+    )?;
+    if !cache_path.is_empty() {
+        warmed.save(Path::new(cache_path))?;
+        println!("plan cache: saved {} entries to {cache_path}", warmed.len());
+    }
 
     println!(
         "replaying '{}' ({} batches) for {} on {}:",

@@ -1,0 +1,114 @@
+//! Host-side collectives for the device grid: the combines the demo
+//! node performs between per-device module calls.
+//!
+//! Every combine is **order-deterministic**: reductions fold member
+//! outputs in the group's member order, concatenations stack them in
+//! member order. Per-device compute may therefore run in parallel
+//! threads while the combined result stays bit-identical to the
+//! sequential reference path — the combine itself always runs on the
+//! coordinating thread over the same operands in the same order.
+
+use crate::model::grid::{CollectiveGroup, GroupKind};
+use crate::runtime::literal::HostTensor;
+use crate::Result;
+
+/// Element-wise sum of tensors in the given order (TP partial-sum and
+/// EP contribution-sum are both plain sums; their distinction is which
+/// shards produced the operands).
+pub fn sum_in_order(parts: &[&HostTensor]) -> Result<HostTensor> {
+    let first = parts
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("reduce over empty group"))?;
+    let mut acc = (*first).clone();
+    for p in &parts[1..] {
+        if p.shape != acc.shape {
+            anyhow::bail!("reduce shape mismatch: {:?} vs {:?}", p.shape, acc.shape);
+        }
+        acc.add_assign(p);
+    }
+    Ok(acc)
+}
+
+/// Concatenate along the leading (batch) axis in the given order; all
+/// trailing dimensions must agree.
+pub fn concat_rows(parts: &[&HostTensor]) -> Result<HostTensor> {
+    let first = parts
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("concat over empty group"))?;
+    let tail = &first.shape[1..];
+    let mut rows = 0usize;
+    let mut data = Vec::new();
+    for p in parts {
+        if &p.shape[1..] != tail {
+            anyhow::bail!("concat shape mismatch: {:?} vs {:?}", p.shape, first.shape);
+        }
+        rows += p.shape[0];
+        data.extend_from_slice(&p.data);
+    }
+    let mut shape = vec![rows];
+    shape.extend_from_slice(tail);
+    Ok(HostTensor::new(shape, data))
+}
+
+/// Apply a collective group to the per-device output table (`outs[d]`
+/// holds device `d`'s module output). Reductions sum members in order;
+/// batch-split concatenates them in order.
+pub fn apply(group: &CollectiveGroup, outs: &[Option<HostTensor>]) -> Result<HostTensor> {
+    let mut parts = Vec::with_capacity(group.members.len());
+    for &d in &group.members {
+        let t = outs
+            .get(d)
+            .and_then(|o| o.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("collective member {d} produced no output"))?;
+        parts.push(t);
+    }
+    match group.kind {
+        GroupKind::PartialSum | GroupKind::ContributionSum => sum_in_order(&parts),
+        GroupKind::BatchSplit => concat_rows(&parts),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: Vec<usize>, data: Vec<f32>) -> HostTensor {
+        HostTensor::new(shape, data)
+    }
+
+    #[test]
+    fn sum_folds_in_member_order() {
+        let a = t(vec![2], vec![1.0, 2.0]);
+        let b = t(vec![2], vec![10.0, 20.0]);
+        let s = sum_in_order(&[&a, &b]).unwrap();
+        assert_eq!(s.data, vec![11.0, 22.0]);
+        assert!(sum_in_order(&[]).is_err());
+    }
+
+    #[test]
+    fn concat_stacks_leading_axis() {
+        let a = t(vec![1, 2], vec![1.0, 2.0]);
+        let b = t(vec![2, 2], vec![3.0, 4.0, 5.0, 6.0]);
+        let c = concat_rows(&[&a, &b]).unwrap();
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let bad = t(vec![1, 3], vec![0.0; 3]);
+        assert!(concat_rows(&[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn apply_respects_group_kind_and_members() {
+        let outs = vec![
+            Some(t(vec![1, 2], vec![1.0, 1.0])),
+            Some(t(vec![1, 2], vec![2.0, 2.0])),
+            None,
+        ];
+        let red = CollectiveGroup { kind: GroupKind::PartialSum, members: vec![0, 1] };
+        assert_eq!(apply(&red, &outs).unwrap().data, vec![3.0, 3.0]);
+        let cat = CollectiveGroup { kind: GroupKind::BatchSplit, members: vec![1, 0] };
+        // Member order controls stacking order.
+        assert_eq!(apply(&cat, &outs).unwrap().data, vec![2.0, 2.0, 1.0, 1.0]);
+        let missing = CollectiveGroup { kind: GroupKind::PartialSum, members: vec![2] };
+        assert!(apply(&missing, &outs).is_err());
+    }
+}

@@ -1,208 +1,354 @@
-//! The model executor: composes per-device AOT artifacts into full
-//! prefill/decode steps under a hybrid parallel plan.
+//! The grid execution engine: persistent per-device shard state driving
+//! full prefill/decode steps under a hybrid `ShardPlan`.
 //!
-//! One logical device per shard; combines (TP partial sums, EP
-//! contribution sums) are performed on host between artifact calls —
-//! the demo node's "collectives". The attention strategy is pinned
-//! across stages (KV cache layout); the expert strategy may differ
-//! between prefill and decode, exercising the paper's dynamic
-//! parallelism transition on the real compute path.
+//! A [`ShardPlan`] lowers to a [`DeviceGrid`] of per-device roles
+//! (`dp_rank`/`tp_rank` for attention, `ep_rank`/`etp_rank` for
+//! experts). Each device owns its weight shards and its device-resident
+//! KV shard; module outputs are merged by the factored
+//! [`crate::model::collectives`] (partial-sum per TP group,
+//! contribution-sum across EP blocks, batch-split concat across DP
+//! groups), with a fixed member order so parallel and sequential
+//! execution are bit-identical.
+//!
+//! Two backends share the engine:
+//!
+//! - **Host** — the module math runs as Rust [`crate::model::kernels`]
+//!   on `HostTensor`s. Per-device compute runs under
+//!   `std::thread::scope` ([`EngineMode::Parallel`]) or a plain loop
+//!   ([`EngineMode::Sequential`], the retained reference path); the
+//!   combines always run on the coordinator in group order. This
+//!   backend needs no artifacts and is what the runtime-free grid tests
+//!   and `hap serve --backend host` exercise.
+//! - **Pjrt** — per-device compute calls the AOT artifacts through the
+//!   PJRT client (FFI handles are not `Send`, so devices execute
+//!   sequentially on the demo node). The fixed artifact shapes are
+//!   bridged exactly: DP groups run the full-batch attention artifact
+//!   on a zero-padded sub-batch and keep their rows; hybrid EP×TP
+//!   experts run the EP-family artifact with the intermediate slice
+//!   zero-padded to full width (exact, because the padded gate/up
+//!   columns contribute `act·0 = 0`).
+//!
+//! **State is persistent across batches**: weight shards stay resident
+//! (uploaded/materialized once per layout) and only a *plan switch*
+//! evicts the outgoing layout and materializes the incoming one — that
+//! resharding work is measured in [`ExecStats`], which is what makes
+//! `Metrics.transitions` and the adapt controller's switch-cost
+//! economics describe real weight movement. Per-batch sequence state
+//! (positions, KV caches) resets in `prefill`.
 
+use crate::model::collectives;
+use crate::model::grid::{DeviceGrid, ShardPlan};
+use crate::model::kernels;
+use crate::model::weights::ShardSpec;
 use crate::runtime::literal::{self, HostTensor};
-use crate::runtime::PjrtRuntime;
-use crate::strategy::ExpertStrategy;
+use crate::runtime::{PjrtRuntime, TinyModelMeta};
+use crate::strategy::AttnStrategy;
 use crate::Result;
 use anyhow::anyhow;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::time::Instant;
 
-/// Per-stage execution strategy on the demo node.
-///
-/// The real-compute path supports TP for attention (DP needs per-group
-/// batches, which the artifact set fixes at B — covered by the
-/// simulation stack instead; see DESIGN.md) and TP *or* EP for experts.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct StageStrategy {
-    pub attn_tp: usize,
-    pub expert: ExpertStrategy,
+/// How the host backend schedules per-device module compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// One scoped thread per device (production path).
+    Parallel,
+    /// Plain loop over devices — the bit-equivalence reference.
+    Sequential,
 }
 
-impl StageStrategy {
-    pub fn tp(n: usize) -> StageStrategy {
-        StageStrategy { attn_tp: n, expert: ExpertStrategy::new(n, 1) }
-    }
-
-    pub fn expert_label(&self) -> String {
-        self.expert.label()
-    }
+#[derive(Clone, Copy)]
+enum Backend<'rt> {
+    Pjrt(&'rt PjrtRuntime),
+    Host,
 }
 
-/// KV cache for one layer on one device: padded [B, M, KVH_local, D].
+/// KV cache shard for one layer on one device. Host backend: the
+/// device's batch slice `[B_g, M, KVH_l, D]`; PJRT backend: padded to
+/// the full artifact batch `[B, M, KVH_l, D]`.
 struct LayerCache {
     k: HostTensor,
     v: HostTensor,
 }
 
-/// The executor. Weight literals are sliced and cached per
-/// (strategy, layer, device) on first use; the per-token hot path only
-/// builds activation literals.
+/// One logical device: its resident weight shards (and, on the PJRT
+/// backend, the uploaded buffers) plus its KV shards.
+struct DeviceState {
+    device: usize,
+    /// (family, layer) → shard tensors, e.g. family `attn_tp2` or
+    /// `expert_ep2tp2`.
+    shards: HashMap<(String, usize), Vec<HostTensor>>,
+    /// PJRT-uploaded buffers parallel to `shards`. The source literal
+    /// is retained with its buffer: `BufferFromHostLiteral` is
+    /// asynchronous, so the literal must outlive the transfer.
+    bufs: HashMap<(String, usize), Vec<(xla::Literal, xla::PjRtBuffer)>>,
+    kv: Vec<Option<LayerCache>>,
+}
+
+impl DeviceState {
+    fn new(device: usize) -> DeviceState {
+        DeviceState { device, shards: HashMap::new(), bufs: HashMap::new(), kv: Vec::new() }
+    }
+}
+
+/// Cumulative shard/upload accounting — the measurable resharding work.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ExecStats {
+    /// Shards sliced + made device-resident ("weight uploads"): one per
+    /// (device, family, layer) materialization event.
+    pub materializations: usize,
+    /// Resident shard entries dropped by plan switches.
+    pub evictions: usize,
+    /// f32 elements of logical shard data materialized.
+    pub uploaded_floats: usize,
+    /// `begin_batch` calls that changed the resident layout — evicted
+    /// shards, or materialized new ones while others were already
+    /// resident. The first batch's cold materialization is not a
+    /// reshard.
+    pub reshards: usize,
+    /// Wall-clock seconds spent slicing/uploading shards.
+    pub reshard_seconds: f64,
+}
+
+/// The executor. Construct once per serving run; feed it batches.
 pub struct ModelExecutor<'rt> {
-    pub rt: &'rt PjrtRuntime,
+    backend: Backend<'rt>,
+    mode: EngineMode,
     pub weights: super::WeightStore,
-    /// (kind, layer, device) → device-resident weight buffers. kind
-    /// encodes the artifact family + shard degree, e.g. "attn_tp2",
-    /// "expert_ep4". Uploaded once (§Perf: keeps ~50 MB of parameters
-    /// off the per-step H2D path). The source literal is retained with
-    /// its buffer: `BufferFromHostLiteral` is asynchronous, so the
-    /// literal must outlive the transfer.
-    weight_cache: HashMap<(String, usize, usize), Vec<(xla::Literal, xla::PjRtBuffer)>>,
-    /// Embedding/head buffers (uploaded once; literal retained).
+    devices: Vec<DeviceState>,
+    /// Embedding/head buffers (PJRT; uploaded once, literal retained).
     embed_buf: Option<(xla::Literal, xla::PjRtBuffer)>,
     head_bufs: Option<[(xla::Literal, xla::PjRtBuffer); 2]>,
-    /// Per-layer per-device caches (attention shards).
-    caches: Vec<Vec<LayerCache>>,
     /// Current sequence position (tokens stored so far).
     pub pos: usize,
-    attn_tp: Option<usize>,
+    /// Attention strategy pinned by the live KV caches (set by
+    /// `prefill`, enforced by `decode_step`, released per batch).
+    attn: Option<AttnStrategy>,
+    /// Plans `begin_batch` validated and made resident — lets the
+    /// per-token path skip re-validation and the residency scan.
+    batch_plans: Option<(ShardPlan, ShardPlan)>,
+    stats: ExecStats,
 }
 
 impl<'rt> ModelExecutor<'rt> {
+    /// PJRT-backed executor over a loaded artifact set.
     pub fn new(rt: &'rt PjrtRuntime) -> Result<ModelExecutor<'rt>> {
         let blob = rt.read_weights()?;
         let weights = super::WeightStore::from_blob(&rt.manifest, &blob)?;
         Ok(ModelExecutor {
-            rt,
+            backend: Backend::Pjrt(rt),
+            mode: EngineMode::Sequential,
             weights,
-            weight_cache: HashMap::new(),
+            devices: Vec::new(),
             embed_buf: None,
             head_bufs: None,
-            caches: Vec::new(),
             pos: 0,
-            attn_tp: None,
+            attn: None,
+            batch_plans: None,
+            stats: ExecStats::default(),
         })
     }
 
-    fn meta(&self) -> &crate::runtime::TinyModelMeta {
-        &self.rt.manifest.model
+    /// Artifact-free executor running the host kernels (parallel
+    /// per-device threads by default).
+    pub fn host(weights: super::WeightStore) -> ModelExecutor<'static> {
+        Self::host_with_mode(weights, EngineMode::Parallel)
     }
 
-    fn weight_pairs(
-        &mut self,
-        kind: &str,
-        layer: usize,
-        device: usize,
-    ) -> Result<&Vec<(xla::Literal, xla::PjRtBuffer)>> {
-        let key = (kind.to_string(), layer, device);
-        if !self.weight_cache.contains_key(&key) {
-            let tensors = if let Some(t) = kind.strip_prefix("attn_tp") {
-                self.weights.shard_attn(layer, t.parse()?, device)?
-            } else if let Some(t) = kind.strip_prefix("expert_tp") {
-                self.weights.shard_expert_tp(layer, t.parse()?, device)?
-            } else if let Some(e) = kind.strip_prefix("expert_ep") {
-                self.weights.shard_expert_ep(layer, e.parse()?, device)?
-            } else {
-                anyhow::bail!("unknown weight kind {kind}");
-            };
-            let bufs = tensors
-                .iter()
-                .map(|t| {
-                    let lit = t.to_literal()?;
-                    let buf = self.rt.to_device(&lit)?;
-                    Ok((lit, buf))
-                })
-                .collect::<Result<Vec<_>>>()?;
-            self.weight_cache.insert(key.clone(), bufs);
+    /// Host executor with an explicit scheduling mode (the sequential
+    /// mode is the bit-equivalence reference path).
+    pub fn host_with_mode(weights: super::WeightStore, mode: EngineMode) -> ModelExecutor<'static> {
+        ModelExecutor {
+            backend: Backend::Host,
+            mode,
+            weights,
+            devices: Vec::new(),
+            embed_buf: None,
+            head_bufs: None,
+            pos: 0,
+            attn: None,
+            batch_plans: None,
+            stats: ExecStats::default(),
         }
-        Ok(&self.weight_cache[&key])
     }
 
-    fn weight_buffers(
-        &mut self,
-        kind: &str,
-        layer: usize,
-        device: usize,
-    ) -> Result<()> {
-        self.weight_pairs(kind, layer, device).map(|_| ())
+    pub fn meta(&self) -> &TinyModelMeta {
+        &self.weights.meta
     }
 
-    fn embed_buffer(&mut self) -> Result<()> {
-        if self.embed_buf.is_none() {
-            let lit = self.weights.get("embed")?.to_literal()?;
-            let buf = self.rt.to_device(&lit)?;
-            self.embed_buf = Some((lit, buf));
+    pub fn stats(&self) -> ExecStats {
+        self.stats
+    }
+
+    /// A plan is executable when it lowers to a well-formed grid for
+    /// this model. (Artifact coverage is checked at call time on the
+    /// PJRT backend, so the error names the missing artifact.)
+    pub fn validate(&self, plan: &ShardPlan) -> Result<()> {
+        let grid = DeviceGrid::lower(plan)?;
+        grid.check_meta(self.meta())
+    }
+
+    /// Declare the batch's (prefill, decode) plans: evicts shard
+    /// layouts neither stage needs, then materializes both stages'
+    /// shards — the measured resharding work of a plan switch.
+    pub fn begin_batch(&mut self, prefill: &ShardPlan, decode: &ShardPlan) -> Result<()> {
+        self.validate(prefill)?;
+        self.validate(decode)?;
+        if prefill.attn != decode.attn {
+            anyhow::bail!(
+                "attention strategy must match across stages ({} vs {})",
+                prefill.attn,
+                decode.attn
+            );
+        }
+        let n = prefill.devices();
+        self.ensure_devices(n);
+        let needed: HashSet<String> = [
+            attn_family(&prefill.attn),
+            expert_family(prefill),
+            expert_family(decode),
+        ]
+        .into_iter()
+        .collect();
+        let t0 = Instant::now();
+        let had_resident = self.devices.iter().any(|st| !st.shards.is_empty());
+        let mut evicted = 0usize;
+        for st in &mut self.devices {
+            let before = st.shards.len();
+            st.shards.retain(|(fam, _), _| needed.contains(fam));
+            st.bufs.retain(|(fam, _), _| needed.contains(fam));
+            evicted += before - st.shards.len();
+        }
+        self.stats.evictions += evicted;
+        let mats_before = self.stats.materializations;
+        self.ensure_resident(prefill)?;
+        self.ensure_resident(decode)?;
+        let materialized = self.stats.materializations - mats_before;
+        // A reshard is any layout change after the cold start: shards
+        // evicted, or new shards joining an already-resident set (a
+        // superset switch, e.g. a new decode-stage layout).
+        if evicted > 0 || (had_resident && materialized > 0) {
+            self.stats.reshards += 1;
+        }
+        self.stats.reshard_seconds += t0.elapsed().as_secs_f64();
+        self.batch_plans = Some((*prefill, *decode));
+        Ok(())
+    }
+
+    /// True when `begin_batch` already validated this plan and made its
+    /// shards resident for the current batch.
+    fn plan_ready(&self, plan: &ShardPlan) -> bool {
+        self.batch_plans
+            .map_or(false, |(p, d)| p == *plan || d == *plan)
+    }
+
+    fn ensure_devices(&mut self, n: usize) {
+        if self.devices.len() != n {
+            let dropped: usize = self.devices.iter().map(|d| d.shards.len()).sum();
+            if dropped > 0 {
+                self.stats.evictions += dropped;
+                self.stats.reshards += 1;
+            }
+            self.devices = (0..n).map(DeviceState::new).collect();
+            self.attn = None;
+            self.batch_plans = None;
+        }
+    }
+
+    /// Materialize (and on PJRT upload) every shard the plan's grid
+    /// needs that is not already resident.
+    fn ensure_resident(&mut self, plan: &ShardPlan) -> Result<()> {
+        self.ensure_devices(plan.devices());
+        let m = self.meta().clone();
+        let attn_fam = attn_family(&plan.attn);
+        let exp_fam = expert_family(plan);
+        let backend = self.backend;
+        let weights = &self.weights;
+        let stats = &mut self.stats;
+        for st in &mut self.devices {
+            let d = st.device;
+            for l in 0..m.layers {
+                let specs: [(&String, ShardSpec); 2] = [
+                    (&attn_fam, ShardSpec::Attn { layer: l, tp: plan.attn.tp, rank: d % plan.attn.tp }),
+                    (
+                        &exp_fam,
+                        ShardSpec::Expert {
+                            layer: l,
+                            ep: plan.expert.ep,
+                            tp: plan.expert.tp,
+                            ep_rank: d / plan.expert.tp,
+                            tp_rank: d % plan.expert.tp,
+                        },
+                    ),
+                ];
+                for (fam, spec) in specs {
+                    let key = (fam.clone(), l);
+                    if st.shards.contains_key(&key) {
+                        continue;
+                    }
+                    let tensors = weights.shard(&spec)?;
+                    stats.materializations += 1;
+                    stats.uploaded_floats += tensors.iter().map(|t| t.elements()).sum::<usize>();
+                    if let Backend::Pjrt(rt) = backend {
+                        let upload = match spec {
+                            ShardSpec::Expert { ep, tp, tp_rank, .. } if ep > 1 && tp > 1 => {
+                                pad_expert_for_artifact(&tensors, m.inter, tp, tp_rank)
+                            }
+                            _ => tensors.clone(),
+                        };
+                        let bufs = upload
+                            .iter()
+                            .map(|t| {
+                                let lit = t.to_literal()?;
+                                let buf = rt.to_device(&lit)?;
+                                Ok((lit, buf))
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        st.bufs.insert(key.clone(), bufs);
+                    }
+                    st.shards.insert(key, tensors);
+                }
+            }
         }
         Ok(())
     }
 
     /// Run prefill for a [B, S] token batch; returns last-position
-    /// logits [B, V]. Initializes the KV caches under `strategy`.
-    pub fn prefill(&mut self, tokens: &[i32], strategy: &StageStrategy) -> Result<HostTensor> {
+    /// logits [B, V]. Resets per-batch sequence state (positions, KV
+    /// caches) while keeping resident weight shards warm.
+    pub fn prefill(&mut self, tokens: &[i32], plan: &ShardPlan) -> Result<HostTensor> {
         let m = self.meta().clone();
         let (b, s) = (m.batch, m.prefill_len);
         if tokens.len() != b * s {
             anyhow::bail!("prefill expects {}x{} tokens, got {}", b, s, tokens.len());
         }
-        self.validate(strategy)?;
-        self.attn_tp = Some(strategy.attn_tp);
-
-        // Embed (embedding table resident on device).
-        let tok_lit = literal::tokens_literal(tokens, &[b, s])?;
-        let tok_buf = self.rt.to_device(&tok_lit)?;
-        self.embed_buffer()?;
-        let outs = {
-            let embed = &self.embed_buf.as_ref().unwrap().1;
-            self.rt.execute_buffers("embed_prefill", &[&tok_buf, embed])?
-        };
-        let mut x = HostTensor::from_literal(&outs[0], vec![b, s, m.hidden])?;
-
-        // Layers.
-        self.caches.clear();
-        let t = strategy.attn_tp;
-        let kv_l = (m.kv_heads / t).max(1);
-        for l in 0..m.layers {
-            // Attention module: sum TP partials, collect KV shards.
-            let x_lit = x.to_literal()?;
-            let x_buf = self.rt.to_device(&x_lit)?;
-            let mut a_sum: Option<HostTensor> = None;
-            let mut layer_caches = Vec::with_capacity(t);
-            for d in 0..t {
-                let kind = format!("attn_tp{t}");
-                self.weight_buffers(&kind, l, d)?;
-                let w = &self.weight_cache[&(kind, l, d)];
-                let mut inputs: Vec<&xla::PjRtBuffer> = vec![&x_buf];
-                inputs.extend(w.iter().map(|(_, b)| b));
-                let outs = self.rt.execute_buffers(&format!("attn_prefill_tp{t}"), &inputs)?;
-                let partial = HostTensor::from_literal(&outs[0], vec![b, s, m.hidden])?;
-                match &mut a_sum {
-                    None => a_sum = Some(partial),
-                    Some(acc) => acc.add_assign(&partial),
-                }
-                // Pad prefill KV [B,S,kv_l,D] into [B,M,kv_l,D].
-                let k = HostTensor::from_literal(&outs[1], vec![b, s, kv_l, m.head_dim])?;
-                let v = HostTensor::from_literal(&outs[2], vec![b, s, kv_l, m.head_dim])?;
-                layer_caches.push(LayerCache {
-                    k: pad_cache(&k, m.max_len),
-                    v: pad_cache(&v, m.max_len),
-                });
-            }
-            self.caches.push(layer_caches);
-            x.add_assign(&a_sum.expect("t >= 1"));
-
-            // Expert module: sum shard outputs.
-            let e_out = self.expert_module(&x, l, strategy, "prefill")?;
-            x.add_assign(&e_out);
+        if !self.plan_ready(plan) {
+            self.validate(plan)?;
+            self.ensure_resident(plan)?;
+        }
+        let grid = DeviceGrid::lower(plan)?;
+        self.attn = Some(plan.attn);
+        self.pos = 0;
+        for st in &mut self.devices {
+            st.kv = (0..m.layers).map(|_| None).collect();
         }
 
+        let mut x = self.embed(tokens, b, s, &m)?;
+        for l in 0..m.layers {
+            let a_out = self.attn_prefill_layer(&x, l, &grid, &m)?;
+            x.add_assign(&a_out);
+            let e_out = self.expert_layer(&x, l, &grid, &m, "prefill")?;
+            x.add_assign(&e_out);
+        }
         self.pos = s;
-        self.head(&x)
+        self.head(&x, &m)
     }
 
     /// One decode step: `last_tokens` [B] (previous outputs), returns
-    /// logits [B, V]. `strategy.attn_tp` must match prefill's.
-    pub fn decode_step(
-        &mut self,
-        last_tokens: &[i32],
-        strategy: &StageStrategy,
-    ) -> Result<HostTensor> {
+    /// logits [B, V]. The plan's attention strategy must match
+    /// prefill's (pinned by the KV cache layout); the expert strategy
+    /// may differ — the paper's dynamic parallelism transition.
+    pub fn decode_step(&mut self, last_tokens: &[i32], plan: &ShardPlan) -> Result<HostTensor> {
         let m = self.meta().clone();
         let b = m.batch;
         if last_tokens.len() != b {
@@ -211,137 +357,365 @@ impl<'rt> ModelExecutor<'rt> {
         if self.pos + 1 > m.max_len {
             anyhow::bail!("KV cache exhausted at pos {}", self.pos);
         }
-        self.validate(strategy)?;
-        let t = self.attn_tp.ok_or_else(|| anyhow!("decode before prefill"))?;
-        if strategy.attn_tp != t {
-            anyhow::bail!("attention strategy is pinned by the KV cache (tp{t})");
+        let pinned = self.attn.ok_or_else(|| anyhow!("decode before prefill"))?;
+        if plan.attn != pinned {
+            anyhow::bail!("attention strategy is pinned by the KV cache ({pinned})");
         }
+        // Per-token fast path: plans declared via `begin_batch` are
+        // already validated and resident.
+        if !self.plan_ready(plan) {
+            self.validate(plan)?;
+            self.ensure_resident(plan)?;
+        }
+        let grid = DeviceGrid::lower(plan)?;
 
-        // Embed one token per sequence.
-        let tok_lit = literal::tokens_literal(last_tokens, &[b, 1])?;
-        let tok_buf = self.rt.to_device(&tok_lit)?;
-        self.embed_buffer()?;
-        let outs = {
-            let embed = &self.embed_buf.as_ref().unwrap().1;
-            self.rt.execute_buffers("embed_decode", &[&tok_buf, embed])?
-        };
-        let mut x = HostTensor::from_literal(&outs[0], vec![b, 1, m.hidden])?;
-
-        let kv_l = (m.kv_heads / t).max(1);
-        let pos_lit = literal::scalar_i32(self.pos as i32);
-        let pos_buf = self.rt.to_device(&pos_lit)?;
+        let mut x = self.embed(last_tokens, b, 1, &m)?;
         for l in 0..m.layers {
-            let x_lit = x.to_literal()?;
-            let x_buf = self.rt.to_device(&x_lit)?;
-            let mut a_sum: Option<HostTensor> = None;
-            for d in 0..t {
-                let kind = format!("attn_tp{t}");
-                // Assemble inputs: x, k_cache, v_cache, pos, ln, wq..wo.
-                let k_lit = self.caches[l][d].k.to_literal()?;
-                let v_lit = self.caches[l][d].v.to_literal()?;
-                let k_buf = self.rt.to_device(&k_lit)?;
-                let v_buf = self.rt.to_device(&v_lit)?;
-                self.weight_buffers(&kind, l, d)?;
-                let w = &self.weight_cache[&(kind, l, d)];
-                let mut inputs: Vec<&xla::PjRtBuffer> = vec![&x_buf, &k_buf, &v_buf, &pos_buf];
-                inputs.extend(w.iter().map(|(_, b)| b));
-                let outs = self.rt.execute_buffers(&format!("attn_decode_tp{t}"), &inputs)?;
-                let partial = HostTensor::from_literal(&outs[0], vec![b, 1, m.hidden])?;
-                match &mut a_sum {
-                    None => a_sum = Some(partial),
-                    Some(acc) => acc.add_assign(&partial),
-                }
-                self.caches[l][d].k =
-                    HostTensor::from_literal(&outs[1], vec![b, m.max_len, kv_l, m.head_dim])?;
-                self.caches[l][d].v =
-                    HostTensor::from_literal(&outs[2], vec![b, m.max_len, kv_l, m.head_dim])?;
-            }
-            x.add_assign(&a_sum.expect("t >= 1"));
-            let e_out = self.expert_module(&x, l, strategy, "decode")?;
+            let a_out = self.attn_decode_layer(&x, l, &grid, &m)?;
+            x.add_assign(&a_out);
+            let e_out = self.expert_layer(&x, l, &grid, &m, "decode")?;
             x.add_assign(&e_out);
         }
-
         self.pos += 1;
-        self.head(&x)
+        self.head(&x, &m)
     }
 
-    /// Expert module under the stage strategy: returns the combined
-    /// output with the same shape as `x` ([B, S|1, H]).
-    fn expert_module(
-        &mut self,
-        x: &HostTensor,
-        layer: usize,
-        strategy: &StageStrategy,
-        stage: &str,
-    ) -> Result<HostTensor> {
-        let m = self.meta().clone();
-        let tokens: usize = x.shape[..2].iter().product();
-        let x2 = HostTensor::new(vec![tokens, m.hidden], x.data.clone());
-        let x2_lit = x2.to_literal()?;
-        let x_buf = self.rt.to_device(&x2_lit)?;
-        let (kind, artifact, devices) = if strategy.expert.ep > 1 {
-            let e = strategy.expert.ep;
-            (format!("expert_ep{e}"), format!("expert_{stage}_ep{e}"), e)
-        } else {
-            let t = strategy.expert.tp;
-            (format!("expert_tp{t}"), format!("expert_{stage}_tp{t}"), t)
-        };
-        let mut sum: Option<HostTensor> = None;
-        for d in 0..devices {
-            self.weight_buffers(&kind, layer, d)?;
-            let w = &self.weight_cache[&(kind.clone(), layer, d)];
-            let mut inputs: Vec<&xla::PjRtBuffer> = vec![&x_buf];
-            inputs.extend(w.iter().map(|(_, b)| b));
-            let outs = self.rt.execute_buffers(&artifact, &inputs)?;
-            let partial = HostTensor::from_literal(&outs[0], vec![tokens, m.hidden])?;
-            match &mut sum {
-                None => sum = Some(partial),
-                Some(acc) => acc.add_assign(&partial),
+    // ---- Module drivers -------------------------------------------------
+
+    fn embed(&mut self, tokens: &[i32], b: usize, s: usize, m: &TinyModelMeta) -> Result<HostTensor> {
+        match self.backend {
+            Backend::Host => kernels::embed_lookup(tokens, self.weights.get("embed")?, b, s),
+            Backend::Pjrt(rt) => {
+                let name = if s == 1 { "embed_decode" } else { "embed_prefill" };
+                require_artifact(rt, name)?;
+                if self.embed_buf.is_none() {
+                    let lit = self.weights.get("embed")?.to_literal()?;
+                    let buf = rt.to_device(&lit)?;
+                    self.stats.materializations += 1;
+                    self.stats.uploaded_floats += m.vocab * m.hidden;
+                    self.embed_buf = Some((lit, buf));
+                }
+                let tok_lit = literal::tokens_literal(tokens, &[b, s])?;
+                let tok_buf = rt.to_device(&tok_lit)?;
+                let embed = &self.embed_buf.as_ref().unwrap().1;
+                let outs = rt.execute_buffers(name, &[&tok_buf, embed])?;
+                HostTensor::from_literal(&outs[0], vec![b, s, m.hidden])
             }
         }
-        let out = sum.expect("devices >= 1");
+    }
+
+    /// Attention prefill across the grid: each device computes its
+    /// `(dp, tp)` shard and stores its KV; TP groups partial-sum, DP
+    /// groups batch-concat.
+    fn attn_prefill_layer(
+        &mut self,
+        x: &HostTensor,
+        l: usize,
+        grid: &DeviceGrid,
+        m: &TinyModelMeta,
+    ) -> Result<HostTensor> {
+        let plan = &grid.plan;
+        let t = plan.attn.tp;
+        let fam = attn_family(&plan.attn);
+        let (b, s) = (m.batch, m.prefill_len);
+        let bg = b / plan.attn.dp;
+        let q_l = m.q_heads / t;
+        let kv_l = (m.kv_heads / t).max(1);
+        let max_len = m.max_len;
+
+        let outs: Vec<HostTensor> = match self.backend {
+            Backend::Host => {
+                let roles = &grid.roles;
+                map_devices(self.mode, &mut self.devices, |st| {
+                    let role = roles[st.device];
+                    let xg = x.slice_outer(role.dp_rank * bg, bg);
+                    let w = st
+                        .shards
+                        .get(&(fam.clone(), l))
+                        .ok_or_else(|| anyhow!("attn shard not resident"))?;
+                    let (out, k, v) = kernels::attention_prefill(&xg, w, q_l, kv_l, m.head_dim)?;
+                    st.kv[l] = Some(LayerCache {
+                        k: pad_cache(&k, max_len),
+                        v: pad_cache(&v, max_len),
+                    });
+                    Ok(out)
+                })?
+            }
+            Backend::Pjrt(rt) => {
+                let name = format!("attn_prefill_tp{t}");
+                require_artifact(rt, &name)?;
+                let mut outs = Vec::with_capacity(self.devices.len());
+                for st in &mut self.devices {
+                    let role = grid.roles[st.device];
+                    // Fixed-shape artifact: run the full-batch program
+                    // on a zero-padded sub-batch, keep the group rows.
+                    let xg = x.slice_outer(role.dp_rank * bg, bg);
+                    let x_pad = pad_outer(&xg, b);
+                    let x_lit = x_pad.to_literal()?;
+                    let x_buf = rt.to_device(&x_lit)?;
+                    let w = st
+                        .bufs
+                        .get(&(fam.clone(), l))
+                        .ok_or_else(|| anyhow!("attn buffers not resident"))?;
+                    let mut inputs: Vec<&xla::PjRtBuffer> = vec![&x_buf];
+                    inputs.extend(w.iter().map(|(_, bf)| bf));
+                    let res = rt.execute_buffers(&name, &inputs)?;
+                    let out = HostTensor::from_literal(&res[0], vec![b, s, m.hidden])?
+                        .slice_outer(0, bg);
+                    let k = HostTensor::from_literal(&res[1], vec![b, s, kv_l, m.head_dim])?;
+                    let v = HostTensor::from_literal(&res[2], vec![b, s, kv_l, m.head_dim])?;
+                    st.kv[l] = Some(LayerCache {
+                        k: pad_cache(&k, max_len),
+                        v: pad_cache(&v, max_len),
+                    });
+                    outs.push(out);
+                }
+                outs
+            }
+        };
+        combine_attn(grid, outs)
+    }
+
+    fn attn_decode_layer(
+        &mut self,
+        x: &HostTensor,
+        l: usize,
+        grid: &DeviceGrid,
+        m: &TinyModelMeta,
+    ) -> Result<HostTensor> {
+        let plan = &grid.plan;
+        let t = plan.attn.tp;
+        let fam = attn_family(&plan.attn);
+        let b = m.batch;
+        let bg = b / plan.attn.dp;
+        let q_l = m.q_heads / t;
+        let kv_l = (m.kv_heads / t).max(1);
+        let pos = self.pos;
+
+        let outs: Vec<HostTensor> = match self.backend {
+            Backend::Host => {
+                let roles = &grid.roles;
+                map_devices(self.mode, &mut self.devices, |st| {
+                    let role = roles[st.device];
+                    let xg = x.slice_outer(role.dp_rank * bg, bg);
+                    let cache = st.kv[l]
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("decode before prefill (no KV shard)"))?;
+                    let w = st
+                        .shards
+                        .get(&(fam.clone(), l))
+                        .ok_or_else(|| anyhow!("attn shard not resident"))?;
+                    kernels::attention_decode(
+                        &xg,
+                        &mut cache.k,
+                        &mut cache.v,
+                        pos,
+                        w,
+                        q_l,
+                        kv_l,
+                        m.head_dim,
+                    )
+                })?
+            }
+            Backend::Pjrt(rt) => {
+                let name = format!("attn_decode_tp{t}");
+                require_artifact(rt, &name)?;
+                let pos_lit = literal::scalar_i32(pos as i32);
+                let pos_buf = rt.to_device(&pos_lit)?;
+                let mut outs = Vec::with_capacity(self.devices.len());
+                for st in &mut self.devices {
+                    let role = grid.roles[st.device];
+                    let xg = x.slice_outer(role.dp_rank * bg, bg);
+                    let x_pad = pad_outer(&xg, b);
+                    let x_lit = x_pad.to_literal()?;
+                    let x_buf = rt.to_device(&x_lit)?;
+                    let cache = st.kv[l]
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("decode before prefill (no KV shard)"))?;
+                    let k_lit = cache.k.to_literal()?;
+                    let v_lit = cache.v.to_literal()?;
+                    let k_buf = rt.to_device(&k_lit)?;
+                    let v_buf = rt.to_device(&v_lit)?;
+                    let w = st
+                        .bufs
+                        .get(&(fam.clone(), l))
+                        .ok_or_else(|| anyhow!("attn buffers not resident"))?;
+                    let mut inputs: Vec<&xla::PjRtBuffer> =
+                        vec![&x_buf, &k_buf, &v_buf, &pos_buf];
+                    inputs.extend(w.iter().map(|(_, bf)| bf));
+                    let res = rt.execute_buffers(&name, &inputs)?;
+                    let out = HostTensor::from_literal(&res[0], vec![b, 1, m.hidden])?
+                        .slice_outer(0, bg);
+                    cache.k =
+                        HostTensor::from_literal(&res[1], vec![b, m.max_len, kv_l, m.head_dim])?;
+                    cache.v =
+                        HostTensor::from_literal(&res[2], vec![b, m.max_len, kv_l, m.head_dim])?;
+                    outs.push(out);
+                }
+                outs
+            }
+        };
+        combine_attn(grid, outs)
+    }
+
+    /// Expert module across the grid: every device computes its
+    /// `(ep, tp)` shard over all tokens; TP ranks partial-sum within
+    /// each block, blocks contribution-sum.
+    fn expert_layer(
+        &mut self,
+        x: &HostTensor,
+        l: usize,
+        grid: &DeviceGrid,
+        m: &TinyModelMeta,
+        stage: &str,
+    ) -> Result<HostTensor> {
+        let plan = &grid.plan;
+        let fam = expert_family(plan);
+        let ep = plan.expert.ep;
+        let tokens: usize = x.shape[..2].iter().product();
+        let x2 = HostTensor::new(vec![tokens, m.hidden], x.data.clone());
+
+        let outs: Vec<HostTensor> = match self.backend {
+            Backend::Host => {
+                let top_k = m.top_k;
+                map_devices(self.mode, &mut self.devices, |st| {
+                    let w = st
+                        .shards
+                        .get(&(fam.clone(), l))
+                        .ok_or_else(|| anyhow!("expert shard not resident"))?;
+                    kernels::expert_module(&x2, w, ep, top_k)
+                })?
+            }
+            Backend::Pjrt(rt) => {
+                // Hybrid EP×TP runs the EP-family artifact (weights
+                // inter-padded at upload); pure layouts run exact.
+                let name = if ep > 1 {
+                    format!("expert_{stage}_ep{ep}")
+                } else {
+                    format!("expert_{stage}_tp{}", plan.expert.tp)
+                };
+                require_artifact(rt, &name)?;
+                let x_lit = x2.to_literal()?;
+                let x_buf = rt.to_device(&x_lit)?;
+                let mut outs = Vec::with_capacity(self.devices.len());
+                for st in &mut self.devices {
+                    let w = st
+                        .bufs
+                        .get(&(fam.clone(), l))
+                        .ok_or_else(|| anyhow!("expert buffers not resident"))?;
+                    let mut inputs: Vec<&xla::PjRtBuffer> = vec![&x_buf];
+                    inputs.extend(w.iter().map(|(_, bf)| bf));
+                    let res = rt.execute_buffers(&name, &inputs)?;
+                    outs.push(HostTensor::from_literal(&res[0], vec![tokens, m.hidden])?);
+                }
+                outs
+            }
+        };
+
+        // Partial-sum within each expert block, then contribution-sum
+        // across blocks.
+        let table: Vec<Option<HostTensor>> = outs.into_iter().map(Some).collect();
+        let mut leaders: Vec<Option<HostTensor>> = (0..grid.devices).map(|_| None).collect();
+        for g in &grid.expert_reduce {
+            leaders[g.members[0]] = Some(collectives::apply(g, &table)?);
+        }
+        let out = collectives::apply(&grid.expert_combine, &leaders)?;
         Ok(HostTensor::new(x.shape.clone(), out.data))
     }
 
     /// Final norm + unembed on the last position.
-    fn head(&mut self, x: &HostTensor) -> Result<HostTensor> {
-        let m = self.meta();
+    fn head(&mut self, x: &HostTensor, m: &TinyModelMeta) -> Result<HostTensor> {
         let (b, h, v) = (m.batch, m.hidden, m.vocab);
         let s = x.shape[1];
-        // Slice last position [B, H].
         let mut last = Vec::with_capacity(b * h);
         for bi in 0..b {
             let base = (bi * s + (s - 1)) * h;
             last.extend_from_slice(&x.data[base..base + h]);
         }
         let last = HostTensor::new(vec![b, h], last);
-        if self.head_bufs.is_none() {
-            let ln_lit = self.weights.get("ln_f")?.to_literal()?;
-            let ln = self.rt.to_device(&ln_lit)?;
-            let un_lit = self.weights.get("unembed")?.to_literal()?;
-            let un = self.rt.to_device(&un_lit)?;
-            self.head_bufs = Some([(ln_lit, ln), (un_lit, un)]);
+        match self.backend {
+            Backend::Host => Ok(kernels::head(
+                &last,
+                self.weights.get("ln_f")?,
+                self.weights.get("unembed")?,
+            )),
+            Backend::Pjrt(rt) => {
+                require_artifact(rt, "head")?;
+                if self.head_bufs.is_none() {
+                    let ln_lit = self.weights.get("ln_f")?.to_literal()?;
+                    let ln = rt.to_device(&ln_lit)?;
+                    let un_lit = self.weights.get("unembed")?.to_literal()?;
+                    let un = rt.to_device(&un_lit)?;
+                    self.stats.materializations += 1;
+                    self.stats.uploaded_floats += h + h * v;
+                    self.head_bufs = Some([(ln_lit, ln), (un_lit, un)]);
+                }
+                let last_lit = last.to_literal()?;
+                let last_buf = rt.to_device(&last_lit)?;
+                let [(_, ln), (_, un)] = self.head_bufs.as_ref().unwrap();
+                let outs = rt.execute_buffers("head", &[&last_buf, ln, un])?;
+                HostTensor::from_literal(&outs[0], vec![b, v])
+            }
         }
-        let last_lit = last.to_literal()?;
-        let last_buf = self.rt.to_device(&last_lit)?;
-        let [(_, ln), (_, un)] = self.head_bufs.as_ref().unwrap();
-        let outs = self.rt.execute_buffers("head", &[&last_buf, ln, un])?;
-        HostTensor::from_literal(&outs[0], vec![b, v])
     }
+}
 
-    fn validate(&self, strategy: &StageStrategy) -> Result<()> {
-        let ok_attn = matches!(strategy.attn_tp, 1 | 2 | 4);
-        let e = &strategy.expert;
-        let ok_expert = (e.ep == 1 && matches!(e.tp, 1 | 2 | 4)) || (e.tp == 1 && matches!(e.ep, 2 | 4));
-        if !ok_attn || !ok_expert {
-            anyhow::bail!(
-                "unsupported demo strategy attn_tp={} expert={} (artifact set covers attn tp 1/2/4, expert tp 1/2/4 or ep 2/4)",
-                strategy.attn_tp,
-                e.label()
-            );
-        }
-        Ok(())
+/// Shard-family key for an attention layout (shards depend on the TP
+/// rank only; DP replicas hold copies of the same shard set).
+fn attn_family(a: &AttnStrategy) -> String {
+    format!("attn_tp{}", a.tp)
+}
+
+/// Shard-family key for an expert layout.
+fn expert_family(p: &ShardPlan) -> String {
+    format!("expert_ep{}tp{}", p.expert.ep, p.expert.tp)
+}
+
+fn require_artifact(rt: &PjrtRuntime, name: &str) -> Result<()> {
+    if !rt.has(name) {
+        anyhow::bail!(
+            "artifact '{name}' not in the loaded set — rebuild artifacts/ (make artifacts) \
+             or pick a plan the set covers"
+        );
     }
+    Ok(())
+}
+
+/// Run `f` over every device state — scoped threads in parallel mode,
+/// a plain loop in sequential mode. Outputs are returned in device
+/// order either way, so downstream combines are order-identical.
+fn map_devices<T, F>(mode: EngineMode, states: &mut [DeviceState], f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(&mut DeviceState) -> Result<T> + Sync,
+{
+    match mode {
+        EngineMode::Sequential => states.iter_mut().map(|st| f(st)).collect(),
+        EngineMode::Parallel => std::thread::scope(|scope| {
+            let fr = &f;
+            let handles: Vec<_> = states
+                .iter_mut()
+                .map(|st| scope.spawn(move || fr(st)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("device thread panicked")))
+                })
+                .collect()
+        }),
+    }
+}
+
+/// Reduce TP partials per DP group, then concat groups over the batch.
+fn combine_attn(grid: &DeviceGrid, outs: Vec<HostTensor>) -> Result<HostTensor> {
+    let table: Vec<Option<HostTensor>> = outs.into_iter().map(Some).collect();
+    let mut leaders: Vec<Option<HostTensor>> = (0..grid.devices).map(|_| None).collect();
+    for g in &grid.attn_reduce {
+        leaders[g.members[0]] = Some(collectives::apply(g, &table)?);
+    }
+    collectives::apply(&grid.batch_split, &leaders)
 }
 
 /// Pad a [B, S, KVH, D] prefill cache to [B, M, KVH, D] with zeros.
@@ -357,9 +731,58 @@ fn pad_cache(c: &HostTensor, max_len: usize) -> HostTensor {
     out
 }
 
+/// Zero-pad the leading axis to `rows` (fixed-shape artifact bridging).
+fn pad_outer(t: &HostTensor, rows: usize) -> HostTensor {
+    let inner: usize = t.shape[1..].iter().product();
+    let mut shape = t.shape.clone();
+    shape[0] = rows;
+    let mut out = HostTensor::zeros(shape);
+    out.data[..t.data.len()].copy_from_slice(&t.data);
+    out
+}
+
+/// Zero-pad a hybrid EP×TP expert shard's intermediate slices back to
+/// the EP artifact's full-width shapes. Exact: the padded gate/up
+/// columns are zero, so their activations contribute `act·0 = 0` and
+/// the padded down rows are zero.
+fn pad_expert_for_artifact(
+    shard: &[HostTensor],
+    inter: usize,
+    tp: usize,
+    tp_rank: usize,
+) -> Vec<HostTensor> {
+    if tp == 1 {
+        return shard.to_vec();
+    }
+    // [ln, router, sel, wg, wu, wd] with wg/wu [e_l, H, I/tp], wd
+    // [e_l, I/tp, H].
+    let mut out = shard[..3].to_vec();
+    let wg = &shard[3];
+    let (e_l, h, i_l) = (wg.shape[0], wg.shape[1], wg.shape[2]);
+    let off = tp_rank * i_l;
+    for t in [&shard[3], &shard[4]] {
+        let mut p = HostTensor::zeros(vec![e_l, h, inter]);
+        for r in 0..e_l * h {
+            p.data[r * inter + off..r * inter + off + i_l]
+                .copy_from_slice(&t.data[r * i_l..(r + 1) * i_l]);
+        }
+        out.push(p);
+    }
+    let wd = &shard[5];
+    let mut p = HostTensor::zeros(vec![e_l, inter, h]);
+    for e in 0..e_l {
+        let dst = (e * inter + off) * h;
+        let src = e * i_l * h;
+        p.data[dst..dst + i_l * h].copy_from_slice(&wd.data[src..src + i_l * h]);
+    }
+    out.push(p);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::strategy::ExpertStrategy;
 
     #[test]
     fn pad_cache_places_rows() {
@@ -370,10 +793,37 @@ mod tests {
     }
 
     #[test]
-    fn stage_strategy_labels() {
-        let s = StageStrategy::tp(4);
+    fn plan_labels() {
+        let s = ShardPlan::tp(4);
         assert_eq!(s.expert_label(), "TP4");
-        let e = StageStrategy { attn_tp: 2, expert: ExpertStrategy::new(1, 4) };
+        let e = ShardPlan::new(AttnStrategy::new(2, 1), ExpertStrategy::new(1, 4));
         assert_eq!(e.expert_label(), "EP4");
+    }
+
+    #[test]
+    fn families_distinguish_layouts() {
+        assert_eq!(attn_family(&AttnStrategy::new(2, 2)), "attn_tp2");
+        let hy = ShardPlan::new(AttnStrategy::new(4, 1), ExpertStrategy::new(2, 2));
+        assert_eq!(expert_family(&hy), "expert_ep2tp2");
+        assert_eq!(expert_family(&ShardPlan::tp(4)), "expert_ep1tp4");
+    }
+
+    #[test]
+    fn pad_expert_round_trips_slice() {
+        // [e_l=1, h=2, i_l=2] slice of inter=4, tp_rank 1 → columns 2..4.
+        let ln = HostTensor::new(vec![2], vec![1.0; 2]);
+        let router = HostTensor::new(vec![2, 2], vec![0.0; 4]);
+        let sel = HostTensor::new(vec![1, 2], vec![1.0, 0.0]);
+        let wg = HostTensor::new(vec![1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let wd = HostTensor::new(vec![1, 2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let padded =
+            pad_expert_for_artifact(&[ln, router, sel, wg.clone(), wg, wd], 4, 2, 1);
+        assert_eq!(padded[3].shape, vec![1, 2, 4]);
+        assert_eq!(padded[3].data, vec![0.0, 0.0, 1.0, 2.0, 0.0, 0.0, 3.0, 4.0]);
+        assert_eq!(padded[5].shape, vec![1, 4, 2]);
+        assert_eq!(
+            padded[5].data,
+            vec![0.0, 0.0, 0.0, 0.0, 5.0, 6.0, 7.0, 8.0]
+        );
     }
 }

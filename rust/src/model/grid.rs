@@ -1,0 +1,277 @@
+//! `ShardPlan` → `DeviceGrid` lowering: the logical description of a
+//! hybrid parallel layout and its concrete per-device realization.
+//!
+//! A [`ShardPlan`] is the logical `(AttnStrategy, ExpertStrategy)` pair
+//! the planner emits for one stage. [`DeviceGrid::lower`] turns it into
+//! per-device roles — `(dp_rank, tp_rank)` for the attention module and
+//! `(ep_rank, etp_rank)` for the expert module — plus the collective
+//! groups each role participates in:
+//!
+//! - **partial-sum** groups (TP): members hold column/row shards of the
+//!   same weights; their module outputs *sum* to the unsharded output;
+//! - **contribution-sum** group (EP): each expert block contributes the
+//!   routed output of the experts it owns; block outputs *sum*;
+//! - **batch-split** group (DP): each attention replica group owns a
+//!   contiguous slice of the batch; group outputs *concatenate*.
+//!
+//! The lowering is pure math over device indices — no runtime, no
+//! tensors — so every grid the [`crate::strategy::SearchSpace`] emits
+//! can be checked for well-formedness in plain unit tests (roles
+//! partition devices; groups are disjoint and complete).
+
+use crate::runtime::manifest::TinyModelMeta;
+use crate::strategy::{AttnStrategy, ExpertStrategy};
+use crate::Result;
+use std::fmt;
+
+/// The logical per-stage execution layout: one attention strategy and
+/// one expert strategy over the same device set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShardPlan {
+    pub attn: AttnStrategy,
+    pub expert: ExpertStrategy,
+}
+
+impl ShardPlan {
+    pub fn new(attn: AttnStrategy, expert: ExpertStrategy) -> ShardPlan {
+        ShardPlan { attn, expert }
+    }
+
+    /// Static TP-n: attention TP, experts TP, n devices.
+    pub fn tp(n: usize) -> ShardPlan {
+        ShardPlan {
+            attn: AttnStrategy::new(n, 1),
+            expert: ExpertStrategy::new(n, 1),
+        }
+    }
+
+    /// Devices the plan spans (attention side; [`DeviceGrid::lower`]
+    /// errors when the expert side disagrees).
+    pub fn devices(&self) -> usize {
+        self.attn.devices()
+    }
+
+    pub fn expert_label(&self) -> String {
+        self.expert.label()
+    }
+
+    pub fn label(&self) -> String {
+        format!("attn={} experts={}", self.attn.label(), self.expert.label())
+    }
+}
+
+impl fmt::Display for ShardPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// One device's position in both module grids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeviceRole {
+    pub device: usize,
+    /// Attention data-parallel group (owns batch slice `dp_rank`).
+    pub dp_rank: usize,
+    /// Attention tensor rank within the DP group (head shard).
+    pub tp_rank: usize,
+    /// Expert block (owns experts `[ep_rank·E/ep, (ep_rank+1)·E/ep)`).
+    pub ep_rank: usize,
+    /// Expert tensor rank within the block (intermediate-dim shard).
+    pub etp_rank: usize,
+}
+
+/// What a collective group does with its members' outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupKind {
+    /// TP combine: member outputs sum element-wise.
+    PartialSum,
+    /// EP combine: owned-expert contributions sum element-wise.
+    ContributionSum,
+    /// DP combine: member outputs concatenate along the batch axis.
+    BatchSplit,
+}
+
+/// An ordered collective group (member order fixes the combine order,
+/// which keeps parallel and sequential execution bit-identical).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CollectiveGroup {
+    pub kind: GroupKind,
+    pub members: Vec<usize>,
+}
+
+/// A lowered plan: per-device roles plus the collective groups.
+#[derive(Debug, Clone)]
+pub struct DeviceGrid {
+    pub plan: ShardPlan,
+    pub devices: usize,
+    pub roles: Vec<DeviceRole>,
+    /// One partial-sum group per attention DP rank (members ordered by
+    /// tp_rank). Indexed by `dp_rank`.
+    pub attn_reduce: Vec<CollectiveGroup>,
+    /// Batch-split group: the leader (tp_rank 0) of each DP group, in
+    /// dp_rank order. Concatenating their reduced outputs restores the
+    /// full batch.
+    pub batch_split: CollectiveGroup,
+    /// One partial-sum group per expert block (members ordered by
+    /// etp_rank). Indexed by `ep_rank`.
+    pub expert_reduce: Vec<CollectiveGroup>,
+    /// Contribution-sum group: the leader (etp_rank 0) of each expert
+    /// block, in ep_rank order.
+    pub expert_combine: CollectiveGroup,
+}
+
+impl DeviceGrid {
+    /// Lower a logical plan onto its device set. Fails when the two
+    /// module strategies disagree on the device count (the paper's
+    /// search space always uses all devices for both modules).
+    pub fn lower(plan: &ShardPlan) -> Result<DeviceGrid> {
+        let n = plan.attn.devices();
+        if plan.expert.devices() != n {
+            anyhow::bail!(
+                "plan spans {} attention devices but {} expert devices ({})",
+                n,
+                plan.expert.devices(),
+                plan.label()
+            );
+        }
+        if n == 0 {
+            anyhow::bail!("plan spans zero devices");
+        }
+        let at = plan.attn.tp;
+        let et = plan.expert.tp;
+        let roles: Vec<DeviceRole> = (0..n)
+            .map(|d| DeviceRole {
+                device: d,
+                dp_rank: d / at,
+                tp_rank: d % at,
+                ep_rank: d / et,
+                etp_rank: d % et,
+            })
+            .collect();
+        let attn_reduce: Vec<CollectiveGroup> = (0..plan.attn.dp)
+            .map(|g| CollectiveGroup {
+                kind: GroupKind::PartialSum,
+                members: (g * at..(g + 1) * at).collect(),
+            })
+            .collect();
+        let batch_split = CollectiveGroup {
+            kind: GroupKind::BatchSplit,
+            members: attn_reduce.iter().map(|g| g.members[0]).collect(),
+        };
+        let expert_reduce: Vec<CollectiveGroup> = (0..plan.expert.ep)
+            .map(|g| CollectiveGroup {
+                kind: GroupKind::PartialSum,
+                members: (g * et..(g + 1) * et).collect(),
+            })
+            .collect();
+        let expert_combine = CollectiveGroup {
+            kind: GroupKind::ContributionSum,
+            members: expert_reduce.iter().map(|g| g.members[0]).collect(),
+        };
+        Ok(DeviceGrid {
+            plan: *plan,
+            devices: n,
+            roles,
+            attn_reduce,
+            batch_split,
+            expert_reduce,
+            expert_combine,
+        })
+    }
+
+    /// Divisibility checks against raw model dimensions: the grid is
+    /// executable iff every shard is well-formed.
+    pub fn check_dims(
+        &self,
+        q_heads: usize,
+        kv_heads: usize,
+        num_experts: usize,
+        inter: usize,
+        batch: usize,
+    ) -> Result<()> {
+        let a = &self.plan.attn;
+        let e = &self.plan.expert;
+        if q_heads % a.tp != 0 {
+            anyhow::bail!("attn TP{} does not divide {} query heads", a.tp, q_heads);
+        }
+        if a.tp > kv_heads && a.tp % kv_heads != 0 {
+            anyhow::bail!(
+                "attn TP{} cannot replicate {} kv heads evenly (GQA)",
+                a.tp,
+                kv_heads
+            );
+        }
+        if batch % a.dp != 0 {
+            anyhow::bail!("attn DP{} does not divide batch {}", a.dp, batch);
+        }
+        if num_experts % e.ep != 0 {
+            anyhow::bail!("EP{} does not divide {} experts", e.ep, num_experts);
+        }
+        if inter % e.tp != 0 {
+            anyhow::bail!("expert TP{} does not divide intermediate size {}", e.tp, inter);
+        }
+        Ok(())
+    }
+
+    /// [`Self::check_dims`] against the serving model's metadata.
+    pub fn check_meta(&self, m: &TinyModelMeta) -> Result<()> {
+        self.check_dims(m.q_heads, m.kv_heads, m.num_experts, m.inter, m.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tp_plan_lowers_to_single_groups() {
+        let g = DeviceGrid::lower(&ShardPlan::tp(4)).unwrap();
+        assert_eq!(g.devices, 4);
+        assert_eq!(g.attn_reduce.len(), 1);
+        assert_eq!(g.attn_reduce[0].members, vec![0, 1, 2, 3]);
+        assert_eq!(g.batch_split.members, vec![0]);
+        assert_eq!(g.expert_reduce.len(), 1);
+        assert_eq!(g.expert_combine.members, vec![0]);
+        for (d, r) in g.roles.iter().enumerate() {
+            assert_eq!(r.device, d);
+            assert_eq!(r.dp_rank, 0);
+            assert_eq!(r.tp_rank, d);
+        }
+    }
+
+    #[test]
+    fn hybrid_grid_roles_and_groups() {
+        // attn DP2xTP2, experts EP2xTP2 on 4 devices.
+        let plan = ShardPlan::new(AttnStrategy::new(2, 2), ExpertStrategy::new(2, 2));
+        let g = DeviceGrid::lower(&plan).unwrap();
+        assert_eq!(g.attn_reduce.len(), 2);
+        assert_eq!(g.attn_reduce[0].members, vec![0, 1]);
+        assert_eq!(g.attn_reduce[1].members, vec![2, 3]);
+        assert_eq!(g.batch_split.members, vec![0, 2]);
+        assert_eq!(g.expert_reduce[1].members, vec![2, 3]);
+        assert_eq!(g.expert_combine.members, vec![0, 2]);
+        assert_eq!(g.roles[3].dp_rank, 1);
+        assert_eq!(g.roles[3].tp_rank, 1);
+        assert_eq!(g.roles[3].ep_rank, 1);
+        assert_eq!(g.roles[3].etp_rank, 1);
+    }
+
+    #[test]
+    fn device_count_mismatch_rejected() {
+        let plan = ShardPlan::new(AttnStrategy::new(2, 1), ExpertStrategy::new(2, 2));
+        assert!(DeviceGrid::lower(&plan).is_err());
+    }
+
+    #[test]
+    fn dims_checked() {
+        let plan = ShardPlan::new(AttnStrategy::new(2, 2), ExpertStrategy::new(2, 2));
+        let g = DeviceGrid::lower(&plan).unwrap();
+        assert!(g.check_dims(8, 4, 8, 512, 4).is_ok());
+        // Batch 3 not divisible by DP2.
+        assert!(g.check_dims(8, 4, 8, 512, 3).is_err());
+        // 3 experts not divisible by EP2.
+        assert!(g.check_dims(8, 4, 3, 512, 4).is_err());
+        // Inter 511 not divisible by expert TP2.
+        assert!(g.check_dims(8, 4, 8, 511, 4).is_err());
+    }
+}

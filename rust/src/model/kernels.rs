@@ -1,0 +1,436 @@
+//! Host-math kernels for the tiny-MoE modules, mirroring the JAX
+//! reference in `python/compile/kernels/ref.py` (RMS norm, causal GQA
+//! attention, Mixtral-style top-k gating, SwiGLU expert FFN).
+//!
+//! These are the per-device module bodies of the grid engine's **host
+//! backend**: each device role runs one of these on its weight shard,
+//! and [`crate::model::collectives`] combines the outputs. Because they
+//! are plain `HostTensor` math, the whole execution stack — sharding,
+//! per-device compute, collectives, KV caches, plan transitions — is
+//! testable without PJRT artifacts.
+//!
+//! Shard tensor layouts (the `WeightStore::shard` contract):
+//! - attention: `[ln, wq, wk, wv, wo]`;
+//! - experts, pure TP (`ep == 1`): `[ln, router, wg, wu, wd]`;
+//! - experts, EP or EP×TP (`ep > 1`): `[ln, router, sel, wg, wu, wd]`
+//!   where `sel: [E_local, E]` selects the block's experts from the
+//!   full gate matrix.
+
+use crate::runtime::literal::HostTensor;
+use crate::Result;
+
+const RMS_EPS: f32 = 1e-5;
+
+/// RMS norm over the last axis: `x · rsqrt(mean(x²) + ε) · scale`.
+pub fn rms_norm(x: &HostTensor, scale: &HostTensor) -> HostTensor {
+    let h = *x.shape.last().expect("rms_norm on scalar");
+    assert_eq!(scale.data.len(), h, "rms_norm scale length");
+    let mut out = vec![0f32; x.data.len()];
+    for (row_o, row_x) in out.chunks_mut(h).zip(x.data.chunks(h)) {
+        let mut ss = 0f32;
+        for &v in row_x {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / h as f32 + RMS_EPS).sqrt();
+        for i in 0..h {
+            row_o[i] = row_x[i] * inv * scale.data[i];
+        }
+    }
+    HostTensor::new(x.shape.clone(), out)
+}
+
+/// Row-major matmul: `a [rows, k] @ b [k, cols] → [rows, cols]`.
+pub fn matmul(a: &[f32], rows: usize, k: usize, b: &[f32], cols: usize) -> Vec<f32> {
+    assert_eq!(a.len(), rows * k, "matmul lhs size");
+    assert_eq!(b.len(), k * cols, "matmul rhs size");
+    let mut out = vec![0f32; rows * cols];
+    for r in 0..rows {
+        let ar = &a[r * k..(r + 1) * k];
+        let or = &mut out[r * cols..(r + 1) * cols];
+        for (i, &av) in ar.iter().enumerate() {
+            let br = &b[i * cols..(i + 1) * cols];
+            for c in 0..cols {
+                or[c] += av * br[c];
+            }
+        }
+    }
+    out
+}
+
+fn silu(x: f32) -> f32 {
+    x * (1.0 / (1.0 + (-x).exp()))
+}
+
+/// Token embedding lookup: `tokens [B·S] → [B, S, H]`.
+pub fn embed_lookup(tokens: &[i32], table: &HostTensor, b: usize, s: usize) -> Result<HostTensor> {
+    let (v, h) = (table.shape[0], table.shape[1]);
+    if tokens.len() != b * s {
+        anyhow::bail!("embed expects {}x{} tokens, got {}", b, s, tokens.len());
+    }
+    let mut out = Vec::with_capacity(b * s * h);
+    for &t in tokens {
+        let t = t as usize;
+        if t >= v {
+            anyhow::bail!("token {t} out of vocab {v}");
+        }
+        out.extend_from_slice(&table.data[t * h..(t + 1) * h]);
+    }
+    Ok(HostTensor::new(vec![b, s, h], out))
+}
+
+/// Final norm + unembed on the last-position residual:
+/// `x_last [B, H] → logits [B, V]`.
+pub fn head(x_last: &HostTensor, ln_f: &HostTensor, unembed: &HostTensor) -> HostTensor {
+    let (b, h) = (x_last.shape[0], x_last.shape[1]);
+    let v = unembed.shape[1];
+    let xn = rms_norm(x_last, ln_f);
+    HostTensor::new(vec![b, v], matmul(&xn.data, b, h, &unembed.data, v))
+}
+
+/// Mixtral top-k gate: dense routing weights `[T, E]`, softmax over the
+/// selected experts' logits, zero elsewhere, renormalized over the set.
+pub fn topk_gate(xn: &HostTensor, router: &HostTensor, top_k: usize) -> HostTensor {
+    let (t, h) = (xn.shape[0], xn.shape[1]);
+    let e = router.shape[1];
+    assert!(top_k >= 1 && top_k <= e, "top_k {top_k} out of range for {e} experts");
+    let logits = matmul(&xn.data, t, h, &router.data, e);
+    let mut gates = vec![0f32; t * e];
+    for r in 0..t {
+        let lr = &logits[r * e..(r + 1) * e];
+        let mut sorted = lr.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).expect("router logits are finite"));
+        let thresh = sorted[top_k - 1];
+        // Softmax over the masked set (ties at the threshold are all
+        // included, matching ref.topk_gate).
+        let mut mx = f32::NEG_INFINITY;
+        for &v in lr {
+            if v >= thresh && v > mx {
+                mx = v;
+            }
+        }
+        let gr = &mut gates[r * e..(r + 1) * e];
+        let mut sum = 0f32;
+        for (i, &v) in lr.iter().enumerate() {
+            if v >= thresh {
+                let w = (v - mx).exp();
+                gr[i] = w;
+                sum += w;
+            }
+        }
+        let denom = sum.max(1e-9);
+        for g in gr.iter_mut() {
+            *g /= denom;
+        }
+    }
+    HostTensor::new(vec![t, e], gates)
+}
+
+/// SwiGLU routed FFN over a block of experts: for each local expert
+/// `e`, `y_e = (silu(xn·Wg_e) ⊙ (xn·Wu_e))·Wd_e`, accumulated as
+/// `Σ_e gates_local[:, e] · y_e`.
+fn expert_ffn(
+    xn: &HostTensor,
+    gates_local: &[f32],
+    wg: &HostTensor,
+    wu: &HostTensor,
+    wd: &HostTensor,
+) -> HostTensor {
+    let (t, h) = (xn.shape[0], xn.shape[1]);
+    let e_l = wg.shape[0];
+    let i_l = wg.shape[2];
+    assert_eq!(gates_local.len(), t * e_l, "gate table size");
+    let mut out = vec![0f32; t * h];
+    for e in 0..e_l {
+        let wg_e = &wg.data[e * h * i_l..(e + 1) * h * i_l];
+        let wu_e = &wu.data[e * h * i_l..(e + 1) * h * i_l];
+        let wd_e = &wd.data[e * i_l * h..(e + 1) * i_l * h];
+        let g = matmul(&xn.data, t, h, wg_e, i_l);
+        let u = matmul(&xn.data, t, h, wu_e, i_l);
+        let mut act = vec![0f32; t * i_l];
+        for j in 0..t * i_l {
+            act[j] = silu(g[j]) * u[j];
+        }
+        let y = matmul(&act, t, i_l, wd_e, h);
+        for r in 0..t {
+            let gate = gates_local[r * e_l + e];
+            if gate != 0.0 {
+                for c in 0..h {
+                    out[r * h + c] += gate * y[r * h + c];
+                }
+            }
+        }
+    }
+    HostTensor::new(vec![t, h], out)
+}
+
+/// One device's expert-module contribution for its `(ep, tp)` shard:
+/// `x [T, H]` combined residual → partial output `[T, H]`. Partial-sum
+/// over the block's TP ranks, then contribution-sum over blocks,
+/// reconstructs the full routed output.
+pub fn expert_module(x: &HostTensor, shard: &[HostTensor], ep: usize, top_k: usize) -> Result<HostTensor> {
+    let expected = if ep > 1 { 6 } else { 5 };
+    if shard.len() != expected {
+        anyhow::bail!("expert shard has {} tensors, expected {expected}", shard.len());
+    }
+    let xn = rms_norm(x, &shard[0]);
+    let gates = topk_gate(&xn, &shard[1], top_k);
+    if ep == 1 {
+        Ok(expert_ffn(&xn, &gates.data, &shard[2], &shard[3], &shard[4]))
+    } else {
+        // gates_local = gates @ selᵀ: pick the block's expert columns.
+        let sel = &shard[2];
+        let (e_l, e) = (sel.shape[0], sel.shape[1]);
+        let t = xn.shape[0];
+        let mut gl = vec![0f32; t * e_l];
+        for r in 0..t {
+            for j in 0..e_l {
+                let mut s = 0f32;
+                for c in 0..e {
+                    s += gates.data[r * e + c] * sel.data[j * e + c];
+                }
+                gl[r * e_l + j] = s;
+            }
+        }
+        Ok(expert_ffn(&xn, &gl, &shard[3], &shard[4], &shard[5]))
+    }
+}
+
+/// Causal GQA prefill attention for one head shard.
+///
+/// `x [B, S, H]` residual → `(partial_out [B, S, H], k [B, S, KVH_l, D],
+/// v [B, S, KVH_l, D])`; partial outputs sum over the TP group.
+pub fn attention_prefill(
+    x: &HostTensor,
+    shard: &[HostTensor],
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<(HostTensor, HostTensor, HostTensor)> {
+    let (b, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
+    let xn = rms_norm(x, &shard[0]);
+    let q = matmul(&xn.data, b * s, h, &shard[1].data, q_heads * hd);
+    let k = matmul(&xn.data, b * s, h, &shard[2].data, kv_heads * hd);
+    let v = matmul(&xn.data, b * s, h, &shard[3].data, kv_heads * hd);
+    let rep = q_heads / kv_heads;
+    if rep * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+    }
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0f32; b * s * q_heads * hd];
+    let mut scores = vec![0f32; s];
+    for bi in 0..b {
+        for head in 0..q_heads {
+            let kvh = head / rep;
+            for qi in 0..s {
+                let qoff = ((bi * s + qi) * q_heads + head) * hd;
+                let mut mx = f32::NEG_INFINITY;
+                for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
+                    let koff = ((bi * s + ki) * kv_heads + kvh) * hd;
+                    let mut dot = 0f32;
+                    for d in 0..hd {
+                        dot += q[qoff + d] * k[koff + d];
+                    }
+                    *sc = dot * scale;
+                    if *sc > mx {
+                        mx = *sc;
+                    }
+                }
+                let mut denom = 0f32;
+                for sc in scores.iter_mut().take(qi + 1) {
+                    *sc = (*sc - mx).exp();
+                    denom += *sc;
+                }
+                let coff = ((bi * s + qi) * q_heads + head) * hd;
+                for ki in 0..=qi {
+                    let p = scores[ki] / denom;
+                    let voff = ((bi * s + ki) * kv_heads + kvh) * hd;
+                    for d in 0..hd {
+                        ctx[coff + d] += p * v[voff + d];
+                    }
+                }
+            }
+        }
+    }
+    let out = matmul(&ctx, b * s, q_heads * hd, &shard[4].data, h);
+    Ok((
+        HostTensor::new(vec![b, s, h], out),
+        HostTensor::new(vec![b, s, kv_heads, hd], k),
+        HostTensor::new(vec![b, s, kv_heads, hd], v),
+    ))
+}
+
+/// One decode step against a padded KV cache (`[B, M, KVH_l, D]`); the
+/// new token writes at index `pos` and positions `0..=pos` are attended.
+/// Updates the caches in place (device-resident state) and returns the
+/// partial output `[B, 1, H]`.
+pub fn attention_decode(
+    x: &HostTensor,
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    pos: usize,
+    shard: &[HostTensor],
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<HostTensor> {
+    let (b, h) = (x.shape[0], x.shape[2]);
+    let m = k_cache.shape[1];
+    if pos >= m {
+        anyhow::bail!("decode position {pos} outside KV budget {m}");
+    }
+    let xn = rms_norm(x, &shard[0]);
+    let q = matmul(&xn.data, b, h, &shard[1].data, q_heads * hd);
+    let k_new = matmul(&xn.data, b, h, &shard[2].data, kv_heads * hd);
+    let v_new = matmul(&xn.data, b, h, &shard[3].data, kv_heads * hd);
+    let row = kv_heads * hd;
+    for bi in 0..b {
+        let dst = (bi * m + pos) * row;
+        k_cache.data[dst..dst + row].copy_from_slice(&k_new[bi * row..(bi + 1) * row]);
+        v_cache.data[dst..dst + row].copy_from_slice(&v_new[bi * row..(bi + 1) * row]);
+    }
+    let rep = q_heads / kv_heads;
+    if rep * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+    }
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0f32; b * q_heads * hd];
+    let mut scores = vec![0f32; pos + 1];
+    for bi in 0..b {
+        for head in 0..q_heads {
+            let kvh = head / rep;
+            let qoff = (bi * q_heads + head) * hd;
+            let mut mx = f32::NEG_INFINITY;
+            for (ki, sc) in scores.iter_mut().enumerate() {
+                let koff = (bi * m + ki) * row + kvh * hd;
+                let mut dot = 0f32;
+                for d in 0..hd {
+                    dot += q[qoff + d] * k_cache.data[koff + d];
+                }
+                *sc = dot * scale;
+                if *sc > mx {
+                    mx = *sc;
+                }
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            for (ki, sc) in scores.iter().enumerate() {
+                let p = sc / denom;
+                let voff = (bi * m + ki) * row + kvh * hd;
+                for d in 0..hd {
+                    ctx[qoff + d] += p * v_cache.data[voff + d];
+                }
+            }
+        }
+    }
+    let out = matmul(&ctx, b, q_heads * hd, &shard[4].data, h);
+    Ok(HostTensor::new(vec![b, 1, h], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rms_norm_unit_scale_normalizes() {
+        let x = HostTensor::new(vec![1, 4], vec![2.0, 2.0, 2.0, 2.0]);
+        let scale = HostTensor::new(vec![4], vec![1.0; 4]);
+        let n = rms_norm(&x, &scale);
+        // mean(x²) = 4 → rsqrt ≈ 0.5.
+        for v in &n.data {
+            assert!((v - 1.0).abs() < 1e-3, "{v}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_hand_product() {
+        // [2,3] @ [3,2]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let c = matmul(&a, 2, 3, &b, 2);
+        assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn topk_gate_selects_k_and_normalizes() {
+        // Identity-ish router so logits = xn (h == e == 3).
+        let xn = HostTensor::new(vec![1, 3], vec![1.0, 3.0, 2.0]);
+        let mut router = HostTensor::zeros(vec![3, 3]);
+        for i in 0..3 {
+            router.data[i * 3 + i] = 1.0;
+        }
+        let g = topk_gate(&xn, &router, 2);
+        assert_eq!(g.data[0], 0.0, "lowest logit must be masked");
+        let sum: f32 = g.data.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(g.data[1] > g.data[2]);
+    }
+
+    #[test]
+    fn expert_tp_slices_sum_to_full() {
+        // [T=2, H=2], one expert, I=4: full output equals the sum of
+        // the two I/2 slices (the TP partial-sum identity).
+        let x = HostTensor::new(vec![2, 2], vec![0.3, -0.2, 0.7, 0.1]);
+        let ln = HostTensor::new(vec![2], vec![1.0, 1.0]);
+        let router = HostTensor::new(vec![2, 1], vec![1.0, 1.0]);
+        let wg = HostTensor::new(vec![1, 2, 4], (0..8).map(|i| 0.1 * i as f32).collect());
+        let wu = HostTensor::new(vec![1, 2, 4], (0..8).map(|i| 0.05 * i as f32).collect());
+        let wd = HostTensor::new(vec![1, 4, 2], (0..8).map(|i| 0.02 * i as f32).collect());
+        let full = expert_module(&x, &[ln.clone(), router.clone(), wg.clone(), wu.clone(), wd.clone()], 1, 1)
+            .unwrap();
+        let slice = |t: &HostTensor, i0: usize| -> HostTensor {
+            // last-axis slice of [1,2,4] → [1,2,2]
+            let mut d = Vec::new();
+            for r in 0..2 {
+                d.extend_from_slice(&t.data[r * 4 + i0..r * 4 + i0 + 2]);
+            }
+            HostTensor::new(vec![1, 2, 2], d)
+        };
+        let slice_rows = |t: &HostTensor, i0: usize| -> HostTensor {
+            HostTensor::new(vec![1, 2, 2], t.data[i0 * 2..(i0 + 2) * 2].to_vec())
+        };
+        let mut sum: Option<HostTensor> = None;
+        for d0 in [0usize, 2] {
+            let part = expert_module(
+                &x,
+                &[ln.clone(), router.clone(), slice(&wg, d0), slice(&wu, d0), slice_rows(&wd, d0)],
+                1,
+                1,
+            )
+            .unwrap();
+            match &mut sum {
+                None => sum = Some(part),
+                Some(acc) => acc.add_assign(&part),
+            }
+        }
+        let got = sum.unwrap();
+        for (a, b) in full.data.iter().zip(&got.data) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_attends_only_written_positions() {
+        // Single head, hd 1: with k ≡ 0 the scores are uniform over
+        // 0..=pos, so the context is the mean of the written v's.
+        let ln = HostTensor::new(vec![2], vec![1.0, 1.0]);
+        let wq = HostTensor::new(vec![2, 1], vec![0.0, 0.0]);
+        let wk = HostTensor::new(vec![2, 1], vec![0.0, 0.0]);
+        let wv = HostTensor::new(vec![2, 1], vec![1.0, 0.0]);
+        let wo = HostTensor::new(vec![1, 2], vec![1.0, 0.0]);
+        let shard = [ln, wq, wk, wv, wo];
+        let mut kc = HostTensor::zeros(vec![1, 4, 1, 1]);
+        let mut vc = HostTensor::zeros(vec![1, 4, 1, 1]);
+        vc.data[0] = 5.0; // position 0 already cached
+        let x = HostTensor::new(vec![1, 1, 2], vec![3.0, 0.0]);
+        let out = attention_decode(&x, &mut kc, &mut vc, 1, &shard, 1, 1, 1).unwrap();
+        // v@pos1 = normalize(3,0)·wv ≈ 1.0·rms-normed value; positions
+        // 2..3 (zeros) must not contribute.
+        let xn0 = 3.0 / ((9.0f32 / 2.0 + 1e-5).sqrt());
+        let expect = (5.0 + xn0) / 2.0;
+        assert!((out.data[0] - expect).abs() < 1e-4, "{} vs {expect}", out.data[0]);
+        assert!(attention_decode(&x, &mut kc, &mut vc, 9, &shard, 1, 1, 1).is_err());
+    }
+}

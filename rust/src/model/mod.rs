@@ -1,15 +1,29 @@
-//! Real tiny-MoE execution: weights, sharding, and the per-layer
-//! composition of AOT artifacts under a hybrid parallel plan.
+//! Real tiny-MoE execution: weights, grid sharding, host kernels, and
+//! the per-layer composition of device shards under a hybrid plan.
 //!
-//! The Rust side plays the role of the multi-GPU runtime: it holds one
-//! logical device per shard, calls each device's artifact, and performs
-//! the combines (sum for TP partials and EP contributions — the
-//! "collectives" of the demo node). Simulated communication time for
-//! the modeled platform can be charged on top by callers that want
-//! platform-shaped latencies; the numerics are exact either way.
+//! The stack is layered exactly along the paper's decomposition:
+//!
+//! - [`grid`] — `ShardPlan` (logical `(AttnStrategy, ExpertStrategy)`)
+//!   lowers to a `DeviceGrid` of per-device roles + collective groups;
+//! - [`weights`] — one generic `WeightStore::shard(spec)` slices the
+//!   shard any role needs (EP blocks × TP slices for experts, TP head
+//!   shards for attention, DP replicated);
+//! - [`kernels`] — the module math on `HostTensor` (mirrors
+//!   `python/compile/kernels/ref.py`), so every grid is executable —
+//!   and testable — without PJRT;
+//! - [`collectives`] — order-deterministic combines (partial-sum,
+//!   contribution-sum, batch-split) shared by both backends;
+//! - [`exec`] — the persistent executor: per-device shard + KV state
+//!   held across batches, scoped-thread parallel host execution with a
+//!   sequential bit-equivalence reference, and measured resharding on
+//!   plan switches.
 
+pub mod collectives;
 pub mod exec;
+pub mod grid;
+pub mod kernels;
 pub mod weights;
 
-pub use exec::{ModelExecutor, StageStrategy};
-pub use weights::WeightStore;
+pub use exec::{EngineMode, ExecStats, ModelExecutor};
+pub use grid::{CollectiveGroup, DeviceGrid, DeviceRole, GroupKind, ShardPlan};
+pub use weights::{ShardSpec, WeightStore};

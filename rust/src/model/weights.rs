@@ -1,12 +1,35 @@
-//! Weight storage and shard slicing — mirrors `model.py`'s `shard_*`
-//! layout contract exactly (validated end-to-end by
-//! `rust/tests/runtime_e2e.rs` against the jax reference outputs).
+//! Weight storage and generic shard slicing — mirrors `model.py`'s
+//! `shard_*` layout contract (validated end-to-end by
+//! `rust/tests/runtime_e2e.rs` against the jax reference outputs), now
+//! generalized to the full EP×TP expert grid.
+//!
+//! One entry point, [`WeightStore::shard`], serves every device role:
+//! - `ShardSpec::Attn { tp, rank }` — TP head shard (DP replicas reuse
+//!   the same shard for every `dp_rank`);
+//! - `ShardSpec::Expert { ep, tp, ep_rank, tp_rank }` — EP block of
+//!   whole experts, TP-sliced along the intermediate dim *within* the
+//!   block. `ep == 1` degenerates to pure TP (no selection matrix),
+//!   `tp == 1` to pure EP, and the general case is the hybrid grid.
 
 use crate::runtime::literal::HostTensor;
 use crate::runtime::{Manifest, TinyModelMeta};
+use crate::util::rng::Rng;
 use crate::Result;
 use anyhow::anyhow;
 use std::collections::HashMap;
+
+/// Which shard of which layer a device role needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardSpec {
+    /// Attention TP shard `rank` of `tp` for one layer:
+    /// `[ln, wq, wk, wv, wo]` in artifact input order. Q/O shard by
+    /// query head; K/V by kv head (replicated when `tp > kv_heads`).
+    Attn { layer: usize, tp: usize, rank: usize },
+    /// Expert shard `(ep_rank, tp_rank)` of the `ep × tp` grid:
+    /// `[ln, router, wg, wu, wd]` when `ep == 1`, else
+    /// `[ln, router, sel, wg, wu, wd]` with `sel: [E/ep, E]`.
+    Expert { layer: usize, ep: usize, tp: usize, ep_rank: usize, tp_rank: usize },
+}
 
 /// All model weights, resident on host, addressable by name.
 pub struct WeightStore {
@@ -32,6 +55,42 @@ impl WeightStore {
         Ok(WeightStore { meta: manifest.model.clone(), tensors })
     }
 
+    /// Seeded synthetic weights for a given model shape — the same
+    /// distribution `model.py::init_weights` uses (ones for norms,
+    /// N(0, 0.02) for matmuls). Lets the host-backend engine, tests,
+    /// and benches run without `artifacts/`.
+    pub fn synthetic(meta: &TinyModelMeta, seed: u64) -> WeightStore {
+        fn mat(
+            rng: &mut Rng,
+            tensors: &mut HashMap<String, HostTensor>,
+            name: String,
+            shape: Vec<usize>,
+        ) {
+            let n: usize = shape.iter().product();
+            tensors.insert(name, HostTensor::new(shape, rng.normal_vec_f32(n, 0.02)));
+        }
+        let mut rng = Rng::new(seed);
+        let mut tensors = HashMap::new();
+        let (h, hd, v) = (meta.hidden, meta.head_dim, meta.vocab);
+        let (e, i) = (meta.num_experts, meta.inter);
+        mat(&mut rng, &mut tensors, "embed".into(), vec![v, h]);
+        for l in 0..meta.layers {
+            tensors.insert(format!("layer{l}.ln1"), HostTensor::new(vec![h], vec![1.0; h]));
+            mat(&mut rng, &mut tensors, format!("layer{l}.wq"), vec![h, meta.q_heads * hd]);
+            mat(&mut rng, &mut tensors, format!("layer{l}.wk"), vec![h, meta.kv_heads * hd]);
+            mat(&mut rng, &mut tensors, format!("layer{l}.wv"), vec![h, meta.kv_heads * hd]);
+            mat(&mut rng, &mut tensors, format!("layer{l}.wo"), vec![meta.q_heads * hd, h]);
+            tensors.insert(format!("layer{l}.ln2"), HostTensor::new(vec![h], vec![1.0; h]));
+            mat(&mut rng, &mut tensors, format!("layer{l}.router"), vec![h, e]);
+            mat(&mut rng, &mut tensors, format!("layer{l}.wg"), vec![e, h, i]);
+            mat(&mut rng, &mut tensors, format!("layer{l}.wu"), vec![e, h, i]);
+            mat(&mut rng, &mut tensors, format!("layer{l}.wd"), vec![e, i, h]);
+        }
+        tensors.insert("ln_f".into(), HostTensor::new(vec![h], vec![1.0; h]));
+        mat(&mut rng, &mut tensors, "unembed".into(), vec![h, v]);
+        WeightStore { meta: meta.clone(), tensors }
+    }
+
     pub fn get(&self, name: &str) -> Result<&HostTensor> {
         self.tensors.get(name).ok_or_else(|| anyhow!("missing weight '{name}'"))
     }
@@ -41,12 +100,23 @@ impl WeightStore {
         self.tensors.values().map(|t| t.elements()).sum()
     }
 
-    /// Attention TP shard `d` of `t` for layer `l`:
-    /// `[ln, wq, wk, wv, wo]` in artifact input order.
-    ///
-    /// Q/O shard by query head; K/V by kv head (t ≤ kv_heads).
-    pub fn shard_attn(&self, l: usize, t: usize, d: usize) -> Result<Vec<HostTensor>> {
+    /// Slice the shard a device role needs (see [`ShardSpec`]).
+    pub fn shard(&self, spec: &ShardSpec) -> Result<Vec<HostTensor>> {
+        match *spec {
+            ShardSpec::Attn { layer, tp, rank } => self.shard_attn(layer, tp, rank),
+            ShardSpec::Expert { layer, ep, tp, ep_rank, tp_rank } => {
+                self.shard_expert(layer, ep, tp, ep_rank, tp_rank)
+            }
+        }
+    }
+
+    /// Attention TP shard: Q/O shard by query head; K/V by kv head
+    /// (`tp ≤ kv_heads`), replicated per the GQA mapping beyond that.
+    fn shard_attn(&self, l: usize, t: usize, d: usize) -> Result<Vec<HostTensor>> {
         let m = &self.meta;
+        if t == 0 || m.q_heads % t != 0 || d >= t {
+            anyhow::bail!("bad attention shard tp{t} rank {d} for {} heads", m.q_heads);
+        }
         let hd = m.head_dim;
         let hq_l = m.q_heads / t;
         let kv_l = (m.kv_heads / t).max(1);
@@ -71,58 +141,66 @@ impl WeightStore {
         Ok(vec![ln, wq, wk, wv, wo])
     }
 
-    /// Expert TP shard: `[ln, router, wg, wu, wd]` with inter sliced.
-    pub fn shard_expert_tp(&self, l: usize, t: usize, d: usize) -> Result<Vec<HostTensor>> {
+    /// Expert grid shard: EP block `ep_rank` of whole experts, with the
+    /// intermediate dim TP-sliced to `[tp_rank·I/tp, (tp_rank+1)·I/tp)`
+    /// within the block.
+    fn shard_expert(
+        &self,
+        l: usize,
+        ep: usize,
+        t: usize,
+        ep_rank: usize,
+        tp_rank: usize,
+    ) -> Result<Vec<HostTensor>> {
         let m = &self.meta;
         let (h, e, i) = (m.hidden, m.num_experts, m.inter);
+        if ep == 0 || t == 0 || e % ep != 0 || i % t != 0 || ep_rank >= ep || tp_rank >= t {
+            anyhow::bail!("bad expert shard ep{ep}r{ep_rank} tp{t}r{tp_rank} for E={e} I={i}");
+        }
+        let e_l = e / ep;
         let i_l = i / t;
         let ln = self.get(&format!("layer{l}.ln2"))?.clone();
         let router = self.get(&format!("layer{l}.router"))?.clone();
-        // wg/wu [E, H, I] → slice last axis.
-        let wg = slice_last_axis(self.get(&format!("layer{l}.wg"))?, e * h, i, d * i_l, i_l);
-        let wu = slice_last_axis(self.get(&format!("layer{l}.wu"))?, e * h, i, d * i_l, i_l);
-        // wd [E, I, H] → slice middle axis = rows of each expert block.
+
+        // Expert block [ep_rank·e_l, (ep_rank+1)·e_l), then the inter
+        // slice within each owned expert.
+        let wg_full = self.get(&format!("layer{l}.wg"))?;
+        let wu_full = self.get(&format!("layer{l}.wu"))?;
         let wd_full = self.get(&format!("layer{l}.wd"))?;
-        let mut wd_data = Vec::with_capacity(e * i_l * h);
-        for ei in 0..e {
-            let base = ei * i * h + d * i_l * h;
+        let e0 = ep_rank * e_l;
+        // wg/wu [E, H, I] → block rows, slice last axis.
+        let block_slice_last = |t_full: &HostTensor| -> HostTensor {
+            let mut data = Vec::with_capacity(e_l * h * i_l);
+            for ei in e0..e0 + e_l {
+                for r in 0..h {
+                    let base = (ei * h + r) * i + tp_rank * i_l;
+                    data.extend_from_slice(&t_full.data[base..base + i_l]);
+                }
+            }
+            HostTensor::new(vec![e_l, h, i_l], data)
+        };
+        let wg = block_slice_last(wg_full);
+        let wu = block_slice_last(wu_full);
+        // wd [E, I, H] → block rows, slice middle axis (rows of each
+        // expert block).
+        let mut wd_data = Vec::with_capacity(e_l * i_l * h);
+        for ei in e0..e0 + e_l {
+            let base = ei * i * h + tp_rank * i_l * h;
             wd_data.extend_from_slice(&wd_full.data[base..base + i_l * h]);
         }
-        let wg = HostTensor::new(vec![e, h, i_l], wg.data);
-        let wu = HostTensor::new(vec![e, h, i_l], wu.data);
-        let wd = HostTensor::new(vec![e, i_l, h], wd_data);
-        Ok(vec![ln, router, wg, wu, wd])
-    }
+        let wd = HostTensor::new(vec![e_l, i_l, h], wd_data);
 
-    /// Expert EP shard: `[ln, router, sel, wg, wu, wd]` — device `d` of
-    /// `ep` owns the contiguous expert block `[d·E/ep, (d+1)·E/ep)`.
-    pub fn shard_expert_ep(&self, l: usize, ep: usize, d: usize) -> Result<Vec<HostTensor>> {
-        let m = &self.meta;
-        let (h, e, i) = (m.hidden, m.num_experts, m.inter);
-        let e_l = e / ep;
-        let ln = self.get(&format!("layer{l}.ln2"))?.clone();
-        let router = self.get(&format!("layer{l}.router"))?.clone();
-        // Selection matrix [e_l, E].
-        let mut sel = vec![0.0f32; e_l * e];
-        for j in 0..e_l {
-            sel[j * e + d * e_l + j] = 1.0;
+        if ep == 1 {
+            // Pure TP keeps the tp-artifact layout (no selection).
+            Ok(vec![ln, router, wg, wu, wd])
+        } else {
+            // Selection matrix [e_l, E] picking the block's experts.
+            let mut sel = vec![0.0f32; e_l * e];
+            for j in 0..e_l {
+                sel[j * e + e0 + j] = 1.0;
+            }
+            Ok(vec![ln, router, HostTensor::new(vec![e_l, e], sel), wg, wu, wd])
         }
-        let sel = HostTensor::new(vec![e_l, e], sel);
-        let take_block = |t: &HostTensor, per_expert: usize| -> HostTensor {
-            let start = d * e_l * per_expert;
-            HostTensor::new(
-                {
-                    let mut s = t.shape.clone();
-                    s[0] = e_l;
-                    s
-                },
-                t.data[start..start + e_l * per_expert].to_vec(),
-            )
-        };
-        let wg = take_block(self.get(&format!("layer{l}.wg"))?, h * i);
-        let wu = take_block(self.get(&format!("layer{l}.wu"))?, h * i);
-        let wd = take_block(self.get(&format!("layer{l}.wd"))?, i * h);
-        Ok(vec![ln, router, sel, wg, wu, wd])
     }
 
     /// Expert-module weights of one layer as flat f32 (for quantized
@@ -154,18 +232,6 @@ fn slice_head_cols(
         data.extend_from_slice(&t.data[base..base + n * hd]);
     }
     HostTensor::new(vec![rows, n * hd], data)
-}
-
-/// Slice the last axis of a tensor flattened as [outer, last]:
-/// takes [start, start+n) of `last` for every outer row.
-fn slice_last_axis(t: &HostTensor, outer: usize, last: usize, start: usize, n: usize) -> HostTensor {
-    assert_eq!(t.elements(), outer * last);
-    let mut data = Vec::with_capacity(outer * n);
-    for r in 0..outer {
-        let base = r * last + start;
-        data.extend_from_slice(&t.data[base..base + n]);
-    }
-    HostTensor::new(vec![outer, n], data)
 }
 
 #[cfg(test)]
@@ -210,6 +276,14 @@ mod tests {
         WeightStore::from_blob(&m, &blob).unwrap()
     }
 
+    fn attn(s: &WeightStore, tp: usize, rank: usize) -> Vec<HostTensor> {
+        s.shard(&ShardSpec::Attn { layer: 0, tp, rank }).unwrap()
+    }
+
+    fn expert(s: &WeightStore, ep: usize, tp: usize, er: usize, tr: usize) -> Vec<HostTensor> {
+        s.shard(&ShardSpec::Expert { layer: 0, ep, tp, ep_rank: er, tp_rank: tr }).unwrap()
+    }
+
     #[test]
     fn loads_all_weights() {
         let s = store();
@@ -221,9 +295,9 @@ mod tests {
     #[test]
     fn attn_shards_partition_columns() {
         let s = store();
-        let full = s.shard_attn(0, 1, 0).unwrap();
-        let d0 = s.shard_attn(0, 2, 0).unwrap();
-        let d1 = s.shard_attn(0, 2, 1).unwrap();
+        let full = attn(&s, 1, 0);
+        let d0 = attn(&s, 2, 0);
+        let d1 = attn(&s, 2, 1);
         // wq (index 1): [4,4] split into [4,2]+[4,2] by head columns.
         assert_eq!(d0[1].shape, vec![4, 2]);
         for r in 0..4 {
@@ -239,9 +313,9 @@ mod tests {
     #[test]
     fn expert_tp_shards_slice_inter() {
         let s = store();
-        let full = s.shard_expert_tp(0, 1, 0).unwrap();
-        let d0 = s.shard_expert_tp(0, 2, 0).unwrap();
-        let d1 = s.shard_expert_tp(0, 2, 1).unwrap();
+        let full = expert(&s, 1, 1, 0, 0);
+        let d0 = expert(&s, 1, 2, 0, 0);
+        let d1 = expert(&s, 1, 2, 0, 1);
         assert_eq!(d0[2].shape, vec![2, 4, 2]); // wg [E, H, I/2]
         // First row of expert 0: full wg row is [0..4) of that row.
         assert_eq!(d0[2].data[0..2], full[2].data[0..2]);
@@ -255,8 +329,8 @@ mod tests {
     #[test]
     fn expert_ep_shards_take_expert_blocks() {
         let s = store();
-        let d0 = s.shard_expert_ep(0, 2, 0).unwrap();
-        let d1 = s.shard_expert_ep(0, 2, 1).unwrap();
+        let d0 = expert(&s, 2, 1, 0, 0);
+        let d1 = expert(&s, 2, 1, 1, 0);
         let full_wg = s.get("layer0.wg").unwrap();
         // wg index 3 in [ln, router, sel, wg, wu, wd].
         assert_eq!(d0[3].shape, vec![1, 4, 4]);
@@ -265,5 +339,55 @@ mod tests {
         // sel matrices select disjoint experts.
         assert_eq!(d0[2].data, vec![1.0, 0.0]);
         assert_eq!(d1[2].data, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn hybrid_shards_block_then_slice() {
+        // EP2×TP2 on the miniature: device (ep_rank 1, tp_rank 1) holds
+        // expert 1's inter columns [2, 4).
+        let s = store();
+        let hy = expert(&s, 2, 2, 1, 1);
+        assert_eq!(hy.len(), 6);
+        assert_eq!(hy[3].shape, vec![1, 4, 2]); // wg [E/2, H, I/2]
+        let full_wg = s.get("layer0.wg").unwrap();
+        // Expert 1's wg rows live at data[16..32]; columns 2..4 of each
+        // 4-wide row.
+        for r in 0..4 {
+            assert_eq!(hy[3].data[r * 2..r * 2 + 2], full_wg.data[16 + r * 4 + 2..16 + r * 4 + 4]);
+        }
+        // wd [E/2, I/2, H]: expert 1 rows 2..4.
+        let full_wd = s.get("layer0.wd").unwrap();
+        assert_eq!(hy[5].shape, vec![1, 2, 4]);
+        assert_eq!(hy[5].data[..], full_wd.data[16 + 8..16 + 16]);
+        // Selection matrix still picks expert 1.
+        assert_eq!(hy[2].data, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        let s = store();
+        assert!(s.shard(&ShardSpec::Attn { layer: 0, tp: 3, rank: 0 }).is_err());
+        assert!(s.shard(&ShardSpec::Attn { layer: 0, tp: 2, rank: 2 }).is_err());
+        assert!(s
+            .shard(&ShardSpec::Expert { layer: 0, ep: 3, tp: 1, ep_rank: 0, tp_rank: 0 })
+            .is_err());
+        assert!(s
+            .shard(&ShardSpec::Expert { layer: 0, ep: 2, tp: 2, ep_rank: 0, tp_rank: 2 })
+            .is_err());
+    }
+
+    #[test]
+    fn synthetic_weights_have_model_shapes() {
+        let meta = crate::runtime::TinyModelMeta::host_demo();
+        let s = WeightStore::synthetic(&meta, 7);
+        assert_eq!(s.get("embed").unwrap().shape, vec![meta.vocab, meta.hidden]);
+        assert_eq!(
+            s.get("layer0.wg").unwrap().shape,
+            vec![meta.num_experts, meta.hidden, meta.inter]
+        );
+        assert_eq!(s.get("ln_f").unwrap().data, vec![1.0; meta.hidden]);
+        // Deterministic per seed.
+        let s2 = WeightStore::synthetic(&meta, 7);
+        assert_eq!(s.get("layer1.wd").unwrap().data, s2.get("layer1.wd").unwrap().data);
     }
 }

@@ -65,9 +65,35 @@ impl HybridPlan {
             ("expert_decode", self.expert_decode.to_json()),
             ("transition", self.transition.method.name().into()),
             ("transition_overhead_s", self.transition.overhead.into()),
+            ("transition_cost", self.transition.to_json()),
+            ("predicted_prefill", self.predicted_prefill.to_json()),
+            ("predicted_decode", self.predicted_decode.to_json()),
             ("predicted_total_s", self.predicted_total.into()),
             ("solve_time_s", self.solve_time.into()),
+            ("k_a", self.k_a.into()),
+            ("k_e", self.k_e.into()),
         ])
+    }
+
+    /// Reconstruct a plan from [`Self::to_json`] output (the plan-cache
+    /// persistence path). Round-trips bit-exactly: the JSON writer
+    /// prints f64 with shortest-round-trip formatting.
+    pub fn from_json(j: &Json) -> Option<HybridPlan> {
+        Some(HybridPlan {
+            model: j.get("model")?.as_str()?.to_string(),
+            node: j.get("node")?.as_str()?.to_string(),
+            scenario: Scenario::from_json(j.get("scenario")?)?,
+            attn: AttnStrategy::from_json(j.get("attn")?)?,
+            expert_prefill: ExpertStrategy::from_json(j.get("expert_prefill")?)?,
+            expert_decode: ExpertStrategy::from_json(j.get("expert_decode")?)?,
+            transition: TransitionCost::from_json(j.get("transition_cost")?)?,
+            predicted_prefill: ModuleLatency::from_json(j.get("predicted_prefill")?)?,
+            predicted_decode: ModuleLatency::from_json(j.get("predicted_decode")?)?,
+            predicted_total: j.get("predicted_total_s")?.as_f64()?,
+            solve_time: j.get("solve_time_s")?.as_f64()?,
+            k_a: j.get("k_a")?.as_usize()?,
+            k_e: j.get("k_e")?.as_usize()?,
+        })
     }
 }
 
@@ -152,5 +178,19 @@ mod tests {
         let j = p.to_json();
         assert_eq!(j.get("model").unwrap().as_str(), Some("mixtral-8x7b"));
         assert!(j.get("predicted_total_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_round_trips_bit_exactly() {
+        let p = dummy_plan(ExpertStrategy::new(1, 4), ExpertStrategy::new(4, 1));
+        // Through text, as persistence does.
+        let text = p.to_json().to_string_pretty();
+        let j = crate::util::json::Json::parse(&text).unwrap();
+        let q = HybridPlan::from_json(&j).expect("round trip");
+        assert_eq!(q.signature(), p.signature());
+        assert_eq!(q.scenario, p.scenario);
+        assert_eq!(q.predicted_total.to_bits(), p.predicted_total.to_bits());
+        assert_eq!(q.transition.overhead.to_bits(), p.transition.overhead.to_bits());
+        assert_eq!(q.k_a, p.k_a);
     }
 }

@@ -51,6 +51,17 @@ impl HostTensor {
         }
     }
 
+    /// Contiguous slice `[start, start+n)` along the leading axis (the
+    /// DP batch split).
+    pub fn slice_outer(&self, start: usize, n: usize) -> HostTensor {
+        let outer = self.shape[0];
+        assert!(start + n <= outer, "slice_outer {start}+{n} > {outer}");
+        let inner: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = n;
+        HostTensor::new(shape, self.data[start * inner..(start + n) * inner].to_vec())
+    }
+
     /// Row-major slice of the last axis? Not needed; helpers below are
     /// shape-specific where used.
     pub fn view(&self) -> &[f32] {

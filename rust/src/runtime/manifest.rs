@@ -75,6 +75,29 @@ pub struct TinyModelMeta {
     pub layers: usize,
 }
 
+impl TinyModelMeta {
+    /// A reduced model shape for the artifact-free host backend: small
+    /// enough that grid-engine tests and CI smoke runs finish in
+    /// seconds, while keeping every axis the grid shards along (GQA
+    /// heads, multiple experts, power-of-two batch) non-trivial.
+    pub fn host_demo() -> TinyModelMeta {
+        TinyModelMeta {
+            batch: 4,
+            prefill_len: 16,
+            max_len: 48,
+            hidden: 64,
+            q_heads: 8,
+            kv_heads: 4,
+            head_dim: 8,
+            num_experts: 8,
+            top_k: 2,
+            inter: 128,
+            vocab: 128,
+            layers: 2,
+        }
+    }
+}
+
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {

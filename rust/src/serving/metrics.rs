@@ -13,6 +13,14 @@ pub struct Metrics {
     pub transitions: usize,
     /// Weight-moving plan switches made by the adaptive controller.
     pub replans: usize,
+    /// Shard materializations ("weight uploads") the executor performed
+    /// over the run. Flat after the first batch under a fixed plan;
+    /// grows only when a plan switch moves weights.
+    pub weight_uploads: usize,
+    /// Inter-batch plan switches that actually re-materialized shards.
+    pub reshards: usize,
+    /// Measured seconds the executor spent resharding weights.
+    pub reshard_time: f64,
     latencies: Vec<f64>,
     ttfts: Vec<f64>,
     /// Wall-clock duration of the run (set by the server at the end).
@@ -54,7 +62,7 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | {:.1} tok/s | {} prefills, {} decode steps, {} transitions, {} replans",
+            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | {:.1} tok/s | {} prefills, {} decode steps, {} transitions, {} replans | {} shard uploads, {} reshards ({:.1} ms)",
             self.requests_completed,
             self.tokens_generated,
             self.latency_p(50.0) * 1e3,
@@ -66,6 +74,9 @@ impl Metrics {
             self.decode_steps,
             self.transitions,
             self.replans,
+            self.weight_uploads,
+            self.reshards,
+            self.reshard_time * 1e3,
         )
     }
 }

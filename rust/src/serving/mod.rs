@@ -16,7 +16,7 @@ pub mod server;
 pub use batcher::{Batch, Batcher};
 pub use metrics::Metrics;
 pub use router::{Router, RouterPolicy};
-pub use server::{serve_workload, ServeConfig, ServeReport};
+pub use server::{serve_on, serve_workload, AdaptiveServing, ServeConfig, ServeReport};
 
 use std::time::Instant;
 

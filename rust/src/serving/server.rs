@@ -1,10 +1,21 @@
 //! The serving loop: drains the router, packs batches, executes
-//! prefill + decode on the real PJRT model under a hybrid plan, and
-//! reports per-request + aggregate metrics.
+//! prefill + decode on the grid engine under a hybrid plan, and reports
+//! per-request + aggregate metrics.
 //!
-//! `serve_workload` is the synchronous core used by the examples,
-//! benches, and the `hap serve` CLI; `spawn_server` wraps it in a
-//! worker thread with mpsc channels for concurrent submitters.
+//! `serve_on` is the synchronous core over **one long-lived
+//! [`ModelExecutor`]**: weight shards stay device-resident across
+//! batches, and a plan switch (adaptive serving) triggers measured
+//! resharding work inside `ModelExecutor::begin_batch` — so
+//! `Metrics.weight_uploads`/`reshards` describe real weight movement,
+//! not a per-batch re-upload. `serve_workload` wraps it for the
+//! PJRT-artifact path; the host backend (`ModelExecutor::host`) runs
+//! the same loop without artifacts. `spawn_server` adds a worker thread
+//! with mpsc channels for concurrent submitters.
+//!
+//! The grid engine executes any plan the strategy search space emits at
+//! the node's device count — hybrid EP×TP experts and DP×TP attention
+//! included — so adaptive serving runs the planner's picks natively
+//! instead of projecting them onto a pure layout.
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
@@ -12,13 +23,13 @@ use super::router::{Router, RouterPolicy};
 use super::{Request, Response};
 use crate::adapt::controller::ControllerConfig;
 use crate::adapt::window::TrafficSample;
-use crate::adapt::AdaptLoop;
+use crate::adapt::{AdaptLoop, PlanCache};
 use crate::config::{hardware::NodeConfig, model::MoEModelConfig};
-use crate::model::{ModelExecutor, StageStrategy};
+use crate::model::{ModelExecutor, ShardPlan};
 use crate::planner::{HapPlanner, PLANNER_SEED};
 use crate::runtime::literal::argmax_rows;
 use crate::runtime::PjrtRuntime;
-use crate::strategy::ExpertStrategy;
+use crate::strategy::{AttnStrategy, ExpertStrategy};
 use crate::Result;
 use std::time::Instant;
 
@@ -30,6 +41,10 @@ pub struct AdaptiveServing {
     pub node: NodeConfig,
     pub controller: ControllerConfig,
     pub window_capacity: usize,
+    /// When set, the plan cache is loaded from this path at startup
+    /// (ignored on model/platform fingerprint mismatch) and saved back
+    /// at the end of the run.
+    pub plan_cache: Option<std::path::PathBuf>,
 }
 
 impl AdaptiveServing {
@@ -67,7 +82,7 @@ impl AdaptiveServing {
 /// `adaptive` is set — the adaptation loop that re-selects it per batch.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    pub attn_tp: usize,
+    pub attn: AttnStrategy,
     pub expert_prefill: ExpertStrategy,
     pub expert_decode: ExpertStrategy,
     pub policy: RouterPolicy,
@@ -82,7 +97,7 @@ impl ServeConfig {
     /// Static TP-n baseline.
     pub fn tp(n: usize) -> ServeConfig {
         ServeConfig {
-            attn_tp: n,
+            attn: AttnStrategy::new(n, 1),
             expert_prefill: ExpertStrategy::new(n, 1),
             expert_decode: ExpertStrategy::new(n, 1),
             policy: RouterPolicy::Fcfs,
@@ -94,7 +109,7 @@ impl ServeConfig {
     /// HAP-style phase-specific plan: EP prefill → TP decode.
     pub fn hap_transition(n: usize) -> ServeConfig {
         ServeConfig {
-            attn_tp: n,
+            attn: AttnStrategy::new(n, 1),
             expert_prefill: ExpertStrategy::new(1, n),
             expert_decode: ExpertStrategy::new(n, 1),
             policy: RouterPolicy::Fcfs,
@@ -115,6 +130,7 @@ impl ServeConfig {
             node: NodeConfig::cpu_sim(n),
             controller: ControllerConfig::default(),
             window_capacity: 64,
+            plan_cache: None,
         });
         config
     }
@@ -125,16 +141,16 @@ impl ServeConfig {
 
     pub fn label(&self) -> String {
         if self.adaptive.is_some() {
-            format!("adaptive (fallback attn=TP{})", self.attn_tp)
+            format!("adaptive (fallback attn={})", self.attn.label())
         } else if self.has_transition() {
             format!(
-                "attn=TP{} experts={}→{}",
-                self.attn_tp,
+                "attn={} experts={}→{}",
+                self.attn.label(),
                 self.expert_prefill.label(),
                 self.expert_decode.label()
             )
         } else {
-            format!("attn=TP{} experts={}", self.attn_tp, self.expert_prefill.label())
+            format!("attn={} experts={}", self.attn.label(), self.expert_prefill.label())
         }
     }
 }
@@ -150,39 +166,39 @@ struct AdaptState {
 
 impl AdaptState {
     fn new(cfg: &AdaptiveServing) -> AdaptState {
+        let mut control = AdaptLoop::new(cfg.controller.clone(), cfg.window_capacity);
+        if let Some(path) = &cfg.plan_cache {
+            match PlanCache::load(path, &cfg.model, &cfg.node) {
+                Ok(cache) => control.cache = cache,
+                Err(e) => eprintln!("plan cache {}: {e:#} (starting cold)", path.display()),
+            }
+        }
         AdaptState {
-            control: AdaptLoop::new(cfg.controller.clone(), cfg.window_capacity),
+            control,
             latency: crate::sim::LatencyModel::cached(&cfg.node.gpu, PLANNER_SEED),
         }
     }
 
-    /// Observe one packed batch and return the (prefill, decode)
-    /// strategies the controller lands on.
+    /// Observe one packed batch (plus the previous batch's measured
+    /// latency, closing the loop on mispredicted plans) and return the
+    /// (prefill, decode) plans the controller lands on. The grid engine
+    /// executes whatever the planner picked — hybrids included.
     fn select(
         &mut self,
         cfg: &AdaptiveServing,
         requests: &[Request],
-    ) -> Result<(StageStrategy, StageStrategy)> {
+        measured: Option<f64>,
+    ) -> Result<(ShardPlan, ShardPlan)> {
         let planner = HapPlanner::with_latency(&cfg.model, &cfg.node, self.latency.clone());
         let samples = requests.iter().map(|req| TrafficSample {
             prompt: req.prompt.len(),
             generate: req.max_new_tokens,
             batch: requests.len(),
         });
-        let (plan, _) = self.control.step(&planner, samples, None)?;
-        // The demo executor covers pure-TP and pure-EP expert layouts;
-        // project hybrid EP×TP picks onto pure EP at the same device
-        // count (the simulation stack covers hybrids exactly).
-        let executable = |e: crate::strategy::ExpertStrategy| {
-            if e.ep > 1 && e.tp > 1 {
-                crate::strategy::ExpertStrategy::new(1, e.devices())
-            } else {
-                e
-            }
-        };
+        let (plan, _) = self.control.step(&planner, samples, None, measured)?;
         Ok((
-            StageStrategy { attn_tp: plan.attn.tp, expert: executable(plan.expert_prefill) },
-            StageStrategy { attn_tp: plan.attn.tp, expert: executable(plan.expert_decode) },
+            ShardPlan::new(plan.attn, plan.expert_prefill),
+            ShardPlan::new(plan.attn, plan.expert_decode),
         ))
     }
 }
@@ -197,14 +213,27 @@ pub struct ServeReport {
     pub decode_time: f64,
 }
 
-/// Serve a whole workload to completion (synchronous; the unit the
-/// worker thread loops over).
+/// Serve a whole workload to completion on the PJRT artifacts: builds
+/// one executor for the run and delegates to [`serve_on`].
 pub fn serve_workload(
     rt: &PjrtRuntime,
     config: &ServeConfig,
     workload: Vec<Request>,
 ) -> Result<ServeReport> {
-    let m = &rt.manifest.model;
+    let mut exec = ModelExecutor::new(rt)?;
+    serve_on(&mut exec, config, workload)
+}
+
+/// Serve a whole workload on one long-lived executor (the synchronous
+/// core the worker thread loops over). The executor's shard state
+/// persists across batches: weight uploads happen once per layout, and
+/// only adaptive plan switches re-materialize shards.
+pub fn serve_on(
+    exec: &mut ModelExecutor,
+    config: &ServeConfig,
+    workload: Vec<Request>,
+) -> Result<ServeReport> {
+    let m = exec.meta().clone();
     let batcher = Batcher::new(m.batch, m.prefill_len, m.max_len - m.prefill_len);
     let mut router = Router::new(config.queue_capacity, config.policy);
     for req in workload {
@@ -213,36 +242,41 @@ pub fn serve_workload(
         }
     }
 
-    let fixed_prefill = StageStrategy { attn_tp: config.attn_tp, expert: config.expert_prefill };
-    let fixed_decode = StageStrategy { attn_tp: config.attn_tp, expert: config.expert_decode };
+    let fixed_prefill = ShardPlan::new(config.attn, config.expert_prefill);
+    let fixed_decode = ShardPlan::new(config.attn, config.expert_decode);
     let mut adapt = config.adaptive.as_ref().map(AdaptState::new);
+    let stats0 = exec.stats();
 
     let mut metrics = Metrics::new();
     let mut responses = Vec::new();
     let mut prefill_time = 0.0;
     let mut decode_time = 0.0;
+    let mut last_measured: Option<f64> = None;
     let run_start = Instant::now();
 
     while !router.is_empty() {
         let batch = batcher.pack(router.take(m.batch));
         // Per-batch strategy selection (adaptive) or the fixed plan.
-        let (prefill_strategy, decode_strategy) = match (&mut adapt, &config.adaptive) {
+        let (prefill_plan, decode_plan) = match (&mut adapt, &config.adaptive) {
             (Some(state), Some(cfg)) => {
                 let switches_before = state.control.controller.switches;
-                let picked = state.select(cfg, &batch.requests)?;
+                let picked = state.select(cfg, &batch.requests, last_measured)?;
                 metrics.replans += state.control.controller.switches - switches_before;
                 picked
             }
-            _ => (fixed_prefill.clone(), fixed_decode.clone()),
+            _ => (fixed_prefill, fixed_decode),
         };
-        let mut exec = ModelExecutor::new(rt)?;
+        // Declare the batch's plans: evicts stale layouts, materializes
+        // missing shards — the measured resharding work of a switch.
+        exec.begin_batch(&prefill_plan, &decode_plan)?;
 
         // ---- Prefill.
         let t0 = Instant::now();
-        let logits = exec.prefill(&batch.tokens, &prefill_strategy)?;
-        prefill_time += t0.elapsed().as_secs_f64();
+        let logits = exec.prefill(&batch.tokens, &prefill_plan)?;
+        let batch_prefill = t0.elapsed().as_secs_f64();
+        prefill_time += batch_prefill;
         metrics.batches_prefilled += 1;
-        if prefill_strategy.expert != decode_strategy.expert {
+        if prefill_plan.expert != decode_plan.expert {
             metrics.transitions += 1;
         }
 
@@ -260,7 +294,7 @@ pub fn serve_workload(
         // ---- Decode until every live slot finishes.
         let t0 = Instant::now();
         while remaining.iter().take(batch.live()).any(|&r| r > 0) {
-            let logits = exec.decode_step(&last, &decode_strategy)?;
+            let logits = exec.decode_step(&last, &decode_plan)?;
             metrics.decode_steps += 1;
             let next = argmax_rows(&logits);
             for slot in 0..batch.live() {
@@ -271,7 +305,11 @@ pub fn serve_workload(
             }
             last = next.iter().map(|&t| t as i32).collect();
         }
-        decode_time += t0.elapsed().as_secs_f64();
+        let batch_decode = t0.elapsed().as_secs_f64();
+        decode_time += batch_decode;
+        // Feed the measured latency of this batch into the next
+        // adaptation step (demotes consistently mispredicted plans).
+        last_measured = Some(batch_prefill + batch_decode);
 
         // ---- Retire.
         let now = Instant::now();
@@ -289,6 +327,19 @@ pub fn serve_workload(
     }
 
     metrics.wall_time = run_start.elapsed().as_secs_f64();
+    let stats = exec.stats();
+    metrics.weight_uploads = stats.materializations - stats0.materializations;
+    metrics.reshards = stats.reshards - stats0.reshards;
+    metrics.reshard_time = stats.reshard_seconds - stats0.reshard_seconds;
+
+    // Persist the warmed plan cache for the next run.
+    if let (Some(state), Some(cfg)) = (&adapt, &config.adaptive) {
+        if let Some(path) = &cfg.plan_cache {
+            if let Err(e) = state.control.cache.save(path) {
+                eprintln!("could not save plan cache {}: {e:#}", path.display());
+            }
+        }
+    }
     Ok(ServeReport { metrics, responses, prefill_time, decode_time })
 }
 
@@ -347,6 +398,7 @@ pub fn spawn_server(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::DeviceGrid;
 
     #[test]
     fn configs_label_correctly() {
@@ -358,24 +410,29 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_selection_yields_executable_strategies() {
-        // The adaptation loop itself needs no PJRT runtime: feed it a
-        // batch of requests and check it lands on a plan the demo
-        // executor accepts (attn tp 1/2/4; experts pure TP or pure EP).
+    fn adaptive_selection_returns_native_grid_plans() {
+        // The adaptation loop needs no runtime: feed it a batch of
+        // requests and check it lands on plans that lower to
+        // well-formed device grids at the node's device count — the
+        // planner's pick is executed natively (hybrid EP×TP included),
+        // never projected onto a pure layout.
         let config = ServeConfig::adaptive(4);
         let acfg = config.adaptive.as_ref().unwrap();
         let mut state = AdaptState::new(acfg);
         let reqs: Vec<Request> =
             (0..4).map(|i| Request::new(i, vec![1; 24], 16)).collect();
-        let (pre, dec) = state.select(acfg, &reqs).unwrap();
-        assert!(matches!(pre.attn_tp, 1 | 2 | 4));
-        assert_eq!(pre.attn_tp, dec.attn_tp);
-        for e in [&pre.expert, &dec.expert] {
-            assert!(e.ep == 1 || e.tp == 1, "non-executable hybrid {}", e.label());
+        let (pre, dec) = state.select(acfg, &reqs, None).unwrap();
+        assert_eq!(pre.attn, dec.attn, "attention is pinned across stages");
+        for plan in [&pre, &dec] {
+            assert_eq!(plan.devices(), 4);
+            let grid = DeviceGrid::lower(plan).unwrap();
+            let m = acfg.model.clone();
+            grid.check_dims(m.q_heads, m.kv_heads, m.num_experts, m.moe_inter_size, 4)
+                .unwrap();
         }
         assert!(state.control.controller.active().is_some());
         // A second identical batch is a cache hit, not a re-solve.
-        state.select(acfg, &reqs).unwrap();
+        state.select(acfg, &reqs, None).unwrap();
         assert_eq!(state.control.cache.hits, 1);
         assert_eq!(state.control.cache.misses, 1);
     }

@@ -64,6 +64,22 @@ impl ModuleLatency {
         self.attn + self.expert + self.comm
     }
 
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("attn", self.attn.into()),
+            ("expert", self.expert.into()),
+            ("comm", self.comm.into()),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Option<ModuleLatency> {
+        Some(ModuleLatency {
+            attn: j.get("attn")?.as_f64()?,
+            expert: j.get("expert")?.as_f64()?,
+            comm: j.get("comm")?.as_f64()?,
+        })
+    }
+
     pub fn scale(&self, k: f64) -> ModuleLatency {
         ModuleLatency { attn: self.attn * k, expert: self.expert * k, comm: self.comm * k }
     }

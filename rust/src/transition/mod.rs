@@ -44,6 +44,15 @@ impl TransitionMethod {
             TransitionMethod::Int4Backup => "int4-backup",
         }
     }
+
+    pub fn from_name(name: &str) -> Option<TransitionMethod> {
+        match name {
+            "none" => Some(TransitionMethod::None),
+            "reshard" => Some(TransitionMethod::Reshard),
+            "int4-backup" => Some(TransitionMethod::Int4Backup),
+            _ => None,
+        }
+    }
 }
 
 /// Cost breakdown of one candidate transition.
@@ -56,6 +65,26 @@ pub struct TransitionCost {
     pub raw_pipeline: f64,
     /// Reshard alternative (diagnostics).
     pub reshard: f64,
+}
+
+impl TransitionCost {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("method", self.method.name().into()),
+            ("overhead", self.overhead.into()),
+            ("raw_pipeline", self.raw_pipeline.into()),
+            ("reshard", self.reshard.into()),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Option<TransitionCost> {
+        Some(TransitionCost {
+            method: TransitionMethod::from_name(j.get("method")?.as_str()?)?,
+            overhead: j.get("overhead")?.as_f64()?,
+            raw_pipeline: j.get("raw_pipeline")?.as_f64()?,
+            reshard: j.get("reshard")?.as_f64()?,
+        })
+    }
 }
 
 /// Throughput of the fused INT4 dequant kernel, elements/second —

@@ -1,20 +1,23 @@
 //! End-to-end runtime tests: load the AOT artifacts through PJRT and
-//! verify that the Rust composition of per-device artifacts is
+//! verify that the grid engine's composition of per-device artifacts is
 //! numerically consistent across parallel strategies.
 //!
 //! Strategy-invariance is the core correctness property of the whole
 //! stack: TP1 (single device, no sharding) must produce the same
-//! logits as TP2/TP4 attention × TP/EP experts, because the sharding +
-//! host combines are mathematically exact re-partitionings. A failure
-//! anywhere — kernel, lowering, manifest, weight slicing, combine —
-//! breaks the equality.
+//! logits as every other grid — TP2/TP4 attention × TP/EP/EP×TP
+//! experts — because the sharding + collectives are mathematically
+//! exact re-partitionings. A failure anywhere — kernel, lowering,
+//! manifest, weight slicing, combine — breaks the equality.
+//!
+//! (The same invariances are asserted runtime-free on the host backend
+//! in rust/tests/grid_engine.rs; this suite exercises the PJRT path.)
 //!
 //! Requires `make artifacts` (skipped with a message otherwise).
 
-use hap::model::{ModelExecutor, StageStrategy};
+use hap::model::{ModelExecutor, ShardPlan};
 use hap::runtime::literal::argmax_rows;
 use hap::runtime::PjrtRuntime;
-use hap::strategy::ExpertStrategy;
+use hap::strategy::{AttnStrategy, ExpertStrategy};
 use std::path::Path;
 
 fn artifacts_dir() -> Option<&'static Path> {
@@ -33,6 +36,14 @@ fn test_tokens(rt: &PjrtRuntime) -> Vec<i32> {
     (0..m.batch * m.prefill_len)
         .map(|i| ((i * 37 + 11) % m.vocab) as i32)
         .collect()
+}
+
+fn plan(attn_tp: usize, expert_tp: usize, expert_ep: usize) -> ShardPlan {
+    let n = attn_tp.max(expert_tp * expert_ep);
+    ShardPlan::new(
+        AttnStrategy::new(attn_tp, n / attn_tp),
+        ExpertStrategy::new(expert_tp, expert_ep),
+    )
 }
 
 fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
@@ -66,14 +77,19 @@ fn prefill_logits_invariant_across_strategies() {
     let tokens = test_tokens(&rt);
 
     let mut base_exec = ModelExecutor::new(&rt).unwrap();
-    let base = base_exec.prefill(&tokens, &StageStrategy::tp(1)).unwrap();
+    let base = base_exec.prefill(&tokens, &ShardPlan::tp(1)).unwrap();
 
     let variants = [
-        StageStrategy::tp(2),
-        StageStrategy::tp(4),
-        StageStrategy { attn_tp: 4, expert: ExpertStrategy::new(1, 4) },
-        StageStrategy { attn_tp: 2, expert: ExpertStrategy::new(1, 2) },
-        StageStrategy { attn_tp: 1, expert: ExpertStrategy::new(4, 1) },
+        ShardPlan::tp(2),
+        ShardPlan::tp(4),
+        plan(4, 1, 4), // attn TP4, experts EP4
+        plan(2, 1, 2),
+        plan(1, 4, 1), // attn TP1 (DP4 groups), experts TP4
+        // Hybrid EP2×TP2 experts on the 4-device grid: runs the
+        // EP-family artifact on inter-padded shards — must be exact.
+        plan(4, 2, 2),
+        // DP×TP attention: each DP group runs the padded sub-batch.
+        ShardPlan::new(AttnStrategy::new(2, 2), ExpertStrategy::new(4, 1)),
     ];
     for v in variants {
         let mut exec = ModelExecutor::new(&rt).unwrap();
@@ -81,9 +97,8 @@ fn prefill_logits_invariant_across_strategies() {
         let d = max_abs_diff(&base.data, &got.data);
         assert!(
             d < 1e-3,
-            "strategy attn_tp{} expert {} diverges from TP1: max|Δ|={d}",
-            v.attn_tp,
-            v.expert_label()
+            "strategy {} diverges from TP1: max|Δ|={d}",
+            v.label()
         );
     }
 }
@@ -97,7 +112,7 @@ fn greedy_decode_consistent_and_transition_preserves_tokens() {
     let steps = 8;
 
     // Reference: static TP4 for both stages.
-    let run = |prefill_s: StageStrategy, decode_s: StageStrategy| -> Vec<Vec<usize>> {
+    let run = |prefill_s: ShardPlan, decode_s: ShardPlan| -> Vec<Vec<usize>> {
         let mut exec = ModelExecutor::new(&rt).unwrap();
         let logits = exec.prefill(&tokens, &prefill_s).unwrap();
         let mut out = vec![argmax_rows(&logits)];
@@ -111,13 +126,10 @@ fn greedy_decode_consistent_and_transition_preserves_tokens() {
         out
     };
 
-    let tp = run(StageStrategy::tp(4), StageStrategy::tp(4));
+    let tp = run(ShardPlan::tp(4), ShardPlan::tp(4));
     // HAP-style: EP4 experts for prefill, transition to TP4 for decode
     // (attention stays TP4 — pinned by the KV cache).
-    let hap = run(
-        StageStrategy { attn_tp: 4, expert: ExpertStrategy::new(1, 4) },
-        StageStrategy { attn_tp: 4, expert: ExpertStrategy::new(4, 1) },
-    );
+    let hap = run(plan(4, 1, 4), plan(4, 4, 1));
     assert_eq!(tp, hap, "dynamic parallelism transition changed generated tokens");
     assert_eq!(tp.len(), steps + 1);
     assert_eq!(tp[0].len(), b);
@@ -129,25 +141,31 @@ fn decode_positions_advance_and_cache_limits_enforced() {
     let rt = PjrtRuntime::load(dir).expect("load artifacts");
     let tokens = test_tokens(&rt);
     let mut exec = ModelExecutor::new(&rt).unwrap();
-    let s = StageStrategy::tp(2);
+    let s = ShardPlan::tp(2);
     exec.prefill(&tokens, &s).unwrap();
     assert_eq!(exec.pos, rt.manifest.model.prefill_len);
     let last = vec![1i32; rt.manifest.model.batch];
     exec.decode_step(&last, &s).unwrap();
     assert_eq!(exec.pos, rt.manifest.model.prefill_len + 1);
-    // Attention strategy is pinned.
-    let other = StageStrategy::tp(4);
+    // Attention strategy is pinned within a batch.
+    let other = ShardPlan::tp(4);
     assert!(exec.decode_step(&last, &other).is_err());
 }
 
 #[test]
-fn unsupported_strategies_rejected() {
+fn malformed_grids_rejected() {
     let Some(dir) = artifacts_dir() else { return };
     let rt = PjrtRuntime::load(dir).expect("load artifacts");
     let tokens = test_tokens(&rt);
     let mut exec = ModelExecutor::new(&rt).unwrap();
-    let bad = StageStrategy { attn_tp: 8, expert: ExpertStrategy::new(1, 1) };
+    // Attention spans 8 devices but experts span 1: not a uniform grid.
+    let bad = ShardPlan::new(AttnStrategy::new(8, 1), ExpertStrategy::new(1, 1));
     assert!(exec.prefill(&tokens, &bad).is_err());
-    let bad2 = StageStrategy { attn_tp: 2, expert: ExpertStrategy::new(2, 2) };
+    // Attention spans 2, experts span 4: mismatched device counts.
+    let bad2 = ShardPlan::new(AttnStrategy::new(2, 1), ExpertStrategy::new(2, 2));
     assert!(exec.prefill(&tokens, &bad2).is_err());
+    // Hybrid EP2×TP2 with matching device counts is a VALID grid now
+    // (the old executor rejected it): validate accepts it.
+    let hybrid = ShardPlan::new(AttnStrategy::new(4, 1), ExpertStrategy::new(2, 2));
+    assert!(exec.validate(&hybrid).is_ok());
 }
