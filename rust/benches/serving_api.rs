@@ -1,0 +1,176 @@
+//! §Serving-API benchmark — BENCH_serving_api.json at the repo root.
+//!
+//! Streaming engine (continuous batching) vs the gang-scheduled compat
+//! wrapper on a mixed short/long trace, artifact-free on the host grid
+//! engine: interleaved 2-token and 24-token requests make gang batches
+//! convoy behind their slowest member, while the streaming scheduler
+//! retires short requests and backfills their slots mid-decode.
+//! Reported: throughput, mean/p95 TTFT, mean/p95 latency, TPOT, slot
+//! occupancy, decode-step counts, and weight uploads (which must stay
+//! flat across iterations under the fixed plan). Token equality between
+//! the two modes is asserted before anything is timed.
+
+use hap::benchkit::{banner, write_results, Table};
+use hap::model::ModelExecutor;
+use hap::runtime::TinyModelMeta;
+use hap::serving::{serve_with, Metrics, Request, Scheduling, ServeConfig, ServeReport};
+use hap::util::json::Json;
+use hap::util::rng::Rng;
+
+const SHORT_GEN: usize = 2;
+const LONG_GEN: usize = 24;
+const REQUESTS: usize = 24;
+
+fn meta() -> TinyModelMeta {
+    TinyModelMeta::host_demo()
+}
+
+/// Interleaved short/long trace: every other request is a quick
+/// completion whose gang slot rides dead for `LONG_GEN - SHORT_GEN`
+/// decode steps.
+fn trace(m: &TinyModelMeta, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..REQUESTS as u64)
+        .map(|id| {
+            let len = rng.range(m.prefill_len / 2, m.prefill_len);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+            let gen = if id % 2 == 0 { SHORT_GEN } else { LONG_GEN };
+            Request::new(id, prompt, gen)
+        })
+        .collect()
+}
+
+fn run(scheduling: Scheduling, seed: u64) -> ServeReport {
+    let m = meta();
+    let weights = hap::model::WeightStore::synthetic(&m, 42);
+    let mut exec = ModelExecutor::host(weights);
+    let config = ServeConfig::tp(4);
+    serve_with(&mut exec, &config, scheduling, trace(&m, seed)).unwrap()
+}
+
+fn row(t: &mut Table, name: &str, m: &Metrics) {
+    t.row(&[
+        name.into(),
+        format!("{:.1}", m.throughput()),
+        format!("{:.1}", m.mean_ttft() * 1e3),
+        format!("{:.1}", m.ttft_p(95.0) * 1e3),
+        format!("{:.1}", m.mean_latency() * 1e3),
+        format!("{:.1}", m.latency_p(95.0) * 1e3),
+        format!("{:.0}%", m.mean_occupancy() * 100.0),
+        format!("{}", m.decode_steps),
+    ]);
+}
+
+fn metrics_json(m: &Metrics) -> Json {
+    Json::obj(vec![
+        ("throughput_tok_s", m.throughput().into()),
+        ("ttft_mean_s", m.mean_ttft().into()),
+        ("ttft_p95_s", m.ttft_p(95.0).into()),
+        ("latency_mean_s", m.mean_latency().into()),
+        ("latency_p95_s", m.latency_p(95.0).into()),
+        ("tpot_p50_s", m.tpot_p(50.0).into()),
+        ("occupancy", m.mean_occupancy().into()),
+        ("decode_steps", m.decode_steps.into()),
+        ("weight_uploads", m.weight_uploads.into()),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    banner(
+        "serving_api",
+        "streaming engine vs gang scheduling on a mixed short/long trace",
+    );
+
+    // Correctness gate before timing: same tokens either way.
+    let gang0 = run(Scheduling::Gang, 3);
+    let stream0 = run(Scheduling::Streaming, 3);
+    let key = |r: &ServeReport| {
+        let mut t: Vec<(u64, Vec<i32>)> =
+            r.responses.iter().map(|x| (x.id, x.tokens.clone())).collect();
+        t.sort();
+        t
+    };
+    assert_eq!(key(&gang0), key(&stream0), "scheduling changed generated tokens");
+    println!("streaming == gang tokens (bit-identical per request)");
+
+    // Timed runs (fresh executors; cold shard upload included in both).
+    let gang = run(Scheduling::Gang, 17);
+    let streaming = run(Scheduling::Streaming, 17);
+
+    let mut t = Table::new(&[
+        "engine",
+        "tok/s",
+        "ttft mean (ms)",
+        "ttft p95 (ms)",
+        "lat mean (ms)",
+        "lat p95 (ms)",
+        "occupancy",
+        "decode steps",
+    ]);
+    row(&mut t, "gang", &gang.metrics);
+    row(&mut t, "streaming", &streaming.metrics);
+    t.print();
+
+    let gm = &gang.metrics;
+    let sm = &streaming.metrics;
+    // The acceptance bar: convoy elimination shows up as better mean
+    // TTFT and better tail latency on the mixed trace, with weight
+    // uploads flat (one layout's worth) for both fixed-plan runs.
+    assert!(
+        sm.mean_ttft() < gm.mean_ttft(),
+        "streaming mean TTFT {:.4}s not better than gang {:.4}s",
+        sm.mean_ttft(),
+        gm.mean_ttft()
+    );
+    assert!(
+        sm.latency_p(95.0) < gm.latency_p(95.0),
+        "streaming p95 latency {:.4}s not better than gang {:.4}s",
+        sm.latency_p(95.0),
+        gm.latency_p(95.0)
+    );
+    assert_eq!(
+        sm.weight_uploads, gm.weight_uploads,
+        "fixed-plan runs must upload exactly one layout's worth of shards"
+    );
+    println!(
+        "mean TTFT {:.2}x better, p95 latency {:.2}x better, {} vs {} decode steps",
+        gm.mean_ttft() / sm.mean_ttft(),
+        gm.latency_p(95.0) / sm.latency_p(95.0),
+        sm.decode_steps,
+        gm.decode_steps,
+    );
+
+    let summary = Json::obj(vec![
+        ("bench", "serving_api".into()),
+        ("profile", "release".into()),
+        (
+            "trace",
+            Json::obj(vec![
+                ("requests", REQUESTS.into()),
+                ("short_gen", SHORT_GEN.into()),
+                ("long_gen", LONG_GEN.into()),
+                ("batch_slots", meta().batch.into()),
+            ]),
+        ),
+        ("gang", metrics_json(gm)),
+        ("streaming", metrics_json(sm)),
+        (
+            "improvement",
+            Json::obj(vec![
+                ("ttft_mean", (gm.mean_ttft() / sm.mean_ttft()).into()),
+                ("latency_p95", (gm.latency_p(95.0) / sm.latency_p(95.0)).into()),
+                ("throughput", (sm.throughput() / gm.throughput().max(1e-12)).into()),
+            ]),
+        ),
+    ]);
+    write_results("serving_api", &summary);
+    let root_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_serving_api.json");
+    if let Err(e) = std::fs::write(&root_path, summary.to_string_pretty()) {
+        eprintln!("could not write {}: {e}", root_path.display());
+    } else {
+        println!("wrote {}", root_path.display());
+    }
+    println!("serving_api bench OK");
+    Ok(())
+}

@@ -26,6 +26,12 @@
 //! The structural invariant (asserted by the no-thrash property tests):
 //! the controller **never** switches when the projected dwell-time
 //! savings fail to cover `breakeven_factor ×` the switch cost.
+//!
+//! "Batches" here means *consult boundaries*: the gang scheduler steps
+//! the controller once per packed batch, the streaming engine once per
+//! admission boundary. Dwell estimates, debounce, and cooldown all
+//! count in whichever cadence the caller runs — the economics are
+//! unitless ratios of predicted latencies to switch cost either way.
 
 use crate::adapt::window::QuantizedScenario;
 use crate::planner::HybridPlan;

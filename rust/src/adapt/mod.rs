@@ -29,9 +29,13 @@
 //!   static vs oracle comparisons run deterministically without PJRT
 //!   artifacts.
 //!
-//! The serving loop consumes the same parts through
-//! [`crate::serving::ServeConfig::adaptive`], and the `hap adapt-replay`
-//! CLI command drives [`replay::compare`] directly.
+//! The serving [`crate::serving::Engine`] consumes the same parts
+//! through [`crate::serving::ServeConfig::adaptive`] — consulted at
+//! **iteration granularity**: every admission boundary of the streaming
+//! scheduler (each batch, in the legacy gang mode). The controller's
+//! dwell estimates are therefore denominated in consult boundaries,
+//! whichever cadence the caller runs. The `hap adapt-replay` CLI
+//! command drives [`replay::compare`] directly.
 
 pub mod cache;
 pub mod controller;

@@ -15,7 +15,10 @@
 //!   built on a device-grid execution engine (`ShardPlan` →
 //!   `DeviceGrid` roles + collectives) that runs hybrid EP×TP / DP×TP
 //!   plans either on AOT-compiled JAX/Pallas artifacts through PJRT
-//!   ([`runtime`]) or artifact-free on host kernels.
+//!   ([`runtime`]) or artifact-free on host kernels. The public serving
+//!   surface is the streaming [`serving::Engine`]: continuous batching
+//!   with per-slot KV join/leave and in-flight plan switches at
+//!   iteration granularity.
 //! - **L2 (python/compile/model.py)** — the tiny-MoE JAX model, lowered
 //!   once to HLO text (`artifacts/*.hlo.txt`).
 //! - **L1 (python/compile/kernels/)** — Pallas kernels (expert FFN,

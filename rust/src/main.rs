@@ -6,7 +6,10 @@
 //!   sweep       Speedup table across scenarios/platforms (Fig 4–9).
 //!   serve       Serve a synthetic workload on the tiny-MoE grid
 //!               engine (PJRT artifacts, or --backend host for the
-//!               artifact-free host kernels) under a chosen plan.
+//!               artifact-free host kernels) under a chosen plan;
+//!               --engine streaming runs the continuous-batching
+//!               session engine, --engine gang the legacy
+//!               run-to-completion scheduler.
 //!   quant-eval  Quantization scheme quality report (Table I).
 //!   microbench  η/ρ simulation-model accuracy (Fig 5).
 
@@ -61,7 +64,8 @@ fn print_help() {
          plan        search the optimal hybrid parallel strategy (ILP)\n  \
          breakdown   per-layer latency breakdown TP vs EP (Fig 2)\n  \
          sweep       HAP vs TP speedups across scenarios (Fig 4/6/7/9)\n  \
-         serve       serve a workload on the tiny-MoE grid engine (pjrt or host backend)\n  \
+         serve       serve a workload on the tiny-MoE grid engine (pjrt or host backend;\n              \
+                     --engine streaming|gang picks continuous batching vs run-to-completion)\n  \
          adapt-replay  replay a traffic trace: adaptive vs static vs oracle\n  \
          quant-eval  INT4 scheme quality (Table I)\n  \
          microbench  η/ρ simulation-model accuracy (Fig 5)\n\n\
@@ -234,12 +238,20 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "pjrt",
         "execution backend: pjrt (AOT artifacts) | host (grid engine on synthetic weights)",
     );
+    spec.flag(
+        "engine",
+        "gang",
+        "scheduler: gang (batch run-to-completion) | streaming (continuous batching; host backend)",
+    );
     spec.flag("requests", "16", "number of requests");
     spec.flag("gen", "16", "tokens to generate per request");
     spec.flag("plan", "hap", "plan: hap | tp | adaptive");
     spec.flag("tp", "4", "device count (attention TP degree)");
     spec.flag("plan-cache", "", "persist the adaptive plan cache at this path");
     let p = spec.parse(args).map_err(anyhow::Error::msg)?;
+
+    let scheduling = hap::serving::Scheduling::parse(p.get("engine"))
+        .ok_or_else(|| anyhow::anyhow!("unknown engine '{}' (gang | streaming)", p.get("engine")))?;
 
     let n = usize_flag(&p, "tp")?;
     let make_config = |meta: &hap::runtime::TinyModelMeta| -> anyhow::Result<ServeConfig> {
@@ -280,6 +292,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
 
     let report = match p.get("backend") {
         "pjrt" => {
+            if scheduling == hap::serving::Scheduling::Streaming {
+                anyhow::bail!(
+                    "--engine streaming requires --backend host: the fixed-shape PJRT \
+                     artifacts pin one scalar decode position per batch"
+                );
+            }
             let dir = Path::new(p.get("artifacts"));
             let rt = hap::runtime::PjrtRuntime::load(dir)?;
             let m = rt.manifest.model.clone();
@@ -300,12 +318,13 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             let mut exec = hap::model::ModelExecutor::host(weights);
             let config = make_config(&meta)?;
             println!(
-                "serving {} requests ({} plan: {}) on the host grid engine ...",
+                "serving {} requests ({} plan: {}, {} engine) on the host grid engine ...",
                 nreq,
                 p.get("plan"),
-                config.label()
+                config.label(),
+                p.get("engine"),
             );
-            hap::serving::serve_on(&mut exec, &config, make_workload(&meta))?
+            hap::serving::serve_with(&mut exec, &config, scheduling, make_workload(&meta))?
         }
         other => anyhow::bail!("unknown backend '{other}' (pjrt | host)"),
     };

@@ -122,11 +122,17 @@ pub struct ModelExecutor<'rt> {
     /// Current sequence position (tokens stored so far).
     pub pos: usize,
     /// Attention strategy pinned by the live KV caches (set by
-    /// `prefill`, enforced by `decode_step`, released per batch).
+    /// `prefill`/`begin_session`, enforced by the decode paths).
     attn: Option<AttnStrategy>,
     /// Plans `begin_batch` validated and made resident — lets the
     /// per-token path skip re-validation and the residency scan.
     batch_plans: Option<(ShardPlan, ShardPlan)>,
+    /// Streaming-session slot state (host backend): per-slot sequence
+    /// positions and liveness. Valid while `session` is true; gang
+    /// `prefill` tears the session down.
+    slot_pos: Vec<usize>,
+    slot_live: Vec<bool>,
+    session: bool,
     stats: ExecStats,
 }
 
@@ -145,6 +151,9 @@ impl<'rt> ModelExecutor<'rt> {
             pos: 0,
             attn: None,
             batch_plans: None,
+            slot_pos: Vec::new(),
+            slot_live: Vec::new(),
+            session: false,
             stats: ExecStats::default(),
         })
     }
@@ -168,6 +177,9 @@ impl<'rt> ModelExecutor<'rt> {
             pos: 0,
             attn: None,
             batch_plans: None,
+            slot_pos: Vec::new(),
+            slot_live: Vec::new(),
+            session: false,
             stats: ExecStats::default(),
         }
     }
@@ -252,6 +264,9 @@ impl<'rt> ModelExecutor<'rt> {
             self.devices = (0..n).map(DeviceState::new).collect();
             self.attn = None;
             self.batch_plans = None;
+            self.session = false;
+            self.slot_pos.clear();
+            self.slot_live.clear();
         }
     }
 
@@ -329,6 +344,9 @@ impl<'rt> ModelExecutor<'rt> {
         let grid = DeviceGrid::lower(plan)?;
         self.attn = Some(plan.attn);
         self.pos = 0;
+        // Gang prefill owns the whole batch: any streaming session's
+        // per-slot KV is torn down with the caches below.
+        self.session = false;
         for st in &mut self.devices {
             st.kv = (0..m.layers).map(|_| None).collect();
         }
@@ -361,6 +379,9 @@ impl<'rt> ModelExecutor<'rt> {
         if plan.attn != pinned {
             anyhow::bail!("attention strategy is pinned by the KV cache ({pinned})");
         }
+        if self.session {
+            anyhow::bail!("executor holds a streaming session; use decode_slots");
+        }
         // Per-token fast path: plans declared via `begin_batch` are
         // already validated and resident.
         if !self.plan_ready(plan) {
@@ -377,6 +398,294 @@ impl<'rt> ModelExecutor<'rt> {
             x.add_assign(&e_out);
         }
         self.pos += 1;
+        self.head(&x, &m)
+    }
+
+    // ---- Streaming session (per-slot KV join/leave) ---------------------
+
+    /// Start a streaming session: declare the (prefill, decode) plans,
+    /// allocate zeroed per-device KV caches for the whole slot range,
+    /// and reset per-slot state. Sequences then enter the live batch via
+    /// [`Self::claim_slot`] + [`Self::prefill_slot`] and leave via
+    /// [`Self::release_slot`] without resetting their peers.
+    ///
+    /// Host backend only: the fixed-shape PJRT artifacts take one
+    /// scalar decode position per batch, which cannot express per-slot
+    /// offsets (emitting per-slot-position artifacts is a ROADMAP
+    /// follow-on).
+    ///
+    /// A mid-session switch that keeps the attention layout (expert
+    /// resharding) needs no new session — call [`Self::begin_batch`]
+    /// with the new plans; KV caches are untouched. A switch that
+    /// changes the attention layout invalidates the KV sharding, so
+    /// callers drain the running set and call `begin_session` again.
+    pub fn begin_session(&mut self, prefill: &ShardPlan, decode: &ShardPlan) -> Result<()> {
+        if matches!(self.backend, Backend::Pjrt(_)) {
+            anyhow::bail!(
+                "streaming sessions need per-slot decode positions; the fixed-shape PJRT \
+                 artifacts pin one scalar position per batch — use the host backend"
+            );
+        }
+        self.begin_batch(prefill, decode)?;
+        let m = self.meta().clone();
+        let t = prefill.attn.tp;
+        let kv_l = (m.kv_heads / t).max(1);
+        let bg = m.batch / prefill.attn.dp;
+        for st in &mut self.devices {
+            st.kv = (0..m.layers)
+                .map(|_| {
+                    Some(LayerCache {
+                        k: HostTensor::zeros(vec![bg, m.max_len, kv_l, m.head_dim]),
+                        v: HostTensor::zeros(vec![bg, m.max_len, kv_l, m.head_dim]),
+                    })
+                })
+                .collect();
+        }
+        self.attn = Some(prefill.attn);
+        self.pos = 0;
+        self.slot_pos = vec![0; m.batch];
+        self.slot_live = vec![false; m.batch];
+        self.session = true;
+        Ok(())
+    }
+
+    /// True while a streaming session's per-slot KV is live.
+    pub fn in_session(&self) -> bool {
+        self.session
+    }
+
+    /// Per-slot sequence positions (tokens stored so far).
+    pub fn slot_positions(&self) -> &[usize] {
+        &self.slot_pos
+    }
+
+    /// Per-slot liveness flags.
+    pub fn slot_liveness(&self) -> &[bool] {
+        &self.slot_live
+    }
+
+    /// Number of unclaimed slots in the current session.
+    pub fn free_slots(&self) -> usize {
+        if !self.session {
+            return 0;
+        }
+        self.slot_live.iter().filter(|&&l| !l).count()
+    }
+
+    /// Claim the first free batch slot for a joining sequence. Returns
+    /// `None` when the session is full (or no session is active).
+    pub fn claim_slot(&mut self) -> Option<usize> {
+        if !self.session {
+            return None;
+        }
+        let slot = self.slot_live.iter().position(|&l| !l)?;
+        self.slot_live[slot] = true;
+        self.slot_pos[slot] = 0;
+        Some(slot)
+    }
+
+    /// Retire a slot: zero its KV rows (isolation — the next occupant
+    /// starts from a clean cache) and mark it free. Peers are untouched.
+    pub fn release_slot(&mut self, slot: usize) -> Result<()> {
+        if !self.session || slot >= self.slot_live.len() {
+            anyhow::bail!("release of slot {slot} outside an active session");
+        }
+        if !self.slot_live[slot] {
+            anyhow::bail!("release of unclaimed slot {slot}");
+        }
+        let attn = self.attn.ok_or_else(|| anyhow!("session has no pinned attention"))?;
+        // Same group membership source as prefill_slot/decode_slots:
+        // the lowered grid's roles, never a re-derived index formula.
+        let (session_prefill, _) = self
+            .batch_plans
+            .ok_or_else(|| anyhow!("session has no resident plans"))?;
+        let grid = DeviceGrid::lower(&session_prefill)?;
+        let bg = self.slot_live.len() / attn.dp;
+        let (g, r) = (slot / bg, slot % bg);
+        for st in &mut self.devices {
+            if grid.roles[st.device].dp_rank != g {
+                continue;
+            }
+            for cache in st.kv.iter_mut().flatten() {
+                let rowlen: usize = cache.k.shape[1..].iter().product();
+                cache.k.data[r * rowlen..(r + 1) * rowlen].fill(0.0);
+                cache.v.data[r * rowlen..(r + 1) * rowlen].fill(0.0);
+            }
+        }
+        self.slot_live[slot] = false;
+        self.slot_pos[slot] = 0;
+        Ok(())
+    }
+
+    /// Chunked prefill for a joiner: run one padded prompt (`[S]`
+    /// tokens) through the model in batch slot `slot`, writing its KV
+    /// at positions `0..S` while every other slot's state stays intact.
+    /// Returns the slot's last-position logits `[1, V]`.
+    pub fn prefill_slot(
+        &mut self,
+        slot: usize,
+        tokens: &[i32],
+        plan: &ShardPlan,
+    ) -> Result<HostTensor> {
+        if matches!(self.backend, Backend::Pjrt(_)) {
+            anyhow::bail!("prefill_slot runs on the host backend only (see begin_session)");
+        }
+        let m = self.meta().clone();
+        let s = m.prefill_len;
+        if tokens.len() != s {
+            anyhow::bail!("prefill_slot expects {} tokens, got {}", s, tokens.len());
+        }
+        if !self.session {
+            anyhow::bail!("prefill_slot outside a session (call begin_session)");
+        }
+        if !self.slot_live.get(slot).copied().unwrap_or(false) {
+            anyhow::bail!("slot {slot} not claimed");
+        }
+        if self.slot_pos[slot] != 0 {
+            anyhow::bail!("slot {slot} already prefilled");
+        }
+        let pinned = self.attn.ok_or_else(|| anyhow!("session has no pinned attention"))?;
+        if plan.attn != pinned {
+            anyhow::bail!("attention strategy is pinned by the session KV layout ({pinned})");
+        }
+        if !self.plan_ready(plan) {
+            self.validate(plan)?;
+            self.ensure_resident(plan)?;
+        }
+        let grid = DeviceGrid::lower(plan)?;
+        let t = plan.attn.tp;
+        let q_l = m.q_heads / t;
+        let kv_l = (m.kv_heads / t).max(1);
+        let bg = m.batch / plan.attn.dp;
+        let (g, r) = (slot / bg, slot % bg);
+
+        let mut x = self.embed(tokens, 1, s, &m)?;
+        for l in 0..m.layers {
+            let a_out = {
+                let roles = &grid.roles;
+                let fam = attn_family(&plan.attn);
+                let hd = m.head_dim;
+                let xr = &x;
+                // Only the slot's DP group computes (and stores KV);
+                // the row's output is the group's TP partial-sum, folded
+                // in the same member order as the gang combine.
+                let outs: Vec<Option<HostTensor>> =
+                    map_devices(self.mode, &mut self.devices, |st| {
+                        let role = roles[st.device];
+                        if role.dp_rank != g {
+                            return Ok(None);
+                        }
+                        let w = st
+                            .shards
+                            .get(&(fam.clone(), l))
+                            .ok_or_else(|| anyhow!("attn shard not resident"))?;
+                        let (out, k, v) =
+                            kernels::attention_prefill(xr, w, q_l, kv_l, hd)?;
+                        let cache = st.kv[l]
+                            .as_mut()
+                            .ok_or_else(|| anyhow!("session KV missing"))?;
+                        write_slot_kv(cache, r, &k, &v);
+                        Ok(Some(out))
+                    })?;
+                // Same order-deterministic fold as the gang combine.
+                collectives::apply(&grid.attn_reduce[g], &outs)?
+            };
+            x.add_assign(&a_out);
+            let e_out = self.expert_layer(&x, l, &grid, &m, "prefill")?;
+            x.add_assign(&e_out);
+        }
+        self.slot_pos[slot] = s;
+        self.head(&x, &m)
+    }
+
+    /// One decode iteration over the live slots: each claimed slot
+    /// advances by one token at its own position; free slots are
+    /// skipped by attention (no KV read/write, zero attention output)
+    /// but still ride through the shared embed/expert/head math, so
+    /// their logits rows contain values — callers must consult
+    /// [`Self::slot_liveness`] and ignore non-live rows. `last_tokens`
+    /// is the full `[B]` table (entries for free slots are ignored).
+    /// Returns logits `[B, V]`.
+    pub fn decode_slots(&mut self, last_tokens: &[i32], plan: &ShardPlan) -> Result<HostTensor> {
+        if matches!(self.backend, Backend::Pjrt(_)) {
+            anyhow::bail!("decode_slots runs on the host backend only (see begin_session)");
+        }
+        let m = self.meta().clone();
+        let b = m.batch;
+        if last_tokens.len() != b {
+            anyhow::bail!("decode_slots expects {} tokens, got {}", b, last_tokens.len());
+        }
+        if !self.session {
+            anyhow::bail!("decode_slots outside a session (call begin_session)");
+        }
+        let pinned = self.attn.ok_or_else(|| anyhow!("session has no pinned attention"))?;
+        if plan.attn != pinned {
+            anyhow::bail!("attention strategy is pinned by the session KV layout ({pinned})");
+        }
+        for slot in 0..b {
+            if self.slot_live[slot] {
+                if self.slot_pos[slot] == 0 {
+                    anyhow::bail!("slot {slot} decoded before prefill");
+                }
+                if self.slot_pos[slot] >= m.max_len {
+                    anyhow::bail!("KV cache exhausted for slot {slot}");
+                }
+            }
+        }
+        if !self.plan_ready(plan) {
+            self.validate(plan)?;
+            self.ensure_resident(plan)?;
+        }
+        let grid = DeviceGrid::lower(plan)?;
+        let t = plan.attn.tp;
+        let q_l = m.q_heads / t;
+        let kv_l = (m.kv_heads / t).max(1);
+        let bg = b / plan.attn.dp;
+        let slot_pos = self.slot_pos.clone();
+        let slot_live = self.slot_live.clone();
+
+        let mut x = self.embed(last_tokens, b, 1, &m)?;
+        for l in 0..m.layers {
+            let a_out = {
+                let roles = &grid.roles;
+                let fam = attn_family(&plan.attn);
+                let hd = m.head_dim;
+                let xr = &x;
+                let pos_ref = &slot_pos;
+                let live_ref = &slot_live;
+                let outs = map_devices(self.mode, &mut self.devices, |st| {
+                    let role = roles[st.device];
+                    let xg = xr.slice_outer(role.dp_rank * bg, bg);
+                    let cache = st.kv[l]
+                        .as_mut()
+                        .ok_or_else(|| anyhow!("session KV missing"))?;
+                    let w = st
+                        .shards
+                        .get(&(fam.clone(), l))
+                        .ok_or_else(|| anyhow!("attn shard not resident"))?;
+                    kernels::attention_decode_slots(
+                        &xg,
+                        &mut cache.k,
+                        &mut cache.v,
+                        &pos_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
+                        &live_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
+                        w,
+                        q_l,
+                        kv_l,
+                        hd,
+                    )
+                })?;
+                combine_attn(&grid, outs)?
+            };
+            x.add_assign(&a_out);
+            let e_out = self.expert_layer(&x, l, &grid, &m, "decode")?;
+            x.add_assign(&e_out);
+        }
+        for slot in 0..b {
+            if self.slot_live[slot] {
+                self.slot_pos[slot] += 1;
+            }
+        }
         self.head(&x, &m)
     }
 
@@ -623,9 +932,10 @@ impl<'rt> ModelExecutor<'rt> {
         Ok(HostTensor::new(x.shape.clone(), out.data))
     }
 
-    /// Final norm + unembed on the last position.
+    /// Final norm + unembed on the last position. Batch size comes from
+    /// `x` (a joiner's slot prefill runs a single row through here).
     fn head(&mut self, x: &HostTensor, m: &TinyModelMeta) -> Result<HostTensor> {
-        let (b, h, v) = (m.batch, m.hidden, m.vocab);
+        let (b, h, v) = (x.shape[0], m.hidden, m.vocab);
         let s = x.shape[1];
         let mut last = Vec::with_capacity(b * h);
         for bi in 0..b {
@@ -718,6 +1028,19 @@ fn combine_attn(grid: &DeviceGrid, outs: Vec<HostTensor>) -> Result<HostTensor> 
     collectives::apply(&grid.batch_split, &leaders)
 }
 
+/// Write a joiner's prefill KV (`[1, S, KVH_l, D]`) into row `row` of a
+/// session cache (`[B_g, M, KVH_l, D]`) at positions `0..S`. Positions
+/// `S..M` of the row were zeroed at session start / release, and only
+/// `0..=pos` is ever attended, so no further clearing is needed.
+fn write_slot_kv(cache: &mut LayerCache, row: usize, k: &HostTensor, v: &HostTensor) {
+    let (s, kvh, d) = (k.shape[1], k.shape[2], k.shape[3]);
+    let m = cache.k.shape[1];
+    let rowlen = kvh * d;
+    let dst = row * m * rowlen;
+    cache.k.data[dst..dst + s * rowlen].copy_from_slice(&k.data[..s * rowlen]);
+    cache.v.data[dst..dst + s * rowlen].copy_from_slice(&v.data[..s * rowlen]);
+}
+
 /// Pad a [B, S, KVH, D] prefill cache to [B, M, KVH, D] with zeros.
 fn pad_cache(c: &HostTensor, max_len: usize) -> HostTensor {
     let (b, s, kvh, d) = (c.shape[0], c.shape[1], c.shape[2], c.shape[3]);
@@ -806,6 +1129,37 @@ mod tests {
         let hy = ShardPlan::new(AttnStrategy::new(4, 1), ExpertStrategy::new(2, 2));
         assert_eq!(expert_family(&hy), "expert_ep2tp2");
         assert_eq!(expert_family(&ShardPlan::tp(4)), "expert_ep1tp4");
+    }
+
+    #[test]
+    fn session_slot_lifecycle_and_guards() {
+        let m = crate::runtime::TinyModelMeta::host_demo();
+        let w = crate::model::WeightStore::synthetic(&m, 1);
+        let mut exec = ModelExecutor::host_with_mode(w, EngineMode::Sequential);
+        let plan = ShardPlan::tp(4);
+        assert!(exec.claim_slot().is_none(), "no session yet");
+        exec.begin_session(&plan, &plan).unwrap();
+        assert!(exec.in_session());
+        assert_eq!(exec.free_slots(), m.batch);
+        let s0 = exec.claim_slot().unwrap();
+        assert_eq!(s0, 0);
+        assert_eq!(exec.free_slots(), m.batch - 1);
+        let toks: Vec<i32> = (0..m.prefill_len as i32).collect();
+        // Decode before the slot's prefill is rejected.
+        assert!(exec.decode_slots(&vec![0; m.batch], &plan).is_err());
+        let logits = exec.prefill_slot(s0, &toks, &plan).unwrap();
+        assert_eq!(logits.shape, vec![1, m.vocab]);
+        assert!(exec.prefill_slot(s0, &toks, &plan).is_err(), "double prefill");
+        assert_eq!(exec.slot_positions()[s0], m.prefill_len);
+        exec.decode_slots(&vec![1; m.batch], &plan).unwrap();
+        assert_eq!(exec.slot_positions()[s0], m.prefill_len + 1);
+        exec.release_slot(s0).unwrap();
+        assert!(exec.release_slot(s0).is_err(), "double release");
+        assert_eq!(exec.free_slots(), m.batch);
+        // Gang prefill tears the session down.
+        exec.prefill(&vec![1; m.batch * m.prefill_len], &plan).unwrap();
+        assert!(!exec.in_session());
+        assert!(exec.claim_slot().is_none());
     }
 
     #[test]

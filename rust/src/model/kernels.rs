@@ -263,6 +263,11 @@ pub fn attention_prefill(
 /// new token writes at index `pos` and positions `0..=pos` are attended.
 /// Updates the caches in place (device-resident state) and returns the
 /// partial output `[B, 1, H]`.
+///
+/// Delegates to [`attention_decode_slots`] with every row active at the
+/// same position, so the gang path and the streaming per-slot path
+/// share one copy of the float-order-sensitive attention math — the
+/// engine's per-request bit-equivalence holds by construction.
 pub fn attention_decode(
     x: &HostTensor,
     k_cache: &mut HostTensor,
@@ -273,29 +278,72 @@ pub fn attention_decode(
     kv_heads: usize,
     hd: usize,
 ) -> Result<HostTensor> {
-    let (b, h) = (x.shape[0], x.shape[2]);
+    let b = x.shape[0];
     let m = k_cache.shape[1];
     if pos >= m {
         anyhow::bail!("decode position {pos} outside KV budget {m}");
+    }
+    attention_decode_slots(
+        x,
+        k_cache,
+        v_cache,
+        &vec![pos; b],
+        &vec![true; b],
+        shard,
+        q_heads,
+        kv_heads,
+        hd,
+    )
+}
+
+/// One decode step with **per-slot positions** against a padded KV
+/// cache (`[B, M, KVH_l, D]`): row `bi` writes its new token at
+/// `pos[bi]` and attends positions `0..=pos[bi]`. Rows with
+/// `active[bi] == false` are skipped entirely — their KV rows are not
+/// touched and their output rows are zero. This is the continuous-
+/// batching variant of [`attention_decode`]: because every kernel in
+/// the stack is row-independent, an active row computes bit-identically
+/// to a gang-scheduled batch whose global position equals that row's
+/// `pos[bi]`, regardless of what the other slots are doing.
+pub fn attention_decode_slots(
+    x: &HostTensor,
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    pos: &[usize],
+    active: &[bool],
+    shard: &[HostTensor],
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<HostTensor> {
+    let (b, h) = (x.shape[0], x.shape[2]);
+    let m = k_cache.shape[1];
+    if pos.len() != b || active.len() != b {
+        anyhow::bail!("slot decode expects {b} positions/activity flags");
+    }
+    let rep = q_heads / kv_heads;
+    if rep * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
     }
     let xn = rms_norm(x, &shard[0]);
     let q = matmul(&xn.data, b, h, &shard[1].data, q_heads * hd);
     let k_new = matmul(&xn.data, b, h, &shard[2].data, kv_heads * hd);
     let v_new = matmul(&xn.data, b, h, &shard[3].data, kv_heads * hd);
     let row = kv_heads * hd;
-    for bi in 0..b {
-        let dst = (bi * m + pos) * row;
-        k_cache.data[dst..dst + row].copy_from_slice(&k_new[bi * row..(bi + 1) * row]);
-        v_cache.data[dst..dst + row].copy_from_slice(&v_new[bi * row..(bi + 1) * row]);
-    }
-    let rep = q_heads / kv_heads;
-    if rep * kv_heads != q_heads {
-        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
-    }
     let scale = 1.0 / (hd as f32).sqrt();
     let mut ctx = vec![0f32; b * q_heads * hd];
-    let mut scores = vec![0f32; pos + 1];
     for bi in 0..b {
+        if !active[bi] {
+            continue;
+        }
+        let p = pos[bi];
+        if p >= m {
+            anyhow::bail!("slot {bi} decode position {p} outside KV budget {m}");
+        }
+        let dst = (bi * m + p) * row;
+        k_cache.data[dst..dst + row].copy_from_slice(&k_new[bi * row..(bi + 1) * row]);
+        v_cache.data[dst..dst + row].copy_from_slice(&v_new[bi * row..(bi + 1) * row]);
+        let mut scores = vec![0f32; p + 1];
         for head in 0..q_heads {
             let kvh = head / rep;
             let qoff = (bi * q_heads + head) * hd;
@@ -317,10 +365,10 @@ pub fn attention_decode(
                 denom += *sc;
             }
             for (ki, sc) in scores.iter().enumerate() {
-                let p = sc / denom;
+                let p_attn = sc / denom;
                 let voff = (bi * m + ki) * row + kvh * hd;
                 for d in 0..hd {
-                    ctx[qoff + d] += p * v_cache.data[voff + d];
+                    ctx[qoff + d] += p_attn * v_cache.data[voff + d];
                 }
             }
         }
@@ -409,6 +457,60 @@ mod tests {
         for (a, b) in full.data.iter().zip(&got.data) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn slot_decode_matches_gang_decode_and_skips_inactive_rows() {
+        // b=2, one head, hd=1: row 0 decoded via the per-slot kernel at
+        // the same position as a gang decode must be bit-identical; the
+        // inactive row 1 must leave its KV untouched and output zero.
+        let ln = HostTensor::new(vec![2], vec![1.0, 1.0]);
+        let wq = HostTensor::new(vec![2, 1], vec![0.4, -0.1]);
+        let wk = HostTensor::new(vec![2, 1], vec![0.2, 0.3]);
+        let wv = HostTensor::new(vec![2, 1], vec![1.0, -0.5]);
+        let wo = HostTensor::new(vec![1, 2], vec![1.0, 0.7]);
+        let shard = [ln, wq, wk, wv, wo];
+        let x = HostTensor::new(vec![2, 1, 2], vec![3.0, -1.0, 0.5, 2.0]);
+        let mut kc = HostTensor::new(vec![2, 4, 1, 1], (0..8).map(|i| 0.1 * i as f32).collect());
+        let mut vc = HostTensor::new(vec![2, 4, 1, 1], (0..8).map(|i| 0.2 * i as f32).collect());
+        let mut kc_gang = kc.clone();
+        let mut vc_gang = vc.clone();
+        let gang =
+            attention_decode(&x, &mut kc_gang, &mut vc_gang, 2, &shard, 1, 1, 1).unwrap();
+        let slots = attention_decode_slots(
+            &x,
+            &mut kc,
+            &mut vc,
+            &[2, 3],
+            &[true, false],
+            &shard,
+            1,
+            1,
+            1,
+        )
+        .unwrap();
+        assert_eq!(slots.shape, gang.shape);
+        // Output row 0 ([2,1,2] → data[0..2]) is bit-identical.
+        assert_eq!(slots.data[0].to_bits(), gang.data[0].to_bits());
+        assert_eq!(slots.data[1].to_bits(), gang.data[1].to_bits());
+        assert_eq!(&slots.data[2..4], &[0.0, 0.0], "inactive row must output zero");
+        // Active row 0 wrote position 2; inactive row 1 wrote nothing.
+        assert_eq!(kc.data[..4], kc_gang.data[..4]);
+        assert_eq!(kc.data[4..], (4..8).map(|i| 0.1 * i as f32).collect::<Vec<_>>()[..]);
+        assert_eq!(vc.data[4..], (4..8).map(|i| 0.2 * i as f32).collect::<Vec<_>>()[..]);
+        // Out-of-budget position errors.
+        assert!(attention_decode_slots(
+            &x,
+            &mut kc,
+            &mut vc,
+            &[9, 0],
+            &[true, false],
+            &shard,
+            1,
+            1,
+            1
+        )
+        .is_err());
     }
 
     #[test]

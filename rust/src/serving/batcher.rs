@@ -53,6 +53,21 @@ impl Batcher {
         Batcher { batch, prompt_len, max_new_tokens }
     }
 
+    /// Pack ONE request: the left-padded prompt row (`[S]` tokens) and
+    /// the capped generation budget. The shared primitive of the gang
+    /// batch packer and the streaming engine's chunked slot prefill —
+    /// one padding rule means a request's model inputs are identical
+    /// under either scheduler (the bit-equivalence precondition).
+    pub fn pack_one(&self, req: &Request) -> (Vec<i32>, usize) {
+        let mut row = vec![0i32; self.prompt_len];
+        let p = &req.prompt;
+        // Left-pad: place the prompt tail-aligned so the last position
+        // is the newest prompt token.
+        let n = p.len().min(self.prompt_len);
+        row[self.prompt_len - n..].copy_from_slice(&p[p.len() - n..]);
+        (row, req.max_new_tokens.min(self.max_new_tokens))
+    }
+
     /// Pack up to `batch` requests (fewer → padding slots).
     pub fn pack(&self, requests: Vec<Request>) -> Batch {
         assert!(!requests.is_empty(), "cannot pack an empty batch");
@@ -60,13 +75,10 @@ impl Batcher {
         let mut tokens = vec![0i32; self.batch * self.prompt_len];
         let mut remaining = vec![0usize; self.batch];
         for (slot, req) in requests.iter().enumerate() {
-            let p = &req.prompt;
-            // Left-pad: place the prompt tail-aligned so the last
-            // position is the newest prompt token.
-            let n = p.len().min(self.prompt_len);
-            let dst = slot * self.prompt_len + (self.prompt_len - n);
-            tokens[dst..dst + n].copy_from_slice(&p[p.len() - n..]);
-            remaining[slot] = req.max_new_tokens.min(self.max_new_tokens);
+            let (row, budget) = self.pack_one(req);
+            tokens[slot * self.prompt_len..(slot + 1) * self.prompt_len]
+                .copy_from_slice(&row);
+            remaining[slot] = budget;
         }
         Batch {
             requests,
@@ -118,5 +130,16 @@ mod tests {
     #[should_panic(expected = "empty batch")]
     fn empty_batch_rejected() {
         Batcher::new(2, 4, 8).pack(vec![]);
+    }
+
+    #[test]
+    fn pack_one_matches_batch_row() {
+        let b = Batcher::new(2, 8, 16);
+        let r = req(0, 3, 40);
+        let (row, budget) = b.pack_one(&r);
+        let batch = b.pack(vec![r]);
+        assert_eq!(&batch.tokens[..8], &row[..]);
+        assert_eq!(batch.remaining[0], budget);
+        assert_eq!(budget, 16, "budget capped by the KV window");
     }
 }

@@ -1,0 +1,886 @@
+//! The serving `Engine`: a long-lived session facade over the grid
+//! executor with **continuous batching** and in-flight hybrid plan
+//! switches — the public serving API.
+//!
+//! The previous surface (`serve_workload`/`serve_on` free functions)
+//! gang-scheduled a fixed batch through prefill and decoded until the
+//! *slowest* member finished, so short requests convoyed behind long
+//! ones and the adapt loop only saw traffic at coarse batch
+//! boundaries. The `Engine` runs an Orca-style iteration scheduler
+//! instead:
+//!
+//! 1. **retire** — finished sequences leave the live batch
+//!    ([`crate::model::ModelExecutor::release_slot`]), freeing their KV
+//!    slot mid-decode;
+//! 2. **admit** — queued requests claim freed slots and run a chunked
+//!    prefill ([`crate::model::ModelExecutor::prefill_slot`]) while
+//!    their peers keep decoding;
+//! 3. **decode** — one step for the whole running set at per-slot
+//!    positions ([`crate::model::ModelExecutor::decode_slots`]).
+//!
+//! One [`Engine::step`] call runs one such iteration; [`Engine::submit`]
+//! enqueues work (with drain-based backpressure instead of the old
+//! hard `bail!` on a full queue), [`Engine::poll`]/[`Engine::drain`]
+//! deliver tokens, and [`Engine::shutdown`] returns the familiar
+//! [`ServeReport`].
+//!
+//! **Plan switches at iteration granularity.** With an adaptive config,
+//! the adapt loop ([`crate::adapt::AdaptLoop`] via [`AdaptState`]) is
+//! consulted at every admission boundary instead of once per gang
+//! batch. A switch that keeps the attention layout (expert resharding —
+//! the common HAP transition) applies immediately: per-slot KV caches
+//! are untouched, so in-flight decodes continue under the new expert
+//! layout while the executor's measured reshard moves the expert
+//! weights. A switch that changes the attention layout invalidates the
+//! KV sharding, so the engine stops admitting, drains in-flight decodes
+//! to the safe point (running set empty), re-begins the session under
+//! the new layout, and resumes admission.
+//!
+//! **Equivalence.** Every kernel in the host stack is row-independent,
+//! so a sequence's tokens depend only on its own (padded) prompt and
+//! the weights — never on which peers share the batch. Streaming
+//! scheduling therefore produces per-request token sequences
+//! bit-identical to the gang path (`rust/tests/engine_api.rs`).
+//!
+//! The gang scheduler is retained behind [`Scheduling::Gang`] — it is
+//! what the deprecated `serve_workload`/`serve_on` wrappers run, the
+//! only mode the fixed-shape PJRT artifacts support, and the baseline
+//! `hap serve --engine gang` compares against.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::router::Router;
+use super::server::{AdaptiveServing, ServeConfig, ServeReport};
+use super::{Request, Response};
+use crate::adapt::window::TrafficSample;
+use crate::adapt::{AdaptLoop, PlanCache, SwitchDecision};
+use crate::model::{EngineMode, ExecStats, ModelExecutor, ShardPlan, WeightStore};
+use crate::planner::{HapPlanner, PLANNER_SEED};
+use crate::runtime::literal::argmax_rows;
+use crate::runtime::{PjrtRuntime, TinyModelMeta};
+use crate::Result;
+use std::time::Instant;
+
+/// Requests are identified by their caller-assigned `Request::id`
+/// (unique per engine; `poll` looks them up by it).
+pub type RequestId = u64;
+
+/// How the engine schedules work across the batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduling {
+    /// Pack a batch, prefill once, decode until the slowest member
+    /// finishes (the legacy run-to-completion path; required by the
+    /// fixed-shape PJRT artifacts).
+    Gang,
+    /// Continuous batching: retire/admit/decode every iteration with
+    /// per-slot KV positions (host backend).
+    Streaming,
+}
+
+impl Scheduling {
+    pub fn parse(s: &str) -> Option<Scheduling> {
+        match s {
+            "gang" => Some(Scheduling::Gang),
+            "streaming" => Some(Scheduling::Streaming),
+            _ => None,
+        }
+    }
+}
+
+/// What one [`Engine::step`] did.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StepOutcome {
+    /// Requests admitted (chunked-prefilled) this iteration.
+    pub admitted: usize,
+    /// Requests retired (responses now pollable).
+    pub retired: usize,
+    /// Live slots that took a decode step.
+    pub decoded: usize,
+    /// Live slots after the iteration.
+    pub running: usize,
+    /// Requests still queued after the iteration.
+    pub queued: usize,
+    /// A plan switch was applied (reshard or session restart).
+    pub switched: bool,
+}
+
+impl StepOutcome {
+    /// True when the step found nothing to do.
+    pub fn idle(&self) -> bool {
+        self.admitted == 0 && self.retired == 0 && self.decoded == 0 && self.running == 0
+    }
+}
+
+/// Non-blocking per-request progress (see [`Engine::poll`]).
+#[derive(Debug, Clone)]
+pub enum RequestStatus {
+    /// Waiting in the admission queue.
+    Queued,
+    /// In a batch slot; `tokens` generated so far.
+    Running { tokens: Vec<i32> },
+    /// Complete; the full response.
+    Finished(Response),
+    /// Never submitted (or submitted to a different engine).
+    Unknown,
+}
+
+/// Per-run state of the adaptation loop: the shared [`AdaptLoop`] (the
+/// exact implementation the replay acceptance tests validate) plus the
+/// platform's latency model, resolved once so the per-consult path
+/// never touches the global model-cache lock.
+pub(crate) struct AdaptState {
+    pub(crate) control: AdaptLoop,
+    latency: std::sync::Arc<crate::sim::LatencyModel>,
+}
+
+impl AdaptState {
+    pub(crate) fn new(cfg: &AdaptiveServing) -> AdaptState {
+        let mut control = AdaptLoop::new(cfg.controller.clone(), cfg.window_capacity);
+        if let Some(path) = &cfg.plan_cache {
+            match PlanCache::load(path, &cfg.model, &cfg.node) {
+                Ok(cache) => control.cache = cache,
+                Err(e) => eprintln!("plan cache {}: {e:#} (starting cold)", path.display()),
+            }
+        }
+        AdaptState {
+            control,
+            latency: crate::sim::LatencyModel::cached(&cfg.node.gpu, PLANNER_SEED),
+        }
+    }
+
+    /// Observe one admission boundary's traffic (plus, in gang mode,
+    /// the previous batch's measured latency, closing the loop on
+    /// mispredicted plans) and return the (prefill, decode) plans the
+    /// controller lands on, with its decision so the caller can count
+    /// weight-moving switches. The grid engine executes whatever the
+    /// planner picked — hybrids included.
+    pub(crate) fn select(
+        &mut self,
+        cfg: &AdaptiveServing,
+        samples: &[TrafficSample],
+        measured: Option<f64>,
+    ) -> Result<(ShardPlan, ShardPlan, SwitchDecision)> {
+        let planner = HapPlanner::with_latency(&cfg.model, &cfg.node, self.latency.clone());
+        let (plan, decision) =
+            self.control.step(&planner, samples.iter().copied(), None, measured)?;
+        Ok((
+            ShardPlan::new(plan.attn, plan.expert_prefill),
+            ShardPlan::new(plan.attn, plan.expert_decode),
+            decision,
+        ))
+    }
+}
+
+/// A request occupying one batch slot.
+struct Slot {
+    req: Request,
+    tokens: Vec<i32>,
+    last: i32,
+    remaining: usize,
+    ttft: f64,
+}
+
+/// The scheduler core, separated from executor ownership so the compat
+/// wrappers ([`serve_with`]) can drive a caller-owned executor while
+/// [`Engine`] owns its own.
+struct Session {
+    config: ServeConfig,
+    scheduling: Scheduling,
+    meta: TinyModelMeta,
+    batcher: Batcher,
+    router: Router,
+    /// Joiners already taken from the router when an attention-layout
+    /// switch was decided: they wait here (in admission order) while
+    /// the running set drains, and are admitted first under the new
+    /// session.
+    backlog: Vec<Request>,
+    slots: Vec<Option<Slot>>,
+    /// Every completed response, in retirement order (the report).
+    responses: Vec<Response>,
+    /// Delivery watermark: `responses[..delivered]` have been handed
+    /// out by `drain`; the tail is pending delivery. An index instead
+    /// of a second Vec so tokens are stored once and the retire path
+    /// never deep-clones.
+    delivered: usize,
+    metrics: Metrics,
+    adapt: Option<AdaptState>,
+    /// Gang mode: previous batch's measured latency for the adapt loop.
+    last_measured: Option<f64>,
+    /// Streaming: the session's resident (prefill, decode) plans.
+    active: Option<(ShardPlan, ShardPlan)>,
+    /// Streaming: an attention-layout switch waiting for the running
+    /// set to drain.
+    pending: Option<(ShardPlan, ShardPlan)>,
+    prefill_time: f64,
+    decode_time: f64,
+    stats0: ExecStats,
+    run_start: Instant,
+}
+
+impl Session {
+    fn new(exec: &ModelExecutor, config: ServeConfig, scheduling: Scheduling) -> Session {
+        let meta = exec.meta().clone();
+        let batcher = Batcher::new(meta.batch, meta.prefill_len, meta.max_len - meta.prefill_len);
+        let router = Router::new(config.queue_capacity, config.policy);
+        let adapt = config.adaptive.as_ref().map(AdaptState::new);
+        Session {
+            slots: (0..meta.batch).map(|_| None).collect(),
+            backlog: Vec::new(),
+            responses: Vec::new(),
+            delivered: 0,
+            metrics: Metrics::new(),
+            adapt,
+            last_measured: None,
+            active: None,
+            pending: None,
+            prefill_time: 0.0,
+            decode_time: 0.0,
+            stats0: exec.stats(),
+            run_start: Instant::now(),
+            config,
+            scheduling,
+            meta,
+            batcher,
+            router,
+        }
+    }
+
+    /// Enqueue a request. A full queue backpressures by running
+    /// scheduler iterations until a slot frees (a full queue is never
+    /// empty, so every iteration makes progress) — the old API's hard
+    /// `bail!` on overflow is gone.
+    fn submit(&mut self, exec: &mut ModelExecutor, req: Request) -> Result<RequestId> {
+        if self.router.capacity == 0 {
+            anyhow::bail!("queue capacity is 0 — no request can ever be admitted");
+        }
+        let id = req.id;
+        let mut req = req;
+        loop {
+            // Wait for queue room BEFORE attempting admission: engine
+            // backpressure is a drain, not a rejection, so the waiting
+            // iterations leave the router's `rejected` counter alone
+            // (it keeps counting only true rejections seen by direct
+            // router users).
+            if self.router.pending() < self.router.capacity {
+                match self.router.try_submit(req) {
+                    None => return Ok(id),
+                    Some(back) => req = back,
+                }
+            }
+            self.step(exec)?;
+        }
+    }
+
+    fn step(&mut self, exec: &mut ModelExecutor) -> Result<StepOutcome> {
+        match self.scheduling {
+            Scheduling::Gang => self.gang_step(exec),
+            Scheduling::Streaming => self.stream_step(exec),
+        }
+    }
+
+    /// One gang iteration: pack a whole batch and run it to completion
+    /// (the legacy `serve_on` loop body, preserved for the compat
+    /// wrappers, the PJRT backend, and baseline comparisons).
+    fn gang_step(&mut self, exec: &mut ModelExecutor) -> Result<StepOutcome> {
+        let mut out = StepOutcome::default();
+        if self.router.is_empty() {
+            return Ok(out);
+        }
+        let batch = self.batcher.pack(self.router.take(self.meta.batch));
+        // Per-batch strategy selection (adaptive) or the fixed plan.
+        let (prefill_plan, decode_plan) = match (&mut self.adapt, &self.config.adaptive) {
+            (Some(state), Some(cfg)) => {
+                let samples: Vec<TrafficSample> = batch
+                    .requests
+                    .iter()
+                    .map(|req| TrafficSample {
+                        prompt: req.prompt.len(),
+                        generate: req.max_new_tokens,
+                        batch: batch.requests.len(),
+                    })
+                    .collect();
+                let (p, d, decision) = state.select(cfg, &samples, self.last_measured)?;
+                if matches!(decision, SwitchDecision::Switch { .. }) {
+                    self.metrics.replans += 1;
+                    out.switched = true;
+                }
+                (p, d)
+            }
+            _ => (
+                ShardPlan::new(self.config.attn, self.config.expert_prefill),
+                ShardPlan::new(self.config.attn, self.config.expert_decode),
+            ),
+        };
+        // Declare the batch's plans: evicts stale layouts, materializes
+        // missing shards — the measured resharding work of a switch.
+        exec.begin_batch(&prefill_plan, &decode_plan)?;
+
+        // ---- Prefill.
+        let t0 = Instant::now();
+        let logits = exec.prefill(&batch.tokens, &prefill_plan)?;
+        let batch_prefill = t0.elapsed().as_secs_f64();
+        self.prefill_time += batch_prefill;
+        self.metrics.batches_prefilled += 1;
+        if prefill_plan.expert != decode_plan.expert {
+            self.metrics.transitions += 1;
+        }
+
+        let first = argmax_rows(&logits);
+        let first_time = Instant::now();
+        let mut generated: Vec<Vec<i32>> =
+            (0..batch.live()).map(|slot| vec![first[slot] as i32]).collect();
+        let mut last: Vec<i32> = first.iter().map(|&t| t as i32).collect();
+        let mut remaining = batch.remaining.clone();
+        for r in remaining.iter_mut().take(batch.live()) {
+            *r = r.saturating_sub(1);
+        }
+
+        // ---- Decode until every live slot finishes (the convoy).
+        let t0 = Instant::now();
+        while remaining.iter().take(batch.live()).any(|&r| r > 0) {
+            let active = remaining.iter().take(batch.live()).filter(|&&r| r > 0).count();
+            let logits = exec.decode_step(&last, &decode_plan)?;
+            self.metrics.decode_steps += 1;
+            self.metrics.observe_occupancy(active, self.meta.batch);
+            out.decoded += 1;
+            let next = argmax_rows(&logits);
+            for slot in 0..batch.live() {
+                if remaining[slot] > 0 {
+                    generated[slot].push(next[slot] as i32);
+                    remaining[slot] -= 1;
+                }
+            }
+            last = next.iter().map(|&t| t as i32).collect();
+        }
+        let batch_decode = t0.elapsed().as_secs_f64();
+        self.decode_time += batch_decode;
+        // Feed the measured latency of this batch into the next
+        // adaptation step (demotes consistently mispredicted plans).
+        self.last_measured = Some(batch_prefill + batch_decode);
+
+        // ---- Retire the whole batch.
+        let now = Instant::now();
+        for (slot, req) in batch.requests.iter().enumerate() {
+            let latency = now.duration_since(req.arrived).as_secs_f64();
+            let ttft = first_time.duration_since(req.arrived).as_secs_f64();
+            self.metrics.observe_request(latency, ttft, generated[slot].len());
+            self.responses.push(Response {
+                id: req.id,
+                tokens: generated[slot].clone(),
+                latency,
+                ttft,
+            });
+        }
+        out.admitted = batch.live();
+        out.retired = batch.live();
+        out.queued = self.router.pending();
+        Ok(out)
+    }
+
+    /// One streaming iteration: retire → (apply drained switch) →
+    /// admit + chunked prefill → one decode step at per-slot positions.
+    fn stream_step(&mut self, exec: &mut ModelExecutor) -> Result<StepOutcome> {
+        let mut out = StepOutcome::default();
+        let b = self.meta.batch;
+
+        // ---- 1. Retire finished sequences, freeing KV + batch slots.
+        for idx in 0..self.slots.len() {
+            let done = self.slots[idx].as_ref().map_or(false, |s| s.remaining == 0);
+            if !done {
+                continue;
+            }
+            let slot = self.slots[idx].take().expect("checked above");
+            exec.release_slot(idx)?;
+            let latency = slot.req.arrived.elapsed().as_secs_f64();
+            self.metrics.observe_request(latency, slot.ttft, slot.tokens.len());
+            self.responses.push(Response {
+                id: slot.req.id,
+                tokens: slot.tokens,
+                latency,
+                ttft: slot.ttft,
+            });
+            out.retired += 1;
+        }
+        let mut running = self.slots.iter().filter(|s| s.is_some()).count();
+
+        // ---- 2. An attention-layout switch waited for this safe
+        // point: the running set is drained, so the KV sharding can
+        // change. Re-begin the session and resume admission.
+        if running == 0 {
+            if let Some((p, d)) = self.pending.take() {
+                exec.begin_session(&p, &d)?;
+                self.active = Some((p, d));
+                out.switched = true;
+            }
+        }
+
+        // ---- 3. Admission boundary: take the joiners, consult the
+        // adapt loop on that actual traffic, apply safe switches, then
+        // chunk-prefill the joiners while their peers' KV stays live.
+        // Joiners held back by an attention-layout switch wait in the
+        // backlog and are admitted first once the drain completes.
+        if self.pending.is_none() && running < b {
+            let free = b - running;
+            let mut joiners = std::mem::take(&mut self.backlog);
+            if joiners.len() < free && !self.router.is_empty() {
+                joiners.extend(self.router.take(free - joiners.len()));
+            }
+            if !joiners.is_empty() {
+                let desired = match (&mut self.adapt, &self.config.adaptive) {
+                    (Some(state), Some(cfg)) => {
+                        let concurrency = (running + joiners.len()).min(b);
+                        let samples: Vec<TrafficSample> = joiners
+                            .iter()
+                            .map(|r| TrafficSample {
+                                prompt: r.prompt.len(),
+                                generate: r.max_new_tokens,
+                                batch: concurrency,
+                            })
+                            .collect();
+                        // Measured-latency feedback stays gang-only for
+                        // now: the controller's predictions are per-batch,
+                        // which has no direct per-iteration analogue.
+                        let (p, d, decision) = state.select(cfg, &samples, None)?;
+                        if matches!(decision, SwitchDecision::Switch { .. }) {
+                            self.metrics.replans += 1;
+                        }
+                        Some((p, d))
+                    }
+                    _ => None,
+                };
+                let fallback = (
+                    ShardPlan::new(self.config.attn, self.config.expert_prefill),
+                    ShardPlan::new(self.config.attn, self.config.expert_decode),
+                );
+                let want = desired.unwrap_or_else(|| self.active.unwrap_or(fallback));
+                match self.active {
+                    None => {
+                        // First admission starts the session directly under
+                        // the selected plans — no wasted uploads.
+                        exec.begin_session(&want.0, &want.1)?;
+                        self.active = Some(want);
+                    }
+                    Some(cur) if cur != want => {
+                        if cur.0.attn == want.0.attn {
+                            // Expert-only reshard: per-slot KV is untouched,
+                            // so in-flight decodes continue under the new
+                            // expert layout after the measured weight move.
+                            exec.begin_batch(&want.0, &want.1)?;
+                            self.active = Some(want);
+                            out.switched = true;
+                        } else {
+                            // KV sharding would change: stop admitting and
+                            // drain in-flight decodes to the safe point.
+                            self.pending = Some(want);
+                        }
+                    }
+                    _ => {}
+                }
+                if self.pending.is_some() {
+                    self.backlog = joiners;
+                } else {
+                    let (prefill_plan, decode_plan) =
+                        self.active.expect("session started above");
+                    for req in joiners {
+                        let slot = exec.claim_slot().ok_or_else(|| {
+                            anyhow::anyhow!("no free slot for admitted request")
+                        })?;
+                        debug_assert!(self.slots[slot].is_none(), "slot maps diverged");
+                        let (row, budget) = self.batcher.pack_one(&req);
+                        let t0 = Instant::now();
+                        let logits = exec.prefill_slot(slot, &row, &prefill_plan)?;
+                        self.prefill_time += t0.elapsed().as_secs_f64();
+                        self.metrics.batches_prefilled += 1;
+                        if prefill_plan.expert != decode_plan.expert {
+                            self.metrics.transitions += 1;
+                        }
+                        let first = argmax_rows(&logits)[0] as i32;
+                        let ttft = req.arrived.elapsed().as_secs_f64();
+                        out.admitted += 1;
+                        let remaining = budget.saturating_sub(1);
+                        if remaining == 0 {
+                            // Single-token request: the prefill's argmax
+                            // IS the full response (same one token gang
+                            // mode yields) — retire at admission instead
+                            // of spending a decode iteration on it.
+                            exec.release_slot(slot)?;
+                            let latency = req.arrived.elapsed().as_secs_f64();
+                            self.metrics.observe_request(latency, ttft, 1);
+                            self.responses.push(Response {
+                                id: req.id,
+                                tokens: vec![first],
+                                latency,
+                                ttft,
+                            });
+                            out.retired += 1;
+                            continue;
+                        }
+                        self.slots[slot] = Some(Slot {
+                            req,
+                            tokens: vec![first],
+                            last: first,
+                            remaining,
+                            ttft,
+                        });
+                        running += 1;
+                    }
+                }
+            }
+        }
+
+        // ---- 4. One decode iteration for the running set.
+        if running > 0 {
+            let (_, decode_plan) = self.active.expect("running implies a session");
+            let mut last = vec![0i32; b];
+            for (i, s) in self.slots.iter().enumerate() {
+                if let Some(slot) = s {
+                    last[i] = slot.last;
+                }
+            }
+            let t0 = Instant::now();
+            let logits = exec.decode_slots(&last, &decode_plan)?;
+            self.decode_time += t0.elapsed().as_secs_f64();
+            self.metrics.decode_steps += 1;
+            self.metrics.observe_occupancy(running, b);
+            let next = argmax_rows(&logits);
+            for (i, s) in self.slots.iter_mut().enumerate() {
+                if let Some(slot) = s {
+                    if slot.remaining > 0 {
+                        slot.tokens.push(next[i] as i32);
+                        slot.remaining -= 1;
+                    }
+                    slot.last = next[i] as i32;
+                }
+            }
+            out.decoded = running;
+        }
+
+        out.running = self.slots.iter().filter(|s| s.is_some()).count();
+        out.queued = self.router.pending() + self.backlog.len();
+        Ok(out)
+    }
+
+    /// Request a plan change (fixed-plan engines; adaptive engines
+    /// re-select at every admission boundary anyway). Applied at the
+    /// next safe point: immediately for expert-only switches, after the
+    /// running set drains for attention-layout changes, at the next
+    /// batch for the gang scheduler.
+    fn request_plans(
+        &mut self,
+        exec: &mut ModelExecutor,
+        prefill: ShardPlan,
+        decode: ShardPlan,
+    ) -> Result<()> {
+        exec.validate(&prefill)?;
+        exec.validate(&decode)?;
+        if prefill.attn != decode.attn {
+            anyhow::bail!(
+                "attention strategy must match across stages ({} vs {})",
+                prefill.attn,
+                decode.attn
+            );
+        }
+        // Keep the fixed fallback in sync so a not-yet-started session
+        // (or the gang scheduler's next batch) picks the new plans up.
+        self.config.attn = prefill.attn;
+        self.config.expert_prefill = prefill.expert;
+        self.config.expert_decode = decode.expert;
+        match self.active {
+            Some(cur) if cur == (prefill, decode) => {}
+            Some(cur) if cur.0.attn == prefill.attn => {
+                exec.begin_batch(&prefill, &decode)?;
+                self.active = Some((prefill, decode));
+            }
+            Some(_) => self.pending = Some((prefill, decode)),
+            None => {}
+        }
+        Ok(())
+    }
+
+    fn status(&self, id: RequestId) -> RequestStatus {
+        if let Some(resp) = self.responses.iter().rev().find(|r| r.id == id) {
+            return RequestStatus::Finished(resp.clone());
+        }
+        for s in self.slots.iter().flatten() {
+            if s.req.id == id {
+                return RequestStatus::Running { tokens: s.tokens.clone() };
+            }
+        }
+        if self.router.contains(id) || self.backlog.iter().any(|r| r.id == id) {
+            return RequestStatus::Queued;
+        }
+        RequestStatus::Unknown
+    }
+
+    fn idle(&self) -> bool {
+        self.router.is_empty()
+            && self.backlog.is_empty()
+            && self.slots.iter().all(|s| s.is_none())
+    }
+
+    fn run_to_idle(&mut self, exec: &mut ModelExecutor) -> Result<()> {
+        while !self.idle() {
+            self.step(exec)?;
+        }
+        Ok(())
+    }
+
+    fn take_undelivered(&mut self) -> Vec<Response> {
+        let out = self.responses[self.delivered..].to_vec();
+        self.delivered = self.responses.len();
+        out
+    }
+
+    /// Close the books: wall time, executor upload/reshard deltas, plan
+    /// cache persistence — the same accounting the old loop did.
+    fn finish(mut self, exec: &ModelExecutor) -> Result<ServeReport> {
+        self.metrics.wall_time = self.run_start.elapsed().as_secs_f64();
+        let stats = exec.stats();
+        self.metrics.weight_uploads = stats.materializations - self.stats0.materializations;
+        self.metrics.reshards = stats.reshards - self.stats0.reshards;
+        self.metrics.reshard_time = stats.reshard_seconds - self.stats0.reshard_seconds;
+        if let (Some(state), Some(cfg)) = (&self.adapt, &self.config.adaptive) {
+            if let Some(path) = &cfg.plan_cache {
+                if let Err(e) = state.control.cache.save(path) {
+                    eprintln!("could not save plan cache {}: {e:#}", path.display());
+                }
+            }
+        }
+        Ok(ServeReport {
+            metrics: self.metrics,
+            responses: self.responses,
+            prefill_time: self.prefill_time,
+            decode_time: self.decode_time,
+        })
+    }
+}
+
+/// Serve a whole workload on a **caller-owned** executor under the
+/// given scheduling mode, to completion. This is the engine core the
+/// deprecated [`super::serve_on`]/[`super::serve_workload`] wrappers
+/// call with [`Scheduling::Gang`]; pass [`Scheduling::Streaming`] to
+/// run continuous batching over an executor you keep across runs.
+pub fn serve_with(
+    exec: &mut ModelExecutor,
+    config: &ServeConfig,
+    scheduling: Scheduling,
+    workload: Vec<Request>,
+) -> Result<ServeReport> {
+    let mut session = Session::new(exec, config.clone(), scheduling);
+    for req in workload {
+        session.submit(exec, req)?;
+    }
+    session.run_to_idle(exec)?;
+    session.finish(exec)
+}
+
+/// Typed constructor for [`Engine`]: serving config (fixed plan or
+/// adaptive policy, router policy, queue capacity) plus the scheduling
+/// mode, then a backend.
+pub struct EngineBuilder {
+    config: ServeConfig,
+    scheduling: Scheduling,
+}
+
+impl EngineBuilder {
+    /// Replace the whole serving config.
+    pub fn config(mut self, config: ServeConfig) -> EngineBuilder {
+        self.config = config;
+        self
+    }
+
+    /// Scheduling mode (default: streaming).
+    pub fn scheduling(mut self, scheduling: Scheduling) -> EngineBuilder {
+        self.scheduling = scheduling;
+        self
+    }
+
+    /// Router queue capacity.
+    pub fn queue_capacity(mut self, capacity: usize) -> EngineBuilder {
+        self.config.queue_capacity = capacity;
+        self
+    }
+
+    /// Router queue discipline.
+    pub fn policy(mut self, policy: super::router::RouterPolicy) -> EngineBuilder {
+        self.config.policy = policy;
+        self
+    }
+
+    /// Online-adaptive plan selection (consulted per admission
+    /// boundary in streaming mode, per batch in gang mode).
+    pub fn adaptive(mut self, adaptive: AdaptiveServing) -> EngineBuilder {
+        self.config.adaptive = Some(adaptive);
+        self
+    }
+
+    /// Artifact-free engine on the host grid kernels.
+    pub fn build_host(self, weights: WeightStore) -> Engine<'static> {
+        self.build_host_with_mode(weights, EngineMode::Parallel)
+    }
+
+    /// Host engine with an explicit per-device scheduling mode (the
+    /// sequential mode is the bit-equivalence reference path).
+    pub fn build_host_with_mode(self, weights: WeightStore, mode: EngineMode) -> Engine<'static> {
+        let exec = ModelExecutor::host_with_mode(weights, mode);
+        let session = Session::new(&exec, self.config, self.scheduling);
+        Engine { exec, session }
+    }
+
+    /// PJRT-artifact engine. Gang scheduling only: the fixed-shape
+    /// artifacts take one scalar decode position per batch, which
+    /// cannot express the streaming engine's per-slot offsets.
+    pub fn build_pjrt(self, rt: &PjrtRuntime) -> Result<Engine<'_>> {
+        if self.scheduling == Scheduling::Streaming {
+            anyhow::bail!(
+                "streaming scheduling is host-backend only: the fixed-shape PJRT artifacts \
+                 pin one scalar decode position per batch (use --engine gang, or the host \
+                 backend)"
+            );
+        }
+        let exec = ModelExecutor::new(rt)?;
+        let session = Session::new(&exec, self.config, self.scheduling);
+        Ok(Engine { exec, session })
+    }
+}
+
+/// The long-lived serving engine: owns the [`ModelExecutor`] (weight
+/// shards and per-slot KV stay device-resident across requests) and the
+/// iteration scheduler. See the module docs for the step anatomy.
+pub struct Engine<'rt> {
+    exec: ModelExecutor<'rt>,
+    session: Session,
+}
+
+impl<'rt> Engine<'rt> {
+    /// Start building an engine from a serving config.
+    pub fn builder(config: ServeConfig) -> EngineBuilder {
+        EngineBuilder { config, scheduling: Scheduling::Streaming }
+    }
+
+    /// Enqueue a request (backpressures by running scheduler iterations
+    /// when the queue is full — never drops or aborts).
+    pub fn submit(&mut self, req: Request) -> Result<RequestId> {
+        self.session.submit(&mut self.exec, req)
+    }
+
+    /// Run ONE scheduler iteration (retire → admit/prefill → decode).
+    /// Non-blocking: returns immediately with what it did; an idle
+    /// outcome means there is nothing left to schedule.
+    pub fn step(&mut self) -> Result<StepOutcome> {
+        self.session.step(&mut self.exec)
+    }
+
+    /// Non-blocking progress query for a submitted request.
+    pub fn poll(&self, id: RequestId) -> RequestStatus {
+        self.session.status(id)
+    }
+
+    /// Collect the responses finished since the last `drain` —
+    /// non-blocking streaming delivery, no scheduler work is run.
+    /// Responses handed out here are not repeated by later `drain`
+    /// calls; `shutdown`'s report still carries everything.
+    pub fn drain(&mut self) -> Vec<Response> {
+        self.session.take_undelivered()
+    }
+
+    /// Run scheduler iterations until all submitted work completes
+    /// (the blocking companion to `drain`; `shutdown` does this and
+    /// also closes the books).
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        self.session.run_to_idle(&mut self.exec)
+    }
+
+    /// Request a (prefill, decode) plan switch, applied at the next
+    /// safe point (see [`Session::request_plans`] semantics in the
+    /// module docs). Intended for fixed-plan engines; adaptive engines
+    /// re-select at every admission boundary.
+    pub fn force_plans(&mut self, prefill: ShardPlan, decode: ShardPlan) -> Result<()> {
+        self.session.request_plans(&mut self.exec, prefill, decode)
+    }
+
+    /// Metrics accumulated so far (finalized by `shutdown`).
+    pub fn metrics(&self) -> &Metrics {
+        &self.session.metrics
+    }
+
+    /// The underlying executor (shard/upload accounting lives here).
+    pub fn executor(&self) -> &ModelExecutor<'rt> {
+        &self.exec
+    }
+
+    /// Finish all submitted work and return the run report — the same
+    /// [`ServeReport`] the deprecated free functions produced.
+    pub fn shutdown(mut self) -> Result<ServeReport> {
+        self.session.run_to_idle(&mut self.exec)?;
+        self.session.finish(&self.exec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::DeviceGrid;
+
+    #[test]
+    fn adaptive_selection_returns_native_grid_plans() {
+        // The adaptation loop needs no runtime: feed it an admission
+        // boundary's samples and check it lands on plans that lower to
+        // well-formed device grids at the node's device count — the
+        // planner's pick is executed natively (hybrid EP×TP included),
+        // never projected onto a pure layout.
+        let config = ServeConfig::adaptive(4);
+        let acfg = config.adaptive.as_ref().unwrap();
+        let mut state = AdaptState::new(acfg);
+        let samples: Vec<TrafficSample> =
+            (0..4).map(|_| TrafficSample { prompt: 24, generate: 16, batch: 4 }).collect();
+        let (pre, dec, decision) = state.select(acfg, &samples, None).unwrap();
+        assert_eq!(decision, SwitchDecision::Adopt);
+        assert_eq!(pre.attn, dec.attn, "attention is pinned across stages");
+        for plan in [&pre, &dec] {
+            assert_eq!(plan.devices(), 4);
+            let grid = DeviceGrid::lower(plan).unwrap();
+            let m = acfg.model.clone();
+            grid.check_dims(m.q_heads, m.kv_heads, m.num_experts, m.moe_inter_size, 4)
+                .unwrap();
+        }
+        assert!(state.control.controller.active().is_some());
+        // A second identical boundary is a cache hit, not a re-solve.
+        state.select(acfg, &samples, None).unwrap();
+        assert_eq!(state.control.cache.hits, 1);
+        assert_eq!(state.control.cache.misses, 1);
+    }
+
+    #[test]
+    fn streaming_engine_smoke_submit_step_poll_drain() {
+        let m = TinyModelMeta::host_demo();
+        let weights = WeightStore::synthetic(&m, 5);
+        let mut engine = Engine::builder(ServeConfig::tp(4))
+            .build_host_with_mode(weights, EngineMode::Sequential);
+        let id0 = engine.submit(Request::new(0, vec![1, 2, 3], 3)).unwrap();
+        let id1 = engine.submit(Request::new(1, vec![4, 5], 5)).unwrap();
+        assert!(matches!(engine.poll(id0), RequestStatus::Queued));
+        let out = engine.step().unwrap();
+        assert_eq!(out.admitted, 2);
+        assert_eq!(out.running, 2);
+        assert_eq!(out.decoded, 2);
+        match engine.poll(id0) {
+            RequestStatus::Running { tokens } => assert_eq!(tokens.len(), 2),
+            other => panic!("expected running, got {other:?}"),
+        }
+        // id0 needs 3 tokens: 1 from prefill + 2 decodes, then a retire
+        // step; id1 runs longer.
+        engine.run_to_completion().unwrap();
+        let responses = engine.drain();
+        assert_eq!(responses.len(), 2);
+        assert!(matches!(engine.poll(id0), RequestStatus::Finished(_)));
+        assert!(matches!(engine.poll(id1), RequestStatus::Finished(_)));
+        assert!(matches!(engine.poll(99), RequestStatus::Unknown));
+        assert!(engine.drain().is_empty(), "drain repeats responses");
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.metrics.requests_completed, 2);
+        assert_eq!(report.responses.len(), 2, "shutdown report keeps everything");
+        let tokens: Vec<usize> = report.responses.iter().map(|r| r.tokens.len()).collect();
+        assert!(tokens.contains(&3) && tokens.contains(&5));
+    }
+}

@@ -1,5 +1,6 @@
-//! Serving metrics: counters + latency histograms with percentile
-//! queries (p50/p95/p99), and a throughput window.
+//! Serving metrics: counters + latency/TTFT/TPOT histograms with
+//! percentile queries (p50/p95/p99), slot-occupancy statistics for the
+//! streaming scheduler, and a throughput window.
 
 use crate::util::stats;
 
@@ -8,8 +9,12 @@ use crate::util::stats;
 pub struct Metrics {
     pub requests_completed: usize,
     pub tokens_generated: usize,
+    /// Prefill operations: gang batches, or streaming joiners (one
+    /// chunked prefill per admitted request).
     pub batches_prefilled: usize,
     pub decode_steps: usize,
+    /// Prefill→decode expert-layout transitions executed (per batch in
+    /// gang mode, per admitted request in streaming mode).
     pub transitions: usize,
     /// Weight-moving plan switches made by the adaptive controller.
     pub replans: usize,
@@ -17,12 +22,22 @@ pub struct Metrics {
     /// over the run. Flat after the first batch under a fixed plan;
     /// grows only when a plan switch moves weights.
     pub weight_uploads: usize,
-    /// Inter-batch plan switches that actually re-materialized shards.
+    /// Plan switches that actually re-materialized shards.
     pub reshards: usize,
     /// Measured seconds the executor spent resharding weights.
     pub reshard_time: f64,
+    /// Live (still-generating) slots summed over decode iterations —
+    /// `slot_steps / slot_capacity_steps` is the mean occupancy. Gang
+    /// convoys leave this low (finished members ride dead); continuous
+    /// batching refills slots mid-decode.
+    pub slot_steps: usize,
+    /// Total slots available summed over decode iterations.
+    pub slot_capacity_steps: usize,
     latencies: Vec<f64>,
     ttfts: Vec<f64>,
+    /// Per-request time-per-output-token (decode seconds / generated
+    /// tokens after the first), the streaming-latency companion to TTFT.
+    tpots: Vec<f64>,
     /// Wall-clock duration of the run (set by the server at the end).
     pub wall_time: f64,
 }
@@ -37,6 +52,29 @@ impl Metrics {
         self.tokens_generated += tokens;
         self.latencies.push(latency);
         self.ttfts.push(ttft);
+        // TPOT is only defined past the first token: a request that
+        // never decoded would contribute a degenerate sample (gang
+        // convoy wait, or ~0 under streaming's retire-at-admission).
+        if tokens > 1 {
+            self.tpots.push((latency - ttft).max(0.0) / (tokens - 1) as f64);
+        }
+    }
+
+    /// Record one decode iteration's slot usage: `live` slots doing
+    /// useful work out of `capacity` batch slots.
+    pub fn observe_occupancy(&mut self, live: usize, capacity: usize) {
+        self.slot_steps += live;
+        self.slot_capacity_steps += capacity;
+    }
+
+    /// Mean fraction of batch slots doing useful work per decode
+    /// iteration (1.0 = perfectly packed).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.slot_capacity_steps == 0 {
+            0.0
+        } else {
+            self.slot_steps as f64 / self.slot_capacity_steps as f64
+        }
     }
 
     pub fn latency_p(&self, q: f64) -> f64 {
@@ -47,8 +85,20 @@ impl Metrics {
         stats::percentile(&self.ttfts, q)
     }
 
+    pub fn tpot_p(&self, q: f64) -> f64 {
+        stats::percentile(&self.tpots, q)
+    }
+
     pub fn mean_latency(&self) -> f64 {
         stats::mean(&self.latencies)
+    }
+
+    pub fn mean_ttft(&self) -> f64 {
+        stats::mean(&self.ttfts)
+    }
+
+    pub fn mean_tpot(&self) -> f64 {
+        stats::mean(&self.tpots)
     }
 
     /// Generated tokens per second over the run.
@@ -62,14 +112,16 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | {:.1} tok/s | {} prefills, {} decode steps, {} transitions, {} replans | {} shard uploads, {} reshards ({:.1} ms)",
+            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | tpot p50 {:.2} ms | {:.1} tok/s | occupancy {:.0}% | {} prefills, {} decode steps, {} transitions, {} replans | {} shard uploads, {} reshards ({:.1} ms)",
             self.requests_completed,
             self.tokens_generated,
             self.latency_p(50.0) * 1e3,
             self.latency_p(95.0) * 1e3,
             self.latency_p(99.0) * 1e3,
             self.ttft_p(50.0) * 1e3,
+            self.tpot_p(50.0) * 1e3,
             self.throughput(),
+            self.mean_occupancy() * 100.0,
             self.batches_prefilled,
             self.decode_steps,
             self.transitions,
@@ -98,5 +150,23 @@ mod tests {
         assert!(m.latency_p(99.0) > 0.098);
         assert_eq!(m.throughput(), 500.0);
         assert!(m.summary().contains("100 requests"));
+    }
+
+    #[test]
+    fn tpot_and_occupancy() {
+        let mut m = Metrics::new();
+        // 10 tokens, 1 from prefill: latency-ttft spread over 9 steps.
+        m.observe_request(1.0, 0.1, 10);
+        assert!((m.mean_tpot() - 0.1).abs() < 1e-9);
+        assert!((m.tpot_p(50.0) - 0.1).abs() < 1e-9);
+        // A single-token request contributes no TPOT sample (it never
+        // decoded), so the distribution is unchanged.
+        m.observe_request(0.5, 0.5, 1);
+        assert!((m.mean_tpot() - 0.1).abs() < 1e-9);
+        assert_eq!(m.mean_occupancy(), 0.0, "no decode iterations yet");
+        m.observe_occupancy(4, 4);
+        m.observe_occupancy(1, 4);
+        assert!((m.mean_occupancy() - 5.0 / 8.0).abs() < 1e-9);
+        assert!(m.summary().contains("occupancy"));
     }
 }

@@ -1,19 +1,40 @@
-//! The serving runtime: router → continuous batcher → engine, with
-//! Python never on the request path (the DeepSpeed-FastGen role in the
-//! paper's evaluation).
+//! The serving runtime: a long-lived session [`Engine`] running
+//! **continuous batching** over the device-grid executor, with Python
+//! never on the request path (the DeepSpeed-FastGen role in the paper's
+//! evaluation).
 //!
-//! Thread-based (`std::thread` + `mpsc`): clients submit
-//! [`Request`]s through a [`ServerHandle`]; the server thread admits
-//! them through the router, forms fixed-size batches (the AOT artifact
-//! batch), runs prefill once per batch and decode steps until every
-//! sequence finishes, and answers with per-request metrics.
+//! The public surface is the [`Engine`] facade ([`engine`] module):
+//! build one from a [`ServeConfig`] (fixed hybrid plan or adaptive
+//! policy, router policy, scheduling knobs), then drive it at iteration
+//! granularity —
+//!
+//! - [`Engine::submit`] enqueues a [`Request`] (full queues
+//!   backpressure by draining, never abort);
+//! - [`Engine::step`] runs ONE Orca-style scheduler iteration: retire
+//!   finished sequences, admit queued requests into the freed KV slots
+//!   mid-decode (chunked prefill for the joiners), one decode step for
+//!   the running set;
+//! - [`Engine::poll`] / [`Engine::drain`] deliver tokens as sequences
+//!   progress and finish;
+//! - [`Engine::shutdown`] completes outstanding work and returns the
+//!   [`ServeReport`].
+//!
+//! Plan adaptation happens at admission boundaries; expert-layout
+//! switches reshard in-flight while attention-layout switches drain to
+//! a safe point first (see the [`engine`] docs). The legacy
+//! run-to-completion helpers — [`serve_workload`], [`serve_on`],
+//! [`server::spawn_server`] — remain as deprecated thin wrappers that
+//! run the engine core under [`Scheduling::Gang`] (also the only mode
+//! the fixed-shape PJRT artifacts support).
 
 pub mod batcher;
+pub mod engine;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
+pub use engine::{serve_with, Engine, EngineBuilder, RequestId, RequestStatus, Scheduling, StepOutcome};
 pub use metrics::Metrics;
 pub use router::{Router, RouterPolicy};
 pub use server::{serve_on, serve_workload, AdaptiveServing, ServeConfig, ServeReport};

@@ -1,11 +1,24 @@
 //! Request router: admission, queueing, and batch-slot assignment.
 //!
-//! Modeled on the vLLM router's role: requests land in a bounded FIFO
-//! (backpressure by rejection when full), and the batcher drains them
-//! in arrival order or shortest-job-first.
+//! Modeled on the vLLM router's role: requests land in a bounded queue
+//! (backpressure by rejection when full — the engine turns rejection
+//! into drain-based backpressure), and the scheduler takes them in
+//! arrival order or shortest-job-first.
+//!
+//! **SJF aging.** Pure SJF starves long requests under a steady stream
+//! of short ones — fatal for the streaming engine, whose admission runs
+//! every iteration. The router therefore tracks, per queued request,
+//! how many `take` rounds it has waited; once a request has waited
+//! `aging_rounds` rounds it is force-promoted to the front of the queue
+//! (stably — starved requests keep their relative order), bounding the
+//! wait of any request at `aging_rounds` rounds plus the starved set
+//! ahead of it at promotion time.
 
 use super::Request;
 use std::collections::VecDeque;
+
+/// Default `take` rounds before a starved request is force-promoted.
+pub const DEFAULT_AGING_ROUNDS: usize = 16;
 
 /// Queue discipline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -13,50 +26,122 @@ pub enum RouterPolicy {
     /// First come, first served.
     Fcfs,
     /// Shortest (requested generation) job first — reduces p50 at some
-    /// tail cost.
+    /// tail cost; aging bounds the tail (see module docs).
     Sjf,
 }
 
 /// Bounded admission queue.
 #[derive(Debug)]
 pub struct Router {
-    queue: VecDeque<Request>,
+    /// Queued requests with the `round` they were enqueued at.
+    queue: VecDeque<(Request, u64)>,
     pub capacity: usize,
     pub policy: RouterPolicy,
     pub rejected: usize,
     pub admitted: usize,
+    /// SJF starvation bound in `take` rounds (0 disables promotion).
+    pub aging_rounds: usize,
+    /// Promotion *events* (not distinct requests: a starved request
+    /// that younger short jobs keep SJF-inserting ahead of is
+    /// re-promoted each round until it drains).
+    pub promoted: usize,
+    round: u64,
 }
 
 impl Router {
     pub fn new(capacity: usize, policy: RouterPolicy) -> Router {
-        Router { queue: VecDeque::new(), capacity, policy, rejected: 0, admitted: 0 }
+        Router {
+            queue: VecDeque::new(),
+            capacity,
+            policy,
+            rejected: 0,
+            admitted: 0,
+            aging_rounds: DEFAULT_AGING_ROUNDS,
+            promoted: 0,
+            round: 0,
+        }
     }
 
-    /// Admit a request; `false` = backpressure (queue full).
-    pub fn submit(&mut self, req: Request) -> bool {
+    /// Override the SJF aging bound (0 disables promotion).
+    pub fn with_aging(mut self, rounds: usize) -> Router {
+        self.aging_rounds = rounds;
+        self
+    }
+
+    /// Admit a request; on backpressure (queue full) the request is
+    /// handed back to the caller instead of being dropped.
+    pub fn try_submit(&mut self, req: Request) -> Option<Request> {
         if self.queue.len() >= self.capacity {
             self.rejected += 1;
-            return false;
+            return Some(req);
         }
         self.admitted += 1;
         match self.policy {
-            RouterPolicy::Fcfs => self.queue.push_back(req),
+            RouterPolicy::Fcfs => self.queue.push_back((req, self.round)),
             RouterPolicy::Sjf => {
                 let pos = self
                     .queue
                     .iter()
-                    .position(|r| r.max_new_tokens > req.max_new_tokens)
+                    .position(|(r, _)| r.max_new_tokens > req.max_new_tokens)
                     .unwrap_or(self.queue.len());
-                self.queue.insert(pos, req);
+                self.queue.insert(pos, (req, self.round));
             }
         }
-        true
+        None
     }
 
-    /// Take up to `n` requests for the next batch.
+    /// Admit a request; `false` = backpressure (queue full, request
+    /// dropped — prefer [`Self::try_submit`] to keep it).
+    pub fn submit(&mut self, req: Request) -> bool {
+        self.try_submit(req).is_none()
+    }
+
+    /// Take up to `n` requests for the next admission. Counts one aging
+    /// round and force-promotes starved requests first (SJF only).
     pub fn take(&mut self, n: usize) -> Vec<Request> {
+        self.round += 1;
+        if self.policy == RouterPolicy::Sjf && self.aging_rounds > 0 {
+            self.promote_starved();
+        }
         let k = n.min(self.queue.len());
-        self.queue.drain(..k).collect()
+        self.queue.drain(..k).map(|(r, _)| r).collect()
+    }
+
+    /// Move every request that has waited `aging_rounds` rounds to the
+    /// front, ahead of younger entries, as a stable partition — the
+    /// starved requests keep their current relative order whether or
+    /// not the reorder actually runs. No-op (and no `promoted` count)
+    /// when the starved set already leads the queue, so the counter
+    /// records reorders that moved requests past younger work.
+    fn promote_starved(&mut self) {
+        let cutoff = self.round.saturating_sub(self.aging_rounds as u64);
+        let starved = self.queue.iter().filter(|(_, at)| *at < cutoff).count();
+        if starved == 0 || self.queue.iter().take(starved).all(|(_, at)| *at < cutoff) {
+            return;
+        }
+        let mut aged: Vec<(Request, u64)> = Vec::with_capacity(starved);
+        let mut rest: Vec<(Request, u64)> = Vec::with_capacity(self.queue.len() - starved);
+        for entry in self.queue.drain(..) {
+            if entry.1 < cutoff {
+                aged.push(entry);
+            } else {
+                rest.push(entry);
+            }
+        }
+        self.promoted += aged.len();
+        self.queue.extend(aged);
+        self.queue.extend(rest);
+    }
+
+    /// Borrow the next up-to-`n` requests without dequeuing them (the
+    /// adaptive consult inspects joiners before committing to a plan).
+    pub fn peek(&self, n: usize) -> Vec<&Request> {
+        self.queue.iter().take(n).map(|(r, _)| r).collect()
+    }
+
+    /// Whether a request with this id is still queued.
+    pub fn contains(&self, id: u64) -> bool {
+        self.queue.iter().any(|(r, _)| r.id == id)
     }
 
     pub fn pending(&self) -> usize {
@@ -85,6 +170,8 @@ mod tests {
         let batch = r.take(3);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
         assert_eq!(r.pending(), 2);
+        assert!(r.contains(3));
+        assert!(!r.contains(0));
     }
 
     #[test]
@@ -93,6 +180,7 @@ mod tests {
         r.submit(req(0, 100));
         r.submit(req(1, 10));
         r.submit(req(2, 50));
+        assert_eq!(r.peek(2).iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
         let batch = r.take(3);
         assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2, 0]);
     }
@@ -102,8 +190,69 @@ mod tests {
         let mut r = Router::new(2, RouterPolicy::Fcfs);
         assert!(r.submit(req(0, 1)));
         assert!(r.submit(req(1, 1)));
-        assert!(!r.submit(req(2, 1)));
+        let back = r.try_submit(req(2, 1));
+        assert_eq!(back.map(|b| b.id), Some(2), "rejected request must be returned");
         assert_eq!(r.rejected, 1);
         assert_eq!(r.admitted, 2);
+    }
+
+    #[test]
+    fn sjf_aging_bounds_starvation() {
+        // A long job under a steady stream of short ones: pure SJF
+        // never serves it; with aging N it must reach the front within
+        // N take rounds and be served on the next one.
+        let aging = 4usize;
+        let mut r = Router::new(64, RouterPolicy::Sjf).with_aging(aging);
+        r.submit(req(1000, 500)); // the starving long request
+        let mut served_at = None;
+        for round in 0..3 * aging as u64 {
+            // Two fresh short jobs per round keep the front crowded.
+            r.submit(req(round * 2, 1));
+            r.submit(req(round * 2 + 1, 1));
+            let got = r.take(1);
+            if got[0].id == 1000 {
+                served_at = Some(round);
+                break;
+            }
+        }
+        let served_at = served_at.expect("aging never promoted the long request");
+        assert!(
+            served_at <= aging as u64 + 1,
+            "starvation bound violated: served at round {served_at}"
+        );
+        assert!(r.promoted >= 1);
+    }
+
+    #[test]
+    fn aging_promotion_is_stable_and_front_loaded() {
+        let mut r = Router::new(64, RouterPolicy::Sjf).with_aging(2);
+        r.submit(req(100, 900));
+        r.submit(req(101, 800));
+        // Age three rounds, feeding one fresh short job per round so
+        // the front stays crowded with younger work.
+        for i in 0..3 {
+            r.take(0);
+            r.submit(req(i, 1));
+        }
+        // Both longs are past the aging bound: the next take must put
+        // them first, in their SJF order (101 before 100), ahead of
+        // every younger short job.
+        let got = r.take(4);
+        let ids: Vec<u64> = got.iter().map(|r| r.id).collect();
+        assert!(r.promoted >= 2, "no promotion recorded");
+        assert_eq!(ids[..2], [101, 100], "starved requests must lead: {ids:?}");
+    }
+
+    #[test]
+    fn fcfs_never_promotes() {
+        let mut r = Router::new(8, RouterPolicy::Fcfs).with_aging(1);
+        for i in 0..4 {
+            r.submit(req(i, 100 - i as usize));
+        }
+        for _ in 0..4 {
+            r.take(0);
+        }
+        assert_eq!(r.promoted, 0);
+        assert_eq!(r.take(4).iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
     }
 }

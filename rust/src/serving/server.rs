@@ -1,37 +1,29 @@
-//! The serving loop: drains the router, packs batches, executes
-//! prefill + decode on the grid engine under a hybrid plan, and reports
-//! per-request + aggregate metrics.
+//! Serving configuration plus the **deprecated run-to-completion entry
+//! points**, kept as thin compatibility wrappers over the streaming
+//! [`crate::serving::Engine`] core.
 //!
-//! `serve_on` is the synchronous core over **one long-lived
-//! [`ModelExecutor`]**: weight shards stay device-resident across
-//! batches, and a plan switch (adaptive serving) triggers measured
-//! resharding work inside `ModelExecutor::begin_batch` — so
-//! `Metrics.weight_uploads`/`reshards` describe real weight movement,
-//! not a per-batch re-upload. `serve_workload` wraps it for the
-//! PJRT-artifact path; the host backend (`ModelExecutor::host`) runs
-//! the same loop without artifacts. `spawn_server` adds a worker thread
-//! with mpsc channels for concurrent submitters.
-//!
-//! The grid engine executes any plan the strategy search space emits at
-//! the node's device count — hybrid EP×TP experts and DP×TP attention
-//! included — so adaptive serving runs the planner's picks natively
-//! instead of projecting them onto a pure layout.
+//! [`ServeConfig`]/[`AdaptiveServing`] are the typed serving config the
+//! engine builder consumes. [`serve_workload`]/[`serve_on`] and
+//! [`spawn_server`] predate the engine: they gang-schedule a whole
+//! workload to completion and return one [`ServeReport`]. They now
+//! delegate to [`crate::serving::engine::serve_with`] with
+//! [`crate::serving::Scheduling::Gang`], so admission backpressure
+//! (drain instead of `bail!` on a full queue) and the engine's metrics
+//! come for free. New code should drive
+//! [`crate::serving::Engine`] directly — `submit`/`step`/`poll`/
+//! `drain`/`shutdown` — and get continuous batching with in-flight plan
+//! switches.
 
-use super::batcher::Batcher;
+use super::engine::{serve_with, Scheduling};
 use super::metrics::Metrics;
-use super::router::{Router, RouterPolicy};
+use super::router::RouterPolicy;
 use super::{Request, Response};
 use crate::adapt::controller::ControllerConfig;
-use crate::adapt::window::TrafficSample;
-use crate::adapt::{AdaptLoop, PlanCache};
 use crate::config::{hardware::NodeConfig, model::MoEModelConfig};
-use crate::model::{ModelExecutor, ShardPlan};
-use crate::planner::{HapPlanner, PLANNER_SEED};
-use crate::runtime::literal::argmax_rows;
+use crate::model::ModelExecutor;
 use crate::runtime::PjrtRuntime;
 use crate::strategy::{AttnStrategy, ExpertStrategy};
 use crate::Result;
-use std::time::Instant;
 
 /// Online-adaptation settings for the serving loop: the planner inputs
 /// (deployment model + platform) and the control-loop tunables.
@@ -79,7 +71,8 @@ impl AdaptiveServing {
 }
 
 /// Serving configuration: the hybrid plan to execute, or — when
-/// `adaptive` is set — the adaptation loop that re-selects it per batch.
+/// `adaptive` is set — the adaptation loop that re-selects it (per
+/// admission boundary in the streaming engine, per batch in gang mode).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     pub attn: AttnStrategy,
@@ -87,7 +80,7 @@ pub struct ServeConfig {
     pub expert_decode: ExpertStrategy,
     pub policy: RouterPolicy,
     pub queue_capacity: usize,
-    /// When set, each batch runs window → plan cache → controller and
+    /// When set, the engine runs window → plan cache → controller and
     /// executes under the controller's active plan; the fixed fields
     /// above only serve as the pre-traffic fallback.
     pub adaptive: Option<AdaptiveServing>,
@@ -118,9 +111,9 @@ impl ServeConfig {
         }
     }
 
-    /// Online-adaptive serving: per-batch strategy selection driven by
-    /// the traffic window, plan cache, and switch controller, planned
-    /// for the real tiny-MoE deployment on `n` simulated CPU devices.
+    /// Online-adaptive serving: strategy re-selection driven by the
+    /// traffic window, plan cache, and switch controller, planned for
+    /// the real tiny-MoE deployment on `n` simulated CPU devices.
     /// Override `adaptive.model` / `adaptive.node` to adapt for a
     /// different deployment.
     pub fn adaptive(n: usize) -> ServeConfig {
@@ -155,54 +148,6 @@ impl ServeConfig {
     }
 }
 
-/// Per-run state of the adaptation loop: the shared [`AdaptLoop`]
-/// (the exact implementation the replay acceptance tests validate)
-/// plus the platform's latency model, resolved once so the per-batch
-/// path never touches the global model-cache lock.
-struct AdaptState {
-    control: AdaptLoop,
-    latency: std::sync::Arc<crate::sim::LatencyModel>,
-}
-
-impl AdaptState {
-    fn new(cfg: &AdaptiveServing) -> AdaptState {
-        let mut control = AdaptLoop::new(cfg.controller.clone(), cfg.window_capacity);
-        if let Some(path) = &cfg.plan_cache {
-            match PlanCache::load(path, &cfg.model, &cfg.node) {
-                Ok(cache) => control.cache = cache,
-                Err(e) => eprintln!("plan cache {}: {e:#} (starting cold)", path.display()),
-            }
-        }
-        AdaptState {
-            control,
-            latency: crate::sim::LatencyModel::cached(&cfg.node.gpu, PLANNER_SEED),
-        }
-    }
-
-    /// Observe one packed batch (plus the previous batch's measured
-    /// latency, closing the loop on mispredicted plans) and return the
-    /// (prefill, decode) plans the controller lands on. The grid engine
-    /// executes whatever the planner picked — hybrids included.
-    fn select(
-        &mut self,
-        cfg: &AdaptiveServing,
-        requests: &[Request],
-        measured: Option<f64>,
-    ) -> Result<(ShardPlan, ShardPlan)> {
-        let planner = HapPlanner::with_latency(&cfg.model, &cfg.node, self.latency.clone());
-        let samples = requests.iter().map(|req| TrafficSample {
-            prompt: req.prompt.len(),
-            generate: req.max_new_tokens,
-            batch: requests.len(),
-        });
-        let (plan, _) = self.control.step(&planner, samples, None, measured)?;
-        Ok((
-            ShardPlan::new(plan.attn, plan.expert_prefill),
-            ShardPlan::new(plan.attn, plan.expert_decode),
-        ))
-    }
-}
-
 /// Aggregate results of a serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
@@ -213,8 +158,9 @@ pub struct ServeReport {
     pub decode_time: f64,
 }
 
-/// Serve a whole workload to completion on the PJRT artifacts: builds
-/// one executor for the run and delegates to [`serve_on`].
+/// Deprecated entry point: serve a whole workload to completion on the
+/// PJRT artifacts (gang-scheduled). Builds one executor for the run and
+/// delegates to [`serve_on`]. New code: [`crate::serving::Engine`].
 pub fn serve_workload(
     rt: &PjrtRuntime,
     config: &ServeConfig,
@@ -224,129 +170,24 @@ pub fn serve_workload(
     serve_on(&mut exec, config, workload)
 }
 
-/// Serve a whole workload on one long-lived executor (the synchronous
-/// core the worker thread loops over). The executor's shard state
-/// persists across batches: weight uploads happen once per layout, and
-/// only adaptive plan switches re-materialize shards.
+/// Deprecated entry point: serve a whole workload on one caller-owned
+/// long-lived executor, gang-scheduled. The executor's shard state
+/// persists across batches and across calls. Thin wrapper over the
+/// engine core ([`serve_with`] with [`Scheduling::Gang`]); a workload
+/// larger than `queue_capacity` drains through scheduler iterations
+/// instead of aborting.
 pub fn serve_on(
     exec: &mut ModelExecutor,
     config: &ServeConfig,
     workload: Vec<Request>,
 ) -> Result<ServeReport> {
-    let m = exec.meta().clone();
-    let batcher = Batcher::new(m.batch, m.prefill_len, m.max_len - m.prefill_len);
-    let mut router = Router::new(config.queue_capacity, config.policy);
-    for req in workload {
-        if !router.submit(req) {
-            anyhow::bail!("router rejected request (queue capacity {})", config.queue_capacity);
-        }
-    }
-
-    let fixed_prefill = ShardPlan::new(config.attn, config.expert_prefill);
-    let fixed_decode = ShardPlan::new(config.attn, config.expert_decode);
-    let mut adapt = config.adaptive.as_ref().map(AdaptState::new);
-    let stats0 = exec.stats();
-
-    let mut metrics = Metrics::new();
-    let mut responses = Vec::new();
-    let mut prefill_time = 0.0;
-    let mut decode_time = 0.0;
-    let mut last_measured: Option<f64> = None;
-    let run_start = Instant::now();
-
-    while !router.is_empty() {
-        let batch = batcher.pack(router.take(m.batch));
-        // Per-batch strategy selection (adaptive) or the fixed plan.
-        let (prefill_plan, decode_plan) = match (&mut adapt, &config.adaptive) {
-            (Some(state), Some(cfg)) => {
-                let switches_before = state.control.controller.switches;
-                let picked = state.select(cfg, &batch.requests, last_measured)?;
-                metrics.replans += state.control.controller.switches - switches_before;
-                picked
-            }
-            _ => (fixed_prefill, fixed_decode),
-        };
-        // Declare the batch's plans: evicts stale layouts, materializes
-        // missing shards — the measured resharding work of a switch.
-        exec.begin_batch(&prefill_plan, &decode_plan)?;
-
-        // ---- Prefill.
-        let t0 = Instant::now();
-        let logits = exec.prefill(&batch.tokens, &prefill_plan)?;
-        let batch_prefill = t0.elapsed().as_secs_f64();
-        prefill_time += batch_prefill;
-        metrics.batches_prefilled += 1;
-        if prefill_plan.expert != decode_plan.expert {
-            metrics.transitions += 1;
-        }
-
-        let first = argmax_rows(&logits);
-        let first_time = Instant::now();
-        let mut generated: Vec<Vec<i32>> = (0..batch.live())
-            .map(|slot| vec![first[slot] as i32])
-            .collect();
-        let mut last: Vec<i32> = first.iter().map(|&t| t as i32).collect();
-        let mut remaining = batch.remaining.clone();
-        for r in remaining.iter_mut().take(batch.live()) {
-            *r = r.saturating_sub(1);
-        }
-
-        // ---- Decode until every live slot finishes.
-        let t0 = Instant::now();
-        while remaining.iter().take(batch.live()).any(|&r| r > 0) {
-            let logits = exec.decode_step(&last, &decode_plan)?;
-            metrics.decode_steps += 1;
-            let next = argmax_rows(&logits);
-            for slot in 0..batch.live() {
-                if remaining[slot] > 0 {
-                    generated[slot].push(next[slot] as i32);
-                    remaining[slot] -= 1;
-                }
-            }
-            last = next.iter().map(|&t| t as i32).collect();
-        }
-        let batch_decode = t0.elapsed().as_secs_f64();
-        decode_time += batch_decode;
-        // Feed the measured latency of this batch into the next
-        // adaptation step (demotes consistently mispredicted plans).
-        last_measured = Some(batch_prefill + batch_decode);
-
-        // ---- Retire.
-        let now = Instant::now();
-        for (slot, req) in batch.requests.iter().enumerate() {
-            let latency = now.duration_since(req.arrived).as_secs_f64();
-            let ttft = first_time.duration_since(req.arrived).as_secs_f64();
-            metrics.observe_request(latency, ttft, generated[slot].len());
-            responses.push(Response {
-                id: req.id,
-                tokens: generated[slot].clone(),
-                latency,
-                ttft,
-            });
-        }
-    }
-
-    metrics.wall_time = run_start.elapsed().as_secs_f64();
-    let stats = exec.stats();
-    metrics.weight_uploads = stats.materializations - stats0.materializations;
-    metrics.reshards = stats.reshards - stats0.reshards;
-    metrics.reshard_time = stats.reshard_seconds - stats0.reshard_seconds;
-
-    // Persist the warmed plan cache for the next run.
-    if let (Some(state), Some(cfg)) = (&adapt, &config.adaptive) {
-        if let Some(path) = &cfg.plan_cache {
-            if let Err(e) = state.control.cache.save(path) {
-                eprintln!("could not save plan cache {}: {e:#}", path.display());
-            }
-        }
-    }
-    Ok(ServeReport { metrics, responses, prefill_time, decode_time })
+    serve_with(exec, config, Scheduling::Gang, workload)
 }
 
 /// Spawn the server on a worker thread; returns a submission handle.
 pub struct ServerHandle {
     tx: std::sync::mpsc::Sender<Request>,
-    done_rx: std::sync::mpsc::Receiver<ServeReport>,
+    done_rx: std::sync::mpsc::Receiver<Result<ServeReport>>,
 }
 
 impl ServerHandle {
@@ -356,12 +197,16 @@ impl ServerHandle {
             .map_err(|_| anyhow::anyhow!("server thread terminated"))
     }
 
-    /// Close the submission channel and wait for the final report.
+    /// Close the submission channel and wait for the final report. A
+    /// serving failure on the worker thread surfaces here as the real
+    /// error (the done channel carries `Result<ServeReport>`); only an
+    /// actual thread death reports as a panic.
     pub fn finish(self) -> Result<ServeReport> {
         drop(self.tx);
-        self.done_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("server thread panicked"))
+        match self.done_rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(anyhow::anyhow!("server thread panicked")),
+        }
     }
 }
 
@@ -369,28 +214,28 @@ impl ServerHandle {
 /// handle is finished, then serving everything and reporting.
 ///
 /// The PJRT runtime is not `Send` (FFI handles), so the thread owns its
-/// own runtime loaded from `artifacts_dir`.
+/// own runtime loaded from `artifacts_dir`. Errors — including a failed
+/// artifact load — propagate through the handle instead of being
+/// swallowed to stderr.
 pub fn spawn_server(
     artifacts_dir: std::path::PathBuf,
     config: ServeConfig,
 ) -> Result<ServerHandle> {
     let (tx, rx) = std::sync::mpsc::channel::<Request>();
-    let (done_tx, done_rx) = std::sync::mpsc::channel::<ServeReport>();
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<Result<ServeReport>>();
     std::thread::spawn(move || {
         let rt = match PjrtRuntime::load(&artifacts_dir) {
             Ok(rt) => rt,
             Err(e) => {
-                eprintln!("server: failed to load artifacts: {e:#}");
+                let _ = done_tx.send(Err(e.context(format!(
+                    "server: failed to load artifacts from {}",
+                    artifacts_dir.display()
+                ))));
                 return;
             }
         };
         let workload: Vec<Request> = rx.iter().collect();
-        match serve_workload(&rt, &config, workload) {
-            Ok(report) => {
-                let _ = done_tx.send(report);
-            }
-            Err(e) => eprintln!("server: serving failed: {e:#}"),
-        }
+        let _ = done_tx.send(serve_workload(&rt, &config, workload));
     });
     Ok(ServerHandle { tx, done_rx })
 }
@@ -398,7 +243,6 @@ pub fn spawn_server(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::DeviceGrid;
 
     #[test]
     fn configs_label_correctly() {
@@ -410,30 +254,24 @@ mod tests {
     }
 
     #[test]
-    fn adaptive_selection_returns_native_grid_plans() {
-        // The adaptation loop needs no runtime: feed it a batch of
-        // requests and check it lands on plans that lower to
-        // well-formed device grids at the node's device count — the
-        // planner's pick is executed natively (hybrid EP×TP included),
-        // never projected onto a pure layout.
-        let config = ServeConfig::adaptive(4);
-        let acfg = config.adaptive.as_ref().unwrap();
-        let mut state = AdaptState::new(acfg);
-        let reqs: Vec<Request> =
-            (0..4).map(|i| Request::new(i, vec![1; 24], 16)).collect();
-        let (pre, dec) = state.select(acfg, &reqs, None).unwrap();
-        assert_eq!(pre.attn, dec.attn, "attention is pinned across stages");
-        for plan in [&pre, &dec] {
-            assert_eq!(plan.devices(), 4);
-            let grid = DeviceGrid::lower(plan).unwrap();
-            let m = acfg.model.clone();
-            grid.check_dims(m.q_heads, m.kv_heads, m.num_experts, m.moe_inter_size, 4)
-                .unwrap();
-        }
-        assert!(state.control.controller.active().is_some());
-        // A second identical batch is a cache hit, not a re-solve.
-        state.select(acfg, &reqs, None).unwrap();
-        assert_eq!(state.control.cache.hits, 1);
-        assert_eq!(state.control.cache.misses, 1);
+    fn spawn_server_propagates_load_errors_through_finish() {
+        // Regression for the swallowed-error path: a bad artifacts dir
+        // used to print to stderr and report "server thread panicked";
+        // the Result-carrying done channel must surface the real cause.
+        let handle = spawn_server(
+            std::path::PathBuf::from("/nonexistent/hap-artifacts"),
+            ServeConfig::tp(1),
+        )
+        .unwrap();
+        let err = handle.finish().expect_err("missing artifacts must fail");
+        let rendered = format!("{err:#}");
+        assert!(
+            rendered.contains("failed to load artifacts"),
+            "real error lost: {rendered}"
+        );
+        assert!(
+            !rendered.contains("panicked"),
+            "load failure misreported as a panic: {rendered}"
+        );
     }
 }
