@@ -9,6 +9,14 @@
 //! occupancy, decode-step counts, and weight uploads (which must stay
 //! flat across iterations under the fixed plan). Token equality between
 //! the two modes is asserted before anything is timed.
+//!
+//! Second section: **chunked prefill** on a mixed long-prompt/
+//! short-decode trace (64-token padded prompts, 2–6 token
+//! generations). Unchunked streaming still head-of-line-blocks peers
+//! for a whole prompt at every admission; with `prefill_chunk` the
+//! prompt spreads across iterations and short-decode peers escape
+//! between chunks, improving their p95 TPOT — asserted, with tokens
+//! bit-identical to gang and to unchunked streaming.
 
 use hap::benchkit::{banner, write_results, Table};
 use hap::model::ModelExecutor;
@@ -20,9 +28,18 @@ use hap::util::rng::Rng;
 const SHORT_GEN: usize = 2;
 const LONG_GEN: usize = 24;
 const REQUESTS: usize = 24;
+/// Chunked-prefill section: prompt tokens per joiner per iteration.
+const PREFILL_CHUNK: usize = 8;
+const LONG_PROMPT_REQUESTS: usize = 24;
 
 fn meta() -> TinyModelMeta {
     TinyModelMeta::host_demo()
+}
+
+/// Long-prompt model shape for the chunked-prefill section: 64-token
+/// padded prompts make one admission's prefill dwarf a decode step.
+fn long_prompt_meta() -> TinyModelMeta {
+    TinyModelMeta { prefill_len: 64, max_len: 96, ..TinyModelMeta::host_demo() }
 }
 
 /// Interleaved short/long trace: every other request is a quick
@@ -46,6 +63,39 @@ fn run(scheduling: Scheduling, seed: u64) -> ServeReport {
     let mut exec = ModelExecutor::host(weights);
     let config = ServeConfig::tp(4);
     serve_with(&mut exec, &config, scheduling, trace(&m, seed)).unwrap()
+}
+
+/// Mixed long-prompt/short-decode trace: every prompt pads to the full
+/// 64 tokens (prefill-heavy), generations stay short (2–6), so peers
+/// finish mid-way through a joiner's prefill window.
+fn long_trace(m: &TinyModelMeta, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..LONG_PROMPT_REQUESTS as u64)
+        .map(|id| {
+            let len = rng.range(m.prefill_len / 2, m.prefill_len);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+            let gen = rng.range(2, 6);
+            Request::new(id, prompt, gen)
+        })
+        .collect()
+}
+
+/// Long-prompt trace under a given scheduler/chunk size (0 = unchunked).
+fn run_long(scheduling: Scheduling, chunk: usize, seed: u64) -> ServeReport {
+    let m = long_prompt_meta();
+    let weights = hap::model::WeightStore::synthetic(&m, 42);
+    let mut exec = ModelExecutor::host(weights);
+    let mut config = ServeConfig::tp(4);
+    config.prefill_chunk = chunk;
+    serve_with(&mut exec, &config, scheduling, long_trace(&m, seed)).unwrap()
+}
+
+/// Median of timing samples — every wall-clock inequality this bench
+/// gates CI on is compared on medians over three runs, so one noisy
+/// shared-runner sample cannot flip it.
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite timing sample"));
+    v[v.len() / 2]
 }
 
 fn row(t: &mut Table, name: &str, m: &Metrics) {
@@ -116,28 +166,99 @@ fn main() -> anyhow::Result<()> {
     // The acceptance bar: convoy elimination shows up as better mean
     // TTFT and better tail latency on the mixed trace, with weight
     // uploads flat (one layout's worth) for both fixed-plan runs.
-    assert!(
-        sm.mean_ttft() < gm.mean_ttft(),
-        "streaming mean TTFT {:.4}s not better than gang {:.4}s",
-        sm.mean_ttft(),
-        gm.mean_ttft()
-    );
-    assert!(
-        sm.latency_p(95.0) < gm.latency_p(95.0),
-        "streaming p95 latency {:.4}s not better than gang {:.4}s",
-        sm.latency_p(95.0),
-        gm.latency_p(95.0)
-    );
+    // Timing inequalities compare medians over three runs per mode.
+    let mut gang_ttft = vec![gm.mean_ttft()];
+    let mut gang_p95 = vec![gm.latency_p(95.0)];
+    let mut str_ttft = vec![sm.mean_ttft()];
+    let mut str_p95 = vec![sm.latency_p(95.0)];
+    for _ in 0..2 {
+        let g = run(Scheduling::Gang, 17);
+        gang_ttft.push(g.metrics.mean_ttft());
+        gang_p95.push(g.metrics.latency_p(95.0));
+        let s = run(Scheduling::Streaming, 17);
+        str_ttft.push(s.metrics.mean_ttft());
+        str_p95.push(s.metrics.latency_p(95.0));
+    }
+    let (gang_ttft, gang_p95) = (median(gang_ttft), median(gang_p95));
+    let (str_ttft, str_p95) = (median(str_ttft), median(str_p95));
     assert_eq!(
         sm.weight_uploads, gm.weight_uploads,
         "fixed-plan runs must upload exactly one layout's worth of shards"
     );
     println!(
-        "mean TTFT {:.2}x better, p95 latency {:.2}x better, {} vs {} decode steps",
-        gm.mean_ttft() / sm.mean_ttft(),
-        gm.latency_p(95.0) / sm.latency_p(95.0),
+        "mean TTFT {:.2}x better, p95 latency {:.2}x better (medians of 3), {} vs {} decode steps",
+        gang_ttft / str_ttft,
+        gang_p95 / str_p95,
         sm.decode_steps,
         gm.decode_steps,
+    );
+
+    // ---- Chunked prefill on the long-prompt/short-decode trace.
+    let gang_long = run_long(Scheduling::Gang, 0, 23);
+    let unchunked = run_long(Scheduling::Streaming, 0, 23);
+    let chunked = run_long(Scheduling::Streaming, PREFILL_CHUNK, 23);
+    assert_eq!(
+        key(&gang_long),
+        key(&unchunked),
+        "unchunked streaming changed tokens on the long-prompt trace"
+    );
+    assert_eq!(
+        key(&gang_long),
+        key(&chunked),
+        "chunked prefill changed generated tokens"
+    );
+    println!(
+        "\nchunked prefill ({PREFILL_CHUNK}-token chunks, 64-token prompts): tokens bit-identical"
+    );
+    let mut t2 = Table::new(&[
+        "streaming",
+        "tok/s",
+        "tpot mean (ms)",
+        "tpot p95 (ms)",
+        "ttft p95 (ms)",
+        "lat p95 (ms)",
+        "prefill chunks",
+    ]);
+    let long_row = |t: &mut Table, name: &str, m: &Metrics| {
+        t.row(&[
+            name.into(),
+            format!("{:.1}", m.throughput()),
+            format!("{:.2}", m.mean_tpot() * 1e3),
+            format!("{:.2}", m.tpot_p(95.0) * 1e3),
+            format!("{:.1}", m.ttft_p(95.0) * 1e3),
+            format!("{:.1}", m.latency_p(95.0) * 1e3),
+            format!("{}", m.prefill_chunks),
+        ]);
+    };
+    long_row(&mut t2, "unchunked", &unchunked.metrics);
+    long_row(&mut t2, &format!("chunk={PREFILL_CHUNK}"), &chunked.metrics);
+    t2.print();
+
+    let um = &unchunked.metrics;
+    let cm = &chunked.metrics;
+    // The acceptance bar: short-decode peers escape between chunks
+    // instead of stalling behind a whole 64-token prefill, so their
+    // tail time-per-output-token improves. Compared as medians over
+    // three runs per mode, like the gang-vs-streaming asserts above.
+    let mut un_p95 = vec![um.tpot_p(95.0)];
+    let mut ch_p95 = vec![cm.tpot_p(95.0)];
+    for _ in 0..2 {
+        un_p95.push(run_long(Scheduling::Streaming, 0, 23).metrics.tpot_p(95.0));
+        ch_p95.push(
+            run_long(Scheduling::Streaming, PREFILL_CHUNK, 23).metrics.tpot_p(95.0),
+        );
+    }
+    let (un_p95, ch_p95) = (median(un_p95), median(ch_p95));
+    assert!(
+        cm.prefill_chunks > cm.batches_prefilled,
+        "prompts were not actually split into chunks"
+    );
+    println!(
+        "peer p95 TPOT {:.2}x better (median of 3), mean TPOT {:.2}x, {} chunks over {} prefills",
+        un_p95 / ch_p95,
+        um.mean_tpot() / cm.mean_tpot().max(1e-12),
+        cm.prefill_chunks,
+        cm.batches_prefilled,
     );
 
     let summary = Json::obj(vec![
@@ -155,11 +276,59 @@ fn main() -> anyhow::Result<()> {
         ("gang", metrics_json(gm)),
         ("streaming", metrics_json(sm)),
         (
+            // Ratios from the same median-of-3 samples the acceptance
+            // asserts use, so the artifact's verdict is self-consistent
+            // (the per-engine blocks above are single-run snapshots).
             "improvement",
             Json::obj(vec![
-                ("ttft_mean", (gm.mean_ttft() / sm.mean_ttft()).into()),
-                ("latency_p95", (gm.latency_p(95.0) / sm.latency_p(95.0)).into()),
-                ("throughput", (sm.throughput() / gm.throughput().max(1e-12)).into()),
+                ("ttft_mean_median3", (gang_ttft / str_ttft.max(1e-12)).into()),
+                ("latency_p95_median3", (gang_p95 / str_p95.max(1e-12)).into()),
+                ("throughput_run1", (sm.throughput() / gm.throughput().max(1e-12)).into()),
+            ]),
+        ),
+        (
+            "chunked_prefill",
+            Json::obj(vec![
+                (
+                    "trace",
+                    Json::obj(vec![
+                        ("requests", LONG_PROMPT_REQUESTS.into()),
+                        ("prompt_tokens", long_prompt_meta().prefill_len.into()),
+                        ("prefill_chunk", PREFILL_CHUNK.into()),
+                    ]),
+                ),
+                (
+                    "unchunked",
+                    Json::obj(vec![
+                        ("tpot_mean_s", um.mean_tpot().into()),
+                        ("tpot_p95_s", um.tpot_p(95.0).into()),
+                        ("tpot_p95_median3_s", un_p95.into()),
+                        ("ttft_p95_s", um.ttft_p(95.0).into()),
+                        ("latency_p95_s", um.latency_p(95.0).into()),
+                        ("prefill_chunks", um.prefill_chunks.into()),
+                    ]),
+                ),
+                (
+                    "chunked",
+                    Json::obj(vec![
+                        ("tpot_mean_s", cm.mean_tpot().into()),
+                        ("tpot_p95_s", cm.tpot_p(95.0).into()),
+                        ("tpot_p95_median3_s", ch_p95.into()),
+                        ("ttft_p95_s", cm.ttft_p(95.0).into()),
+                        ("latency_p95_s", cm.latency_p(95.0).into()),
+                        ("prefill_chunks", cm.prefill_chunks.into()),
+                    ]),
+                ),
+                (
+                    "improvement",
+                    Json::obj(vec![
+                        ("tpot_p95_median3", (un_p95 / ch_p95.max(1e-12)).into()),
+                        (
+                            "tpot_mean_run1",
+                            (um.mean_tpot() / cm.mean_tpot().max(1e-12)).into(),
+                        ),
+                    ]),
+                ),
             ]),
         ),
     ]);
@@ -171,6 +340,24 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("wrote {}", root_path.display());
     }
+
+    // Wall-clock acceptance bars LAST, after the artifacts are on
+    // disk: a perf inversion on a noisy shared runner still leaves a
+    // complete, well-formed BENCH_serving_api.json for inspection (and
+    // for CI's artifact assertion) while the nonzero exit flags the
+    // regression. All three are medians of three runs per mode.
+    assert!(
+        str_ttft < gang_ttft,
+        "streaming median mean-TTFT {str_ttft:.4}s not better than gang {gang_ttft:.4}s"
+    );
+    assert!(
+        str_p95 < gang_p95,
+        "streaming median p95 latency {str_p95:.4}s not better than gang {gang_p95:.4}s"
+    );
+    assert!(
+        ch_p95 < un_p95,
+        "chunked prefill median p95 TPOT {ch_p95:.5}s not better than unchunked {un_p95:.5}s"
+    );
     println!("serving_api bench OK");
     Ok(())
 }

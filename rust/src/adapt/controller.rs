@@ -103,11 +103,13 @@ pub struct SwitchController {
     current_dwell: usize,
     /// EWMA of completed phase lengths, in batches.
     dwell_ewma: f64,
-    /// EWMA of measured/predicted per-batch latency per plan signature
-    /// — the closed loop on mispredicted plans. A plan that keeps
-    /// running slower than its prediction gets its active latency
-    /// scaled up in the break-even economics, so a candidate can
-    /// displace it ("demotion") even when raw predictions would not.
+    /// EWMA of measured/predicted latency per plan signature (the
+    /// [`crate::adapt::AdaptLoop`] normalizes both sides to seconds
+    /// per generated token) — the closed loop on mispredicted plans. A
+    /// plan that keeps running slower than its prediction gets its
+    /// active latency scaled up in the break-even economics, so a
+    /// candidate can displace it ("demotion") even when raw
+    /// predictions would not.
     mispredict: HashMap<String, f64>,
     pub switches: usize,
     pub suppressed: usize,
@@ -131,10 +133,14 @@ impl SwitchController {
         }
     }
 
-    /// Fold one measured-vs-predicted per-batch latency observation for
-    /// the plan with `signature` into its mispredict EWMA. Callers feed
-    /// this with the latency actually measured for the batch that
-    /// executed under that plan.
+    /// Fold one measured-vs-predicted latency observation for the plan
+    /// with `signature` into its mispredict EWMA. Only the
+    /// `measured / predicted` *ratio* enters the economics, so callers
+    /// may feed any granularity as long as both sides share units —
+    /// [`crate::adapt::AdaptLoop`] normalizes both to **seconds per
+    /// generated token**, which makes gang observations (one whole
+    /// batch) and streaming observations (a dwell window of scheduler
+    /// iterations between admission boundaries) commensurable.
     pub fn observe_measured(&mut self, signature: &str, measured: f64, predicted: f64) {
         if !(measured > 0.0) || !(predicted > 0.0) {
             return;
@@ -142,6 +148,18 @@ impl SwitchController {
         let ratio = (measured / predicted).clamp(MISPREDICT_OBS_MIN, MISPREDICT_OBS_MAX);
         let e = self.mispredict.entry(signature.to_string()).or_insert(1.0);
         *e = 0.5 * *e + 0.5 * ratio;
+    }
+
+    /// Raw (unclamped) mispredict EWMA for a plan signature — `None`
+    /// until the first measured observation for that plan lands.
+    pub fn mispredict_ewma(&self, signature: &str) -> Option<f64> {
+        self.mispredict.get(signature).copied()
+    }
+
+    /// Number of plan signatures with at least one measured-latency
+    /// observation (lets callers assert the feedback loop is closed).
+    pub fn mispredict_observations(&self) -> usize {
+        self.mispredict.len()
     }
 
     /// The correction applied to the active plan's predicted latency in

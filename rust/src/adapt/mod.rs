@@ -52,6 +52,37 @@ use crate::config::scenario::Scenario;
 use crate::planner::{HapPlanner, HybridPlan};
 use crate::Result;
 
+/// A measured wall-clock observation for the adaptation loop: how many
+/// seconds of model execution produced how many generated tokens under
+/// the active plan since the previous consult.
+///
+/// Gang and streaming schedulers observe latency at different
+/// granularities — one whole batch vs a dwell window of scheduler
+/// iterations (decode steps + prefill chunks) between admission
+/// boundaries. Normalizing both to **seconds per generated token**
+/// ([`MeasuredLatency::per_token`]) makes them commensurable with each
+/// other and with the planner's predictions (which [`AdaptLoop::step`]
+/// divides by the traffic key's `generate × batch` tokens before
+/// feeding the controller's mispredict EWMA).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeasuredLatency {
+    /// Wall-clock seconds of execution observed.
+    pub seconds: f64,
+    /// Tokens generated in that time.
+    pub tokens: usize,
+}
+
+impl MeasuredLatency {
+    pub fn new(seconds: f64, tokens: usize) -> MeasuredLatency {
+        MeasuredLatency { seconds, tokens }
+    }
+
+    /// Seconds per generated token (the normalized observation).
+    pub fn per_token(&self) -> f64 {
+        self.seconds / self.tokens.max(1) as f64
+    }
+}
+
 /// The assembled adaptation loop — window → cache → controller — as
 /// one per-batch step. Both the serving loop
 /// ([`crate::serving::ServeConfig::adaptive`]) and the replay harness
@@ -93,23 +124,36 @@ impl AdaptLoop {
     /// serving loop, which only has the window's view).
     ///
     /// `measured` closes the loop on mispredicted plans: the wall-clock
-    /// per-batch latency of the *previous* batch (which executed under
-    /// the current active plan on the previous key's traffic). It is
-    /// folded into the controller's mispredict EWMA for that plan, so a
-    /// plan that keeps overrunning its prediction gets demoted.
+    /// execution observed since the *previous* consult (which ran under
+    /// the current active plan on the previous key's traffic) — one
+    /// whole batch in gang mode, the dwell window of scheduler
+    /// iterations between admission boundaries in streaming mode. Both
+    /// the observation and the planner's prediction for the previous
+    /// key are normalized to **seconds per generated token** before
+    /// being folded into the controller's mispredict EWMA, so the two
+    /// cadences feed the same units and a plan that keeps overrunning
+    /// its prediction gets demoted either way.
     pub fn step<I: IntoIterator<Item = TrafficSample>>(
         &mut self,
         planner: &HapPlanner,
         samples: I,
         eval: Option<&Scenario>,
-        measured: Option<f64>,
+        measured: Option<MeasuredLatency>,
     ) -> Result<(HybridPlan, SwitchDecision)> {
-        // Measured-latency feedback for the batch that just ran.
+        // Measured-latency feedback for the window that just ran,
+        // per-token normalized on both sides (the prediction covers a
+        // whole batch of the previous key's traffic: `generate` tokens
+        // for each of `batch` rows).
         if let (Some(m), Some(active), Some(lk)) =
             (measured, self.controller.active().cloned(), self.last_key)
         {
             let predicted = replay::predicted_plan_latency(planner, &active, &lk.to_scenario());
-            self.controller.observe_measured(&active.signature(), m, predicted);
+            let key_tokens = (lk.generate * lk.batch).max(1) as f64;
+            self.controller.observe_measured(
+                &active.signature(),
+                m.per_token(),
+                predicted / key_tokens,
+            );
         }
         for s in samples {
             self.window.observe(s);
@@ -181,5 +225,34 @@ mod tests {
         assert_eq!(al.cache.invalidations, 1);
         // Re-adoption is not a weight-moving switch.
         assert_eq!(al.controller.switches, 0);
+    }
+
+    #[test]
+    fn measured_feedback_is_per_token_normalized() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let mut al = AdaptLoop::new(ControllerConfig::default(), 16);
+        let samples =
+            || (0..4).map(|_| TrafficSample { prompt: 512, generate: 64, batch: 8 });
+        al.step(&planner, samples(), None, None).unwrap();
+        let active = al.controller.active().unwrap().clone();
+        let key = al.window.scenario().unwrap();
+        let batch_pred = replay::predicted_plan_latency(&planner, &active, &key.to_scenario());
+        let tokens = key.generate * key.batch;
+        // Observe a window that ran exactly 2× slower than predicted,
+        // expressed as aggregate seconds over `tokens` generated
+        // tokens. The per-token normalization on BOTH sides must land
+        // the EWMA at 0.5·1 + 0.5·2 = 1.5 — a unit mismatch (batch
+        // seconds against per-token seconds) would clamp the ratio to
+        // the 0.25 floor and land at 0.625 instead.
+        let measured = MeasuredLatency::new(2.0 * batch_pred, tokens);
+        al.step(&planner, samples(), None, Some(measured)).unwrap();
+        let e = al
+            .controller
+            .mispredict_ewma(&active.signature())
+            .expect("measured observation never reached the controller");
+        assert!((e - 1.5).abs() < 1e-9, "per-token normalization broken: EWMA {e}");
+        assert_eq!(al.controller.mispredict_observations(), 1);
     }
 }

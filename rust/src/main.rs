@@ -248,6 +248,11 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
     spec.flag("plan", "hap", "plan: hap | tp | adaptive");
     spec.flag("tp", "4", "device count (attention TP degree)");
     spec.flag("plan-cache", "", "persist the adaptive plan cache at this path");
+    spec.flag(
+        "prefill-chunk",
+        "0",
+        "streaming engine: max prompt tokens prefilled per joiner per iteration (0 = unchunked)",
+    );
     let p = spec.parse(args).map_err(anyhow::Error::msg)?;
 
     let scheduling = hap::serving::Scheduling::parse(p.get("engine"))
@@ -273,6 +278,10 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             } else {
                 eprintln!("--plan-cache only applies to --plan adaptive (ignored)");
             }
+        }
+        config.prefill_chunk = usize_flag(&p, "prefill-chunk")?;
+        if config.prefill_chunk > 0 && scheduling != hap::serving::Scheduling::Streaming {
+            eprintln!("--prefill-chunk only applies to --engine streaming (ignored)");
         }
         Ok(config)
     };

@@ -517,10 +517,17 @@ impl<'rt> ModelExecutor<'rt> {
         Ok(())
     }
 
-    /// Chunked prefill for a joiner: run one padded prompt (`[S]`
-    /// tokens) through the model in batch slot `slot`, writing its KV
-    /// at positions `0..S` while every other slot's state stays intact.
-    /// Returns the slot's last-position logits `[1, V]`.
+    /// **Resumable** chunked prefill for a joiner: run the next chunk
+    /// of the slot's padded prompt (`tokens`, `1..=S - slot_pos` of
+    /// them) through the model in batch slot `slot`, writing its KV at
+    /// positions `slot_pos..slot_pos + tokens.len()` while every other
+    /// slot's state stays intact. The slot's cursor (`slot_pos`)
+    /// advances by the chunk length; the slot becomes decodable once it
+    /// reaches `prefill_len` ([`Self::decode_slots`] skips it until
+    /// then). Returns the chunk's last-position logits `[1, V]` — only
+    /// the *final* chunk's logits are the prompt's first-token logits
+    /// (identical to a one-shot prefill of the whole row; intermediate
+    /// chunks' logits are a mid-prompt byproduct callers discard).
     pub fn prefill_slot(
         &mut self,
         slot: usize,
@@ -531,18 +538,20 @@ impl<'rt> ModelExecutor<'rt> {
             anyhow::bail!("prefill_slot runs on the host backend only (see begin_session)");
         }
         let m = self.meta().clone();
-        let s = m.prefill_len;
-        if tokens.len() != s {
-            anyhow::bail!("prefill_slot expects {} tokens, got {}", s, tokens.len());
-        }
+        let c = tokens.len();
         if !self.session {
             anyhow::bail!("prefill_slot outside a session (call begin_session)");
         }
         if !self.slot_live.get(slot).copied().unwrap_or(false) {
             anyhow::bail!("slot {slot} not claimed");
         }
-        if self.slot_pos[slot] != 0 {
-            anyhow::bail!("slot {slot} already prefilled");
+        let start = self.slot_pos[slot];
+        if c == 0 || start + c > m.prefill_len {
+            anyhow::bail!(
+                "slot {slot} chunk {start}..{} outside the {}-token prompt",
+                start + c,
+                m.prefill_len
+            );
         }
         let pinned = self.attn.ok_or_else(|| anyhow!("session has no pinned attention"))?;
         if plan.attn != pinned {
@@ -559,7 +568,7 @@ impl<'rt> ModelExecutor<'rt> {
         let bg = m.batch / plan.attn.dp;
         let (g, r) = (slot / bg, slot % bg);
 
-        let mut x = self.embed(tokens, 1, s, &m)?;
+        let mut x = self.embed(tokens, 1, c, &m)?;
         for l in 0..m.layers {
             let a_out = {
                 let roles = &grid.roles;
@@ -568,7 +577,9 @@ impl<'rt> ModelExecutor<'rt> {
                 let xr = &x;
                 // Only the slot's DP group computes (and stores KV);
                 // the row's output is the group's TP partial-sum, folded
-                // in the same member order as the gang combine.
+                // in the same member order as the gang combine. The
+                // ranged kernel resumes against the slot's cache row:
+                // earlier chunks' KV is read back, this chunk's written.
                 let outs: Vec<Option<HostTensor>> =
                     map_devices(self.mode, &mut self.devices, |st| {
                         let role = roles[st.device];
@@ -579,12 +590,20 @@ impl<'rt> ModelExecutor<'rt> {
                             .shards
                             .get(&(fam.clone(), l))
                             .ok_or_else(|| anyhow!("attn shard not resident"))?;
-                        let (out, k, v) =
-                            kernels::attention_prefill(xr, w, q_l, kv_l, hd)?;
                         let cache = st.kv[l]
                             .as_mut()
                             .ok_or_else(|| anyhow!("session KV missing"))?;
-                        write_slot_kv(cache, r, &k, &v);
+                        let out = kernels::attention_prefill_ranged(
+                            xr,
+                            &mut cache.k,
+                            &mut cache.v,
+                            r,
+                            start,
+                            w,
+                            q_l,
+                            kv_l,
+                            hd,
+                        )?;
                         Ok(Some(out))
                     })?;
                 // Same order-deterministic fold as the gang combine.
@@ -594,18 +613,21 @@ impl<'rt> ModelExecutor<'rt> {
             let e_out = self.expert_layer(&x, l, &grid, &m, "prefill")?;
             x.add_assign(&e_out);
         }
-        self.slot_pos[slot] = s;
+        self.slot_pos[slot] = start + c;
         self.head(&x, &m)
     }
 
-    /// One decode iteration over the live slots: each claimed slot
-    /// advances by one token at its own position; free slots are
-    /// skipped by attention (no KV read/write, zero attention output)
-    /// but still ride through the shared embed/expert/head math, so
-    /// their logits rows contain values — callers must consult
-    /// [`Self::slot_liveness`] and ignore non-live rows. `last_tokens`
-    /// is the full `[B]` table (entries for free slots are ignored).
-    /// Returns logits `[B, V]`.
+    /// One decode iteration over the live slots: each **fully
+    /// prefilled** claimed slot advances by one token at its own
+    /// position. Free slots — and slots mid-way through a chunked
+    /// prefill (`0 < slot_pos < prefill_len`) — are skipped by
+    /// attention (no KV read/write, zero attention output, no position
+    /// advance) but still ride through the shared embed/expert/head
+    /// math, so their logits rows contain values — callers must
+    /// consult [`Self::slot_liveness`]/[`Self::slot_positions`] and
+    /// ignore those rows. `last_tokens` is the full `[B]` table
+    /// (entries for skipped slots are ignored). Returns logits
+    /// `[B, V]`.
     pub fn decode_slots(&mut self, last_tokens: &[i32], plan: &ShardPlan) -> Result<HostTensor> {
         if matches!(self.backend, Backend::Pjrt(_)) {
             anyhow::bail!("decode_slots runs on the host backend only (see begin_session)");
@@ -642,7 +664,14 @@ impl<'rt> ModelExecutor<'rt> {
         let kv_l = (m.kv_heads / t).max(1);
         let bg = b / plan.attn.dp;
         let slot_pos = self.slot_pos.clone();
-        let slot_live = self.slot_live.clone();
+        // Decodable = claimed AND fully prefilled. A slot mid-way
+        // through a chunked prefill (0 < pos < prefill_len) rides this
+        // iteration inert — no KV read/write, zero attention output, no
+        // position advance — exactly like a free slot, so peers decode
+        // between its chunks.
+        let slot_live: Vec<bool> = (0..b)
+            .map(|s| self.slot_live[s] && self.slot_pos[s] >= m.prefill_len)
+            .collect();
 
         let mut x = self.embed(last_tokens, b, 1, &m)?;
         for l in 0..m.layers {
@@ -682,7 +711,7 @@ impl<'rt> ModelExecutor<'rt> {
             x.add_assign(&e_out);
         }
         for slot in 0..b {
-            if self.slot_live[slot] {
+            if slot_live[slot] {
                 self.slot_pos[slot] += 1;
             }
         }
@@ -1028,19 +1057,6 @@ fn combine_attn(grid: &DeviceGrid, outs: Vec<HostTensor>) -> Result<HostTensor> 
     collectives::apply(&grid.batch_split, &leaders)
 }
 
-/// Write a joiner's prefill KV (`[1, S, KVH_l, D]`) into row `row` of a
-/// session cache (`[B_g, M, KVH_l, D]`) at positions `0..S`. Positions
-/// `S..M` of the row were zeroed at session start / release, and only
-/// `0..=pos` is ever attended, so no further clearing is needed.
-fn write_slot_kv(cache: &mut LayerCache, row: usize, k: &HostTensor, v: &HostTensor) {
-    let (s, kvh, d) = (k.shape[1], k.shape[2], k.shape[3]);
-    let m = cache.k.shape[1];
-    let rowlen = kvh * d;
-    let dst = row * m * rowlen;
-    cache.k.data[dst..dst + s * rowlen].copy_from_slice(&k.data[..s * rowlen]);
-    cache.v.data[dst..dst + s * rowlen].copy_from_slice(&v.data[..s * rowlen]);
-}
-
 /// Pad a [B, S, KVH, D] prefill cache to [B, M, KVH, D] with zeros.
 fn pad_cache(c: &HostTensor, max_len: usize) -> HostTensor {
     let (b, s, kvh, d) = (c.shape[0], c.shape[1], c.shape[2], c.shape[3]);
@@ -1156,6 +1172,24 @@ mod tests {
         exec.release_slot(s0).unwrap();
         assert!(exec.release_slot(s0).is_err(), "double release");
         assert_eq!(exec.free_slots(), m.batch);
+        // Resumable chunked prefill: the cursor advances per chunk, a
+        // mid-prefill slot is skipped by decode, and the final chunk
+        // makes it decodable.
+        let s1 = exec.claim_slot().unwrap();
+        exec.prefill_slot(s1, &toks[..6], &plan).unwrap();
+        assert_eq!(exec.slot_positions()[s1], 6);
+        exec.decode_slots(&vec![1; m.batch], &plan).unwrap();
+        assert_eq!(exec.slot_positions()[s1], 6, "mid-prefill slot must not decode");
+        assert!(
+            exec.prefill_slot(s1, &toks, &plan).is_err(),
+            "chunk overrunning the prompt must be rejected"
+        );
+        let logits = exec.prefill_slot(s1, &toks[6..], &plan).unwrap();
+        assert_eq!(logits.shape, vec![1, m.vocab]);
+        assert_eq!(exec.slot_positions()[s1], m.prefill_len);
+        exec.decode_slots(&vec![1; m.batch], &plan).unwrap();
+        assert_eq!(exec.slot_positions()[s1], m.prefill_len + 1);
+        exec.release_slot(s1).unwrap();
         // Gang prefill tears the session down.
         exec.prefill(&vec![1; m.batch * m.prefill_len], &plan).unwrap();
         assert!(!exec.in_session());

@@ -259,6 +259,98 @@ pub fn attention_prefill(
     ))
 }
 
+/// Causal GQA prefill attention for **one chunk of one sequence**,
+/// resuming against a padded per-slot KV cache.
+///
+/// `x [1, C, H]` is the chunk's residual (prompt positions
+/// `start..start+C` of batch row `row` in the group cache
+/// `[B_g, M, KVH_l, D]`). The chunk's K/V are written into the cache at
+/// positions `start..start+C`, and each chunk query at global position
+/// `p = start + qi` attends causally to cache positions `0..=p` — the
+/// earlier positions having been written by previous chunks of the same
+/// prompt. Returns the partial attention output `[1, C, H]` (summed
+/// over the TP group by the caller).
+///
+/// **Bit-equivalence.** The loop structure (score order, running max,
+/// exp/normalize split, context accumulation order) mirrors
+/// [`attention_prefill`] exactly, and every per-row quantity (rms_norm,
+/// q/k/v projections) is row-independent, so splitting a prompt into
+/// chunks — any chunk sizes — produces outputs and KV bit-identical to
+/// the one-shot kernel. Asserted by `chunked_prefill_bit_identical`.
+pub fn attention_prefill_ranged(
+    x: &HostTensor,
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    row: usize,
+    start: usize,
+    shard: &[HostTensor],
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<HostTensor> {
+    let (b, c, h) = (x.shape[0], x.shape[1], x.shape[2]);
+    if b != 1 {
+        anyhow::bail!("ranged prefill takes one sequence, got batch {b}");
+    }
+    let m = k_cache.shape[1];
+    if start + c > m {
+        anyhow::bail!("chunk {start}..{} outside KV budget {m}", start + c);
+    }
+    let rep = q_heads / kv_heads;
+    if rep * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+    }
+    let xn = rms_norm(x, &shard[0]);
+    let q = matmul(&xn.data, c, h, &shard[1].data, q_heads * hd);
+    let k_new = matmul(&xn.data, c, h, &shard[2].data, kv_heads * hd);
+    let v_new = matmul(&xn.data, c, h, &shard[3].data, kv_heads * hd);
+    // Write the chunk's K/V into the slot's cache rows first, so the
+    // causal scan below reads every position — earlier chunks and this
+    // one — from a single place.
+    let kvrow = kv_heads * hd;
+    let dst = (row * m + start) * kvrow;
+    k_cache.data[dst..dst + c * kvrow].copy_from_slice(&k_new[..c * kvrow]);
+    v_cache.data[dst..dst + c * kvrow].copy_from_slice(&v_new[..c * kvrow]);
+
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0f32; c * q_heads * hd];
+    let mut scores = vec![0f32; start + c];
+    for head in 0..q_heads {
+        let kvh = head / rep;
+        for qi in 0..c {
+            let p = start + qi; // global prompt position of this query
+            let qoff = (qi * q_heads + head) * hd;
+            let mut mx = f32::NEG_INFINITY;
+            for (ki, sc) in scores.iter_mut().enumerate().take(p + 1) {
+                let koff = (row * m + ki) * kvrow + kvh * hd;
+                let mut dot = 0f32;
+                for d in 0..hd {
+                    dot += q[qoff + d] * k_cache.data[koff + d];
+                }
+                *sc = dot * scale;
+                if *sc > mx {
+                    mx = *sc;
+                }
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut().take(p + 1) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let coff = (qi * q_heads + head) * hd;
+            for ki in 0..=p {
+                let pr = scores[ki] / denom;
+                let voff = (row * m + ki) * kvrow + kvh * hd;
+                for d in 0..hd {
+                    ctx[coff + d] += pr * v_cache.data[voff + d];
+                }
+            }
+        }
+    }
+    let out = matmul(&ctx, c, q_heads * hd, &shard[4].data, h);
+    Ok(HostTensor::new(vec![1, c, h], out))
+}
+
 /// One decode step against a padded KV cache (`[B, M, KVH_l, D]`); the
 /// new token writes at index `pos` and positions `0..=pos` are attended.
 /// Updates the caches in place (device-resident state) and returns the
@@ -509,6 +601,64 @@ mod tests {
             1,
             1,
             1
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn chunked_prefill_bit_identical() {
+        // One prompt pushed through `attention_prefill` in one shot vs
+        // the same prompt split into uneven chunks through
+        // `attention_prefill_ranged`: partial outputs and the KV the
+        // two paths produce must match bit-for-bit (the precondition
+        // for the engine's multi-iteration chunked prefill).
+        let (h, qh, kvh, hd, s, m) = (4usize, 2usize, 1usize, 2usize, 6usize, 8usize);
+        let ln = HostTensor::new(vec![h], vec![1.0, 0.9, 1.1, 1.0]);
+        let fill = |n: usize, k: f32| -> Vec<f32> {
+            (0..n).map(|i| ((i * 7 + 3) % 11) as f32 * k - 0.4).collect()
+        };
+        let wq = HostTensor::new(vec![h, qh * hd], fill(h * qh * hd, 0.11));
+        let wk = HostTensor::new(vec![h, kvh * hd], fill(h * kvh * hd, 0.07));
+        let wv = HostTensor::new(vec![h, kvh * hd], fill(h * kvh * hd, 0.05));
+        let wo = HostTensor::new(vec![qh * hd, h], fill(qh * hd * h, 0.09));
+        let shard = [ln, wq, wk, wv, wo];
+        let x = HostTensor::new(vec![1, s, h], fill(s * h, 0.13));
+
+        let (full_out, full_k, full_v) =
+            attention_prefill(&x, &shard, qh, kvh, hd).unwrap();
+
+        let mut kc = HostTensor::zeros(vec![1, m, kvh, hd]);
+        let mut vc = HostTensor::zeros(vec![1, m, kvh, hd]);
+        let mut chunked = Vec::new();
+        let mut start = 0usize;
+        for c in [2usize, 3, 1] {
+            let xc = HostTensor::new(
+                vec![1, c, h],
+                x.data[start * h..(start + c) * h].to_vec(),
+            );
+            let out = attention_prefill_ranged(
+                &xc, &mut kc, &mut vc, 0, start, &shard, qh, kvh, hd,
+            )
+            .unwrap();
+            chunked.extend_from_slice(&out.data);
+            start += c;
+        }
+        assert_eq!(start, s);
+        for (i, (a, b)) in full_out.data.iter().zip(&chunked).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "output diverged at {i}");
+        }
+        let kvrow = kvh * hd;
+        for (i, a) in full_k.data.iter().enumerate() {
+            assert_eq!(a.to_bits(), kc.data[i].to_bits(), "k cache diverged at {i}");
+        }
+        for (i, a) in full_v.data.iter().enumerate() {
+            assert_eq!(a.to_bits(), vc.data[i].to_bits(), "v cache diverged at {i}");
+        }
+        assert!(kc.data[s * kvrow..].iter().all(|&v| v == 0.0), "cache tail touched");
+        // A chunk past the budget is rejected.
+        let xc = HostTensor::new(vec![1, 3, h], x.data[..3 * h].to_vec());
+        assert!(attention_prefill_ranged(
+            &xc, &mut kc, &mut vc, 0, m - 1, &shard, qh, kvh, hd
         )
         .is_err());
     }

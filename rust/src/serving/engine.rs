@@ -12,17 +12,33 @@
 //! 1. **retire** — finished sequences leave the live batch
 //!    ([`crate::model::ModelExecutor::release_slot`]), freeing their KV
 //!    slot mid-decode;
-//! 2. **admit** — queued requests claim freed slots and run a chunked
-//!    prefill ([`crate::model::ModelExecutor::prefill_slot`]) while
-//!    their peers keep decoding;
-//! 3. **decode** — one step for the whole running set at per-slot
-//!    positions ([`crate::model::ModelExecutor::decode_slots`]).
+//! 2. **advance + admit** — slots mid-way through a **chunked
+//!    prefill** advance by one chunk, and queued requests claim freed
+//!    slots and run their first chunk
+//!    ([`crate::model::ModelExecutor::prefill_slot`]) while their
+//!    peers keep decoding;
+//! 3. **decode** — one step for the fully-prefilled running set at
+//!    per-slot positions
+//!    ([`crate::model::ModelExecutor::decode_slots`]).
 //!
 //! One [`Engine::step`] call runs one such iteration; [`Engine::submit`]
 //! enqueues work (with drain-based backpressure instead of the old
 //! hard `bail!` on a full queue), [`Engine::poll`]/[`Engine::drain`]
 //! deliver tokens, and [`Engine::shutdown`] returns the familiar
 //! [`ServeReport`].
+//!
+//! **Chunked prefill** ([`ServeConfig::prefill_chunk`]). With a
+//! non-zero chunk, a joiner's padded prompt is prefilled at most
+//! `prefill_chunk` tokens per iteration through the executor's
+//! *resumable* `prefill_slot` (ranged attention writing KV at the
+//! slot's cursor), so a long-prompt joiner no longer stalls its peers'
+//! decode step for a whole prompt — peer decode iterations interleave
+//! between chunks. A slot in the *Prefilling* phase takes no decode
+//! steps and emits its first token only when the final chunk's logits
+//! land (TTFT is measured there); causal attention makes the chunked
+//! computation bit-identical to a one-shot prefill, so per-request
+//! tokens still match the gang scheduler exactly. `0` (the default)
+//! keeps the one-iteration-per-prompt behavior.
 //!
 //! **Plan switches at iteration granularity.** With an adaptive config,
 //! the adapt loop ([`crate::adapt::AdaptLoop`] via [`AdaptState`]) is
@@ -34,7 +50,21 @@
 //! weights. A switch that changes the attention layout invalidates the
 //! KV sharding, so the engine stops admitting, drains in-flight decodes
 //! to the safe point (running set empty), re-begins the session under
-//! the new layout, and resumes admission.
+//! the new layout, and resumes admission — or applies on the spot when
+//! the running set is already empty at decision time.
+//!
+//! **Measured feedback at iteration granularity.** The session
+//! aggregates each iteration's wall time (prefill chunks + decode
+//! steps) and the tokens it generated into a per-plan dwell
+//! accumulator; at every admission-boundary consult the accumulated
+//! [`MeasuredLatency`] is handed to the adapt loop, which normalizes
+//! it — and the planner's prediction for the same traffic key — to
+//! **seconds per generated token** before folding the ratio into the
+//! controller's mispredict EWMA. Gang mode feeds whole-batch
+//! observations through the same normalized API, so both schedulers
+//! demote consistently mispredicted plans with commensurable units and
+//! the streaming path's controller is no longer blind
+//! (`measured: None`) where adaptation actually happens.
 //!
 //! **Equivalence.** Every kernel in the host stack is row-independent,
 //! so a sequence's tokens depend only on its own (padded) prompt and
@@ -53,7 +83,7 @@ use super::router::Router;
 use super::server::{AdaptiveServing, ServeConfig, ServeReport};
 use super::{Request, Response};
 use crate::adapt::window::TrafficSample;
-use crate::adapt::{AdaptLoop, PlanCache, SwitchDecision};
+use crate::adapt::{AdaptLoop, MeasuredLatency, PlanCache, SwitchDecision};
 use crate::model::{EngineMode, ExecStats, ModelExecutor, ShardPlan, WeightStore};
 use crate::planner::{HapPlanner, PLANNER_SEED};
 use crate::runtime::literal::argmax_rows;
@@ -94,7 +124,10 @@ pub struct StepOutcome {
     pub admitted: usize,
     /// Requests retired (responses now pollable).
     pub retired: usize,
-    /// Live slots that took a decode step.
+    /// Slot decode steps taken: live slots summed over the decode
+    /// iterations this step ran — one iteration in streaming mode, the
+    /// whole batch's convoy in gang mode — so both schedulers report
+    /// the same quantity.
     pub decoded: usize,
     /// Live slots after the iteration.
     pub running: usize,
@@ -148,17 +181,19 @@ impl AdaptState {
         }
     }
 
-    /// Observe one admission boundary's traffic (plus, in gang mode,
-    /// the previous batch's measured latency, closing the loop on
-    /// mispredicted plans) and return the (prefill, decode) plans the
-    /// controller lands on, with its decision so the caller can count
-    /// weight-moving switches. The grid engine executes whatever the
-    /// planner picked — hybrids included.
+    /// Observe one admission boundary's traffic — plus the measured
+    /// execution since the previous boundary (one whole batch in gang
+    /// mode, the dwell window of iterations in streaming mode), which
+    /// closes the loop on mispredicted plans — and return the
+    /// (prefill, decode) plans the controller lands on, with its
+    /// decision so the caller can count weight-moving switches. The
+    /// grid engine executes whatever the planner picked — hybrids
+    /// included.
     pub(crate) fn select(
         &mut self,
         cfg: &AdaptiveServing,
         samples: &[TrafficSample],
-        measured: Option<f64>,
+        measured: Option<MeasuredLatency>,
     ) -> Result<(ShardPlan, ShardPlan, SwitchDecision)> {
         let planner = HapPlanner::with_latency(&cfg.model, &cfg.node, self.latency.clone());
         let (plan, decision) =
@@ -178,6 +213,19 @@ struct Slot {
     last: i32,
     remaining: usize,
     ttft: f64,
+    /// Chunked-prefill state: the padded prompt row and the chunk
+    /// cursor (tokens prefilled so far). `Some` while the slot is in
+    /// the *Prefilling* phase — it takes no decode steps, and its
+    /// first token (and TTFT) lands only when the final chunk's logits
+    /// do. `None` once decoding.
+    prefill: Option<(Vec<i32>, usize)>,
+}
+
+impl Slot {
+    /// Whether this slot takes decode steps (prefill fully landed).
+    fn decoding(&self) -> bool {
+        self.prefill.is_none()
+    }
 }
 
 /// The scheduler core, separated from executor ownership so the compat
@@ -204,8 +252,24 @@ struct Session {
     delivered: usize,
     metrics: Metrics,
     adapt: Option<AdaptState>,
-    /// Gang mode: previous batch's measured latency for the adapt loop.
-    last_measured: Option<f64>,
+    /// Gang mode: previous batch's measured execution for the adapt
+    /// loop (wall seconds + tokens generated).
+    last_measured: Option<MeasuredLatency>,
+    /// Streaming: wall seconds of model execution (prefill chunks +
+    /// decode steps) accumulated under the active plan since the last
+    /// adapt consult — the per-plan dwell accumulator...
+    dwell_seconds: f64,
+    /// ...and the tokens generated in that window. Together they are
+    /// the `MeasuredLatency` handed to the adapt loop at the next
+    /// admission boundary (then reset), closing the measured-latency
+    /// feedback at iteration granularity.
+    dwell_tokens: usize,
+    /// Set by [`Self::request_plans`]: the session's plan was forced
+    /// out from under the controller, so the next consult's dwell
+    /// window ran under a plan the controller does not consider
+    /// active — withhold it from the mispredict EWMA (and drop it)
+    /// instead of attributing it to the wrong plan.
+    suppress_measured: bool,
     /// Streaming: the session's resident (prefill, decode) plans.
     active: Option<(ShardPlan, ShardPlan)>,
     /// Streaming: an attention-layout switch waiting for the running
@@ -231,6 +295,9 @@ impl Session {
             metrics: Metrics::new(),
             adapt,
             last_measured: None,
+            dwell_seconds: 0.0,
+            dwell_tokens: 0,
+            suppress_measured: false,
             active: None,
             pending: None,
             prefill_time: 0.0,
@@ -342,7 +409,9 @@ impl Session {
             let logits = exec.decode_step(&last, &decode_plan)?;
             self.metrics.decode_steps += 1;
             self.metrics.observe_occupancy(active, self.meta.batch);
-            out.decoded += 1;
+            // Count live slots, not iterations, so gang and streaming
+            // report the same quantity (slot decode steps).
+            out.decoded += active;
             let next = argmax_rows(&logits);
             for slot in 0..batch.live() {
                 if remaining[slot] > 0 {
@@ -354,9 +423,13 @@ impl Session {
         }
         let batch_decode = t0.elapsed().as_secs_f64();
         self.decode_time += batch_decode;
-        // Feed the measured latency of this batch into the next
-        // adaptation step (demotes consistently mispredicted plans).
-        self.last_measured = Some(batch_prefill + batch_decode);
+        // Feed the measured execution of this batch — seconds and the
+        // tokens it generated, so the adapt loop can normalize to
+        // seconds-per-token — into the next adaptation step (demotes
+        // consistently mispredicted plans).
+        let batch_tokens: usize = generated.iter().map(|g| g.len()).sum();
+        self.last_measured =
+            Some(MeasuredLatency::new(batch_prefill + batch_decode, batch_tokens));
 
         // ---- Retire the whole batch.
         let now = Instant::now();
@@ -377,29 +450,136 @@ impl Session {
         Ok(out)
     }
 
+    /// Drop the accumulated dwell window: it measured a plan that is
+    /// no longer (or, when a consult just consumed it, no further) the
+    /// subject of the next measured hand-off. Every plan-switch path
+    /// and the consult itself funnel through this one reset so a
+    /// window can never straddle two plans.
+    fn reset_dwell(&mut self) {
+        self.dwell_seconds = 0.0;
+        self.dwell_tokens = 0;
+    }
+
+    /// The prefill chunk this slot gets this iteration: at most
+    /// `config.prefill_chunk` tokens of the `row_len`-token padded
+    /// prompt (0 = unchunked, the whole remaining prompt at once).
+    fn chunk_len(&self, row_len: usize, cursor: usize) -> usize {
+        let chunk = if self.config.prefill_chunk == 0 {
+            row_len
+        } else {
+            self.config.prefill_chunk
+        };
+        chunk.min(row_len - cursor)
+    }
+
+    /// Run ONE prefill chunk for the Prefilling slot at `idx` — its
+    /// first right after admission, or the next at its cursor — and
+    /// handle completion: the final chunk's logits are the same
+    /// first-token logits a one-shot prefill of the row yields
+    /// (chunking is bit-exact), so the first token and TTFT land
+    /// there, and a request whose budget is already satisfied retires
+    /// on the spot without a decode iteration. The ONE chunk-execution
+    /// path shared by the advance loop and the admission step.
+    /// Returns whether the slot is still occupied afterwards.
+    fn advance_chunk(
+        &mut self,
+        exec: &mut ModelExecutor,
+        idx: usize,
+        out: &mut StepOutcome,
+    ) -> Result<bool> {
+        let (prefill_plan, _) = self.active.expect("prefilling slot implies a session");
+        // Pull the chunk state out to keep the slot borrow short.
+        let (row, cursor) = {
+            let slot = self.slots[idx].as_mut().expect("advancing an empty slot");
+            slot.prefill.take().expect("slot is not prefilling")
+        };
+        let c = self.chunk_len(row.len(), cursor);
+        let t0 = Instant::now();
+        let res = exec.prefill_slot(idx, &row[cursor..cursor + c], &prefill_plan);
+        let dt = t0.elapsed().as_secs_f64();
+        self.prefill_time += dt;
+        self.dwell_seconds += dt;
+        let logits = match res {
+            Ok(logits) => logits,
+            Err(e) => {
+                // Put the cursor back: without it the slot would read
+                // as "decoding" while its KV is only partially written
+                // — unretirable if the caller treats the step error as
+                // transient and keeps driving.
+                self.slots[idx].as_mut().expect("still occupied").prefill =
+                    Some((row, cursor));
+                return Err(e);
+            }
+        };
+        self.metrics.prefill_chunks += 1;
+        let done = cursor + c == row.len();
+        let retire_now = {
+            let slot = self.slots[idx].as_mut().expect("still occupied");
+            if done {
+                let first = argmax_rows(&logits)[0] as i32;
+                slot.tokens.push(first);
+                slot.last = first;
+                slot.ttft = slot.req.arrived.elapsed().as_secs_f64();
+                // Saturating like the gang path: a zero-budget request
+                // still yields its one prefill token.
+                slot.remaining = slot.remaining.saturating_sub(1);
+                slot.remaining == 0
+            } else {
+                slot.prefill = Some((row, cursor + c));
+                false
+            }
+        };
+        if done {
+            self.dwell_tokens += 1;
+        }
+        if retire_now {
+            self.retire_slot(exec, idx, out)?;
+            return Ok(false);
+        }
+        Ok(true)
+    }
+
+    /// Retire the request occupying `slots[idx]`: free its executor
+    /// slot (zeroing its KV rows), record request metrics, and queue
+    /// the response for delivery. The one retirement path shared by
+    /// the finished-decode, final-chunk, and single-token cases.
+    fn retire_slot(
+        &mut self,
+        exec: &mut ModelExecutor,
+        idx: usize,
+        out: &mut StepOutcome,
+    ) -> Result<()> {
+        let slot = self.slots[idx].take().expect("retiring an empty slot");
+        exec.release_slot(idx)?;
+        let latency = slot.req.arrived.elapsed().as_secs_f64();
+        self.metrics.observe_request(latency, slot.ttft, slot.tokens.len());
+        self.responses.push(Response {
+            id: slot.req.id,
+            tokens: slot.tokens,
+            latency,
+            ttft: slot.ttft,
+        });
+        out.retired += 1;
+        Ok(())
+    }
+
     /// One streaming iteration: retire → (apply drained switch) →
-    /// admit + chunked prefill → one decode step at per-slot positions.
+    /// advance in-flight chunked prefills → admit + first prefill
+    /// chunk → one decode step at per-slot positions.
     fn stream_step(&mut self, exec: &mut ModelExecutor) -> Result<StepOutcome> {
         let mut out = StepOutcome::default();
         let b = self.meta.batch;
 
         // ---- 1. Retire finished sequences, freeing KV + batch slots.
+        // Only decoding slots: a mid-prefill slot with a zero-token
+        // budget still needs its final chunk to produce its one token.
         for idx in 0..self.slots.len() {
-            let done = self.slots[idx].as_ref().map_or(false, |s| s.remaining == 0);
-            if !done {
-                continue;
+            let done = self.slots[idx]
+                .as_ref()
+                .map_or(false, |s| s.remaining == 0 && s.decoding());
+            if done {
+                self.retire_slot(exec, idx, &mut out)?;
             }
-            let slot = self.slots[idx].take().expect("checked above");
-            exec.release_slot(idx)?;
-            let latency = slot.req.arrived.elapsed().as_secs_f64();
-            self.metrics.observe_request(latency, slot.ttft, slot.tokens.len());
-            self.responses.push(Response {
-                id: slot.req.id,
-                tokens: slot.tokens,
-                latency,
-                ttft: slot.ttft,
-            });
-            out.retired += 1;
         }
         let mut running = self.slots.iter().filter(|s| s.is_some()).count();
 
@@ -410,18 +590,47 @@ impl Session {
             if let Some((p, d)) = self.pending.take() {
                 exec.begin_session(&p, &d)?;
                 self.active = Some((p, d));
+                // The dwell window measured the outgoing plan; the
+                // consult that decided this switch already consumed it.
+                self.reset_dwell();
                 out.switched = true;
             }
         }
 
-        // ---- 3. Admission boundary: take the joiners, consult the
-        // adapt loop on that actual traffic, apply safe switches, then
-        // chunk-prefill the joiners while their peers' KV stays live.
-        // Joiners held back by an attention-layout switch wait in the
-        // backlog and are admitted first once the drain completes.
+        // ---- 3. Advance in-flight chunked prefills: each Prefilling
+        // slot gets at most one `prefill_chunk`-token chunk per
+        // iteration, so a long-prompt joiner never stalls its peers'
+        // decode for a whole prompt. The final chunk's logits are the
+        // prompt's first-token logits — the first token (and TTFT)
+        // land here. This runs even while an attention-layout switch is
+        // pending: prefilling slots are part of the running set that
+        // must drain before the switch can apply.
+        for idx in 0..self.slots.len() {
+            let prefilling =
+                self.slots[idx].as_ref().map_or(false, |s| s.prefill.is_some());
+            if !prefilling {
+                continue;
+            }
+            if !self.advance_chunk(exec, idx, &mut out)? {
+                running -= 1;
+            }
+        }
+
+        // ---- 4. Admission boundary: take the joiners, consult the
+        // adapt loop on that actual traffic (handing it the measured
+        // dwell window since the previous consult), apply safe
+        // switches, then run each joiner's FIRST prefill chunk while
+        // its peers' KV stays live. Joiners held back by an
+        // attention-layout switch wait in the backlog and are admitted
+        // first once the drain completes.
         if self.pending.is_none() && running < b {
             let free = b - running;
             let mut joiners = std::mem::take(&mut self.backlog);
+            // Joiners re-surfacing from the backlog were already
+            // observed by the consult that parked them — only freshly
+            // dequeued requests become new traffic samples, so a
+            // switch-drain never double-counts them in the window.
+            let backlog_n = joiners.len();
             if joiners.len() < free && !self.router.is_empty() {
                 joiners.extend(self.router.take(free - joiners.len()));
             }
@@ -429,7 +638,7 @@ impl Session {
                 let desired = match (&mut self.adapt, &self.config.adaptive) {
                     (Some(state), Some(cfg)) => {
                         let concurrency = (running + joiners.len()).min(b);
-                        let samples: Vec<TrafficSample> = joiners
+                        let samples: Vec<TrafficSample> = joiners[backlog_n..]
                             .iter()
                             .map(|r| TrafficSample {
                                 prompt: r.prompt.len(),
@@ -437,10 +646,31 @@ impl Session {
                                 batch: concurrency,
                             })
                             .collect();
-                        // Measured-latency feedback stays gang-only for
-                        // now: the controller's predictions are per-batch,
-                        // which has no direct per-iteration analogue.
-                        let (p, d, decision) = state.select(cfg, &samples, None)?;
+                        // Measured-latency feedback at iteration
+                        // granularity: the dwell window (prefill-chunk
+                        // + decode seconds, and the tokens they
+                        // generated) since the previous consult, all
+                        // run under the current active plan. The adapt
+                        // loop normalizes it to seconds-per-token, so
+                        // streaming and gang observations feed the
+                        // same mispredict EWMA.
+                        let measured = if self.suppress_measured || self.dwell_tokens == 0 {
+                            None
+                        } else {
+                            Some(MeasuredLatency::new(self.dwell_seconds, self.dwell_tokens))
+                        };
+                        let (p, d, decision) = state.select(cfg, &samples, measured)?;
+                        // Reset when the window was consumed — or when
+                        // it was suppressed (it ran under a forced
+                        // plan the controller never adopted, so it is
+                        // dropped, not carried). A token-less window
+                        // (only prefill chunks ran) keeps accumulating
+                        // its seconds toward the next consult instead
+                        // of silently losing the plan's measured cost.
+                        if measured.is_some() || self.suppress_measured {
+                            self.reset_dwell();
+                            self.suppress_measured = false;
+                        }
                         if matches!(decision, SwitchDecision::Switch { .. }) {
                             self.metrics.replans += 1;
                         }
@@ -467,10 +697,25 @@ impl Session {
                             // expert layout after the measured weight move.
                             exec.begin_batch(&want.0, &want.1)?;
                             self.active = Some(want);
+                            // Any dwell the consult withheld (token-less
+                            // window) measured the outgoing plan — drop
+                            // it rather than attribute it to this one.
+                            self.reset_dwell();
+                            out.switched = true;
+                        } else if running == 0 {
+                            // The running set is already empty: the KV
+                            // sharding can change right now, so apply the
+                            // attention-layout switch immediately instead
+                            // of burning a dead iteration on the
+                            // pending/backlog detour.
+                            exec.begin_session(&want.0, &want.1)?;
+                            self.active = Some(want);
+                            self.reset_dwell();
                             out.switched = true;
                         } else {
-                            // KV sharding would change: stop admitting and
-                            // drain in-flight decodes to the safe point.
+                            // KV sharding would change under live slots:
+                            // stop admitting and drain in-flight decodes
+                            // to the safe point.
                             self.pending = Some(want);
                         }
                     }
@@ -487,64 +732,60 @@ impl Session {
                         })?;
                         debug_assert!(self.slots[slot].is_none(), "slot maps diverged");
                         let (row, budget) = self.batcher.pack_one(&req);
-                        let t0 = Instant::now();
-                        let logits = exec.prefill_slot(slot, &row, &prefill_plan)?;
-                        self.prefill_time += t0.elapsed().as_secs_f64();
                         self.metrics.batches_prefilled += 1;
                         if prefill_plan.expert != decode_plan.expert {
                             self.metrics.transitions += 1;
                         }
-                        let first = argmax_rows(&logits)[0] as i32;
-                        let ttft = req.arrived.elapsed().as_secs_f64();
                         out.admitted += 1;
-                        let remaining = budget.saturating_sub(1);
-                        if remaining == 0 {
-                            // Single-token request: the prefill's argmax
-                            // IS the full response (same one token gang
-                            // mode yields) — retire at admission instead
-                            // of spending a decode iteration on it.
-                            exec.release_slot(slot)?;
-                            let latency = req.arrived.elapsed().as_secs_f64();
-                            self.metrics.observe_request(latency, ttft, 1);
-                            self.responses.push(Response {
-                                id: req.id,
-                                tokens: vec![first],
-                                latency,
-                                ttft,
-                            });
-                            out.retired += 1;
-                            continue;
-                        }
+                        // Every joiner enters in the Prefilling phase at
+                        // cursor 0 and runs its first chunk right away;
+                        // `advance_chunk` promotes it to Decoding (or
+                        // retires a single-token request) if that chunk
+                        // already completes the prompt — the unchunked
+                        // configuration in one step.
                         self.slots[slot] = Some(Slot {
                             req,
-                            tokens: vec![first],
-                            last: first,
-                            remaining,
-                            ttft,
+                            tokens: Vec::new(),
+                            last: 0,
+                            remaining: budget,
+                            ttft: 0.0,
+                            prefill: Some((row, 0)),
                         });
-                        running += 1;
+                        if self.advance_chunk(exec, slot, &mut out)? {
+                            running += 1;
+                        }
                     }
                 }
             }
         }
 
-        // ---- 4. One decode iteration for the running set.
-        if running > 0 {
-            let (_, decode_plan) = self.active.expect("running implies a session");
+        // ---- 5. One decode iteration for the decoding slots. Slots
+        // still chunk-prefilling ride this iteration inert (the
+        // executor skips their KV and position).
+        let decoding = self.slots.iter().flatten().filter(|s| s.decoding()).count();
+        if decoding > 0 {
+            let (_, decode_plan) = self.active.expect("decoding implies a session");
             let mut last = vec![0i32; b];
             for (i, s) in self.slots.iter().enumerate() {
                 if let Some(slot) = s {
-                    last[i] = slot.last;
+                    if slot.decoding() {
+                        last[i] = slot.last;
+                    }
                 }
             }
             let t0 = Instant::now();
             let logits = exec.decode_slots(&last, &decode_plan)?;
-            self.decode_time += t0.elapsed().as_secs_f64();
+            let dt = t0.elapsed().as_secs_f64();
+            self.decode_time += dt;
+            self.dwell_seconds += dt;
             self.metrics.decode_steps += 1;
-            self.metrics.observe_occupancy(running, b);
+            self.metrics.observe_occupancy(decoding, b);
             let next = argmax_rows(&logits);
             for (i, s) in self.slots.iter_mut().enumerate() {
                 if let Some(slot) = s {
+                    if !slot.decoding() {
+                        continue;
+                    }
                     if slot.remaining > 0 {
                         slot.tokens.push(next[i] as i32);
                         slot.remaining -= 1;
@@ -552,7 +793,8 @@ impl Session {
                     slot.last = next[i] as i32;
                 }
             }
-            out.decoded = running;
+            self.dwell_tokens += decoding;
+            out.decoded = decoding;
         }
 
         out.running = self.slots.iter().filter(|s| s.is_some()).count();
@@ -585,13 +827,49 @@ impl Session {
         self.config.attn = prefill.attn;
         self.config.expert_prefill = prefill.expert;
         self.config.expert_decode = decode.expert;
+        // The latest request supersedes any switch still waiting on a
+        // drain — otherwise a stale pending plan would pop at the next
+        // safe point and silently revert this one. The drain-wait
+        // branch below re-queues when these plans themselves must wait.
+        let cancelled = self.pending.take().is_some();
         match self.active {
-            Some(cur) if cur == (prefill, decode) => {}
+            Some(cur) if cur == (prefill, decode) => {
+                if cancelled {
+                    // A controller-decided switch was cancelled while
+                    // the controller already adopted its plan: the
+                    // session keeps executing the old layout, so the
+                    // dwell window must not feed the (never-applied)
+                    // adopted plan's mispredict EWMA.
+                    self.reset_dwell();
+                    self.suppress_measured = true;
+                }
+            }
             Some(cur) if cur.0.attn == prefill.attn => {
                 exec.begin_batch(&prefill, &decode)?;
                 self.active = Some((prefill, decode));
+                // The dwell window measured the outgoing plan; don't
+                // let it be attributed to the new one. And because the
+                // session plan was forced out from under an adaptive
+                // controller, the NEXT window (run under the forced
+                // plan) must not feed the controller's still-active
+                // plan's EWMA either.
+                self.reset_dwell();
+                self.suppress_measured = true;
             }
-            Some(_) => self.pending = Some((prefill, decode)),
+            Some(_) if self.slots.iter().all(|s| s.is_none()) => {
+                // Attention-layout switch with the running set already
+                // empty: the KV sharding can change right now, so
+                // re-begin the session instead of burning an iteration
+                // on the pending/drain detour.
+                exec.begin_session(&prefill, &decode)?;
+                self.active = Some((prefill, decode));
+                self.reset_dwell();
+                self.suppress_measured = true;
+            }
+            Some(_) => {
+                self.pending = Some((prefill, decode));
+                self.suppress_measured = true;
+            }
             None => {}
         }
         Ok(())
@@ -707,6 +985,13 @@ impl EngineBuilder {
         self
     }
 
+    /// Max prompt tokens prefilled per joiner per streaming iteration
+    /// (0 = unchunked). See [`ServeConfig::prefill_chunk`].
+    pub fn prefill_chunk(mut self, tokens: usize) -> EngineBuilder {
+        self.config.prefill_chunk = tokens;
+        self
+    }
+
     /// Online-adaptive plan selection (consulted per admission
     /// boundary in streaming mode, per batch in gang mode).
     pub fn adaptive(mut self, adaptive: AdaptiveServing) -> EngineBuilder {
@@ -802,6 +1087,13 @@ impl<'rt> Engine<'rt> {
     /// Metrics accumulated so far (finalized by `shutdown`).
     pub fn metrics(&self) -> &Metrics {
         &self.session.metrics
+    }
+
+    /// The adaptation loop, when this engine was built with an
+    /// adaptive config — read-only access to the traffic window, plan
+    /// cache, and controller (e.g. its measured mispredict EWMAs).
+    pub fn adapt(&self) -> Option<&AdaptLoop> {
+        self.session.adapt.as_ref().map(|state| &state.control)
     }
 
     /// The underlying executor (shard/upload accounting lives here).

@@ -10,8 +10,12 @@ pub struct Metrics {
     pub requests_completed: usize,
     pub tokens_generated: usize,
     /// Prefill operations: gang batches, or streaming joiners (one
-    /// chunked prefill per admitted request).
+    /// per admitted request, however many chunks its prefill took).
     pub batches_prefilled: usize,
+    /// Streaming prefill chunk executions. Equals `batches_prefilled`
+    /// when unchunked (`prefill_chunk = 0`); with an `N`-token chunk a
+    /// joiner with an `S`-token padded prompt contributes `⌈S/N⌉`.
+    pub prefill_chunks: usize,
     pub decode_steps: usize,
     /// Prefill→decode expert-layout transitions executed (per batch in
     /// gang mode, per admitted request in streaming mode).
@@ -112,7 +116,7 @@ impl Metrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | tpot p50 {:.2} ms | {:.1} tok/s | occupancy {:.0}% | {} prefills, {} decode steps, {} transitions, {} replans | {} shard uploads, {} reshards ({:.1} ms)",
+            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | tpot p50 {:.2} ms | {:.1} tok/s | occupancy {:.0}% | {} prefills ({} chunks), {} decode steps, {} transitions, {} replans | {} shard uploads, {} reshards ({:.1} ms)",
             self.requests_completed,
             self.tokens_generated,
             self.latency_p(50.0) * 1e3,
@@ -123,6 +127,7 @@ impl Metrics {
             self.throughput(),
             self.mean_occupancy() * 100.0,
             self.batches_prefilled,
+            self.prefill_chunks,
             self.decode_steps,
             self.transitions,
             self.replans,

@@ -8,11 +8,16 @@
 //! **SJF aging.** Pure SJF starves long requests under a steady stream
 //! of short ones — fatal for the streaming engine, whose admission runs
 //! every iteration. The router therefore tracks, per queued request,
-//! how many `take` rounds it has waited; once a request has waited
-//! `aging_rounds` rounds it is force-promoted to the front of the queue
-//! (stably — starved requests keep their relative order), bounding the
-//! wait of any request at `aging_rounds` rounds plus the starved set
-//! ahead of it at promotion time.
+//! how many `take` rounds it has waited; the `take` on which a request
+//! has waited **exactly** `aging_rounds` rounds force-promotes it to
+//! the front of the queue (stably — starved requests keep their
+//! relative order). Promotion is **sticky**: promoted entries form a
+//! front region that SJF insertion never places fresh work into, so a
+//! promoted request is never re-passed (and never re-promoted) by
+//! younger short jobs. The wait of any request is therefore bounded by
+//! `aging_rounds` rounds plus the promoted set ahead of it at
+//! promotion time — and that bound is exact when the promoted set is
+//! empty (`sjf_aging_bounds_starvation`).
 
 use super::Request;
 use std::collections::VecDeque;
@@ -41,10 +46,14 @@ pub struct Router {
     pub admitted: usize,
     /// SJF starvation bound in `take` rounds (0 disables promotion).
     pub aging_rounds: usize,
-    /// Promotion *events* (not distinct requests: a starved request
-    /// that younger short jobs keep SJF-inserting ahead of is
-    /// re-promoted each round until it drains).
+    /// Distinct requests force-promoted. Promotion is sticky — once in
+    /// the front region an entry is never re-promoted, so this counts
+    /// requests, not reorder events.
     pub promoted: usize,
+    /// Leading queue entries that were force-promoted: a sticky front
+    /// region that SJF insertion skips, so fresh short jobs can never
+    /// slip ahead of already-promoted starved work.
+    promoted_front: usize,
     round: u64,
 }
 
@@ -58,6 +67,7 @@ impl Router {
             admitted: 0,
             aging_rounds: DEFAULT_AGING_ROUNDS,
             promoted: 0,
+            promoted_front: 0,
             round: 0,
         }
     }
@@ -79,11 +89,15 @@ impl Router {
         match self.policy {
             RouterPolicy::Fcfs => self.queue.push_back((req, self.round)),
             RouterPolicy::Sjf => {
-                let pos = self
-                    .queue
-                    .iter()
-                    .position(|(r, _)| r.max_new_tokens > req.max_new_tokens)
-                    .unwrap_or(self.queue.len());
+                // SJF-insert behind the promoted front region: fresh
+                // short jobs never slip ahead of force-promoted work.
+                let pos = self.promoted_front
+                    + self
+                        .queue
+                        .iter()
+                        .skip(self.promoted_front)
+                        .position(|(r, _)| r.max_new_tokens > req.max_new_tokens)
+                        .unwrap_or(self.queue.len() - self.promoted_front);
                 self.queue.insert(pos, (req, self.round));
             }
         }
@@ -104,31 +118,45 @@ impl Router {
             self.promote_starved();
         }
         let k = n.min(self.queue.len());
+        self.promoted_front = self.promoted_front.saturating_sub(k);
         self.queue.drain(..k).map(|(r, _)| r).collect()
     }
 
-    /// Move every request that has waited `aging_rounds` rounds to the
-    /// front, ahead of younger entries, as a stable partition — the
-    /// starved requests keep their current relative order whether or
-    /// not the reorder actually runs. No-op (and no `promoted` count)
-    /// when the starved set already leads the queue, so the counter
-    /// records reorders that moved requests past younger work.
+    /// Append every not-yet-promoted request that has waited
+    /// `aging_rounds` rounds to the sticky promoted front region, as a
+    /// stable partition — newly starved requests keep their current
+    /// relative order behind the earlier-promoted ones. A request
+    /// enqueued at round `R` is promoted on the take of round
+    /// `R + aging_rounds` (it has then waited exactly `aging_rounds`
+    /// rounds); entries already inside the front region are never
+    /// rescanned, so each request is promoted (and counted) at most
+    /// once.
     fn promote_starved(&mut self) {
-        let cutoff = self.round.saturating_sub(self.aging_rounds as u64);
-        let starved = self.queue.iter().filter(|(_, at)| *at < cutoff).count();
-        if starved == 0 || self.queue.iter().take(starved).all(|(_, at)| *at < cutoff) {
+        let Some(cutoff) = self.round.checked_sub(self.aging_rounds as u64) else {
+            return; // no request can have waited `aging_rounds` yet
+        };
+        let starved = self
+            .queue
+            .iter()
+            .skip(self.promoted_front)
+            .filter(|(_, at)| *at <= cutoff)
+            .count();
+        if starved == 0 {
             return;
         }
         let mut aged: Vec<(Request, u64)> = Vec::with_capacity(starved);
-        let mut rest: Vec<(Request, u64)> = Vec::with_capacity(self.queue.len() - starved);
-        for entry in self.queue.drain(..) {
-            if entry.1 < cutoff {
+        let mut rest: Vec<(Request, u64)> =
+            Vec::with_capacity(self.queue.len() - self.promoted_front - starved);
+        let tail: Vec<(Request, u64)> = self.queue.drain(self.promoted_front..).collect();
+        for entry in tail {
+            if entry.1 <= cutoff {
                 aged.push(entry);
             } else {
                 rest.push(entry);
             }
         }
         self.promoted += aged.len();
+        self.promoted_front += aged.len();
         self.queue.extend(aged);
         self.queue.extend(rest);
     }
@@ -199,28 +227,57 @@ mod tests {
     #[test]
     fn sjf_aging_bounds_starvation() {
         // A long job under a steady stream of short ones: pure SJF
-        // never serves it; with aging N it must reach the front within
-        // N take rounds and be served on the next one.
+        // never serves it; with aging N — and no other starved request
+        // ahead of it — it must be served on EXACTLY the Nth take
+        // round (the promoting take drains the front it was just moved
+        // to). One fresh short job per round keeps the SJF front
+        // crowded with younger work the whole time.
         let aging = 4usize;
         let mut r = Router::new(64, RouterPolicy::Sjf).with_aging(aging);
-        r.submit(req(1000, 500)); // the starving long request
+        r.submit(req(1000, 500)); // the starving long request, round 0
         let mut served_at = None;
-        for round in 0..3 * aging as u64 {
-            // Two fresh short jobs per round keep the front crowded.
-            r.submit(req(round * 2, 1));
-            r.submit(req(round * 2 + 1, 1));
+        for round in 1..=3 * aging as u64 {
+            // The fresh short job SJF-inserts ahead of the long one.
+            r.submit(req(round, 1));
             let got = r.take(1);
             if got[0].id == 1000 {
                 served_at = Some(round);
                 break;
             }
         }
-        let served_at = served_at.expect("aging never promoted the long request");
-        assert!(
-            served_at <= aging as u64 + 1,
-            "starvation bound violated: served at round {served_at}"
+        assert_eq!(
+            served_at,
+            Some(aging as u64),
+            "exact starvation bound violated (promoted {})",
+            r.promoted
         );
-        assert!(r.promoted >= 1);
+        assert_eq!(r.promoted, 1);
+    }
+
+    #[test]
+    fn promotion_is_sticky_against_fresh_short_jobs() {
+        // Once force-promoted, a starved request leads the queue even
+        // as younger short jobs keep arriving: SJF insertion skips the
+        // promoted front region, and later rounds never re-promote.
+        let mut r = Router::new(16, RouterPolicy::Sjf).with_aging(2);
+        r.submit(req(7, 400));
+        r.take(0); // round 1: not yet starved
+        r.take(0); // round 2: waited exactly `aging` → promoted
+        assert_eq!(r.promoted, 1);
+        r.submit(req(0, 1));
+        r.submit(req(1, 1));
+        assert_eq!(
+            r.peek(1)[0].id,
+            7,
+            "fresh short jobs SJF-inserted ahead of promoted work"
+        );
+        r.take(0); // another round: must not count a re-promotion
+        assert_eq!(r.promoted, 1, "promotion re-counted");
+        assert_eq!(
+            r.take(3).iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![7, 0, 1],
+            "promoted front region must drain first"
+        );
     }
 
     #[test]

@@ -80,6 +80,16 @@ pub struct ServeConfig {
     pub expert_decode: ExpertStrategy,
     pub policy: RouterPolicy,
     pub queue_capacity: usize,
+    /// Streaming scheduler: maximum prompt tokens prefilled per joiner
+    /// per iteration (`0` = unchunked, the whole padded prompt in one
+    /// iteration). A non-zero chunk splits a long prompt's prefill
+    /// across multiple admission iterations, with peer decode steps
+    /// interleaved between chunks — removing the admission
+    /// head-of-line block — at bit-identical per-request tokens (the
+    /// ranged prefill kernel is exact). The joiner's first token (and
+    /// its TTFT) land with the final chunk. Ignored by the gang
+    /// scheduler, which has no peers to protect during a prefill.
+    pub prefill_chunk: usize,
     /// When set, the engine runs window → plan cache → controller and
     /// executes under the controller's active plan; the fixed fields
     /// above only serve as the pre-traffic fallback.
@@ -95,6 +105,7 @@ impl ServeConfig {
             expert_decode: ExpertStrategy::new(n, 1),
             policy: RouterPolicy::Fcfs,
             queue_capacity: 1024,
+            prefill_chunk: 0,
             adaptive: None,
         }
     }
@@ -107,6 +118,7 @@ impl ServeConfig {
             expert_decode: ExpertStrategy::new(n, 1),
             policy: RouterPolicy::Fcfs,
             queue_capacity: 1024,
+            prefill_chunk: 0,
             adaptive: None,
         }
     }

@@ -259,6 +259,7 @@ fn host_serving_tokens_invariant_across_plans() {
         expert_decode: ExpertStrategy::new(4, 1),
         policy: hap::serving::RouterPolicy::Fcfs,
         queue_capacity: 1024,
+        prefill_chunk: 0,
         adaptive: None,
     };
     let mut reference: Option<Vec<(u64, Vec<i32>)>> = None;
