@@ -1,0 +1,214 @@
+//! §Fault-recovery benchmark — BENCH_fault_recovery.json at the repo
+//! root.
+//!
+//! Measures the price of surviving a device crash, artifact-free:
+//!
+//!  - **crash-at-k vs no-fault**: the same workload on the streaming
+//!    engine with and without a deterministic `crash@k` fault, plus a
+//!    from-scratch run on the degraded-size grid as the lower bound —
+//!    recovery latency in scheduler iterations and measured wall time,
+//!    with the crash run's tokens asserted bit-identical to the
+//!    degraded baseline (replay-from-prompt recovery);
+//!  - **goodput**: generated tokens per second for each scenario;
+//!  - **simulated degraded replay**: the trace-driven twin on the
+//!    paper platform (mixtral-8x7b, 4×A6000) — makespan penalty of a
+//!    mid-trace crash under the adaptive controller.
+
+use hap::adapt::replay::{replay_adaptive, replay_adaptive_degraded, WorkloadTrace};
+use hap::adapt::ControllerConfig;
+use hap::benchkit::{banner, bench, write_results, Table};
+use hap::config::{MoEModelConfig, NodeConfig};
+use hap::model::{FaultPlan, WeightStore};
+use hap::planner::HapPlanner;
+use hap::runtime::TinyModelMeta;
+use hap::serving::{Engine, Request, ServeConfig, ServeReport};
+use hap::util::json::Json;
+use hap::util::rng::Rng;
+
+fn workload(m: &TinyModelMeta, n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|id| {
+            let len = rng.range(m.prefill_len / 2, m.prefill_len);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+            let gen = rng.range(2, 8);
+            Request::new(id, prompt, gen)
+        })
+        .collect()
+}
+
+fn sorted_tokens(report: &ServeReport) -> Vec<(u64, Vec<i32>)> {
+    let mut t: Vec<(u64, Vec<i32>)> =
+        report.responses.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    t.sort();
+    t
+}
+
+/// Serve the standard workload, counting scheduler iterations to idle.
+fn serve(
+    m: &TinyModelMeta,
+    tp: usize,
+    fault: Option<&str>,
+    n: usize,
+) -> anyhow::Result<(usize, ServeReport)> {
+    let mut builder = Engine::builder(ServeConfig::tp(tp));
+    if let Some(trace) = fault {
+        builder = builder.fault_plan(FaultPlan::parse_trace(trace)?);
+    }
+    let mut engine = builder.build_host(WeightStore::synthetic(m, 42));
+    for req in workload(m, n, 5) {
+        engine.submit(req)?;
+    }
+    let mut iters = 0usize;
+    loop {
+        let out = engine.step()?;
+        iters += 1;
+        if out.idle() {
+            break;
+        }
+    }
+    Ok((iters, engine.shutdown()?))
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("fault_recovery", "device-crash recovery: latency + goodput vs no-fault");
+    let m = TinyModelMeta::host_demo();
+    let n = 8usize;
+    const CRASH: &str = "crash@6";
+
+    // --- Correctness gate: the crash run recovers every request with
+    // tokens bit-identical to the degraded-size grid run from scratch.
+    let (iters_none, rep_none) = serve(&m, 4, None, n)?;
+    let (iters_crash, rep_crash) = serve(&m, 4, Some(CRASH), n)?;
+    let (iters_degraded, rep_degraded) = serve(&m, 2, None, n)?;
+    assert_eq!(rep_none.metrics.requests_completed, n);
+    assert_eq!(rep_crash.metrics.requests_completed, n, "crash run lost requests");
+    assert_eq!(rep_crash.metrics.replans_degraded, 1, "crash must trigger one degraded re-plan");
+    assert!(rep_crash.metrics.requests_recovered >= 1, "no request was recovered");
+    assert_eq!(rep_crash.metrics.requests_failed, 0);
+    assert_eq!(
+        sorted_tokens(&rep_crash),
+        sorted_tokens(&rep_degraded),
+        "recovered tokens diverged from the degraded-grid baseline"
+    );
+    println!(
+        "crash@6 on tp4: {} recovered, tokens == unfaulted tp2 run (bit-identical)",
+        rep_crash.metrics.requests_recovered
+    );
+
+    // --- Wall time per scenario.
+    let t_none = bench("fault-none-tp4", 1, 1.0, || {
+        std::hint::black_box(serve(&m, 4, None, n).unwrap());
+    });
+    let t_crash = bench("fault-crash-at-6", 1, 1.0, || {
+        std::hint::black_box(serve(&m, 4, Some(CRASH), n).unwrap());
+    });
+    let t_degraded = bench("fault-degraded-tp2", 1, 1.0, || {
+        std::hint::black_box(serve(&m, 2, None, n).unwrap());
+    });
+
+    let goodput =
+        |rep: &ServeReport, t: f64| rep.metrics.tokens_generated as f64 / t.max(1e-12);
+    let mut table = Table::new(&["scenario", "sched iters", "median", "tok/s"]);
+    for (name, iters, rep, t) in [
+        ("no fault (tp4)", iters_none, &rep_none, &t_none),
+        ("crash@6 → degraded tp2", iters_crash, &rep_crash, &t_crash),
+        ("degraded baseline (tp2)", iters_degraded, &rep_degraded, &t_degraded),
+    ] {
+        table.row(&[
+            name.into(),
+            format!("{iters}"),
+            hap::util::fmt_secs(t.median),
+            format!("{:.0}", goodput(rep, t.median)),
+        ]);
+    }
+    table.print();
+    // Recovery latency: extra scheduler iterations over starting on
+    // the degraded grid (requeue + replay + backoff accounting), and
+    // over the unfaulted full grid.
+    let recovery_iters = iters_crash.saturating_sub(iters_degraded);
+    println!(
+        "recovery latency: +{} iters vs degraded baseline, +{} iters vs no-fault",
+        recovery_iters,
+        iters_crash.saturating_sub(iters_none)
+    );
+
+    // --- Simulated twin on the paper platform: adaptive replay with a
+    // mid-trace crash (4 → 2 devices) vs the no-fault adaptive run.
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let planner = HapPlanner::new(&model, &node);
+    let trace = WorkloadTrace::phase_shift(6, 16, 17);
+    let cfg = ControllerConfig::default();
+    let adaptive = replay_adaptive(&planner, &trace, &cfg, 32)?;
+    let degraded = replay_adaptive_degraded(&planner, &trace, &cfg, 32, 6, 2)?;
+    let penalty = degraded.total_s / adaptive.total_s - 1.0;
+    println!(
+        "simulated mid-trace crash (mixtral-8x7b, 4xA6000, batch 6/12): \
+         {:.3} s vs {:.3} s no-fault ({:+.1}% makespan)",
+        degraded.total_s,
+        adaptive.total_s,
+        penalty * 100.0
+    );
+
+    let summary = Json::obj(vec![
+        ("bench", "fault_recovery".into()),
+        ("profile", "release".into()),
+        (
+            "engine",
+            Json::obj(vec![
+                ("requests", n.into()),
+                (
+                    "no_fault",
+                    Json::obj(vec![
+                        ("sched_iters", iters_none.into()),
+                        ("median_s", t_none.median.into()),
+                        ("goodput_tok_s", goodput(&rep_none, t_none.median).into()),
+                    ]),
+                ),
+                (
+                    "crash_at_6",
+                    Json::obj(vec![
+                        ("sched_iters", iters_crash.into()),
+                        ("median_s", t_crash.median.into()),
+                        ("goodput_tok_s", goodput(&rep_crash, t_crash.median).into()),
+                        ("faults_detected", rep_crash.metrics.faults_detected.into()),
+                        ("replans_degraded", rep_crash.metrics.replans_degraded.into()),
+                        ("requests_recovered", rep_crash.metrics.requests_recovered.into()),
+                        ("requests_failed", rep_crash.metrics.requests_failed.into()),
+                    ]),
+                ),
+                (
+                    "degraded_baseline",
+                    Json::obj(vec![
+                        ("sched_iters", iters_degraded.into()),
+                        ("median_s", t_degraded.median.into()),
+                        ("goodput_tok_s", goodput(&rep_degraded, t_degraded.median).into()),
+                    ]),
+                ),
+                ("recovery_latency_iters", recovery_iters.into()),
+            ]),
+        ),
+        (
+            "replay",
+            Json::obj(vec![
+                ("trace", "phase-shift".into()),
+                ("crash_at_batch", 6usize.into()),
+                ("survivors", 2usize.into()),
+                ("adaptive_total_s", adaptive.total_s.into()),
+                ("degraded_total_s", degraded.total_s.into()),
+                ("makespan_penalty", penalty.into()),
+            ]),
+        ),
+    ]);
+    write_results("fault_recovery", &summary);
+    let root_path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_fault_recovery.json");
+    if let Err(e) = std::fs::write(&root_path, summary.to_string_pretty()) {
+        eprintln!("could not write {}: {e}", root_path.display());
+    } else {
+        println!("wrote {}", root_path.display());
+    }
+    println!("fault_recovery bench OK");
+    Ok(())
+}

@@ -87,10 +87,12 @@ impl PlanCache {
         }
     }
 
-    /// Platform identity the cache is pinned to on disk. Everything
-    /// latency-relevant goes in: a changed interconnect or device count
-    /// orphans every cached plan.
-    fn platform_fingerprint(node: &NodeConfig) -> String {
+    /// Platform / device-set identity the cache is pinned to.
+    /// Everything latency-relevant goes in, and the device count leads:
+    /// a degraded grid (same GPUs, fewer survivors after a device
+    /// crash) is a *different platform*, so stale full-grid plans are
+    /// never served for it — the fault-recovery path relies on this.
+    pub fn platform_fingerprint(node: &NodeConfig) -> String {
         let g = &node.gpu;
         format!(
             "{}x{}|{}|{}|{}|{}|{}",
@@ -271,6 +273,32 @@ mod tests {
         let none = PlanCache::load(&dir.join("nope.json"), &m, &node).unwrap();
         assert_eq!(none.restored, 0);
         assert!(none.is_empty());
+    }
+
+    #[test]
+    fn degraded_device_set_flushes_full_grid_plans() {
+        // Fault recovery shrinks the node to the surviving device
+        // count. Same GPUs, fewer devices ⇒ different fingerprint ⇒
+        // every full-grid entry flushes, and the degraded solve's
+        // plans fit the survivors.
+        let m = MoEModelConfig::mixtral_8x7b();
+        let full = NodeConfig::a6000x(4);
+        let degraded = NodeConfig::new(full.gpu.clone(), 2);
+        assert_ne!(
+            PlanCache::platform_fingerprint(&full),
+            PlanCache::platform_fingerprint(&degraded),
+            "device count must lead the fingerprint"
+        );
+        let key = key_for(&Scenario::long_constrained());
+        let mut cache = PlanCache::new();
+        let wide = cache.plan(&HapPlanner::new(&m, &full), key).unwrap();
+        assert_eq!(wide.attn.devices(), 4);
+        let narrow = cache.plan(&HapPlanner::new(&m, &degraded), key).unwrap();
+        assert_eq!(cache.invalidations, 1, "degraded grid must flush the cache");
+        assert_eq!(cache.misses, 2, "no stale full-grid plan served");
+        assert_eq!(narrow.attn.devices(), 2, "degraded plan fits the survivors");
+        assert_eq!(narrow.expert_prefill.devices(), 2);
+        assert_eq!(narrow.expert_decode.devices(), 2);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use crate::adapt::controller::{ControllerConfig, SwitchDecision};
 use crate::adapt::window::{QuantizedScenario, TrafficSample};
 use crate::adapt::AdaptLoop;
 use crate::cluster::{EventSim, OpKind};
+use crate::config::hardware::NodeConfig;
 use crate::config::scenario::Scenario;
 use crate::planner::{HapPlanner, HybridPlan};
 use crate::sim::latency::ModuleLatency;
@@ -200,6 +201,12 @@ pub fn switch_cost(planner: &HapPlanner, from: &ExpertStrategy, to: &ExpertStrat
 
 fn execute_batch(sim: &mut EventSim, cost: &BatchCost) {
     let n = sim.num_devices();
+    execute_batch_on(sim, cost, n);
+}
+
+/// [`execute_batch`] restricted to the first `n` devices — the
+/// degraded-replay path schedules nothing on lost devices.
+fn execute_batch_on(sim: &mut EventSim, cost: &BatchCost, n: usize) {
     let attn_t = cost.prefill.attn + cost.decode.attn;
     let expert_t = cost.prefill.expert + cost.decode.expert;
     let comm_t = cost.prefill.comm + cost.decode.comm;
@@ -306,6 +313,99 @@ pub fn replay_adaptive_seeded(
         cache_hit_rate: control.cache.hit_rate(),
     };
     Ok((report, control.cache))
+}
+
+/// Replay the adaptive loop through a **mid-trace device loss**: the
+/// first `crash_at` batches plan over the full node, every batch from
+/// `crash_at` on plans over a degraded node of `survivors` devices
+/// (same GPU type). This is the trace-driven twin of the serving
+/// engine's degraded re-plan path: the shared [`AdaptLoop`] sees the
+/// platform change exactly as the engine does — the [`PlanCache`]
+/// flushes on the device-set fingerprint change and the controller
+/// reseeds — so no stale full-grid plan is ever executed, and the
+/// timeline is charged one `degraded-replan` transition modelling the
+/// reshard of resident weights onto the survivors (from the TP
+/// fallback layout the engine lowers onto first).
+///
+/// Deterministic like every other replay: compare against the no-fault
+/// [`replay_adaptive`] run to read off the goodput cost of the crash.
+pub fn replay_adaptive_degraded(
+    planner: &HapPlanner,
+    trace: &WorkloadTrace,
+    config: &ControllerConfig,
+    window_capacity: usize,
+    crash_at: usize,
+    survivors: usize,
+) -> Result<ReplayReport> {
+    let n = planner.node.num_devices;
+    if !survivors.is_power_of_two() || survivors >= n {
+        anyhow::bail!(
+            "degraded replay needs a power-of-two survivor count below {n}, got {survivors}"
+        );
+    }
+    if crash_at >= trace.points.len() {
+        anyhow::bail!(
+            "crash batch {crash_at} is past the end of the {}-batch trace",
+            trace.points.len()
+        );
+    }
+    let degraded_node = NodeConfig::new(planner.node.gpu.clone(), survivors);
+    let degraded = HapPlanner::with_latency(planner.model, &degraded_node, planner.latency.clone());
+
+    let mut sim = EventSim::new(n);
+    let mut control = AdaptLoop::new(config.clone(), window_capacity);
+    let mut switches = 0usize;
+    let mut switch_time = 0.0;
+    let mut replanned = false;
+
+    for (i, point) in trace.points.iter().enumerate() {
+        let (p, live) = if i < crash_at { (planner, n) } else { (&degraded, survivors) };
+        let samples = (0..point.batch).map(|_| TrafficSample {
+            prompt: point.context,
+            generate: point.generate,
+            batch: point.batch,
+        });
+        let sc = point.scenario();
+        let (plan, decision) = control.step(p, samples, Some(&sc), None)?;
+        if plan.attn.devices().max(plan.expert_prefill.devices()) > live {
+            anyhow::bail!(
+                "stale plan survived the degraded re-plan: {} devices on a {live}-device grid",
+                plan.attn.devices().max(plan.expert_prefill.devices())
+            );
+        }
+        if i >= crash_at && !replanned {
+            replanned = true;
+            // The reshard of resident weights onto the survivors: the
+            // engine lowers onto a TP(survivors) fallback, then the
+            // controller's first degraded plan moves weights from there.
+            let cost =
+                switch_cost(&degraded, &ExpertStrategy::new(survivors, 1), &plan.expert_prefill);
+            if cost > 0.0 {
+                sim.transition(cost, "degraded-replan");
+                switch_time += cost;
+            }
+            switches += 1;
+        } else if let SwitchDecision::Switch { cost, .. } = decision {
+            if cost > 0.0 {
+                sim.transition(cost, "replan-switch");
+                switch_time += cost;
+            }
+            switches += 1;
+        }
+        let bc = batch_cost(p, &plan.attn, &plan.expert_prefill, &plan.expert_decode, &sc);
+        execute_batch_on(&mut sim, &bc, live);
+    }
+
+    Ok(ReplayReport {
+        policy: "adaptive-degraded".into(),
+        batches: trace.points.len(),
+        total_s: sim.now(),
+        switches,
+        switch_time_s: switch_time,
+        cache_hits: control.cache.hits,
+        cache_misses: control.cache.misses,
+        cache_hit_rate: control.cache.hit_rate(),
+    })
 }
 
 /// Replay one fixed strategy triple over the whole trace.
@@ -551,6 +651,39 @@ mod tests {
         assert_eq!(report.switches, 0, "flapping trace moved weights");
         assert_eq!(report.switch_time_s, 0.0);
         assert!(report.total_s.is_finite() && report.total_s > 0.0);
+    }
+
+    #[test]
+    fn degraded_replay_flushes_cache_and_plans_on_survivors() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let trace = WorkloadTrace::phase_shift(3, 16, 5);
+        let cfg = ControllerConfig::default();
+        let full = replay_adaptive(&planner, &trace, &cfg, 16).unwrap();
+        // Crash two of four devices after batch 2 (mid chat phase).
+        let deg = replay_adaptive_degraded(&planner, &trace, &cfg, 16, 2, 2).unwrap();
+        assert_eq!(deg.policy, "adaptive-degraded");
+        assert_eq!(deg.batches, 6, "every batch accounted, before and after the crash");
+        assert!(deg.total_s.is_finite() && deg.total_s > 0.0);
+        // The device-set fingerprint change flushes the plan cache, so
+        // the chat-phase key is re-solved on the 2-device grid: at
+        // least one extra miss vs the no-fault run.
+        assert!(
+            deg.cache_misses > full.cache_misses,
+            "degraded run re-solved nothing: {} vs {} misses",
+            deg.cache_misses,
+            full.cache_misses
+        );
+        // Determinism: same crash, same timeline.
+        let again = replay_adaptive_degraded(&planner, &trace, &cfg, 16, 2, 2).unwrap();
+        assert_eq!(deg.total_s, again.total_s);
+        assert_eq!(deg.switches, again.switches);
+        // Guard rails: non-power-of-two survivors and out-of-range
+        // crash batches are rejected, as is a "degrade" to full size.
+        assert!(replay_adaptive_degraded(&planner, &trace, &cfg, 16, 2, 3).is_err());
+        assert!(replay_adaptive_degraded(&planner, &trace, &cfg, 16, 2, 4).is_err());
+        assert!(replay_adaptive_degraded(&planner, &trace, &cfg, 16, 99, 2).is_err());
     }
 
     #[test]

@@ -253,10 +253,29 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "0",
         "streaming engine: max prompt tokens prefilled per joiner per iteration (0 = unchunked)",
     );
+    spec.flag(
+        "fault-trace",
+        "",
+        "inject deterministic device faults: comma-separated KIND@ITER[@dDEV], \
+         KIND = crash | stall<N> | transient<N> (host backend; forces --engine streaming)",
+    );
     let p = spec.parse(args).map_err(anyhow::Error::msg)?;
 
     let scheduling = hap::serving::Scheduling::parse(p.get("engine"))
         .ok_or_else(|| anyhow::anyhow!("unknown engine '{}' (gang | streaming)", p.get("engine")))?;
+    let fault = match p.get("fault-trace") {
+        "" => None,
+        trace => Some(hap::model::FaultPlan::parse_trace(trace)?),
+    };
+    let scheduling = if fault.is_some() && scheduling == hap::serving::Scheduling::Gang {
+        eprintln!(
+            "--fault-trace: gang scheduling latches on the first fault; \
+             upgrading to --engine streaming so recovery can run"
+        );
+        hap::serving::Scheduling::Streaming
+    } else {
+        scheduling
+    };
 
     let n = usize_flag(&p, "tp")?;
     let make_config = |meta: &hap::runtime::TinyModelMeta| -> anyhow::Result<ServeConfig> {
@@ -301,6 +320,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
 
     let report = match p.get("backend") {
         "pjrt" => {
+            if fault.is_some() {
+                anyhow::bail!(
+                    "--fault-trace requires --backend host: fault injection instruments \
+                     the host grid engine's device map"
+                );
+            }
             if scheduling == hap::serving::Scheduling::Streaming {
                 anyhow::bail!(
                     "--engine streaming requires --backend host: the fixed-shape PJRT \
@@ -325,6 +350,10 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             let meta = hap::runtime::TinyModelMeta::host_demo();
             let weights = hap::model::WeightStore::synthetic(&meta, 0);
             let mut exec = hap::model::ModelExecutor::host(weights);
+            if let Some(fp) = fault {
+                println!("fault injection: {}", p.get("fault-trace"));
+                exec.set_fault_plan(fp);
+            }
             let config = make_config(&meta)?;
             println!(
                 "serving {} requests ({} plan: {}, {} engine) on the host grid engine ...",
@@ -359,6 +388,8 @@ fn cmd_adapt_replay(args: &[String]) -> anyhow::Result<()> {
     spec.flag("seed", "17", "trace jitter seed");
     spec.flag("json", "", "write the comparison JSON to this path");
     spec.flag("plan-cache", "", "load/save the adaptive plan cache at this path");
+    spec.flag("fail-at", "", "also replay a device crash at this batch index (degraded re-plan)");
+    spec.flag("survivors", "2", "surviving device count after --fail-at (power of two)");
     let p = spec.parse(args).map_err(anyhow::Error::msg)?;
 
     let model = parse_model(p.get("model"))?;
@@ -404,6 +435,29 @@ fn cmd_adapt_replay(args: &[String]) -> anyhow::Result<()> {
     }
     t.print();
     println!("{}", cmp.summary_line());
+    let fail_at = p.get("fail-at");
+    if !fail_at.is_empty() {
+        let crash_at: usize = fail_at
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--fail-at must be a batch index, got '{fail_at}'"))?;
+        let survivors = usize_flag(&p, "survivors")?;
+        let deg = hap::adapt::replay::replay_adaptive_degraded(
+            &planner,
+            &trace,
+            &hap::adapt::ControllerConfig::default(),
+            32,
+            crash_at,
+            survivors,
+        )?;
+        println!(
+            "degraded replay (crash at batch {crash_at}, {survivors} survivors): \
+             {:.3} s total, {} switches ({:.3} s) — {:+.1}% makespan vs no-fault adaptive",
+            deg.total_s,
+            deg.switches,
+            deg.switch_time_s,
+            (deg.total_s / cmp.adaptive.total_s - 1.0) * 100.0
+        );
+    }
     let out = p.get("json");
     if !out.is_empty() {
         std::fs::write(out, cmp.to_json().to_string_pretty())?;

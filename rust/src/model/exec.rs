@@ -35,8 +35,16 @@
 //! `Metrics.transitions` and the adapt controller's switch-cost
 //! economics describe real weight movement. Per-batch sequence state
 //! (positions, KV caches) resets in `prefill`.
+//!
+//! **Fault injection**: an installed [`crate::model::fault::FaultPlan`]
+//! is ticked once per compute op; a faulted device raises a structured
+//! `fault[kind]` error from `map_devices` before its closure runs.
+//! Ops fail *before* any cursor advances (`slot_pos` moves only after
+//! a fully successful op), so a retried op replays bit-identically —
+//! the property the serving engine's recovery state machine builds on.
 
 use crate::model::collectives;
+use crate::model::fault::{fault_message, FaultPlan};
 use crate::model::grid::{DeviceGrid, ShardPlan};
 use crate::model::kernels;
 use crate::model::weights::ShardSpec;
@@ -83,11 +91,21 @@ struct DeviceState {
     /// asynchronous, so the literal must outlive the transfer.
     bufs: HashMap<(String, usize), Vec<(xla::Literal, xla::PjRtBuffer)>>,
     kv: Vec<Option<LayerCache>>,
+    /// Injected fault verdict for the current op (the structured
+    /// `fault[kind]` message), stamped by `ModelExecutor::fault_tick`
+    /// and raised by `map_devices` before the device closure runs.
+    fault: Option<String>,
 }
 
 impl DeviceState {
     fn new(device: usize) -> DeviceState {
-        DeviceState { device, shards: HashMap::new(), bufs: HashMap::new(), kv: Vec::new() }
+        DeviceState {
+            device,
+            shards: HashMap::new(),
+            bufs: HashMap::new(),
+            kv: Vec::new(),
+            fault: None,
+        }
     }
 }
 
@@ -134,6 +152,11 @@ pub struct ModelExecutor<'rt> {
     slot_live: Vec<bool>,
     session: bool,
     stats: ExecStats,
+    /// Deterministic fault-injection schedule (host backend chaos
+    /// testing): ticked once per compute op; verdicts are stamped into
+    /// the device states and surfaced by `map_devices` as structured
+    /// `fault[kind]` errors. `None` = healthy run (zero overhead).
+    fault: Option<FaultPlan>,
 }
 
 impl<'rt> ModelExecutor<'rt> {
@@ -155,6 +178,7 @@ impl<'rt> ModelExecutor<'rt> {
             slot_live: Vec::new(),
             session: false,
             stats: ExecStats::default(),
+            fault: None,
         })
     }
 
@@ -181,6 +205,7 @@ impl<'rt> ModelExecutor<'rt> {
             slot_live: Vec::new(),
             session: false,
             stats: ExecStats::default(),
+            fault: None,
         }
     }
 
@@ -190,6 +215,62 @@ impl<'rt> ModelExecutor<'rt> {
 
     pub fn stats(&self) -> ExecStats {
         self.stats
+    }
+
+    /// Install a deterministic fault-injection schedule. Host backend
+    /// only in effect: the PJRT per-device loops do not run through
+    /// `map_devices`, so faults are never raised there.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault = Some(plan);
+    }
+
+    /// The installed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref()
+    }
+
+    /// Devices the fault plan has permanently crashed (logical ids of
+    /// the current grid), sorted. Empty when no plan is installed.
+    pub fn crashed_devices(&self) -> &[usize] {
+        self.fault.as_ref().map(|f| f.crashed()).unwrap_or(&[])
+    }
+
+    /// Logical devices currently instantiated.
+    pub fn device_count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Forget crashed devices after a degraded re-plan renumbers the
+    /// grid onto `n_devices` survivors: the fault plan drops stale /
+    /// out-of-range events ([`FaultPlan::compact_for`]) and every
+    /// stamped verdict is cleared.
+    pub fn compact_faults(&mut self, n_devices: usize) {
+        if let Some(f) = self.fault.as_mut() {
+            f.compact_for(n_devices);
+        }
+        for st in &mut self.devices {
+            st.fault = None;
+        }
+    }
+
+    /// Advance the fault clock by one compute op and stamp per-device
+    /// verdicts. Called once at the top of every executor compute op
+    /// (`prefill`, `decode_step`, `prefill_slot`, `decode_slots`), so
+    /// fault schedules are keyed by a deterministic op counter — no
+    /// wall clocks, no run-time randomness.
+    fn fault_tick(&mut self) {
+        let Some(fp) = self.fault.as_mut() else {
+            return;
+        };
+        let verdicts = fp.tick(self.devices.len());
+        let iter = fp.iteration();
+        for st in &mut self.devices {
+            st.fault = verdicts
+                .get(st.device)
+                .copied()
+                .flatten()
+                .map(|k| fault_message(k, st.device, iter));
+        }
     }
 
     /// A plan is executable when it lowers to a well-formed grid for
@@ -351,6 +432,7 @@ impl<'rt> ModelExecutor<'rt> {
             st.kv = (0..m.layers).map(|_| None).collect();
         }
 
+        self.fault_tick();
         let mut x = self.embed(tokens, b, s, &m)?;
         for l in 0..m.layers {
             let a_out = self.attn_prefill_layer(&x, l, &grid, &m)?;
@@ -390,6 +472,7 @@ impl<'rt> ModelExecutor<'rt> {
         }
         let grid = DeviceGrid::lower(plan)?;
 
+        self.fault_tick();
         let mut x = self.embed(last_tokens, b, 1, &m)?;
         for l in 0..m.layers {
             let a_out = self.attn_decode_layer(&x, l, &grid, &m)?;
@@ -568,6 +651,7 @@ impl<'rt> ModelExecutor<'rt> {
         let bg = m.batch / plan.attn.dp;
         let (g, r) = (slot / bg, slot % bg);
 
+        self.fault_tick();
         let mut x = self.embed(tokens, 1, c, &m)?;
         for l in 0..m.layers {
             let a_out = {
@@ -673,6 +757,7 @@ impl<'rt> ModelExecutor<'rt> {
             .map(|s| self.slot_live[s] && self.slot_pos[s] >= m.prefill_len)
             .collect();
 
+        self.fault_tick();
         let mut x = self.embed(last_tokens, b, 1, &m)?;
         for l in 0..m.layers {
             let a_out = {
@@ -1020,21 +1105,36 @@ fn require_artifact(rt: &PjrtRuntime, name: &str) -> Result<()> {
     Ok(())
 }
 
+/// Raise a device's stamped fault verdict (if any) as a structured
+/// error instead of running its closure — the injection point the
+/// engine's recovery state machine classifies on.
+fn fault_check(st: &DeviceState) -> Result<()> {
+    match &st.fault {
+        Some(msg) => Err(anyhow::Error::msg(msg.clone())),
+        None => Ok(()),
+    }
+}
+
 /// Run `f` over every device state — scoped threads in parallel mode,
 /// a plain loop in sequential mode. Outputs are returned in device
-/// order either way, so downstream combines are order-identical.
+/// order either way, so downstream combines are order-identical. A
+/// device carrying an injected fault verdict errors instead of
+/// computing (in both modes, before `f` runs).
 fn map_devices<T, F>(mode: EngineMode, states: &mut [DeviceState], f: F) -> Result<Vec<T>>
 where
     T: Send,
     F: Fn(&mut DeviceState) -> Result<T> + Sync,
 {
     match mode {
-        EngineMode::Sequential => states.iter_mut().map(|st| f(st)).collect(),
+        EngineMode::Sequential => states
+            .iter_mut()
+            .map(|st| fault_check(st).and_then(|_| f(st)))
+            .collect(),
         EngineMode::Parallel => std::thread::scope(|scope| {
             let fr = &f;
             let handles: Vec<_> = states
                 .iter_mut()
-                .map(|st| scope.spawn(move || fr(st)))
+                .map(|st| scope.spawn(move || fault_check(st).and_then(|_| fr(st))))
                 .collect();
             handles
                 .into_iter()

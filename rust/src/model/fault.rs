@@ -1,0 +1,395 @@
+//! Deterministic device-fault injection for the grid engine.
+//!
+//! A [`FaultPlan`] is a *seeded schedule* of [`DeviceFault`]s keyed by
+//! `(device, iteration)`, where an **iteration** is one executor
+//! compute op — one `prefill`, `decode_step`, `prefill_slot`, or
+//! `decode_slots` call. The host backend ticks the plan once per op
+//! and stamps the resulting per-device verdicts into its device
+//! states; `map_devices` then surfaces a stamped verdict as a
+//! structured error *before* running the device closure. There are no
+//! wall clocks and no run-time randomness anywhere on this path, so
+//! every failure mode — and every recovery the serving engine performs
+//! in response — is bit-reproducible in tests and benches.
+//!
+//! Three failure modes:
+//!
+//! - [`DeviceFault::Crash`] — the device is permanently lost from the
+//!   scheduled iteration on. The engine responds with degraded
+//!   re-planning (see `serving::engine`).
+//! - [`DeviceFault::Stall { iters }`] — the device fails every op for
+//!   `iters` iterations, then recovers. Each engine retry advances the
+//!   fault clock by one op, so a bounded retry loop rides out the
+//!   stall without requeueing work.
+//! - [`DeviceFault::Transient { fail_n }`] — the next `fail_n` ops on
+//!   the device fail, then succeed. Absorbed the same way.
+//!
+//! Fault errors carry a machine-readable prefix
+//! (`fault[crash] device 2 at iter 5`) because the vendored error
+//! shim has no downcasting; [`classify`] recovers the [`FaultKind`]
+//! from any error chain that crossed a faulted device.
+
+use crate::util::rng::Rng;
+use crate::Result;
+use std::collections::BTreeMap;
+
+/// A scheduled failure mode for one device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceFault {
+    /// Permanent loss from the scheduled iteration on.
+    Crash,
+    /// Every op fails for `iters` iterations, then the device recovers.
+    Stall { iters: usize },
+    /// The next `fail_n` ops fail, then succeed.
+    Transient { fail_n: usize },
+}
+
+/// One schedule entry: `fault` fires on `device` when the plan's op
+/// counter reaches `iter` (1-based: the first executor op is iter 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub device: usize,
+    pub iter: u64,
+    pub fault: DeviceFault,
+}
+
+/// The verdict a device carries for the current op — what the engine's
+/// recovery state machine dispatches on. `Stall` and `Transient` are
+/// retryable; `Crash` is terminal for the device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    Crash,
+    Stall,
+    Transient,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Stall => "stall",
+            FaultKind::Transient => "transient",
+        }
+    }
+
+    /// Whether bounded retry can absorb this fault without degrading.
+    pub fn retryable(&self) -> bool {
+        !matches!(self, FaultKind::Crash)
+    }
+}
+
+/// The structured message `map_devices` raises for a faulted device.
+/// The `fault[kind]` prefix is the classification contract — see
+/// [`classify`].
+pub fn fault_message(kind: FaultKind, device: usize, iter: u64) -> String {
+    format!("fault[{}] device {} at iter {}", kind.label(), device, iter)
+}
+
+/// Recover the fault kind from an error chain, if any link in it is a
+/// structured fault message. The vendored `anyhow` shim stores errors
+/// as rendered strings, so prefix matching over the chain is the
+/// downcast.
+pub fn classify(err: &anyhow::Error) -> Option<FaultKind> {
+    for msg in err.chain() {
+        let Some(rest) = msg.strip_prefix("fault[") else {
+            continue;
+        };
+        if rest.starts_with("crash]") {
+            return Some(FaultKind::Crash);
+        }
+        if rest.starts_with("stall]") {
+            return Some(FaultKind::Stall);
+        }
+        if rest.starts_with("transient]") {
+            return Some(FaultKind::Transient);
+        }
+    }
+    None
+}
+
+/// Recover the faulted device id from a structured fault message in
+/// the error chain (`fault[kind] device D at iter K`) — used when an
+/// exhausted retry budget promotes a stalling device to "lost".
+pub fn faulted_device(err: &anyhow::Error) -> Option<usize> {
+    for msg in err.chain() {
+        if !msg.starts_with("fault[") {
+            continue;
+        }
+        if let Some(rest) = msg.split("device ").nth(1) {
+            let id: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+            if let Ok(d) = id.parse() {
+                return Some(d);
+            }
+        }
+    }
+    None
+}
+
+/// A deterministic fault schedule plus its run-time activation state.
+///
+/// The executor drives it through [`FaultPlan::tick`] — once per
+/// compute op — and reads back per-device verdicts for that op. All
+/// state transitions are keyed on the op counter; replaying the same
+/// workload under the same plan reproduces the same faults at the same
+/// ops.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    schedule: Vec<FaultEvent>,
+    /// Op counter (1-based after the first tick).
+    iter: u64,
+    /// Permanently lost devices (sorted, deduped).
+    crashed: Vec<usize>,
+    /// Stalled devices → last stalled iteration (inclusive).
+    stalled: BTreeMap<usize, u64>,
+    /// Transiently failing devices → remaining ops to fail.
+    transient: BTreeMap<usize, usize>,
+}
+
+impl FaultPlan {
+    pub fn new(mut schedule: Vec<FaultEvent>) -> FaultPlan {
+        // Activation scans the schedule in order; sort so the plan's
+        // behavior is independent of event-list authoring order.
+        schedule.sort_by_key(|e| (e.iter, e.device));
+        FaultPlan { schedule, ..FaultPlan::default() }
+    }
+
+    /// Parse a compact fault-trace string: comma-separated events, each
+    /// `KIND@ITER[@dDEV]` with `KIND` one of `crash`, `stall<N>`
+    /// (stall for N iterations), `transient<N>` (fail the next N ops).
+    /// The device defaults to 0. Examples: `crash@3`,
+    /// `stall2@5@d1`, `transient1@4,crash@9@d2`.
+    pub fn parse_trace(trace: &str) -> Result<FaultPlan> {
+        let mut schedule = Vec::new();
+        for part in trace.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let mut fields = part.split('@');
+            let kind = fields.next().unwrap_or("");
+            let iter: u64 = fields
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("fault event '{part}' missing '@iter'"))?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault event '{part}': bad iteration"))?;
+            let device = match fields.next() {
+                None => 0usize,
+                Some(d) => d
+                    .strip_prefix('d')
+                    .and_then(|v| v.parse().ok())
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("fault event '{part}': device must be 'd<N>'")
+                    })?,
+            };
+            if iter == 0 {
+                anyhow::bail!("fault event '{part}': iterations are 1-based");
+            }
+            let fault = if kind == "crash" {
+                DeviceFault::Crash
+            } else if let Some(n) = kind.strip_prefix("stall") {
+                let iters: usize = n
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault event '{part}': stall<N> needs N"))?;
+                DeviceFault::Stall { iters }
+            } else if let Some(n) = kind.strip_prefix("transient") {
+                let fail_n: usize = n
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("fault event '{part}': transient<N> needs N"))?;
+                DeviceFault::Transient { fail_n }
+            } else {
+                anyhow::bail!(
+                    "fault event '{part}': unknown kind '{kind}' (crash|stall<N>|transient<N>)"
+                );
+            };
+            schedule.push(FaultEvent { device, iter, fault });
+        }
+        if schedule.is_empty() {
+            anyhow::bail!("empty fault trace");
+        }
+        Ok(FaultPlan::new(schedule))
+    }
+
+    /// Deterministic pseudo-random schedule: `events` faults drawn over
+    /// the first `horizon` iterations of an `n_devices` grid from a
+    /// seeded generator. Same seed → same schedule, always.
+    pub fn seeded(seed: u64, n_devices: usize, horizon: u64, events: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed);
+        let schedule = (0..events)
+            .map(|_| {
+                let fault = match rng.below(3) {
+                    0 => DeviceFault::Crash,
+                    1 => DeviceFault::Stall { iters: rng.range(1, 3) },
+                    _ => DeviceFault::Transient { fail_n: rng.range(1, 2) },
+                };
+                FaultEvent {
+                    device: rng.below(n_devices.max(1)),
+                    iter: 1 + rng.below(horizon.max(1) as usize) as u64,
+                    fault,
+                }
+            })
+            .collect();
+        FaultPlan::new(schedule)
+    }
+
+    /// Advance to the next executor op and return the per-device fault
+    /// verdicts for it (`verdicts[d]` = what device `d` suffers this
+    /// op, `None` = healthy). One call = one compute op; `Transient`
+    /// budgets are consumed here, once per op.
+    pub fn tick(&mut self, n_devices: usize) -> Vec<Option<FaultKind>> {
+        self.iter += 1;
+        for i in 0..self.schedule.len() {
+            let ev = self.schedule[i];
+            if ev.iter != self.iter {
+                continue;
+            }
+            match ev.fault {
+                DeviceFault::Crash => {
+                    if !self.crashed.contains(&ev.device) {
+                        self.crashed.push(ev.device);
+                        self.crashed.sort_unstable();
+                    }
+                }
+                DeviceFault::Stall { iters } => {
+                    self.stalled.insert(ev.device, self.iter + iters.max(1) as u64 - 1);
+                }
+                DeviceFault::Transient { fail_n } => {
+                    self.transient.insert(ev.device, fail_n.max(1));
+                }
+            }
+        }
+        let mut verdicts = vec![None; n_devices];
+        for (d, v) in verdicts.iter_mut().enumerate() {
+            if self.crashed.contains(&d) {
+                *v = Some(FaultKind::Crash);
+                continue;
+            }
+            if let Some(&until) = self.stalled.get(&d) {
+                if self.iter <= until {
+                    *v = Some(FaultKind::Stall);
+                    continue;
+                }
+            }
+            if let Some(rem) = self.transient.get_mut(&d) {
+                if *rem > 0 {
+                    *rem -= 1;
+                    *v = Some(FaultKind::Transient);
+                }
+            }
+        }
+        self.stalled.retain(|_, until| self.iter < *until);
+        self.transient.retain(|_, rem| *rem > 0);
+        verdicts
+    }
+
+    /// Current op counter (0 before the first tick).
+    pub fn iteration(&self) -> u64 {
+        self.iter
+    }
+
+    /// Permanently lost devices (logical ids of the grid the plan ran
+    /// against), sorted.
+    pub fn crashed(&self) -> &[usize] {
+        &self.crashed
+    }
+
+    pub fn any_crashed(&self) -> bool {
+        !self.crashed.is_empty()
+    }
+
+    /// Renumber for a degraded grid of `n_devices` survivors: the
+    /// executor rebuilds logical devices `0..n_devices`, so the crashed
+    /// set is forgotten and pending events that target out-of-range
+    /// devices or already-passed iterations are dropped. The op counter
+    /// keeps running (determinism: one clock per run).
+    pub fn compact_for(&mut self, n_devices: usize) {
+        self.crashed.clear();
+        self.stalled.clear();
+        self.transient.clear();
+        let iter = self.iter;
+        self.schedule.retain(|e| e.device < n_devices && e.iter > iter);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_trace_grammar() {
+        let p = FaultPlan::parse_trace("crash@3").unwrap();
+        assert_eq!(
+            p.schedule,
+            vec![FaultEvent { device: 0, iter: 3, fault: DeviceFault::Crash }]
+        );
+        let p = FaultPlan::parse_trace("stall2@5@d1, transient1@4").unwrap();
+        assert_eq!(
+            p.schedule,
+            vec![
+                FaultEvent { device: 0, iter: 4, fault: DeviceFault::Transient { fail_n: 1 } },
+                FaultEvent { device: 1, iter: 5, fault: DeviceFault::Stall { iters: 2 } },
+            ]
+        );
+        assert!(FaultPlan::parse_trace("").is_err());
+        assert!(FaultPlan::parse_trace("crash").is_err());
+        assert!(FaultPlan::parse_trace("crash@0").is_err());
+        assert!(FaultPlan::parse_trace("melt@3").is_err());
+        assert!(FaultPlan::parse_trace("crash@3@x1").is_err());
+    }
+
+    #[test]
+    fn crash_is_permanent_and_stall_expires() {
+        let mut p = FaultPlan::parse_trace("crash@2@d1,stall2@2@d0").unwrap();
+        assert_eq!(p.tick(2), vec![None, None]); // iter 1
+        assert_eq!(p.tick(2), vec![Some(FaultKind::Stall), Some(FaultKind::Crash)]); // 2
+        assert_eq!(p.tick(2), vec![Some(FaultKind::Stall), Some(FaultKind::Crash)]); // 3
+        assert_eq!(p.tick(2), vec![None, Some(FaultKind::Crash)]); // 4: stall over
+        assert_eq!(p.crashed(), &[1]);
+        assert!(p.any_crashed());
+    }
+
+    #[test]
+    fn transient_budget_is_consumed_per_op() {
+        let mut p = FaultPlan::parse_trace("transient2@1").unwrap();
+        assert_eq!(p.tick(1), vec![Some(FaultKind::Transient)]);
+        assert_eq!(p.tick(1), vec![Some(FaultKind::Transient)]);
+        assert_eq!(p.tick(1), vec![None]);
+        assert!(!p.any_crashed());
+    }
+
+    #[test]
+    fn classify_round_trips_through_error_chains() {
+        for kind in [FaultKind::Crash, FaultKind::Stall, FaultKind::Transient] {
+            let e = anyhow::Error::msg(fault_message(kind, 2, 5)).context("decode step");
+            assert_eq!(classify(&e), Some(kind), "{kind:?} lost in the chain");
+            assert_eq!(faulted_device(&e), Some(2));
+        }
+        assert_eq!(classify(&anyhow::anyhow!("plain failure")), None);
+        assert_eq!(faulted_device(&anyhow::anyhow!("plain failure")), None);
+    }
+
+    #[test]
+    fn seeded_schedules_are_reproducible() {
+        let a = FaultPlan::seeded(0xFA17, 4, 20, 6);
+        let b = FaultPlan::seeded(0xFA17, 4, 20, 6);
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.schedule.len(), 6);
+        assert!(a.schedule.iter().all(|e| e.device < 4 && (1..=20).contains(&e.iter)));
+        let c = FaultPlan::seeded(0xFA18, 4, 20, 6);
+        assert_ne!(a.schedule, c.schedule, "seed must matter");
+    }
+
+    #[test]
+    fn compact_for_drops_stale_and_out_of_range_events() {
+        let mut p = FaultPlan::parse_trace("crash@1@d3,crash@5@d2,crash@9@d1").unwrap();
+        p.tick(4); // iter 1: d3 crashes
+        assert_eq!(p.crashed(), &[3]);
+        p.compact_for(2); // degraded to devices {0, 1}
+        assert!(!p.any_crashed());
+        assert_eq!(
+            p.schedule,
+            vec![FaultEvent { device: 1, iter: 9, fault: DeviceFault::Crash }],
+            "d2 event out of range and past events must be dropped"
+        );
+        // The clock keeps running across the degrade.
+        assert_eq!(p.iteration(), 1);
+        for _ in 0..7 {
+            p.tick(2);
+        }
+        assert_eq!(p.tick(2), vec![None, Some(FaultKind::Crash)]); // iter 9
+    }
+}

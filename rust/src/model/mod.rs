@@ -16,14 +16,20 @@
 //! - [`exec`] — the persistent executor: per-device shard + KV state
 //!   held across batches, scoped-thread parallel host execution with a
 //!   sequential bit-equivalence reference, and measured resharding on
-//!   plan switches.
+//!   plan switches;
+//! - [`fault`] — deterministic device-fault injection: seeded
+//!   `(device, iteration)` fault schedules the executor consults once
+//!   per compute op, so crash/stall/transient failures (and the
+//!   serving engine's recovery from them) replay bit-identically.
 
 pub mod collectives;
 pub mod exec;
+pub mod fault;
 pub mod grid;
 pub mod kernels;
 pub mod weights;
 
 pub use exec::{EngineMode, ExecStats, ModelExecutor};
+pub use fault::{DeviceFault, FaultEvent, FaultKind, FaultPlan};
 pub use grid::{CollectiveGroup, DeviceGrid, DeviceRole, GroupKind, ShardPlan};
 pub use weights::{ShardSpec, WeightStore};

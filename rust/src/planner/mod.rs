@@ -482,6 +482,29 @@ impl<'a> HapPlanner<'a> {
         self.plan_from_tables(&space, &tables, scenario, t0, false)
     }
 
+    /// Re-solve the HAP ILP with the search space restricted to a
+    /// degraded device count — fault recovery's planning path: the
+    /// surviving subset of a partially-failed grid becomes one more
+    /// scenario dimension. The reduced node inherits this planner's
+    /// GPU spec and (cached) latency model, so only the device
+    /// dimension changes; plan caches key on the node fingerprint and
+    /// therefore never serve a stale full-grid plan for the degraded
+    /// platform.
+    pub fn plan_degraded(&self, scenario: &Scenario, n_devices: usize) -> Result<HybridPlan> {
+        if !n_devices.is_power_of_two() {
+            anyhow::bail!(
+                "degraded device count must be a power of two, got {n_devices} \
+                 (round the survivor count down)"
+            );
+        }
+        if n_devices == self.node.num_devices {
+            return self.plan(scenario, scenario.generate);
+        }
+        let node = NodeConfig::new(self.node.gpu.clone(), n_devices);
+        let degraded = HapPlanner::with_latency(self.model, &node, self.latency.clone());
+        degraded.plan(scenario, scenario.generate)
+    }
+
     /// `plan` over the pre-optimization code path end to end: scalar
     /// serial cost tables AND the reference ILP solver. Used as the
     /// before measurement in `benches/perf_hotpath.rs`. Selects the
@@ -703,6 +726,23 @@ mod tests {
         let planner = HapPlanner::new(&m, &node);
         let plan = planner.plan(&Scenario::short_extended(), 2048).unwrap();
         assert_eq!(plan.expert_decode.ep, 1, "decode should be TP: {plan}");
+    }
+
+    #[test]
+    fn plan_degraded_restricts_to_survivor_count() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let sc = Scenario::short_constrained();
+        let degraded = planner.plan_degraded(&sc, 2).unwrap();
+        assert_eq!(degraded.attn.devices(), 2, "degraded plan must fit survivors");
+        assert_eq!(degraded.expert_prefill.devices(), 2);
+        assert_eq!(degraded.expert_decode.devices(), 2);
+        // The planner itself is untouched: a full-width plan still
+        // solves over all four devices.
+        let full = planner.plan(&sc, sc.generate).unwrap();
+        assert_eq!(full.attn.devices(), 4);
+        assert!(planner.plan_degraded(&sc, 3).is_err(), "non-pow2 survivor count rejected");
     }
 
     #[test]

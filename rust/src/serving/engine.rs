@@ -72,6 +72,45 @@
 //! scheduling therefore produces per-request token sequences
 //! bit-identical to the gang path (`rust/tests/engine_api.rs`).
 //!
+//! **Fault recovery (streaming mode).** With a
+//! [`crate::model::FaultPlan`] installed on the executor, device
+//! failures surface as structured `fault[kind]` errors from the step's
+//! compute ops, and [`Session::step`] runs a detection → retry →
+//! degrade → requeue state machine over them:
+//!
+//! - **detection** — any step error is classified by
+//!   [`crate::model::fault::classify`]; a classified fault increments
+//!   `Metrics::faults_detected`, an unclassified error latches the
+//!   engine into [`EngineState::Failed`] (no corrupt re-entry; see
+//!   the de-panicked [`EngineError`] invariants).
+//! - **retry** — retryable faults (`Stall`, `Transient`) are retried
+//!   with bounded deterministic backoff: the engine burns `1, 2, 4,
+//!   8, 16` *scheduler iterations* (never wall-clock time) between
+//!   attempts, up to [`MAX_FAULT_RETRIES`]. Every compute op left the
+//!   per-slot state untouched on error (cursors restored, positions
+//!   unadvanced), so a successful retry re-runs the exact same op and
+//!   the token streams stay bit-identical — transient faults are
+//!   absorbed with **zero requeues**.
+//! - **degrade** — a `Crash` (or an exhausted retry budget, which
+//!   promotes the faulting device to lost) triggers degraded
+//!   re-planning: the surviving device count rounds down to a power of
+//!   two, the planner's node shrinks to it (adaptive engines re-plan
+//!   through the same [`AdaptState`]; the plan cache's platform
+//!   fingerprint changes, so stale full-grid plans are never served),
+//!   and fixed-plan engines fall back to `TP(n_survivors)`.
+//! - **requeue** — every in-flight request on the dead grid returns to
+//!   the head of the backlog and replays from its prompt on the
+//!   degraded grid (`Metrics::requests_recovered`). Host kernels are
+//!   deterministic and row-independent, so recovered requests produce
+//!   tokens bit-identical to the same workload run unfaulted on a
+//!   grid of the degraded size. When no grid survives, every request
+//!   drains as [`RequestStatus::Failed`] with a structured reason
+//!   (`Metrics::requests_failed`) and the engine latches `Failed`.
+//!
+//! Gang mode has no mid-batch recovery point (a batch's generated
+//! tokens live on the `gang_step` stack), so any gang step error
+//! latches the engine.
+//!
 //! The gang scheduler is retained behind [`Scheduling::Gang`] — it is
 //! what the deprecated `serve_workload`/`serve_on` wrappers run, the
 //! only mode the fixed-shape PJRT artifacts support, and the baseline
@@ -84,7 +123,9 @@ use super::server::{AdaptiveServing, ServeConfig, ServeReport};
 use super::{Request, Response};
 use crate::adapt::window::TrafficSample;
 use crate::adapt::{AdaptLoop, MeasuredLatency, PlanCache, SwitchDecision};
-use crate::model::{EngineMode, ExecStats, ModelExecutor, ShardPlan, WeightStore};
+use crate::config::hardware::NodeConfig;
+use crate::model::fault::{classify, faulted_device};
+use crate::model::{EngineMode, ExecStats, FaultPlan, ModelExecutor, ShardPlan, WeightStore};
 use crate::planner::{HapPlanner, PLANNER_SEED};
 use crate::runtime::literal::argmax_rows;
 use crate::runtime::{PjrtRuntime, TinyModelMeta};
@@ -153,9 +194,89 @@ pub enum RequestStatus {
     Running { tokens: Vec<i32> },
     /// Complete; the full response.
     Finished(Response),
+    /// Removed by [`Engine::cancel`] before completion.
+    Cancelled,
+    /// Drained by the engine without completing — e.g. no grid
+    /// survived a device crash. The reason is the structured cause.
+    Failed { reason: String },
     /// Never submitted (or submitted to a different engine).
     Unknown,
 }
+
+/// Coarse engine health, derived from the recovery state machine (see
+/// the module docs and [`Engine::state`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineState {
+    /// Serving on the full device grid.
+    Healthy,
+    /// A confirmed device loss degraded the grid: serving continues on
+    /// `devices` survivors (largest power of two that fits).
+    Degraded { devices: usize },
+    /// A fatal error latched; every further `step()` returns the same
+    /// structured error instead of re-entering corrupt state.
+    Failed,
+}
+
+/// Bounded retry budget for retryable faults (`Stall`, `Transient`)
+/// before the faulting device is promoted to lost and the engine
+/// degrades. Backoff between attempts is `1, 2, 4, 8, 16` scheduler
+/// iterations — deterministic, never wall-clock.
+pub const MAX_FAULT_RETRIES: usize = 5;
+
+/// Structured scheduler-invariant violations — the de-panicked
+/// `expect()` cluster of the streaming hot path. A bug (or a fault
+/// interleaving the scheduler into a state it never expected) surfaces
+/// as a recoverable `Err` from `step()` instead of a poisoned process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineError {
+    /// A slot operation ran without an active session.
+    NoSession { at: &'static str },
+    /// `slots[idx]` was unexpectedly empty.
+    EmptySlot { slot: usize, at: &'static str },
+    /// The slot was expected to be mid-prefill and wasn't.
+    NotPrefilling { slot: usize },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::NoSession { at } => {
+                write!(f, "engine invariant: no active session ({at})")
+            }
+            EngineError::EmptySlot { slot, at } => {
+                write!(f, "engine invariant: slot {slot} unexpectedly empty ({at})")
+            }
+            EngineError::NotPrefilling { slot } => {
+                write!(f, "engine invariant: slot {slot} is not prefilling")
+            }
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Typed admission failure for the non-blocking [`Engine::try_submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The admission queue is full. `retry_after_iters` is a
+    /// deterministic hint derived from the running set: the shortest
+    /// remaining decode budget among decoding slots (a slot frees no
+    /// sooner than that many iterations), minimum 1.
+    QueueFull { retry_after_iters: usize },
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { retry_after_iters } => write!(
+                f,
+                "admission queue full; retry after ~{retry_after_iters} scheduler iterations"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Per-run state of the adaptation loop: the shared [`AdaptLoop`] (the
 /// exact implementation the replay acceptance tests validate) plus the
@@ -279,6 +400,28 @@ struct Session {
     decode_time: f64,
     stats0: ExecStats,
     run_start: Instant,
+    /// Fatal-error latch: once set, every further `step()` returns the
+    /// same structured error instead of re-entering corrupt state
+    /// ([`EngineState::Failed`]).
+    failed: Option<String>,
+    /// Consecutive failed step attempts on the current fault (reset by
+    /// any successful step).
+    retry_attempts: usize,
+    /// Scheduler iterations still to burn before the next retry —
+    /// deterministic, iteration-counted backoff (never wall-clock).
+    backoff_iters: usize,
+    /// Device count the session degraded to after a confirmed device
+    /// loss (`None` = full grid). Overrides the fixed fallback plans
+    /// with `TP(n)` on the survivors.
+    degraded_n: Option<usize>,
+    /// Requests recovered by degraded re-planning: requeued and
+    /// replayed from their prompt, in recovery order.
+    recovered_ids: Vec<RequestId>,
+    /// Requests removed by [`Engine::cancel`].
+    cancelled_ids: Vec<RequestId>,
+    /// Requests drained without completing, with structured reasons
+    /// (e.g. no grid survived) — reported as `RequestStatus::Failed`.
+    failed_requests: Vec<(RequestId, String)>,
 }
 
 impl Session {
@@ -304,6 +447,13 @@ impl Session {
             decode_time: 0.0,
             stats0: exec.stats(),
             run_start: Instant::now(),
+            failed: None,
+            retry_attempts: 0,
+            backoff_iters: 0,
+            degraded_n: None,
+            recovered_ids: Vec::new(),
+            cancelled_ids: Vec::new(),
+            failed_requests: Vec::new(),
             config,
             scheduling,
             meta,
@@ -338,11 +488,230 @@ impl Session {
         }
     }
 
+    /// One scheduler iteration, wrapped by the fault-recovery state
+    /// machine (module docs: detection → retry → degrade → requeue).
+    /// A latched engine returns its structured failure; a backoff
+    /// iteration makes no executor call (burning one deterministic
+    /// wait unit); otherwise the scheduling-mode step runs and its
+    /// error, if any, is classified and handled.
     fn step(&mut self, exec: &mut ModelExecutor) -> Result<StepOutcome> {
-        match self.scheduling {
+        if let Some(reason) = &self.failed {
+            anyhow::bail!("engine failed: {reason}");
+        }
+        if self.backoff_iters > 0 {
+            self.backoff_iters -= 1;
+            return Ok(self.idle_outcome());
+        }
+        let result = match self.scheduling {
             Scheduling::Gang => self.gang_step(exec),
             Scheduling::Streaming => self.stream_step(exec),
+        };
+        match result {
+            Ok(out) => {
+                self.retry_attempts = 0;
+                Ok(out)
+            }
+            Err(e) => self.handle_step_error(exec, e),
         }
+    }
+
+    /// A no-op outcome that still reports live/queued counts, so
+    /// drivers looping on [`Self::idle`] keep making progress through
+    /// backoff iterations.
+    fn idle_outcome(&self) -> StepOutcome {
+        StepOutcome {
+            running: self.slots.iter().filter(|s| s.is_some()).count(),
+            queued: self.router.pending() + self.backlog.len(),
+            ..StepOutcome::default()
+        }
+    }
+
+    /// Classify a step error and dispatch the recovery state machine.
+    /// Returns `Ok` when the engine absorbed the fault (retry scheduled
+    /// or grid degraded) and `Err` when it latched.
+    fn handle_step_error(
+        &mut self,
+        exec: &mut ModelExecutor,
+        e: anyhow::Error,
+    ) -> Result<StepOutcome> {
+        if self.scheduling != Scheduling::Streaming {
+            // Gang mode has no mid-batch recovery point (the batch's
+            // generated tokens live on the gang_step stack): latch.
+            self.failed = Some(format!("{e:#}"));
+            return Err(e);
+        }
+        match classify(&e) {
+            Some(kind) if kind.retryable() && self.retry_attempts < MAX_FAULT_RETRIES => {
+                if self.retry_attempts == 0 {
+                    self.metrics.faults_detected += 1;
+                }
+                self.retry_attempts += 1;
+                self.metrics.fault_retries += 1;
+                // 1, 2, 4, 8, 16 scheduler iterations — deterministic,
+                // iteration-counted, never wall-clock. The fault clock
+                // only advances on real executor ops, so a stall's
+                // window is consumed by the retries themselves; the
+                // backoff just spaces them out.
+                self.backoff_iters = 1usize << (self.retry_attempts - 1).min(4);
+                Ok(self.idle_outcome())
+            }
+            Some(kind) => {
+                // A crash — or a retryable fault whose budget is
+                // exhausted, which promotes the device to lost.
+                if self.retry_attempts == 0 || kind == crate::model::FaultKind::Crash {
+                    self.metrics.faults_detected += 1;
+                }
+                self.retry_attempts = 0;
+                self.backoff_iters = 0;
+                self.degrade(exec, &e)
+            }
+            None => {
+                self.failed = Some(format!("{e:#}"));
+                Err(e)
+            }
+        }
+    }
+
+    /// Degraded re-planning after a confirmed device loss: requeue
+    /// every in-flight request (replayed from its prompt — host
+    /// kernels are deterministic and row-independent, so recovered
+    /// tokens are bit-identical to an unfaulted run on the degraded
+    /// grid), shrink the planner's device set to the survivors, and
+    /// resume under the reduced grid. If no grid survives, every
+    /// request drains as [`RequestStatus::Failed`] and the engine
+    /// latches.
+    fn degrade(&mut self, exec: &mut ModelExecutor, cause: &anyhow::Error) -> Result<StepOutcome> {
+        let current = self.degraded_n.unwrap_or_else(|| exec.device_count());
+        let mut lost: Vec<usize> = exec.crashed_devices().to_vec();
+        if lost.is_empty() {
+            // Exhausted-retry path: the fault plan never marked a
+            // crash, so recover the culprit from the error itself.
+            lost.extend(faulted_device(cause));
+        }
+        let survivors = current.saturating_sub(lost.len().max(1));
+        // Grids are power-of-two sized (NodeConfig / SearchSpace
+        // invariant): degrade onto the largest power of two that fits.
+        let n_new = if survivors == 0 { 0 } else { prev_power_of_two(survivors) };
+        if n_new == 0 {
+            let reason = format!("all devices lost: {cause:#}");
+            self.fail_all_requests(&reason);
+            self.failed = Some(reason.clone());
+            return Err(anyhow::anyhow!(reason).context("engine failed"));
+        }
+        // Requeue in-flight work at the head of the backlog (slot
+        // order). Partial tokens are discarded: recovery replays each
+        // request from its prompt on the degraded grid.
+        let mut requeued: Vec<Request> = Vec::new();
+        for s in self.slots.iter_mut() {
+            if let Some(slot) = s.take() {
+                requeued.push(slot.req);
+            }
+        }
+        self.metrics.requests_recovered += requeued.len();
+        self.recovered_ids.extend(requeued.iter().map(|r| r.id));
+        requeued.append(&mut self.backlog);
+        self.backlog = requeued;
+        // Tear down the dead session; the next admission re-begins on
+        // the degraded grid (the executor rebuilds its device state
+        // and reshards weights onto the survivors at begin_session).
+        self.active = None;
+        self.pending = None;
+        self.reset_dwell();
+        self.suppress_measured = false;
+        self.degraded_n = Some(n_new);
+        // Shrink the planner's node: adaptive engines re-solve over
+        // the surviving device count, and the plan cache's platform
+        // fingerprint changes with it, so stale full-grid plans are
+        // never served. Fixed-plan engines fall back to TP(n_new).
+        if let Some(cfg) = &mut self.config.adaptive {
+            cfg.node = NodeConfig::new(cfg.node.gpu.clone(), n_new);
+        }
+        // Renumber the fault schedule for the rebuilt grid: activation
+        // state clears (the dead device is gone) and events aimed at
+        // out-of-range devices or already-passed iterations drop.
+        exec.compact_faults(n_new);
+        self.metrics.replans_degraded += 1;
+        let mut out = self.idle_outcome();
+        out.switched = true;
+        Ok(out)
+    }
+
+    /// Drain every queued and in-flight request as a structured
+    /// failure (no grid can serve them): their statuses become
+    /// [`RequestStatus::Failed`] and the queues empty so drivers
+    /// looping on [`Self::idle`] terminate.
+    fn fail_all_requests(&mut self, reason: &str) {
+        let mut doomed: Vec<Request> = Vec::new();
+        for s in self.slots.iter_mut() {
+            if let Some(slot) = s.take() {
+                doomed.push(slot.req);
+            }
+        }
+        doomed.append(&mut self.backlog);
+        let pending = self.router.pending();
+        doomed.extend(self.router.take(pending));
+        self.metrics.requests_failed += doomed.len();
+        self.failed_requests
+            .extend(doomed.into_iter().map(|req| (req.id, reason.to_string())));
+    }
+
+    /// Coarse health derived from the recovery state machine.
+    fn state(&self) -> EngineState {
+        if self.failed.is_some() {
+            EngineState::Failed
+        } else if let Some(n) = self.degraded_n {
+            EngineState::Degraded { devices: n }
+        } else {
+            EngineState::Healthy
+        }
+    }
+
+    /// Non-blocking admission: a full queue returns a typed
+    /// [`SubmitError::QueueFull`] with a deterministic retry hint
+    /// instead of running drain iterations (the blocking
+    /// [`Self::submit`] behavior, which is unchanged).
+    fn try_submit(&mut self, req: Request) -> std::result::Result<RequestId, SubmitError> {
+        let id = req.id;
+        if self.router.try_submit(req).is_some() {
+            let retry_after_iters = self
+                .slots
+                .iter()
+                .flatten()
+                .filter(|s| s.decoding())
+                .map(|s| s.remaining.max(1))
+                .min()
+                .unwrap_or(1);
+            return Err(SubmitError::QueueFull { retry_after_iters });
+        }
+        Ok(id)
+    }
+
+    /// Cancel a request wherever it lives: queued entries leave the
+    /// router/backlog, a running slot is released (KV rows zeroed) and
+    /// its partial tokens dropped. Peers are untouched — kernels are
+    /// row-independent, so their token streams stay bit-identical.
+    /// Finished (or unknown) requests report their current status.
+    fn cancel(&mut self, exec: &mut ModelExecutor, id: RequestId) -> Result<RequestStatus> {
+        if self.router.remove(id).is_some() {
+            self.cancelled_ids.push(id);
+            return Ok(RequestStatus::Cancelled);
+        }
+        if let Some(pos) = self.backlog.iter().position(|r| r.id == id) {
+            self.backlog.remove(pos);
+            self.cancelled_ids.push(id);
+            return Ok(RequestStatus::Cancelled);
+        }
+        if let Some(idx) = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().map_or(false, |slot| slot.req.id == id))
+        {
+            exec.release_slot(idx)?;
+            self.slots[idx] = None;
+            self.cancelled_ids.push(id);
+            return Ok(RequestStatus::Cancelled);
+        }
+        Ok(self.status(id))
     }
 
     /// One gang iteration: pack a whole batch and run it to completion
@@ -487,11 +856,14 @@ impl Session {
         idx: usize,
         out: &mut StepOutcome,
     ) -> Result<bool> {
-        let (prefill_plan, _) = self.active.expect("prefilling slot implies a session");
+        let (prefill_plan, _) =
+            self.active.ok_or(EngineError::NoSession { at: "advance_chunk" })?;
         // Pull the chunk state out to keep the slot borrow short.
         let (row, cursor) = {
-            let slot = self.slots[idx].as_mut().expect("advancing an empty slot");
-            slot.prefill.take().expect("slot is not prefilling")
+            let slot = self.slots[idx]
+                .as_mut()
+                .ok_or(EngineError::EmptySlot { slot: idx, at: "advance_chunk" })?;
+            slot.prefill.take().ok_or(EngineError::NotPrefilling { slot: idx })?
         };
         let c = self.chunk_len(row.len(), cursor);
         let t0 = Instant::now();
@@ -504,17 +876,20 @@ impl Session {
             Err(e) => {
                 // Put the cursor back: without it the slot would read
                 // as "decoding" while its KV is only partially written
-                // — unretirable if the caller treats the step error as
-                // transient and keeps driving.
-                self.slots[idx].as_mut().expect("still occupied").prefill =
-                    Some((row, cursor));
+                // — unretirable when the recovery state machine treats
+                // the step error as transient and retries the chunk.
+                if let Some(slot) = self.slots[idx].as_mut() {
+                    slot.prefill = Some((row, cursor));
+                }
                 return Err(e);
             }
         };
         self.metrics.prefill_chunks += 1;
         let done = cursor + c == row.len();
         let retire_now = {
-            let slot = self.slots[idx].as_mut().expect("still occupied");
+            let slot = self.slots[idx]
+                .as_mut()
+                .ok_or(EngineError::EmptySlot { slot: idx, at: "advance_chunk (post-chunk)" })?;
             if done {
                 let first = argmax_rows(&logits)[0] as i32;
                 slot.tokens.push(first);
@@ -549,8 +924,14 @@ impl Session {
         idx: usize,
         out: &mut StepOutcome,
     ) -> Result<()> {
-        let slot = self.slots[idx].take().expect("retiring an empty slot");
+        // Release the executor slot BEFORE taking the entry: if the
+        // release itself errors, the slot stays occupied and the
+        // request stays pollable (the step error latches the engine,
+        // but no request silently vanishes).
         exec.release_slot(idx)?;
+        let slot = self.slots[idx]
+            .take()
+            .ok_or(EngineError::EmptySlot { slot: idx, at: "retire" })?;
         let latency = slot.req.arrived.elapsed().as_secs_f64();
         self.metrics.observe_request(latency, slot.ttft, slot.tokens.len());
         self.responses.push(Response {
@@ -678,10 +1059,17 @@ impl Session {
                     }
                     _ => None,
                 };
-                let fallback = (
-                    ShardPlan::new(self.config.attn, self.config.expert_prefill),
-                    ShardPlan::new(self.config.attn, self.config.expert_decode),
-                );
+                // After a degrade, a fixed-plan engine's configured
+                // layout no longer fits the surviving grid: fall back
+                // to TP over the survivors (adaptive engines re-plan
+                // through the shrunken node instead).
+                let fallback = match self.degraded_n {
+                    Some(n) => (ShardPlan::tp(n), ShardPlan::tp(n)),
+                    None => (
+                        ShardPlan::new(self.config.attn, self.config.expert_prefill),
+                        ShardPlan::new(self.config.attn, self.config.expert_decode),
+                    ),
+                };
                 let want = desired.unwrap_or_else(|| self.active.unwrap_or(fallback));
                 match self.active {
                     None => {
@@ -725,11 +1113,23 @@ impl Session {
                     self.backlog = joiners;
                 } else {
                     let (prefill_plan, decode_plan) =
-                        self.active.expect("session started above");
-                    for req in joiners {
-                        let slot = exec.claim_slot().ok_or_else(|| {
-                            anyhow::anyhow!("no free slot for admitted request")
-                        })?;
+                        self.active.ok_or(EngineError::NoSession { at: "admission" })?;
+                    let mut joiners = joiners.into_iter();
+                    while let Some(req) = joiners.next() {
+                        let slot = match exec.claim_slot() {
+                            Some(s) => s,
+                            None => {
+                                // Keep the not-yet-admitted joiners:
+                                // they return to the (empty) backlog so
+                                // a retried or degraded step re-admits
+                                // them instead of losing them.
+                                self.backlog.push(req);
+                                self.backlog.extend(joiners);
+                                return Err(anyhow::anyhow!(
+                                    "no free slot for admitted request"
+                                ));
+                            }
+                        };
                         debug_assert!(self.slots[slot].is_none(), "slot maps diverged");
                         let (row, budget) = self.batcher.pack_one(&req);
                         self.metrics.batches_prefilled += 1;
@@ -751,8 +1151,17 @@ impl Session {
                             ttft: 0.0,
                             prefill: Some((row, 0)),
                         });
-                        if self.advance_chunk(exec, slot, &mut out)? {
-                            running += 1;
+                        match self.advance_chunk(exec, slot, &mut out) {
+                            Ok(true) => running += 1,
+                            Ok(false) => {}
+                            Err(e) => {
+                                // The faulted joiner stays in its slot
+                                // (cursor restored — retryable); the
+                                // rest go back to the backlog rather
+                                // than being dropped with the iterator.
+                                self.backlog.extend(joiners);
+                                return Err(e);
+                            }
                         }
                     }
                 }
@@ -764,7 +1173,8 @@ impl Session {
         // executor skips their KV and position).
         let decoding = self.slots.iter().flatten().filter(|s| s.decoding()).count();
         if decoding > 0 {
-            let (_, decode_plan) = self.active.expect("decoding implies a session");
+            let (_, decode_plan) =
+                self.active.ok_or(EngineError::NoSession { at: "decode" })?;
             let mut last = vec![0i32; b];
             for (i, s) in self.slots.iter().enumerate() {
                 if let Some(slot) = s {
@@ -887,6 +1297,12 @@ impl Session {
         if self.router.contains(id) || self.backlog.iter().any(|r| r.id == id) {
             return RequestStatus::Queued;
         }
+        if self.cancelled_ids.contains(&id) {
+            return RequestStatus::Cancelled;
+        }
+        if let Some((_, reason)) = self.failed_requests.iter().find(|(r, _)| *r == id) {
+            return RequestStatus::Failed { reason: reason.clone() };
+        }
         RequestStatus::Unknown
     }
 
@@ -933,6 +1349,13 @@ impl Session {
     }
 }
 
+/// Largest power of two `<= n` (n >= 1) — the grid size a degraded
+/// device set rounds down to.
+fn prev_power_of_two(n: usize) -> usize {
+    debug_assert!(n >= 1);
+    1usize << (usize::BITS - 1 - n.leading_zeros())
+}
+
 /// Serve a whole workload on a **caller-owned** executor under the
 /// given scheduling mode, to completion. This is the engine core the
 /// deprecated [`super::serve_on`]/[`super::serve_workload`] wrappers
@@ -958,6 +1381,7 @@ pub fn serve_with(
 pub struct EngineBuilder {
     config: ServeConfig,
     scheduling: Scheduling,
+    fault: Option<FaultPlan>,
 }
 
 impl EngineBuilder {
@@ -999,6 +1423,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Install a deterministic device-fault schedule on the engine's
+    /// executor (host backends only) — chaos testing and the fault
+    /// recovery benches. See [`crate::model::FaultPlan`].
+    pub fn fault_plan(mut self, plan: FaultPlan) -> EngineBuilder {
+        self.fault = Some(plan);
+        self
+    }
+
     /// Artifact-free engine on the host grid kernels.
     pub fn build_host(self, weights: WeightStore) -> Engine<'static> {
         self.build_host_with_mode(weights, EngineMode::Parallel)
@@ -1007,7 +1439,10 @@ impl EngineBuilder {
     /// Host engine with an explicit per-device scheduling mode (the
     /// sequential mode is the bit-equivalence reference path).
     pub fn build_host_with_mode(self, weights: WeightStore, mode: EngineMode) -> Engine<'static> {
-        let exec = ModelExecutor::host_with_mode(weights, mode);
+        let mut exec = ModelExecutor::host_with_mode(weights, mode);
+        if let Some(plan) = self.fault {
+            exec.set_fault_plan(plan);
+        }
         let session = Session::new(&exec, self.config, self.scheduling);
         Engine { exec, session }
     }
@@ -1021,6 +1456,12 @@ impl EngineBuilder {
                 "streaming scheduling is host-backend only: the fixed-shape PJRT artifacts \
                  pin one scalar decode position per batch (use --engine gang, or the host \
                  backend)"
+            );
+        }
+        if self.fault.is_some() {
+            anyhow::bail!(
+                "fault injection is host-backend only: the fault plan hooks the host \
+                 executor's per-op device map"
             );
         }
         let exec = ModelExecutor::new(rt)?;
@@ -1040,7 +1481,7 @@ pub struct Engine<'rt> {
 impl<'rt> Engine<'rt> {
     /// Start building an engine from a serving config.
     pub fn builder(config: ServeConfig) -> EngineBuilder {
-        EngineBuilder { config, scheduling: Scheduling::Streaming }
+        EngineBuilder { config, scheduling: Scheduling::Streaming, fault: None }
     }
 
     /// Enqueue a request (backpressures by running scheduler iterations
@@ -1054,6 +1495,37 @@ impl<'rt> Engine<'rt> {
     /// outcome means there is nothing left to schedule.
     pub fn step(&mut self) -> Result<StepOutcome> {
         self.session.step(&mut self.exec)
+    }
+
+    /// Non-blocking admission: returns a typed
+    /// [`SubmitError::QueueFull`] (with a deterministic
+    /// retry-after-iterations hint) instead of running drain
+    /// iterations when the queue is full. [`Engine::submit`]'s
+    /// blocking drain semantics are unchanged.
+    pub fn try_submit(&mut self, req: Request) -> std::result::Result<RequestId, SubmitError> {
+        self.session.try_submit(req)
+    }
+
+    /// Cancel a request wherever it lives (queue, backlog, or a live
+    /// slot — whose KV rows are zeroed). Peers are untouched; their
+    /// token streams stay bit-identical. Returns
+    /// [`RequestStatus::Cancelled`] on removal, or the request's
+    /// current status when there was nothing to cancel.
+    pub fn cancel(&mut self, id: RequestId) -> Result<RequestStatus> {
+        self.session.cancel(&mut self.exec, id)
+    }
+
+    /// Coarse engine health: `Healthy`, `Degraded` after a confirmed
+    /// device loss shrank the grid, or `Failed` once a fatal error
+    /// latched (see the module docs' recovery state machine).
+    pub fn state(&self) -> EngineState {
+        self.session.state()
+    }
+
+    /// Ids of requests recovered by degraded re-planning (requeued and
+    /// replayed from their prompt), in recovery order.
+    pub fn recovered(&self) -> &[RequestId] {
+        &self.session.recovered_ids
     }
 
     /// Non-blocking progress query for a submitted request.

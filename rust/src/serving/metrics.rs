@@ -30,6 +30,21 @@ pub struct Metrics {
     pub reshards: usize,
     /// Measured seconds the executor spent resharding weights.
     pub reshard_time: f64,
+    /// Device faults the recovery state machine classified (each
+    /// distinct fault episode counts once; see `serving::engine`).
+    pub faults_detected: usize,
+    /// Bounded deterministic retries scheduled for retryable faults
+    /// (`Stall`, `Transient`).
+    pub fault_retries: usize,
+    /// Degraded re-plans: confirmed device losses that shrank the grid
+    /// onto the surviving device subset.
+    pub replans_degraded: usize,
+    /// In-flight requests requeued and replayed from their prompt by a
+    /// degraded re-plan (bit-identical recovery).
+    pub requests_recovered: usize,
+    /// Requests drained as `RequestStatus::Failed` because no grid
+    /// could serve them.
+    pub requests_failed: usize,
     /// Live (still-generating) slots summed over decode iterations —
     /// `slot_steps / slot_capacity_steps` is the mean occupancy. Gang
     /// convoys leave this low (finished members ride dead); continuous
@@ -115,7 +130,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | tpot p50 {:.2} ms | {:.1} tok/s | occupancy {:.0}% | {} prefills ({} chunks), {} decode steps, {} transitions, {} replans | {} shard uploads, {} reshards ({:.1} ms)",
             self.requests_completed,
             self.tokens_generated,
@@ -134,7 +149,18 @@ impl Metrics {
             self.weight_uploads,
             self.reshards,
             self.reshard_time * 1e3,
-        )
+        );
+        if self.faults_detected > 0 || self.requests_failed > 0 {
+            s.push_str(&format!(
+                " | faults: {} detected, {} retries, {} degraded replans, {} recovered, {} failed",
+                self.faults_detected,
+                self.fault_retries,
+                self.replans_degraded,
+                self.requests_recovered,
+                self.requests_failed,
+            ));
+        }
+        s
     }
 }
 
@@ -155,6 +181,19 @@ mod tests {
         assert!(m.latency_p(99.0) > 0.098);
         assert_eq!(m.throughput(), 500.0);
         assert!(m.summary().contains("100 requests"));
+    }
+
+    #[test]
+    fn fault_counters_surface_in_summary() {
+        let mut m = Metrics::new();
+        assert!(!m.summary().contains("faults:"), "fault tail only under faults");
+        m.faults_detected = 1;
+        m.fault_retries = 2;
+        m.replans_degraded = 1;
+        m.requests_recovered = 3;
+        assert!(m.summary().contains(
+            "faults: 1 detected, 2 retries, 1 degraded replans, 3 recovered, 0 failed"
+        ));
     }
 
     #[test]

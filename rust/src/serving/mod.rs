@@ -34,7 +34,10 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
-pub use engine::{serve_with, Engine, EngineBuilder, RequestId, RequestStatus, Scheduling, StepOutcome};
+pub use engine::{
+    serve_with, Engine, EngineBuilder, EngineError, EngineState, RequestId, RequestStatus,
+    Scheduling, StepOutcome, SubmitError, MAX_FAULT_RETRIES,
+};
 pub use metrics::Metrics;
 pub use router::{Router, RouterPolicy};
 pub use server::{serve_on, serve_workload, AdaptiveServing, ServeConfig, ServeReport};

@@ -172,6 +172,17 @@ impl Router {
         self.queue.iter().any(|(r, _)| r.id == id)
     }
 
+    /// Remove a queued request by id (cancellation). Keeps the sticky
+    /// promoted front region consistent when the removed entry was
+    /// inside it.
+    pub fn remove(&mut self, id: u64) -> Option<Request> {
+        let idx = self.queue.iter().position(|(r, _)| r.id == id)?;
+        if idx < self.promoted_front {
+            self.promoted_front -= 1;
+        }
+        self.queue.remove(idx).map(|(r, _)| r)
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -298,6 +309,22 @@ mod tests {
         let ids: Vec<u64> = got.iter().map(|r| r.id).collect();
         assert!(r.promoted >= 2, "no promotion recorded");
         assert_eq!(ids[..2], [101, 100], "starved requests must lead: {ids:?}");
+    }
+
+    #[test]
+    fn remove_keeps_promoted_front_consistent() {
+        let mut r = Router::new(16, RouterPolicy::Sjf).with_aging(2);
+        r.submit(req(7, 400));
+        r.take(0); // round 1
+        r.take(0); // round 2: promoted into the front region
+        assert_eq!(r.promoted, 1);
+        r.submit(req(0, 1));
+        assert_eq!(r.remove(7).map(|q| q.id), Some(7), "queued request removable");
+        assert!(r.remove(7).is_none(), "second removal finds nothing");
+        // The front region shrank with the removal: the short job
+        // leads and fresh SJF inserts order normally behind it.
+        r.submit(req(1, 500));
+        assert_eq!(r.take(2).iter().map(|q| q.id).collect::<Vec<_>>(), vec![0, 1]);
     }
 
     #[test]
