@@ -1,0 +1,205 @@
+//! §Observability benchmark — BENCH_obs.json at the repo root.
+//!
+//! The Fig-2-style per-module time breakdown, **measured from the
+//! trace recorder** instead of the simulator: two traced streaming
+//! serves on the host grid engine — static TP4 vs the HAP phase
+//! transition (EP prefill → TP decode) — folded by `summarize_lines`
+//! into attention / expert-FFN / collective / reshard shares, next to
+//! the discrete-event simulator's predicted shares for the same
+//! strategy pairs on the same tiny-MoE deployment. The hybrid run
+//! must pay reshard work the static run doesn't (the transition's
+//! cost, visible only in the measured column: the static sim path has
+//! no reshard bucket), and the trace must be deterministic — two
+//! identical seeded runs agree byte for byte on the canonical stream.
+
+use hap::benchkit::{banner, write_results, Table};
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::engine::Breakdown;
+use hap::model::{ModelExecutor, WeightStore};
+use hap::obs::{canonical_stream, events_to_jsonl, summarize_lines, Recorder, TraceSummary};
+use hap::runtime::TinyModelMeta;
+use hap::serving::{serve_with_recorder, Request, Scheduling, ServeConfig, ServeReport};
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::json::Json;
+use hap::util::rng::Rng;
+
+const REQUESTS: usize = 24;
+/// Generation lengths 2–8: short decodes keep admissions (and so the
+/// hybrid run's per-boundary expert reshards) frequent.
+const GEN_LO: usize = 2;
+const GEN_HI: usize = 8;
+
+fn meta() -> TinyModelMeta {
+    TinyModelMeta::host_demo()
+}
+
+fn requests(m: &TinyModelMeta, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..REQUESTS as u64)
+        .map(|id| {
+            let len = rng.range(m.prefill_len / 2, m.prefill_len);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+            let gen = rng.range(GEN_LO, GEN_HI);
+            Request::new(id, prompt, gen)
+        })
+        .collect()
+}
+
+/// One traced streaming serve on a fresh host executor.
+fn run(config: &ServeConfig, seed: u64) -> ServeReport {
+    let m = meta();
+    let mut exec = ModelExecutor::host(WeightStore::synthetic(&m, 42));
+    serve_with_recorder(&mut exec, config, Scheduling::Streaming, requests(&m, seed), Recorder::new())
+        .unwrap()
+}
+
+/// Fold a report's trace the same way `hap trace summarize` does.
+fn fold(report: &ServeReport) -> TraceSummary {
+    let jsonl = events_to_jsonl(&report.trace);
+    let lines: Vec<Json> = jsonl.lines().map(|l| Json::parse(l).unwrap()).collect();
+    summarize_lines(&lines)
+}
+
+/// Predicted shares in the trace summary's four-bucket layout from a
+/// (prefill, decode) pair of simulator stage breakdowns. The static
+/// sim path has no reshard bucket — the measured column is the only
+/// place the transition's reshard cost can show up.
+fn predicted_shares(prefill: &Breakdown, decode: &Breakdown) -> [(&'static str, f64); 4] {
+    let attn = prefill.attn + decode.attn;
+    let expert = prefill.expert + decode.expert;
+    let comm = prefill.comm + decode.comm;
+    let total = attn + expert + comm;
+    let norm = |x: f64| if total > 0.0 { x / total } else { 0.0 };
+    [
+        ("attention", norm(attn)),
+        ("expert_ffn", norm(expert)),
+        ("collective", norm(comm)),
+        ("reshard", 0.0),
+    ]
+}
+
+fn shares_json(shares: &[(&'static str, f64); 4]) -> Json {
+    Json::Obj(shares.iter().map(|(k, v)| (k.to_string(), Json::Num(*v))).collect())
+}
+
+fn share_row(t: &mut Table, name: &str, shares: &[(&'static str, f64); 4]) {
+    let mut row = vec![name.to_string()];
+    row.extend(shares.iter().map(|(_, s)| format!("{:.1}%", s * 100.0)));
+    t.row(&row);
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("obs", "measured vs predicted per-module breakdown, TP4 vs hybrid, host engine");
+
+    let tp = run(&ServeConfig::tp(4), 31);
+    let hybrid = run(&ServeConfig::hap_transition(4), 31);
+
+    // Determinism gate before anything else: an identical seeded rerun
+    // must reproduce the TP trace byte for byte (wall fields stripped).
+    let rerun = run(&ServeConfig::tp(4), 31);
+    assert_eq!(
+        canonical_stream(&events_to_jsonl(&tp.trace))?,
+        canonical_stream(&events_to_jsonl(&rerun.trace))?,
+        "canonical trace stream is not deterministic"
+    );
+    println!("trace determinism: rerun canonical stream bit-identical\n");
+
+    let tp_sum = fold(&tp);
+    let hy_sum = fold(&hybrid);
+
+    // Simulator predictions for the same deployment (tiny-MoE on 4
+    // simulated CPU devices) and the trace's traffic shape. The hybrid
+    // pair = EP-expert prefill stage + TP-expert decode stage.
+    let model = MoEModelConfig::tiny_moe();
+    let node = NodeConfig::cpu_sim(4);
+    let sim = hap::engine::Engine::new(&model, &node);
+    let m = meta();
+    let sc = Scenario::new("obs", m.prefill_len, (GEN_LO + GEN_HI) / 2, m.batch);
+    let tp_sim = sim.run_static(&AttnStrategy::new(4, 1), &ExpertStrategy::new(4, 1), &sc, 1);
+    let ep_sim = sim.run_static(&AttnStrategy::new(4, 1), &ExpertStrategy::new(1, 4), &sc, 1);
+    let tp_pred = predicted_shares(&tp_sim.prefill, &tp_sim.decode);
+    let hy_pred = predicted_shares(&ep_sim.prefill, &tp_sim.decode);
+
+    let tp_shares = tp_sum.shares();
+    let hy_shares = hy_sum.shares();
+    let mut t = Table::new(&["run", "attention", "expert_ffn", "collective", "reshard"]);
+    share_row(&mut t, "TP4 measured", &tp_shares);
+    share_row(&mut t, "hybrid measured", &hy_shares);
+    share_row(&mut t, "TP4 predicted", &tp_pred);
+    share_row(&mut t, "hybrid predicted", &hy_pred);
+    t.print();
+    println!(
+        "\nreshards: hybrid {} vs TP4 {} (metrics), {} Reshard trace events; \
+         {} events / {} iterations traced per run",
+        hybrid.metrics.reshards,
+        tp.metrics.reshards,
+        hy_sum.count("Reshard"),
+        hy_sum.counts.iter().map(|(_, c)| c).sum::<usize>(),
+        hy_sum.iterations,
+    );
+
+    let run_json = |report: &ServeReport, sum: &TraceSummary| {
+        Json::obj(vec![
+            ("events", (report.trace.len()).into()),
+            ("iterations", (sum.iterations as f64).into()),
+            ("decode_steps", sum.count("DecodeStep").into()),
+            ("prefill_chunks", sum.count("PrefillChunk").into()),
+            ("reshard_events", sum.count("Reshard").into()),
+            ("reshards_total", report.metrics.reshards.into()),
+            ("span_secs", sum.span_secs.into()),
+            ("module_shares", shares_json(&sum.shares())),
+            ("modules", sum.modules.to_json()),
+        ])
+    };
+    let summary = Json::obj(vec![
+        ("bench", "obs".into()),
+        ("profile", "release".into()),
+        (
+            "trace",
+            Json::obj(vec![
+                ("requests", REQUESTS.into()),
+                ("gen_lo", GEN_LO.into()),
+                ("gen_hi", GEN_HI.into()),
+                ("batch_slots", m.batch.into()),
+                ("prompt_tokens", m.prefill_len.into()),
+            ]),
+        ),
+        ("tp4_measured", run_json(&tp, &tp_sum)),
+        ("hybrid_measured", run_json(&hybrid, &hy_sum)),
+        ("tp4_predicted_shares", shares_json(&tp_pred)),
+        ("hybrid_predicted_shares", shares_json(&hy_pred)),
+    ]);
+    write_results("obs", &summary);
+    let root_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_obs.json");
+    if let Err(e) = std::fs::write(&root_path, summary.to_string_pretty()) {
+        eprintln!("could not write {}: {e}", root_path.display());
+    } else {
+        println!("wrote {}", root_path.display());
+    }
+
+    // Acceptance bars LAST, after the artifact is on disk.
+    for (name, sum) in [("TP4", &tp_sum), ("hybrid", &hy_sum)] {
+        assert_eq!(sum.count("Admit"), REQUESTS, "{name}: not every request admitted");
+        assert_eq!(sum.count("Retire"), REQUESTS, "{name}: not every request retired");
+        assert!(sum.count("DecodeStep") > 0, "{name}: no decode steps traced");
+        assert!(sum.count("PrefillChunk") > 0, "{name}: no prefill ops traced");
+        let total: f64 = sum.shares().iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{name}: measured shares sum to {total}");
+    }
+    for (name, pred) in [("TP4", &tp_pred), ("hybrid", &hy_pred)] {
+        let total: f64 = pred.iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{name}: predicted shares sum to {total}");
+    }
+    assert!(
+        hybrid.metrics.reshards > tp.metrics.reshards,
+        "hybrid run must reshard experts at stage boundaries (hybrid {} vs TP4 {})",
+        hybrid.metrics.reshards,
+        tp.metrics.reshards,
+    );
+    assert!(
+        hy_sum.count("Reshard") >= 1,
+        "hybrid reshard work never reached the trace"
+    );
+    println!("obs bench OK");
+    Ok(())
+}

@@ -17,11 +17,19 @@
 //! prompt spreads across iterations and short-decode peers escape
 //! between chunks, improving their p95 TPOT — asserted, with tokens
 //! bit-identical to gang and to unchunked streaming.
+//!
+//! Third section: **recorder overhead**. The same streaming run with
+//! an enabled trace `Recorder` vs `Recorder::disabled()` — tokens must
+//! be bit-identical and the instrumented median wall time within 5% of
+//! the uninstrumented one (medians of five runs per mode).
 
 use hap::benchkit::{banner, write_results, Table};
 use hap::model::ModelExecutor;
+use hap::obs::Recorder;
 use hap::runtime::TinyModelMeta;
-use hap::serving::{serve_with, Metrics, Request, Scheduling, ServeConfig, ServeReport};
+use hap::serving::{
+    serve_with, serve_with_recorder, Metrics, Request, Scheduling, ServeConfig, ServeReport,
+};
 use hap::util::json::Json;
 use hap::util::rng::Rng;
 
@@ -261,6 +269,38 @@ fn main() -> anyhow::Result<()> {
         cm.batches_prefilled,
     );
 
+    // ---- Recorder overhead on the mixed short/long streaming trace:
+    // tracing must not perturb generation, and the per-hook cost
+    // (one branch when disabled, event construction when enabled) must
+    // stay under 5% of wall time.
+    let run_traced = |enabled: bool, seed: u64| -> ServeReport {
+        let m = meta();
+        let weights = hap::model::WeightStore::synthetic(&m, 42);
+        let mut exec = ModelExecutor::host(weights);
+        let config = ServeConfig::tp(4);
+        let recorder = if enabled { Recorder::new() } else { Recorder::disabled() };
+        serve_with_recorder(&mut exec, &config, Scheduling::Streaming, trace(&m, seed), recorder)
+            .unwrap()
+    };
+    let plain = run_traced(false, 29);
+    let traced = run_traced(true, 29);
+    assert_eq!(key(&plain), key(&traced), "recording changed generated tokens");
+    assert!(!traced.trace.is_empty() && plain.trace.is_empty());
+    let mut off_wall = vec![plain.metrics.wall_time];
+    let mut on_wall = vec![traced.metrics.wall_time];
+    for _ in 0..4 {
+        off_wall.push(run_traced(false, 29).metrics.wall_time);
+        on_wall.push(run_traced(true, 29).metrics.wall_time);
+    }
+    let (off_wall, on_wall) = (median(off_wall), median(on_wall));
+    let overhead = on_wall / off_wall.max(1e-12) - 1.0;
+    println!(
+        "\nrecorder overhead: {:.2}% (enabled {on_wall:.4}s vs disabled {off_wall:.4}s, \
+         medians of 5; {} events recorded)",
+        overhead * 100.0,
+        traced.trace.len(),
+    );
+
     let summary = Json::obj(vec![
         ("bench", "serving_api".into()),
         ("profile", "release".into()),
@@ -331,6 +371,15 @@ fn main() -> anyhow::Result<()> {
                 ),
             ]),
         ),
+        (
+            "recorder_overhead",
+            Json::obj(vec![
+                ("disabled_wall_median5_s", off_wall.into()),
+                ("enabled_wall_median5_s", on_wall.into()),
+                ("overhead_frac", overhead.into()),
+                ("trace_events", traced.trace.len().into()),
+            ]),
+        ),
     ]);
     write_results("serving_api", &summary);
     let root_path =
@@ -357,6 +406,11 @@ fn main() -> anyhow::Result<()> {
     assert!(
         ch_p95 < un_p95,
         "chunked prefill median p95 TPOT {ch_p95:.5}s not better than unchunked {un_p95:.5}s"
+    );
+    assert!(
+        overhead < 0.05,
+        "recorder overhead {:.2}% exceeds the 5% budget (medians of 5)",
+        overhead * 100.0
     );
     println!("serving_api bench OK");
     Ok(())

@@ -90,6 +90,17 @@ pub enum SwitchDecision {
     },
 }
 
+impl SwitchDecision {
+    /// Stable lowercase label for audit records and trace events.
+    pub fn label(&self) -> &'static str {
+        match self {
+            SwitchDecision::Adopt => "adopt",
+            SwitchDecision::Stay => "stay",
+            SwitchDecision::Switch { .. } => "switch",
+        }
+    }
+}
+
 /// Hysteresis controller; owns the active plan between steps.
 #[derive(Debug)]
 pub struct SwitchController {

@@ -49,6 +49,7 @@ pub use window::{QuantizedScenario, TrafficSample, TrafficWindow};
 
 use crate::config::hardware::NodeConfig;
 use crate::config::scenario::Scenario;
+use crate::obs::PlanConsult;
 use crate::planner::{HapPlanner, HybridPlan};
 use crate::Result;
 
@@ -99,6 +100,11 @@ pub struct AdaptLoop {
     /// Traffic key of the previous step — the traffic a caller-supplied
     /// measured latency was observed under.
     last_key: Option<window::QuantizedScenario>,
+    /// Audit record of the most recent [`Self::step`] consult —
+    /// everything the controller saw plus its verdict, for the
+    /// observability trace (`PlanConsult` events) and
+    /// `hap adapt-replay --audit-out`.
+    pub last_consult: Option<PlanConsult>,
 }
 
 impl AdaptLoop {
@@ -109,6 +115,7 @@ impl AdaptLoop {
             controller: SwitchController::new(config),
             platform: None,
             last_key: None,
+            last_consult: None,
         }
     }
 
@@ -172,12 +179,15 @@ impl AdaptLoop {
             self.platform = Some(planner.node.clone());
         }
         let key = self.window.scenario().expect("step requires at least one observed sample");
+        let hits_before = self.cache.hits;
         let candidate = self.cache.plan(planner, key)?;
+        let cached = self.cache.hits > hits_before;
         // Latency economics only matter when the controller could reach
         // its break-even check this step; on the steady-state,
         // cold-start, debounce, and cooldown paths `step` ignores them,
         // so skip the forest evaluations entirely.
-        let (active_latency, candidate_latency, cost) = if self.controller.would_evaluate(key) {
+        let evaluated = self.controller.would_evaluate(key);
+        let (active_latency, candidate_latency, cost) = if evaluated {
             let active = self.controller.active().expect("would_evaluate implies a resident plan");
             let representative = key.to_scenario();
             let sc = eval.unwrap_or(&representative);
@@ -191,8 +201,31 @@ impl AdaptLoop {
         } else {
             (0.0, 0.0, 0.0)
         };
+        let candidate_sig = candidate.signature();
+        let active_sig = self.controller.active().map(|p| p.signature());
+        let key_tokens = (key.generate * key.batch).max(1) as f64;
         let decision =
             self.controller.step(key, &candidate, active_latency, candidate_latency, cost);
+        self.last_consult = Some(PlanConsult {
+            key: format!("ctx{}/gen{}/b{}", key.context, key.generate, key.batch),
+            candidate: candidate_sig.clone(),
+            cached,
+            active: active_sig.clone(),
+            evaluated,
+            predicted_active_s: active_latency,
+            predicted_candidate_s: candidate_latency,
+            predicted_s_tok: candidate.predicted_total / key_tokens,
+            measured_s_tok: measured.map(|m| m.per_token()),
+            mispredict_active: active_sig.as_deref().and_then(|s| self.controller.mispredict_ewma(s)),
+            mispredict_candidate: self.controller.mispredict_ewma(&candidate_sig),
+            switch_cost_s: cost,
+            expected_dwell: self.controller.expected_dwell(),
+            decision: decision.label().to_string(),
+            projected_savings_s: match decision {
+                SwitchDecision::Switch { projected_savings, .. } => Some(projected_savings),
+                _ => None,
+            },
+        });
         self.last_key = Some(key);
         let plan = self.controller.active().expect("plan adopted on first step").clone();
         Ok((plan, decision))
@@ -254,5 +287,31 @@ mod tests {
             .expect("measured observation never reached the controller");
         assert!((e - 1.5).abs() < 1e-9, "per-token normalization broken: EWMA {e}");
         assert_eq!(al.controller.mispredict_observations(), 1);
+    }
+
+    #[test]
+    fn consult_audit_records_cold_start_then_cache_hit() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let mut al = AdaptLoop::new(ControllerConfig::default(), 16);
+        let samples =
+            || (0..4).map(|_| TrafficSample { prompt: 512, generate: 64, batch: 8 });
+        al.step(&planner, samples(), None, None).unwrap();
+        let c = al.last_consult.clone().expect("consult recorded");
+        assert_eq!(c.decision, "adopt");
+        assert!(!c.cached, "first consult must be a cache miss");
+        assert!(c.active.is_none(), "no active plan before cold start");
+        assert!(c.key.starts_with("ctx") && c.key.contains("/gen"));
+        assert!(c.predicted_s_tok > 0.0);
+        // Second consult on the same key: steady-state stay, cache hit,
+        // measured feedback lands in the record.
+        al.step(&planner, samples(), None, Some(MeasuredLatency::new(1.0, 100))).unwrap();
+        let c = al.last_consult.clone().unwrap();
+        assert_eq!(c.decision, "stay");
+        assert!(c.cached);
+        assert_eq!(c.active, Some(al.controller.active().unwrap().signature()));
+        assert!((c.measured_s_tok.unwrap() - 0.01).abs() < 1e-12);
+        assert!(c.mispredict_active.is_some(), "feedback must reach the EWMA");
     }
 }

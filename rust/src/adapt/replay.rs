@@ -24,6 +24,7 @@ use crate::adapt::AdaptLoop;
 use crate::cluster::{EventSim, OpKind};
 use crate::config::hardware::NodeConfig;
 use crate::config::scenario::Scenario;
+use crate::obs::PlanConsult;
 use crate::planner::{HapPlanner, HybridPlan};
 use crate::sim::latency::ModuleLatency;
 use crate::strategy::{AttnStrategy, ExpertStrategy};
@@ -276,6 +277,33 @@ pub fn replay_adaptive_seeded(
     window_capacity: usize,
     seed_cache: Option<PlanCache>,
 ) -> Result<(ReplayReport, PlanCache)> {
+    replay_adaptive_inner(planner, trace, config, window_capacity, seed_cache, None)
+}
+
+/// [`replay_adaptive`] that also collects the per-batch [`PlanConsult`]
+/// audit records — the `hap adapt-replay --audit-out` path, which lets
+/// a diverging replay be explained consult by consult (cache hit?
+/// economics evaluated? why stay?) instead of just scored.
+pub fn replay_adaptive_audited(
+    planner: &HapPlanner,
+    trace: &WorkloadTrace,
+    config: &ControllerConfig,
+    window_capacity: usize,
+) -> Result<(ReplayReport, Vec<PlanConsult>)> {
+    let mut audit = Vec::with_capacity(trace.points.len());
+    let (report, _) =
+        replay_adaptive_inner(planner, trace, config, window_capacity, None, Some(&mut audit))?;
+    Ok((report, audit))
+}
+
+fn replay_adaptive_inner(
+    planner: &HapPlanner,
+    trace: &WorkloadTrace,
+    config: &ControllerConfig,
+    window_capacity: usize,
+    seed_cache: Option<PlanCache>,
+    mut audit: Option<&mut Vec<PlanConsult>>,
+) -> Result<(ReplayReport, PlanCache)> {
     let mut sim = EventSim::new(planner.node.num_devices);
     let mut control = AdaptLoop::new(config.clone(), window_capacity);
     if let Some(cache) = seed_cache {
@@ -292,6 +320,9 @@ pub fn replay_adaptive_seeded(
         });
         let sc = point.scenario();
         let (plan, decision) = control.step(planner, samples, Some(&sc), None)?;
+        if let Some(aud) = &mut audit {
+            aud.extend(control.last_consult.clone());
+        }
         if let SwitchDecision::Switch { cost, .. } = decision {
             if cost > 0.0 {
                 sim.transition(cost, "replan-switch");
@@ -684,6 +715,29 @@ mod tests {
         assert!(replay_adaptive_degraded(&planner, &trace, &cfg, 16, 2, 3).is_err());
         assert!(replay_adaptive_degraded(&planner, &trace, &cfg, 16, 2, 4).is_err());
         assert!(replay_adaptive_degraded(&planner, &trace, &cfg, 16, 99, 2).is_err());
+    }
+
+    #[test]
+    fn audited_replay_records_one_consult_per_batch() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let trace = WorkloadTrace::phase_shift(6, 16, 5);
+        let cfg = ControllerConfig::default();
+        let (report, audit) = replay_adaptive_audited(&planner, &trace, &cfg, 16).unwrap();
+        assert_eq!(audit.len(), trace.points.len());
+        assert_eq!(audit[0].decision, "adopt");
+        let switches = audit.iter().filter(|c| c.decision == "switch").count();
+        assert_eq!(switches, report.switches, "audit verdicts disagree with the report");
+        // A switch verdict must carry its breakeven arithmetic.
+        for c in audit.iter().filter(|c| c.decision == "switch") {
+            assert!(c.evaluated);
+            let savings = c.projected_savings_s.expect("switch without projected savings");
+            assert!(savings >= cfg.breakeven_factor * c.switch_cost_s);
+        }
+        // The audit run scores identically to the unaudited one.
+        let plain = replay_adaptive(&planner, &trace, &cfg, 16).unwrap();
+        assert_eq!(plain.total_s, report.total_s);
     }
 
     #[test]

@@ -49,6 +49,7 @@ pub mod config;
 pub mod engine;
 pub mod ilp;
 pub mod model;
+pub mod obs;
 pub mod planner;
 pub mod quant;
 pub mod runtime;

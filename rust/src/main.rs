@@ -10,6 +10,8 @@
 //!               --engine streaming runs the continuous-batching
 //!               session engine, --engine gang the legacy
 //!               run-to-completion scheduler.
+//!   trace       Summarize a serve trace (JSONL from `serve
+//!               --trace-out`) into a per-module time breakdown.
 //!   quant-eval  Quantization scheme quality report (Table I).
 //!   microbench  η/ρ simulation-model accuracy (Fig 5).
 
@@ -34,6 +36,7 @@ fn main() -> ExitCode {
         "breakdown" => cmd_breakdown(rest),
         "sweep" => cmd_sweep(rest),
         "serve" => cmd_serve(rest),
+        "trace" => cmd_trace(rest),
         "adapt-replay" => cmd_adapt_replay(rest),
         "quant-eval" => cmd_quant(rest),
         "microbench" => cmd_microbench(rest),
@@ -65,7 +68,9 @@ fn print_help() {
          breakdown   per-layer latency breakdown TP vs EP (Fig 2)\n  \
          sweep       HAP vs TP speedups across scenarios (Fig 4/6/7/9)\n  \
          serve       serve a workload on the tiny-MoE grid engine (pjrt or host backend;\n              \
-                     --engine streaming|gang picks continuous batching vs run-to-completion)\n  \
+                     --engine streaming|gang picks continuous batching vs run-to-completion;\n              \
+                     --trace-out / --metrics-out export the run's telemetry)\n  \
+         trace       summarize a serve trace (trace summarize --in <trace.jsonl>)\n  \
          adapt-replay  replay a traffic trace: adaptive vs static vs oracle\n  \
          quant-eval  INT4 scheme quality (Table I)\n  \
          microbench  η/ρ simulation-model accuracy (Fig 5)\n\n\
@@ -259,6 +264,16 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "inject deterministic device faults: comma-separated KIND@ITER[@dDEV], \
          KIND = crash | stall<N> | transient<N> (host backend; forces --engine streaming)",
     );
+    spec.flag(
+        "trace-out",
+        "",
+        "record the deterministic event trace and write it (JSONL) to this path (host backend)",
+    );
+    spec.flag(
+        "metrics-out",
+        "",
+        "write the final metrics registry to this path (.prom = Prometheus text, else JSON)",
+    );
     let p = spec.parse(args).map_err(anyhow::Error::msg)?;
 
     let scheduling = hap::serving::Scheduling::parse(p.get("engine"))
@@ -318,12 +333,20 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             .collect()
     };
 
+    let trace_out = p.get("trace-out");
+    let metrics_out = p.get("metrics-out");
     let report = match p.get("backend") {
         "pjrt" => {
             if fault.is_some() {
                 anyhow::bail!(
                     "--fault-trace requires --backend host: fault injection instruments \
                      the host grid engine's device map"
+                );
+            }
+            if !trace_out.is_empty() {
+                anyhow::bail!(
+                    "--trace-out requires --backend host (the recorder instruments the \
+                     host grid engine)"
                 );
             }
             if scheduling == hap::serving::Scheduling::Streaming {
@@ -362,7 +385,18 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                 config.label(),
                 p.get("engine"),
             );
-            hap::serving::serve_with(&mut exec, &config, scheduling, make_workload(&meta))?
+            let recorder = if trace_out.is_empty() {
+                hap::obs::Recorder::disabled()
+            } else {
+                hap::obs::Recorder::new()
+            };
+            hap::serving::serve_with_recorder(
+                &mut exec,
+                &config,
+                scheduling,
+                make_workload(&meta),
+                recorder,
+            )?
         }
         other => anyhow::bail!("unknown backend '{other}' (pjrt | host)"),
     };
@@ -371,6 +405,56 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "compute split: prefill {:.2} s, decode {:.2} s",
         report.prefill_time, report.decode_time
     );
+    if !trace_out.is_empty() {
+        std::fs::write(trace_out, hap::obs::events_to_jsonl(&report.trace))?;
+        println!("wrote {} trace events to {trace_out}", report.trace.len());
+    }
+    if !metrics_out.is_empty() {
+        let text = if metrics_out.ends_with(".prom") {
+            report.telemetry.to_prometheus()
+        } else {
+            report.telemetry.to_json().to_string_pretty()
+        };
+        std::fs::write(metrics_out, text)?;
+        println!("wrote metrics to {metrics_out}");
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: &[String]) -> anyhow::Result<()> {
+    let sub = args.first().map(|s| s.as_str()).unwrap_or("");
+    if sub != "summarize" {
+        anyhow::bail!("usage: hap trace summarize --in <trace.jsonl> [--json <path>]");
+    }
+    let mut spec = ArgSpec::new(
+        "hap trace summarize",
+        "Fold a serve trace (JSONL) into a per-module time breakdown (Fig 2 style)",
+    );
+    spec.flag("in", "", "trace path (from `hap serve --trace-out`)");
+    spec.flag("json", "", "also write the summary JSON to this path");
+    let p = spec.parse(&args[1..]).map_err(anyhow::Error::msg)?;
+    let path = p.get("in");
+    if path.is_empty() {
+        anyhow::bail!("--in <trace.jsonl> is required");
+    }
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        lines.push(
+            hap::util::json::Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", i + 1))?,
+        );
+    }
+    let summary = hap::obs::summarize_lines(&lines);
+    print!("{}", summary.render());
+    let out = p.get("json");
+    if !out.is_empty() {
+        std::fs::write(out, summary.to_json().to_string_pretty())?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 
@@ -387,6 +471,11 @@ fn cmd_adapt_replay(args: &[String]) -> anyhow::Result<()> {
     spec.flag("batch", "16", "nominal global batch size");
     spec.flag("seed", "17", "trace jitter seed");
     spec.flag("json", "", "write the comparison JSON to this path");
+    spec.flag(
+        "audit-out",
+        "",
+        "write the adaptive run's plan-decision audit log (JSONL, one consult per batch) here",
+    );
     spec.flag("plan-cache", "", "load/save the adaptive plan cache at this path");
     spec.flag("fail-at", "", "also replay a device crash at this batch index (degraded re-plan)");
     spec.flag("survivors", "2", "surviving device count after --fail-at (power of two)");
@@ -457,6 +546,25 @@ fn cmd_adapt_replay(args: &[String]) -> anyhow::Result<()> {
             deg.switch_time_s,
             (deg.total_s / cmp.adaptive.total_s - 1.0) * 100.0
         );
+    }
+    let audit_out = p.get("audit-out");
+    if !audit_out.is_empty() {
+        // Re-run the adaptive policy with the audit hook: every consult
+        // records its breakeven arithmetic, so a divergence between the
+        // table above and expectations can be explained line by line.
+        let (_, audit) = hap::adapt::replay::replay_adaptive_audited(
+            &planner,
+            &trace,
+            &hap::adapt::ControllerConfig::default(),
+            32,
+        )?;
+        let mut text = String::new();
+        for consult in &audit {
+            text.push_str(&consult.to_json().to_string_compact());
+            text.push('\n');
+        }
+        std::fs::write(audit_out, text)?;
+        println!("wrote {} consult records to {audit_out}", audit.len());
     }
     let out = p.get("json");
     if !out.is_empty() {

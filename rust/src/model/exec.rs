@@ -48,6 +48,7 @@ use crate::model::fault::{fault_message, FaultPlan};
 use crate::model::grid::{DeviceGrid, ShardPlan};
 use crate::model::kernels;
 use crate::model::weights::ShardSpec;
+use crate::obs::ModuleTimes;
 use crate::runtime::literal::{self, HostTensor};
 use crate::runtime::{PjrtRuntime, TinyModelMeta};
 use crate::strategy::AttnStrategy;
@@ -157,6 +158,10 @@ pub struct ModelExecutor<'rt> {
     /// the device states and surfaced by `map_devices` as structured
     /// `fault[kind]` errors. `None` = healthy run (zero overhead).
     fault: Option<FaultPlan>,
+    /// Cumulative per-module / per-device time attribution (attention,
+    /// expert FFN, collective combines, reshard) — the observability
+    /// layer reads deltas of this around each op.
+    times: ModuleTimes,
 }
 
 impl<'rt> ModelExecutor<'rt> {
@@ -179,6 +184,7 @@ impl<'rt> ModelExecutor<'rt> {
             session: false,
             stats: ExecStats::default(),
             fault: None,
+            times: ModuleTimes::default(),
         })
     }
 
@@ -206,6 +212,7 @@ impl<'rt> ModelExecutor<'rt> {
             session: false,
             stats: ExecStats::default(),
             fault: None,
+            times: ModuleTimes::default(),
         }
     }
 
@@ -215,6 +222,13 @@ impl<'rt> ModelExecutor<'rt> {
 
     pub fn stats(&self) -> ExecStats {
         self.stats
+    }
+
+    /// Cumulative per-module / per-device time attribution. Callers
+    /// wanting per-op numbers snapshot this before an op and take
+    /// [`ModuleTimes::delta_since`] after it.
+    pub fn module_times(&self) -> &ModuleTimes {
+        &self.times
     }
 
     /// Install a deterministic fault-injection schedule. Host backend
@@ -323,7 +337,9 @@ impl<'rt> ModelExecutor<'rt> {
         if evicted > 0 || (had_resident && materialized > 0) {
             self.stats.reshards += 1;
         }
-        self.stats.reshard_seconds += t0.elapsed().as_secs_f64();
+        let reshard_s = t0.elapsed().as_secs_f64();
+        self.stats.reshard_seconds += reshard_s;
+        self.times.reshard_s += reshard_s;
         self.batch_plans = Some((*prefill, *decode));
         Ok(())
     }
@@ -664,8 +680,9 @@ impl<'rt> ModelExecutor<'rt> {
                 // in the same member order as the gang combine. The
                 // ranged kernel resumes against the slot's cache row:
                 // earlier chunks' KV is read back, this chunk's written.
-                let outs: Vec<Option<HostTensor>> =
-                    map_devices(self.mode, &mut self.devices, |st| {
+                let t_mod = Instant::now();
+                let (outs, per_dev): (Vec<Option<HostTensor>>, Vec<f64>) =
+                    map_devices_timed(self.mode, &mut self.devices, |st| {
                         let role = roles[st.device];
                         if role.dp_rank != g {
                             return Ok(None);
@@ -690,8 +707,15 @@ impl<'rt> ModelExecutor<'rt> {
                         )?;
                         Ok(Some(out))
                     })?;
+                self.times.attn_s += t_mod.elapsed().as_secs_f64();
+                for (d, dt) in per_dev.iter().enumerate() {
+                    self.times.add_device(d, *dt);
+                }
                 // Same order-deterministic fold as the gang combine.
-                collectives::apply(&grid.attn_reduce[g], &outs)?
+                let t_comb = Instant::now();
+                let out = collectives::apply(&grid.attn_reduce[g], &outs)?;
+                self.times.collective_s += t_comb.elapsed().as_secs_f64();
+                out
             };
             x.add_assign(&a_out);
             let e_out = self.expert_layer(&x, l, &grid, &m, "prefill")?;
@@ -767,29 +791,38 @@ impl<'rt> ModelExecutor<'rt> {
                 let xr = &x;
                 let pos_ref = &slot_pos;
                 let live_ref = &slot_live;
-                let outs = map_devices(self.mode, &mut self.devices, |st| {
-                    let role = roles[st.device];
-                    let xg = xr.slice_outer(role.dp_rank * bg, bg);
-                    let cache = st.kv[l]
-                        .as_mut()
-                        .ok_or_else(|| anyhow!("session KV missing"))?;
-                    let w = st
-                        .shards
-                        .get(&(fam.clone(), l))
-                        .ok_or_else(|| anyhow!("attn shard not resident"))?;
-                    kernels::attention_decode_slots(
-                        &xg,
-                        &mut cache.k,
-                        &mut cache.v,
-                        &pos_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
-                        &live_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
-                        w,
-                        q_l,
-                        kv_l,
-                        hd,
-                    )
-                })?;
-                combine_attn(&grid, outs)?
+                let t_mod = Instant::now();
+                let (outs, per_dev): (Vec<HostTensor>, Vec<f64>) =
+                    map_devices_timed(self.mode, &mut self.devices, |st| {
+                        let role = roles[st.device];
+                        let xg = xr.slice_outer(role.dp_rank * bg, bg);
+                        let cache = st.kv[l]
+                            .as_mut()
+                            .ok_or_else(|| anyhow!("session KV missing"))?;
+                        let w = st
+                            .shards
+                            .get(&(fam.clone(), l))
+                            .ok_or_else(|| anyhow!("attn shard not resident"))?;
+                        kernels::attention_decode_slots(
+                            &xg,
+                            &mut cache.k,
+                            &mut cache.v,
+                            &pos_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
+                            &live_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
+                            w,
+                            q_l,
+                            kv_l,
+                            hd,
+                        )
+                    })?;
+                self.times.attn_s += t_mod.elapsed().as_secs_f64();
+                for (d, dt) in per_dev.iter().enumerate() {
+                    self.times.add_device(d, *dt);
+                }
+                let t_comb = Instant::now();
+                let out = combine_attn(&grid, outs)?;
+                self.times.collective_s += t_comb.elapsed().as_secs_f64();
+                out
             };
             x.add_assign(&a_out);
             let e_out = self.expert_layer(&x, l, &grid, &m, "decode")?;
@@ -846,10 +879,11 @@ impl<'rt> ModelExecutor<'rt> {
         let kv_l = (m.kv_heads / t).max(1);
         let max_len = m.max_len;
 
-        let outs: Vec<HostTensor> = match self.backend {
+        let t_mod = Instant::now();
+        let (outs, per_dev): (Vec<HostTensor>, Vec<f64>) = match self.backend {
             Backend::Host => {
                 let roles = &grid.roles;
-                map_devices(self.mode, &mut self.devices, |st| {
+                map_devices_timed(self.mode, &mut self.devices, |st| {
                     let role = roles[st.device];
                     let xg = x.slice_outer(role.dp_rank * bg, bg);
                     let w = st
@@ -893,10 +927,17 @@ impl<'rt> ModelExecutor<'rt> {
                     });
                     outs.push(out);
                 }
-                outs
+                (outs, Vec::new())
             }
         };
-        combine_attn(grid, outs)
+        self.times.attn_s += t_mod.elapsed().as_secs_f64();
+        for (d, dt) in per_dev.iter().enumerate() {
+            self.times.add_device(d, *dt);
+        }
+        let t_comb = Instant::now();
+        let out = combine_attn(grid, outs);
+        self.times.collective_s += t_comb.elapsed().as_secs_f64();
+        out
     }
 
     fn attn_decode_layer(
@@ -915,10 +956,11 @@ impl<'rt> ModelExecutor<'rt> {
         let kv_l = (m.kv_heads / t).max(1);
         let pos = self.pos;
 
-        let outs: Vec<HostTensor> = match self.backend {
+        let t_mod = Instant::now();
+        let (outs, per_dev): (Vec<HostTensor>, Vec<f64>) = match self.backend {
             Backend::Host => {
                 let roles = &grid.roles;
-                map_devices(self.mode, &mut self.devices, |st| {
+                map_devices_timed(self.mode, &mut self.devices, |st| {
                     let role = roles[st.device];
                     let xg = x.slice_outer(role.dp_rank * bg, bg);
                     let cache = st.kv[l]
@@ -975,10 +1017,17 @@ impl<'rt> ModelExecutor<'rt> {
                         HostTensor::from_literal(&res[2], vec![b, m.max_len, kv_l, m.head_dim])?;
                     outs.push(out);
                 }
-                outs
+                (outs, Vec::new())
             }
         };
-        combine_attn(grid, outs)
+        self.times.attn_s += t_mod.elapsed().as_secs_f64();
+        for (d, dt) in per_dev.iter().enumerate() {
+            self.times.add_device(d, *dt);
+        }
+        let t_comb = Instant::now();
+        let out = combine_attn(grid, outs);
+        self.times.collective_s += t_comb.elapsed().as_secs_f64();
+        out
     }
 
     /// Expert module across the grid: every device computes its
@@ -998,10 +1047,11 @@ impl<'rt> ModelExecutor<'rt> {
         let tokens: usize = x.shape[..2].iter().product();
         let x2 = HostTensor::new(vec![tokens, m.hidden], x.data.clone());
 
-        let outs: Vec<HostTensor> = match self.backend {
+        let t_mod = Instant::now();
+        let (outs, per_dev): (Vec<HostTensor>, Vec<f64>) = match self.backend {
             Backend::Host => {
                 let top_k = m.top_k;
-                map_devices(self.mode, &mut self.devices, |st| {
+                map_devices_timed(self.mode, &mut self.devices, |st| {
                     let w = st
                         .shards
                         .get(&(fam.clone(), l))
@@ -1031,18 +1081,24 @@ impl<'rt> ModelExecutor<'rt> {
                     let res = rt.execute_buffers(&name, &inputs)?;
                     outs.push(HostTensor::from_literal(&res[0], vec![tokens, m.hidden])?);
                 }
-                outs
+                (outs, Vec::new())
             }
         };
+        self.times.expert_s += t_mod.elapsed().as_secs_f64();
+        for (d, dt) in per_dev.iter().enumerate() {
+            self.times.add_device(d, *dt);
+        }
 
         // Partial-sum within each expert block, then contribution-sum
         // across blocks.
+        let t_comb = Instant::now();
         let table: Vec<Option<HostTensor>> = outs.into_iter().map(Some).collect();
         let mut leaders: Vec<Option<HostTensor>> = (0..grid.devices).map(|_| None).collect();
         for g in &grid.expert_reduce {
             leaders[g.members[0]] = Some(collectives::apply(g, &table)?);
         }
         let out = collectives::apply(&grid.expert_combine, &leaders)?;
+        self.times.collective_s += t_comb.elapsed().as_secs_f64();
         Ok(HostTensor::new(x.shape.clone(), out.data))
     }
 
@@ -1145,6 +1201,25 @@ where
                 .collect()
         }),
     }
+}
+
+/// [`map_devices`] plus per-device in-closure seconds (indexed by
+/// device order), for the observability module-time attribution.
+fn map_devices_timed<T, F>(
+    mode: EngineMode,
+    states: &mut [DeviceState],
+    f: F,
+) -> Result<(Vec<T>, Vec<f64>)>
+where
+    T: Send,
+    F: Fn(&mut DeviceState) -> Result<T> + Sync,
+{
+    let timed = map_devices(mode, states, |st| {
+        let t0 = Instant::now();
+        let out = f(st)?;
+        Ok((out, t0.elapsed().as_secs_f64()))
+    })?;
+    Ok(timed.into_iter().unzip())
 }
 
 /// Reduce TP partials per DP group, then concat groups over the batch.

@@ -1,0 +1,67 @@
+//! # Observability: deterministic tracing, plan-decision audit, metrics.
+//!
+//! The serving stack's instrumentation layer (std-only, zero deps):
+//!
+//! - [`trace`] — the iteration-clock event stream. A [`Recorder`]
+//!   collects typed [`TraceEvent`]s ordered by the engine's scheduler
+//!   iteration and the executor's fault-clock op counter. Wall time is
+//!   carried as a *payload* field, never as an ordering key, so two
+//!   runs of the same seeded workload produce byte-identical streams
+//!   once the wall-derived fields are stripped
+//!   ([`canonical_stream`]) — the trace doubles as a regression
+//!   oracle. [`ModuleTimes`] carries the per-module / per-device time
+//!   attribution (the paper's Fig. 2 breakdown) measured around
+//!   `ModelExecutor`'s `map_devices` fan-outs.
+//! - [`registry`] — a small counter/gauge/histogram [`Registry`] with
+//!   JSON and Prometheus-style text exposition. `serving::Metrics`
+//!   exports onto it (`hap serve --metrics-out`,
+//!   `ServeReport::telemetry`).
+//!
+//! The plan-decision audit record is [`PlanConsult`]: every
+//! `SwitchController` consult in the adaptive loop captures the traffic
+//! key, cached-vs-fresh candidate, predicted and measured s/token,
+//! mispredict-EWMA factors, and the verdict with its breakeven
+//! arithmetic. It is emitted both as a `PlanConsult` trace event by the
+//! streaming engine and as JSONL by `hap adapt-replay --audit-out`.
+//!
+//! ## Trace schema (JSONL, one event per line)
+//!
+//! Envelope fields on every line:
+//!
+//! | field   | type | meaning                                          |
+//! |---------|------|--------------------------------------------------|
+//! | `seq`   | int  | per-run monotonic sequence number                |
+//! | `iter`  | int  | engine scheduler iteration (step count)          |
+//! | `op`    | int  | executor fault-clock op counter at emit time     |
+//! | `event` | str  | event kind (one of the names below)              |
+//!
+//! Event kinds and payload fields (`*` marks wall-derived payloads that
+//! [`canonical_stream`] strips before determinism comparison):
+//!
+//! | event            | emitted on                         | payload fields |
+//! |------------------|------------------------------------|----------------|
+//! | `Admit`          | request admitted into a slot/batch | `request`, `slot`, `prompt_tokens` |
+//! | `PrefillChunk`   | one (chunked) prefill op           | `slot`, `start`, `len`, `done`, `secs`*, `modules`* |
+//! | `DecodeStep`     | one decode iteration               | `decoding`, `capacity`, `secs`*, `modules`* |
+//! | `PlanConsult`    | adaptive-loop consult              | `key`, `candidate`, `cached`, `active`, `evaluated`, `predicted_active_s`, `predicted_candidate_s`, `predicted_s_tok`, `measured_s_tok`*, `mispredict_active`*, `mispredict_candidate`*, `switch_cost_s`, `expected_dwell`, `decision`, `projected_savings_s`* |
+//! | `Switch`         | plan switch scheduled/applied      | `from`, `to`, `mode` |
+//! | `Reshard`        | resident weight layout changed     | `count`, `secs`* |
+//! | `FaultDetected`  | classified device fault            | `device`, `kind`, `attempt` |
+//! | `Retry`          | retryable fault backoff armed      | `attempt`, `backoff_iters` |
+//! | `DegradedReplan` | degraded re-plan onto survivors    | `survivors`, `requeued` |
+//! | `Retire`         | request completed                  | `request`, `slot`, `tokens`, `latency_s`*, `ttft_s`* |
+//! | `Cancel`         | request cancelled                  | `request` |
+//!
+//! `modules` is a [`ModuleTimes`] object: `attn_s`, `expert_s`,
+//! `collective_s`, `reshard_s`, `per_device_s` (all wall-derived).
+//! `hap trace summarize` folds a trace into the per-module breakdown
+//! via [`summarize_lines`].
+
+pub mod registry;
+pub mod trace;
+
+pub use registry::{HistogramSnapshot, MetricValue, Registry};
+pub use trace::{
+    canonical_stream, events_to_jsonl, strip_wall_fields, summarize_lines, EventKind, ModuleTimes,
+    PlanConsult, Recorder, TraceEvent, TraceSummary, WALL_FIELDS,
+};

@@ -1,0 +1,212 @@
+//! Counter/gauge/histogram registry with JSON and Prometheus-style
+//! text exposition.
+//!
+//! The registry is a *snapshot* structure: producers (e.g.
+//! `serving::Metrics::registry`) build one at export time from their
+//! own counters, so there is no shared-state instrumentation cost on
+//! the serving hot path. Entry order is insertion order, which keeps
+//! both expositions deterministic.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// Quantile snapshot of a sample distribution.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: usize,
+    pub sum: f64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+impl HistogramSnapshot {
+    /// Snapshot a sample vector (all-zero for an empty one, matching
+    /// the pinned `util::stats` empty-input behavior).
+    pub fn from_samples(samples: &[f64]) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: samples.len(),
+            sum: samples.iter().sum(),
+            mean: stats::mean(samples),
+            p50: stats::percentile(samples, 50.0),
+            p95: stats::percentile(samples, 95.0),
+            p99: stats::percentile(samples, 99.0),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", self.count.into()),
+            ("sum", self.sum.into()),
+            ("mean", self.mean.into()),
+            ("p50", self.p50.into()),
+            ("p95", self.p95.into()),
+            ("p99", self.p99.into()),
+        ])
+    }
+}
+
+/// One metric value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(f64),
+    Histogram(HistogramSnapshot),
+}
+
+/// Ordered name → value registry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Registry {
+    entries: Vec<(String, MetricValue)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register (or overwrite) a monotonic counter.
+    pub fn counter(&mut self, name: &str, value: u64) {
+        self.set(name, MetricValue::Counter(value));
+    }
+
+    /// Register (or overwrite) a point-in-time gauge.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.set(name, MetricValue::Gauge(value));
+    }
+
+    /// Register (or overwrite) a histogram snapshot of `samples`.
+    pub fn histogram(&mut self, name: &str, samples: &[f64]) {
+        self.set(name, MetricValue::Histogram(HistogramSnapshot::from_samples(samples)));
+    }
+
+    fn set(&mut self, name: &str, value: MetricValue) {
+        match self.entries.iter_mut().find(|(k, _)| k == name) {
+            Some(entry) => entry.1 = value,
+            None => self.entries.push((name.to_string(), value)),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries.iter().find(|(k, _)| k == name).map(|(_, v)| v)
+    }
+
+    pub fn entries(&self) -> &[(String, MetricValue)] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// JSON exposition: `{name: value}` with histograms as quantile
+    /// objects. Counters serialize as integers.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            self.entries
+                .iter()
+                .map(|(k, v)| {
+                    let j = match v {
+                        MetricValue::Counter(c) => Json::Num(*c as f64),
+                        MetricValue::Gauge(g) => Json::Num(*g),
+                        MetricValue::Histogram(h) => h.to_json(),
+                    };
+                    (k.clone(), j)
+                })
+                .collect(),
+        )
+    }
+
+    /// Prometheus-style text exposition. Metric names get a `hap_`
+    /// prefix and are sanitized to `[a-zA-Z0-9_]`; histograms render as
+    /// summaries with `quantile` labels plus `_sum`/`_count` series.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, value) in &self.entries {
+            let n = format!("hap_{}", sanitize(name));
+            match value {
+                MetricValue::Counter(c) => {
+                    out.push_str(&format!("# TYPE {n} counter\n{n} {c}\n"));
+                }
+                MetricValue::Gauge(g) => {
+                    out.push_str(&format!("# TYPE {n} gauge\n{n} {g}\n"));
+                }
+                MetricValue::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {n} summary\n"));
+                    for (q, v) in [(0.5, h.p50), (0.95, h.p95), (0.99, h.p99)] {
+                        out.push_str(&format!("{n}{{quantile=\"{q}\"}} {v}\n"));
+                    }
+                    out.push_str(&format!("{n}_sum {}\n{n}_count {}\n", h.sum, h.count));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Registry {
+        let mut r = Registry::new();
+        r.counter("requests_completed", 24);
+        r.gauge("wall_time_seconds", 1.5);
+        r.histogram("request_latency_seconds", &[0.1, 0.2, 0.3, 0.4]);
+        r
+    }
+
+    #[test]
+    fn json_exposition_round_trips() {
+        let r = demo();
+        let j = r.to_json();
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("requests_completed").and_then(Json::as_usize), Some(24));
+        let hist = parsed.get("request_latency_seconds").unwrap();
+        assert_eq!(hist.get("count").and_then(Json::as_usize), Some(4));
+        assert!((hist.get("mean").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-12);
+        // Counters serialize as integers (no decimal point).
+        assert!(j.to_string_compact().contains("\"requests_completed\":24"));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = demo().to_prometheus();
+        assert!(text.contains("# TYPE hap_requests_completed counter"));
+        assert!(text.contains("hap_requests_completed 24"));
+        assert!(text.contains("# TYPE hap_wall_time_seconds gauge"));
+        assert!(text.contains("# TYPE hap_request_latency_seconds summary"));
+        assert!(text.contains("hap_request_latency_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("hap_request_latency_seconds_count 4"));
+        // Every non-comment line is `name[{labels}] value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert_eq!(line.split_whitespace().count(), 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_snapshots_to_zeros() {
+        let h = HistogramSnapshot::from_samples(&[]);
+        assert_eq!(h.count, 0);
+        assert_eq!(h.mean, 0.0);
+        assert_eq!(h.p99, 0.0);
+    }
+
+    #[test]
+    fn overwrite_keeps_insertion_order() {
+        let mut r = demo();
+        r.counter("requests_completed", 30);
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.entries()[0].0, "requests_completed");
+        assert_eq!(r.get("requests_completed"), Some(&MetricValue::Counter(30)));
+    }
+}

@@ -620,6 +620,31 @@ impl<'a> HapPlanner<'a> {
     }
 }
 
+/// Predicted per-module time shares of a plan, in the observability
+/// subsystem's four-bucket layout (`attention`, `expert_ffn`,
+/// `collective`, `reshard`) so a plan's prediction lines up
+/// column-for-column with a measured `obs::TraceSummary::shares()` —
+/// the simulator side of the paper's Fig. 2 breakdown. The whole-stage
+/// prefill and decode latencies (decode already weighted by generated
+/// tokens at plan time) fold together and the transition overhead
+/// lands in the `reshard` bucket. Shares sum to 1.0 for any plan with
+/// non-zero predicted time.
+pub fn predicted_module_shares(plan: &HybridPlan) -> [(&'static str, f64); 4] {
+    let p = plan.predicted_prefill.add(&plan.predicted_decode);
+    let attn = p.attn;
+    let expert = p.expert;
+    let comm = p.comm;
+    let reshard = plan.transition.overhead;
+    let total = attn + expert + comm + reshard;
+    let norm = |x: f64| if total > 0.0 { x / total } else { 0.0 };
+    [
+        ("attention", norm(attn)),
+        ("expert_ffn", norm(expert)),
+        ("collective", norm(comm)),
+        ("reshard", norm(reshard)),
+    ]
+}
+
 /// Handles to the decision variables (testing / introspection), plus
 /// the linearization AND variables so a brute-force incumbent can be
 /// lifted into a complete warm-start assignment.
@@ -726,6 +751,20 @@ mod tests {
         let planner = HapPlanner::new(&m, &node);
         let plan = planner.plan(&Scenario::short_extended(), 2048).unwrap();
         assert_eq!(plan.expert_decode.ep, 1, "decode should be TP: {plan}");
+    }
+
+    #[test]
+    fn predicted_module_shares_normalize() {
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let planner = HapPlanner::new(&m, &node);
+        let plan = planner.plan(&Scenario::long_constrained(), 64).unwrap();
+        let shares = predicted_module_shares(&plan);
+        let names: Vec<&str> = shares.iter().map(|(n, _)| *n).collect();
+        assert_eq!(names, ["attention", "expert_ffn", "collective", "reshard"]);
+        let total: f64 = shares.iter().map(|(_, s)| s).sum();
+        assert!((total - 1.0).abs() < 1e-9, "shares sum to {total}");
+        assert!(shares.iter().all(|(_, s)| (0.0..=1.0).contains(s)));
     }
 
     #[test]

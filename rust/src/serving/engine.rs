@@ -126,6 +126,7 @@ use crate::adapt::{AdaptLoop, MeasuredLatency, PlanCache, SwitchDecision};
 use crate::config::hardware::NodeConfig;
 use crate::model::fault::{classify, faulted_device};
 use crate::model::{EngineMode, ExecStats, FaultPlan, ModelExecutor, ShardPlan, WeightStore};
+use crate::obs::{EventKind, Recorder, TraceEvent};
 use crate::planner::{HapPlanner, PLANNER_SEED};
 use crate::runtime::literal::argmax_rows;
 use crate::runtime::{PjrtRuntime, TinyModelMeta};
@@ -422,6 +423,14 @@ struct Session {
     /// Requests drained without completing, with structured reasons
     /// (e.g. no grid survived) — reported as `RequestStatus::Failed`.
     failed_requests: Vec<(RequestId, String)>,
+    /// Deterministic trace recorder (disabled unless installed via
+    /// [`EngineBuilder::recorder`] or [`serve_with_recorder`]). Events
+    /// are keyed on the scheduler-iteration counter below plus the
+    /// executor fault clock; wall time rides along as payload only.
+    recorder: Recorder,
+    /// Scheduler iterations run so far — the trace's primary
+    /// deterministic ordering key (backoff burns count too).
+    iterations: u64,
 }
 
 impl Session {
@@ -454,6 +463,8 @@ impl Session {
             recovered_ids: Vec::new(),
             cancelled_ids: Vec::new(),
             failed_requests: Vec::new(),
+            recorder: Recorder::disabled(),
+            iterations: 0,
             config,
             scheduling,
             meta,
@@ -498,6 +509,7 @@ impl Session {
         if let Some(reason) = &self.failed {
             anyhow::bail!("engine failed: {reason}");
         }
+        self.iterations += 1;
         if self.backoff_iters > 0 {
             self.backoff_iters -= 1;
             return Ok(self.idle_outcome());
@@ -526,6 +538,55 @@ impl Session {
         }
     }
 
+    /// The executor fault clock — the secondary deterministic ordering
+    /// key traced alongside the scheduler iteration (0 when no fault
+    /// plan is installed).
+    fn fault_clock(exec: &ModelExecutor) -> u64 {
+        exec.fault_plan().map(|f| f.iteration()).unwrap_or(0)
+    }
+
+    /// Record one trace event at the current (iteration, fault-clock)
+    /// coordinates. A no-op when the recorder is disabled — callers
+    /// with expensive payloads (module-time snapshots) should gate on
+    /// `self.recorder.is_enabled()` themselves.
+    fn record(&mut self, exec: &ModelExecutor, kind: EventKind) {
+        self.recorder.record(self.iterations, Self::fault_clock(exec), kind);
+    }
+
+    /// Human label for a (prefill, decode) plan pair in `Switch`
+    /// events.
+    fn plans_label(plans: &(ShardPlan, ShardPlan)) -> String {
+        if plans.0 == plans.1 {
+            plans.0.label()
+        } else {
+            format!("prefill[{}] decode[{}]", plans.0.label(), plans.1.label())
+        }
+    }
+
+    /// Run a plan-applying executor call and trace the reshard work it
+    /// did (weight-move count and seconds, from the executor stats
+    /// delta) as a `Reshard` event.
+    fn trace_reshard<F>(&mut self, exec: &mut ModelExecutor, apply: F) -> Result<()>
+    where
+        F: FnOnce(&mut ModelExecutor) -> Result<()>,
+    {
+        let s0 = self.recorder.is_enabled().then(|| exec.stats());
+        apply(exec)?;
+        if let Some(s0) = s0 {
+            let s1 = exec.stats();
+            if s1.reshards > s0.reshards {
+                self.record(
+                    exec,
+                    EventKind::Reshard {
+                        count: s1.reshards - s0.reshards,
+                        secs: s1.reshard_seconds - s0.reshard_seconds,
+                    },
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Classify a step error and dispatch the recovery state machine.
     /// Returns `Ok` when the engine absorbed the fault (retry scheduled
     /// or grid degraded) and `Err` when it latched.
@@ -542,8 +603,17 @@ impl Session {
         }
         match classify(&e) {
             Some(kind) if kind.retryable() && self.retry_attempts < MAX_FAULT_RETRIES => {
+                let device = faulted_device(&e).unwrap_or(0);
                 if self.retry_attempts == 0 {
                     self.metrics.faults_detected += 1;
+                    self.record(
+                        exec,
+                        EventKind::FaultDetected {
+                            device,
+                            kind: format!("{kind:?}"),
+                            attempt: 1,
+                        },
+                    );
                 }
                 self.retry_attempts += 1;
                 self.metrics.fault_retries += 1;
@@ -553,6 +623,13 @@ impl Session {
                 // window is consumed by the retries themselves; the
                 // backoff just spaces them out.
                 self.backoff_iters = 1usize << (self.retry_attempts - 1).min(4);
+                self.record(
+                    exec,
+                    EventKind::Retry {
+                        attempt: self.retry_attempts,
+                        backoff_iters: self.backoff_iters,
+                    },
+                );
                 Ok(self.idle_outcome())
             }
             Some(kind) => {
@@ -560,6 +637,17 @@ impl Session {
                 // exhausted, which promotes the device to lost.
                 if self.retry_attempts == 0 || kind == crate::model::FaultKind::Crash {
                     self.metrics.faults_detected += 1;
+                    let device = faulted_device(&e)
+                        .or_else(|| exec.crashed_devices().first().copied())
+                        .unwrap_or(0);
+                    self.record(
+                        exec,
+                        EventKind::FaultDetected {
+                            device,
+                            kind: format!("{kind:?}"),
+                            attempt: self.retry_attempts + 1,
+                        },
+                    );
                 }
                 self.retry_attempts = 0;
                 self.backoff_iters = 0;
@@ -608,6 +696,7 @@ impl Session {
             }
         }
         self.metrics.requests_recovered += requeued.len();
+        let requeued_n = requeued.len();
         self.recovered_ids.extend(requeued.iter().map(|r| r.id));
         requeued.append(&mut self.backlog);
         self.backlog = requeued;
@@ -631,6 +720,10 @@ impl Session {
         // out-of-range devices or already-passed iterations drop.
         exec.compact_faults(n_new);
         self.metrics.replans_degraded += 1;
+        self.record(
+            exec,
+            EventKind::DegradedReplan { survivors: n_new, requeued: requeued_n },
+        );
         let mut out = self.idle_outcome();
         out.switched = true;
         Ok(out)
@@ -694,11 +787,13 @@ impl Session {
     fn cancel(&mut self, exec: &mut ModelExecutor, id: RequestId) -> Result<RequestStatus> {
         if self.router.remove(id).is_some() {
             self.cancelled_ids.push(id);
+            self.record(exec, EventKind::Cancel { request: id });
             return Ok(RequestStatus::Cancelled);
         }
         if let Some(pos) = self.backlog.iter().position(|r| r.id == id) {
             self.backlog.remove(pos);
             self.cancelled_ids.push(id);
+            self.record(exec, EventKind::Cancel { request: id });
             return Ok(RequestStatus::Cancelled);
         }
         if let Some(idx) = self
@@ -709,6 +804,7 @@ impl Session {
             exec.release_slot(idx)?;
             self.slots[idx] = None;
             self.cancelled_ids.push(id);
+            self.record(exec, EventKind::Cancel { request: id });
             return Ok(RequestStatus::Cancelled);
         }
         Ok(self.status(id))
@@ -736,9 +832,34 @@ impl Session {
                     })
                     .collect();
                 let (p, d, decision) = state.select(cfg, &samples, self.last_measured)?;
+                if self.recorder.is_enabled() {
+                    let clock = Self::fault_clock(exec);
+                    if let Some(c) = state.control.last_consult.clone() {
+                        self.recorder.record(self.iterations, clock, EventKind::PlanConsult(c));
+                    }
+                }
                 if matches!(decision, SwitchDecision::Switch { .. }) {
                     self.metrics.replans += 1;
                     out.switched = true;
+                    if self.recorder.is_enabled() {
+                        let clock = Self::fault_clock(exec);
+                        let (from, to) = state
+                            .control
+                            .last_consult
+                            .as_ref()
+                            .map(|c| {
+                                (
+                                    c.active.clone().unwrap_or_else(|| "none".to_string()),
+                                    c.candidate.clone(),
+                                )
+                            })
+                            .unwrap_or_else(|| ("none".to_string(), String::new()));
+                        self.recorder.record(
+                            self.iterations,
+                            clock,
+                            EventKind::Switch { from, to, mode: "gang" },
+                        );
+                    }
                 }
                 (p, d)
             }
@@ -749,12 +870,36 @@ impl Session {
         };
         // Declare the batch's plans: evicts stale layouts, materializes
         // missing shards — the measured resharding work of a switch.
-        exec.begin_batch(&prefill_plan, &decode_plan)?;
+        self.trace_reshard(exec, |e| e.begin_batch(&prefill_plan, &decode_plan))?;
+        if self.recorder.is_enabled() {
+            for (slot, req) in batch.requests.iter().enumerate() {
+                self.recorder.record(
+                    self.iterations,
+                    Self::fault_clock(exec),
+                    EventKind::Admit { request: req.id, slot, prompt_tokens: req.prompt.len() },
+                );
+            }
+        }
 
         // ---- Prefill.
+        let snap = self.recorder.is_enabled().then(|| exec.module_times().clone());
         let t0 = Instant::now();
         let logits = exec.prefill(&batch.tokens, &prefill_plan)?;
         let batch_prefill = t0.elapsed().as_secs_f64();
+        if let Some(m0) = snap {
+            let modules = exec.module_times().delta_since(&m0);
+            self.record(
+                exec,
+                EventKind::PrefillChunk {
+                    slot: 0,
+                    start: 0,
+                    len: self.meta.prefill_len,
+                    done: true,
+                    secs: batch_prefill,
+                    modules,
+                },
+            );
+        }
         self.prefill_time += batch_prefill;
         self.metrics.batches_prefilled += 1;
         if prefill_plan.expert != decode_plan.expert {
@@ -775,7 +920,23 @@ impl Session {
         let t0 = Instant::now();
         while remaining.iter().take(batch.live()).any(|&r| r > 0) {
             let active = remaining.iter().take(batch.live()).filter(|&&r| r > 0).count();
+            let snap = self
+                .recorder
+                .is_enabled()
+                .then(|| (Instant::now(), exec.module_times().clone()));
             let logits = exec.decode_step(&last, &decode_plan)?;
+            if let Some((it0, m0)) = snap {
+                let modules = exec.module_times().delta_since(&m0);
+                self.record(
+                    exec,
+                    EventKind::DecodeStep {
+                        decoding: active,
+                        capacity: self.meta.batch,
+                        secs: it0.elapsed().as_secs_f64(),
+                        modules,
+                    },
+                );
+            }
             self.metrics.decode_steps += 1;
             self.metrics.observe_occupancy(active, self.meta.batch);
             // Count live slots, not iterations, so gang and streaming
@@ -806,6 +967,16 @@ impl Session {
             let latency = now.duration_since(req.arrived).as_secs_f64();
             let ttft = first_time.duration_since(req.arrived).as_secs_f64();
             self.metrics.observe_request(latency, ttft, generated[slot].len());
+            self.record(
+                exec,
+                EventKind::Retire {
+                    request: req.id,
+                    slot,
+                    tokens: generated[slot].len(),
+                    latency_s: latency,
+                    ttft_s: ttft,
+                },
+            );
             self.responses.push(Response {
                 id: req.id,
                 tokens: generated[slot].clone(),
@@ -866,6 +1037,7 @@ impl Session {
             slot.prefill.take().ok_or(EngineError::NotPrefilling { slot: idx })?
         };
         let c = self.chunk_len(row.len(), cursor);
+        let snap = self.recorder.is_enabled().then(|| exec.module_times().clone());
         let t0 = Instant::now();
         let res = exec.prefill_slot(idx, &row[cursor..cursor + c], &prefill_plan);
         let dt = t0.elapsed().as_secs_f64();
@@ -886,6 +1058,13 @@ impl Session {
         };
         self.metrics.prefill_chunks += 1;
         let done = cursor + c == row.len();
+        if let Some(m0) = snap {
+            let modules = exec.module_times().delta_since(&m0);
+            self.record(
+                exec,
+                EventKind::PrefillChunk { slot: idx, start: cursor, len: c, done, secs: dt, modules },
+            );
+        }
         let retire_now = {
             let slot = self.slots[idx]
                 .as_mut()
@@ -934,6 +1113,16 @@ impl Session {
             .ok_or(EngineError::EmptySlot { slot: idx, at: "retire" })?;
         let latency = slot.req.arrived.elapsed().as_secs_f64();
         self.metrics.observe_request(latency, slot.ttft, slot.tokens.len());
+        self.record(
+            exec,
+            EventKind::Retire {
+                request: slot.req.id,
+                slot: idx,
+                tokens: slot.tokens.len(),
+                latency_s: latency,
+                ttft_s: slot.ttft,
+            },
+        );
         self.responses.push(Response {
             id: slot.req.id,
             tokens: slot.tokens,
@@ -969,7 +1158,21 @@ impl Session {
         // change. Re-begin the session and resume admission.
         if running == 0 {
             if let Some((p, d)) = self.pending.take() {
-                exec.begin_session(&p, &d)?;
+                self.trace_reshard(exec, |e| e.begin_session(&p, &d))?;
+                if self.recorder.is_enabled() {
+                    let from = self
+                        .active
+                        .map(|cur| Self::plans_label(&cur))
+                        .unwrap_or_else(|| "none".to_string());
+                    self.record(
+                        exec,
+                        EventKind::Switch {
+                            from,
+                            to: Self::plans_label(&(p, d)),
+                            mode: "drain-applied",
+                        },
+                    );
+                }
                 self.active = Some((p, d));
                 // The dwell window measured the outgoing plan; the
                 // consult that decided this switch already consumed it.
@@ -1041,6 +1244,16 @@ impl Session {
                             Some(MeasuredLatency::new(self.dwell_seconds, self.dwell_tokens))
                         };
                         let (p, d, decision) = state.select(cfg, &samples, measured)?;
+                        if self.recorder.is_enabled() {
+                            let clock = Self::fault_clock(exec);
+                            if let Some(c) = state.control.last_consult.clone() {
+                                self.recorder.record(
+                                    self.iterations,
+                                    clock,
+                                    EventKind::PlanConsult(c),
+                                );
+                            }
+                        }
                         // Reset when the window was consumed — or when
                         // it was suppressed (it ran under a forced
                         // plan the controller never adopted, so it is
@@ -1075,7 +1288,17 @@ impl Session {
                     None => {
                         // First admission starts the session directly under
                         // the selected plans — no wasted uploads.
-                        exec.begin_session(&want.0, &want.1)?;
+                        self.trace_reshard(exec, |e| e.begin_session(&want.0, &want.1))?;
+                        if self.recorder.is_enabled() {
+                            self.record(
+                                exec,
+                                EventKind::Switch {
+                                    from: "none".to_string(),
+                                    to: Self::plans_label(&want),
+                                    mode: "session-start",
+                                },
+                            );
+                        }
                         self.active = Some(want);
                     }
                     Some(cur) if cur != want => {
@@ -1083,7 +1306,17 @@ impl Session {
                             // Expert-only reshard: per-slot KV is untouched,
                             // so in-flight decodes continue under the new
                             // expert layout after the measured weight move.
-                            exec.begin_batch(&want.0, &want.1)?;
+                            self.trace_reshard(exec, |e| e.begin_batch(&want.0, &want.1))?;
+                            if self.recorder.is_enabled() {
+                                self.record(
+                                    exec,
+                                    EventKind::Switch {
+                                        from: Self::plans_label(&cur),
+                                        to: Self::plans_label(&want),
+                                        mode: "expert-reshard",
+                                    },
+                                );
+                            }
                             self.active = Some(want);
                             // Any dwell the consult withheld (token-less
                             // window) measured the outgoing plan — drop
@@ -1096,7 +1329,17 @@ impl Session {
                             // attention-layout switch immediately instead
                             // of burning a dead iteration on the
                             // pending/backlog detour.
-                            exec.begin_session(&want.0, &want.1)?;
+                            self.trace_reshard(exec, |e| e.begin_session(&want.0, &want.1))?;
+                            if self.recorder.is_enabled() {
+                                self.record(
+                                    exec,
+                                    EventKind::Switch {
+                                        from: Self::plans_label(&cur),
+                                        to: Self::plans_label(&want),
+                                        mode: "session-restart",
+                                    },
+                                );
+                            }
                             self.active = Some(want);
                             self.reset_dwell();
                             out.switched = true;
@@ -1105,6 +1348,16 @@ impl Session {
                             // stop admitting and drain in-flight decodes
                             // to the safe point.
                             self.pending = Some(want);
+                            if self.recorder.is_enabled() {
+                                self.record(
+                                    exec,
+                                    EventKind::Switch {
+                                        from: Self::plans_label(&cur),
+                                        to: Self::plans_label(&want),
+                                        mode: "drain-scheduled",
+                                    },
+                                );
+                            }
                         }
                     }
                     _ => {}
@@ -1132,6 +1385,14 @@ impl Session {
                         };
                         debug_assert!(self.slots[slot].is_none(), "slot maps diverged");
                         let (row, budget) = self.batcher.pack_one(&req);
+                        self.record(
+                            exec,
+                            EventKind::Admit {
+                                request: req.id,
+                                slot,
+                                prompt_tokens: req.prompt.len(),
+                            },
+                        );
                         self.metrics.batches_prefilled += 1;
                         if prefill_plan.expert != decode_plan.expert {
                             self.metrics.transitions += 1;
@@ -1183,6 +1444,7 @@ impl Session {
                     }
                 }
             }
+            let snap = self.recorder.is_enabled().then(|| exec.module_times().clone());
             let t0 = Instant::now();
             let logits = exec.decode_slots(&last, &decode_plan)?;
             let dt = t0.elapsed().as_secs_f64();
@@ -1190,6 +1452,13 @@ impl Session {
             self.dwell_seconds += dt;
             self.metrics.decode_steps += 1;
             self.metrics.observe_occupancy(decoding, b);
+            if let Some(m0) = snap {
+                let modules = exec.module_times().delta_since(&m0);
+                self.record(
+                    exec,
+                    EventKind::DecodeStep { decoding, capacity: b, secs: dt, modules },
+                );
+            }
             let next = argmax_rows(&logits);
             for (i, s) in self.slots.iter_mut().enumerate() {
                 if let Some(slot) = s {
@@ -1255,7 +1524,17 @@ impl Session {
                 }
             }
             Some(cur) if cur.0.attn == prefill.attn => {
-                exec.begin_batch(&prefill, &decode)?;
+                self.trace_reshard(exec, |e| e.begin_batch(&prefill, &decode))?;
+                if self.recorder.is_enabled() {
+                    self.record(
+                        exec,
+                        EventKind::Switch {
+                            from: Self::plans_label(&cur),
+                            to: Self::plans_label(&(prefill, decode)),
+                            mode: "forced",
+                        },
+                    );
+                }
                 self.active = Some((prefill, decode));
                 // The dwell window measured the outgoing plan; don't
                 // let it be attributed to the new one. And because the
@@ -1266,19 +1545,39 @@ impl Session {
                 self.reset_dwell();
                 self.suppress_measured = true;
             }
-            Some(_) if self.slots.iter().all(|s| s.is_none()) => {
+            Some(cur) if self.slots.iter().all(|s| s.is_none()) => {
                 // Attention-layout switch with the running set already
                 // empty: the KV sharding can change right now, so
                 // re-begin the session instead of burning an iteration
                 // on the pending/drain detour.
-                exec.begin_session(&prefill, &decode)?;
+                self.trace_reshard(exec, |e| e.begin_session(&prefill, &decode))?;
+                if self.recorder.is_enabled() {
+                    self.record(
+                        exec,
+                        EventKind::Switch {
+                            from: Self::plans_label(&cur),
+                            to: Self::plans_label(&(prefill, decode)),
+                            mode: "forced",
+                        },
+                    );
+                }
                 self.active = Some((prefill, decode));
                 self.reset_dwell();
                 self.suppress_measured = true;
             }
-            Some(_) => {
+            Some(cur) => {
                 self.pending = Some((prefill, decode));
                 self.suppress_measured = true;
+                if self.recorder.is_enabled() {
+                    self.record(
+                        exec,
+                        EventKind::Switch {
+                            from: Self::plans_label(&cur),
+                            to: Self::plans_label(&(prefill, decode)),
+                            mode: "forced",
+                        },
+                    );
+                }
             }
             None => {}
         }
@@ -1328,7 +1627,10 @@ impl Session {
     /// Close the books: wall time, executor upload/reshard deltas, plan
     /// cache persistence — the same accounting the old loop did.
     fn finish(mut self, exec: &ModelExecutor) -> Result<ServeReport> {
-        self.metrics.wall_time = self.run_start.elapsed().as_secs_f64();
+        // Set-once semantics: a second close of the books (or a
+        // zero-elapsed clock) can never zero the throughput of a
+        // completed run.
+        self.metrics.finalize_wall(self.run_start.elapsed().as_secs_f64());
         let stats = exec.stats();
         self.metrics.weight_uploads = stats.materializations - self.stats0.materializations;
         self.metrics.reshards = stats.reshards - self.stats0.reshards;
@@ -1340,11 +1642,15 @@ impl Session {
                 }
             }
         }
+        let telemetry = self.metrics.registry();
+        let trace = self.recorder.take_events();
         Ok(ServeReport {
             metrics: self.metrics,
             responses: self.responses,
             prefill_time: self.prefill_time,
             decode_time: self.decode_time,
+            telemetry,
+            trace,
         })
     }
 }
@@ -1367,7 +1673,22 @@ pub fn serve_with(
     scheduling: Scheduling,
     workload: Vec<Request>,
 ) -> Result<ServeReport> {
+    serve_with_recorder(exec, config, scheduling, workload, Recorder::disabled())
+}
+
+/// [`serve_with`] plus a caller-supplied trace recorder: every
+/// scheduler iteration's events (admissions, prefill chunks, decode
+/// steps, plan consults, switches, faults, retirements) are recorded
+/// deterministically and returned in the report's `trace` field.
+pub fn serve_with_recorder(
+    exec: &mut ModelExecutor,
+    config: &ServeConfig,
+    scheduling: Scheduling,
+    workload: Vec<Request>,
+    recorder: Recorder,
+) -> Result<ServeReport> {
     let mut session = Session::new(exec, config.clone(), scheduling);
+    session.recorder = recorder;
     for req in workload {
         session.submit(exec, req)?;
     }
@@ -1382,6 +1703,7 @@ pub struct EngineBuilder {
     config: ServeConfig,
     scheduling: Scheduling,
     fault: Option<FaultPlan>,
+    recorder: Option<Recorder>,
 }
 
 impl EngineBuilder {
@@ -1431,6 +1753,16 @@ impl EngineBuilder {
         self
     }
 
+    /// Install a deterministic trace recorder: every scheduler
+    /// iteration's events are recorded (keyed on the iteration and
+    /// executor fault-clock counters — wall time is payload only) and
+    /// returned in the shutdown report's `trace`; [`Engine::trace`]
+    /// exposes the stream mid-run.
+    pub fn recorder(mut self, recorder: Recorder) -> EngineBuilder {
+        self.recorder = Some(recorder);
+        self
+    }
+
     /// Artifact-free engine on the host grid kernels.
     pub fn build_host(self, weights: WeightStore) -> Engine<'static> {
         self.build_host_with_mode(weights, EngineMode::Parallel)
@@ -1443,7 +1775,10 @@ impl EngineBuilder {
         if let Some(plan) = self.fault {
             exec.set_fault_plan(plan);
         }
-        let session = Session::new(&exec, self.config, self.scheduling);
+        let mut session = Session::new(&exec, self.config, self.scheduling);
+        if let Some(recorder) = self.recorder {
+            session.recorder = recorder;
+        }
         Engine { exec, session }
     }
 
@@ -1465,7 +1800,10 @@ impl EngineBuilder {
             );
         }
         let exec = ModelExecutor::new(rt)?;
-        let session = Session::new(&exec, self.config, self.scheduling);
+        let mut session = Session::new(&exec, self.config, self.scheduling);
+        if let Some(recorder) = self.recorder {
+            session.recorder = recorder;
+        }
         Ok(Engine { exec, session })
     }
 }
@@ -1481,7 +1819,7 @@ pub struct Engine<'rt> {
 impl<'rt> Engine<'rt> {
     /// Start building an engine from a serving config.
     pub fn builder(config: ServeConfig) -> EngineBuilder {
-        EngineBuilder { config, scheduling: Scheduling::Streaming, fault: None }
+        EngineBuilder { config, scheduling: Scheduling::Streaming, fault: None, recorder: None }
     }
 
     /// Enqueue a request (backpressures by running scheduler iterations
@@ -1559,6 +1897,13 @@ impl<'rt> Engine<'rt> {
     /// Metrics accumulated so far (finalized by `shutdown`).
     pub fn metrics(&self) -> &Metrics {
         &self.session.metrics
+    }
+
+    /// The trace events recorded so far (empty unless the engine was
+    /// built with [`EngineBuilder::recorder`]; `shutdown`'s report
+    /// takes ownership of the full stream).
+    pub fn trace(&self) -> &[TraceEvent] {
+        self.session.recorder.events()
     }
 
     /// The adaptation loop, when this engine was built with an

@@ -1,7 +1,11 @@
 //! Serving metrics: counters + latency/TTFT/TPOT histograms with
 //! percentile queries (p50/p95/p99), slot-occupancy statistics for the
-//! streaming scheduler, and a throughput window.
+//! streaming scheduler, and a throughput window. [`Metrics::registry`]
+//! snapshots everything onto the observability
+//! [`Registry`](crate::obs::Registry) for JSON / Prometheus export
+//! (`hap serve --metrics-out`, `ServeReport::telemetry`).
 
+use crate::obs::Registry;
 use crate::util::stats;
 
 /// Accumulating metrics for a serving run.
@@ -120,6 +124,18 @@ impl Metrics {
         stats::mean(&self.tpots)
     }
 
+    /// Set the run's wall-clock duration exactly once: the first call
+    /// wins, later calls are no-ops. The streaming engine finalizes in
+    /// `Session::finish`, but callers that already hold a report (the
+    /// server shutdown path) historically re-stamped `wall_time` — the
+    /// set-once contract makes double-finalization harmless and
+    /// guarantees a completed run can never report 0.0 tok/s.
+    pub fn finalize_wall(&mut self, seconds: f64) {
+        if self.wall_time <= 0.0 {
+            self.wall_time = seconds.max(1e-9);
+        }
+    }
+
     /// Generated tokens per second over the run.
     pub fn throughput(&self) -> f64 {
         if self.wall_time <= 0.0 {
@@ -129,16 +145,58 @@ impl Metrics {
         }
     }
 
+    /// Snapshot every counter, gauge, and distribution onto the
+    /// observability registry (insertion-ordered, so both expositions
+    /// are deterministic).
+    pub fn registry(&self) -> Registry {
+        let mut r = Registry::new();
+        r.counter("requests_completed", self.requests_completed as u64);
+        r.counter("tokens_generated", self.tokens_generated as u64);
+        r.counter("batches_prefilled", self.batches_prefilled as u64);
+        r.counter("prefill_chunks", self.prefill_chunks as u64);
+        r.counter("decode_steps", self.decode_steps as u64);
+        r.counter("transitions", self.transitions as u64);
+        r.counter("replans", self.replans as u64);
+        r.counter("weight_uploads", self.weight_uploads as u64);
+        r.counter("reshards", self.reshards as u64);
+        r.gauge("reshard_time_seconds", self.reshard_time);
+        r.counter("faults_detected", self.faults_detected as u64);
+        r.counter("fault_retries", self.fault_retries as u64);
+        r.counter("replans_degraded", self.replans_degraded as u64);
+        r.counter("requests_recovered", self.requests_recovered as u64);
+        r.counter("requests_failed", self.requests_failed as u64);
+        r.gauge("slot_occupancy", self.mean_occupancy());
+        r.gauge("wall_time_seconds", self.wall_time);
+        r.gauge("throughput_tokens_per_second", self.throughput());
+        r.histogram("request_latency_seconds", &self.latencies);
+        r.histogram("ttft_seconds", &self.ttfts);
+        r.histogram("tpot_seconds", &self.tpots);
+        r
+    }
+
     pub fn summary(&self) -> String {
+        // Empty distributions render as `-`, not a misleading `0.0 ms`.
+        let ms = |samples: &[f64], q: f64| {
+            if samples.is_empty() {
+                "-".to_string()
+            } else {
+                format!("{:.1} ms", stats::percentile(samples, q) * 1e3)
+            }
+        };
+        let tpot_ms = if self.tpots.is_empty() {
+            "-".to_string()
+        } else {
+            format!("{:.2} ms", self.tpot_p(50.0) * 1e3)
+        };
         let mut s = format!(
-            "{} requests, {} tokens | latency p50 {:.1} ms p95 {:.1} ms p99 {:.1} ms | ttft p50 {:.1} ms | tpot p50 {:.2} ms | {:.1} tok/s | occupancy {:.0}% | {} prefills ({} chunks), {} decode steps, {} transitions, {} replans | {} shard uploads, {} reshards ({:.1} ms)",
+            "{} requests, {} tokens | latency p50 {} p95 {} p99 {} | ttft p50 {} | tpot p50 {} | {:.1} tok/s | occupancy {:.0}% | {} prefills ({} chunks), {} decode steps, {} transitions, {} replans | {} shard uploads, {} reshards ({:.1} ms)",
             self.requests_completed,
             self.tokens_generated,
-            self.latency_p(50.0) * 1e3,
-            self.latency_p(95.0) * 1e3,
-            self.latency_p(99.0) * 1e3,
-            self.ttft_p(50.0) * 1e3,
-            self.tpot_p(50.0) * 1e3,
+            ms(&self.latencies, 50.0),
+            ms(&self.latencies, 95.0),
+            ms(&self.latencies, 99.0),
+            ms(&self.ttfts, 50.0),
+            tpot_ms,
             self.throughput(),
             self.mean_occupancy() * 100.0,
             self.batches_prefilled,
@@ -194,6 +252,75 @@ mod tests {
         assert!(m.summary().contains(
             "faults: 1 detected, 2 retries, 1 degraded replans, 3 recovered, 0 failed"
         ));
+    }
+
+    #[test]
+    fn finalize_wall_is_set_once() {
+        // Regression: streaming shutdown used to re-stamp wall_time on
+        // a report whose session had already finalized it, so a fast
+        // second stamp (or a zero one) could zero out throughput.
+        let mut m = Metrics::new();
+        m.observe_request(0.5, 0.1, 10);
+        assert_eq!(m.throughput(), 0.0, "no wall time yet");
+        m.finalize_wall(2.0);
+        assert_eq!(m.throughput(), 5.0);
+        m.finalize_wall(1000.0); // later stamp must not win
+        assert_eq!(m.wall_time, 2.0);
+        assert_eq!(m.throughput(), 5.0);
+        // Degenerate zero-duration runs clamp instead of dividing by 0.
+        let mut z = Metrics::new();
+        z.observe_request(0.0, 0.0, 3);
+        z.finalize_wall(0.0);
+        assert!(z.wall_time > 0.0);
+        assert!(z.throughput() > 0.0, "completed run must not report 0 tok/s");
+    }
+
+    #[test]
+    fn empty_distributions_render_as_dash() {
+        let m = Metrics::new();
+        let s = m.summary();
+        assert!(s.contains("latency p50 - p95 - p99 -"), "got: {s}");
+        assert!(s.contains("ttft p50 -"));
+        assert!(s.contains("tpot p50 -"));
+        // With samples, real values come back.
+        let mut m = Metrics::new();
+        m.observe_request(0.5, 0.1, 10);
+        assert!(m.summary().contains("latency p50 500.0 ms"));
+        // A request that never decoded keeps TPOT empty while latency
+        // is populated — the dash is per-distribution.
+        let mut one = Metrics::new();
+        one.observe_request(0.5, 0.5, 1);
+        let s = one.summary();
+        assert!(s.contains("latency p50 500.0 ms"));
+        assert!(s.contains("tpot p50 -"), "got: {s}");
+    }
+
+    #[test]
+    fn registry_snapshot_exports_counters_and_histograms() {
+        use crate::obs::MetricValue;
+        let mut m = Metrics::new();
+        m.observe_request(0.4, 0.1, 10);
+        m.observe_request(0.6, 0.2, 10);
+        m.decode_steps = 18;
+        m.observe_occupancy(3, 4);
+        m.finalize_wall(2.0);
+        let r = m.registry();
+        assert_eq!(r.get("requests_completed"), Some(&MetricValue::Counter(2)));
+        assert_eq!(r.get("decode_steps"), Some(&MetricValue::Counter(18)));
+        match r.get("request_latency_seconds") {
+            Some(MetricValue::Histogram(h)) => {
+                assert_eq!(h.count, 2);
+                assert!((h.mean - 0.5).abs() < 1e-12);
+            }
+            other => panic!("latency should be a histogram, got {other:?}"),
+        }
+        match r.get("throughput_tokens_per_second") {
+            Some(MetricValue::Gauge(g)) => assert_eq!(*g, 10.0),
+            other => panic!("throughput should be a gauge, got {other:?}"),
+        }
+        // Both expositions render without panicking and agree on names.
+        assert!(r.to_prometheus().contains("hap_ttft_seconds"));
+        assert!(r.to_json().get("tpot_seconds").is_some());
     }
 
     #[test]

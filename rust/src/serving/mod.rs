@@ -35,8 +35,8 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher};
 pub use engine::{
-    serve_with, Engine, EngineBuilder, EngineError, EngineState, RequestId, RequestStatus,
-    Scheduling, StepOutcome, SubmitError, MAX_FAULT_RETRIES,
+    serve_with, serve_with_recorder, Engine, EngineBuilder, EngineError, EngineState, RequestId,
+    RequestStatus, Scheduling, StepOutcome, SubmitError, MAX_FAULT_RETRIES,
 };
 pub use metrics::Metrics;
 pub use router::{Router, RouterPolicy};

@@ -168,6 +168,14 @@ pub struct ServeReport {
     /// Measured compute split (seconds).
     pub prefill_time: f64,
     pub decode_time: f64,
+    /// Snapshot of the run's metrics as a typed registry
+    /// (counter/gauge/histogram), exportable as JSON or
+    /// Prometheus-style text (`hap serve --metrics-out`).
+    pub telemetry: crate::obs::Registry,
+    /// The deterministic event trace, when the run was driven with an
+    /// enabled recorder ([`crate::serving::serve_with_recorder`],
+    /// `EngineBuilder::recorder`); empty otherwise.
+    pub trace: Vec<crate::obs::TraceEvent>,
 }
 
 /// Deprecated entry point: serve a whole workload to completion on the

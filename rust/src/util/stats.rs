@@ -18,7 +18,14 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Linear-interpolated percentile; `q` in [0, 100].
+/// Linear-interpolated percentile; `q` in [0, 100]; 0 for empty input.
+///
+/// The empty-input zero is a deliberate, pinned contract (not a NaN or
+/// a panic): metric exports build histogram snapshots from possibly
+/// empty sample sets, and their quantile fields must stay
+/// JSON-serializable. Display layers that want to distinguish "no
+/// samples" from a true zero must check emptiness themselves (e.g.
+/// `serving::Metrics::summary` renders `-`).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -130,6 +137,21 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
         assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.02);
+    }
+
+    #[test]
+    fn empty_inputs_pin_to_zero() {
+        // Pinned contract: empty in → finite 0.0 out, never NaN/panic.
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 100.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(geomean(&[]), 0.0);
+        // And a single sample is its own percentile everywhere.
+        assert_eq!(percentile(&[7.0], 0.0), 7.0);
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
     }
 
     #[test]

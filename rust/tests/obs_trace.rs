@@ -1,0 +1,257 @@
+//! Tier-1 acceptance for the deterministic tracing & telemetry
+//! subsystem (obs):
+//!
+//! - two seeded fixed-plan streaming runs of the same workload produce
+//!   **byte-identical** canonical trace streams (wall-time payload
+//!   fields stripped) — and the same holds with a `--fault-trace`
+//!   crash in the middle, FaultDetected/Retry/DegradedReplan events
+//!   included;
+//! - an adaptive run records a `PlanConsult` audit event per admission
+//!   boundary, cold-starting with an `adopt` decision;
+//! - a `force_plans()` switch is traced as exactly one
+//!   `Switch{mode:"forced"}` event with the correct from/to plan
+//!   labels;
+//! - the shutdown report's metrics registry agrees with the raw
+//!   counters, wall time is finalized exactly once, and throughput is
+//!   non-zero on any completed run;
+//! - `summarize_lines` folds a trace back into per-module shares that
+//!   are normalized and complete.
+//!
+//! Everything runs artifact-free on the host grid engine.
+
+use hap::model::{FaultPlan, ModelExecutor, ShardPlan, WeightStore};
+use hap::obs::{canonical_stream, events_to_jsonl, EventKind, MetricValue, Recorder, TraceEvent};
+use hap::runtime::TinyModelMeta;
+use hap::serving::{serve_with_recorder, Engine, Request, Scheduling, ServeConfig};
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::json::Json;
+use hap::util::rng::Rng;
+
+fn meta() -> TinyModelMeta {
+    TinyModelMeta::host_demo()
+}
+
+fn workload(m: &TinyModelMeta, n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n as u64)
+        .map(|id| {
+            let len = rng.range(m.prefill_len / 2, m.prefill_len);
+            let prompt: Vec<i32> = (0..len).map(|_| rng.below(m.vocab) as i32).collect();
+            let gen = rng.range(2, 8);
+            Request::new(id, prompt, gen)
+        })
+        .collect()
+}
+
+fn kind_count(events: &[TraceEvent], name: &str) -> usize {
+    events.iter().filter(|e| e.kind.name() == name).count()
+}
+
+/// One fixed-plan streaming run with an enabled recorder, returning
+/// the recorded events.
+fn traced_run(seed: u64) -> Vec<TraceEvent> {
+    let m = meta();
+    let weights = WeightStore::synthetic(&m, 11);
+    let mut exec = ModelExecutor::host(weights);
+    let mut config = ServeConfig::hap_transition(4);
+    config.prefill_chunk = 8;
+    let report = serve_with_recorder(
+        &mut exec,
+        &config,
+        Scheduling::Streaming,
+        workload(&m, 8, seed),
+        Recorder::new(),
+    )
+    .unwrap();
+    assert_eq!(report.metrics.requests_completed, 8);
+    report.trace
+}
+
+#[test]
+fn fixed_plan_streaming_trace_is_deterministic() {
+    let a = traced_run(5);
+    let b = traced_run(5);
+    assert!(!a.is_empty(), "enabled recorder produced no events");
+    for kind in ["Admit", "PrefillChunk", "DecodeStep", "Retire"] {
+        assert!(kind_count(&a, kind) > 0, "trace is missing {kind} events");
+    }
+    // The envelope is ordered by the deterministic iteration clock:
+    // seq strictly increases, iter never goes backwards.
+    for w in a.windows(2) {
+        assert!(w[1].seq > w[0].seq, "seq not strictly increasing");
+        assert!(w[1].iter >= w[0].iter, "iteration clock went backwards");
+    }
+    // Byte-identical canonical streams: same events, same order, same
+    // deterministic payloads — only the wall-time fields may differ.
+    let ca = canonical_stream(&events_to_jsonl(&a)).unwrap();
+    let cb = canonical_stream(&events_to_jsonl(&b)).unwrap();
+    assert_eq!(ca, cb, "two identical seeded runs diverged after stripping wall fields");
+}
+
+#[test]
+fn fault_crash_trace_is_deterministic_and_records_recovery() {
+    let run = || {
+        let m = meta();
+        let mut engine = Engine::builder(ServeConfig::tp(4))
+            .fault_plan(FaultPlan::parse_trace("crash@6").unwrap())
+            .recorder(Recorder::new())
+            .build_host(WeightStore::synthetic(&m, 42));
+        for req in workload(&m, 8, 5) {
+            engine.submit(req).unwrap();
+        }
+        engine.run_to_completion().unwrap();
+        engine.shutdown().unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.metrics.requests_completed, 8);
+    assert!(kind_count(&a.trace, "FaultDetected") >= 1, "crash not traced");
+    assert!(kind_count(&a.trace, "DegradedReplan") >= 1, "degraded re-plan not traced");
+    // The fault-recovery path (detection, degrade, requeue, replay) is
+    // iteration-clocked, so even the crashed run's stream is
+    // reproducible byte for byte.
+    let ca = canonical_stream(&events_to_jsonl(&a.trace)).unwrap();
+    let cb = canonical_stream(&events_to_jsonl(&b.trace)).unwrap();
+    assert_eq!(ca, cb, "fault-recovery trace diverged across identical seeded runs");
+}
+
+#[test]
+fn adaptive_run_emits_plan_consult_audit_events() {
+    let m = meta();
+    let mut engine = Engine::builder(ServeConfig::adaptive(4))
+        .recorder(Recorder::new())
+        .build_host(WeightStore::synthetic(&m, 7));
+    for req in workload(&m, 8, 3) {
+        engine.submit(req).unwrap();
+    }
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.metrics.requests_completed, 8);
+    let consults: Vec<&hap::obs::PlanConsult> = report
+        .trace
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::PlanConsult(c) => Some(c),
+            _ => None,
+        })
+        .collect();
+    assert!(!consults.is_empty(), "adaptive run recorded no PlanConsult events");
+    let first = consults[0];
+    assert_eq!(first.decision, "adopt", "cold start must adopt");
+    assert!(first.active.is_none(), "cold start has no active plan");
+    assert!(!first.cached, "cold start cannot be a cache hit");
+    assert!(first.predicted_candidate_s > 0.0);
+    for c in &consults {
+        assert!(
+            matches!(c.decision.as_str(), "adopt" | "stay" | "switch"),
+            "unknown decision '{}'",
+            c.decision
+        );
+        assert!(c.key.starts_with("ctx"), "malformed traffic key '{}'", c.key);
+    }
+}
+
+#[test]
+fn forced_switch_is_traced_and_suppresses_the_next_measured_window() {
+    let m = meta();
+    let mut engine = Engine::builder(ServeConfig::tp(4))
+        .recorder(Recorder::new())
+        .build_host(WeightStore::synthetic(&m, 13));
+    for req in workload(&m, 6, 9) {
+        engine.submit(req).unwrap();
+    }
+    // Start the session under TP4, then force an expert-only switch
+    // (same attention layout → applied immediately via reshard).
+    engine.step().unwrap();
+    let forced_prefill = ShardPlan::new(AttnStrategy::new(4, 1), ExpertStrategy::new(1, 4));
+    let forced_decode = ShardPlan::tp(4);
+    engine.force_plans(forced_prefill, forced_decode).unwrap();
+    engine.run_to_completion().unwrap();
+    let report = engine.shutdown().unwrap();
+    assert_eq!(report.metrics.requests_completed, 6);
+
+    let forced: Vec<(&String, &String)> = report
+        .trace
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::Switch { from, to, mode } if *mode == "forced" => Some((from, to)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(forced.len(), 1, "exactly one forced switch expected");
+    let (from, to) = forced[0];
+    assert_eq!(from, &ShardPlan::tp(4).label(), "forced switch 'from' label wrong");
+    assert!(
+        to.contains(&forced_prefill.label()) && to.contains(&forced_decode.label()),
+        "forced switch 'to' label wrong: {to}"
+    );
+
+    // Satellite regression: a completed run can never report zero
+    // throughput — wall time is finalized exactly once at shutdown.
+    assert!(report.metrics.wall_time > 0.0);
+    assert!(report.metrics.throughput() > 0.0, "completed run reported 0 tok/s");
+}
+
+#[test]
+fn report_registry_agrees_with_raw_metrics() {
+    let trace = traced_run(5);
+    // Re-run to get the report (traced_run only returns events).
+    let m = meta();
+    let mut exec = ModelExecutor::host(WeightStore::synthetic(&m, 11));
+    let mut config = ServeConfig::hap_transition(4);
+    config.prefill_chunk = 8;
+    let report = serve_with_recorder(
+        &mut exec,
+        &config,
+        Scheduling::Streaming,
+        workload(&m, 8, 5),
+        Recorder::new(),
+    )
+    .unwrap();
+    match report.telemetry.get("requests_completed") {
+        Some(MetricValue::Counter(n)) => {
+            assert_eq!(*n, report.metrics.requests_completed as u64)
+        }
+        other => panic!("requests_completed missing from registry: {other:?}"),
+    }
+    match report.telemetry.get("decode_steps") {
+        Some(MetricValue::Counter(n)) => assert_eq!(*n, report.metrics.decode_steps as u64),
+        other => panic!("decode_steps missing from registry: {other:?}"),
+    }
+    // The registry exports cleanly in both formats.
+    let json = report.telemetry.to_json().to_string_pretty();
+    Json::parse(&json).expect("registry JSON must parse");
+    let prom = report.telemetry.to_prometheus();
+    assert!(prom.contains("hap_requests_completed"), "prometheus export missing counter");
+    // And the trace from the first identical run matches this one.
+    assert_eq!(
+        canonical_stream(&events_to_jsonl(&trace)).unwrap(),
+        canonical_stream(&events_to_jsonl(&report.trace)).unwrap(),
+    );
+}
+
+#[test]
+fn summarize_folds_a_trace_into_normalized_module_shares() {
+    let events = traced_run(5);
+    let jsonl = events_to_jsonl(&events);
+    let lines: Vec<Json> = jsonl.lines().map(|l| Json::parse(l).unwrap()).collect();
+    let summary = hap::obs::summarize_lines(&lines);
+    assert!(summary.iterations > 0);
+    for kind in ["Admit", "PrefillChunk", "DecodeStep", "Retire"] {
+        let counted = summary
+            .counts
+            .iter()
+            .find(|(k, _)| k == kind)
+            .map(|(_, c)| *c)
+            .unwrap_or(0);
+        assert_eq!(counted, kind_count(&events, kind), "summary miscounted {kind}");
+    }
+    let shares = summary.shares();
+    assert_eq!(shares.len(), 4, "four module buckets expected");
+    let total: f64 = shares.iter().map(|(_, s)| s).sum();
+    assert!(
+        (total - 1.0).abs() < 1e-9 || total == 0.0,
+        "module shares must normalize (got {total})"
+    );
+    let rendered = summary.render();
+    assert!(rendered.contains("attention"), "render missing module breakdown: {rendered}");
+}
