@@ -9,13 +9,22 @@
 //!  - per-batch weight-upload counts: the old per-batch-executor
 //!    behavior (fresh executor every batch, as `serve_workload` did
 //!    before the persistent engine) vs one long-lived executor;
-//!  - measured resharding work of a plan switch.
+//!  - measured resharding work of a plan switch;
+//!  - blocked packed kernels vs the scalar reference path, per phase
+//!    (prefill / decode steps), with bit-identical logits asserted and
+//!    the combined step speedup gated at ≥ 2× (the CI bar);
+//!  - end-to-end quantized serving (`--quant int8|int4`): tok/s,
+//!    resident weight bytes, and greedy-token agreement vs f32.
 
 use hap::benchkit::{banner, bench, write_results, Table};
-use hap::model::{EngineMode, ModelExecutor, ShardPlan, WeightStore};
+use hap::model::{EngineMode, KernelMode, ModelExecutor, ShardPlan, WeightStore};
+use hap::quant::QuantKind;
+use hap::runtime::literal::argmax_rows;
 use hap::runtime::TinyModelMeta;
+use hap::serving::{serve_on, Request, ServeConfig};
 use hap::strategy::{AttnStrategy, ExpertStrategy};
 use hap::util::json::Json;
+use std::time::Instant;
 
 /// Bench model: bigger than the test meta so per-device compute
 /// dominates thread-spawn overhead, smaller than TINY so the bench
@@ -57,6 +66,60 @@ fn run_batch(exec: &mut ModelExecutor, toks: &[i32], plan: &ShardPlan, steps: us
         sink += l.data[0];
     }
     sink
+}
+
+/// Median prefill / decode-phase wall times over `rounds` batches on a
+/// warm executor in the given kernel mode, plus the first round's full
+/// logit bit pattern (prefill + every decode step) for identity checks.
+fn phase_profile(
+    mode: KernelMode,
+    m: &TinyModelMeta,
+    toks: &[i32],
+    plan: &ShardPlan,
+    steps: usize,
+    rounds: usize,
+) -> (f64, f64, Vec<u32>) {
+    let mut exec = ModelExecutor::host(WeightStore::synthetic(m, 42));
+    exec.set_kernel_mode(mode).unwrap();
+    run_batch(&mut exec, toks, plan, steps); // warm resident shards
+    let mut prefill_ts = Vec::with_capacity(rounds);
+    let mut decode_ts = Vec::with_capacity(rounds);
+    let mut sig = Vec::new();
+    for r in 0..rounds {
+        exec.begin_batch(plan, plan).unwrap();
+        let t0 = Instant::now();
+        let logits = exec.prefill(toks, plan).unwrap();
+        prefill_ts.push(t0.elapsed().as_secs_f64());
+        if r == 0 {
+            sig.extend(logits.data.iter().map(|v| v.to_bits()));
+        }
+        let mut last: Vec<i32> = argmax_rows(&logits).iter().map(|&t| t as i32).collect();
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            let l = exec.decode_step(&last, plan).unwrap();
+            last = argmax_rows(&l).iter().map(|&t| t as i32).collect();
+            if r == 0 {
+                sig.extend(l.data.iter().map(|v| v.to_bits()));
+            }
+        }
+        decode_ts.push(t0.elapsed().as_secs_f64());
+    }
+    prefill_ts.sort_by(f64::total_cmp);
+    decode_ts.sort_by(f64::total_cmp);
+    (prefill_ts[rounds / 2], decode_ts[rounds / 2], sig)
+}
+
+/// Gang workload for the quantized-serving comparison: two full
+/// batches of prefill-length prompts.
+fn quant_workload(m: &TinyModelMeta) -> Vec<Request> {
+    (0..2 * m.batch as u64)
+        .map(|i| {
+            let prompt: Vec<i32> = (0..m.prefill_len)
+                .map(|t| ((i as usize * 31 + t * 13 + 5) % m.vocab) as i32)
+                .collect();
+            Request::new(i, prompt, 16)
+        })
+        .collect()
 }
 
 fn main() -> anyhow::Result<()> {
@@ -144,6 +207,77 @@ fn main() -> anyhow::Result<()> {
         (after.reshard_seconds - before.reshard_seconds) * 1e3
     );
 
+    // --- Blocked packed kernels vs the scalar reference path, per
+    // phase, on a warm TP4 executor. Bit-identity first: the packed
+    // layout must not change a single logit bit.
+    let steps = 8usize;
+    let (blk_p, blk_d, blk_sig) = phase_profile(KernelMode::Blocked, &m, &toks, &tp, steps, 5);
+    let (ref_p, ref_d, ref_sig) = phase_profile(KernelMode::Reference, &m, &toks, &tp, steps, 5);
+    assert_eq!(blk_sig, ref_sig, "blocked kernels changed engine logits");
+    let prefill_speedup = ref_p / blk_p;
+    let decode_speedup = ref_d / blk_d;
+    let step_speedup = (ref_p + ref_d) / (blk_p + blk_d);
+    println!(
+        "blocked vs reference kernels (bit-identical logits): prefill {prefill_speedup:.2}x, \
+         decode ({steps} steps) {decode_speedup:.2}x, combined {step_speedup:.2}x"
+    );
+    assert!(
+        step_speedup >= 2.0,
+        "blocked kernels must be >= 2x the scalar reference per step, got {step_speedup:.2}x"
+    );
+
+    // --- Quantized serving end to end: same workload under f32, int8,
+    // int4 packed weights on the host backend.
+    let mut quant_rows = Vec::new();
+    let mut f32_tokens: Vec<Vec<i32>> = Vec::new();
+    let mut f32_bytes = 0usize;
+    let mut qt = Table::new(&["weights", "tok/s", "resident MiB", "agreement vs f32"]);
+    for (label, quant) in
+        [("f32", None), ("int8", Some(QuantKind::Int8)), ("int4", Some(QuantKind::Int4))]
+    {
+        let mut cfg = ServeConfig::tp(4);
+        cfg.quant = quant;
+        let mut exec = ModelExecutor::host(WeightStore::synthetic(&m, 42));
+        let t0 = Instant::now();
+        let report = serve_on(&mut exec, &cfg, quant_workload(&m))?;
+        let secs = t0.elapsed().as_secs_f64();
+        let mut responses = report.responses;
+        responses.sort_by_key(|r| r.id);
+        let generated: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        assert!(generated > 0, "{label} serving generated nothing");
+        let tok_s = generated as f64 / secs;
+        let bytes = exec.resident_weight_bytes();
+        let agreement = if f32_tokens.is_empty() {
+            f32_tokens = responses.iter().map(|r| r.tokens.clone()).collect();
+            f32_bytes = bytes;
+            1.0
+        } else {
+            assert!(bytes < f32_bytes, "{label} shards should be smaller than f32");
+            let (mut same, mut total) = (0usize, 0usize);
+            for (a, b) in f32_tokens.iter().zip(&responses) {
+                total += a.len().max(b.tokens.len());
+                same += a.iter().zip(&b.tokens).filter(|(x, y)| x == y).count();
+            }
+            same as f64 / total.max(1) as f64
+        };
+        qt.row(&[
+            label.into(),
+            format!("{tok_s:.0}"),
+            format!("{:.2}", bytes as f64 / (1 << 20) as f64),
+            format!("{agreement:.3}"),
+        ]);
+        quant_rows.push((
+            label,
+            Json::obj(vec![
+                ("tok_s", tok_s.into()),
+                ("generated_tokens", generated.into()),
+                ("weight_bytes", bytes.into()),
+                ("greedy_agreement_vs_f32", agreement.into()),
+            ]),
+        ));
+    }
+    qt.print();
+
     let summary = Json::obj(vec![
         ("bench", "engine".into()),
         ("profile", "release".into()),
@@ -178,6 +312,21 @@ fn main() -> anyhow::Result<()> {
                 ),
             ]),
         ),
+        (
+            "kernels",
+            Json::obj(vec![
+                ("blocked_prefill_s", blk_p.into()),
+                ("blocked_decode_s", blk_d.into()),
+                ("reference_prefill_s", ref_p.into()),
+                ("reference_decode_s", ref_d.into()),
+                ("prefill_speedup", prefill_speedup.into()),
+                ("decode_speedup", decode_speedup.into()),
+                ("step_speedup", step_speedup.into()),
+                ("decode_steps", steps.into()),
+                ("bit_identical", true.into()),
+            ]),
+        ),
+        ("quant_serving", Json::obj(quant_rows)),
     ]);
     write_results("engine", &summary);
     let root_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_engine.json");

@@ -178,6 +178,38 @@ fn main() -> anyhow::Result<()> {
         }),
     );
 
+    // --- Forest traversal order at planner batch sizes: tree-major
+    // (finish each tree over all rows) vs levelized BFS (advance every
+    // in-flight row one level per pass). Same adds in the same order,
+    // so the winner is chosen on time alone, bit-identity asserted.
+    let tm_pred = forest.predict_batch_tree_major(&probe);
+    let lv_pred = forest.predict_batch_levelized(&probe);
+    assert_eq!(
+        tm_pred.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        lv_pred.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "levelized forest traversal diverged from tree-major"
+    );
+    let forest_tm = record(
+        "forest predict_batch x1k (tree-major)",
+        bench("forest-tree-major", 2, 0.2, || {
+            let out = forest.predict_batch_tree_major(&probe);
+            std::hint::black_box(out.len());
+        }),
+    );
+    let forest_lv = record(
+        "forest predict_batch x1k (levelized BFS)",
+        bench("forest-levelized", 2, 0.2, || {
+            let out = forest.predict_batch_levelized(&probe);
+            std::hint::black_box(out.len());
+        }),
+    );
+    let forest_winner =
+        if forest_lv.median <= forest_tm.median { "levelized" } else { "tree-major" };
+    println!(
+        "forest traversal: {forest_winner} wins ({:.2}x tree-major/levelized)",
+        forest_tm.median / forest_lv.median
+    );
+
     // --- Engine: full static run (32-layer model, prefill + decode).
     let engine = Engine::new(&model, &node);
     record(
@@ -297,6 +329,16 @@ fn main() -> anyhow::Result<()> {
                 ("before_median_s", ilp_before.median.into()),
                 ("after_median_s", ilp_after.median.into()),
                 ("speedup", (ilp_before.median / ilp_after.median).into()),
+            ]),
+        ),
+        (
+            "forest_traversal",
+            Json::obj(vec![
+                ("tree_major_median_s", forest_tm.median.into()),
+                ("levelized_median_s", forest_lv.median.into()),
+                ("speedup_tree_major_over_levelized", (forest_tm.median / forest_lv.median).into()),
+                ("winner", forest_winner.into()),
+                ("probe_rows", probe.len().into()),
             ]),
         ),
         ("rows", Json::Arr(json)),

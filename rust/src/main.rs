@@ -259,6 +259,11 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "streaming engine: max prompt tokens prefilled per joiner per iteration (0 = unchunked)",
     );
     spec.flag(
+        "quant",
+        "",
+        "weight quantization for the packed host kernels: int8 | int4 (host backend)",
+    );
+    spec.flag(
         "fault-trace",
         "",
         "inject deterministic device faults: comma-separated KIND@ITER[@dDEV], \
@@ -317,6 +322,13 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         if config.prefill_chunk > 0 && scheduling != hap::serving::Scheduling::Streaming {
             eprintln!("--prefill-chunk only applies to --engine streaming (ignored)");
         }
+        config.quant = match p.get("quant") {
+            "" => None,
+            q => Some(
+                hap::quant::QuantKind::parse(q)
+                    .ok_or_else(|| anyhow::anyhow!("unknown quant '{q}' (int8 | int4)"))?,
+            ),
+        };
         Ok(config)
     };
     let nreq = usize_flag(&p, "requests")?;
@@ -353,6 +365,11 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                 anyhow::bail!(
                     "--engine streaming requires --backend host: the fixed-shape PJRT \
                      artifacts pin one scalar decode position per batch"
+                );
+            }
+            if !p.get("quant").is_empty() {
+                anyhow::bail!(
+                    "--quant requires --backend host: the PJRT artifacts consume f32 weights"
                 );
             }
             let dir = Path::new(p.get("artifacts"));

@@ -46,9 +46,10 @@
 use crate::model::collectives;
 use crate::model::fault::{fault_message, FaultPlan};
 use crate::model::grid::{DeviceGrid, ShardPlan};
-use crate::model::kernels;
+use crate::model::kernels::{self, AttnWeights, ExpertWeights, HeadWeights, ShardWeights};
 use crate::model::weights::ShardSpec;
 use crate::obs::ModuleTimes;
+use crate::quant::QuantKind;
 use crate::runtime::literal::{self, HostTensor};
 use crate::runtime::{PjrtRuntime, TinyModelMeta};
 use crate::strategy::AttnStrategy;
@@ -66,6 +67,17 @@ pub enum EngineMode {
     Sequential,
 }
 
+/// Which host kernel family the executor dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Packed-tile blocked kernels (the serving hot path; default).
+    /// Bit-identical to `Reference` by the accumulation-order invariant.
+    Blocked,
+    /// The retained scalar kernels in [`kernels::reference`] — the
+    /// equivalence baseline and the bench's "scalar" side.
+    Reference,
+}
+
 #[derive(Clone, Copy)]
 enum Backend<'rt> {
     Pjrt(&'rt PjrtRuntime),
@@ -80,13 +92,184 @@ struct LayerCache {
     v: HostTensor,
 }
 
+/// A device-resident weight shard in whichever form the backend and
+/// [`KernelMode`] need: packed (and optionally quantized) tiles for the
+/// blocked host path, raw slice tensors for the reference host path, or
+/// a marker for PJRT (where the real bytes live in `DeviceState::bufs`).
+/// The dispatch methods below are the single seam between the execution
+/// engine and the two host kernel families.
+enum ResidentShard {
+    Packed(ShardWeights),
+    Raw(Vec<HostTensor>),
+    Uploaded,
+}
+
+impl ResidentShard {
+    fn attn_packed(&self) -> Result<&AttnWeights> {
+        match self {
+            ResidentShard::Packed(ShardWeights::Attn(w)) => Ok(w),
+            _ => Err(anyhow!("resident shard is not a packed attention shard")),
+        }
+    }
+
+    fn raw(&self) -> Result<&[HostTensor]> {
+        match self {
+            ResidentShard::Raw(t) => Ok(t),
+            _ => Err(anyhow!("resident shard holds no host tensors")),
+        }
+    }
+
+    fn attn_prefill(
+        &self,
+        x: &HostTensor,
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        match self {
+            ResidentShard::Packed(_) => {
+                kernels::attention_prefill(x, self.attn_packed()?, q_heads, kv_heads, hd)
+            }
+            _ => kernels::reference::attention_prefill(x, self.raw()?, q_heads, kv_heads, hd),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn attn_prefill_ranged(
+        &self,
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        row: usize,
+        start: usize,
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        match self {
+            ResidentShard::Packed(_) => kernels::attention_prefill_ranged(
+                x,
+                k_cache,
+                v_cache,
+                row,
+                start,
+                self.attn_packed()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+            _ => kernels::reference::attention_prefill_ranged(
+                x,
+                k_cache,
+                v_cache,
+                row,
+                start,
+                self.raw()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn attn_decode(
+        &self,
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        pos: usize,
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        match self {
+            ResidentShard::Packed(_) => kernels::attention_decode(
+                x,
+                k_cache,
+                v_cache,
+                pos,
+                self.attn_packed()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+            _ => kernels::reference::attention_decode(
+                x,
+                k_cache,
+                v_cache,
+                pos,
+                self.raw()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn attn_decode_slots(
+        &self,
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        pos: &[usize],
+        active: &[bool],
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        match self {
+            ResidentShard::Packed(_) => kernels::attention_decode_slots(
+                x,
+                k_cache,
+                v_cache,
+                pos,
+                active,
+                self.attn_packed()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+            _ => kernels::reference::attention_decode_slots(
+                x,
+                k_cache,
+                v_cache,
+                pos,
+                active,
+                self.raw()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+        }
+    }
+
+    fn expert_module(&self, x: &HostTensor, ep: usize, top_k: usize) -> Result<HostTensor> {
+        match self {
+            ResidentShard::Packed(ShardWeights::Expert(w)) => kernels::expert_module(x, w, top_k),
+            ResidentShard::Packed(_) => Err(anyhow!("resident shard is not an expert shard")),
+            _ => kernels::reference::expert_module(x, self.raw()?, ep, top_k),
+        }
+    }
+
+    /// Host-resident weight bytes (PJRT uploads hold no host copy).
+    fn weight_bytes(&self) -> usize {
+        match self {
+            ResidentShard::Packed(w) => w.weight_bytes(),
+            ResidentShard::Raw(t) => t.iter().map(|t| t.data.len() * 4).sum(),
+            ResidentShard::Uploaded => 0,
+        }
+    }
+}
+
 /// One logical device: its resident weight shards (and, on the PJRT
 /// backend, the uploaded buffers) plus its KV shards.
 struct DeviceState {
     device: usize,
-    /// (family, layer) → shard tensors, e.g. family `attn_tp2` or
+    /// (family, layer) → resident shard, e.g. family `attn_tp2` or
     /// `expert_ep2tp2`.
-    shards: HashMap<(String, usize), Vec<HostTensor>>,
+    shards: HashMap<(String, usize), ResidentShard>,
     /// PJRT-uploaded buffers parallel to `shards`. The source literal
     /// is retained with its buffer: `BufferFromHostLiteral` is
     /// asynchronous, so the literal must outlive the transfer.
@@ -133,6 +316,12 @@ pub struct ExecStats {
 pub struct ModelExecutor<'rt> {
     backend: Backend<'rt>,
     mode: EngineMode,
+    /// Host kernel family ([`KernelMode::Blocked`] by default).
+    kernel_mode: KernelMode,
+    /// Weight quantization for packed host shards (`None` = f32).
+    quant: Option<QuantKind>,
+    /// Lazily packed head weights (blocked host path; always f32).
+    packed_head: Option<HeadWeights>,
     pub weights: super::WeightStore,
     devices: Vec<DeviceState>,
     /// Embedding/head buffers (PJRT; uploaded once, literal retained).
@@ -172,6 +361,9 @@ impl<'rt> ModelExecutor<'rt> {
         Ok(ModelExecutor {
             backend: Backend::Pjrt(rt),
             mode: EngineMode::Sequential,
+            kernel_mode: KernelMode::Blocked,
+            quant: None,
+            packed_head: None,
             weights,
             devices: Vec::new(),
             embed_buf: None,
@@ -200,6 +392,9 @@ impl<'rt> ModelExecutor<'rt> {
         ModelExecutor {
             backend: Backend::Host,
             mode,
+            kernel_mode: KernelMode::Blocked,
+            quant: None,
+            packed_head: None,
             weights,
             devices: Vec::new(),
             embed_buf: None,
@@ -222,6 +417,75 @@ impl<'rt> ModelExecutor<'rt> {
 
     pub fn stats(&self) -> ExecStats {
         self.stats
+    }
+
+    /// Select weight quantization for the packed host shards. Changing
+    /// the setting evicts every resident shard (the next batch
+    /// re-materializes in the new representation) — that reshard is
+    /// measured like any plan switch. Host + blocked kernels only: the
+    /// PJRT artifacts and the scalar reference path consume f32 shard
+    /// tensors.
+    pub fn set_quant(&mut self, quant: Option<QuantKind>) -> Result<()> {
+        if quant.is_some() && matches!(self.backend, Backend::Pjrt(_)) {
+            anyhow::bail!("quantized serving runs on the host backend (PJRT artifacts are f32)");
+        }
+        if quant.is_some() && self.kernel_mode == KernelMode::Reference {
+            anyhow::bail!("quantized serving needs the blocked kernels (KernelMode::Blocked)");
+        }
+        if quant != self.quant {
+            self.quant = quant;
+            self.evict_all_shards();
+        }
+        Ok(())
+    }
+
+    /// The active weight quantization (`None` = f32).
+    pub fn quant(&self) -> Option<QuantKind> {
+        self.quant
+    }
+
+    /// Select the host kernel family. Changing it evicts every resident
+    /// shard so the next batch re-materializes in the matching
+    /// representation (packed tiles vs raw slice tensors).
+    pub fn set_kernel_mode(&mut self, mode: KernelMode) -> Result<()> {
+        if mode == KernelMode::Reference && self.quant.is_some() {
+            anyhow::bail!("the scalar reference kernels consume f32 shards; unset quant first");
+        }
+        if mode != self.kernel_mode {
+            self.kernel_mode = mode;
+            self.packed_head = None;
+            self.evict_all_shards();
+        }
+        Ok(())
+    }
+
+    /// The active host kernel family.
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.kernel_mode
+    }
+
+    /// Host-resident weight bytes across all devices — the memory-
+    /// footprint side of the quantization trade (PJRT uploads hold no
+    /// host copy and report 0).
+    pub fn resident_weight_bytes(&self) -> usize {
+        self.devices
+            .iter()
+            .flat_map(|st| st.shards.values())
+            .map(ResidentShard::weight_bytes)
+            .sum()
+    }
+
+    fn evict_all_shards(&mut self) {
+        let dropped: usize = self.devices.iter().map(|d| d.shards.len()).sum();
+        if dropped > 0 {
+            self.stats.evictions += dropped;
+            self.stats.reshards += 1;
+        }
+        for st in &mut self.devices {
+            st.shards.clear();
+            st.bufs.clear();
+        }
+        self.batch_plans = None;
     }
 
     /// Cumulative per-module / per-device time attribution. Callers
@@ -375,6 +639,8 @@ impl<'rt> ModelExecutor<'rt> {
         let attn_fam = attn_family(&plan.attn);
         let exp_fam = expert_family(plan);
         let backend = self.backend;
+        let kmode = self.kernel_mode;
+        let quant = self.quant;
         let weights = &self.weights;
         let stats = &mut self.stats;
         for st in &mut self.devices {
@@ -418,7 +684,19 @@ impl<'rt> ModelExecutor<'rt> {
                             .collect::<Result<Vec<_>>>()?;
                         st.bufs.insert(key.clone(), bufs);
                     }
-                    st.shards.insert(key, tensors);
+                    let resident = match (backend, kmode) {
+                        (Backend::Pjrt(_), _) => ResidentShard::Uploaded,
+                        (Backend::Host, KernelMode::Reference) => ResidentShard::Raw(tensors),
+                        (Backend::Host, KernelMode::Blocked) => ResidentShard::Packed(match spec {
+                            ShardSpec::Attn { .. } => {
+                                ShardWeights::Attn(AttnWeights::from_shard(&tensors, quant)?)
+                            }
+                            ShardSpec::Expert { ep, .. } => ShardWeights::Expert(
+                                ExpertWeights::from_shard(&tensors, ep, quant)?,
+                            ),
+                        }),
+                    };
+                    st.shards.insert(key, resident);
                 }
             }
         }
@@ -694,13 +972,12 @@ impl<'rt> ModelExecutor<'rt> {
                         let cache = st.kv[l]
                             .as_mut()
                             .ok_or_else(|| anyhow!("session KV missing"))?;
-                        let out = kernels::attention_prefill_ranged(
+                        let out = w.attn_prefill_ranged(
                             xr,
                             &mut cache.k,
                             &mut cache.v,
                             r,
                             start,
-                            w,
                             q_l,
                             kv_l,
                             hd,
@@ -803,13 +1080,12 @@ impl<'rt> ModelExecutor<'rt> {
                             .shards
                             .get(&(fam.clone(), l))
                             .ok_or_else(|| anyhow!("attn shard not resident"))?;
-                        kernels::attention_decode_slots(
+                        w.attn_decode_slots(
                             &xg,
                             &mut cache.k,
                             &mut cache.v,
                             &pos_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
                             &live_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
-                            w,
                             q_l,
                             kv_l,
                             hd,
@@ -890,7 +1166,7 @@ impl<'rt> ModelExecutor<'rt> {
                         .shards
                         .get(&(fam.clone(), l))
                         .ok_or_else(|| anyhow!("attn shard not resident"))?;
-                    let (out, k, v) = kernels::attention_prefill(&xg, w, q_l, kv_l, m.head_dim)?;
+                    let (out, k, v) = w.attn_prefill(&xg, q_l, kv_l, m.head_dim)?;
                     st.kv[l] = Some(LayerCache {
                         k: pad_cache(&k, max_len),
                         v: pad_cache(&v, max_len),
@@ -970,16 +1246,7 @@ impl<'rt> ModelExecutor<'rt> {
                         .shards
                         .get(&(fam.clone(), l))
                         .ok_or_else(|| anyhow!("attn shard not resident"))?;
-                    kernels::attention_decode(
-                        &xg,
-                        &mut cache.k,
-                        &mut cache.v,
-                        pos,
-                        w,
-                        q_l,
-                        kv_l,
-                        m.head_dim,
-                    )
+                    w.attn_decode(&xg, &mut cache.k, &mut cache.v, pos, q_l, kv_l, m.head_dim)
                 })?
             }
             Backend::Pjrt(rt) => {
@@ -1056,7 +1323,7 @@ impl<'rt> ModelExecutor<'rt> {
                         .shards
                         .get(&(fam.clone(), l))
                         .ok_or_else(|| anyhow!("expert shard not resident"))?;
-                    kernels::expert_module(&x2, w, ep, top_k)
+                    w.expert_module(&x2, ep, top_k)
                 })?
             }
             Backend::Pjrt(rt) => {
@@ -1114,11 +1381,22 @@ impl<'rt> ModelExecutor<'rt> {
         }
         let last = HostTensor::new(vec![b, h], last);
         match self.backend {
-            Backend::Host => Ok(kernels::head(
-                &last,
-                self.weights.get("ln_f")?,
-                self.weights.get("unembed")?,
-            )),
+            Backend::Host => match self.kernel_mode {
+                KernelMode::Blocked => {
+                    if self.packed_head.is_none() {
+                        self.packed_head = Some(HeadWeights::new(
+                            self.weights.get("ln_f")?,
+                            self.weights.get("unembed")?,
+                        ));
+                    }
+                    Ok(kernels::head(&last, self.packed_head.as_ref().unwrap()))
+                }
+                KernelMode::Reference => Ok(kernels::reference::head(
+                    &last,
+                    self.weights.get("ln_f")?,
+                    self.weights.get("unembed")?,
+                )),
+            },
             Backend::Pjrt(rt) => {
                 require_artifact(rt, "head")?;
                 if self.head_bufs.is_none() {
@@ -1320,6 +1598,53 @@ mod tests {
         let hy = ShardPlan::new(AttnStrategy::new(4, 1), ExpertStrategy::new(2, 2));
         assert_eq!(expert_family(&hy), "expert_ep2tp2");
         assert_eq!(expert_family(&ShardPlan::tp(4)), "expert_ep1tp4");
+    }
+
+    #[test]
+    fn quant_guards_and_eviction() {
+        let m = crate::runtime::TinyModelMeta::host_demo();
+        let w = crate::model::WeightStore::synthetic(&m, 1);
+        let mut exec = ModelExecutor::host_with_mode(w, EngineMode::Sequential);
+        let plan = ShardPlan::tp(4);
+        exec.begin_batch(&plan, &plan).unwrap();
+        let f32_bytes = exec.resident_weight_bytes();
+        assert!(f32_bytes > 0);
+        exec.set_quant(Some(QuantKind::Int8)).unwrap();
+        assert_eq!(exec.resident_weight_bytes(), 0, "quant change evicts resident shards");
+        exec.begin_batch(&plan, &plan).unwrap();
+        let q_bytes = exec.resident_weight_bytes();
+        assert!(q_bytes < f32_bytes, "int8 shards must shrink: {q_bytes} vs {f32_bytes}");
+        assert!(
+            exec.set_kernel_mode(KernelMode::Reference).is_err(),
+            "reference kernels reject quantized shards"
+        );
+        exec.set_quant(None).unwrap();
+        exec.set_kernel_mode(KernelMode::Reference).unwrap();
+        assert!(exec.set_quant(Some(QuantKind::Int4)).is_err());
+    }
+
+    #[test]
+    fn reference_mode_matches_blocked_tokens() {
+        let m = crate::runtime::TinyModelMeta::host_demo();
+        let plan = ShardPlan::tp(4);
+        let toks: Vec<i32> = (0..(m.batch * m.prefill_len) as i32)
+            .map(|i| i % m.vocab as i32)
+            .collect();
+        let run = |mode: KernelMode| -> Vec<f32> {
+            let w = crate::model::WeightStore::synthetic(&m, 1);
+            let mut exec = ModelExecutor::host_with_mode(w, EngineMode::Sequential);
+            exec.set_kernel_mode(mode).unwrap();
+            let mut out = exec.prefill(&toks, &plan).unwrap().data;
+            out.extend(exec.decode_step(&vec![1; m.batch], &plan).unwrap().data);
+            out
+        };
+        let blocked = run(KernelMode::Blocked);
+        let reference = run(KernelMode::Reference);
+        let eq = blocked
+            .iter()
+            .zip(&reference)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(eq, "blocked and reference executors must emit bit-identical logits");
     }
 
     #[test]

@@ -9,6 +9,53 @@
 //! per-device compute, collectives, KV caches, plan transitions — is
 //! testable without PJRT artifacts.
 //!
+//! # Two implementations, one set of bits
+//!
+//! The module carries two complete kernel paths:
+//!
+//! - [`reference`] — the original scalar triple-loop kernels over raw
+//!   shard tensor slices. Slow, obviously correct, and retained as the
+//!   oracle for every equivalence test.
+//! - The **blocked path** (top-level functions) — the serving hot path.
+//!   Every matmul right-hand side is packed once per shard into
+//!   [`PackedRhs`]: column panels of [`NB`] output columns, panel-major
+//!   `[panel][k][NB]`, so the inner loop is an in-order fused
+//!   multiply-accumulate over `NB` contiguous lanes that the
+//!   autovectorizer (or the explicit `simd` feature, below) chews
+//!   through. Typed shard bundles ([`AttnWeights`], [`ExpertWeights`],
+//!   [`HeadWeights`]) cache the packing for the lifetime of a resident
+//!   shard.
+//!
+//! **Accumulation-order invariant.** The scalar matmul computes each
+//! output element with a single accumulator, adding `a[r][i] · b[i][c]`
+//! for `i = 0, 1, …, k-1` in order. The blocked core keeps exactly one
+//! accumulator per output element (a register-tile lane) and fills it
+//! in the same increasing-`i` order — blocking only re-tiles *which*
+//! elements are in flight, never the per-element order — so every
+//! output is bit-identical IEEE f32 to the scalar path. The explicit
+//! SIMD variant vectorizes across output columns (one lane = one
+//! accumulator) with separate multiply and add (no FMA contraction),
+//! which preserves the same per-lane rounding. The sparse expert-FFN
+//! gather is bit-exact for the same reason: the dense reference only
+//! accumulates rows whose gate is non-zero, and matmul rows are
+//! independent, so skipping gate-zero rows changes no observed value.
+//! Everything *around* the matmuls — gate softmax, attention
+//! score/softmax/context loops — is shared code between both paths.
+//!
+//! # Quantized serving
+//!
+//! [`PackedRhs`] optionally stores int8/int4 per-(row, group) affine
+//! codes ([`PackedQuant`], group width [`QUANT_GROUP`]) instead of f32
+//! panels, dequantizing on the fly inside the packed matmul: one
+//! `(scale, bias)` pair lookup per `(i, panel)` since the group width
+//! is a multiple of the panel width. The fused kernel is bit-identical
+//! to running the reference matmul over
+//! [`PackedQuant::dequantized`] weights — asserted in the
+//! `kernel_equivalence` suite — which is what makes end-to-end
+//! quantized serving (`hap serve --quant int8|int4`) testable: greedy
+//! tokens agree with f32 exactly whenever the dequantized weights
+//! round-trip exactly.
+//!
 //! Shard tensor layouts (the `WeightStore::shard` contract):
 //! - attention: `[ln, wq, wk, wv, wo]`;
 //! - experts, pure TP (`ep == 1`): `[ln, router, wg, wu, wd]`;
@@ -16,10 +63,24 @@
 //!   where `sel: [E_local, E]` selects the block's experts from the
 //!   full gate matrix.
 
+use crate::quant::{self, QuantKind};
 use crate::runtime::literal::HostTensor;
 use crate::Result;
 
 const RMS_EPS: f32 = 1e-5;
+
+/// Packed-panel width: output columns per tile. The SIMD lane kernel
+/// assumes a multiple of 4; [`QUANT_GROUP`] must be a multiple of this.
+pub const NB: usize = 16;
+
+/// Register-tile height: LHS rows accumulated per panel pass.
+const MR: usize = 4;
+
+/// Quantization group width (columns per `(scale, bias)` pair). A
+/// multiple of [`NB`], so a packed panel never straddles a group
+/// boundary and the fused matmul does one affine lookup per
+/// `(row, panel)`.
+pub const QUANT_GROUP: usize = 64;
 
 /// RMS norm over the last axis: `x · rsqrt(mean(x²) + ε) · scale`.
 pub fn rms_norm(x: &HostTensor, scale: &HostTensor) -> HostTensor {
@@ -37,24 +98,6 @@ pub fn rms_norm(x: &HostTensor, scale: &HostTensor) -> HostTensor {
         }
     }
     HostTensor::new(x.shape.clone(), out)
-}
-
-/// Row-major matmul: `a [rows, k] @ b [k, cols] → [rows, cols]`.
-pub fn matmul(a: &[f32], rows: usize, k: usize, b: &[f32], cols: usize) -> Vec<f32> {
-    assert_eq!(a.len(), rows * k, "matmul lhs size");
-    assert_eq!(b.len(), k * cols, "matmul rhs size");
-    let mut out = vec![0f32; rows * cols];
-    for r in 0..rows {
-        let ar = &a[r * k..(r + 1) * k];
-        let or = &mut out[r * cols..(r + 1) * cols];
-        for (i, &av) in ar.iter().enumerate() {
-            let br = &b[i * cols..(i + 1) * cols];
-            for c in 0..cols {
-                or[c] += av * br[c];
-            }
-        }
-    }
-    out
 }
 
 fn silu(x: f32) -> f32 {
@@ -78,30 +121,22 @@ pub fn embed_lookup(tokens: &[i32], table: &HostTensor, b: usize, s: usize) -> R
     Ok(HostTensor::new(vec![b, s, h], out))
 }
 
-/// Final norm + unembed on the last-position residual:
-/// `x_last [B, H] → logits [B, V]`.
-pub fn head(x_last: &HostTensor, ln_f: &HostTensor, unembed: &HostTensor) -> HostTensor {
-    let (b, h) = (x_last.shape[0], x_last.shape[1]);
-    let v = unembed.shape[1];
-    let xn = rms_norm(x_last, ln_f);
-    HostTensor::new(vec![b, v], matmul(&xn.data, b, h, &unembed.data, v))
-}
+// ---------------------------------------------------------------------------
+// Shared float-order-sensitive cores. Both kernel paths call these, so
+// their bit-equivalence reduces to the matmul equivalence proved above.
+// ---------------------------------------------------------------------------
 
-/// Mixtral top-k gate: dense routing weights `[T, E]`, softmax over the
-/// selected experts' logits, zero elsewhere, renormalized over the set.
-pub fn topk_gate(xn: &HostTensor, router: &HostTensor, top_k: usize) -> HostTensor {
-    let (t, h) = (xn.shape[0], xn.shape[1]);
-    let e = router.shape[1];
+/// Top-k gate rows from precomputed router logits `[T, E]`: softmax over
+/// the selected experts' logits (ties at the threshold all included,
+/// matching `ref.topk_gate`), zero elsewhere, renormalized over the set.
+fn gate_rows(logits: &[f32], t: usize, e: usize, top_k: usize) -> Vec<f32> {
     assert!(top_k >= 1 && top_k <= e, "top_k {top_k} out of range for {e} experts");
-    let logits = matmul(&xn.data, t, h, &router.data, e);
     let mut gates = vec![0f32; t * e];
     for r in 0..t {
         let lr = &logits[r * e..(r + 1) * e];
         let mut sorted = lr.to_vec();
         sorted.sort_by(|a, b| b.partial_cmp(a).expect("router logits are finite"));
         let thresh = sorted[top_k - 1];
-        // Softmax over the masked set (ties at the threshold are all
-        // included, matching ref.topk_gate).
         let mut mx = f32::NEG_INFINITY;
         for &v in lr {
             if v >= thresh && v > mx {
@@ -122,99 +157,39 @@ pub fn topk_gate(xn: &HostTensor, router: &HostTensor, top_k: usize) -> HostTens
             *g /= denom;
         }
     }
-    HostTensor::new(vec![t, e], gates)
+    gates
 }
 
-/// SwiGLU routed FFN over a block of experts: for each local expert
-/// `e`, `y_e = (silu(xn·Wg_e) ⊙ (xn·Wu_e))·Wd_e`, accumulated as
-/// `Σ_e gates_local[:, e] · y_e`.
-fn expert_ffn(
-    xn: &HostTensor,
-    gates_local: &[f32],
-    wg: &HostTensor,
-    wu: &HostTensor,
-    wd: &HostTensor,
-) -> HostTensor {
-    let (t, h) = (xn.shape[0], xn.shape[1]);
-    let e_l = wg.shape[0];
-    let i_l = wg.shape[2];
-    assert_eq!(gates_local.len(), t * e_l, "gate table size");
-    let mut out = vec![0f32; t * h];
-    for e in 0..e_l {
-        let wg_e = &wg.data[e * h * i_l..(e + 1) * h * i_l];
-        let wu_e = &wu.data[e * h * i_l..(e + 1) * h * i_l];
-        let wd_e = &wd.data[e * i_l * h..(e + 1) * i_l * h];
-        let g = matmul(&xn.data, t, h, wg_e, i_l);
-        let u = matmul(&xn.data, t, h, wu_e, i_l);
-        let mut act = vec![0f32; t * i_l];
-        for j in 0..t * i_l {
-            act[j] = silu(g[j]) * u[j];
-        }
-        let y = matmul(&act, t, i_l, wd_e, h);
-        for r in 0..t {
-            let gate = gates_local[r * e_l + e];
-            if gate != 0.0 {
-                for c in 0..h {
-                    out[r * h + c] += gate * y[r * h + c];
-                }
+/// `gates_local = gates @ selᵀ`: pick an EP block's expert columns from
+/// the full `[T, E]` gate table via the shard's `sel [E_local, E]`.
+fn select_gates(gates: &[f32], sel: &HostTensor, t: usize) -> Vec<f32> {
+    let (e_l, e) = (sel.shape[0], sel.shape[1]);
+    let mut gl = vec![0f32; t * e_l];
+    for r in 0..t {
+        for j in 0..e_l {
+            let mut s = 0f32;
+            for c in 0..e {
+                s += gates[r * e + c] * sel.data[j * e + c];
             }
+            gl[r * e_l + j] = s;
         }
     }
-    HostTensor::new(vec![t, h], out)
+    gl
 }
 
-/// One device's expert-module contribution for its `(ep, tp)` shard:
-/// `x [T, H]` combined residual → partial output `[T, H]`. Partial-sum
-/// over the block's TP ranks, then contribution-sum over blocks,
-/// reconstructs the full routed output.
-pub fn expert_module(x: &HostTensor, shard: &[HostTensor], ep: usize, top_k: usize) -> Result<HostTensor> {
-    let expected = if ep > 1 { 6 } else { 5 };
-    if shard.len() != expected {
-        anyhow::bail!("expert shard has {} tensors, expected {expected}", shard.len());
-    }
-    let xn = rms_norm(x, &shard[0]);
-    let gates = topk_gate(&xn, &shard[1], top_k);
-    if ep == 1 {
-        Ok(expert_ffn(&xn, &gates.data, &shard[2], &shard[3], &shard[4]))
-    } else {
-        // gates_local = gates @ selᵀ: pick the block's expert columns.
-        let sel = &shard[2];
-        let (e_l, e) = (sel.shape[0], sel.shape[1]);
-        let t = xn.shape[0];
-        let mut gl = vec![0f32; t * e_l];
-        for r in 0..t {
-            for j in 0..e_l {
-                let mut s = 0f32;
-                for c in 0..e {
-                    s += gates.data[r * e + c] * sel.data[j * e + c];
-                }
-                gl[r * e_l + j] = s;
-            }
-        }
-        Ok(expert_ffn(&xn, &gl, &shard[3], &shard[4], &shard[5]))
-    }
-}
-
-/// Causal GQA prefill attention for one head shard.
-///
-/// `x [B, S, H]` residual → `(partial_out [B, S, H], k [B, S, KVH_l, D],
-/// v [B, S, KVH_l, D])`; partial outputs sum over the TP group.
-pub fn attention_prefill(
-    x: &HostTensor,
-    shard: &[HostTensor],
+/// Causal GQA score/softmax/context loop for whole-batch prefill:
+/// projected `q/k/v` in, context `[B, S, QH, D]` out.
+fn prefill_ctx(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    b: usize,
+    s: usize,
     q_heads: usize,
     kv_heads: usize,
     hd: usize,
-) -> Result<(HostTensor, HostTensor, HostTensor)> {
-    let (b, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
-    let xn = rms_norm(x, &shard[0]);
-    let q = matmul(&xn.data, b * s, h, &shard[1].data, q_heads * hd);
-    let k = matmul(&xn.data, b * s, h, &shard[2].data, kv_heads * hd);
-    let v = matmul(&xn.data, b * s, h, &shard[3].data, kv_heads * hd);
+) -> Vec<f32> {
     let rep = q_heads / kv_heads;
-    if rep * kv_heads != q_heads {
-        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
-    }
     let scale = 1.0 / (hd as f32).sqrt();
     let mut ctx = vec![0f32; b * s * q_heads * hd];
     let mut scores = vec![0f32; s];
@@ -251,67 +226,26 @@ pub fn attention_prefill(
             }
         }
     }
-    let out = matmul(&ctx, b * s, q_heads * hd, &shard[4].data, h);
-    Ok((
-        HostTensor::new(vec![b, s, h], out),
-        HostTensor::new(vec![b, s, kv_heads, hd], k),
-        HostTensor::new(vec![b, s, kv_heads, hd], v),
-    ))
+    ctx
 }
 
-/// Causal GQA prefill attention for **one chunk of one sequence**,
-/// resuming against a padded per-slot KV cache.
-///
-/// `x [1, C, H]` is the chunk's residual (prompt positions
-/// `start..start+C` of batch row `row` in the group cache
-/// `[B_g, M, KVH_l, D]`). The chunk's K/V are written into the cache at
-/// positions `start..start+C`, and each chunk query at global position
-/// `p = start + qi` attends causally to cache positions `0..=p` — the
-/// earlier positions having been written by previous chunks of the same
-/// prompt. Returns the partial attention output `[1, C, H]` (summed
-/// over the TP group by the caller).
-///
-/// **Bit-equivalence.** The loop structure (score order, running max,
-/// exp/normalize split, context accumulation order) mirrors
-/// [`attention_prefill`] exactly, and every per-row quantity (rms_norm,
-/// q/k/v projections) is row-independent, so splitting a prompt into
-/// chunks — any chunk sizes — produces outputs and KV bit-identical to
-/// the one-shot kernel. Asserted by `chunked_prefill_bit_identical`.
-pub fn attention_prefill_ranged(
-    x: &HostTensor,
-    k_cache: &mut HostTensor,
-    v_cache: &mut HostTensor,
+/// Score/softmax/context loop for one ranged prefill chunk: queries at
+/// global positions `start..start+c` of cache row `row`, attending
+/// cache positions `0..=p`. The chunk's K/V must already be written.
+fn ranged_ctx(
+    q: &[f32],
+    k_cache: &HostTensor,
+    v_cache: &HostTensor,
     row: usize,
     start: usize,
-    shard: &[HostTensor],
+    c: usize,
     q_heads: usize,
     kv_heads: usize,
     hd: usize,
-) -> Result<HostTensor> {
-    let (b, c, h) = (x.shape[0], x.shape[1], x.shape[2]);
-    if b != 1 {
-        anyhow::bail!("ranged prefill takes one sequence, got batch {b}");
-    }
+) -> Vec<f32> {
     let m = k_cache.shape[1];
-    if start + c > m {
-        anyhow::bail!("chunk {start}..{} outside KV budget {m}", start + c);
-    }
     let rep = q_heads / kv_heads;
-    if rep * kv_heads != q_heads {
-        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
-    }
-    let xn = rms_norm(x, &shard[0]);
-    let q = matmul(&xn.data, c, h, &shard[1].data, q_heads * hd);
-    let k_new = matmul(&xn.data, c, h, &shard[2].data, kv_heads * hd);
-    let v_new = matmul(&xn.data, c, h, &shard[3].data, kv_heads * hd);
-    // Write the chunk's K/V into the slot's cache rows first, so the
-    // causal scan below reads every position — earlier chunks and this
-    // one — from a single place.
     let kvrow = kv_heads * hd;
-    let dst = (row * m + start) * kvrow;
-    k_cache.data[dst..dst + c * kvrow].copy_from_slice(&k_new[..c * kvrow]);
-    v_cache.data[dst..dst + c * kvrow].copy_from_slice(&v_new[..c * kvrow]);
-
     let scale = 1.0 / (hd as f32).sqrt();
     let mut ctx = vec![0f32; c * q_heads * hd];
     let mut scores = vec![0f32; start + c];
@@ -347,80 +281,28 @@ pub fn attention_prefill_ranged(
             }
         }
     }
-    let out = matmul(&ctx, c, q_heads * hd, &shard[4].data, h);
-    Ok(HostTensor::new(vec![1, c, h], out))
+    ctx
 }
 
-/// One decode step against a padded KV cache (`[B, M, KVH_l, D]`); the
-/// new token writes at index `pos` and positions `0..=pos` are attended.
-/// Updates the caches in place (device-resident state) and returns the
-/// partial output `[B, 1, H]`.
-///
-/// Delegates to [`attention_decode_slots`] with every row active at the
-/// same position, so the gang path and the streaming per-slot path
-/// share one copy of the float-order-sensitive attention math — the
-/// engine's per-request bit-equivalence holds by construction.
-pub fn attention_decode(
-    x: &HostTensor,
-    k_cache: &mut HostTensor,
-    v_cache: &mut HostTensor,
-    pos: usize,
-    shard: &[HostTensor],
-    q_heads: usize,
-    kv_heads: usize,
-    hd: usize,
-) -> Result<HostTensor> {
-    let b = x.shape[0];
-    let m = k_cache.shape[1];
-    if pos >= m {
-        anyhow::bail!("decode position {pos} outside KV budget {m}");
-    }
-    attention_decode_slots(
-        x,
-        k_cache,
-        v_cache,
-        &vec![pos; b],
-        &vec![true; b],
-        shard,
-        q_heads,
-        kv_heads,
-        hd,
-    )
-}
-
-/// One decode step with **per-slot positions** against a padded KV
-/// cache (`[B, M, KVH_l, D]`): row `bi` writes its new token at
-/// `pos[bi]` and attends positions `0..=pos[bi]`. Rows with
-/// `active[bi] == false` are skipped entirely — their KV rows are not
-/// touched and their output rows are zero. This is the continuous-
-/// batching variant of [`attention_decode`]: because every kernel in
-/// the stack is row-independent, an active row computes bit-identically
-/// to a gang-scheduled batch whose global position equals that row's
-/// `pos[bi]`, regardless of what the other slots are doing.
-pub fn attention_decode_slots(
-    x: &HostTensor,
+/// Per-slot decode KV write + score/softmax/context loop: row `bi`
+/// writes its projected K/V at `pos[bi]` and attends `0..=pos[bi]`;
+/// inactive rows are skipped entirely (no KV write, zero context).
+#[allow(clippy::too_many_arguments)]
+fn slot_ctx(
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
     k_cache: &mut HostTensor,
     v_cache: &mut HostTensor,
     pos: &[usize],
     active: &[bool],
-    shard: &[HostTensor],
     q_heads: usize,
     kv_heads: usize,
     hd: usize,
-) -> Result<HostTensor> {
-    let (b, h) = (x.shape[0], x.shape[2]);
+) -> Result<Vec<f32>> {
+    let b = pos.len();
     let m = k_cache.shape[1];
-    if pos.len() != b || active.len() != b {
-        anyhow::bail!("slot decode expects {b} positions/activity flags");
-    }
     let rep = q_heads / kv_heads;
-    if rep * kv_heads != q_heads {
-        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
-    }
-    let xn = rms_norm(x, &shard[0]);
-    let q = matmul(&xn.data, b, h, &shard[1].data, q_heads * hd);
-    let k_new = matmul(&xn.data, b, h, &shard[2].data, kv_heads * hd);
-    let v_new = matmul(&xn.data, b, h, &shard[3].data, kv_heads * hd);
     let row = kv_heads * hd;
     let scale = 1.0 / (hd as f32).sqrt();
     let mut ctx = vec![0f32; b * q_heads * hd];
@@ -465,13 +347,982 @@ pub fn attention_decode_slots(
             }
         }
     }
-    let out = matmul(&ctx, b, q_heads * hd, &shard[4].data, h);
-    Ok(HostTensor::new(vec![b, 1, h], out))
+    Ok(ctx)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference path
+// ---------------------------------------------------------------------------
+
+/// The original scalar kernels over raw shard tensor slices, retained
+/// verbatim as the oracle for the blocked/SIMD/quantized paths. Slow by
+/// design; every equivalence test in `tests/kernel_equivalence.rs` (and
+/// the engine-level `KernelMode::Reference` executor) pins the fast
+/// path against these bit-for-bit.
+pub mod reference {
+    use super::{gate_rows, prefill_ctx, ranged_ctx, select_gates, silu, slot_ctx};
+    pub use super::{embed_lookup, rms_norm};
+    use crate::runtime::literal::HostTensor;
+    use crate::Result;
+
+    /// Row-major scalar matmul: `a [rows, k] @ b [k, cols] → [rows,
+    /// cols]`. One accumulator per output element, `i` ascending — the
+    /// accumulation order every fast path must reproduce.
+    pub fn matmul(a: &[f32], rows: usize, k: usize, b: &[f32], cols: usize) -> Vec<f32> {
+        assert_eq!(a.len(), rows * k, "matmul lhs size");
+        assert_eq!(b.len(), k * cols, "matmul rhs size");
+        let mut out = vec![0f32; rows * cols];
+        for r in 0..rows {
+            let ar = &a[r * k..(r + 1) * k];
+            let or = &mut out[r * cols..(r + 1) * cols];
+            for (i, &av) in ar.iter().enumerate() {
+                let br = &b[i * cols..(i + 1) * cols];
+                for c in 0..cols {
+                    or[c] += av * br[c];
+                }
+            }
+        }
+        out
+    }
+
+    /// Final norm + unembed on the last-position residual:
+    /// `x_last [B, H] → logits [B, V]`.
+    pub fn head(x_last: &HostTensor, ln_f: &HostTensor, unembed: &HostTensor) -> HostTensor {
+        let (b, h) = (x_last.shape[0], x_last.shape[1]);
+        let v = unembed.shape[1];
+        let xn = rms_norm(x_last, ln_f);
+        HostTensor::new(vec![b, v], matmul(&xn.data, b, h, &unembed.data, v))
+    }
+
+    /// Mixtral top-k gate: dense routing weights `[T, E]`, softmax over
+    /// the selected experts' logits, zero elsewhere, renormalized.
+    pub fn topk_gate(xn: &HostTensor, router: &HostTensor, top_k: usize) -> HostTensor {
+        let (t, h) = (xn.shape[0], xn.shape[1]);
+        let e = router.shape[1];
+        let logits = matmul(&xn.data, t, h, &router.data, e);
+        HostTensor::new(vec![t, e], gate_rows(&logits, t, e, top_k))
+    }
+
+    /// SwiGLU routed FFN over a block of experts: for each local expert
+    /// `e`, `y_e = (silu(xn·Wg_e) ⊙ (xn·Wu_e))·Wd_e`, accumulated as
+    /// `Σ_e gates_local[:, e] · y_e`. Dense: every expert processes
+    /// every token, gate-zero rows contribute nothing.
+    fn expert_ffn(
+        xn: &HostTensor,
+        gates_local: &[f32],
+        wg: &HostTensor,
+        wu: &HostTensor,
+        wd: &HostTensor,
+    ) -> HostTensor {
+        let (t, h) = (xn.shape[0], xn.shape[1]);
+        let e_l = wg.shape[0];
+        let i_l = wg.shape[2];
+        assert_eq!(gates_local.len(), t * e_l, "gate table size");
+        let mut out = vec![0f32; t * h];
+        for e in 0..e_l {
+            let wg_e = &wg.data[e * h * i_l..(e + 1) * h * i_l];
+            let wu_e = &wu.data[e * h * i_l..(e + 1) * h * i_l];
+            let wd_e = &wd.data[e * i_l * h..(e + 1) * i_l * h];
+            let g = matmul(&xn.data, t, h, wg_e, i_l);
+            let u = matmul(&xn.data, t, h, wu_e, i_l);
+            let mut act = vec![0f32; t * i_l];
+            for j in 0..t * i_l {
+                act[j] = silu(g[j]) * u[j];
+            }
+            let y = matmul(&act, t, i_l, wd_e, h);
+            for r in 0..t {
+                let gate = gates_local[r * e_l + e];
+                if gate != 0.0 {
+                    for c in 0..h {
+                        out[r * h + c] += gate * y[r * h + c];
+                    }
+                }
+            }
+        }
+        HostTensor::new(vec![t, h], out)
+    }
+
+    /// One device's expert-module contribution for its `(ep, tp)`
+    /// shard: `x [T, H]` combined residual → partial output `[T, H]`.
+    pub fn expert_module(
+        x: &HostTensor,
+        shard: &[HostTensor],
+        ep: usize,
+        top_k: usize,
+    ) -> Result<HostTensor> {
+        let expected = if ep > 1 { 6 } else { 5 };
+        if shard.len() != expected {
+            anyhow::bail!("expert shard has {} tensors, expected {expected}", shard.len());
+        }
+        let xn = rms_norm(x, &shard[0]);
+        let gates = topk_gate(&xn, &shard[1], top_k);
+        if ep == 1 {
+            Ok(expert_ffn(&xn, &gates.data, &shard[2], &shard[3], &shard[4]))
+        } else {
+            let gl = select_gates(&gates.data, &shard[2], xn.shape[0]);
+            Ok(expert_ffn(&xn, &gl, &shard[3], &shard[4], &shard[5]))
+        }
+    }
+
+    /// Causal GQA prefill attention for one head shard:
+    /// `x [B, S, H]` → `(partial_out [B, S, H], k, v [B, S, KVH_l, D])`.
+    pub fn attention_prefill(
+        x: &HostTensor,
+        shard: &[HostTensor],
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<(HostTensor, HostTensor, HostTensor)> {
+        let (b, s, h) = (x.shape[0], x.shape[1], x.shape[2]);
+        if (q_heads / kv_heads) * kv_heads != q_heads {
+            anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+        }
+        let xn = rms_norm(x, &shard[0]);
+        let q = matmul(&xn.data, b * s, h, &shard[1].data, q_heads * hd);
+        let k = matmul(&xn.data, b * s, h, &shard[2].data, kv_heads * hd);
+        let v = matmul(&xn.data, b * s, h, &shard[3].data, kv_heads * hd);
+        let ctx = prefill_ctx(&q, &k, &v, b, s, q_heads, kv_heads, hd);
+        let out = matmul(&ctx, b * s, q_heads * hd, &shard[4].data, h);
+        Ok((
+            HostTensor::new(vec![b, s, h], out),
+            HostTensor::new(vec![b, s, kv_heads, hd], k),
+            HostTensor::new(vec![b, s, kv_heads, hd], v),
+        ))
+    }
+
+    /// Causal GQA prefill for one chunk of one sequence, resuming
+    /// against a padded per-slot KV cache (see the blocked twin for the
+    /// chunking bit-equivalence argument).
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_prefill_ranged(
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        row: usize,
+        start: usize,
+        shard: &[HostTensor],
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        let (b, c, h) = (x.shape[0], x.shape[1], x.shape[2]);
+        if b != 1 {
+            anyhow::bail!("ranged prefill takes one sequence, got batch {b}");
+        }
+        let m = k_cache.shape[1];
+        if start + c > m {
+            anyhow::bail!("chunk {start}..{} outside KV budget {m}", start + c);
+        }
+        if (q_heads / kv_heads) * kv_heads != q_heads {
+            anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+        }
+        let xn = rms_norm(x, &shard[0]);
+        let q = matmul(&xn.data, c, h, &shard[1].data, q_heads * hd);
+        let k_new = matmul(&xn.data, c, h, &shard[2].data, kv_heads * hd);
+        let v_new = matmul(&xn.data, c, h, &shard[3].data, kv_heads * hd);
+        let kvrow = kv_heads * hd;
+        let dst = (row * m + start) * kvrow;
+        k_cache.data[dst..dst + c * kvrow].copy_from_slice(&k_new[..c * kvrow]);
+        v_cache.data[dst..dst + c * kvrow].copy_from_slice(&v_new[..c * kvrow]);
+        let ctx = ranged_ctx(&q, k_cache, v_cache, row, start, c, q_heads, kv_heads, hd);
+        let out = matmul(&ctx, c, q_heads * hd, &shard[4].data, h);
+        Ok(HostTensor::new(vec![1, c, h], out))
+    }
+
+    /// One decode step against a padded KV cache; delegates to
+    /// [`attention_decode_slots`] with every row active.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_decode(
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        pos: usize,
+        shard: &[HostTensor],
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        let b = x.shape[0];
+        let m = k_cache.shape[1];
+        if pos >= m {
+            anyhow::bail!("decode position {pos} outside KV budget {m}");
+        }
+        attention_decode_slots(
+            x,
+            k_cache,
+            v_cache,
+            &vec![pos; b],
+            &vec![true; b],
+            shard,
+            q_heads,
+            kv_heads,
+            hd,
+        )
+    }
+
+    /// One decode step with per-slot positions; inactive rows are
+    /// skipped entirely (no KV write, zero output rows).
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_decode_slots(
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        pos: &[usize],
+        active: &[bool],
+        shard: &[HostTensor],
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        let (b, h) = (x.shape[0], x.shape[2]);
+        if pos.len() != b || active.len() != b {
+            anyhow::bail!("slot decode expects {b} positions/activity flags");
+        }
+        if (q_heads / kv_heads) * kv_heads != q_heads {
+            anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+        }
+        let xn = rms_norm(x, &shard[0]);
+        let q = matmul(&xn.data, b, h, &shard[1].data, q_heads * hd);
+        let k_new = matmul(&xn.data, b, h, &shard[2].data, kv_heads * hd);
+        let v_new = matmul(&xn.data, b, h, &shard[3].data, kv_heads * hd);
+        let ctx =
+            slot_ctx(&q, &k_new, &v_new, k_cache, v_cache, pos, active, q_heads, kv_heads, hd)?;
+        let out = matmul(&ctx, b, q_heads * hd, &shard[4].data, h);
+        Ok(HostTensor::new(vec![b, 1, h], out))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked packed-RHS matmul core
+// ---------------------------------------------------------------------------
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd {
+    //! Explicit SSE2 lane kernel behind the `simd` cargo feature. SSE2
+    //! is part of the x86_64 baseline, so no runtime detection is
+    //! needed; on other architectures the portable loop compiles in.
+    use std::arch::x86_64::{_mm_add_ps, _mm_loadu_ps, _mm_mul_ps, _mm_set1_ps, _mm_storeu_ps};
+
+    /// `acc[j] += av * w[j]` over `NB = 16` lanes. Multiply and add are
+    /// separate rounded ops (never contracted to an FMA), so every lane
+    /// is bit-identical to the portable scalar expression.
+    ///
+    /// # Safety
+    /// `acc` and `w` must each point at 16 readable (and for `acc`,
+    /// writable) `f32` lanes.
+    #[inline(always)]
+    pub unsafe fn fmadd16(acc: *mut f32, w: *const f32, av: f32) {
+        let a = _mm_set1_ps(av);
+        for q in 0..4 {
+            let wv = _mm_loadu_ps(w.add(q * 4));
+            let cv = _mm_loadu_ps(acc.add(q * 4));
+            _mm_storeu_ps(acc.add(q * 4), _mm_add_ps(cv, _mm_mul_ps(a, wv)));
+        }
+    }
+}
+
+/// `acc[j] += av * w[j]` over the panel's [`NB`] lanes: the one
+/// multiply-accumulate step both packed matmuls are built from. Lanes
+/// are independent output-element accumulators, so vectorizing across
+/// them (auto or explicit) cannot change any element's rounding.
+#[inline(always)]
+fn fmadd_lanes(acc: &mut [f32; NB], w: &[f32], av: f32) {
+    debug_assert!(w.len() >= NB);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    // SAFETY: both buffers hold at least NB = 16 f32 lanes.
+    unsafe {
+        simd::fmadd16(acc.as_mut_ptr(), w.as_ptr(), av);
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    for j in 0..NB {
+        acc[j] += av * w[j];
+    }
+}
+
+/// An f32 matmul right-hand side `[k, cols]`, repacked into
+/// column-panel-major tiles: `panels[(p·k + i)·NB + j] = b[i][p·NB + j]`
+/// (ragged tail panel zero-padded; padded lanes are computed but never
+/// written back). Packing happens once per resident shard, so steady-
+/// state serving never touches the row-major layout again.
+#[derive(Debug, Clone)]
+pub struct PackedMat {
+    k: usize,
+    cols: usize,
+    panels: Vec<f32>,
+}
+
+impl PackedMat {
+    pub fn pack(b: &[f32], k: usize, cols: usize) -> PackedMat {
+        assert_eq!(b.len(), k * cols, "pack rhs size");
+        assert!(k > 0 && cols > 0, "pack on empty matrix");
+        let np = cols.div_ceil(NB);
+        let mut panels = vec![0f32; np * k * NB];
+        for p in 0..np {
+            let c0 = p * NB;
+            let nb = NB.min(cols - c0);
+            for i in 0..k {
+                let dst = (p * k + i) * NB;
+                panels[dst..dst + nb].copy_from_slice(&b[i * cols + c0..i * cols + c0 + nb]);
+            }
+        }
+        PackedMat { k, cols, panels }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Actual resident bytes (including tail-panel padding).
+    pub fn weight_bytes(&self) -> usize {
+        self.panels.len() * 4
+    }
+
+    /// Row-major `[k, cols]` reconstruction (drops panel padding).
+    pub fn dequantized(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.k * self.cols];
+        for p in 0..self.cols.div_ceil(NB) {
+            let c0 = p * NB;
+            let nb = NB.min(self.cols - c0);
+            for i in 0..self.k {
+                let src = (p * self.k + i) * NB;
+                out[i * self.cols + c0..i * self.cols + c0 + nb]
+                    .copy_from_slice(&self.panels[src..src + nb]);
+            }
+        }
+        out
+    }
+
+    /// `a [rows, k] @ self → out [rows, cols]`, bit-identical to
+    /// [`reference::matmul`]: each output element keeps one accumulator
+    /// (a lane of the MR×NB register tile) filled in ascending-`i`
+    /// order.
+    fn matmul_into(&self, a: &[f32], rows: usize, out: &mut [f32]) {
+        let (k, cols) = (self.k, self.cols);
+        assert_eq!(a.len(), rows * k, "matmul lhs size");
+        assert_eq!(out.len(), rows * cols, "matmul out size");
+        let np = cols.div_ceil(NB);
+        let mut r = 0;
+        while r < rows {
+            let rt = MR.min(rows - r);
+            for p in 0..np {
+                let c0 = p * NB;
+                let nb = NB.min(cols - c0);
+                let panel = &self.panels[p * k * NB..(p + 1) * k * NB];
+                let mut acc = [[0f32; NB]; MR];
+                for i in 0..k {
+                    let prow = &panel[i * NB..i * NB + NB];
+                    for rr in 0..rt {
+                        fmadd_lanes(&mut acc[rr], prow, a[(r + rr) * k + i]);
+                    }
+                }
+                for rr in 0..rt {
+                    let dst = (r + rr) * cols + c0;
+                    out[dst..dst + nb].copy_from_slice(&acc[rr][..nb]);
+                }
+            }
+            r += rt;
+        }
+    }
+}
+
+/// Sign-extended int4 code values, indexed by the two's-complement
+/// nibble: `I4_LUT[code & 0xF] == code as f32` for codes in `[-8, 7]`.
+const I4_LUT: [f32; 16] = [
+    0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, -8.0, -7.0, -6.0, -5.0, -4.0, -3.0, -2.0, -1.0,
+];
+
+/// An int8/int4 per-group quantized matmul right-hand side in the same
+/// panel-major layout as [`PackedMat`], dequantized on the fly inside
+/// the matmul: codes are affine per `(row, group)` with the group width
+/// [`QUANT_GROUP`] a multiple of [`NB`], so each `(row, panel)` pass
+/// does exactly one `(scale, bias)` lookup. The fused matmul is
+/// bit-identical to [`reference::matmul`] over [`Self::dequantized`]
+/// because the dequantized lane value is computed with the identical
+/// expression (`code · scale + bias`) before the identical
+/// multiply-accumulate.
+#[derive(Debug, Clone)]
+pub struct PackedQuant {
+    k: usize,
+    cols: usize,
+    kind: QuantKind,
+    ngroups: usize,
+    /// int8: one code byte per lane, `[(p·k + i)·NB + j]`;
+    /// int4: two lanes per byte (low nibble = even lane),
+    /// `[(p·k + i)·NB/2 + j/2]`.
+    codes: Vec<u8>,
+    /// Per-`(row, group)` affine: `value = code·scale + bias`.
+    scales: Vec<f32>,
+    biases: Vec<f32>,
+}
+
+impl PackedQuant {
+    /// Quantize a row-major `[k, cols]` weight matrix. Each `(row,
+    /// group)` gets its own affine range (the last group may be ragged
+    /// when `cols % QUANT_GROUP != 0`), mirroring
+    /// [`crate::quant::affine_params`] / [`crate::quant::encode_signed`]
+    /// exactly.
+    pub fn quantize(b: &[f32], k: usize, cols: usize, kind: QuantKind) -> PackedQuant {
+        assert_eq!(b.len(), k * cols, "quantize rhs size");
+        assert!(k > 0 && cols > 0, "quantize on empty matrix");
+        const _: () = assert!(QUANT_GROUP % NB == 0);
+        let np = cols.div_ceil(NB);
+        let ngroups = cols.div_ceil(QUANT_GROUP);
+        let lane_bytes = match kind {
+            QuantKind::Int8 => NB,
+            QuantKind::Int4 => NB / 2,
+        };
+        let mut codes = vec![0u8; np * k * lane_bytes];
+        let mut scales = vec![0f32; k * ngroups];
+        let mut biases = vec![0f32; k * ngroups];
+        for i in 0..k {
+            for g in 0..ngroups {
+                let g0 = g * QUANT_GROUP;
+                let g1 = cols.min(g0 + QUANT_GROUP);
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &v in &b[i * cols + g0..i * cols + g1] {
+                    lo = lo.min(v);
+                    hi = hi.max(v);
+                }
+                let (scale, inv_scale, zero) = quant::affine_params(kind, lo, hi);
+                scales[i * ngroups + g] = scale;
+                biases[i * ngroups + g] = -zero * scale;
+                for c in g0..g1 {
+                    let code = quant::encode_signed(kind, b[i * cols + c], inv_scale, zero);
+                    let (p, j) = (c / NB, c % NB);
+                    match kind {
+                        QuantKind::Int8 => codes[(p * k + i) * NB + j] = code as u8,
+                        QuantKind::Int4 => {
+                            let byte = &mut codes[(p * k + i) * (NB / 2) + j / 2];
+                            *byte |= (code as u8 & 0x0F) << (4 * (j % 2));
+                        }
+                    }
+                }
+            }
+        }
+        PackedQuant { k, cols, kind, ngroups, codes, scales, biases }
+    }
+
+    pub fn kind(&self) -> QuantKind {
+        self.kind
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Actual resident bytes: packed codes plus the affine tables.
+    pub fn weight_bytes(&self) -> usize {
+        self.codes.len() + (self.scales.len() + self.biases.len()) * 4
+    }
+
+    /// Dequantize one panel row into `NB` lane values — the single
+    /// shared decode expression for [`Self::matmul_into`] and
+    /// [`Self::dequantized`], which is what makes "fused ≡ reference on
+    /// dequantized weights" hold bitwise.
+    #[inline(always)]
+    fn decode_panel_row(&self, p: usize, i: usize, w: &mut [f32; NB]) {
+        let g = (p * NB) / QUANT_GROUP;
+        let scale = self.scales[i * self.ngroups + g];
+        let bias = self.biases[i * self.ngroups + g];
+        match self.kind {
+            QuantKind::Int8 => {
+                let crow = &self.codes[(p * self.k + i) * NB..(p * self.k + i) * NB + NB];
+                for j in 0..NB {
+                    w[j] = crow[j] as i8 as f32 * scale + bias;
+                }
+            }
+            QuantKind::Int4 => {
+                let base = (p * self.k + i) * (NB / 2);
+                let crow = &self.codes[base..base + NB / 2];
+                for (jb, &byte) in crow.iter().enumerate() {
+                    w[2 * jb] = I4_LUT[(byte & 0x0F) as usize] * scale + bias;
+                    w[2 * jb + 1] = I4_LUT[(byte >> 4) as usize] * scale + bias;
+                }
+            }
+        }
+    }
+
+    /// Row-major `[k, cols]` dequantized weights: the exact f32 matrix
+    /// the fused matmul multiplies by.
+    pub fn dequantized(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.k * self.cols];
+        let mut w = [0f32; NB];
+        for p in 0..self.cols.div_ceil(NB) {
+            let c0 = p * NB;
+            let nb = NB.min(self.cols - c0);
+            for i in 0..self.k {
+                self.decode_panel_row(p, i, &mut w);
+                out[i * self.cols + c0..i * self.cols + c0 + nb].copy_from_slice(&w[..nb]);
+            }
+        }
+        out
+    }
+
+    /// `a [rows, k] @ dequant(self) → out [rows, cols]`, dequantizing
+    /// each panel row once and sharing it across the register tile.
+    fn matmul_into(&self, a: &[f32], rows: usize, out: &mut [f32]) {
+        let (k, cols) = (self.k, self.cols);
+        assert_eq!(a.len(), rows * k, "matmul lhs size");
+        assert_eq!(out.len(), rows * cols, "matmul out size");
+        let np = cols.div_ceil(NB);
+        let mut w = [0f32; NB];
+        let mut r = 0;
+        while r < rows {
+            let rt = MR.min(rows - r);
+            for p in 0..np {
+                let c0 = p * NB;
+                let nb = NB.min(cols - c0);
+                let mut acc = [[0f32; NB]; MR];
+                for i in 0..k {
+                    self.decode_panel_row(p, i, &mut w);
+                    for rr in 0..rt {
+                        fmadd_lanes(&mut acc[rr], &w, a[(r + rr) * k + i]);
+                    }
+                }
+                for rr in 0..rt {
+                    let dst = (r + rr) * cols + c0;
+                    out[dst..dst + nb].copy_from_slice(&acc[rr][..nb]);
+                }
+            }
+            r += rt;
+        }
+    }
+}
+
+/// A packed matmul right-hand side: full-precision panels or
+/// dequant-on-the-fly quantized codes, one matmul entry point.
+#[derive(Debug, Clone)]
+pub enum PackedRhs {
+    F32(PackedMat),
+    Quant(PackedQuant),
+}
+
+impl PackedRhs {
+    /// Pack a row-major weight slice `[k, cols]`, quantizing when a
+    /// kind is given.
+    pub fn pack_slice(b: &[f32], k: usize, cols: usize, quant: Option<QuantKind>) -> PackedRhs {
+        match quant {
+            None => PackedRhs::F32(PackedMat::pack(b, k, cols)),
+            Some(kind) => PackedRhs::Quant(PackedQuant::quantize(b, k, cols, kind)),
+        }
+    }
+
+    /// Pack a weight tensor, collapsing leading axes into rows (the
+    /// last axis is the output-column axis).
+    pub fn pack(t: &HostTensor, quant: Option<QuantKind>) -> PackedRhs {
+        let cols = *t.shape.last().expect("pack on scalar tensor");
+        Self::pack_slice(&t.data, t.data.len() / cols, cols, quant)
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            PackedRhs::F32(m) => m.k(),
+            PackedRhs::Quant(q) => q.k(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            PackedRhs::F32(m) => m.cols(),
+            PackedRhs::Quant(q) => q.cols(),
+        }
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            PackedRhs::F32(m) => m.weight_bytes(),
+            PackedRhs::Quant(q) => q.weight_bytes(),
+        }
+    }
+
+    /// Row-major `[k, cols]` view of the effective weights (for f32,
+    /// the original matrix; for quant, the dequantized one).
+    pub fn dequantized(&self) -> Vec<f32> {
+        match self {
+            PackedRhs::F32(m) => m.dequantized(),
+            PackedRhs::Quant(q) => q.dequantized(),
+        }
+    }
+
+    /// `a [rows, k] @ self → [rows, cols]`.
+    pub fn matmul(&self, a: &[f32], rows: usize) -> Vec<f32> {
+        let mut out = vec![0f32; rows * self.cols()];
+        match self {
+            PackedRhs::F32(m) => m.matmul_into(a, rows, &mut out),
+            PackedRhs::Quant(q) => q.matmul_into(a, rows, &mut out),
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed packed shard bundles
+// ---------------------------------------------------------------------------
+
+/// One attention shard (`[ln, wq, wk, wv, wo]`) with every projection
+/// packed. `quant` applies to all four projections; `ln` stays f32.
+#[derive(Debug, Clone)]
+pub struct AttnWeights {
+    pub ln: HostTensor,
+    pub wq: PackedRhs,
+    pub wk: PackedRhs,
+    pub wv: PackedRhs,
+    pub wo: PackedRhs,
+}
+
+impl AttnWeights {
+    pub fn from_shard(shard: &[HostTensor], quant: Option<QuantKind>) -> Result<AttnWeights> {
+        if shard.len() != 5 {
+            anyhow::bail!("attention shard has {} tensors, expected 5", shard.len());
+        }
+        Ok(AttnWeights {
+            ln: shard[0].clone(),
+            wq: PackedRhs::pack(&shard[1], quant),
+            wk: PackedRhs::pack(&shard[2], quant),
+            wv: PackedRhs::pack(&shard[3], quant),
+            wo: PackedRhs::pack(&shard[4], quant),
+        })
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        self.ln.data.len() * 4
+            + self.wq.weight_bytes()
+            + self.wk.weight_bytes()
+            + self.wv.weight_bytes()
+            + self.wo.weight_bytes()
+    }
+}
+
+/// One expert shard (`[ln, router, (sel,) wg, wu, wd]`) with the
+/// per-expert FFN matrices packed individually (so the sparse gather
+/// runs one compact matmul per routed expert). `quant` applies to
+/// `wg/wu/wd`; `ln`, `router`, and `sel` stay f32 — the router decides
+/// *where* tokens go and is tiny, so quantizing it would risk routing
+/// flips for no memory win.
+#[derive(Debug, Clone)]
+pub struct ExpertWeights {
+    pub ln: HostTensor,
+    pub router: PackedRhs,
+    /// `Some` iff `ep > 1` (the EP block's expert selector).
+    pub sel: Option<HostTensor>,
+    pub wg: Vec<PackedRhs>,
+    pub wu: Vec<PackedRhs>,
+    pub wd: Vec<PackedRhs>,
+}
+
+impl ExpertWeights {
+    pub fn from_shard(
+        shard: &[HostTensor],
+        ep: usize,
+        quant: Option<QuantKind>,
+    ) -> Result<ExpertWeights> {
+        let expected = if ep > 1 { 6 } else { 5 };
+        if shard.len() != expected {
+            anyhow::bail!("expert shard has {} tensors, expected {expected}", shard.len());
+        }
+        let off = if ep > 1 { 1 } else { 0 };
+        let (wg, wu, wd) = (&shard[2 + off], &shard[3 + off], &shard[4 + off]);
+        let e_l = wg.shape[0];
+        let (h, i_l) = (wg.shape[1], wg.shape[2]);
+        let pack_experts = |t: &HostTensor, k: usize, cols: usize| -> Vec<PackedRhs> {
+            (0..e_l)
+                .map(|e| {
+                    let w = &t.data[e * k * cols..(e + 1) * k * cols];
+                    PackedRhs::pack_slice(w, k, cols, quant)
+                })
+                .collect()
+        };
+        Ok(ExpertWeights {
+            ln: shard[0].clone(),
+            router: PackedRhs::pack(&shard[1], None),
+            sel: (ep > 1).then(|| shard[2].clone()),
+            wg: pack_experts(wg, h, i_l),
+            wu: pack_experts(wu, h, i_l),
+            wd: pack_experts(wd, i_l, h),
+        })
+    }
+
+    pub fn weight_bytes(&self) -> usize {
+        let ffn: usize = self
+            .wg
+            .iter()
+            .chain(&self.wu)
+            .chain(&self.wd)
+            .map(PackedRhs::weight_bytes)
+            .sum();
+        (self.ln.data.len() + self.sel.as_ref().map_or(0, |s| s.data.len())) * 4
+            + self.router.weight_bytes()
+            + ffn
+    }
+}
+
+/// Final-head weights (`ln_f` + packed unembed); always f32 — the
+/// unembed projection directly picks the argmax token.
+#[derive(Debug, Clone)]
+pub struct HeadWeights {
+    pub ln: HostTensor,
+    pub unembed: PackedRhs,
+}
+
+impl HeadWeights {
+    pub fn new(ln_f: &HostTensor, unembed: &HostTensor) -> HeadWeights {
+        HeadWeights { ln: ln_f.clone(), unembed: PackedRhs::pack(unembed, None) }
+    }
+}
+
+/// A device role's packed resident shard: what `WeightStore::shard_packed`
+/// produces and the executor caches per `(family, layer)`.
+#[derive(Debug, Clone)]
+pub enum ShardWeights {
+    Attn(AttnWeights),
+    Expert(ExpertWeights),
+}
+
+impl ShardWeights {
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            ShardWeights::Attn(w) => w.weight_bytes(),
+            ShardWeights::Expert(w) => w.weight_bytes(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Blocked kernels (the serving hot path)
+// ---------------------------------------------------------------------------
+
+/// Final norm + unembed on the last-position residual:
+/// `x_last [B, H] → logits [B, V]`.
+pub fn head(x_last: &HostTensor, w: &HeadWeights) -> HostTensor {
+    let b = x_last.shape[0];
+    let v = w.unembed.cols();
+    let xn = rms_norm(x_last, &w.ln);
+    HostTensor::new(vec![b, v], w.unembed.matmul(&xn.data, b))
+}
+
+/// Mixtral top-k gate over a packed router (see
+/// [`reference::topk_gate`]).
+pub fn topk_gate(xn: &HostTensor, router: &PackedRhs, top_k: usize) -> HostTensor {
+    let t = xn.shape[0];
+    let e = router.cols();
+    let logits = router.matmul(&xn.data, t);
+    HostTensor::new(vec![t, e], gate_rows(&logits, t, e, top_k))
+}
+
+/// SwiGLU routed FFN with a **sparse expert gather**: for each local
+/// expert, only the rows with a non-zero gate are gathered into a
+/// compact batch, pushed through that expert's packed matmuls, and
+/// scatter-accumulated. Bit-identical to the dense reference because
+/// matmul rows are independent and the reference skips gate-zero rows
+/// at accumulation time anyway; cuts expert compute by ~`E / top_k`.
+fn expert_ffn_packed(
+    xn: &HostTensor,
+    gates_local: &[f32],
+    wg: &[PackedRhs],
+    wu: &[PackedRhs],
+    wd: &[PackedRhs],
+) -> HostTensor {
+    let (t, h) = (xn.shape[0], xn.shape[1]);
+    let e_l = wg.len();
+    assert_eq!(gates_local.len(), t * e_l, "gate table size");
+    let mut out = vec![0f32; t * h];
+    let mut rows: Vec<usize> = Vec::with_capacity(t);
+    for e in 0..e_l {
+        rows.clear();
+        rows.extend((0..t).filter(|&r| gates_local[r * e_l + e] != 0.0));
+        if rows.is_empty() {
+            continue;
+        }
+        let mt = rows.len();
+        let mut xa = Vec::with_capacity(mt * h);
+        for &r in &rows {
+            xa.extend_from_slice(&xn.data[r * h..(r + 1) * h]);
+        }
+        let i_l = wg[e].cols();
+        let g = wg[e].matmul(&xa, mt);
+        let u = wu[e].matmul(&xa, mt);
+        let mut act = vec![0f32; mt * i_l];
+        for j in 0..mt * i_l {
+            act[j] = silu(g[j]) * u[j];
+        }
+        let y = wd[e].matmul(&act, mt);
+        for (j, &r) in rows.iter().enumerate() {
+            let gate = gates_local[r * e_l + e];
+            for c in 0..h {
+                out[r * h + c] += gate * y[j * h + c];
+            }
+        }
+    }
+    HostTensor::new(vec![t, h], out)
+}
+
+/// One device's expert-module contribution for its packed `(ep, tp)`
+/// shard: `x [T, H]` combined residual → partial output `[T, H]`.
+pub fn expert_module(x: &HostTensor, w: &ExpertWeights, top_k: usize) -> Result<HostTensor> {
+    let xn = rms_norm(x, &w.ln);
+    let gates = topk_gate(&xn, &w.router, top_k);
+    match &w.sel {
+        None => Ok(expert_ffn_packed(&xn, &gates.data, &w.wg, &w.wu, &w.wd)),
+        Some(sel) => {
+            let gl = select_gates(&gates.data, sel, xn.shape[0]);
+            Ok(expert_ffn_packed(&xn, &gl, &w.wg, &w.wu, &w.wd))
+        }
+    }
+}
+
+/// Causal GQA prefill attention for one packed head shard (see
+/// [`reference::attention_prefill`]).
+pub fn attention_prefill(
+    x: &HostTensor,
+    w: &AttnWeights,
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<(HostTensor, HostTensor, HostTensor)> {
+    let (b, s) = (x.shape[0], x.shape[1]);
+    if (q_heads / kv_heads) * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+    }
+    let xn = rms_norm(x, &w.ln);
+    let q = w.wq.matmul(&xn.data, b * s);
+    let k = w.wk.matmul(&xn.data, b * s);
+    let v = w.wv.matmul(&xn.data, b * s);
+    let ctx = prefill_ctx(&q, &k, &v, b, s, q_heads, kv_heads, hd);
+    let out = w.wo.matmul(&ctx, b * s);
+    Ok((
+        HostTensor::new(vec![b, s, w.wo.cols()], out),
+        HostTensor::new(vec![b, s, kv_heads, hd], k),
+        HostTensor::new(vec![b, s, kv_heads, hd], v),
+    ))
+}
+
+/// Causal GQA prefill attention for **one chunk of one sequence**,
+/// resuming against a padded per-slot KV cache.
+///
+/// `x [1, C, H]` is the chunk's residual (prompt positions
+/// `start..start+C` of batch row `row` in the group cache
+/// `[B_g, M, KVH_l, D]`). The chunk's K/V are written into the cache
+/// first, then each chunk query at global position `p = start + qi`
+/// attends causally to cache positions `0..=p`. Splitting a prompt into
+/// chunks — any sizes — is bit-identical to the one-shot kernel because
+/// every per-row quantity is row-independent and the score/softmax/
+/// context loop ([`ranged_ctx`]) is shared; asserted by
+/// `chunked_prefill_bit_identical`.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_prefill_ranged(
+    x: &HostTensor,
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    row: usize,
+    start: usize,
+    w: &AttnWeights,
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<HostTensor> {
+    let (b, c) = (x.shape[0], x.shape[1]);
+    if b != 1 {
+        anyhow::bail!("ranged prefill takes one sequence, got batch {b}");
+    }
+    let m = k_cache.shape[1];
+    if start + c > m {
+        anyhow::bail!("chunk {start}..{} outside KV budget {m}", start + c);
+    }
+    if (q_heads / kv_heads) * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+    }
+    let xn = rms_norm(x, &w.ln);
+    let q = w.wq.matmul(&xn.data, c);
+    let k_new = w.wk.matmul(&xn.data, c);
+    let v_new = w.wv.matmul(&xn.data, c);
+    let kvrow = kv_heads * hd;
+    let dst = (row * m + start) * kvrow;
+    k_cache.data[dst..dst + c * kvrow].copy_from_slice(&k_new[..c * kvrow]);
+    v_cache.data[dst..dst + c * kvrow].copy_from_slice(&v_new[..c * kvrow]);
+    let ctx = ranged_ctx(&q, k_cache, v_cache, row, start, c, q_heads, kv_heads, hd);
+    let out = w.wo.matmul(&ctx, c);
+    Ok(HostTensor::new(vec![1, c, w.wo.cols()], out))
+}
+
+/// One decode step against a padded KV cache (`[B, M, KVH_l, D]`);
+/// delegates to [`attention_decode_slots`] with every row active, so
+/// the gang path and the streaming per-slot path share one copy of the
+/// float-order-sensitive attention math.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_decode(
+    x: &HostTensor,
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    pos: usize,
+    w: &AttnWeights,
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<HostTensor> {
+    let b = x.shape[0];
+    let m = k_cache.shape[1];
+    if pos >= m {
+        anyhow::bail!("decode position {pos} outside KV budget {m}");
+    }
+    attention_decode_slots(
+        x,
+        k_cache,
+        v_cache,
+        &vec![pos; b],
+        &vec![true; b],
+        w,
+        q_heads,
+        kv_heads,
+        hd,
+    )
+}
+
+/// One decode step with **per-slot positions** against a padded KV
+/// cache: row `bi` writes its new token at `pos[bi]` and attends
+/// `0..=pos[bi]`; rows with `active[bi] == false` are skipped entirely.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_decode_slots(
+    x: &HostTensor,
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    pos: &[usize],
+    active: &[bool],
+    w: &AttnWeights,
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<HostTensor> {
+    let b = x.shape[0];
+    if pos.len() != b || active.len() != b {
+        anyhow::bail!("slot decode expects {b} positions/activity flags");
+    }
+    if (q_heads / kv_heads) * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+    }
+    let xn = rms_norm(x, &w.ln);
+    let q = w.wq.matmul(&xn.data, b);
+    let k_new = w.wk.matmul(&xn.data, b);
+    let v_new = w.wv.matmul(&xn.data, b);
+    let ctx = slot_ctx(&q, &k_new, &v_new, k_cache, v_cache, pos, active, q_heads, kv_heads, hd)?;
+    let out = w.wo.matmul(&ctx, b);
+    Ok(HostTensor::new(vec![b, 1, w.wo.cols()], out))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn fill(n: usize, k: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i * 7 + 3) % 11) as f32 * k - 0.4).collect()
+    }
 
     #[test]
     fn rms_norm_unit_scale_normalizes() {
@@ -489,8 +1340,37 @@ mod tests {
         // [2,3] @ [3,2]
         let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
-        let c = matmul(&a, 2, 3, &b, 2);
+        let c = reference::matmul(&a, 2, 3, &b, 2);
         assert_eq!(c, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn packed_matmul_bit_identical_on_ragged_shape() {
+        // rows, k, cols all off the MR/NB grid.
+        let (rows, k, cols) = (5usize, 7usize, 21usize);
+        let a = fill(rows * k, 0.13);
+        let b = fill(k * cols, 0.07);
+        let want = reference::matmul(&a, rows, k, &b, cols);
+        let got = PackedRhs::pack_slice(&b, k, cols, None).matmul(&a, rows);
+        for (i, (x, y)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn fused_quant_matmul_matches_reference_on_dequantized_weights() {
+        let (rows, k, cols) = (3usize, 9usize, 70usize); // ragged group + panel
+        let a = fill(rows * k, 0.11);
+        let b = fill(k * cols, 0.05);
+        for kind in [QuantKind::Int8, QuantKind::Int4] {
+            let q = PackedQuant::quantize(&b, k, cols, kind);
+            let want = reference::matmul(&a, rows, k, &q.dequantized(), cols);
+            let mut got = vec![0f32; rows * cols];
+            q.matmul_into(&a, rows, &mut got);
+            for (i, (x, y)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{kind:?} diverged at {i}");
+            }
+        }
     }
 
     #[test]
@@ -501,11 +1381,16 @@ mod tests {
         for i in 0..3 {
             router.data[i * 3 + i] = 1.0;
         }
-        let g = topk_gate(&xn, &router, 2);
+        let g = reference::topk_gate(&xn, &router, 2);
         assert_eq!(g.data[0], 0.0, "lowest logit must be masked");
         let sum: f32 = g.data.iter().sum();
         assert!((sum - 1.0).abs() < 1e-6);
         assert!(g.data[1] > g.data[2]);
+        // Packed router produces the same gates bit-for-bit.
+        let packed = topk_gate(&xn, &PackedRhs::pack(&router, None), 2);
+        for (a, b) in g.data.iter().zip(&packed.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]
@@ -518,8 +1403,13 @@ mod tests {
         let wg = HostTensor::new(vec![1, 2, 4], (0..8).map(|i| 0.1 * i as f32).collect());
         let wu = HostTensor::new(vec![1, 2, 4], (0..8).map(|i| 0.05 * i as f32).collect());
         let wd = HostTensor::new(vec![1, 4, 2], (0..8).map(|i| 0.02 * i as f32).collect());
-        let full = expert_module(&x, &[ln.clone(), router.clone(), wg.clone(), wu.clone(), wd.clone()], 1, 1)
-            .unwrap();
+        let full = reference::expert_module(
+            &x,
+            &[ln.clone(), router.clone(), wg.clone(), wu.clone(), wd.clone()],
+            1,
+            1,
+        )
+        .unwrap();
         let slice = |t: &HostTensor, i0: usize| -> HostTensor {
             // last-axis slice of [1,2,4] → [1,2,2]
             let mut d = Vec::new();
@@ -533,7 +1423,7 @@ mod tests {
         };
         let mut sum: Option<HostTensor> = None;
         for d0 in [0usize, 2] {
-            let part = expert_module(
+            let part = reference::expert_module(
                 &x,
                 &[ln.clone(), router.clone(), slice(&wg, d0), slice(&wu, d0), slice_rows(&wd, d0)],
                 1,
@@ -548,6 +1438,51 @@ mod tests {
         let got = sum.unwrap();
         for (a, b) in full.data.iter().zip(&got.data) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn blocked_expert_module_bit_identical_to_reference() {
+        // 4 experts, top-2: the sparse gather must reproduce the dense
+        // reference exactly, including rows each expert never sees.
+        let (t, h, i, e) = (5usize, 6usize, 10usize, 4usize);
+        let x = HostTensor::new(vec![t, h], fill(t * h, 0.09));
+        let shard = vec![
+            HostTensor::new(vec![h], vec![1.0; h]),
+            HostTensor::new(vec![h, e], fill(h * e, 0.21)),
+            HostTensor::new(vec![e, h, i], fill(e * h * i, 0.03)),
+            HostTensor::new(vec![e, h, i], fill(e * h * i, 0.05)),
+            HostTensor::new(vec![e, i, h], fill(e * i * h, 0.02)),
+        ];
+        let want = reference::expert_module(&x, &shard, 1, 2).unwrap();
+        let w = ExpertWeights::from_shard(&shard, 1, None).unwrap();
+        let got = expert_module(&x, &w, 2).unwrap();
+        assert_eq!(want.shape, got.shape);
+        for (idx, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "diverged at {idx}");
+        }
+    }
+
+    #[test]
+    fn blocked_attention_prefill_bit_identical_to_reference() {
+        let (h, qh, kvh, hd, b, s) = (6usize, 4usize, 2usize, 3usize, 2usize, 5usize);
+        let shard = vec![
+            HostTensor::new(vec![h], fill(h, 0.1).iter().map(|v| v + 1.0).collect()),
+            HostTensor::new(vec![h, qh * hd], fill(h * qh * hd, 0.11)),
+            HostTensor::new(vec![h, kvh * hd], fill(h * kvh * hd, 0.07)),
+            HostTensor::new(vec![h, kvh * hd], fill(h * kvh * hd, 0.05)),
+            HostTensor::new(vec![qh * hd, h], fill(qh * hd * h, 0.09)),
+        ];
+        let x = HostTensor::new(vec![b, s, h], fill(b * s * h, 0.13));
+        let (want_o, want_k, want_v) =
+            reference::attention_prefill(&x, &shard, qh, kvh, hd).unwrap();
+        let w = AttnWeights::from_shard(&shard, None).unwrap();
+        let (got_o, got_k, got_v) = attention_prefill(&x, &w, qh, kvh, hd).unwrap();
+        for (want, got) in [(&want_o, &got_o), (&want_k, &got_k), (&want_v, &got_v)] {
+            assert_eq!(want.shape, got.shape);
+            for (idx, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "diverged at {idx}");
+            }
         }
     }
 
@@ -568,8 +1503,9 @@ mod tests {
         let mut kc_gang = kc.clone();
         let mut vc_gang = vc.clone();
         let gang =
-            attention_decode(&x, &mut kc_gang, &mut vc_gang, 2, &shard, 1, 1, 1).unwrap();
-        let slots = attention_decode_slots(
+            reference::attention_decode(&x, &mut kc_gang, &mut vc_gang, 2, &shard, 1, 1, 1)
+                .unwrap();
+        let slots = reference::attention_decode_slots(
             &x,
             &mut kc,
             &mut vc,
@@ -590,8 +1526,28 @@ mod tests {
         assert_eq!(kc.data[..4], kc_gang.data[..4]);
         assert_eq!(kc.data[4..], (4..8).map(|i| 0.1 * i as f32).collect::<Vec<_>>()[..]);
         assert_eq!(vc.data[4..], (4..8).map(|i| 0.2 * i as f32).collect::<Vec<_>>()[..]);
+        // The blocked kernel agrees with the scalar one bit-for-bit.
+        let w = AttnWeights::from_shard(&shard, None).unwrap();
+        let mut kc_b = HostTensor::new(vec![2, 4, 1, 1], (0..8).map(|i| 0.1 * i as f32).collect());
+        let mut vc_b = HostTensor::new(vec![2, 4, 1, 1], (0..8).map(|i| 0.2 * i as f32).collect());
+        let blocked = attention_decode_slots(
+            &x,
+            &mut kc_b,
+            &mut vc_b,
+            &[2, 3],
+            &[true, false],
+            &w,
+            1,
+            1,
+            1,
+        )
+        .unwrap();
+        for (a, b) in slots.data.iter().zip(&blocked.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(kc.data, kc_b.data);
         // Out-of-budget position errors.
-        assert!(attention_decode_slots(
+        assert!(reference::attention_decode_slots(
             &x,
             &mut kc,
             &mut vc,
@@ -614,9 +1570,6 @@ mod tests {
         // for the engine's multi-iteration chunked prefill).
         let (h, qh, kvh, hd, s, m) = (4usize, 2usize, 1usize, 2usize, 6usize, 8usize);
         let ln = HostTensor::new(vec![h], vec![1.0, 0.9, 1.1, 1.0]);
-        let fill = |n: usize, k: f32| -> Vec<f32> {
-            (0..n).map(|i| ((i * 7 + 3) % 11) as f32 * k - 0.4).collect()
-        };
         let wq = HostTensor::new(vec![h, qh * hd], fill(h * qh * hd, 0.11));
         let wk = HostTensor::new(vec![h, kvh * hd], fill(h * kvh * hd, 0.07));
         let wv = HostTensor::new(vec![h, kvh * hd], fill(h * kvh * hd, 0.05));
@@ -625,18 +1578,15 @@ mod tests {
         let x = HostTensor::new(vec![1, s, h], fill(s * h, 0.13));
 
         let (full_out, full_k, full_v) =
-            attention_prefill(&x, &shard, qh, kvh, hd).unwrap();
+            reference::attention_prefill(&x, &shard, qh, kvh, hd).unwrap();
 
         let mut kc = HostTensor::zeros(vec![1, m, kvh, hd]);
         let mut vc = HostTensor::zeros(vec![1, m, kvh, hd]);
         let mut chunked = Vec::new();
         let mut start = 0usize;
         for c in [2usize, 3, 1] {
-            let xc = HostTensor::new(
-                vec![1, c, h],
-                x.data[start * h..(start + c) * h].to_vec(),
-            );
-            let out = attention_prefill_ranged(
+            let xc = HostTensor::new(vec![1, c, h], x.data[start * h..(start + c) * h].to_vec());
+            let out = reference::attention_prefill_ranged(
                 &xc, &mut kc, &mut vc, 0, start, &shard, qh, kvh, hd,
             )
             .unwrap();
@@ -655,9 +1605,28 @@ mod tests {
             assert_eq!(a.to_bits(), vc.data[i].to_bits(), "v cache diverged at {i}");
         }
         assert!(kc.data[s * kvrow..].iter().all(|&v| v == 0.0), "cache tail touched");
+        // The blocked ranged kernel reproduces the same chunks.
+        let w = AttnWeights::from_shard(&shard, None).unwrap();
+        let mut kc_b = HostTensor::zeros(vec![1, m, kvh, hd]);
+        let mut vc_b = HostTensor::zeros(vec![1, m, kvh, hd]);
+        let mut start = 0usize;
+        let mut chunked_b = Vec::new();
+        for c in [2usize, 3, 1] {
+            let xc = HostTensor::new(vec![1, c, h], x.data[start * h..(start + c) * h].to_vec());
+            let out =
+                attention_prefill_ranged(&xc, &mut kc_b, &mut vc_b, 0, start, &w, qh, kvh, hd)
+                    .unwrap();
+            chunked_b.extend_from_slice(&out.data);
+            start += c;
+        }
+        for (i, (a, b)) in chunked.iter().zip(&chunked_b).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "blocked chunk diverged at {i}");
+        }
+        assert_eq!(kc.data, kc_b.data);
+        assert_eq!(vc.data, vc_b.data);
         // A chunk past the budget is rejected.
         let xc = HostTensor::new(vec![1, 3, h], x.data[..3 * h].to_vec());
-        assert!(attention_prefill_ranged(
+        assert!(reference::attention_prefill_ranged(
             &xc, &mut kc, &mut vc, 0, m - 1, &shard, qh, kvh, hd
         )
         .is_err());
@@ -677,12 +1646,26 @@ mod tests {
         let mut vc = HostTensor::zeros(vec![1, 4, 1, 1]);
         vc.data[0] = 5.0; // position 0 already cached
         let x = HostTensor::new(vec![1, 1, 2], vec![3.0, 0.0]);
-        let out = attention_decode(&x, &mut kc, &mut vc, 1, &shard, 1, 1, 1).unwrap();
+        let out = reference::attention_decode(&x, &mut kc, &mut vc, 1, &shard, 1, 1, 1).unwrap();
         // v@pos1 = normalize(3,0)·wv ≈ 1.0·rms-normed value; positions
         // 2..3 (zeros) must not contribute.
         let xn0 = 3.0 / ((9.0f32 / 2.0 + 1e-5).sqrt());
         let expect = (5.0 + xn0) / 2.0;
         assert!((out.data[0] - expect).abs() < 1e-4, "{} vs {expect}", out.data[0]);
-        assert!(attention_decode(&x, &mut kc, &mut vc, 9, &shard, 1, 1, 1).is_err());
+        assert!(reference::attention_decode(&x, &mut kc, &mut vc, 9, &shard, 1, 1, 1).is_err());
+    }
+
+    #[test]
+    fn head_packed_matches_reference() {
+        let (b, h, v) = (3usize, 5usize, 17usize);
+        let x = HostTensor::new(vec![b, h], fill(b * h, 0.12));
+        let ln_f = HostTensor::new(vec![h], vec![1.0; h]);
+        let unembed = HostTensor::new(vec![h, v], fill(h * v, 0.04));
+        let want = reference::head(&x, &ln_f, &unembed);
+        let got = head(&x, &HeadWeights::new(&ln_f, &unembed));
+        assert_eq!(want.shape, got.shape);
+        for (a, b) in want.data.iter().zip(&got.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

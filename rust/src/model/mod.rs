@@ -29,7 +29,7 @@ pub mod grid;
 pub mod kernels;
 pub mod weights;
 
-pub use exec::{EngineMode, ExecStats, ModelExecutor};
+pub use exec::{EngineMode, ExecStats, KernelMode, ModelExecutor};
 pub use fault::{DeviceFault, FaultEvent, FaultKind, FaultPlan};
 pub use grid::{CollectiveGroup, DeviceGrid, DeviceRole, GroupKind, ShardPlan};
 pub use weights::{ShardSpec, WeightStore};

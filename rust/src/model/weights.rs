@@ -11,6 +11,7 @@
 //!   block. `ep == 1` degenerates to pure TP (no selection matrix),
 //!   `tp == 1` to pure EP, and the general case is the hybrid grid.
 
+use crate::model::kernels;
 use crate::runtime::literal::HostTensor;
 use crate::runtime::{Manifest, TinyModelMeta};
 use crate::util::rng::Rng;
@@ -95,6 +96,23 @@ impl WeightStore {
         self.tensors.get(name).ok_or_else(|| anyhow!("missing weight '{name}'"))
     }
 
+    /// Replace an existing weight tensor in place (same name, same
+    /// shape). Used by tests/benches to pin weights to exact-round-trip
+    /// quantization grids; the shape check keeps the store consistent
+    /// with its manifest metadata.
+    pub fn replace(&mut self, name: &str, tensor: HostTensor) -> Result<()> {
+        let old = self.tensors.get(name).ok_or_else(|| anyhow!("missing weight '{name}'"))?;
+        if old.shape != tensor.shape {
+            anyhow::bail!(
+                "replace '{name}': shape {:?} does not match existing {:?}",
+                tensor.shape,
+                old.shape
+            );
+        }
+        self.tensors.insert(name.to_string(), tensor);
+        Ok(())
+    }
+
     /// Total parameter count.
     pub fn num_params(&self) -> usize {
         self.tensors.values().map(|t| t.elements()).sum()
@@ -107,6 +125,27 @@ impl WeightStore {
             ShardSpec::Expert { layer, ep, tp, ep_rank, tp_rank } => {
                 self.shard_expert(layer, ep, tp, ep_rank, tp_rank)
             }
+        }
+    }
+
+    /// Slice **and pack** a device role's shard into the blocked
+    /// host-kernel layout ([`kernels::ShardWeights`]), optionally
+    /// storing the matmul weights as int8/int4 per-group quantized
+    /// codes dequantized on the fly inside the packed matmul. This is
+    /// the storage the host executor caches per resident shard.
+    pub fn shard_packed(
+        &self,
+        spec: &ShardSpec,
+        quant: Option<crate::quant::QuantKind>,
+    ) -> Result<kernels::ShardWeights> {
+        let tensors = self.shard(spec)?;
+        match *spec {
+            ShardSpec::Attn { .. } => {
+                Ok(kernels::ShardWeights::Attn(kernels::AttnWeights::from_shard(&tensors, quant)?))
+            }
+            ShardSpec::Expert { ep, .. } => Ok(kernels::ShardWeights::Expert(
+                kernels::ExpertWeights::from_shard(&tensors, ep, quant)?,
+            )),
         }
     }
 
@@ -374,6 +413,39 @@ mod tests {
         assert!(s
             .shard(&ShardSpec::Expert { layer: 0, ep: 2, tp: 2, ep_rank: 0, tp_rank: 2 })
             .is_err());
+    }
+
+    #[test]
+    fn shard_packed_matches_raw_shard() {
+        let s = store();
+        let spec = ShardSpec::Expert { layer: 0, ep: 2, tp: 2, ep_rank: 1, tp_rank: 0 };
+        let raw = s.shard(&spec).unwrap();
+        match s.shard_packed(&spec, None).unwrap() {
+            kernels::ShardWeights::Expert(w) => {
+                assert_eq!(w.wg.len(), 1);
+                assert_eq!(w.wg[0].dequantized(), raw[3].data);
+                assert_eq!(w.sel.as_ref().unwrap().data, raw[2].data);
+            }
+            kernels::ShardWeights::Attn(_) => panic!("expected expert shard"),
+        }
+        let aspec = ShardSpec::Attn { layer: 0, tp: 2, rank: 1 };
+        let araw = s.shard(&aspec).unwrap();
+        match s.shard_packed(&aspec, None).unwrap() {
+            kernels::ShardWeights::Attn(w) => {
+                assert_eq!(w.wq.dequantized(), araw[1].data);
+                assert_eq!(w.wo.dequantized(), araw[4].data);
+            }
+            kernels::ShardWeights::Expert(_) => panic!("expected attention shard"),
+        }
+    }
+
+    #[test]
+    fn replace_checks_shape() {
+        let mut s = store();
+        assert!(s.replace("ln_f", HostTensor::new(vec![5], vec![0.0; 5])).is_err());
+        assert!(s.replace("nope", HostTensor::new(vec![4], vec![0.0; 4])).is_err());
+        s.replace("ln_f", HostTensor::new(vec![4], vec![2.0; 4])).unwrap();
+        assert_eq!(s.get("ln_f").unwrap().data, vec![2.0; 4]);
     }
 
     #[test]

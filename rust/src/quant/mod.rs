@@ -10,8 +10,92 @@
 //! Values are mapped to signed 4-bit integers in [-8, 7] with an
 //! asymmetric affine transform `q = clamp(round(x / scale) + zero)`;
 //! two nibbles pack per byte.
+//!
+//! # Serving path
+//!
+//! Beyond the transition backup, quantization is a live serving
+//! configuration: [`QuantKind`] (int8 or int4) selected via
+//! `ServeConfig::quant` / `hap serve --quant int8|int4` makes the host
+//! executor store its matmul weights as
+//! [`crate::model::kernels::PackedQuant`] — per-`(row, group)` affine
+//! codes in the packed-panel layout — and dequantize on the fly inside
+//! the blocked matmul. The affine parameters and code mapping are
+//! defined *here* ([`affine_params`] / [`encode_signed`]; the int4
+//! case is shared with [`quantize`] below) so the serving kernels and
+//! the Table-I quantizer stay numerically identical by construction.
 
 use crate::util::stats;
+
+/// Integer width for quantized **serving** weights (the Table-I
+/// quantizer below is int4-only, matching the paper's backup format).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantKind {
+    Int8,
+    Int4,
+}
+
+impl QuantKind {
+    /// Parse a CLI/config spelling (`int8` / `int4`).
+    pub fn parse(s: &str) -> Option<QuantKind> {
+        match s {
+            "int8" => Some(QuantKind::Int8),
+            "int4" => Some(QuantKind::Int4),
+            _ => None,
+        }
+    }
+
+    pub fn bits(&self) -> usize {
+        match self {
+            QuantKind::Int8 => 8,
+            QuantKind::Int4 => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantKind::Int8 => "int8",
+            QuantKind::Int4 => "int4",
+        }
+    }
+}
+
+/// Asymmetric affine parameters `(scale, inv_scale, zero)` for one
+/// block with value range `[lo, hi]`: codes span `[-8, 7]` (int4) or
+/// `[-128, 127]` (int8), and a value decodes as
+/// `code · scale - zero · scale`.
+pub fn affine_params(kind: QuantKind, lo: f32, hi: f32) -> (f32, f32, f32) {
+    let range = (hi - lo).max(1e-12);
+    match kind {
+        QuantKind::Int4 => {
+            let scale = range / 15.0;
+            let inv_scale = 15.0 / range;
+            let zero = (-8.0 - lo * inv_scale).round();
+            (scale, inv_scale, zero)
+        }
+        QuantKind::Int8 => {
+            let scale = range / 255.0;
+            let inv_scale = 255.0 / range;
+            let zero = (-128.0 - lo * inv_scale).round();
+            (scale, inv_scale, zero)
+        }
+    }
+}
+
+/// Encode one value as a signed code (int4: `[-8, 7]`, int8:
+/// `[-128, 127]`). Round-half-up via `+0.5` and truncation on the
+/// shifted (unsigned) code, exactly like the packed int4 quantizer.
+pub fn encode_signed(kind: QuantKind, x: f32, inv_scale: f32, zero: f32) -> i8 {
+    match kind {
+        QuantKind::Int4 => {
+            let shifted = (x * inv_scale + zero + 8.5).clamp(0.0, 15.0) as i32;
+            (shifted - 8) as i8
+        }
+        QuantKind::Int8 => {
+            let shifted = (x * inv_scale + zero + 128.5).clamp(0.0, 255.0) as i32;
+            (shifted - 128) as i8
+        }
+    }
+}
 
 /// Quantization granularity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -82,21 +166,15 @@ pub fn quantize(data: &[f32], rows: usize, cols: usize, scheme: Scheme) -> Quant
             lo = lo.min(x);
             hi = hi.max(x);
         }
-        // Asymmetric affine over [-8, 7].
-        let range = (hi - lo).max(1e-12);
-        let scale = range / 15.0;
-        let inv_scale = 15.0 / range;
-        let zero = (-8.0 - lo * inv_scale).round();
+        // Asymmetric affine over [-8, 7] (shared with the serving
+        // kernels via `affine_params`/`encode_signed`).
+        let (scale, inv_scale, zero) = affine_params(QuantKind::Int4, lo, hi);
         scales.push(scale);
         zeros.push(zero);
         let base = b * block_len;
-        // Branch-free nibble: shift codes to [0,15], round-half-up via
-        // +0.5 and truncation (stays within the ≤scale/2 error bound),
-        // then map back to the two's-complement nibble with (+8 & 0xF).
-        let quantize1 = |x: f32| -> u8 {
-            let shifted = (x * inv_scale + zero + 8.5).clamp(0.0, 15.0) as u8;
-            (shifted.wrapping_add(8)) & 0x0F
-        };
+        // Two's-complement nibble of the signed code.
+        let quantize1 =
+            |x: f32| -> u8 { encode_signed(QuantKind::Int4, x, inv_scale, zero) as u8 & 0x0F };
         if base % 2 == 0 {
             let bytes = &mut packed[base / 2..(base + block.len()).div_ceil(2)];
             let mut pairs = block.chunks_exact(2);
@@ -274,5 +352,53 @@ mod tests {
         for &v in &deq {
             assert!((v - 0.25).abs() < 0.05);
         }
+    }
+
+    #[test]
+    fn encode_signed_round_trip_bounded_by_half_scale() {
+        let data = gaussian_matrix(4, 64, 9);
+        for kind in [QuantKind::Int8, QuantKind::Int4] {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &x in &data {
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            let (scale, inv_scale, zero) = affine_params(kind, lo, hi);
+            for &x in &data {
+                let code = encode_signed(kind, x, inv_scale, zero);
+                let y = code as f32 * scale + (-zero * scale);
+                assert!((x - y).abs() <= scale * 0.5 + 1e-7, "{kind:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_grid_round_trips_exactly() {
+        // Values on the code grid with the full range present round-trip
+        // bit-exactly: range is a power-of-two multiple of the spacing,
+        // so scale is exact and zero lands on an integer. This is the
+        // property the engine-level quantized-serving identity test
+        // builds on.
+        for (kind, denom, lo_n, hi_n) in
+            [(QuantKind::Int8, 256.0f32, -128i32, 127), (QuantKind::Int4, 16.0, -8, 7)]
+        {
+            let vals: Vec<f32> = (lo_n..=hi_n).map(|n| n as f32 / denom).collect();
+            let (scale, inv_scale, zero) = affine_params(kind, vals[0], *vals.last().unwrap());
+            assert_eq!(zero, 0.0, "{kind:?} zero point");
+            for &x in &vals {
+                let code = encode_signed(kind, x, inv_scale, zero);
+                let y = code as f32 * scale + (-zero * scale);
+                assert_eq!(x.to_bits(), y.to_bits(), "{kind:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_kind_parses() {
+        assert_eq!(QuantKind::parse("int8"), Some(QuantKind::Int8));
+        assert_eq!(QuantKind::parse("int4"), Some(QuantKind::Int4));
+        assert_eq!(QuantKind::parse("fp8"), None);
+        assert_eq!(QuantKind::Int8.bits(), 8);
+        assert_eq!(QuantKind::Int4.name(), "int4");
     }
 }

@@ -1687,6 +1687,7 @@ pub fn serve_with_recorder(
     workload: Vec<Request>,
     recorder: Recorder,
 ) -> Result<ServeReport> {
+    exec.set_quant(config.quant)?;
     let mut session = Session::new(exec, config.clone(), scheduling);
     session.recorder = recorder;
     for req in workload {
@@ -1775,6 +1776,10 @@ impl EngineBuilder {
         if let Some(plan) = self.fault {
             exec.set_fault_plan(plan);
         }
+        // Infallible on a fresh host executor (blocked kernels, no
+        // resident shards yet).
+        exec.set_quant(self.config.quant)
+            .expect("host executor accepts the configured quantization");
         let mut session = Session::new(&exec, self.config, self.scheduling);
         if let Some(recorder) = self.recorder {
             session.recorder = recorder;
@@ -1797,6 +1802,12 @@ impl EngineBuilder {
             anyhow::bail!(
                 "fault injection is host-backend only: the fault plan hooks the host \
                  executor's per-op device map"
+            );
+        }
+        if self.config.quant.is_some() {
+            anyhow::bail!(
+                "quantized serving is host-backend only: the PJRT artifacts consume f32 \
+                 shard tensors (drop --quant, or use --backend host)"
             );
         }
         let exec = ModelExecutor::new(rt)?;

@@ -21,6 +21,7 @@ use super::{Request, Response};
 use crate::adapt::controller::ControllerConfig;
 use crate::config::{hardware::NodeConfig, model::MoEModelConfig};
 use crate::model::ModelExecutor;
+use crate::quant::QuantKind;
 use crate::runtime::PjrtRuntime;
 use crate::strategy::{AttnStrategy, ExpertStrategy};
 use crate::Result;
@@ -90,6 +91,11 @@ pub struct ServeConfig {
     /// its TTFT) land with the final chunk. Ignored by the gang
     /// scheduler, which has no peers to protect during a prefill.
     pub prefill_chunk: usize,
+    /// Weight quantization for the packed host shards (`None` = f32).
+    /// Host backend + blocked kernels only; applied to the executor by
+    /// the engine builder / `serve_with` before any shard goes
+    /// resident. See `hap serve --quant int8|int4`.
+    pub quant: Option<QuantKind>,
     /// When set, the engine runs window → plan cache → controller and
     /// executes under the controller's active plan; the fixed fields
     /// above only serve as the pre-traffic fallback.
@@ -106,6 +112,7 @@ impl ServeConfig {
             policy: RouterPolicy::Fcfs,
             queue_capacity: 1024,
             prefill_chunk: 0,
+            quant: None,
             adaptive: None,
         }
     }
@@ -119,6 +126,7 @@ impl ServeConfig {
             policy: RouterPolicy::Fcfs,
             queue_capacity: 1024,
             prefill_chunk: 0,
+            quant: None,
             adaptive: None,
         }
     }
@@ -145,7 +153,7 @@ impl ServeConfig {
     }
 
     pub fn label(&self) -> String {
-        if self.adaptive.is_some() {
+        let base = if self.adaptive.is_some() {
             format!("adaptive (fallback attn={})", self.attn.label())
         } else if self.has_transition() {
             format!(
@@ -156,6 +164,10 @@ impl ServeConfig {
             )
         } else {
             format!("attn={} experts={}", self.attn.label(), self.expert_prefill.label())
+        };
+        match self.quant {
+            Some(q) => format!("{base} quant={}", q.name()),
+            None => base,
         }
     }
 }
@@ -271,6 +283,9 @@ mod tests {
         assert!(h.has_transition());
         assert_eq!(h.label(), "attn=TP4 experts=EP4→TP4");
         assert!(ServeConfig::adaptive(4).label().contains("adaptive"));
+        let mut q = ServeConfig::tp(4);
+        q.quant = Some(QuantKind::Int8);
+        assert_eq!(q.label(), "attn=TP4 experts=TP4 quant=int8");
     }
 
     #[test]

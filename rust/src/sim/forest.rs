@@ -19,15 +19,29 @@
 //! pattern-matching 40-byte enum nodes scattered across per-tree
 //! allocations.
 //!
+//! # Shared-presort training
+//!
+//! [`RandomForest::fit`] trains through [`fit_presorted`]: every
+//! feature column is argsorted **once per fit** and shared by all
+//! trees; each tree derives its root's ordered member lists from the
+//! global order in O(n·F), and every split partitions the parent's
+//! lists order-preservingly — no node ever sorts. The per-node
+//! re-sorting path is retained in [`reference::ArenaForest::fit`];
+//! both produce members in the canonical (value, global id, slot)
+//! order at every node, so the fitted trees are **bit-identical**
+//! (asserted in `presorted_fit_matches_reference_bitwise`).
+//!
 //! # Batch evaluation
 //!
-//! [`RandomForest::predict_batch`] walks **tree-major** over a whole
-//! batch of feature rows: each tree's (hot, contiguous) node range is
-//! reused across all rows before moving to the next tree, which is what
-//! makes the planner's vectorized cost tables cheap. Per-row results
-//! are bit-identical to [`RandomForest::predict`] — both accumulate
-//! per-tree predictions in tree order and divide once — and the
-//! property tests in `rust/tests/prop_invariants.rs` pin that down.
+//! [`RandomForest::predict_batch`] dispatches on batch size: planner-
+//! sized batches (≥ 16 rows) take the **levelized breadth-first** walk
+//! (all in-flight rows advance one level per pass, so the dependent
+//! node loads pipeline across rows), smaller ones the **tree-major**
+//! walk (each tree's hot, contiguous node range is reused across all
+//! rows). Per-row results are bit-identical to
+//! [`RandomForest::predict`] in both — all paths accumulate per-tree
+//! predictions in tree order and divide once — and the property tests
+//! in `rust/tests/prop_invariants.rs` pin that down.
 
 /// Hyperparameters.
 #[derive(Debug, Clone)]
@@ -47,28 +61,33 @@ impl Default for ForestParams {
     }
 }
 
+use crate::util::rng::Rng;
+
 /// `feature` value marking a leaf node (its `threshold` is the value).
 const LEAF_SENTINEL: u32 = u32::MAX;
 
-/// Best variance-reduction split for one feature: returns (threshold,
-/// weighted child SSE).
-fn best_split_on_feature(
-    xs: &[Vec<f64>],
-    ys: &[f64],
-    idx: &[usize],
-    feature: usize,
-) -> Option<(f64, f64)> {
-    let mut pairs: Vec<(f64, f64)> = idx.iter().map(|&i| (xs[i][feature], ys[i])).collect();
-    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+/// Batch size at which [`RandomForest::predict_batch`] switches from
+/// the tree-major walk to the levelized breadth-first walk.
+const LEVELIZED_MIN_BATCH: usize = 16;
+
+/// Prefix-scan split search over one feature's members in **canonical
+/// order** — the shared scoring core of the per-node re-sorting
+/// reference path and the presorted production path. `members` yields
+/// (feature value, global sample id) in (value, global id, slot) order;
+/// both paths produce exactly that sequence, so the prefix sums — and
+/// therefore the chosen thresholds — are bit-identical. Returns
+/// (threshold, weighted child SSE).
+fn best_split_scan(pairs: &[(f64, usize)], ys: &[f64]) -> Option<(f64, f64)> {
     let n = pairs.len();
-    let total_sum: f64 = pairs.iter().map(|p| p.1).sum();
-    let total_sq: f64 = pairs.iter().map(|p| p.1 * p.1).sum();
+    let total_sum: f64 = pairs.iter().map(|p| ys[p.1]).sum();
+    let total_sq: f64 = pairs.iter().map(|p| ys[p.1] * ys[p.1]).sum();
     let mut left_sum = 0.0;
     let mut left_sq = 0.0;
     let mut best: Option<(f64, f64)> = None;
     for i in 0..n - 1 {
-        left_sum += pairs[i].1;
-        left_sq += pairs[i].1 * pairs[i].1;
+        let y = ys[pairs[i].1];
+        left_sum += y;
+        left_sq += y * y;
         // Skip ties — can't split between equal feature values.
         if pairs[i].0 == pairs[i + 1].0 {
             continue;
@@ -84,6 +103,21 @@ fn best_split_on_feature(
         }
     }
     best
+}
+
+/// Best variance-reduction split for one feature, re-sorting the node's
+/// members (the reference path). `idx` arrives in bootstrap-slot order
+/// and the sort is stable, so ties land in (value, global id, slot)
+/// order — the canonical order the presorted path reproduces.
+fn best_split_on_feature(
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    idx: &[usize],
+    feature: usize,
+) -> Option<(f64, f64)> {
+    let mut pairs: Vec<(f64, usize)> = idx.iter().map(|&i| (xs[i][feature], i)).collect();
+    pairs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    best_split_scan(&pairs, ys)
 }
 
 /// The pre-flattening enum-arena representation. Kept as the build
@@ -158,17 +192,15 @@ pub mod reference {
                 self.nodes.push(Node::Leaf { value: mean });
                 return self.nodes.len() - 1;
             };
-            // Partition indices in place.
-            let mut lo = 0;
-            let mut hi = idx.len();
-            while lo < hi {
-                if xs[idx[lo]][feature] <= threshold {
-                    lo += 1;
-                } else {
-                    hi -= 1;
-                    idx.swap(lo, hi);
-                }
-            }
+            // Order-preserving partition: children keep bootstrap-slot
+            // order, so every node's member list stays in the canonical
+            // order the presorted fast path reproduces (see
+            // [`super::fit_presorted`]).
+            let mut buf: Vec<usize> = Vec::with_capacity(idx.len());
+            buf.extend(idx.iter().copied().filter(|&i| xs[i][feature] <= threshold));
+            let lo = buf.len();
+            buf.extend(idx.iter().copied().filter(|&i| xs[i][feature] > threshold));
+            idx.copy_from_slice(&buf);
             if lo == 0 || lo == idx.len() {
                 self.nodes.push(Node::Leaf { value: mean });
                 return self.nodes.len() - 1;
@@ -241,6 +273,133 @@ pub mod reference {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Shared-presort training (the production fit path)
+// ---------------------------------------------------------------------------
+
+/// Per-fit shared feature presort: for every feature, the sample ids
+/// `0..n` ordered by (feature value, sample id). Computed **once per
+/// fit** and shared by every tree — each tree derives its root's
+/// ordered member lists from it in O(n·F), and every split partitions
+/// the parent's lists order-preservingly, so no node ever sorts.
+fn presort_columns(xs: &[Vec<f64>]) -> Vec<Vec<u32>> {
+    (0..xs[0].len())
+        .map(|f| {
+            let mut order: Vec<u32> = (0..xs.len() as u32).collect();
+            order.sort_by(|&a, &b| {
+                xs[a as usize][f]
+                    .partial_cmp(&xs[b as usize][f])
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            order
+        })
+        .collect()
+}
+
+/// Fit a forest **sharing sorted feature columns across all trees** —
+/// bit-identical to [`reference::ArenaForest::fit`] (same RNG stream,
+/// same canonical (value, global id, slot) member order at every node,
+/// same arena layout) with the per-node `O(n log n)` sorts replaced by
+/// `O(n)` order-preserving partitions of the presorted columns.
+/// [`RandomForest::fit`] trains through this path.
+pub fn fit_presorted(xs: &[Vec<f64>], ys: &[f64], params: &ForestParams) -> reference::ArenaForest {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty(), "empty training set");
+    let presort = presort_columns(xs);
+    let mut rng = Rng::new(params.seed);
+    let n = xs.len();
+    let trees = (0..params.n_trees)
+        .map(|_| {
+            // Bootstrap sample (same RNG draws as the reference fit).
+            let idx: Vec<usize> = (0..n).map(|_| rng.below(n)).collect();
+            // Bootstrap-duplicate slots of each sample, ascending.
+            let mut slots_of: Vec<Vec<u32>> = vec![Vec::new(); n];
+            for (s, &g) in idx.iter().enumerate() {
+                slots_of[g].push(s as u32);
+            }
+            // Root member lists: global presort order with duplicate
+            // slots emitted ascending → (value, global id, slot) order.
+            let cols: Vec<Vec<u32>> = presort
+                .iter()
+                .map(|order| {
+                    order
+                        .iter()
+                        .flat_map(|&g| slots_of[g as usize].iter().copied())
+                        .collect()
+                })
+                .collect();
+            let slots: Vec<u32> = (0..n as u32).collect();
+            let mut tree = reference::Tree { nodes: Vec::new() };
+            build_presorted(&mut tree, xs, ys, &idx, slots, cols, 0, params, &mut rng);
+            tree
+        })
+        .collect();
+    reference::ArenaForest { trees }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_presorted(
+    tree: &mut reference::Tree,
+    xs: &[Vec<f64>],
+    ys: &[f64],
+    idx: &[usize],
+    slots: Vec<u32>,
+    cols: Vec<Vec<u32>>,
+    depth: usize,
+    params: &ForestParams,
+    rng: &mut Rng,
+) -> usize {
+    let mean = slots.iter().map(|&s| ys[idx[s as usize]]).sum::<f64>() / slots.len() as f64;
+    if depth >= params.max_depth || slots.len() < params.min_split {
+        tree.nodes.push(reference::Node::Leaf { value: mean });
+        return tree.nodes.len() - 1;
+    }
+    let n_features = xs[0].len();
+    let k = params.max_features.unwrap_or(n_features).min(n_features);
+    let mut feats: Vec<usize> = (0..n_features).collect();
+    rng.shuffle(&mut feats);
+    feats.truncate(k);
+
+    let mut best: Option<(usize, f64, f64)> = None;
+    let mut pairs: Vec<(f64, usize)> = Vec::with_capacity(slots.len());
+    for &f in &feats {
+        pairs.clear();
+        pairs.extend(cols[f].iter().map(|&s| (xs[idx[s as usize]][f], idx[s as usize])));
+        if let Some((thr, score)) = best_split_scan(&pairs, ys) {
+            if best.map_or(true, |(_, _, s)| score < s) {
+                best = Some((f, thr, score));
+            }
+        }
+    }
+    let Some((feature, threshold, _)) = best else {
+        tree.nodes.push(reference::Node::Leaf { value: mean });
+        return tree.nodes.len() - 1;
+    };
+    let goes_left = |s: u32| xs[idx[s as usize]][feature] <= threshold;
+    let (left_slots, right_slots): (Vec<u32>, Vec<u32>) =
+        slots.iter().copied().partition(|&s| goes_left(s));
+    if left_slots.is_empty() || right_slots.is_empty() {
+        tree.nodes.push(reference::Node::Leaf { value: mean });
+        return tree.nodes.len() - 1;
+    }
+    // Order-preserving column partition: each child's per-feature list
+    // stays in (value, global id, slot) order — no re-sorting, ever.
+    let mut left_cols = Vec::with_capacity(cols.len());
+    let mut right_cols = Vec::with_capacity(cols.len());
+    for col in &cols {
+        let (l, r): (Vec<u32>, Vec<u32>) = col.iter().copied().partition(|&s| goes_left(s));
+        left_cols.push(l);
+        right_cols.push(r);
+    }
+    let my_slot = tree.nodes.len();
+    tree.nodes.push(reference::Node::Leaf { value: mean }); // placeholder
+    let li = build_presorted(tree, xs, ys, idx, left_slots, left_cols, depth + 1, params, rng);
+    let ri = build_presorted(tree, xs, ys, idx, right_slots, right_cols, depth + 1, params, rng);
+    tree.nodes[my_slot] = reference::Node::Split { feature, threshold, left: li, right: ri };
+    my_slot
+}
+
 /// Bagged ensemble of CART regression trees in the flattened SoA
 /// layout (see the module docs).
 #[derive(Debug, Clone)]
@@ -257,9 +416,11 @@ pub struct RandomForest {
 }
 
 impl RandomForest {
-    /// Fit on feature rows `xs` and targets `ys`.
+    /// Fit on feature rows `xs` and targets `ys`, training through the
+    /// shared-presort path ([`fit_presorted`]) — bit-identical trees to
+    /// the re-sorting [`reference::ArenaForest::fit`].
     pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: &ForestParams) -> RandomForest {
-        Self::flatten(&reference::ArenaForest::fit(xs, ys, params))
+        Self::flatten(&fit_presorted(xs, ys, params))
     }
 
     /// Flatten an enum-arena ensemble into the SoA layout. Node order
@@ -317,13 +478,69 @@ impl RandomForest {
         s / self.roots.len() as f64
     }
 
-    /// Batch prediction, traversing tree-major for cache locality.
-    /// Per-row results are bit-identical to [`Self::predict`].
+    /// Batch prediction. Dispatches on batch size: planner-sized
+    /// batches (≥ 16 rows) take the levelized breadth-first walk,
+    /// smaller ones the tree-major walk. Per-row results are
+    /// bit-identical to [`Self::predict`] either way — both accumulate
+    /// one leaf value per tree in tree order and divide once.
     pub fn predict_batch(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        if xs.len() >= LEVELIZED_MIN_BATCH {
+            self.predict_batch_levelized(xs)
+        } else {
+            self.predict_batch_tree_major(xs)
+        }
+    }
+
+    /// Tree-major batch walk: each tree's (hot, contiguous) node range
+    /// is reused across all rows before moving to the next tree.
+    pub fn predict_batch_tree_major(&self, xs: &[Vec<f64>]) -> Vec<f64> {
         let mut acc = vec![0.0f64; xs.len()];
         for &root in &self.roots {
             for (a, x) in acc.iter_mut().zip(xs) {
                 *a += self.predict_tree(root, x);
+            }
+        }
+        let n = self.roots.len() as f64;
+        for a in &mut acc {
+            // Same final op as `predict` (divide, not multiply-by-inverse)
+            // to stay bit-identical.
+            *a /= n;
+        }
+        acc
+    }
+
+    /// Levelized breadth-first batch walk: per tree, every in-flight
+    /// row advances one level per pass, so the inner loop is a run of
+    /// independent row steps over one shallow node front instead of a
+    /// full dependent pointer chase per row — the loads pipeline across
+    /// rows. Rows retire from the front as they reach a leaf.
+    pub fn predict_batch_levelized(&self, xs: &[Vec<f64>]) -> Vec<f64> {
+        let mut acc = vec![0.0f64; xs.len()];
+        let mut cursor: Vec<u32> = vec![0; xs.len()];
+        let mut front: Vec<u32> = Vec::with_capacity(xs.len());
+        let mut next: Vec<u32> = Vec::with_capacity(xs.len());
+        for &root in &self.roots {
+            cursor.iter_mut().for_each(|c| *c = root);
+            front.clear();
+            front.extend(0..xs.len() as u32);
+            while !front.is_empty() {
+                next.clear();
+                for &row in &front {
+                    let i = cursor[row as usize] as usize;
+                    let f = self.feature[i];
+                    let t = self.threshold[i];
+                    if f == LEAF_SENTINEL {
+                        acc[row as usize] += t;
+                    } else {
+                        cursor[row as usize] = if xs[row as usize][f as usize] <= t {
+                            self.left[i]
+                        } else {
+                            self.right[i]
+                        };
+                        next.push(row);
+                    }
+                }
+                std::mem::swap(&mut front, &mut next);
             }
         }
         let n = self.roots.len() as f64;
@@ -430,6 +647,45 @@ mod tests {
         assert_eq!(arena.n_trees(), soa.n_trees());
         for x in xs.iter().take(64) {
             assert_eq!(arena.predict(x).to_bits(), soa.predict(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn presorted_fit_matches_reference_bitwise() {
+        // Duplicated feature values stress the tie-break: both paths
+        // must order ties by (value, global id, slot).
+        let (mut xs, ys) = make_dataset(300, 10, |a, b| a * 0.5 - b);
+        for row in xs.iter_mut().step_by(3) {
+            row[0] = row[0].round(); // force cross-sample duplicates
+        }
+        let params = ForestParams { n_trees: 12, max_depth: 8, ..Default::default() };
+        let resorted = RandomForest::flatten(&reference::ArenaForest::fit(&xs, &ys, &params));
+        let presorted = RandomForest::flatten(&fit_presorted(&xs, &ys, &params));
+        assert_eq!(resorted.roots, presorted.roots);
+        assert_eq!(resorted.feature, presorted.feature);
+        assert_eq!(resorted.left, presorted.left);
+        assert_eq!(resorted.right, presorted.right);
+        let same_thresholds = resorted
+            .threshold
+            .iter()
+            .zip(&presorted.threshold)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(same_thresholds, "presorted fit drifted from the re-sorting reference");
+    }
+
+    #[test]
+    fn levelized_matches_tree_major_bitwise() {
+        let (xs, ys) = make_dataset(400, 11, |a, b| (a - b).sin() + a * 0.1);
+        let forest = RandomForest::fit(&xs, &ys, &ForestParams::default());
+        for rows in [1usize, 5, 16, 97] {
+            let (qs, _) = make_dataset(rows, 12, |a, b| a + b);
+            let tree_major = forest.predict_batch_tree_major(&qs);
+            let levelized = forest.predict_batch_levelized(&qs);
+            let dispatched = forest.predict_batch(&qs);
+            for ((a, b), c) in tree_major.iter().zip(&levelized).zip(&dispatched) {
+                assert_eq!(a.to_bits(), b.to_bits(), "levelized diverged at {rows} rows");
+                assert_eq!(a.to_bits(), c.to_bits(), "dispatch diverged at {rows} rows");
+            }
         }
     }
 

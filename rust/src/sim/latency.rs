@@ -164,7 +164,10 @@ static MODEL_CACHE: OnceLock<Mutex<Vec<((GpuSpec, u64), Arc<LatencyModel>)>>> = 
 
 impl LatencyModel {
     /// Train the η/ρ regressors for a GPU platform. Deterministic for a
-    /// given seed; takes a few milliseconds. The three forests are
+    /// given seed; takes a few milliseconds. Each forest fit shares one
+    /// presorted set of feature columns across all its trees
+    /// ([`crate::sim::forest::fit_presorted`] — bit-identical to the
+    /// per-node re-sorting reference). The three forests are
     /// independent (disjoint seeded training sets), so they fit under
     /// `std::thread::scope` in parallel — bit-identical to the serial
     /// path kept as [`Self::train_serial`] (ROADMAP: batched microbench

@@ -260,6 +260,7 @@ fn host_serving_tokens_invariant_across_plans() {
         policy: hap::serving::RouterPolicy::Fcfs,
         queue_capacity: 1024,
         prefill_chunk: 0,
+        quant: None,
         adaptive: None,
     };
     let mut reference: Option<Vec<(u64, Vec<i32>)>> = None;

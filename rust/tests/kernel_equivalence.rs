@@ -1,0 +1,442 @@
+//! Blocked/SIMD and fused-quant kernel equivalence sweeps (ISSUE 8).
+//!
+//! The blocked host kernels ([`hap::model::kernels`]) promise *bitwise*
+//! equality with the scalar reference path (`kernels::reference`): the
+//! packed layout changes traversal order, never the per-element
+//! accumulation order. These property sweeps drive ragged shapes (rows,
+//! cols, and reduction dims off the `NB = 16` panel size, GQA head
+//! groups, top-k edges) through both paths and compare `to_bits`.
+//! Built with `--features simd`, the same sweeps cover the explicit
+//! SSE2 lane kernel — the blocked path dispatches to it internally.
+//!
+//! The quantized path promises something weaker by design (int8/int4
+//! round-tripping is lossy) but exact in a testable sense: the fused
+//! dequant-matmul equals the reference matmul run on
+//! `PackedQuant::dequantized()` bitwise, and on weights that sit
+//! exactly on the quantization grid (so dequantization reproduces
+//! every value), end-to-end quantized serving emits *identical greedy
+//! tokens* to the f32 engine.
+
+use hap::model::kernels::{
+    self, reference, AttnWeights, ExpertWeights, HeadWeights, PackedRhs, NB, QUANT_GROUP,
+};
+use hap::model::{ModelExecutor, WeightStore};
+use hap::prop_assert;
+use hap::quant::QuantKind;
+use hap::runtime::literal::HostTensor;
+use hap::runtime::TinyModelMeta;
+use hap::serving::{serve_on, Request, ServeConfig};
+use hap::util::prop::check_default;
+use hap::util::rng::Rng;
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Draw a dimension that is deliberately often *not* a multiple of the
+/// panel size: raw 1..=hi, snapped to a multiple of NB a quarter of the
+/// time so exact-fit panels stay covered too.
+fn ragged_dim(rng: &mut Rng, hi: usize) -> usize {
+    let n = rng.range(1, hi);
+    if rng.chance(0.25) {
+        (n.div_ceil(NB) * NB).min(hi.div_ceil(NB) * NB)
+    } else {
+        n
+    }
+}
+
+fn tensor(rng: &mut Rng, shape: Vec<usize>) -> HostTensor {
+    let n = shape.iter().product();
+    HostTensor::new(shape, rng.normal_vec_f32(n, 0.5))
+}
+
+// ---------------------------------------------------------------------------
+// Packed matmul core
+// ---------------------------------------------------------------------------
+
+#[test]
+fn blocked_matmul_matches_reference_bitwise() {
+    check_default("blocked matmul ≡ scalar reference", |rng| {
+        let rows = rng.range(1, 24);
+        let k = ragged_dim(rng, 70);
+        let cols = ragged_dim(rng, 70);
+        let a = rng.normal_vec_f32(rows * k, 0.5);
+        let b = rng.normal_vec_f32(k * cols, 0.5);
+        let packed = PackedRhs::pack_slice(&b, k, cols, None);
+        let got = packed.matmul(&a, rows);
+        let want = reference::matmul(&a, rows, k, &b, cols);
+        prop_assert!(
+            bits_eq(&got, &want),
+            "blocked [{rows}x{k}]@[{k}x{cols}] diverges from reference"
+        );
+        prop_assert!(bits_eq(&packed.dequantized(), &b), "f32 pack/unpack not lossless");
+        Ok(())
+    });
+}
+
+#[test]
+fn fused_quant_matmul_matches_reference_on_dequantized() {
+    for kind in [QuantKind::Int8, QuantKind::Int4] {
+        check_default(&format!("fused {} matmul ≡ reference on dequantized", kind.name()), |rng| {
+            let rows = rng.range(1, 16);
+            let k = ragged_dim(rng, 50);
+            // Cross the QUANT_GROUP boundary and leave ragged tail groups.
+            let cols = rng.range(1, 2 * QUANT_GROUP + NB + 3);
+            let a = rng.normal_vec_f32(rows * k, 0.5);
+            let b = rng.normal_vec_f32(k * cols, 0.5);
+            let packed = PackedRhs::pack_slice(&b, k, cols, Some(kind));
+            let got = packed.matmul(&a, rows);
+            let deq = packed.dequantized();
+            let want = reference::matmul(&a, rows, k, &deq, cols);
+            prop_assert!(
+                bits_eq(&got, &want),
+                "fused {} [{rows}x{k}]@[{k}x{cols}] diverges from dequantized reference",
+                kind.name()
+            );
+            Ok(())
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Head, gate, expert module
+// ---------------------------------------------------------------------------
+
+#[test]
+fn blocked_head_and_topk_gate_match_reference() {
+    check_default("blocked head + top-k gate ≡ reference", |rng| {
+        let b = rng.range(1, 6);
+        let h = ragged_dim(rng, 48);
+        let v = ragged_dim(rng, 60);
+        let e = rng.range(2, 9);
+        // Hit both top-k edges (k = 1, k = E) often.
+        let top_k = match rng.below(4) {
+            0 => 1,
+            1 => e,
+            _ => rng.range(1, e),
+        };
+        let x = tensor(rng, vec![b, h]);
+        let ln = tensor(rng, vec![h]);
+        let unembed = tensor(rng, vec![h, v]);
+        let router = tensor(rng, vec![h, e]);
+
+        let got = kernels::head(&x, &HeadWeights::new(&ln, &unembed));
+        let want = reference::head(&x, &ln, &unembed);
+        prop_assert!(bits_eq(&got.data, &want.data), "head [{b}x{h}]→[{b}x{v}] diverges");
+
+        let xn = kernels::rms_norm(&x, &ln);
+        let got = kernels::topk_gate(&xn, &PackedRhs::pack(&router, None), top_k);
+        let want = reference::topk_gate(&xn, &router, top_k);
+        prop_assert!(bits_eq(&got.data, &want.data), "top-{top_k}/{e} gate diverges");
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_expert_module_matches_reference() {
+    check_default("sparse-gather expert module ≡ dense reference", |rng| {
+        let t = rng.range(1, 8);
+        let h = ragged_dim(rng, 40);
+        let i = ragged_dim(rng, 40);
+        let e = rng.range(2, 8);
+        let top_k = match rng.below(4) {
+            0 => 1,
+            1 => e,
+            _ => rng.range(1, e),
+        };
+        let x = tensor(rng, vec![t, h]);
+        let ln = tensor(rng, vec![h]);
+        let router = tensor(rng, vec![h, e]);
+        let wg = tensor(rng, vec![e, h, i]);
+        let wu = tensor(rng, vec![e, h, i]);
+        let wd = tensor(rng, vec![e, i, h]);
+
+        let shard = vec![ln.clone(), router.clone(), wg.clone(), wu.clone(), wd.clone()];
+        let packed = ExpertWeights::from_shard(&shard, 1, None).unwrap();
+        let got = kernels::expert_module(&x, &packed, top_k).unwrap();
+        let want = reference::expert_module(&x, &shard, 1, top_k).unwrap();
+        prop_assert!(
+            bits_eq(&got.data, &want.data),
+            "expert module t={t} h={h} i={i} top-{top_k}/{e} diverges"
+        );
+
+        // EP block variant: a contiguous half of the experts behind a
+        // one-hot selector (how `shard_expert` hands EP shards over).
+        let e_l = e / 2;
+        if e_l > 0 {
+            let b0 = rng.below(2) * e_l;
+            let mut sel = vec![0f32; e_l * e];
+            for j in 0..e_l {
+                sel[j * e + b0 + j] = 1.0;
+            }
+            let block = |t3: &HostTensor, k: usize, cols: usize| {
+                HostTensor::new(
+                    vec![e_l, k, cols],
+                    t3.data[b0 * k * cols..(b0 + e_l) * k * cols].to_vec(),
+                )
+            };
+            let shard = vec![
+                ln,
+                router,
+                HostTensor::new(vec![e_l, e], sel),
+                block(&wg, h, i),
+                block(&wu, h, i),
+                block(&wd, i, h),
+            ];
+            let packed = ExpertWeights::from_shard(&shard, 2, None).unwrap();
+            let got = kernels::expert_module(&x, &packed, top_k).unwrap();
+            let want = reference::expert_module(&x, &shard, 2, top_k).unwrap();
+            prop_assert!(
+                bits_eq(&got.data, &want.data),
+                "EP expert block [{b0}, {}) top-{top_k}/{e} diverges",
+                b0 + e_l
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Attention (GQA prefill, ranged chunks, decode, slot decode)
+// ---------------------------------------------------------------------------
+
+/// Random attention shard `[ln, wq, wk, wv, wo]` for a GQA geometry.
+fn attn_shard(rng: &mut Rng, h: usize, q: usize, kv: usize, hd: usize) -> Vec<HostTensor> {
+    vec![
+        tensor(rng, vec![h]),
+        tensor(rng, vec![h, q * hd]),
+        tensor(rng, vec![h, kv * hd]),
+        tensor(rng, vec![h, kv * hd]),
+        tensor(rng, vec![q * hd, h]),
+    ]
+}
+
+#[test]
+fn blocked_attention_prefill_matches_reference() {
+    check_default("blocked GQA prefill ≡ reference", |rng| {
+        let b = rng.range(1, 3);
+        let s = rng.range(1, 6);
+        let h = ragged_dim(rng, 36);
+        let kv = rng.range(1, 3);
+        let q = kv * rng.range(1, 3);
+        let hd = rng.range(1, 7);
+        let x = tensor(rng, vec![b, s, h]);
+        let shard = attn_shard(rng, h, q, kv, hd);
+        let packed = AttnWeights::from_shard(&shard, None).unwrap();
+
+        let (got, gk, gv) = kernels::attention_prefill(&x, &packed, q, kv, hd).unwrap();
+        let (want, wk, wv) = reference::attention_prefill(&x, &shard, q, kv, hd).unwrap();
+        prop_assert!(bits_eq(&got.data, &want.data), "prefill out b={b} s={s} q={q}/{kv} hd={hd}");
+        prop_assert!(bits_eq(&gk.data, &wk.data), "prefill K diverges");
+        prop_assert!(bits_eq(&gv.data, &wv.data), "prefill V diverges");
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_ranged_prefill_matches_reference() {
+    check_default("blocked ranged prefill chunk ≡ reference", |rng| {
+        let h = ragged_dim(rng, 36);
+        let kv = rng.range(1, 3);
+        let q = kv * rng.range(1, 3);
+        let hd = rng.range(1, 7);
+        let c = rng.range(1, 5);
+        let start = rng.range(0, 4);
+        let slots = 2;
+        let m = start + c + rng.range(0, 3);
+        let row = rng.below(slots);
+        let x = tensor(rng, vec![1, c, h]);
+        let shard = attn_shard(rng, h, q, kv, hd);
+        let packed = AttnWeights::from_shard(&shard, None).unwrap();
+
+        // Both paths resume against the same already-written KV prefix.
+        let kc0 = tensor(rng, vec![slots, m, kv * hd]);
+        let vc0 = tensor(rng, vec![slots, m, kv * hd]);
+        let (mut kc_a, mut vc_a) = (kc0.clone(), vc0.clone());
+        let (mut kc_b, mut vc_b) = (kc0, vc0);
+        let got = kernels::attention_prefill_ranged(
+            &x, &mut kc_a, &mut vc_a, row, start, &packed, q, kv, hd,
+        )
+        .unwrap();
+        let want = reference::attention_prefill_ranged(
+            &x, &mut kc_b, &mut vc_b, row, start, &shard, q, kv, hd,
+        )
+        .unwrap();
+        prop_assert!(bits_eq(&got.data, &want.data), "chunk out {start}..{} row {row}", start + c);
+        prop_assert!(bits_eq(&kc_a.data, &kc_b.data), "chunk K cache diverges");
+        prop_assert!(bits_eq(&vc_a.data, &vc_b.data), "chunk V cache diverges");
+        Ok(())
+    });
+}
+
+#[test]
+fn blocked_decode_and_slot_decode_match_reference() {
+    check_default("blocked decode / slot decode ≡ reference", |rng| {
+        let b = rng.range(1, 4);
+        let h = ragged_dim(rng, 36);
+        let kv = rng.range(1, 3);
+        let q = kv * rng.range(1, 3);
+        let hd = rng.range(1, 7);
+        let m = rng.range(1, 8);
+        let x = tensor(rng, vec![b, 1, h]);
+        let shard = attn_shard(rng, h, q, kv, hd);
+        let packed = AttnWeights::from_shard(&shard, None).unwrap();
+        let kc0 = tensor(rng, vec![b, m, kv * hd]);
+        let vc0 = tensor(rng, vec![b, m, kv * hd]);
+
+        // Uniform decode (every row at the same position).
+        let pos = rng.below(m);
+        let (mut kc_a, mut vc_a) = (kc0.clone(), vc0.clone());
+        let (mut kc_b, mut vc_b) = (kc0.clone(), vc0.clone());
+        let got =
+            kernels::attention_decode(&x, &mut kc_a, &mut vc_a, pos, &packed, q, kv, hd).unwrap();
+        let want =
+            reference::attention_decode(&x, &mut kc_b, &mut vc_b, pos, &shard, q, kv, hd).unwrap();
+        prop_assert!(bits_eq(&got.data, &want.data), "decode out pos={pos}/{m} diverges");
+        prop_assert!(bits_eq(&kc_a.data, &kc_b.data), "decode K cache diverges");
+
+        // Slot decode: ragged positions, some rows retired.
+        let pos: Vec<usize> = (0..b).map(|_| rng.below(m)).collect();
+        let active: Vec<bool> = (0..b).map(|_| rng.chance(0.7)).collect();
+        let (mut kc_a, mut vc_a) = (kc0.clone(), vc0.clone());
+        let (mut kc_b, mut vc_b) = (kc0, vc0);
+        let got = kernels::attention_decode_slots(
+            &x, &mut kc_a, &mut vc_a, &pos, &active, &packed, q, kv, hd,
+        )
+        .unwrap();
+        let want = reference::attention_decode_slots(
+            &x, &mut kc_b, &mut vc_b, &pos, &active, &shard, q, kv, hd,
+        )
+        .unwrap();
+        prop_assert!(bits_eq(&got.data, &want.data), "slot decode out {pos:?}/{active:?}");
+        prop_assert!(bits_eq(&kc_a.data, &kc_b.data), "slot decode K cache diverges");
+        prop_assert!(bits_eq(&vc_a.data, &vc_b.data), "slot decode V cache diverges");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end quantized serving: exact-grid weights → identical tokens
+// ---------------------------------------------------------------------------
+
+/// Fill a weight tensor with values that sit exactly on `kind`'s
+/// quantization grid, with both grid endpoints present in every
+/// per-`(row, group)` quantization group. The group's affine params
+/// then come out exact (int8: scale `1/256`, zero 0; int4: `1/16`,
+/// zero 0 — all powers of two), so quantize→dequantize reproduces every
+/// weight bit-for-bit and the quantized engine must emit the same
+/// greedy tokens as f32.
+fn grid_tensor(shape: &[usize], kind: QuantKind, salt: usize) -> HostTensor {
+    let cols = *shape.last().unwrap();
+    let rows: usize = shape.iter().product::<usize>() / cols;
+    let (lo_n, hi_n, denom, stride) = match kind {
+        QuantKind::Int8 => (-128i32, 127i32, 256.0f32, 37usize),
+        QuantKind::Int4 => (-8, 7, 16.0, 5),
+    };
+    let span = (hi_n - lo_n + 1) as usize;
+    let mut data = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        let mut c = 0;
+        while c < cols {
+            let gs = (cols - c).min(QUANT_GROUP);
+            for j in 0..gs {
+                let n = if gs < 2 {
+                    0
+                } else if j == 0 {
+                    lo_n
+                } else if j == 1 {
+                    hi_n
+                } else {
+                    lo_n + (((r * 31 + c + j + salt) * stride) % span) as i32
+                };
+                data.push(n as f32 / denom);
+            }
+            c += gs;
+        }
+    }
+    HostTensor::new(shape.to_vec(), data)
+}
+
+/// Synthetic host-demo weights with every quantized matrix (attention
+/// projections + expert FFN) replaced by exact-grid values.
+fn grid_store(kind: QuantKind) -> WeightStore {
+    let meta = TinyModelMeta::host_demo();
+    let mut store = WeightStore::synthetic(&meta, 0xE16);
+    for l in 0..meta.layers {
+        for (salt, name) in ["wq", "wk", "wv", "wo", "wg", "wu", "wd"].iter().enumerate() {
+            let full = format!("layer{l}.{name}");
+            let shape = store.get(&full).unwrap().shape.clone();
+            store.replace(&full, grid_tensor(&shape, kind, l * 7 + salt)).unwrap();
+        }
+    }
+    store
+}
+
+fn quant_workload(meta: &TinyModelMeta) -> Vec<Request> {
+    (0..meta.batch as u64)
+        .map(|i| {
+            let prompt: Vec<i32> =
+                (0..12).map(|t| ((i as usize * 29 + t * 13 + 7) % meta.vocab) as i32).collect();
+            Request::new(i, prompt, 6)
+        })
+        .collect()
+}
+
+fn assert_quant_tokens_identical(kind: QuantKind) {
+    let meta = TinyModelMeta::host_demo();
+    // tp(1): shard tensors are the full matrices, so slicing cannot
+    // move quantization-group boundaries off the grid layout.
+    let config = ServeConfig::tp(1);
+    let mut exec = ModelExecutor::host(grid_store(kind));
+    let f32_report = serve_on(&mut exec, &config, quant_workload(&meta)).unwrap();
+
+    let mut qconfig = config;
+    qconfig.quant = Some(kind);
+    let mut exec = ModelExecutor::host(grid_store(kind));
+    let q_report = serve_on(&mut exec, &qconfig, quant_workload(&meta)).unwrap();
+
+    let by_id = |mut rs: Vec<hap::serving::server::Response>| {
+        rs.sort_by_key(|r| r.id);
+        rs
+    };
+    let (f32_rs, q_rs) = (by_id(f32_report.responses), by_id(q_report.responses));
+    assert_eq!(f32_rs.len(), q_rs.len());
+    for (a, b) in f32_rs.iter().zip(&q_rs) {
+        assert!(!a.tokens.is_empty(), "request {} generated nothing", a.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "{} serving changed request {}'s greedy tokens",
+            kind.name(),
+            a.id
+        );
+    }
+}
+
+#[test]
+fn int8_serving_emits_identical_greedy_tokens_on_grid_weights() {
+    assert_quant_tokens_identical(QuantKind::Int8);
+}
+
+#[test]
+fn int4_serving_emits_identical_greedy_tokens_on_grid_weights() {
+    assert_quant_tokens_identical(QuantKind::Int4);
+}
+
+/// The premise of the serving test, checked directly: grid weights
+/// survive quantize→dequantize bit-for-bit (including tensors whose
+/// trailing group is ragged).
+#[test]
+fn grid_tensors_round_trip_exactly() {
+    for kind in [QuantKind::Int8, QuantKind::Int4] {
+        for shape in [vec![3, 96], vec![2, 5, 64], vec![4, 32], vec![7, 130]] {
+            let t = grid_tensor(&shape, kind, 3);
+            let cols = *shape.last().unwrap();
+            let packed = PackedRhs::pack_slice(&t.data, t.data.len() / cols, cols, Some(kind));
+            assert!(
+                bits_eq(&packed.dequantized(), &t.data),
+                "{} grid round-trip lost bits for shape {shape:?}",
+                kind.name()
+            );
+        }
+    }
+}
