@@ -1,0 +1,217 @@
+//! §Paged-KV benchmark — BENCH_paged_kv.json at the repo root.
+//!
+//! A shared-system-prompt trace (every request opens with the same
+//! prompt) served twice at **equal KV memory**:
+//!
+//!  - **padded baseline**: the host-demo grid (4 slots × `max_len`
+//!    rows = 192 cached tokens, allocated up front per slot);
+//!  - **paged**: 8 slots over a 24-block pool of 8-token blocks — the
+//!    same 192-token capacity — with copy-on-write prefix sharing, so
+//!    admission is bounded by *reserved blocks*, not slot rows.
+//!
+//! Reported: admitted concurrency (peak live slots), peak KV bytes
+//! actually in use, mean TTFT, and the prefix-cache hit counters. The
+//! paged run must admit strictly more concurrent requests and touch
+//! fewer peak KV bytes, at per-request tokens bit-identical to the
+//! padded baseline.
+
+use hap::benchkit::{banner, bench, write_results, Table};
+use hap::model::{KvLayout, PagedKvStats, WeightStore};
+use hap::runtime::TinyModelMeta;
+use hap::serving::{Engine, Request, ServeConfig, ServeReport};
+use hap::util::json::Json;
+use hap::util::rng::Rng;
+
+/// Every request carries the same system prompt (two tokens short of
+/// `prefill_len`, so left-padding is exercised) and a small per-request
+/// generation budget.
+fn shared_prompt_workload(m: &TinyModelMeta, n: usize) -> Vec<Request> {
+    let mut rng = Rng::new(11);
+    let prompt: Vec<i32> =
+        (0..m.prefill_len - 2).map(|_| rng.below(m.vocab) as i32).collect();
+    (0..n as u64).map(|id| Request::new(id, prompt.clone(), 4)).collect()
+}
+
+fn sorted_tokens(report: &ServeReport) -> Vec<(u64, Vec<i32>)> {
+    let mut t: Vec<(u64, Vec<i32>)> =
+        report.responses.iter().map(|r| (r.id, r.tokens.clone())).collect();
+    t.sort();
+    t
+}
+
+struct RunStats {
+    iters: usize,
+    /// Peak live slots over the run — the admitted concurrency.
+    max_running: usize,
+    /// Peak pool blocks in use (paged runs only).
+    peak_blocks: usize,
+    kv: Option<PagedKvStats>,
+    report: ServeReport,
+}
+
+/// Serve the shared-prompt workload on a tp=4 streaming engine,
+/// tracking peak concurrency and peak block occupancy per iteration.
+fn serve(m: &TinyModelMeta, kv: KvLayout, n: usize) -> anyhow::Result<RunStats> {
+    let mut config = ServeConfig::tp(4);
+    config.kv = kv;
+    let mut engine = Engine::builder(config).build_host(WeightStore::synthetic(m, 42));
+    for req in shared_prompt_workload(m, n) {
+        engine.submit(req)?;
+    }
+    let mut iters = 0usize;
+    let (mut max_running, mut peak_blocks) = (0usize, 0usize);
+    loop {
+        let out = engine.step()?;
+        iters += 1;
+        max_running = max_running.max(out.running);
+        if let Some(stats) = engine.executor().paged_stats() {
+            peak_blocks = peak_blocks.max(stats.blocks_in_use);
+        }
+        if out.idle() {
+            break;
+        }
+    }
+    let kv_stats = engine.executor().paged_stats();
+    Ok(RunStats { iters, max_running, peak_blocks, kv: kv_stats, report: engine.shutdown()? })
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("paged_kv", "paged vs padded KV at equal memory: concurrency, TTFT, peak bytes");
+    let n = 24usize;
+
+    // Padded baseline: host-demo shape, 4 slots, each owning a full
+    // max_len KV row — 4 × 48 = 192 cached-token capacity.
+    let padded_meta = TinyModelMeta::host_demo();
+    // Paged: twice the slots, but the *same* 192-token KV capacity
+    // carved into 24 blocks of 8 tokens; admission reserves blocks.
+    let mut paged_meta = TinyModelMeta::host_demo();
+    paged_meta.batch = 8;
+    const BLOCK_SIZE: usize = 8;
+    const NUM_BLOCKS: usize = 24;
+    let layout = KvLayout::Paged { block_size: BLOCK_SIZE, num_blocks: NUM_BLOCKS };
+    assert_eq!(
+        NUM_BLOCKS * BLOCK_SIZE,
+        padded_meta.batch * padded_meta.max_len,
+        "the comparison holds KV token capacity equal"
+    );
+    // Logical bytes per cached token (K + V, f32, all layers).
+    let tok_bytes = padded_meta.layers * padded_meta.kv_heads * padded_meta.head_dim * 2 * 4;
+
+    // --- Correctness gate: identical per-request tokens, more
+    // concurrency, fewer peak KV bytes.
+    let padded = serve(&padded_meta, KvLayout::Padded, n)?;
+    let paged = serve(&paged_meta, layout, n)?;
+    assert_eq!(padded.report.metrics.requests_completed, n);
+    assert_eq!(paged.report.metrics.requests_completed, n, "paged run lost requests");
+    assert_eq!(
+        sorted_tokens(&paged.report),
+        sorted_tokens(&padded.report),
+        "paged tokens diverged from the padded baseline"
+    );
+    assert!(
+        paged.max_running > padded.max_running,
+        "paged must admit more concurrent requests at equal KV memory \
+         (paged {} vs padded {})",
+        paged.max_running,
+        padded.max_running
+    );
+    let padded_peak_bytes = padded_meta.batch * padded_meta.max_len * tok_bytes;
+    let paged_peak_bytes = paged.peak_blocks * BLOCK_SIZE * tok_bytes;
+    assert!(
+        paged_peak_bytes < padded_peak_bytes,
+        "prefix sharing must keep peak block bytes under the padded allocation \
+         ({paged_peak_bytes} vs {padded_peak_bytes})"
+    );
+    let kv = paged.kv.expect("paged run exposes pool stats");
+    assert!(kv.prefix_hits > 0, "shared prompts must hit the prefix trie");
+    println!(
+        "paged: {}/{} slots live at peak (padded {}), {} prefix hits sharing {} tokens, \
+         {} COW copies, peak {} of {} blocks",
+        paged.max_running,
+        paged_meta.batch,
+        padded.max_running,
+        kv.prefix_hits,
+        kv.prefix_shared_tokens,
+        kv.cow_copies,
+        paged.peak_blocks,
+        NUM_BLOCKS
+    );
+
+    // --- Wall time per layout.
+    let t_padded = bench("paged-kv-padded-4slot", 1, 1.0, || {
+        std::hint::black_box(serve(&padded_meta, KvLayout::Padded, n).unwrap());
+    });
+    let t_paged = bench("paged-kv-paged-8slot", 1, 1.0, || {
+        std::hint::black_box(serve(&paged_meta, layout, n).unwrap());
+    });
+
+    let mut table = Table::new(&[
+        "layout",
+        "slots",
+        "peak live",
+        "peak KV bytes",
+        "mean TTFT",
+        "sched iters",
+        "median",
+    ]);
+    for (name, meta, run, peak_bytes, t) in [
+        ("padded", &padded_meta, &padded, padded_peak_bytes, &t_padded),
+        ("paged 24x8", &paged_meta, &paged, paged_peak_bytes, &t_paged),
+    ] {
+        table.row(&[
+            name.into(),
+            format!("{}", meta.batch),
+            format!("{}", run.max_running),
+            format!("{peak_bytes}"),
+            hap::util::fmt_secs(run.report.metrics.mean_ttft()),
+            format!("{}", run.iters),
+            hap::util::fmt_secs(t.median),
+        ]);
+    }
+    table.print();
+
+    let run_json = |run: &RunStats, peak_bytes: usize, slots: usize, median: f64| {
+        Json::obj(vec![
+            ("slots", slots.into()),
+            ("max_running", run.max_running.into()),
+            ("peak_kv_bytes", peak_bytes.into()),
+            ("mean_ttft_s", run.report.metrics.mean_ttft().into()),
+            ("sched_iters", run.iters.into()),
+            ("median_s", median.into()),
+        ])
+    };
+    let summary = Json::obj(vec![
+        ("bench", "paged_kv".into()),
+        ("profile", "release".into()),
+        ("requests", n.into()),
+        ("kv_token_capacity", (NUM_BLOCKS * BLOCK_SIZE).into()),
+        ("padded", run_json(&padded, padded_peak_bytes, padded_meta.batch, t_padded.median)),
+        (
+            "paged",
+            Json::obj(vec![
+                ("slots", paged_meta.batch.into()),
+                ("block_size", BLOCK_SIZE.into()),
+                ("num_blocks", NUM_BLOCKS.into()),
+                ("max_running", paged.max_running.into()),
+                ("peak_blocks", paged.peak_blocks.into()),
+                ("peak_kv_bytes", paged_peak_bytes.into()),
+                ("mean_ttft_s", paged.report.metrics.mean_ttft().into()),
+                ("sched_iters", paged.iters.into()),
+                ("median_s", t_paged.median.into()),
+                ("prefix_hits", (kv.prefix_hits as usize).into()),
+                ("prefix_shared_tokens", (kv.prefix_shared_tokens as usize).into()),
+                ("cow_copies", (kv.cow_copies as usize).into()),
+            ]),
+        ),
+        ("tokens_bit_identical", true.into()),
+    ]);
+    write_results("paged_kv", &summary);
+    let root_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_paged_kv.json");
+    if let Err(e) = std::fs::write(&root_path, summary.to_string_pretty()) {
+        eprintln!("could not write {}: {e}", root_path.display());
+    } else {
+        println!("wrote {}", root_path.display());
+    }
+    println!("paged_kv bench OK");
+    Ok(())
+}

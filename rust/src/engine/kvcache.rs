@@ -11,7 +11,12 @@ use crate::strategy::AttnStrategy;
 /// One sequence's cache state.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SeqCache {
+    /// Tokens actually cached so far (prompt, then +1 per decode).
     pub tokens: usize,
+    /// Tokens booked against the budget at admission: prompt + the
+    /// generation budget. `extend` grows `tokens` inside this
+    /// reservation without re-checking the budget.
+    pub reserved: usize,
 }
 
 /// KV-cache manager for a fixed attention layout.
@@ -33,9 +38,12 @@ impl KvCacheManager {
         KvCacheManager { bytes_per_token_per_device: per_tok, budget: kv_budget, seqs: Vec::new() }
     }
 
-    /// Current per-device KV bytes.
+    /// Current per-device KV bytes *committed*: every admitted
+    /// sequence's full reservation (prompt + generation budget), not
+    /// just the tokens cached so far — admission that only counted
+    /// cached tokens would over-admit and blow the budget mid-decode.
     pub fn used_bytes(&self) -> f64 {
-        let tokens: usize = self.seqs.iter().map(|s| s.tokens).sum();
+        let tokens: usize = self.seqs.iter().map(|s| s.reserved).sum();
         tokens as f64 * self.bytes_per_token_per_device
     }
 
@@ -44,21 +52,29 @@ impl KvCacheManager {
         self.used_bytes() + total_tokens as f64 * self.bytes_per_token_per_device <= self.budget
     }
 
-    /// Admit a sequence (panics if over budget — callers must check).
-    pub fn admit(&mut self, prompt_tokens: usize) -> usize {
-        assert!(self.can_admit(prompt_tokens), "KV budget exceeded");
-        self.seqs.push(SeqCache { tokens: prompt_tokens });
+    /// Admit a sequence, reserving its whole `prompt + generate`
+    /// footprint (panics if over budget — callers must check).
+    pub fn admit(&mut self, prompt_tokens: usize, generate_tokens: usize) -> usize {
+        let total = prompt_tokens + generate_tokens;
+        assert!(self.can_admit(total), "KV budget exceeded");
+        self.seqs.push(SeqCache { tokens: prompt_tokens, reserved: total });
         self.seqs.len() - 1
     }
 
-    /// Append one generated token to a sequence.
+    /// Append one generated token to a sequence (within its
+    /// reservation).
     pub fn extend(&mut self, seq: usize) {
         self.seqs[seq].tokens += 1;
+        debug_assert!(
+            self.seqs[seq].tokens <= self.seqs[seq].reserved,
+            "sequence grew past its reservation"
+        );
     }
 
-    /// Release a finished sequence's cache.
+    /// Release a finished sequence's cache (and its reservation).
     pub fn release(&mut self, seq: usize) {
         self.seqs[seq].tokens = 0;
+        self.seqs[seq].reserved = 0;
     }
 
     pub fn active_tokens(&self) -> usize {
@@ -82,15 +98,40 @@ mod tests {
         let mut mgr = mgr(per_tok * 100.0);
         assert!(mgr.can_admit(100));
         assert!(!mgr.can_admit(101));
-        mgr.admit(60);
+        mgr.admit(40, 20);
         assert!(mgr.can_admit(40));
         assert!(!mgr.can_admit(41));
     }
 
     #[test]
+    fn admit_reserves_prompt_plus_generate() {
+        // Regression: admit used to book only the prompt, so a second
+        // sequence could be admitted into bytes the first's decode
+        // budget had already committed.
+        let m = MoEModelConfig::mixtral_8x7b();
+        let per_tok = m.kv_bytes_per_token() as f64 / 4.0;
+        let mut mgr = mgr(per_tok * 100.0);
+        let s = mgr.admit(10, 80);
+        // 90 tokens committed: only 10 remain admissible, and the
+        // growth inside the reservation changes nothing.
+        assert!(!mgr.can_admit(11));
+        assert!((mgr.used_bytes() - per_tok * 90.0).abs() < 1e-6);
+        mgr.extend(s);
+        mgr.extend(s);
+        assert_eq!(mgr.active_tokens(), 12);
+        assert!((mgr.used_bytes() - per_tok * 90.0).abs() < 1e-6, "extend re-billed");
+        assert!(!mgr.can_admit(11));
+        assert!(mgr.can_admit(10));
+        // Release frees the whole reservation.
+        mgr.release(s);
+        assert_eq!(mgr.used_bytes(), 0.0);
+        assert!(mgr.can_admit(100));
+    }
+
+    #[test]
     fn extend_and_release() {
         let mut mgr = mgr(1e12);
-        let s = mgr.admit(10);
+        let s = mgr.admit(10, 16);
         mgr.extend(s);
         mgr.extend(s);
         assert_eq!(mgr.active_tokens(), 12);
@@ -102,7 +143,18 @@ mod tests {
     #[should_panic(expected = "KV budget exceeded")]
     fn over_admit_panics() {
         let mut mgr = mgr(1.0);
-        mgr.admit(1000);
+        mgr.admit(1000, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "KV budget exceeded")]
+    fn over_admit_on_generate_budget_panics() {
+        // A prompt that fits but a generation budget that does not must
+        // fail at admission, not mid-decode.
+        let m = MoEModelConfig::mixtral_8x7b();
+        let per_tok = m.kv_bytes_per_token() as f64 / 4.0;
+        let mut mgr = mgr(per_tok * 100.0);
+        mgr.admit(50, 51);
     }
 
     #[test]

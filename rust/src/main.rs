@@ -264,6 +264,17 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "weight quantization for the packed host kernels: int8 | int4 (host backend)",
     );
     spec.flag(
+        "kv",
+        "padded",
+        "KV-cache layout: padded (per-slot max_len rows) | paged (block pool with \
+         copy-on-write prefix sharing; host backend, forces --engine streaming)",
+    );
+    spec.flag(
+        "kv-block",
+        "8",
+        "paged KV: tokens per block (with --kv paged)",
+    );
+    spec.flag(
         "fault-trace",
         "",
         "inject deterministic device faults: comma-separated KIND@ITER[@dDEV], \
@@ -291,6 +302,28 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         eprintln!(
             "--fault-trace: gang scheduling latches on the first fault; \
              upgrading to --engine streaming so recovery can run"
+        );
+        hap::serving::Scheduling::Streaming
+    } else {
+        scheduling
+    };
+    let kv = match p.get("kv") {
+        "" | "padded" => hap::model::KvLayout::Padded,
+        "paged" => {
+            let block_size = usize_flag(&p, "kv-block")?;
+            if block_size == 0 {
+                anyhow::bail!("--kv-block must be at least 1");
+            }
+            // 0 blocks = auto: the padded-equal pool,
+            // ceil(batch * max_len / block_size).
+            hap::model::KvLayout::Paged { block_size, num_blocks: 0 }
+        }
+        other => anyhow::bail!("unknown kv layout '{other}' (padded | paged)"),
+    };
+    let scheduling = if kv.is_paged() && scheduling == hap::serving::Scheduling::Gang {
+        eprintln!(
+            "--kv paged: gang prefill owns whole padded batches; \
+             upgrading to --engine streaming where the block pool serves"
         );
         hap::serving::Scheduling::Streaming
     } else {
@@ -329,6 +362,7 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                     .ok_or_else(|| anyhow::anyhow!("unknown quant '{q}' (int8 | int4)"))?,
             ),
         };
+        config.kv = kv;
         Ok(config)
     };
     let nreq = usize_flag(&p, "requests")?;
@@ -370,6 +404,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
             if !p.get("quant").is_empty() {
                 anyhow::bail!(
                     "--quant requires --backend host: the PJRT artifacts consume f32 weights"
+                );
+            }
+            if kv.is_paged() {
+                anyhow::bail!(
+                    "--kv paged requires --backend host: the fixed-shape PJRT artifacts \
+                     address contiguous padded KV rows"
                 );
             }
             let dir = Path::new(p.get("artifacts"));

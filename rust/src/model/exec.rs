@@ -47,6 +47,7 @@ use crate::model::collectives;
 use crate::model::fault::{fault_message, FaultPlan};
 use crate::model::grid::{DeviceGrid, ShardPlan};
 use crate::model::kernels::{self, AttnWeights, ExpertWeights, HeadWeights, ShardWeights};
+use crate::model::paged_kv::{BlockPool, KvLayout, PagedKvStats, PrefixAttach, PrefixTrie, NO_BLOCK};
 use crate::model::weights::ShardSpec;
 use crate::obs::ModuleTimes;
 use crate::quant::QuantKind;
@@ -245,6 +246,94 @@ impl ResidentShard {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn attn_prefill_ranged_paged(
+        &self,
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        table: &[usize],
+        block_size: usize,
+        start: usize,
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        match self {
+            ResidentShard::Packed(_) => kernels::attention_prefill_ranged_paged(
+                x,
+                k_cache,
+                v_cache,
+                table,
+                block_size,
+                start,
+                self.attn_packed()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+            _ => kernels::reference::attention_prefill_ranged_paged(
+                x,
+                k_cache,
+                v_cache,
+                table,
+                block_size,
+                start,
+                self.raw()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn attn_decode_slots_paged(
+        &self,
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        pos: &[usize],
+        active: &[bool],
+        tables: &[usize],
+        tstride: usize,
+        block_size: usize,
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        match self {
+            ResidentShard::Packed(_) => kernels::attention_decode_slots_paged(
+                x,
+                k_cache,
+                v_cache,
+                pos,
+                active,
+                tables,
+                tstride,
+                block_size,
+                self.attn_packed()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+            _ => kernels::reference::attention_decode_slots_paged(
+                x,
+                k_cache,
+                v_cache,
+                pos,
+                active,
+                tables,
+                tstride,
+                block_size,
+                self.raw()?,
+                q_heads,
+                kv_heads,
+                hd,
+            ),
+        }
+    }
+
     fn expert_module(&self, x: &HostTensor, ep: usize, top_k: usize) -> Result<HostTensor> {
         match self {
             ResidentShard::Packed(ShardWeights::Expert(w)) => kernels::expert_module(x, w, top_k),
@@ -312,6 +401,30 @@ pub struct ExecStats {
     pub reshard_seconds: f64,
 }
 
+/// Bookkeeping for one paged streaming session. The device-side KV
+/// arrays are the `LayerCache`s reinterpreted as block pools
+/// `[num_blocks, block_size, KVH_l, D]`; block ids are global (the
+/// same id addresses the same offset on every device), but a block's
+/// *data* lives only on the DP group of the slot that wrote it — so
+/// prefix sharing runs per group ([`PrefixTrie`] per DP rank) while
+/// the [`BlockPool`] itself is global.
+struct PagedSession {
+    block_size: usize,
+    num_blocks: usize,
+    /// Block-table entries per slot (`ceil(max_len / block_size)`).
+    tstride: usize,
+    pool: BlockPool,
+    /// Per-slot block tables; unmapped entries hold [`NO_BLOCK`].
+    tables: Vec<Vec<usize>>,
+    /// Padded prompt rows recorded at attach, registered into the
+    /// group trie when the slot's prefill completes.
+    prompts: Vec<Option<Vec<i32>>>,
+    /// One prompt-prefix trie per DP group.
+    tries: Vec<PrefixTrie>,
+    prefix_hits: u64,
+    prefix_shared_tokens: u64,
+}
+
 /// The executor. Construct once per serving run; feed it batches.
 pub struct ModelExecutor<'rt> {
     backend: Backend<'rt>,
@@ -341,6 +454,13 @@ pub struct ModelExecutor<'rt> {
     slot_pos: Vec<usize>,
     slot_live: Vec<bool>,
     session: bool,
+    /// KV-cache layout for streaming sessions ([`KvLayout::Padded`] by
+    /// default). Takes effect at the next `begin_session`.
+    kv_layout: KvLayout,
+    /// Live paged-session bookkeeping (block pool, per-slot block
+    /// tables, per-DP-group prefix tries). `Some` exactly while a
+    /// paged session is active.
+    paged: Option<PagedSession>,
     stats: ExecStats,
     /// Deterministic fault-injection schedule (host backend chaos
     /// testing): ticked once per compute op; verdicts are stamped into
@@ -374,6 +494,8 @@ impl<'rt> ModelExecutor<'rt> {
             slot_pos: Vec::new(),
             slot_live: Vec::new(),
             session: false,
+            kv_layout: KvLayout::Padded,
+            paged: None,
             stats: ExecStats::default(),
             fault: None,
             times: ModuleTimes::default(),
@@ -405,6 +527,8 @@ impl<'rt> ModelExecutor<'rt> {
             slot_pos: Vec::new(),
             slot_live: Vec::new(),
             session: false,
+            kv_layout: KvLayout::Padded,
+            paged: None,
             stats: ExecStats::default(),
             fault: None,
             times: ModuleTimes::default(),
@@ -442,6 +566,56 @@ impl<'rt> ModelExecutor<'rt> {
     /// The active weight quantization (`None` = f32).
     pub fn quant(&self) -> Option<QuantKind> {
         self.quant
+    }
+
+    /// Select the KV-cache layout for streaming sessions. Host backend
+    /// only for [`KvLayout::Paged`] (the fixed-shape PJRT artifacts
+    /// take padded per-batch KV). A change takes effect at the next
+    /// `begin_session`; a live session's caches are torn down so stale
+    /// layouts can never mix.
+    pub fn set_kv_layout(&mut self, layout: KvLayout) -> Result<()> {
+        if let KvLayout::Paged { block_size, .. } = layout {
+            if matches!(self.backend, Backend::Pjrt(_)) {
+                anyhow::bail!("paged KV runs on the host backend (PJRT artifacts take padded KV)");
+            }
+            if block_size == 0 {
+                anyhow::bail!("paged KV needs a block size of at least 1 token");
+            }
+        }
+        if layout != self.kv_layout {
+            self.kv_layout = layout;
+            self.paged = None;
+            if self.session {
+                self.session = false;
+                self.slot_pos.clear();
+                self.slot_live.clear();
+                for st in &mut self.devices {
+                    st.kv.clear();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The configured KV-cache layout.
+    pub fn kv_layout(&self) -> KvLayout {
+        self.kv_layout
+    }
+
+    /// Block-level accounting snapshot of the live paged session
+    /// (`None` under the padded layout or between sessions).
+    pub fn paged_stats(&self) -> Option<PagedKvStats> {
+        self.paged.as_ref().map(|sess| PagedKvStats {
+            block_size: sess.block_size,
+            num_blocks: sess.num_blocks,
+            blocks_in_use: sess.pool.in_use(),
+            blocks_free: sess.pool.free_blocks(),
+            allocs: sess.pool.allocs(),
+            frees: sess.pool.frees(),
+            cow_copies: sess.pool.cow_copies(),
+            prefix_hits: sess.prefix_hits,
+            prefix_shared_tokens: sess.prefix_shared_tokens,
+        })
     }
 
     /// Select the host kernel family. Changing it evicts every resident
@@ -626,6 +800,7 @@ impl<'rt> ModelExecutor<'rt> {
             self.attn = None;
             self.batch_plans = None;
             self.session = false;
+            self.paged = None;
             self.slot_pos.clear();
             self.slot_live.clear();
         }
@@ -715,6 +890,12 @@ impl<'rt> ModelExecutor<'rt> {
         if !self.plan_ready(plan) {
             self.validate(plan)?;
             self.ensure_resident(plan)?;
+        }
+        if self.kv_layout.is_paged() {
+            anyhow::bail!(
+                "gang prefill owns whole padded batches; the paged KV layout serves the \
+                 streaming session paths (begin_session/prefill_slot/decode_slots)"
+            );
         }
         let grid = DeviceGrid::lower(plan)?;
         self.attn = Some(plan.attn);
@@ -808,15 +989,56 @@ impl<'rt> ModelExecutor<'rt> {
         let t = prefill.attn.tp;
         let kv_l = (m.kv_heads / t).max(1);
         let bg = m.batch / prefill.attn.dp;
-        for st in &mut self.devices {
-            st.kv = (0..m.layers)
-                .map(|_| {
-                    Some(LayerCache {
-                        k: HostTensor::zeros(vec![bg, m.max_len, kv_l, m.head_dim]),
-                        v: HostTensor::zeros(vec![bg, m.max_len, kv_l, m.head_dim]),
-                    })
-                })
-                .collect();
+        match self.kv_layout {
+            KvLayout::Padded => {
+                for st in &mut self.devices {
+                    st.kv = (0..m.layers)
+                        .map(|_| {
+                            Some(LayerCache {
+                                k: HostTensor::zeros(vec![bg, m.max_len, kv_l, m.head_dim]),
+                                v: HostTensor::zeros(vec![bg, m.max_len, kv_l, m.head_dim]),
+                            })
+                        })
+                        .collect();
+                }
+                self.paged = None;
+            }
+            layout @ KvLayout::Paged { block_size, .. } => {
+                // Block-pool layout: every device holds the full pool
+                // (block ids are global) reinterpreted as
+                // [num_blocks, block_size, KVH_l, D]; a block's data is
+                // only ever written/read by one DP group's devices.
+                let nb = layout.resolved_blocks(&m).unwrap();
+                let tstride = m.max_len.div_ceil(block_size);
+                if tstride > nb {
+                    anyhow::bail!(
+                        "paged KV pool of {nb} blocks cannot hold one {}-token sequence \
+                         ({tstride} blocks of {block_size})",
+                        m.max_len
+                    );
+                }
+                for st in &mut self.devices {
+                    st.kv = (0..m.layers)
+                        .map(|_| {
+                            Some(LayerCache {
+                                k: HostTensor::zeros(vec![nb, block_size, kv_l, m.head_dim]),
+                                v: HostTensor::zeros(vec![nb, block_size, kv_l, m.head_dim]),
+                            })
+                        })
+                        .collect();
+                }
+                self.paged = Some(PagedSession {
+                    block_size,
+                    num_blocks: nb,
+                    tstride,
+                    pool: BlockPool::new(nb),
+                    tables: vec![vec![NO_BLOCK; tstride]; m.batch],
+                    prompts: vec![None; m.batch],
+                    tries: (0..prefill.attn.dp).map(|_| PrefixTrie::new()).collect(),
+                    prefix_hits: 0,
+                    prefix_shared_tokens: 0,
+                });
+            }
         }
         self.attn = Some(prefill.attn);
         self.pos = 0;
@@ -869,6 +1091,23 @@ impl<'rt> ModelExecutor<'rt> {
         }
         if !self.slot_live[slot] {
             anyhow::bail!("release of unclaimed slot {slot}");
+        }
+        if let Some(sess) = self.paged.as_mut() {
+            // Paged release: hand every mapped block back to the pool
+            // (trie-shared blocks just drop one refcount). No zeroing —
+            // paged attention never reads past a slot's cursor, and a
+            // block's next owner overwrites each position before any
+            // kernel can read it.
+            for entry in sess.tables[slot].iter_mut() {
+                let b = std::mem::replace(entry, NO_BLOCK);
+                if b != NO_BLOCK {
+                    sess.pool.release(b);
+                }
+            }
+            sess.prompts[slot] = None;
+            self.slot_live[slot] = false;
+            self.slot_pos[slot] = 0;
+            return Ok(());
         }
         let attn = self.attn.ok_or_else(|| anyhow!("session has no pinned attention"))?;
         // Same group membership source as prefill_slot/decode_slots:
@@ -945,6 +1184,15 @@ impl<'rt> ModelExecutor<'rt> {
         let bg = m.batch / plan.attn.dp;
         let (g, r) = (slot / bg, slot % bg);
 
+        // Paged: map (and COW-unshare) the blocks this chunk touches up
+        // front, then hand the kernels a read-only table snapshot.
+        let paged_table: Option<Vec<usize>> = if self.paged.is_some() {
+            Some(self.paged_prepare_prefill(slot, g, start, c, &grid)?)
+        } else {
+            None
+        };
+        let pbs = self.paged.as_ref().map(|s| s.block_size).unwrap_or(1);
+
         self.fault_tick();
         let mut x = self.embed(tokens, 1, c, &m)?;
         for l in 0..m.layers {
@@ -959,6 +1207,7 @@ impl<'rt> ModelExecutor<'rt> {
                 // ranged kernel resumes against the slot's cache row:
                 // earlier chunks' KV is read back, this chunk's written.
                 let t_mod = Instant::now();
+                let tbl_ref = paged_table.as_deref();
                 let (outs, per_dev): (Vec<Option<HostTensor>>, Vec<f64>) =
                     map_devices_timed(self.mode, &mut self.devices, |st| {
                         let role = roles[st.device];
@@ -972,16 +1221,29 @@ impl<'rt> ModelExecutor<'rt> {
                         let cache = st.kv[l]
                             .as_mut()
                             .ok_or_else(|| anyhow!("session KV missing"))?;
-                        let out = w.attn_prefill_ranged(
-                            xr,
-                            &mut cache.k,
-                            &mut cache.v,
-                            r,
-                            start,
-                            q_l,
-                            kv_l,
-                            hd,
-                        )?;
+                        let out = match tbl_ref {
+                            Some(table) => w.attn_prefill_ranged_paged(
+                                xr,
+                                &mut cache.k,
+                                &mut cache.v,
+                                table,
+                                pbs,
+                                start,
+                                q_l,
+                                kv_l,
+                                hd,
+                            )?,
+                            None => w.attn_prefill_ranged(
+                                xr,
+                                &mut cache.k,
+                                &mut cache.v,
+                                r,
+                                start,
+                                q_l,
+                                kv_l,
+                                hd,
+                            )?,
+                        };
                         Ok(Some(out))
                     })?;
                 self.times.attn_s += t_mod.elapsed().as_secs_f64();
@@ -999,6 +1261,9 @@ impl<'rt> ModelExecutor<'rt> {
             x.add_assign(&e_out);
         }
         self.slot_pos[slot] = start + c;
+        if self.paged.is_some() && start + c == m.prefill_len {
+            self.paged_register_prompt(slot, g);
+        }
         self.head(&x, &m)
     }
 
@@ -1058,6 +1323,28 @@ impl<'rt> ModelExecutor<'rt> {
             .map(|s| self.slot_live[s] && self.slot_pos[s] >= m.prefill_len)
             .collect();
 
+        // Paged: every decodable slot's next position must land in a
+        // mapped, exclusively-owned block before any device writes —
+        // mapping/COW is a scheduler-side decision, identical across
+        // the group's devices, so it happens once up front.
+        let paged_flat: Option<(Vec<usize>, usize, usize)> = if self.paged.is_some() {
+            for slot in 0..b {
+                if slot_live[slot] {
+                    let bi = slot_pos[slot] / self.paged.as_ref().unwrap().block_size;
+                    self.paged_map_block(slot, bi)?;
+                    self.paged_make_writable(slot, slot / bg, bi, &grid)?;
+                }
+            }
+            let sess = self.paged.as_ref().unwrap();
+            let mut flat = Vec::with_capacity(b * sess.tstride);
+            for table in &sess.tables {
+                flat.extend_from_slice(table);
+            }
+            Some((flat, sess.tstride, sess.block_size))
+        } else {
+            None
+        };
+
         self.fault_tick();
         let mut x = self.embed(last_tokens, b, 1, &m)?;
         for l in 0..m.layers {
@@ -1068,6 +1355,7 @@ impl<'rt> ModelExecutor<'rt> {
                 let xr = &x;
                 let pos_ref = &slot_pos;
                 let live_ref = &slot_live;
+                let pf_ref = &paged_flat;
                 let t_mod = Instant::now();
                 let (outs, per_dev): (Vec<HostTensor>, Vec<f64>) =
                     map_devices_timed(self.mode, &mut self.devices, |st| {
@@ -1080,16 +1368,32 @@ impl<'rt> ModelExecutor<'rt> {
                             .shards
                             .get(&(fam.clone(), l))
                             .ok_or_else(|| anyhow!("attn shard not resident"))?;
-                        w.attn_decode_slots(
-                            &xg,
-                            &mut cache.k,
-                            &mut cache.v,
-                            &pos_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
-                            &live_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
-                            q_l,
-                            kv_l,
-                            hd,
-                        )
+                        match pf_ref {
+                            Some((flat, tstride, pbs)) => w.attn_decode_slots_paged(
+                                &xg,
+                                &mut cache.k,
+                                &mut cache.v,
+                                &pos_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
+                                &live_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
+                                &flat[role.dp_rank * bg * tstride
+                                    ..(role.dp_rank + 1) * bg * tstride],
+                                *tstride,
+                                *pbs,
+                                q_l,
+                                kv_l,
+                                hd,
+                            ),
+                            None => w.attn_decode_slots(
+                                &xg,
+                                &mut cache.k,
+                                &mut cache.v,
+                                &pos_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
+                                &live_ref[role.dp_rank * bg..(role.dp_rank + 1) * bg],
+                                q_l,
+                                kv_l,
+                                hd,
+                            ),
+                        }
                     })?;
                 self.times.attn_s += t_mod.elapsed().as_secs_f64();
                 for (d, dt) in per_dev.iter().enumerate() {
@@ -1110,6 +1414,187 @@ impl<'rt> ModelExecutor<'rt> {
             }
         }
         self.head(&x, &m)
+    }
+
+    // ---- Paged-KV session plumbing --------------------------------------
+
+    /// Bind a joiner's full padded prompt row to its freshly claimed
+    /// slot, before the first prefill chunk. Under the padded layout
+    /// this is a no-op (`start == 0`: prefill everything). Under the
+    /// paged layout the slot's prompt is matched against its DP group's
+    /// prefix trie: every matched full block is attached to the slot's
+    /// table as a shared (refcounted) block, and prefill may resume
+    /// from `start = matched_tokens` — except the prompt's **final**
+    /// position, which is always recomputed so its logits seed the
+    /// first sampled token exactly as an unshared prefill would.
+    pub fn attach_prompt(&mut self, slot: usize, row: &[i32]) -> Result<PrefixAttach> {
+        if !self.session {
+            anyhow::bail!("attach_prompt outside a session (call begin_session)");
+        }
+        if !self.slot_live.get(slot).copied().unwrap_or(false) {
+            anyhow::bail!("slot {slot} not claimed");
+        }
+        let m = self.meta().clone();
+        if row.len() != m.prefill_len {
+            anyhow::bail!(
+                "attach_prompt expects the padded {}-token prompt row, got {}",
+                m.prefill_len,
+                row.len()
+            );
+        }
+        if self.slot_pos[slot] != 0 {
+            anyhow::bail!("attach_prompt after prefill began for slot {slot}");
+        }
+        if self.paged.is_none() {
+            return Ok(PrefixAttach::default());
+        }
+        let attn = self.attn.ok_or_else(|| anyhow!("session has no pinned attention"))?;
+        let bg = self.slot_live.len() / attn.dp;
+        let g = slot / bg;
+        let sess = self.paged.as_mut().unwrap();
+        sess.prompts[slot] = Some(row.to_vec());
+        let matched = sess.tries[g].lookup(row, sess.block_size);
+        for (bi, &b) in matched.iter().enumerate() {
+            sess.pool.retain(b);
+            sess.tables[slot][bi] = b;
+        }
+        let start = (matched.len() * sess.block_size).min(m.prefill_len - 1);
+        if start > 0 {
+            sess.prefix_hits += 1;
+            sess.prefix_shared_tokens += start as u64;
+        }
+        self.slot_pos[slot] = start;
+        Ok(PrefixAttach { start, shared_blocks: matched.len() })
+    }
+
+    /// Allocate one block, evicting trie-cached prefix leaves (in
+    /// deterministic group-then-arena order) when the free list runs
+    /// dry. Trie-held blocks are cache, not reservation: any block the
+    /// trie alone owns is reclaimable.
+    fn paged_alloc_block(&mut self) -> Result<usize> {
+        let sess = self.paged.as_mut().expect("paged session");
+        loop {
+            if let Some(b) = sess.pool.alloc() {
+                return Ok(b);
+            }
+            let mut evicted = false;
+            for trie in sess.tries.iter_mut() {
+                if let Some(b) = trie.evict_leaf() {
+                    sess.pool.release(b);
+                    evicted = true;
+                    break;
+                }
+            }
+            if !evicted {
+                anyhow::bail!(
+                    "paged KV pool exhausted ({} blocks all slot-owned)",
+                    sess.num_blocks
+                );
+            }
+        }
+    }
+
+    /// Ensure table entry `bi` of `slot` maps a physical block.
+    fn paged_map_block(&mut self, slot: usize, bi: usize) -> Result<()> {
+        let sess = self.paged.as_ref().expect("paged session");
+        if bi >= sess.tstride {
+            anyhow::bail!("slot {slot} block index {bi} past its table ({})", sess.tstride);
+        }
+        if sess.tables[slot][bi] != NO_BLOCK {
+            return Ok(());
+        }
+        let b = self.paged_alloc_block()?;
+        self.paged.as_mut().unwrap().tables[slot][bi] = b;
+        Ok(())
+    }
+
+    /// Copy-on-write: if table entry `bi` of `slot` points at a shared
+    /// block (refcount > 1), give the slot a private copy before any
+    /// kernel writes into it. K/V at a position depends only on the
+    /// tokens at and before it (causal), so byte-copying the block on
+    /// the group's devices preserves bit-identity exactly.
+    fn paged_make_writable(
+        &mut self,
+        slot: usize,
+        g: usize,
+        bi: usize,
+        grid: &DeviceGrid,
+    ) -> Result<()> {
+        let src = self.paged.as_ref().expect("paged session").tables[slot][bi];
+        if src == NO_BLOCK || self.paged.as_ref().unwrap().pool.refcount(src) <= 1 {
+            return Ok(());
+        }
+        // The source holds >= 2 refs, so trie eviction inside the
+        // alloc below can never free it out from under the copy.
+        let fresh = self.paged_alloc_block()?;
+        let sess = self.paged.as_mut().unwrap();
+        let bs = sess.block_size;
+        for st in &mut self.devices {
+            if grid.roles[st.device].dp_rank != g {
+                continue;
+            }
+            for cache in st.kv.iter_mut().flatten() {
+                let blk_len = bs * cache.k.shape[2] * cache.k.shape[3];
+                cache
+                    .k
+                    .data
+                    .copy_within(src * blk_len..(src + 1) * blk_len, fresh * blk_len);
+                cache
+                    .v
+                    .data
+                    .copy_within(src * blk_len..(src + 1) * blk_len, fresh * blk_len);
+            }
+        }
+        sess.tables[slot][bi] = fresh;
+        sess.pool.release(src);
+        sess.pool.note_cow();
+        Ok(())
+    }
+
+    /// Map (and COW-unshare) every block a prefill chunk touches, and
+    /// return the table prefix the paged kernels need.
+    fn paged_prepare_prefill(
+        &mut self,
+        slot: usize,
+        g: usize,
+        start: usize,
+        c: usize,
+        grid: &DeviceGrid,
+    ) -> Result<Vec<usize>> {
+        let bs = self.paged.as_ref().expect("paged session").block_size;
+        for bi in start / bs..=(start + c - 1) / bs {
+            self.paged_map_block(slot, bi)?;
+            self.paged_make_writable(slot, g, bi, grid)?;
+        }
+        let sess = self.paged.as_ref().unwrap();
+        Ok(sess.tables[slot][..(start + c).div_ceil(bs)].to_vec())
+    }
+
+    /// After a slot finishes its prompt, publish its full blocks into
+    /// the DP group's prefix trie so later identical prompts share
+    /// them. Only block-aligned full prompt blocks register (a partial
+    /// tail block stays private — it will take decode writes). The trie
+    /// holds one refcount per node it actually created; on a duplicate
+    /// chunk the first registration wins and this slot's private block
+    /// simply frees at release.
+    fn paged_register_prompt(&mut self, slot: usize, g: usize) {
+        let sess = self.paged.as_mut().expect("paged session");
+        let Some(row) = sess.prompts[slot].clone() else {
+            return;
+        };
+        let bs = sess.block_size;
+        let full = row.len() / bs;
+        if full == 0 {
+            return;
+        }
+        let blocks: Vec<usize> = sess.tables[slot][..full].to_vec();
+        if blocks.iter().any(|&b| b == NO_BLOCK) {
+            return;
+        }
+        let newly = sess.tries[g].register(&row[..full * bs], &blocks, bs);
+        for b in newly {
+            sess.pool.retain(b);
+        }
     }
 
     // ---- Module drivers -------------------------------------------------

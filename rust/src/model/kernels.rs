@@ -350,6 +350,158 @@ fn slot_ctx(
     Ok(ctx)
 }
 
+/// Paged twin of [`ranged_ctx`]: identical loop structure and
+/// accumulation order, but K/V offsets gather through `table` over a
+/// block-granular cache `[num_blocks, block_size, kv_heads, hd]`
+/// instead of a contiguous padded row — logical position `ki` lives at
+/// physical position `table[ki / block_size] * block_size +
+/// ki % block_size`. Only the offset arithmetic differs from the
+/// padded core, so identical inputs produce bit-identical context.
+#[allow(clippy::too_many_arguments)]
+fn ranged_ctx_paged(
+    q: &[f32],
+    k_cache: &HostTensor,
+    v_cache: &HostTensor,
+    table: &[usize],
+    block_size: usize,
+    start: usize,
+    c: usize,
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Vec<f32> {
+    let rep = q_heads / kv_heads;
+    let kvrow = kv_heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0f32; c * q_heads * hd];
+    let mut scores = vec![0f32; start + c];
+    for head in 0..q_heads {
+        let kvh = head / rep;
+        for qi in 0..c {
+            let p = start + qi; // global prompt position of this query
+            let qoff = (qi * q_heads + head) * hd;
+            let mut mx = f32::NEG_INFINITY;
+            for (ki, sc) in scores.iter_mut().enumerate().take(p + 1) {
+                let koff = (table[ki / block_size] * block_size + ki % block_size) * kvrow
+                    + kvh * hd;
+                let mut dot = 0f32;
+                for d in 0..hd {
+                    dot += q[qoff + d] * k_cache.data[koff + d];
+                }
+                *sc = dot * scale;
+                if *sc > mx {
+                    mx = *sc;
+                }
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut().take(p + 1) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let coff = (qi * q_heads + head) * hd;
+            for ki in 0..=p {
+                let pr = scores[ki] / denom;
+                let voff = (table[ki / block_size] * block_size + ki % block_size) * kvrow
+                    + kvh * hd;
+                for d in 0..hd {
+                    ctx[coff + d] += pr * v_cache.data[voff + d];
+                }
+            }
+        }
+    }
+    ctx
+}
+
+/// Paged twin of [`slot_ctx`]: per-slot decode over block tables.
+/// `tables` is `b` concatenated tables of `tstride` entries each; row
+/// `bi` writes K/V at logical `pos[bi]` through its table and attends
+/// `0..=pos[bi]`. Loop structure and accumulation order match
+/// [`slot_ctx`] exactly — only the offset arithmetic differs.
+#[allow(clippy::too_many_arguments)]
+fn slot_ctx_paged(
+    q: &[f32],
+    k_new: &[f32],
+    v_new: &[f32],
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    pos: &[usize],
+    active: &[bool],
+    tables: &[usize],
+    tstride: usize,
+    block_size: usize,
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<Vec<f32>> {
+    let b = pos.len();
+    let nb = k_cache.shape[0];
+    let rep = q_heads / kv_heads;
+    let row = kv_heads * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = vec![0f32; b * q_heads * hd];
+    for bi in 0..b {
+        if !active[bi] {
+            continue;
+        }
+        let p = pos[bi];
+        if p / block_size >= tstride {
+            anyhow::bail!("slot {bi} decode position {p} outside block table ({tstride} blocks)");
+        }
+        let bt = &tables[bi * tstride..(bi + 1) * tstride];
+        if let Some(bad) = bt[..p / block_size + 1].iter().position(|&blk| blk >= nb) {
+            anyhow::bail!("slot {bi} block {bad} unmapped at decode position {p}");
+        }
+        let dst = (bt[p / block_size] * block_size + p % block_size) * row;
+        k_cache.data[dst..dst + row].copy_from_slice(&k_new[bi * row..(bi + 1) * row]);
+        v_cache.data[dst..dst + row].copy_from_slice(&v_new[bi * row..(bi + 1) * row]);
+        let mut scores = vec![0f32; p + 1];
+        for head in 0..q_heads {
+            let kvh = head / rep;
+            let qoff = (bi * q_heads + head) * hd;
+            let mut mx = f32::NEG_INFINITY;
+            for (ki, sc) in scores.iter_mut().enumerate() {
+                let koff =
+                    (bt[ki / block_size] * block_size + ki % block_size) * row + kvh * hd;
+                let mut dot = 0f32;
+                for d in 0..hd {
+                    dot += q[qoff + d] * k_cache.data[koff + d];
+                }
+                *sc = dot * scale;
+                if *sc > mx {
+                    mx = *sc;
+                }
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            for (ki, sc) in scores.iter().enumerate() {
+                let p_attn = sc / denom;
+                let voff =
+                    (bt[ki / block_size] * block_size + ki % block_size) * row + kvh * hd;
+                for d in 0..hd {
+                    ctx[qoff + d] += p_attn * v_cache.data[voff + d];
+                }
+            }
+        }
+    }
+    Ok(ctx)
+}
+
+/// Shared guard for the paged prefill wrappers: the table must map
+/// every block the chunk reads or writes into the pool.
+fn check_prefill_table(table: &[usize], num_blocks: usize, end: usize, block_size: usize) -> Result<()> {
+    let need = end.div_ceil(block_size);
+    if need > table.len() {
+        anyhow::bail!("block table has {} entries, chunk needs {need}", table.len());
+    }
+    if let Some(bad) = table[..need].iter().position(|&blk| blk >= num_blocks) {
+        anyhow::bail!("block table entry {bad} unmapped or outside the {num_blocks}-block pool");
+    }
+    Ok(())
+}
+
 // ---------------------------------------------------------------------------
 // Scalar reference path
 // ---------------------------------------------------------------------------
@@ -360,7 +512,10 @@ fn slot_ctx(
 /// the engine-level `KernelMode::Reference` executor) pins the fast
 /// path against these bit-for-bit.
 pub mod reference {
-    use super::{gate_rows, prefill_ctx, ranged_ctx, select_gates, silu, slot_ctx};
+    use super::{
+        check_prefill_table, gate_rows, prefill_ctx, ranged_ctx, ranged_ctx_paged, select_gates,
+        silu, slot_ctx, slot_ctx_paged,
+    };
     pub use super::{embed_lookup, rms_norm};
     use crate::runtime::literal::HostTensor;
     use crate::Result;
@@ -587,6 +742,92 @@ pub mod reference {
         let v_new = matmul(&xn.data, b, h, &shard[3].data, kv_heads * hd);
         let ctx =
             slot_ctx(&q, &k_new, &v_new, k_cache, v_cache, pos, active, q_heads, kv_heads, hd)?;
+        let out = matmul(&ctx, b, q_heads * hd, &shard[4].data, h);
+        Ok(HostTensor::new(vec![b, 1, h], out))
+    }
+
+    /// Paged twin of [`attention_prefill_ranged`]: K/V for the chunk
+    /// write per-position through `table` into a block-granular cache
+    /// `[num_blocks, block_size, kv_heads, hd]`, and the context
+    /// gathers through the same table. Projection math, loop
+    /// structure, and accumulation order are identical to the padded
+    /// kernel, so a slot whose table maps its logical blocks in any
+    /// pool order produces bit-identical output.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_prefill_ranged_paged(
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        table: &[usize],
+        block_size: usize,
+        start: usize,
+        shard: &[HostTensor],
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        let (b, c, h) = (x.shape[0], x.shape[1], x.shape[2]);
+        if b != 1 {
+            anyhow::bail!("ranged prefill takes one sequence, got batch {b}");
+        }
+        check_prefill_table(table, k_cache.shape[0], start + c, block_size)?;
+        if (q_heads / kv_heads) * kv_heads != q_heads {
+            anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+        }
+        let xn = rms_norm(x, &shard[0]);
+        let q = matmul(&xn.data, c, h, &shard[1].data, q_heads * hd);
+        let k_new = matmul(&xn.data, c, h, &shard[2].data, kv_heads * hd);
+        let v_new = matmul(&xn.data, c, h, &shard[3].data, kv_heads * hd);
+        let kvrow = kv_heads * hd;
+        for i in 0..c {
+            let p = start + i;
+            let dst = (table[p / block_size] * block_size + p % block_size) * kvrow;
+            k_cache.data[dst..dst + kvrow].copy_from_slice(&k_new[i * kvrow..(i + 1) * kvrow]);
+            v_cache.data[dst..dst + kvrow].copy_from_slice(&v_new[i * kvrow..(i + 1) * kvrow]);
+        }
+        let ctx = ranged_ctx_paged(
+            &q, k_cache, v_cache, table, block_size, start, c, q_heads, kv_heads, hd,
+        );
+        let out = matmul(&ctx, c, q_heads * hd, &shard[4].data, h);
+        Ok(HostTensor::new(vec![1, c, h], out))
+    }
+
+    /// Paged twin of [`attention_decode_slots`]: per-slot block tables
+    /// (`tables` = `b × tstride` entries) route each row's KV write
+    /// and gather; inactive rows are skipped entirely.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_decode_slots_paged(
+        x: &HostTensor,
+        k_cache: &mut HostTensor,
+        v_cache: &mut HostTensor,
+        pos: &[usize],
+        active: &[bool],
+        tables: &[usize],
+        tstride: usize,
+        block_size: usize,
+        shard: &[HostTensor],
+        q_heads: usize,
+        kv_heads: usize,
+        hd: usize,
+    ) -> Result<HostTensor> {
+        let (b, h) = (x.shape[0], x.shape[2]);
+        if pos.len() != b || active.len() != b {
+            anyhow::bail!("slot decode expects {b} positions/activity flags");
+        }
+        if tables.len() != b * tstride {
+            anyhow::bail!("block tables cover {} entries, expected {}", tables.len(), b * tstride);
+        }
+        if (q_heads / kv_heads) * kv_heads != q_heads {
+            anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+        }
+        let xn = rms_norm(x, &shard[0]);
+        let q = matmul(&xn.data, b, h, &shard[1].data, q_heads * hd);
+        let k_new = matmul(&xn.data, b, h, &shard[2].data, kv_heads * hd);
+        let v_new = matmul(&xn.data, b, h, &shard[3].data, kv_heads * hd);
+        let ctx = slot_ctx_paged(
+            &q, &k_new, &v_new, k_cache, v_cache, pos, active, tables, tstride, block_size,
+            q_heads, kv_heads, hd,
+        )?;
         let out = matmul(&ctx, b, q_heads * hd, &shard[4].data, h);
         Ok(HostTensor::new(vec![b, 1, h], out))
     }
@@ -1316,6 +1557,91 @@ pub fn attention_decode_slots(
     Ok(HostTensor::new(vec![b, 1, w.wo.cols()], out))
 }
 
+/// Paged twin of [`attention_prefill_ranged`] for the packed fast
+/// path: the chunk's K/V write per-position through the slot's block
+/// `table` into a block-granular cache `[NB, BS, KVH_l, D]`, and the
+/// context gathers through the same table ([`ranged_ctx_paged`]).
+/// Projection math and accumulation order are identical to the padded
+/// kernel, so output is bit-identical for any table that maps the
+/// chunk's logical blocks.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_prefill_ranged_paged(
+    x: &HostTensor,
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    table: &[usize],
+    block_size: usize,
+    start: usize,
+    w: &AttnWeights,
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<HostTensor> {
+    let (b, c) = (x.shape[0], x.shape[1]);
+    if b != 1 {
+        anyhow::bail!("ranged prefill takes one sequence, got batch {b}");
+    }
+    check_prefill_table(table, k_cache.shape[0], start + c, block_size)?;
+    if (q_heads / kv_heads) * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+    }
+    let xn = rms_norm(x, &w.ln);
+    let q = w.wq.matmul(&xn.data, c);
+    let k_new = w.wk.matmul(&xn.data, c);
+    let v_new = w.wv.matmul(&xn.data, c);
+    let kvrow = kv_heads * hd;
+    for i in 0..c {
+        let p = start + i;
+        let dst = (table[p / block_size] * block_size + p % block_size) * kvrow;
+        k_cache.data[dst..dst + kvrow].copy_from_slice(&k_new[i * kvrow..(i + 1) * kvrow]);
+        v_cache.data[dst..dst + kvrow].copy_from_slice(&v_new[i * kvrow..(i + 1) * kvrow]);
+    }
+    let ctx =
+        ranged_ctx_paged(&q, k_cache, v_cache, table, block_size, start, c, q_heads, kv_heads, hd);
+    let out = w.wo.matmul(&ctx, c);
+    Ok(HostTensor::new(vec![1, c, w.wo.cols()], out))
+}
+
+/// Paged twin of [`attention_decode_slots`] for the packed fast path:
+/// per-slot block tables (`tables` = `b × tstride` entries) route each
+/// active row's KV write and gather ([`slot_ctx_paged`]).
+#[allow(clippy::too_many_arguments)]
+pub fn attention_decode_slots_paged(
+    x: &HostTensor,
+    k_cache: &mut HostTensor,
+    v_cache: &mut HostTensor,
+    pos: &[usize],
+    active: &[bool],
+    tables: &[usize],
+    tstride: usize,
+    block_size: usize,
+    w: &AttnWeights,
+    q_heads: usize,
+    kv_heads: usize,
+    hd: usize,
+) -> Result<HostTensor> {
+    let b = x.shape[0];
+    if pos.len() != b || active.len() != b {
+        anyhow::bail!("slot decode expects {b} positions/activity flags");
+    }
+    if tables.len() != b * tstride {
+        anyhow::bail!("block tables cover {} entries, expected {}", tables.len(), b * tstride);
+    }
+    if (q_heads / kv_heads) * kv_heads != q_heads {
+        anyhow::bail!("GQA ratio {q_heads}/{kv_heads} is not integral");
+    }
+    let xn = rms_norm(x, &w.ln);
+    let q = w.wq.matmul(&xn.data, b);
+    let k_new = w.wk.matmul(&xn.data, b);
+    let v_new = w.wv.matmul(&xn.data, b);
+    let ctx = slot_ctx_paged(
+        &q, &k_new, &v_new, k_cache, v_cache, pos, active, tables, tstride, block_size, q_heads,
+        kv_heads, hd,
+    )?;
+    let out = w.wo.matmul(&ctx, b);
+    Ok(HostTensor::new(vec![b, 1, w.wo.cols()], out))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1667,5 +1993,119 @@ mod tests {
         for (a, b) in want.data.iter().zip(&got.data) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    /// Attention shard tensors for the paged twin tests.
+    fn attn_shard(h: usize, qh: usize, kvh: usize, hd: usize) -> Vec<HostTensor> {
+        vec![
+            HostTensor::new(vec![h], fill(h, 0.2)),
+            HostTensor::new(vec![h, qh * hd], fill(h * qh * hd, 0.05)),
+            HostTensor::new(vec![h, kvh * hd], fill(h * kvh * hd, 0.07)),
+            HostTensor::new(vec![h, kvh * hd], fill(h * kvh * hd, 0.03)),
+            HostTensor::new(vec![qh * hd, h], fill(qh * hd * h, 0.06)),
+        ]
+    }
+
+    #[test]
+    fn paged_prefill_and_decode_bit_identical_to_padded() {
+        // A scrambled block table over a block-granular cache must
+        // reproduce the padded kernels bit-for-bit — chunked prefill,
+        // then one decode step, in both the reference and packed
+        // families.
+        let (h, qh, kvh, hd) = (6usize, 4usize, 2usize, 3usize);
+        let (m, bs, nb) = (8usize, 2usize, 8usize);
+        let shard = attn_shard(h, qh, kvh, hd);
+        let w = AttnWeights::from_shard(&shard, None).unwrap();
+        let x = HostTensor::new(vec![1, m, h], fill(m * h, 0.09));
+
+        // Padded oracle: two uneven chunks into row 0 of a [1, M+1, ...]
+        // cache (one spare position for the decode step).
+        let mut kp = HostTensor::zeros(vec![1, m + 1, kvh, hd]);
+        let mut vp = HostTensor::zeros(vec![1, m + 1, kvh, hd]);
+        let x0 = HostTensor::new(vec![1, 5, h], x.data[..5 * h].to_vec());
+        let x1 = HostTensor::new(vec![1, m - 5, h], x.data[5 * h..].to_vec());
+        let mut want = reference::attention_prefill_ranged(
+            &x0, &mut kp, &mut vp, 0, 0, &shard, qh, kvh, hd,
+        )
+        .unwrap();
+        let want1 = reference::attention_prefill_ranged(
+            &x1, &mut kp, &mut vp, 0, 5, &shard, qh, kvh, hd,
+        )
+        .unwrap();
+        want.data.extend_from_slice(&want1.data);
+
+        // Paged: logical blocks scattered across the pool out of order.
+        let table = [5usize, 0, 6, 2, 3];
+        let mut kb = HostTensor::zeros(vec![nb, bs, kvh, hd]);
+        let mut vb = HostTensor::zeros(vec![nb, bs, kvh, hd]);
+        let mut got = reference::attention_prefill_ranged_paged(
+            &x0, &mut kb, &mut vb, &table[..3], bs, 0, &shard, qh, kvh, hd,
+        )
+        .unwrap();
+        let got1 = reference::attention_prefill_ranged_paged(
+            &x1, &mut kb, &mut vb, &table[..4], bs, 5, &shard, qh, kvh, hd,
+        )
+        .unwrap();
+        got.data.extend_from_slice(&got1.data);
+        for (i, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "reference prefill diverged at {i}");
+        }
+
+        // Packed family over the same tensors and table.
+        let mut kq = HostTensor::zeros(vec![nb, bs, kvh, hd]);
+        let mut vq = HostTensor::zeros(vec![nb, bs, kvh, hd]);
+        let mut fast = attention_prefill_ranged_paged(
+            &x0, &mut kq, &mut vq, &table[..3], bs, 0, &w, qh, kvh, hd,
+        )
+        .unwrap();
+        let fast1 = attention_prefill_ranged_paged(
+            &x1, &mut kq, &mut vq, &table[..4], bs, 5, &w, qh, kvh, hd,
+        )
+        .unwrap();
+        fast.data.extend_from_slice(&fast1.data);
+        for (i, (a, b)) in want.data.iter().zip(&fast.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "packed prefill diverged at {i}");
+        }
+
+        // One decode step at position m through the tables.
+        let xd = HostTensor::new(vec![1, 1, h], fill(h, 0.21));
+        let want_d = reference::attention_decode_slots(
+            &xd, &mut kp, &mut vp, &[m], &[true], &shard, qh, kvh, hd,
+        )
+        .unwrap();
+        let got_d = reference::attention_decode_slots_paged(
+            &xd, &mut kb, &mut vb, &[m], &[true], &table, 5, bs, &shard, qh, kvh, hd,
+        )
+        .unwrap();
+        let fast_d = attention_decode_slots_paged(
+            &xd, &mut kq, &mut vq, &[m], &[true], &table, 5, bs, &w, qh, kvh, hd,
+        )
+        .unwrap();
+        for (i, (a, b)) in want_d.data.iter().zip(&got_d.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "reference decode diverged at {i}");
+        }
+        for (i, (a, b)) in want_d.data.iter().zip(&fast_d.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "packed decode diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn paged_kernels_reject_unmapped_blocks() {
+        let (h, qh, kvh, hd) = (4usize, 2usize, 1usize, 2usize);
+        let shard = attn_shard(h, qh, kvh, hd);
+        let mut kb = HostTensor::zeros(vec![4, 2, kvh, hd]);
+        let mut vb = HostTensor::zeros(vec![4, 2, kvh, hd]);
+        let x = HostTensor::new(vec![1, 3, h], fill(3 * h, 0.1));
+        // Entry 1 is NO_BLOCK-style unmapped (>= pool size).
+        let table = [0usize, usize::MAX];
+        assert!(reference::attention_prefill_ranged_paged(
+            &x, &mut kb, &mut vb, &table, 2, 0, &shard, qh, kvh, hd,
+        )
+        .is_err());
+        let xd = HostTensor::new(vec![1, 1, h], fill(h, 0.1));
+        assert!(reference::attention_decode_slots_paged(
+            &xd, &mut kb, &mut vb, &[3], &[true], &table, 2, 2, &shard, qh, kvh, hd,
+        )
+        .is_err());
     }
 }

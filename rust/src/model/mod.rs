@@ -20,16 +20,21 @@
 //! - [`fault`] — deterministic device-fault injection: seeded
 //!   `(device, iteration)` fault schedules the executor consults once
 //!   per compute op, so crash/stall/transient failures (and the
-//!   serving engine's recovery from them) replay bit-identically.
+//!   serving engine's recovery from them) replay bit-identically;
+//! - [`paged_kv`] — the block-pool KV memory model for streaming
+//!   sessions: refcounted free-list allocator, per-slot block tables,
+//!   and the copy-on-write prompt-prefix trie (`--kv paged`).
 
 pub mod collectives;
 pub mod exec;
 pub mod fault;
 pub mod grid;
 pub mod kernels;
+pub mod paged_kv;
 pub mod weights;
 
 pub use exec::{EngineMode, ExecStats, KernelMode, ModelExecutor};
 pub use fault::{DeviceFault, FaultEvent, FaultKind, FaultPlan};
 pub use grid::{CollectiveGroup, DeviceGrid, DeviceRole, GroupKind, ShardPlan};
+pub use paged_kv::{BlockPool, KvLayout, PagedKvStats, PrefixAttach, PrefixTrie, NO_BLOCK};
 pub use weights::{ShardSpec, WeightStore};

@@ -1,0 +1,443 @@
+//! # Paged KV cache: block pool, per-slot block tables, prefix trie.
+//!
+//! The streaming engine's padded KV layout gives every slot a fixed
+//! `[max_len]` row, so concurrency is capped at `slots × max_len`
+//! tokens no matter how short the sequences are. This module is the
+//! memory model that removes the cap: device KV is a flat pool of
+//! fixed-size **blocks** (`block_size` tokens each), every slot owns a
+//! **block table** mapping logical block index → pool block, and a
+//! **prefix trie** lets requests with a common prompt prefix share both
+//! the blocks and the prefill work that filled them.
+//!
+//! The pieces here are backend-agnostic bookkeeping — `ModelExecutor`
+//! owns the actual `[num_blocks, block_size, kv_heads, head_dim]`
+//! device arrays and the paged attention kernels gather through the
+//! tables (`kernels::attention_prefill_ranged_paged` /
+//! `attention_decode_slots_paged`, bit-identical twins of the padded
+//! kernels).
+//!
+//! ## Invariants
+//!
+//! - **Single ownership per reference.** A pool block is either on the
+//!   free list (refcount 0) or held by ≥1 owners (a slot's block table
+//!   entry, or a trie node). [`BlockPool::alloc`] hands out a block
+//!   with refcount 1; every additional owner must [`BlockPool::retain`]
+//!   it; [`BlockPool::release`] returns it to the free list exactly
+//!   when the last owner lets go. No block is ever on the free list
+//!   and in a table/trie at once.
+//! - **Deterministic allocation.** The free list is LIFO, seeded in
+//!   descending order so a fresh pool allocates `0, 1, 2, …`; a freed
+//!   block is the next one reused. Identical seeded request schedules
+//!   therefore produce identical block placements (asserted by the
+//!   `paged_kv` property tests).
+//! - **Tables are sparse.** Unmapped entries hold [`NO_BLOCK`];
+//!   blocks are allocated lazily when prefill/decode first writes into
+//!   their token range, so a slot's physical footprint tracks its
+//!   cursor, not `max_len`.
+//! - **Trie references are evictable cache.** Registered prefix blocks
+//!   are retained by the trie, which makes them cache, not commitment:
+//!   when the pool runs dry [`PrefixTrie::evict_leaf`] drops leaves in
+//!   a deterministic order (highest arena index first) until a block
+//!   frees. Slot-owned references are never evicted.
+//!
+//! ## Copy-on-write contract
+//!
+//! A shared block (refcount > 1) is **read-only**. Before writing a
+//! token position inside a shared block, the writer must allocate a
+//! fresh block, byte-copy the shared block's K/V contents on every
+//! device that holds them, repoint its own table entry, and release
+//! its reference to the original — the sibling owners' tables still
+//! point at the untouched original, so their token streams are
+//! unperturbed. K/V at position `p` depends only on tokens `0..=p`
+//! (causal attention), and the kernels are deterministic, so a COW
+//! copy followed by a recompute of the same prefix writes identical
+//! bytes: prefix sharing is exact, not approximate.
+//!
+//! ## Prefix sharing
+//!
+//! The trie is keyed on **padded prompt rows** at block granularity:
+//! each node holds one `block_size`-token chunk and the pool block
+//! caching its K/V. Because the batcher left-pads every prompt to
+//! `prefill_len`, two requests share a node chain exactly when their
+//! padded rows agree on a block-aligned prefix (including the shared
+//! all-zero padding blocks of short prompts). Only *full* blocks are
+//! registered — a partial tail block stays private and writable. On a
+//! hit, the matching blocks are retained into the joiner's table and
+//! prefill resumes at `min(matched, prefill_len − 1)`: the final
+//! prompt position is always recomputed because its logits seed the
+//! request's first generated token.
+
+use crate::runtime::manifest::TinyModelMeta;
+
+/// Sentinel for an unmapped block-table entry.
+pub const NO_BLOCK: usize = usize::MAX;
+
+/// KV-cache layout for the streaming engine's sessions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLayout {
+    /// One padded `[max_len]` KV row per slot (the reference layout).
+    Padded,
+    /// Block-pool layout: `num_blocks` blocks of `block_size` tokens,
+    /// per-slot block tables, copy-on-write prefix sharing.
+    /// `num_blocks == 0` means *auto*: size the pool to exactly the
+    /// padded layout's token capacity (`batch × max_len` tokens), so
+    /// paged-vs-padded comparisons run at an equal memory budget.
+    Paged { block_size: usize, num_blocks: usize },
+}
+
+impl Default for KvLayout {
+    fn default() -> Self {
+        KvLayout::Padded
+    }
+}
+
+impl KvLayout {
+    pub fn is_paged(&self) -> bool {
+        matches!(self, KvLayout::Paged { .. })
+    }
+
+    /// Pool size for a session over `meta` (`None` for the padded
+    /// layout; resolves `num_blocks == 0` auto-sizing).
+    pub fn resolved_blocks(&self, meta: &TinyModelMeta) -> Option<usize> {
+        match *self {
+            KvLayout::Padded => None,
+            KvLayout::Paged { block_size, num_blocks } => Some(if num_blocks == 0 {
+                (meta.batch * meta.max_len).div_ceil(block_size)
+            } else {
+                num_blocks
+            }),
+        }
+    }
+}
+
+/// Result of attaching a prompt row to a slot (prefix-trie consult).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefixAttach {
+    /// Prefill cursor after the attach: positions `0..start` are
+    /// served from shared blocks and skipped (0 on a miss).
+    pub start: usize,
+    /// Shared blocks retained into the slot's table.
+    pub shared_blocks: usize,
+}
+
+/// Block-level accounting snapshot (exported into trace events and
+/// the metrics registry by the streaming engine).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PagedKvStats {
+    pub block_size: usize,
+    pub num_blocks: usize,
+    pub blocks_in_use: usize,
+    pub blocks_free: usize,
+    pub allocs: u64,
+    pub frees: u64,
+    pub cow_copies: u64,
+    pub prefix_hits: u64,
+    pub prefix_shared_tokens: u64,
+}
+
+/// Refcounted free-list allocator over a fixed pool of KV blocks.
+#[derive(Debug, Clone)]
+pub struct BlockPool {
+    refcounts: Vec<u32>,
+    /// LIFO free list, seeded descending so a fresh pool hands out
+    /// blocks in ascending id order and a freed block is reused next.
+    free: Vec<usize>,
+    allocs: u64,
+    frees: u64,
+    cow_copies: u64,
+}
+
+impl BlockPool {
+    pub fn new(num_blocks: usize) -> BlockPool {
+        BlockPool {
+            refcounts: vec![0; num_blocks],
+            free: (0..num_blocks).rev().collect(),
+            allocs: 0,
+            frees: 0,
+            cow_copies: 0,
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.refcounts.len()
+    }
+
+    /// Take a block off the free list with refcount 1 (`None` when the
+    /// pool is dry — the caller evicts prefix-cache leaves and retries).
+    pub fn alloc(&mut self) -> Option<usize> {
+        let block = self.free.pop()?;
+        debug_assert_eq!(self.refcounts[block], 0, "free-listed block {block} had owners");
+        self.refcounts[block] = 1;
+        self.allocs += 1;
+        Some(block)
+    }
+
+    /// Add an owner to an allocated block (prefix sharing).
+    pub fn retain(&mut self, block: usize) {
+        assert!(self.refcounts[block] > 0, "retain of free block {block}");
+        self.refcounts[block] += 1;
+    }
+
+    /// Drop one owner; returns `true` when that was the last owner and
+    /// the block went back on the free list.
+    pub fn release(&mut self, block: usize) -> bool {
+        assert!(self.refcounts[block] > 0, "release of free block {block}");
+        self.refcounts[block] -= 1;
+        if self.refcounts[block] == 0 {
+            self.free.push(block);
+            self.frees += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn refcount(&self, block: usize) -> u32 {
+        self.refcounts[block]
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.num_blocks() - self.free.len()
+    }
+
+    /// Count a copy-on-write block copy (accounting only).
+    pub fn note_cow(&mut self) {
+        self.cow_copies += 1;
+    }
+
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+
+    pub fn frees(&self) -> u64 {
+        self.frees
+    }
+
+    pub fn cow_copies(&self) -> u64 {
+        self.cow_copies
+    }
+}
+
+#[derive(Debug, Clone)]
+struct TrieNode {
+    /// Exactly one `block_size`-token chunk of a padded prompt row.
+    tokens: Vec<i32>,
+    /// Pool block caching this chunk's K/V (the trie holds one
+    /// refcount on it).
+    block: usize,
+    parent: Option<usize>,
+    children: Vec<usize>,
+}
+
+/// Prompt-prefix trie at block granularity. One trie per DP group:
+/// a cached block's data lives only on that group's devices.
+///
+/// Arena-backed (`nodes[i] = None` after eviction) so node identity is
+/// a stable index and eviction order is deterministic: the alive leaf
+/// with the **highest arena index** — the most recently registered
+/// frontier — goes first, which peels chains back from their tips.
+#[derive(Debug, Clone, Default)]
+pub struct PrefixTrie {
+    nodes: Vec<Option<TrieNode>>,
+    roots: Vec<usize>,
+}
+
+impl PrefixTrie {
+    pub fn new() -> PrefixTrie {
+        PrefixTrie::default()
+    }
+
+    /// Alive (non-evicted) nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_some()).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.iter().all(|n| n.is_none())
+    }
+
+    fn find_child(&self, list: &[usize], chunk: &[i32]) -> Option<usize> {
+        list.iter().copied().find(|&ci| {
+            self.nodes[ci].as_ref().map(|n| n.tokens.as_slice() == chunk).unwrap_or(false)
+        })
+    }
+
+    /// Longest registered block-aligned prefix of `row`: the cached
+    /// block ids for `row[0..k*block_size]`, shallowest first. The
+    /// caller must [`BlockPool::retain`] every returned block before
+    /// using it.
+    pub fn lookup(&self, row: &[i32], block_size: usize) -> Vec<usize> {
+        let mut blocks = Vec::new();
+        let mut list: &[usize] = &self.roots;
+        for chunk in row.chunks_exact(block_size) {
+            match self.find_child(list, chunk) {
+                Some(ci) => {
+                    let node = self.nodes[ci].as_ref().unwrap();
+                    blocks.push(node.block);
+                    list = &node.children;
+                }
+                None => break,
+            }
+        }
+        blocks
+    }
+
+    /// Register `row`'s full blocks under the given pool block ids
+    /// (`blocks[i]` caches chunk `i`). Chunks already present descend
+    /// into the existing node — first registration wins, so duplicate
+    /// sibling chunks never exist and lookups are unambiguous; two
+    /// identical prompts prefilled concurrently simply leave the
+    /// second's private blocks to be freed at its release. Returns the
+    /// block ids of **newly created** nodes; the caller must
+    /// [`BlockPool::retain`] each (the trie now owns a reference).
+    pub fn register(&mut self, row: &[i32], blocks: &[usize], block_size: usize) -> Vec<usize> {
+        let mut newly = Vec::new();
+        let mut parent: Option<usize> = None;
+        for (depth, chunk) in row.chunks_exact(block_size).enumerate() {
+            if depth >= blocks.len() {
+                break;
+            }
+            let list = match parent {
+                Some(p) => self.nodes[p].as_ref().unwrap().children.as_slice(),
+                None => self.roots.as_slice(),
+            };
+            match self.find_child(list, chunk) {
+                Some(ci) => parent = Some(ci),
+                None => {
+                    let idx = self.nodes.len();
+                    self.nodes.push(Some(TrieNode {
+                        tokens: chunk.to_vec(),
+                        block: blocks[depth],
+                        parent,
+                        children: Vec::new(),
+                    }));
+                    match parent {
+                        Some(p) => self.nodes[p].as_mut().unwrap().children.push(idx),
+                        None => self.roots.push(idx),
+                    }
+                    newly.push(blocks[depth]);
+                    parent = Some(idx);
+                }
+            }
+        }
+        newly
+    }
+
+    /// Evict one leaf deterministically (alive childless node with the
+    /// highest arena index) and return its block id — the caller
+    /// releases the trie's reference. `None` when the trie is empty.
+    pub fn evict_leaf(&mut self) -> Option<usize> {
+        let victim = (0..self.nodes.len()).rev().find(|&i| {
+            self.nodes[i].as_ref().map(|n| n.children.is_empty()).unwrap_or(false)
+        })?;
+        let node = self.nodes[victim].take().unwrap();
+        match node.parent {
+            Some(p) => self.nodes[p].as_mut().unwrap().children.retain(|&c| c != victim),
+            None => self.roots.retain(|&r| r != victim),
+        }
+        Some(node.block)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_allocates_ascending_and_reuses_freed_first() {
+        let mut pool = BlockPool::new(4);
+        assert_eq!(pool.alloc(), Some(0));
+        assert_eq!(pool.alloc(), Some(1));
+        assert_eq!(pool.alloc(), Some(2));
+        assert!(pool.release(1));
+        assert_eq!(pool.alloc(), Some(1), "freed block is reused next (LIFO)");
+        assert_eq!(pool.alloc(), Some(3));
+        assert_eq!(pool.alloc(), None, "pool dry");
+        assert_eq!(pool.in_use(), 4);
+        assert_eq!(pool.allocs(), 5);
+        assert_eq!(pool.frees(), 1);
+    }
+
+    #[test]
+    fn refcount_frees_exactly_on_last_release() {
+        let mut pool = BlockPool::new(2);
+        let b = pool.alloc().unwrap();
+        pool.retain(b);
+        pool.retain(b);
+        assert_eq!(pool.refcount(b), 3);
+        assert!(!pool.release(b));
+        assert!(!pool.release(b));
+        assert_eq!(pool.free_blocks(), 1, "shared block must not free early");
+        assert!(pool.release(b), "last owner frees");
+        assert_eq!(pool.free_blocks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "release of free block")]
+    fn over_release_panics() {
+        let mut pool = BlockPool::new(1);
+        let b = pool.alloc().unwrap();
+        pool.release(b);
+        pool.release(b);
+    }
+
+    #[test]
+    fn trie_shares_block_aligned_prefixes_only() {
+        let mut trie = PrefixTrie::new();
+        let row_a: Vec<i32> = vec![1, 2, 3, 4, 5, 6];
+        // bs=2 → chunks [1,2][3,4][5,6] cached as blocks 7, 8, 9.
+        let newly = trie.register(&row_a, &[7, 8, 9], 2);
+        assert_eq!(newly, vec![7, 8, 9]);
+        // Same prefix, divergent tail: matches two chunks.
+        let row_b: Vec<i32> = vec![1, 2, 3, 4, 9, 9];
+        assert_eq!(trie.lookup(&row_b, 2), vec![7, 8]);
+        // Partial tail chunks never match (full blocks only).
+        assert_eq!(trie.lookup(&[1, 2, 3], 2), vec![7]);
+        // Divergent first chunk: no sharing.
+        assert!(trie.lookup(&[9, 9, 9, 9], 2).is_empty());
+    }
+
+    #[test]
+    fn register_is_first_wins_and_returns_only_new_nodes() {
+        let mut trie = PrefixTrie::new();
+        assert_eq!(trie.register(&[1, 2, 3, 4], &[0, 1], 2), vec![0, 1]);
+        // A concurrent identical prompt re-registers with its own
+        // blocks: the existing chain wins, nothing new is referenced.
+        assert!(trie.register(&[1, 2, 3, 4], &[5, 6], 2).is_empty());
+        // Shared head, new tail: only the tail node is created.
+        assert_eq!(trie.register(&[1, 2, 7, 7], &[5, 6], 2), vec![6]);
+        assert_eq!(trie.lookup(&[1, 2, 3, 4], 2), vec![0, 1]);
+        assert_eq!(trie.lookup(&[1, 2, 7, 7], 2), vec![0, 6]);
+        assert_eq!(trie.len(), 3);
+    }
+
+    #[test]
+    fn eviction_peels_tips_first_deterministically() {
+        let mut trie = PrefixTrie::new();
+        trie.register(&[1, 2, 3, 4], &[0, 1], 2);
+        trie.register(&[1, 2, 7, 7], &[9, 2], 2); // shares the head node
+        // Highest-index alive leaf first: the [7,7] node (block 2),
+        // then [3,4] (block 1), then the now-childless head (block 0).
+        assert_eq!(trie.evict_leaf(), Some(2));
+        assert_eq!(trie.evict_leaf(), Some(1));
+        assert_eq!(trie.lookup(&[1, 2, 3, 4], 2), vec![0], "head survives its leaves");
+        assert_eq!(trie.evict_leaf(), Some(0));
+        assert_eq!(trie.evict_leaf(), None);
+        assert!(trie.is_empty());
+    }
+
+    #[test]
+    fn layout_resolves_auto_pool_to_padded_capacity() {
+        let m = TinyModelMeta::host_demo(); // batch 4 × max_len 48
+        let auto = KvLayout::Paged { block_size: 8, num_blocks: 0 };
+        assert_eq!(auto.resolved_blocks(&m), Some(24));
+        let fixed = KvLayout::Paged { block_size: 8, num_blocks: 10 };
+        assert_eq!(fixed.resolved_blocks(&m), Some(10));
+        assert_eq!(KvLayout::Padded.resolved_blocks(&m), None);
+        assert!(auto.is_paged() && !KvLayout::Padded.is_paged());
+    }
+}

@@ -51,6 +51,9 @@
 //! | `DegradedReplan` | degraded re-plan onto survivors    | `survivors`, `requeued` |
 //! | `Retire`         | request completed                  | `request`, `slot`, `tokens`, `latency_s`*, `ttft_s`* |
 //! | `Cancel`         | request cancelled                  | `request` |
+//! | `BlockAlloc`     | paged-KV blocks allocated (delta)  | `blocks`, `in_use`, `free` |
+//! | `BlockFree`      | paged-KV blocks released (delta)   | `blocks`, `in_use`, `free` |
+//! | `PrefixHit`      | prompt matched a cached prefix     | `request`, `slot`, `shared_tokens`, `shared_blocks` |
 //!
 //! `modules` is a [`ModuleTimes`] object: `attn_s`, `expert_s`,
 //! `collective_s`, `reshard_s`, `per_device_s` (all wall-derived).

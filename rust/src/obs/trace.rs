@@ -250,6 +250,29 @@ pub enum EventKind {
     Cancel {
         request: u64,
     },
+    /// Paged KV: blocks allocated from the pool this scheduler
+    /// iteration (delta), with the pool gauges after the step.
+    BlockAlloc {
+        blocks: usize,
+        in_use: usize,
+        free: usize,
+    },
+    /// Paged KV: blocks released to the pool this scheduler iteration
+    /// (delta), with the pool gauges after the step.
+    BlockFree {
+        blocks: usize,
+        in_use: usize,
+        free: usize,
+    },
+    /// Paged KV: an admitted prompt matched a trie-cached prefix —
+    /// `shared_tokens` of prefill skipped, `shared_blocks` attached
+    /// copy-on-write.
+    PrefixHit {
+        request: u64,
+        slot: usize,
+        shared_tokens: usize,
+        shared_blocks: usize,
+    },
 }
 
 /// Canonical kind names, in schema order.
@@ -265,6 +288,9 @@ pub const KIND_NAMES: &[&str] = &[
     "DegradedReplan",
     "Retire",
     "Cancel",
+    "BlockAlloc",
+    "BlockFree",
+    "PrefixHit",
 ];
 
 impl EventKind {
@@ -281,6 +307,9 @@ impl EventKind {
             EventKind::DegradedReplan { .. } => "DegradedReplan",
             EventKind::Retire { .. } => "Retire",
             EventKind::Cancel { .. } => "Cancel",
+            EventKind::BlockAlloc { .. } => "BlockAlloc",
+            EventKind::BlockFree { .. } => "BlockFree",
+            EventKind::PrefixHit { .. } => "PrefixHit",
         }
     }
 
@@ -335,6 +364,22 @@ impl EventKind {
                 ("ttft_s", (*ttft_s).into()),
             ],
             EventKind::Cancel { request } => vec![("request", (*request as f64).into())],
+            EventKind::BlockAlloc { blocks, in_use, free } => vec![
+                ("blocks", (*blocks).into()),
+                ("in_use", (*in_use).into()),
+                ("free", (*free).into()),
+            ],
+            EventKind::BlockFree { blocks, in_use, free } => vec![
+                ("blocks", (*blocks).into()),
+                ("in_use", (*in_use).into()),
+                ("free", (*free).into()),
+            ],
+            EventKind::PrefixHit { request, slot, shared_tokens, shared_blocks } => vec![
+                ("request", (*request as f64).into()),
+                ("slot", (*slot).into()),
+                ("shared_tokens", (*shared_tokens).into()),
+                ("shared_blocks", (*shared_blocks).into()),
+            ],
         }
     }
 }

@@ -125,7 +125,9 @@ use crate::adapt::window::TrafficSample;
 use crate::adapt::{AdaptLoop, MeasuredLatency, PlanCache, SwitchDecision};
 use crate::config::hardware::NodeConfig;
 use crate::model::fault::{classify, faulted_device};
-use crate::model::{EngineMode, ExecStats, FaultPlan, ModelExecutor, ShardPlan, WeightStore};
+use crate::model::{
+    EngineMode, ExecStats, FaultPlan, KvLayout, ModelExecutor, ShardPlan, WeightStore,
+};
 use crate::obs::{EventKind, Recorder, TraceEvent};
 use crate::planner::{HapPlanner, PLANNER_SEED};
 use crate::runtime::literal::argmax_rows;
@@ -339,8 +341,15 @@ struct Slot {
     /// cursor (tokens prefilled so far). `Some` while the slot is in
     /// the *Prefilling* phase — it takes no decode steps, and its
     /// first token (and TTFT) lands only when the final chunk's logits
-    /// do. `None` once decoding.
+    /// do. `None` once decoding. Under paged KV the cursor starts at
+    /// the trie-matched prefix length instead of 0 (shared prefill
+    /// work is skipped).
     prefill: Option<(Vec<i32>, usize)>,
+    /// Paged KV: blocks reserved for this request at admission
+    /// (`ceil((prompt + budget) / block_size)`); `0` under the padded
+    /// layout. Admission backpressures when the sum over occupied
+    /// slots would exceed the pool.
+    kv_blocks: usize,
 }
 
 impl Slot {
@@ -431,6 +440,13 @@ struct Session {
     /// Scheduler iterations run so far — the trace's primary
     /// deterministic ordering key (backoff burns count too).
     iterations: u64,
+    /// Paged KV: pool alloc/free counter watermarks from the previous
+    /// iteration, so each step records only the delta as
+    /// `BlockAlloc`/`BlockFree` events. Reset to 0 when a session
+    /// restart rebuilds the pool (counters restart below the
+    /// watermark).
+    kv_allocs_seen: u64,
+    kv_frees_seen: u64,
 }
 
 impl Session {
@@ -465,6 +481,8 @@ impl Session {
             failed_requests: Vec::new(),
             recorder: Recorder::disabled(),
             iterations: 0,
+            kv_allocs_seen: 0,
+            kv_frees_seen: 0,
             config,
             scheduling,
             meta,
@@ -1369,6 +1387,36 @@ impl Session {
                         self.active.ok_or(EngineError::NoSession { at: "admission" })?;
                     let mut joiners = joiners.into_iter();
                     while let Some(req) = joiners.next() {
+                        let (row, budget) = self.batcher.pack_one(&req);
+                        // Paged KV: admission is bound by free *blocks*,
+                        // not free slots. Reserve the request's whole
+                        // footprint (prompt + generate budget, rounded
+                        // up to blocks) against the pool; when the pool
+                        // cannot cover it, the joiner (and everything
+                        // behind it — admission order is part of the
+                        // deterministic schedule) waits in the backlog
+                        // until retirements return blocks.
+                        let kv_blocks = match self.config.kv {
+                            KvLayout::Paged { block_size, .. } => {
+                                let pool = self
+                                    .config
+                                    .kv
+                                    .resolved_blocks(&self.meta)
+                                    .expect("paged layout resolves a pool size");
+                                let need = (row.len() + budget)
+                                    .min(self.meta.max_len)
+                                    .div_ceil(block_size);
+                                let reserved: usize =
+                                    self.slots.iter().flatten().map(|s| s.kv_blocks).sum();
+                                if reserved + need > pool {
+                                    self.backlog.push(req);
+                                    self.backlog.extend(joiners);
+                                    break;
+                                }
+                                need
+                            }
+                            KvLayout::Padded => 0,
+                        };
                         let slot = match exec.claim_slot() {
                             Some(s) => s,
                             None => {
@@ -1384,7 +1432,33 @@ impl Session {
                             }
                         };
                         debug_assert!(self.slots[slot].is_none(), "slot maps diverged");
-                        let (row, budget) = self.batcher.pack_one(&req);
+                        // Paged KV: bind the prompt row to the slot and
+                        // match it against the DP group's prefix trie —
+                        // a hit attaches the shared blocks and moves the
+                        // prefill cursor past them (shared prefill work
+                        // is skipped; the prompt's final position always
+                        // recomputes so first-token logits are exact).
+                        let attach = match exec.attach_prompt(slot, &row) {
+                            Ok(a) => a,
+                            Err(e) => {
+                                self.backlog.push(req);
+                                self.backlog.extend(joiners);
+                                return Err(e);
+                            }
+                        };
+                        if attach.start > 0 {
+                            self.metrics.prefix_hits += 1;
+                            self.metrics.prefix_shared_tokens += attach.start as u64;
+                            self.record(
+                                exec,
+                                EventKind::PrefixHit {
+                                    request: req.id,
+                                    slot,
+                                    shared_tokens: attach.start,
+                                    shared_blocks: attach.shared_blocks,
+                                },
+                            );
+                        }
                         self.record(
                             exec,
                             EventKind::Admit {
@@ -1399,7 +1473,8 @@ impl Session {
                         }
                         out.admitted += 1;
                         // Every joiner enters in the Prefilling phase at
-                        // cursor 0 and runs its first chunk right away;
+                        // its attach cursor (0 unless a prefix hit) and
+                        // runs its first chunk right away;
                         // `advance_chunk` promotes it to Decoding (or
                         // retires a single-token request) if that chunk
                         // already completes the prompt — the unchunked
@@ -1410,7 +1485,8 @@ impl Session {
                             last: 0,
                             remaining: budget,
                             ttft: 0.0,
-                            prefill: Some((row, 0)),
+                            prefill: Some((row, attach.start)),
+                            kv_blocks,
                         });
                         match self.advance_chunk(exec, slot, &mut out) {
                             Ok(true) => running += 1,
@@ -1474,6 +1550,46 @@ impl Session {
             }
             self.dwell_tokens += decoding;
             out.decoded = decoding;
+        }
+
+        // ---- 6. Paged-KV accounting: mirror the pool gauges into the
+        // metrics registry and record this iteration's alloc/free
+        // deltas as block-level trace events.
+        if let Some(stats) = exec.paged_stats() {
+            self.metrics.kv_blocks_in_use = stats.blocks_in_use as u64;
+            self.metrics.kv_blocks_free = stats.blocks_free as u64;
+            if stats.allocs < self.kv_allocs_seen || stats.frees < self.kv_frees_seen {
+                // A session restart rebuilt the pool: its counters
+                // restarted below the watermarks, so the deltas do too.
+                self.kv_allocs_seen = 0;
+                self.kv_frees_seen = 0;
+            }
+            if self.recorder.is_enabled() {
+                let allocs = stats.allocs - self.kv_allocs_seen;
+                if allocs > 0 {
+                    self.record(
+                        exec,
+                        EventKind::BlockAlloc {
+                            blocks: allocs as usize,
+                            in_use: stats.blocks_in_use,
+                            free: stats.blocks_free,
+                        },
+                    );
+                }
+                let frees = stats.frees - self.kv_frees_seen;
+                if frees > 0 {
+                    self.record(
+                        exec,
+                        EventKind::BlockFree {
+                            blocks: frees as usize,
+                            in_use: stats.blocks_in_use,
+                            free: stats.blocks_free,
+                        },
+                    );
+                }
+            }
+            self.kv_allocs_seen = stats.allocs;
+            self.kv_frees_seen = stats.frees;
         }
 
         out.running = self.slots.iter().filter(|s| s.is_some()).count();
@@ -1688,6 +1804,13 @@ pub fn serve_with_recorder(
     recorder: Recorder,
 ) -> Result<ServeReport> {
     exec.set_quant(config.quant)?;
+    if config.kv.is_paged() && scheduling != Scheduling::Streaming {
+        anyhow::bail!(
+            "paged KV serves the streaming scheduler only: gang prefill owns whole \
+             padded batches (use streaming scheduling, or the padded layout)"
+        );
+    }
+    exec.set_kv_layout(config.kv)?;
     let mut session = Session::new(exec, config.clone(), scheduling);
     session.recorder = recorder;
     for req in workload {
@@ -1780,6 +1903,12 @@ impl EngineBuilder {
         // resident shards yet).
         exec.set_quant(self.config.quant)
             .expect("host executor accepts the configured quantization");
+        assert!(
+            !(self.config.kv.is_paged() && self.scheduling != Scheduling::Streaming),
+            "paged KV serves the streaming scheduler only (gang prefill owns whole padded batches)"
+        );
+        exec.set_kv_layout(self.config.kv)
+            .expect("host executor accepts the configured KV layout");
         let mut session = Session::new(&exec, self.config, self.scheduling);
         if let Some(recorder) = self.recorder {
             session.recorder = recorder;
@@ -1808,6 +1937,12 @@ impl EngineBuilder {
             anyhow::bail!(
                 "quantized serving is host-backend only: the PJRT artifacts consume f32 \
                  shard tensors (drop --quant, or use --backend host)"
+            );
+        }
+        if self.config.kv.is_paged() {
+            anyhow::bail!(
+                "paged KV is host-backend only: the fixed-shape PJRT artifacts address \
+                 contiguous padded KV rows (drop --kv paged, or use --backend host)"
             );
         }
         let exec = ModelExecutor::new(rt)?;

@@ -49,6 +49,18 @@ pub struct Metrics {
     /// Requests drained as `RequestStatus::Failed` because no grid
     /// could serve them.
     pub requests_failed: usize,
+    /// Paged KV: admissions whose prompt matched a trie-cached prefix
+    /// (shared blocks attached, shared prefill work skipped).
+    pub prefix_hits: u64,
+    /// Paged KV: prompt tokens served from shared prefix blocks
+    /// instead of being re-prefilled.
+    pub prefix_shared_tokens: u64,
+    /// Paged KV: pool blocks owned by at least one slot or trie node
+    /// at the last scheduler iteration (gauge; 0 under padded).
+    pub kv_blocks_in_use: u64,
+    /// Paged KV: free-list blocks at the last scheduler iteration
+    /// (gauge; 0 under padded).
+    pub kv_blocks_free: u64,
     /// Live (still-generating) slots summed over decode iterations —
     /// `slot_steps / slot_capacity_steps` is the mean occupancy. Gang
     /// convoys leave this low (finished members ride dead); continuous
@@ -165,6 +177,10 @@ impl Metrics {
         r.counter("replans_degraded", self.replans_degraded as u64);
         r.counter("requests_recovered", self.requests_recovered as u64);
         r.counter("requests_failed", self.requests_failed as u64);
+        r.counter("prefix_hits", self.prefix_hits);
+        r.counter("prefix_shared_tokens", self.prefix_shared_tokens);
+        r.gauge("kv_blocks_in_use", self.kv_blocks_in_use as f64);
+        r.gauge("kv_blocks_free", self.kv_blocks_free as f64);
         r.gauge("slot_occupancy", self.mean_occupancy());
         r.gauge("wall_time_seconds", self.wall_time);
         r.gauge("throughput_tokens_per_second", self.throughput());
@@ -208,6 +224,15 @@ impl Metrics {
             self.reshards,
             self.reshard_time * 1e3,
         );
+        if self.kv_blocks_in_use > 0 || self.kv_blocks_free > 0 || self.prefix_hits > 0 {
+            s.push_str(&format!(
+                " | kv blocks: {} in use, {} free, {} prefix hits ({} shared tokens)",
+                self.kv_blocks_in_use,
+                self.kv_blocks_free,
+                self.prefix_hits,
+                self.prefix_shared_tokens,
+            ));
+        }
         if self.faults_detected > 0 || self.requests_failed > 0 {
             s.push_str(&format!(
                 " | faults: {} detected, {} retries, {} degraded replans, {} recovered, {} failed",
@@ -321,6 +346,25 @@ mod tests {
         // Both expositions render without panicking and agree on names.
         assert!(r.to_prometheus().contains("hap_ttft_seconds"));
         assert!(r.to_json().get("tpot_seconds").is_some());
+    }
+
+    #[test]
+    fn paged_kv_counters_surface_in_registry_and_summary() {
+        use crate::obs::MetricValue;
+        let mut m = Metrics::new();
+        assert!(!m.summary().contains("kv blocks:"), "paged tail only under paged KV");
+        m.prefix_hits = 3;
+        m.prefix_shared_tokens = 24;
+        m.kv_blocks_in_use = 10;
+        m.kv_blocks_free = 14;
+        let r = m.registry();
+        assert_eq!(r.get("prefix_hits"), Some(&MetricValue::Counter(3)));
+        assert_eq!(r.get("prefix_shared_tokens"), Some(&MetricValue::Counter(24)));
+        assert_eq!(r.get("kv_blocks_in_use"), Some(&MetricValue::Gauge(10.0)));
+        assert_eq!(r.get("kv_blocks_free"), Some(&MetricValue::Gauge(14.0)));
+        assert!(m
+            .summary()
+            .contains("kv blocks: 10 in use, 14 free, 3 prefix hits (24 shared tokens)"));
     }
 
     #[test]

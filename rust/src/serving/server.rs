@@ -20,7 +20,7 @@ use super::router::RouterPolicy;
 use super::{Request, Response};
 use crate::adapt::controller::ControllerConfig;
 use crate::config::{hardware::NodeConfig, model::MoEModelConfig};
-use crate::model::ModelExecutor;
+use crate::model::{KvLayout, ModelExecutor};
 use crate::quant::QuantKind;
 use crate::runtime::PjrtRuntime;
 use crate::strategy::{AttnStrategy, ExpertStrategy};
@@ -96,6 +96,13 @@ pub struct ServeConfig {
     /// the engine builder / `serve_with` before any shard goes
     /// resident. See `hap serve --quant int8|int4`.
     pub quant: Option<QuantKind>,
+    /// KV-cache memory layout (`Padded` = per-slot `max_len` rows, the
+    /// default; `Paged` = the block-pool layout with copy-on-write
+    /// prompt-prefix sharing — see [`crate::model::paged_kv`]).
+    /// Streaming scheduler + host backend only; admission switches
+    /// from free-slot counting to free-block accounting. See
+    /// `hap serve --kv paged`.
+    pub kv: KvLayout,
     /// When set, the engine runs window → plan cache → controller and
     /// executes under the controller's active plan; the fixed fields
     /// above only serve as the pre-traffic fallback.
@@ -113,6 +120,7 @@ impl ServeConfig {
             queue_capacity: 1024,
             prefill_chunk: 0,
             quant: None,
+            kv: KvLayout::Padded,
             adaptive: None,
         }
     }
@@ -127,6 +135,7 @@ impl ServeConfig {
             queue_capacity: 1024,
             prefill_chunk: 0,
             quant: None,
+            kv: KvLayout::Padded,
             adaptive: None,
         }
     }
@@ -165,9 +174,13 @@ impl ServeConfig {
         } else {
             format!("attn={} experts={}", self.attn.label(), self.expert_prefill.label())
         };
-        match self.quant {
+        let base = match self.quant {
             Some(q) => format!("{base} quant={}", q.name()),
             None => base,
+        };
+        match self.kv {
+            KvLayout::Paged { block_size, .. } => format!("{base} kv=paged/{block_size}"),
+            KvLayout::Padded => base,
         }
     }
 }

@@ -261,6 +261,7 @@ fn host_serving_tokens_invariant_across_plans() {
         queue_capacity: 1024,
         prefill_chunk: 0,
         quant: None,
+        kv: hap::model::KvLayout::Padded,
         adaptive: None,
     };
     let mut reference: Option<Vec<(u64, Vec<i32>)>> = None;
