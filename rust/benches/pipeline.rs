@@ -1,0 +1,233 @@
+//! §Pipeline benchmark — BENCH_pipeline.json at the repo root.
+//!
+//! Measures the micro-chunk pipelined iteration loop (ISSUE 10) on a
+//! comm-heavy hybrid plan (attn TP4, experts TP2×EP2 — the EP combine
+//! is the per-layer communication the pipeline hides):
+//!
+//! - **iteration-time win**: the same prefill + decode workload at
+//!   `K = 1` (module-sequential) vs `K = 4` micro-chunks, equal tokens,
+//!   equal threads (both `EngineMode::Parallel`) — only the overlap
+//!   differs;
+//! - **bit-identity gate**: the pipelined streaming engine's tokens vs
+//!   the `EngineMode::Sequential` oracle;
+//! - **overlap-model accuracy**: [`OverlapModel::fit`] over measured
+//!   `(compute, comm, span)` samples at three workload scales, then
+//!   predicted vs measured overlap share on the main workload;
+//! - **planner evidence**: a planner carrying an overlap model prices
+//!   the active comm pair as `max + ε·min` and selects plans flagged
+//!   `exec=pipelined` — plans the non-overlap planner cannot choose —
+//!   at a predicted total never above the sequential planner's.
+
+use hap::benchkit::{banner, write_results, Table};
+use hap::config::{MoEModelConfig, NodeConfig, Scenario};
+use hap::model::{EngineMode, ModelExecutor, ShardPlan, WeightStore};
+use hap::obs::ModuleTimes;
+use hap::planner::HapPlanner;
+use hap::runtime::TinyModelMeta;
+use hap::serving::{Engine, Request, ServeConfig};
+use hap::sim::OverlapModel;
+use hap::strategy::{AttnStrategy, ExpertStrategy};
+use hap::util::json::Json;
+use std::time::Instant;
+
+/// A host-demo-shaped model scaled up until one iteration is long
+/// enough to time: the comparison is compute-vs-combine overlap, so it
+/// needs real work per chunk, not microsecond noise.
+fn bench_meta() -> TinyModelMeta {
+    let mut m = TinyModelMeta::host_demo();
+    m.hidden = 128;
+    m.q_heads = 16;
+    m.inter = 256;
+    m.layers = 4;
+    m.batch = 8;
+    m.prefill_len = 32;
+    // Room for the deepest decode sweep (24 steps past the prefill).
+    m.max_len = 64;
+    m
+}
+
+/// Comm-heavy hybrid plan: TP4 attention, TP2×EP2 experts — every
+/// expert layer ends in an EP contribution-combine for the pipeline to
+/// hide under the next chunk's FFN.
+fn hybrid_plan() -> ShardPlan {
+    ShardPlan::new(AttnStrategy::new(4, 1), ExpertStrategy::new(2, 2))
+}
+
+/// One timed iteration workload: a full gang prefill plus `decodes`
+/// decode steps at micro-chunk width `k`. Returns the wall seconds and
+/// the executor's ModuleTimes delta over the timed region (median-wall
+/// rep of `reps`).
+fn measure(m: &TinyModelMeta, k: usize, decodes: usize, reps: usize) -> (f64, ModuleTimes) {
+    let plan = hybrid_plan();
+    let toks: Vec<i32> =
+        (0..(m.batch * m.prefill_len) as i32).map(|i| i % m.vocab as i32).collect();
+    let mut exec = ModelExecutor::host(WeightStore::synthetic(m, 42));
+    exec.set_pipeline_chunks(k).unwrap();
+    exec.prefill(&toks, &plan).unwrap(); // warm: shards go resident
+    let mut runs: Vec<(f64, ModuleTimes)> = (0..reps)
+        .map(|_| {
+            let base = exec.module_times().clone();
+            let t0 = Instant::now();
+            exec.prefill(&toks, &plan).unwrap();
+            for _ in 0..decodes {
+                exec.decode_step(&vec![1; m.batch], &plan).unwrap();
+            }
+            (t0.elapsed().as_secs_f64(), exec.module_times().delta_since(&base))
+        })
+        .collect();
+    runs.sort_by(|a, b| a.0.total_cmp(&b.0));
+    runs.swap_remove(runs.len() / 2)
+}
+
+/// Streaming-engine token identity: pipelined `K = 4` vs the
+/// module-sequential oracle, on the hybrid transition config.
+fn tokens_bit_identical(m: &TinyModelMeta) -> bool {
+    let run = |mode: EngineMode, k: usize| {
+        let mut config = ServeConfig::hap_transition(4);
+        config.pipeline_chunks = k;
+        let mut engine =
+            Engine::builder(config).build_host_with_mode(WeightStore::synthetic(m, 42), mode);
+        for id in 0..6u64 {
+            let len = m.prefill_len / 2 + (id as usize * 3) % (m.prefill_len / 2);
+            let prompt: Vec<i32> =
+                (0..len).map(|i| ((i as u64 * 7 + id * 13) % m.vocab as u64) as i32).collect();
+            engine.submit(Request::new(id, prompt, 4)).unwrap();
+        }
+        let report = engine.shutdown().unwrap();
+        let mut t: Vec<(u64, Vec<i32>)> =
+            report.responses.iter().map(|r| (r.id, r.tokens.clone())).collect();
+        t.sort();
+        t
+    };
+    run(EngineMode::Sequential, 1) == run(EngineMode::Parallel, 4)
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("pipeline", "micro-chunk pipelined iteration: measured win, overlap fit, planner");
+    let m = bench_meta();
+    const K: usize = 4;
+    const DECODES: usize = 16;
+    const REPS: usize = 5;
+
+    // --- Correctness gate first: overlap must be latency-only.
+    let bit_identical = tokens_bit_identical(&m);
+    assert!(bit_identical, "pipelined tokens diverged from the sequential oracle");
+
+    // --- Iteration-time win at equal tokens and equal threading.
+    let (w_seq, t_seq) = measure(&m, 1, DECODES, REPS);
+    let (w_pipe, t_pipe) = measure(&m, K, DECODES, REPS);
+    let speedup = w_seq / w_pipe;
+    // Expert-section span: total wall minus the (K-invariant) non-expert
+    // time, estimated from the K = 1 run where the section is exactly
+    // compute + combine.
+    let non_expert = (w_seq - (t_seq.expert_s + t_seq.collective_s)).max(0.0);
+    let span_pipe = (w_pipe - non_expert).max(0.0);
+
+    // --- Overlap model: fit on three workload scales, then compare
+    // predicted vs measured overlap share on the main workload.
+    let mut samples: Vec<(f64, f64, f64)> = Vec::new();
+    for decodes in [4usize, 12, 24] {
+        let (w1, t1) = measure(&m, 1, decodes, REPS);
+        let (wk, _) = measure(&m, K, decodes, REPS);
+        let base = (w1 - (t1.expert_s + t1.collective_s)).max(0.0);
+        samples.push((t1.expert_s, t1.collective_s, (wk - base).max(0.0)));
+    }
+    let om = OverlapModel::fit(&samples);
+    let (e, c) = (t_seq.expert_s, t_seq.collective_s);
+    let hidden = e.min(c).max(1e-12);
+    let measured_share = (((e + c) - span_pipe) / hidden).clamp(0.0, 1.0);
+    let predicted_share = (((e + c) - om.overlapped(e, c)) / hidden).clamp(0.0, 1.0);
+    let share_error = (measured_share - predicted_share).abs();
+
+    // --- Planner: the overlap-aware planner selects pipelined plans
+    // the sequential-cost planner cannot express, never at a worse
+    // predicted total.
+    let model = MoEModelConfig::mixtral_8x7b();
+    let node = NodeConfig::a6000x(4);
+    let seq_planner = HapPlanner::new(&model, &node);
+    let pipe_planner = HapPlanner::new(&model, &node).with_overlap(OverlapModel::new(0.25, 0.0));
+    let mut planner_rows: Vec<Json> = Vec::new();
+    let mut any_pipelined = false;
+    for sc in Scenario::table2() {
+        let seq_plan = seq_planner.plan(&sc, sc.generate)?;
+        let pipe_plan = pipe_planner.plan(&sc, sc.generate)?;
+        assert!(
+            pipe_plan.predicted_total <= seq_plan.predicted_total * (1.0 + 1e-9),
+            "{}: overlap-aware planner lost ground ({} vs {})",
+            sc.name,
+            pipe_plan.predicted_total,
+            seq_plan.predicted_total
+        );
+        let pipelined = pipe_plan.pipelined_prefill || pipe_plan.pipelined_decode;
+        any_pipelined |= pipelined;
+        planner_rows.push(Json::obj(vec![
+            ("scenario", sc.name.as_str().into()),
+            ("seq_signature", seq_plan.signature().into()),
+            ("pipe_signature", pipe_plan.signature().into()),
+            ("seq_predicted_total_s", seq_plan.predicted_total.into()),
+            ("pipe_predicted_total_s", pipe_plan.predicted_total.into()),
+            ("pipelined_prefill", pipe_plan.pipelined_prefill.into()),
+            ("pipelined_decode", pipe_plan.pipelined_decode.into()),
+            (
+                "strategy_changed",
+                (seq_plan.attn != pipe_plan.attn
+                    || seq_plan.expert_prefill != pipe_plan.expert_prefill
+                    || seq_plan.expert_decode != pipe_plan.expert_decode)
+                    .into(),
+            ),
+        ]));
+    }
+    assert!(
+        any_pipelined,
+        "the overlap-aware planner never flagged a pipelined stage across Table II"
+    );
+
+    let mut table = Table::new(&["metric", "value"]);
+    table.row(&["K (micro-chunks)".into(), format!("{K}")]);
+    table.row(&["wall K=1".into(), hap::util::fmt_secs(w_seq)]);
+    table.row(&[format!("wall K={K}"), hap::util::fmt_secs(w_pipe)]);
+    table.row(&["speedup".into(), format!("{speedup:.3}x")]);
+    table.row(&["fitted eps".into(), format!("{:.3}", om.eps)]);
+    table.row(&["measured overlap share".into(), format!("{measured_share:.3}")]);
+    table.row(&["predicted overlap share".into(), format!("{predicted_share:.3}")]);
+    table.row(&["share error".into(), format!("{share_error:.3}")]);
+    table.row(&["tokens bit-identical".into(), format!("{bit_identical}")]);
+    table.print();
+
+    let summary = Json::obj(vec![
+        ("bench", "pipeline".into()),
+        ("profile", "release".into()),
+        ("plan", hybrid_plan().label().into()),
+        ("pipeline_chunks", K.into()),
+        ("decode_iters", DECODES.into()),
+        ("wall_sequential_s", w_seq.into()),
+        ("wall_pipelined_s", w_pipe.into()),
+        ("speedup", speedup.into()),
+        ("measured_win", (speedup > 1.0).into()),
+        ("tokens_bit_identical", bit_identical.into()),
+        (
+            "overlap",
+            Json::obj(vec![
+                ("eps", om.eps.into()),
+                ("overhead_s", om.overhead.into()),
+                ("expert_s", e.into()),
+                ("collective_s", c.into()),
+                ("span_pipelined_s", span_pipe.into()),
+                ("measured_share", measured_share.into()),
+                ("predicted_share", predicted_share.into()),
+                ("share_error", share_error.into()),
+            ]),
+        ),
+        ("planner", Json::Arr(planner_rows)),
+        ("planner_selects_pipelined", any_pipelined.into()),
+    ]);
+    write_results("pipeline", &summary);
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_pipeline.json");
+    if let Err(e) = std::fs::write(&root, summary.to_string_pretty()) {
+        eprintln!("could not write {}: {e}", root.display());
+    } else {
+        println!("wrote {}", root.display());
+    }
+    println!("pipeline bench OK");
+    Ok(())
+}

@@ -32,6 +32,13 @@ type PlanKey = (String, QuantizedScenario);
 pub struct PlanCache {
     entries: HashMap<PlanKey, HybridPlan>,
     platform: Option<NodeConfig>,
+    /// Execution-model fingerprint the cached plans were solved under:
+    /// `"sequential"`, or `"pipelined/<overlap fingerprint>"` for a
+    /// planner carrying a calibrated [`crate::sim::OverlapModel`]. A
+    /// planner whose fingerprint differs flushes the cache exactly like
+    /// a platform change — plans solved without (or with a different)
+    /// overlap model may rank strategies differently.
+    exec: Option<String>,
     pub hits: usize,
     pub misses: usize,
     /// Number of whole-cache invalidations due to platform change.
@@ -48,14 +55,21 @@ impl PlanCache {
 
     /// Plan for a quantized scenario through the cache: a hit returns
     /// the memoized plan; a miss solves and memoizes. Detects platform
-    /// changes against the planner's node and flushes stale entries.
+    /// and execution-model changes against the planner and flushes
+    /// stale entries.
     pub fn plan(&mut self, planner: &HapPlanner, key: QuantizedScenario) -> Result<HybridPlan> {
-        if self.platform.as_ref() != Some(planner.node) {
-            if self.platform.is_some() {
+        let exec_fp = Self::exec_fingerprint(planner);
+        if self.platform.as_ref() != Some(planner.node)
+            || self.exec.as_deref() != Some(exec_fp.as_str())
+        {
+            // Only discarding actual entries counts as an invalidation
+            // (a fresh or already-flushed cache re-pins for free).
+            if !self.entries.is_empty() {
                 self.invalidations += 1;
             }
             self.entries.clear();
             self.platform = Some(planner.node.clone());
+            self.exec = Some(exec_fp);
         }
         let full_key = (planner.model.name.clone(), key);
         if let Some(plan) = self.entries.get(&full_key) {
@@ -106,6 +120,17 @@ impl PlanCache {
         )
     }
 
+    /// Execution-model identity of a planner: the iteration-loop cost
+    /// model its plans were priced under. Distinct overlap parameters
+    /// are distinct execution models (the fingerprint carries the raw
+    /// f64 bits), so recalibration flushes like a platform change.
+    pub fn exec_fingerprint(planner: &HapPlanner) -> String {
+        match &planner.overlap {
+            None => "sequential".to_string(),
+            Some(om) => format!("pipelined/{}", om.fingerprint()),
+        }
+    }
+
     /// Serialize entries + platform fingerprint for persistence.
     pub fn to_json(&self) -> Json {
         let platform = self
@@ -132,9 +157,11 @@ impl PlanCache {
                 ])
             })
             .collect();
+        let exec = self.exec.as_deref().map(Json::from).unwrap_or(Json::Null);
         Json::obj(vec![
             ("kind", "hap-plan-cache".into()),
             ("platform", platform),
+            ("exec", exec),
             ("entries", Json::Arr(entries)),
         ])
     }
@@ -162,6 +189,11 @@ impl PlanCache {
         }
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("plan cache json: {e}"))?;
+        // Files written before the pipelined-execution axis existed
+        // carry no exec fingerprint: they were solved by sequential-only
+        // planners, so their entries stay valid for one.
+        cache.exec =
+            Some(j.get("exec").and_then(|e| e.as_str()).unwrap_or("sequential").to_string());
         let fp = Self::platform_fingerprint(node);
         if j.get("platform").and_then(|p| p.as_str()) != Some(fp.as_str()) {
             cache.invalidations += 1;
@@ -299,6 +331,47 @@ mod tests {
         assert_eq!(narrow.attn.devices(), 2, "degraded plan fits the survivors");
         assert_eq!(narrow.expert_prefill.devices(), 2);
         assert_eq!(narrow.expert_decode.devices(), 2);
+    }
+
+    #[test]
+    fn exec_model_change_flushes_cached_plans() {
+        // Plans priced without the overlap model must never be served
+        // to a planner that has one (and vice versa), and recalibrating
+        // the overlap parameters is itself an execution-model change.
+        use crate::sim::OverlapModel;
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let key = key_for(&Scenario::long_constrained());
+        let mut cache = PlanCache::new();
+        let seq = HapPlanner::new(&m, &node);
+        cache.plan(&seq, key).unwrap();
+        let pipe = HapPlanner::new(&m, &node).with_overlap(OverlapModel::new(0.1, 0.0));
+        cache.plan(&pipe, key).unwrap();
+        assert_eq!(cache.invalidations, 1, "overlap model must flush sequential plans");
+        assert_eq!(cache.misses, 2);
+        let recal = HapPlanner::new(&m, &node).with_overlap(OverlapModel::new(0.2, 0.0));
+        cache.plan(&recal, key).unwrap();
+        assert_eq!(cache.invalidations, 2, "recalibration must flush");
+        // Stable planner → warm hit.
+        cache.plan(&recal, key).unwrap();
+        assert_eq!(cache.hits, 1);
+
+        // The fingerprint survives persistence: a saved pipelined cache
+        // re-serves for the same overlap model but flushes for a
+        // sequential planner, and pre-exec-axis files (no "exec" key)
+        // default to sequential.
+        let dir = std::env::temp_dir().join("hap_plan_cache_exec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        cache.save(&path).unwrap();
+        let mut warm = PlanCache::load(&path, &m, &node).unwrap();
+        assert_eq!(warm.restored, 1);
+        warm.plan(&recal, key).unwrap();
+        assert_eq!((warm.hits, warm.misses), (1, 0), "same exec model must hit");
+        let mut cold = PlanCache::load(&path, &m, &node).unwrap();
+        cold.plan(&seq, key).unwrap();
+        assert_eq!(cold.invalidations, 1, "sequential planner must flush pipelined plans");
+        assert_eq!(cold.misses, 1);
     }
 
     #[test]

@@ -340,6 +340,8 @@ mod tests {
                 raw_pipeline: 0.0,
                 reshard: 0.0,
             },
+            pipelined_prefill: false,
+            pipelined_decode: false,
             predicted_prefill: ModuleLatency::default(),
             predicted_decode: ModuleLatency::default(),
             predicted_total: 1.0,

@@ -5,8 +5,14 @@
 //! index), explore best-bound-first via a priority queue. Exact for the
 //! problem sizes HAP produces, typically a handful of nodes because the
 //! one-hot structure makes relaxations nearly integral.
+//!
+//! Branching creates two siblings that fix the *same* variable set
+//! (the parent's fixings plus the branch variable) and differ only in
+//! the branch value, so the sparse→dense LP setup is built once per
+//! parent via [`SiblingScaffold`] and replayed for both children —
+//! bit-identical to two cold solves, same node count and objective.
 
-use super::simplex::{implied_ub, solve_relaxation_with, LpResult};
+use super::simplex::{implied_ub, solve_relaxation_with, LpResult, SiblingScaffold};
 use super::{Outcome, Problem};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -115,11 +121,12 @@ pub fn branch_and_bound_warm(problem: &Problem, warm: Option<&[f64]>) -> Outcome
                 }
             }
             Some(branch_var) => {
+                let scaffold = SiblingScaffold::new(problem, &node.fixed, branch_var);
                 for v in [1.0, 0.0] {
                     let mut fixed = node.fixed.clone();
                     fixed[branch_var] = Some(v);
                     if let LpResult::Optimal { x, objective: child_bound } =
-                        solve_relaxation_with(problem, &fixed, &implied)
+                        scaffold.solve(problem, &fixed, &implied, v)
                     {
                         let prune = incumbent
                             .as_ref()
@@ -156,8 +163,11 @@ fn most_fractional(x: &[f64], fixed: &[Option<f64>]) -> Option<usize> {
 
 #[cfg(test)]
 mod tests {
-    use crate::ilp::{solve, LinExpr, Problem, Sense};
+    use super::{most_fractional, Node};
+    use crate::ilp::simplex::{implied_ub, solve_relaxation_with, LpResult, SiblingScaffold};
+    use crate::ilp::{solve, LinExpr, Outcome, Problem, Sense};
     use crate::util::rng::Rng;
+    use std::collections::BinaryHeap;
 
     /// Brute-force 0-1 enumeration for cross-checking.
     fn brute_force(p: &Problem) -> Option<f64> {
@@ -174,6 +184,150 @@ mod tests {
             }
         }
         best
+    }
+
+    /// Pre-scaffold branch & bound: identical search to the production
+    /// path except every child LP is cold-solved. Oracle for the
+    /// sibling-scaffold bit-equality test. Returns (objective, nodes).
+    fn cold_branch_and_bound(problem: &Problem) -> Option<(f64, usize)> {
+        let n = problem.num_vars;
+        let root_fixed = vec![None; n];
+        let mut heap = BinaryHeap::new();
+        let mut incumbent: Option<(Vec<f64>, f64)> = None;
+        let mut nodes_explored = 0usize;
+        let implied = implied_ub(problem);
+        match solve_relaxation_with(problem, &root_fixed, &implied) {
+            LpResult::Infeasible => return None,
+            LpResult::Optimal { x, objective } => {
+                if most_fractional(&x, &root_fixed).is_some() {
+                    heap.push(Node { bound: objective, fixed: root_fixed, x });
+                } else {
+                    return Some((objective, 1));
+                }
+            }
+        }
+        while let Some(node) = heap.pop() {
+            nodes_explored += 1;
+            if let Some((_, inc)) = &incumbent {
+                if node.bound >= *inc - 1e-12 {
+                    continue;
+                }
+            }
+            match most_fractional(&node.x, &node.fixed) {
+                None => {
+                    let xi: Vec<f64> =
+                        node.x.iter().map(|&v| if v > 0.5 { 1.0 } else { 0.0 }).collect();
+                    if problem.feasible(&xi, 1e-6) {
+                        let obj = problem.objective_value(&xi);
+                        if incumbent.as_ref().map_or(true, |(_, o)| obj < *o) {
+                            incumbent = Some((xi, obj));
+                        }
+                    }
+                }
+                Some(bv) => {
+                    for v in [1.0, 0.0] {
+                        let mut fixed = node.fixed.clone();
+                        fixed[bv] = Some(v);
+                        if let LpResult::Optimal { x, objective: cb } =
+                            solve_relaxation_with(problem, &fixed, &implied)
+                        {
+                            let prune =
+                                incumbent.as_ref().map_or(false, |(_, o)| cb >= *o - 1e-12);
+                            if !prune {
+                                heap.push(Node { bound: cb, fixed, x });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        incumbent.map(|(_, o)| (o, nodes_explored))
+    }
+
+    #[test]
+    fn sibling_scaffold_bit_equal_to_cold_start() {
+        let mut rng = Rng::new(4242);
+        for trial in 0..40 {
+            let n = rng.range(3, 9);
+            let mut p = Problem::new();
+            let vars = p.binaries("x", n);
+            for &v in &vars {
+                p.set_objective_term(v, rng.range_f64(-10.0, 10.0));
+            }
+            for ci in 0..rng.range(1, 4) {
+                let mut e = LinExpr::new();
+                for &v in &vars {
+                    if rng.chance(0.7) {
+                        e.add_term(v, rng.range_f64(-3.0, 5.0));
+                    }
+                }
+                p.constrain(&format!("c{ci}"), e, Sense::Le, rng.range_f64(0.0, 6.0));
+            }
+            if rng.chance(0.5) {
+                let k = rng.range(2, n);
+                p.exactly_one("pick", &vars[0..k]);
+            }
+            let implied = implied_ub(&p);
+
+            // LP level: for random parent fixings and every possible
+            // branch variable, the scaffold's sibling solves must be
+            // bit-identical to cold translations — x and objective.
+            let mut parent: Vec<Option<f64>> = vec![None; n];
+            for slot in parent.iter_mut().take(n - 1) {
+                if rng.chance(0.3) {
+                    *slot = Some(if rng.chance(0.5) { 1.0 } else { 0.0 });
+                }
+            }
+            for branch in 0..n {
+                if parent[branch].is_some() {
+                    continue;
+                }
+                let scaffold = SiblingScaffold::new(&p, &parent, branch);
+                for v in [1.0, 0.0] {
+                    let mut fixed = parent.clone();
+                    fixed[branch] = Some(v);
+                    let cold = solve_relaxation_with(&p, &fixed, &implied);
+                    let shared = scaffold.solve(&p, &fixed, &implied, v);
+                    match (cold, shared) {
+                        (LpResult::Infeasible, LpResult::Infeasible) => {}
+                        (
+                            LpResult::Optimal { x: cx, objective: co },
+                            LpResult::Optimal { x: sx, objective: so },
+                        ) => {
+                            assert_eq!(
+                                co.to_bits(),
+                                so.to_bits(),
+                                "trial {trial} branch {branch} v {v}: objective drifted"
+                            );
+                            for (a, b) in cx.iter().zip(&sx) {
+                                assert_eq!(
+                                    a.to_bits(),
+                                    b.to_bits(),
+                                    "trial {trial} branch {branch} v {v}: x drifted"
+                                );
+                            }
+                        }
+                        _ => panic!("trial {trial} branch {branch}: feasibility disagreed"),
+                    }
+                }
+            }
+
+            // Search level: the production (scaffold-sharing) solver
+            // explores the same nodes and lands on the same objective
+            // bits as the cold-solving oracle.
+            match (solve(&p), cold_branch_and_bound(&p)) {
+                (Outcome::Infeasible, None) => {}
+                (Outcome::Optimal { objective, nodes_explored, .. }, Some((co, cn))) => {
+                    assert_eq!(
+                        objective.to_bits(),
+                        co.to_bits(),
+                        "trial {trial}: objective bits differ from cold start"
+                    );
+                    assert_eq!(nodes_explored, cn, "trial {trial}: node count changed");
+                }
+                (o, c) => panic!("trial {trial}: feasibility mismatch {o:?} vs {c:?}"),
+            }
+        }
     }
 
     #[test]

@@ -84,6 +84,98 @@ pub fn implied_ub(problem: &Problem) -> Vec<bool> {
     bounded
 }
 
+/// A dense constraint row over the free-variable columns.
+struct Row {
+    coeffs: Vec<f64>,
+    sense: Sense,
+    rhs: f64,
+}
+
+/// Shared LP-construction scaffold for the two sibling children of one
+/// branch-and-bound node. Both siblings fix the same variable set (the
+/// parent's fixings plus the branch variable — only the branch *value*
+/// differs), so the sparse→dense translation of every constraint is
+/// done once here instead of once per child. Coefficient rows depend
+/// only on which variables are free and are cloned verbatim; the rhs
+/// is re-derived per sibling by replaying the exact per-term
+/// subtraction sequence the cold path executes (same term order, same
+/// operations), so the resulting tableau — and therefore every simplex
+/// pivot, the solution, and the objective — is bit-identical to
+/// [`solve_relaxation_with`] on the same fixings.
+pub struct SiblingScaffold {
+    free: Vec<usize>,
+    col_of: Vec<Option<usize>>,
+    /// Per constraint: dense coefficients, sense, original rhs, and the
+    /// rhs replay program — `(coeff, Some(fixed value))` for inherited
+    /// fixings, `(coeff, None)` for the branch variable, in the
+    /// constraint's term-iteration order.
+    rows: Vec<(Vec<f64>, Sense, f64, Vec<(f64, Option<f64>)>)>,
+}
+
+impl SiblingScaffold {
+    /// Build for the children of a branch node: `fixed` is the parent's
+    /// fixing vector and `branch` the variable both siblings fix.
+    pub fn new(problem: &Problem, fixed: &[Option<f64>], branch: usize) -> SiblingScaffold {
+        let n = problem.num_vars;
+        assert_eq!(fixed.len(), n);
+        assert!(fixed[branch].is_none(), "branch variable already fixed");
+        let free: Vec<usize> =
+            (0..n).filter(|&i| fixed[i].is_none() && i != branch).collect();
+        let col_of: Vec<Option<usize>> = {
+            let mut m = vec![None; n];
+            for (c, &i) in free.iter().enumerate() {
+                m[i] = Some(c);
+            }
+            m
+        };
+        let nf = free.len();
+        let rows = problem
+            .constraints
+            .iter()
+            .map(|c| {
+                let mut coeffs = vec![0.0; nf];
+                let mut replay = Vec::new();
+                for (&i, &a) in &c.expr.terms {
+                    if let Some(col) = col_of[i] {
+                        coeffs[col] += a;
+                    } else if i == branch {
+                        replay.push((a, None));
+                    } else {
+                        replay.push((a, Some(fixed[i].expect("non-free, non-branch is fixed"))));
+                    }
+                }
+                (coeffs, c.sense, c.rhs, replay)
+            })
+            .collect();
+        SiblingScaffold { free, col_of, rows }
+    }
+
+    /// Solve one sibling's relaxation. `fixed` must be the parent's
+    /// fixings with the branch variable set to `value` — exactly the
+    /// vector [`solve_relaxation_with`] would receive; the result is
+    /// bit-identical to that call.
+    pub fn solve(
+        &self,
+        problem: &Problem,
+        fixed: &[Option<f64>],
+        implied: &[bool],
+        value: f64,
+    ) -> LpResult {
+        let rows: Vec<Row> = self
+            .rows
+            .iter()
+            .map(|(coeffs, sense, rhs0, replay)| {
+                let mut rhs = *rhs0;
+                for &(a, v) in replay {
+                    rhs -= a * v.unwrap_or(value);
+                }
+                Row { coeffs: coeffs.clone(), sense: *sense, rhs }
+            })
+            .collect();
+        solve_prepared(problem, fixed, &self.free, &self.col_of, implied, rows)
+    }
+}
+
 /// Solve the LP relaxation of `problem` with extra variable fixings:
 /// `fixed[i] = Some(v)` pins x_i = v (used by branch & bound).
 pub fn solve_relaxation(problem: &Problem, fixed: &[Option<f64>]) -> LpResult {
@@ -111,11 +203,6 @@ pub fn solve_relaxation_with(
     };
     let nf = free.len();
 
-    struct Row {
-        coeffs: Vec<f64>,
-        sense: Sense,
-        rhs: f64,
-    }
     let mut rows: Vec<Row> = Vec::with_capacity(problem.constraints.len() + nf);
     for c in &problem.constraints {
         let mut coeffs = vec![0.0; nf];
@@ -129,6 +216,22 @@ pub fn solve_relaxation_with(
         }
         rows.push(Row { coeffs, sense: c.sense, rhs });
     }
+    solve_prepared(problem, fixed, &free, &col_of, implied, rows)
+}
+
+/// Shared tail of [`solve_relaxation_with`] and
+/// [`SiblingScaffold::solve`]: append upper-bound rows, normalize, run
+/// the two simplex phases, and extract the solution.
+fn solve_prepared(
+    problem: &Problem,
+    fixed: &[Option<f64>],
+    free: &[usize],
+    col_of: &[Option<usize>],
+    implied: &[bool],
+    mut rows: Vec<Row>,
+) -> LpResult {
+    let n = problem.num_vars;
+    let nf = free.len();
     // Upper bounds x_i ≤ 1 only where the constraints don't already
     // imply them.
     for (c, &i) in free.iter().enumerate() {

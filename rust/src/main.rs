@@ -259,6 +259,19 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         "streaming engine: max prompt tokens prefilled per joiner per iteration (0 = unchunked)",
     );
     spec.flag(
+        "pipeline-chunks",
+        "1",
+        "host backend: micro-chunk pipeline width K — expert layers split the token batch \
+         into K ranged chunks whose FFN compute overlaps the previous chunk's combine, and \
+         the streaming engine batches same-length joiner chunks (1 = module-sequential)",
+    );
+    spec.flag(
+        "prefill-budget-ms",
+        "0",
+        "streaming engine with --pipeline-chunks > 1: size joiner prefill chunks from the \
+         measured prefill rate so one chunk costs about this many ms (0 = static sizing)",
+    );
+    spec.flag(
         "quant",
         "",
         "weight quantization for the packed host kernels: int8 | int4 (host backend)",
@@ -353,7 +366,22 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
         }
         config.prefill_chunk = usize_flag(&p, "prefill-chunk")?;
         if config.prefill_chunk > 0 && scheduling != hap::serving::Scheduling::Streaming {
+            // Zeroed, not just warned about: the gang entry points now
+            // reject streaming-only knobs with typed errors.
             eprintln!("--prefill-chunk only applies to --engine streaming (ignored)");
+            config.prefill_chunk = 0;
+        }
+        config.pipeline_chunks = usize_flag(&p, "pipeline-chunks")?;
+        if config.pipeline_chunks == 0 {
+            anyhow::bail!("--pipeline-chunks must be at least 1");
+        }
+        config.prefill_budget_ms = p.get_f64("prefill-budget-ms").map_err(anyhow::Error::msg)?;
+        if config.prefill_budget_ms < 0.0 {
+            anyhow::bail!("--prefill-budget-ms must be >= 0");
+        }
+        if config.prefill_budget_ms > 0.0 && scheduling != hap::serving::Scheduling::Streaming {
+            eprintln!("--prefill-budget-ms only applies to --engine streaming (ignored)");
+            config.prefill_budget_ms = 0.0;
         }
         config.quant = match p.get("quant") {
             "" => None,
@@ -410,6 +438,12 @@ fn cmd_serve(args: &[String]) -> anyhow::Result<()> {
                 anyhow::bail!(
                     "--kv paged requires --backend host: the fixed-shape PJRT artifacts \
                      address contiguous padded KV rows"
+                );
+            }
+            if usize_flag(&p, "pipeline-chunks")? > 1 {
+                anyhow::bail!(
+                    "--pipeline-chunks requires --backend host: the PJRT artifacts are \
+                     monolithic full-batch programs"
                 );
             }
             let dir = Path::new(p.get("artifacts"));

@@ -68,6 +68,35 @@ pub fn apply(group: &CollectiveGroup, outs: &[Option<HostTensor>]) -> Result<Hos
     }
 }
 
+/// Split `tokens` rows into `chunks` contiguous `(start, len)` ranges
+/// for the executor's micro-chunk pipeline. Remainder rows go to the
+/// leading chunks one at a time, so any two calls with the same inputs
+/// produce the same ranges and every token appears in exactly one
+/// chunk. `chunks` is clamped to `[1, tokens]` (a zero-token batch
+/// yields one empty range so callers need no special case).
+pub fn chunk_ranges(tokens: usize, chunks: usize) -> Vec<(usize, usize)> {
+    let k = chunks.clamp(1, tokens.max(1));
+    let (base, rem) = (tokens / k, tokens % k);
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for c in 0..k {
+        let len = base + usize::from(c < rem);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// Stitch per-chunk combined outputs (each `[len_c, ..tail]`) back into
+/// the full-batch tensor by concatenating **in chunk order**. Chunk
+/// outputs are explicit row ranges — never zero-padded partials summed
+/// together, which would lose `-0.0` signs — so the stitched tensor is
+/// byte-identical to the unchunked combine.
+pub fn concat_chunks(parts: &[HostTensor]) -> Result<HostTensor> {
+    let refs: Vec<&HostTensor> = parts.iter().collect();
+    concat_rows(&refs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +123,36 @@ mod tests {
         assert_eq!(c.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         let bad = t(vec![1, 3], vec![0.0; 3]);
         assert!(concat_rows(&[&a, &bad]).is_err());
+    }
+
+    #[test]
+    fn chunk_ranges_cover_every_token_once() {
+        for tokens in 0..40usize {
+            for chunks in 1..10usize {
+                let ranges = chunk_ranges(tokens, chunks);
+                assert!(!ranges.is_empty());
+                let mut next = 0usize;
+                for &(start, len) in &ranges {
+                    assert_eq!(start, next);
+                    next += len;
+                }
+                assert_eq!(next, tokens);
+                if tokens > 0 {
+                    assert_eq!(ranges.len(), chunks.min(tokens));
+                    let lens: Vec<usize> = ranges.iter().map(|r| r.1).collect();
+                    let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                    assert!(max - min <= 1, "chunks must be balanced: {lens:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn concat_chunks_matches_concat_rows() {
+        let parts = vec![t(vec![1, 2], vec![1.0, -0.0]), t(vec![2, 2], vec![3.0, 4.0, 5.0, 6.0])];
+        let c = concat_chunks(&parts).unwrap();
+        assert_eq!(c.shape, vec![3, 2]);
+        assert_eq!(c.data[1].to_bits(), (-0.0f32).to_bits());
     }
 
     #[test]

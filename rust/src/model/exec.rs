@@ -28,6 +28,21 @@
 //!   zero-padded to full width (exact, because the padded gate/up
 //!   columns contribute `act·0 = 0`).
 //!
+//! **Micro-chunk pipelining** (`set_pipeline_chunks`, host backend): at
+//! K ≥ 2 every expert call splits its token batch into K contiguous
+//! row chunks through the ranged kernel entry points, and under
+//! [`EngineMode::Parallel`] chunk `c`'s expert FFN compute overlaps
+//! chunk `c-1`'s combine collectives (the fold runs on the coordinator
+//! between spawning and joining the chunk's device threads).
+//! [`EngineMode::Sequential`] runs the same chunk loop without the
+//! overlap, so it stays the bit-equivalence oracle at every K: chunk
+//! outputs are explicit row ranges stitched in chunk order, per-row
+//! accumulation order never changes, and the fault clock still ticks
+//! once per op (chunking is internal to an op). `prefill_slots` is the
+//! op-level half: same-range joiner chunks batch into one ranged
+//! prefill call, so peer decode steps and joiner prefill share
+//! iterations instead of queueing behind each other.
+//!
 //! **State is persistent across batches**: weight shards stay resident
 //! (uploaded/materialized once per layout) and only a *plan switch*
 //! evicts the outgoing layout and materializes the incoming one — that
@@ -342,6 +357,25 @@ impl ResidentShard {
         }
     }
 
+    /// Expert module over one contiguous row range of the token batch
+    /// (the micro-chunk pipeline's per-chunk compute).
+    fn expert_module_ranged(
+        &self,
+        x: &HostTensor,
+        ep: usize,
+        top_k: usize,
+        start: usize,
+        len: usize,
+    ) -> Result<HostTensor> {
+        match self {
+            ResidentShard::Packed(ShardWeights::Expert(w)) => {
+                kernels::expert_module_ranged(x, w, top_k, start, len)
+            }
+            ResidentShard::Packed(_) => Err(anyhow!("resident shard is not an expert shard")),
+            _ => kernels::reference::expert_module_ranged(x, self.raw()?, ep, top_k, start, len),
+        }
+    }
+
     /// Host-resident weight bytes (PJRT uploads hold no host copy).
     fn weight_bytes(&self) -> usize {
         match self {
@@ -471,6 +505,9 @@ pub struct ModelExecutor<'rt> {
     /// expert FFN, collective combines, reshard) — the observability
     /// layer reads deltas of this around each op.
     times: ModuleTimes,
+    /// Micro-chunk pipeline depth K for the host expert path (1 =
+    /// module-sequential, the default). See [`Self::set_pipeline_chunks`].
+    pipeline_chunks: usize,
 }
 
 impl<'rt> ModelExecutor<'rt> {
@@ -499,6 +536,7 @@ impl<'rt> ModelExecutor<'rt> {
             stats: ExecStats::default(),
             fault: None,
             times: ModuleTimes::default(),
+            pipeline_chunks: 1,
         })
     }
 
@@ -532,6 +570,7 @@ impl<'rt> ModelExecutor<'rt> {
             stats: ExecStats::default(),
             fault: None,
             times: ModuleTimes::default(),
+            pipeline_chunks: 1,
         }
     }
 
@@ -636,6 +675,35 @@ impl<'rt> ModelExecutor<'rt> {
     /// The active host kernel family.
     pub fn kernel_mode(&self) -> KernelMode {
         self.kernel_mode
+    }
+
+    /// Set the micro-chunk pipeline depth `k` for the host expert path
+    /// (1 = module-sequential execution, the default). At `k >= 2` the
+    /// token batch of every expert call splits into `k` contiguous row
+    /// chunks; under [`EngineMode::Parallel`] chunk `c`'s expert FFN
+    /// compute overlaps chunk `c-1`'s combine collectives, while
+    /// [`EngineMode::Sequential`] runs the same chunk loop without the
+    /// overlap — so the sequential engine stays the bit-equivalence
+    /// oracle at every `k`. Tokens are bit-identical for any `k` by the
+    /// chunking contract on `expert_layer_chunked`. Host backend only:
+    /// the PJRT artifacts are monolithic full-batch programs.
+    pub fn set_pipeline_chunks(&mut self, k: usize) -> Result<()> {
+        if k == 0 {
+            anyhow::bail!("the pipeline needs at least one micro-chunk (k >= 1)");
+        }
+        if k > 1 && matches!(self.backend, Backend::Pjrt(_)) {
+            anyhow::bail!(
+                "micro-chunk pipelining runs on the host backend (the PJRT artifacts are \
+                 monolithic full-batch programs)"
+            );
+        }
+        self.pipeline_chunks = k;
+        Ok(())
+    }
+
+    /// The configured micro-chunk pipeline depth (1 = sequential).
+    pub fn pipeline_chunks(&self) -> usize {
+        self.pipeline_chunks
     }
 
     /// Host-resident weight bytes across all devices — the memory-
@@ -1267,6 +1335,194 @@ impl<'rt> ModelExecutor<'rt> {
         self.head(&x, &m)
     }
 
+    /// Batched joiner prefill: run the **same-range** next chunk of
+    /// several slots' prompts as one executor op — the "batch
+    /// same-length joiner chunks into one ranged prefill call" half of
+    /// the pipelined iteration loop. All slots must sit at the same
+    /// prompt cursor and submit chunks of one common length `c`
+    /// (`rows[i]` is slot `slots[i]`'s chunk); callers pass slots in
+    /// ascending order so paged block mapping/COW stays deterministic.
+    /// One fault-clock tick covers the whole batch — the engine forms
+    /// groups from scheduler state alone, so the op sequence (and with
+    /// it any fault schedule) is identical across engine modes.
+    /// Per-slot ranged attention runs against each slot's own KV row
+    /// inside the device closure in `slots` order; the expert/head math
+    /// runs once over the stacked `[n·c, H]` rows (and micro-chunk
+    /// pipelines when `pipeline_chunks > 1`). Every kernel in the path
+    /// is row-independent, so each slot's tokens are bit-identical to
+    /// `n` separate [`Self::prefill_slot`] calls. Returns each slot's
+    /// chunk logits (`[1, V]`, input order); as with `prefill_slot`,
+    /// only a *final* chunk's logits are the prompt's first-token
+    /// logits.
+    pub fn prefill_slots(
+        &mut self,
+        slots: &[usize],
+        rows: &[&[i32]],
+        plan: &ShardPlan,
+    ) -> Result<Vec<HostTensor>> {
+        if matches!(self.backend, Backend::Pjrt(_)) {
+            anyhow::bail!("prefill_slots runs on the host backend only (see begin_session)");
+        }
+        let m = self.meta().clone();
+        let n = slots.len();
+        if n == 0 || rows.len() != n {
+            anyhow::bail!(
+                "prefill_slots needs one token row per slot ({n} slots, {} rows)",
+                rows.len()
+            );
+        }
+        if !self.session {
+            anyhow::bail!("prefill_slots outside a session (call begin_session)");
+        }
+        let c = rows[0].len();
+        for (i, &slot) in slots.iter().enumerate() {
+            if !self.slot_live.get(slot).copied().unwrap_or(false) {
+                anyhow::bail!("slot {slot} not claimed");
+            }
+            if slots[..i].contains(&slot) {
+                anyhow::bail!("slot {slot} appears twice in one batched prefill");
+            }
+            if rows[i].len() != c {
+                anyhow::bail!(
+                    "batched prefill chunks must share one length ({c} vs {} for slot {slot})",
+                    rows[i].len()
+                );
+            }
+            if self.slot_pos[slot] != self.slot_pos[slots[0]] {
+                anyhow::bail!(
+                    "batched prefill slots must share one cursor ({} vs {} for slot {slot})",
+                    self.slot_pos[slots[0]],
+                    self.slot_pos[slot]
+                );
+            }
+        }
+        let start = self.slot_pos[slots[0]];
+        if c == 0 || start + c > m.prefill_len {
+            anyhow::bail!(
+                "chunk {start}..{} outside the {}-token prompt",
+                start + c,
+                m.prefill_len
+            );
+        }
+        let pinned = self.attn.ok_or_else(|| anyhow!("session has no pinned attention"))?;
+        if plan.attn != pinned {
+            anyhow::bail!("attention strategy is pinned by the session KV layout ({pinned})");
+        }
+        if !self.plan_ready(plan) {
+            self.validate(plan)?;
+            self.ensure_resident(plan)?;
+        }
+        let grid = DeviceGrid::lower(plan)?;
+        let t = plan.attn.tp;
+        let q_l = m.q_heads / t;
+        let kv_l = (m.kv_heads / t).max(1);
+        let bg = m.batch / plan.attn.dp;
+        let groups: Vec<(usize, usize)> = slots.iter().map(|&s| (s / bg, s % bg)).collect();
+
+        // Paged: map (and COW-unshare) each slot's blocks up front, in
+        // input order — a scheduler-side decision made before the op,
+        // identical across engine modes.
+        let paged_tables: Option<Vec<Vec<usize>>> = if self.paged.is_some() {
+            let mut tabs = Vec::with_capacity(n);
+            for (i, &slot) in slots.iter().enumerate() {
+                tabs.push(self.paged_prepare_prefill(slot, groups[i].0, start, c, &grid)?);
+            }
+            Some(tabs)
+        } else {
+            None
+        };
+        let pbs = self.paged.as_ref().map(|s| s.block_size).unwrap_or(1);
+
+        self.fault_tick();
+        let flat: Vec<i32> = rows.iter().flat_map(|r| r.iter().copied()).collect();
+        let mut x = self.embed(&flat, n, c, &m)?;
+        for l in 0..m.layers {
+            let a_out = {
+                let roles = &grid.roles;
+                let fam = attn_family(&plan.attn);
+                let hd = m.head_dim;
+                let xr = &x;
+                let groups_ref = &groups;
+                let tabs_ref = paged_tables.as_ref();
+                let t_mod = Instant::now();
+                let (mut outs, per_dev): (Vec<Vec<Option<HostTensor>>>, Vec<f64>) =
+                    map_devices_timed(self.mode, &mut self.devices, |st| {
+                        let role = roles[st.device];
+                        let mut mine: Vec<Option<HostTensor>> = vec![None; groups_ref.len()];
+                        for (i, &(g, r)) in groups_ref.iter().enumerate() {
+                            if role.dp_rank != g {
+                                continue;
+                            }
+                            let w = st
+                                .shards
+                                .get(&(fam.clone(), l))
+                                .ok_or_else(|| anyhow!("attn shard not resident"))?;
+                            let cache = st.kv[l]
+                                .as_mut()
+                                .ok_or_else(|| anyhow!("session KV missing"))?;
+                            let xi = xr.slice_outer(i, 1);
+                            let out = match tabs_ref {
+                                Some(tabs) => w.attn_prefill_ranged_paged(
+                                    &xi,
+                                    &mut cache.k,
+                                    &mut cache.v,
+                                    &tabs[i],
+                                    pbs,
+                                    start,
+                                    q_l,
+                                    kv_l,
+                                    hd,
+                                )?,
+                                None => w.attn_prefill_ranged(
+                                    &xi,
+                                    &mut cache.k,
+                                    &mut cache.v,
+                                    r,
+                                    start,
+                                    q_l,
+                                    kv_l,
+                                    hd,
+                                )?,
+                            };
+                            mine[i] = Some(out);
+                        }
+                        Ok(mine)
+                    })?;
+                self.times.attn_s += t_mod.elapsed().as_secs_f64();
+                for (d, dt) in per_dev.iter().enumerate() {
+                    self.times.add_device(d, *dt);
+                }
+                // Per-slot TP partial-sum — the same fold, in the same
+                // member order, as the single-slot path — stitched back
+                // in slot order.
+                let t_comb = Instant::now();
+                let mut slot_rows = Vec::with_capacity(n);
+                for i in 0..n {
+                    let table: Vec<Option<HostTensor>> =
+                        outs.iter_mut().map(|per_slot| per_slot[i].take()).collect();
+                    slot_rows.push(collectives::apply(&grid.attn_reduce[groups[i].0], &table)?);
+                }
+                let out = collectives::concat_chunks(&slot_rows)?;
+                self.times.collective_s += t_comb.elapsed().as_secs_f64();
+                out
+            };
+            x.add_assign(&a_out);
+            let e_out = self.expert_layer(&x, l, &grid, &m, "prefill")?;
+            x.add_assign(&e_out);
+        }
+        for (i, &slot) in slots.iter().enumerate() {
+            self.slot_pos[slot] = start + c;
+            if self.paged.is_some() && start + c == m.prefill_len {
+                self.paged_register_prompt(slot, groups[i].0);
+            }
+        }
+        let logits = self.head(&x, &m)?;
+        let v = m.vocab;
+        Ok((0..n)
+            .map(|i| HostTensor::new(vec![1, v], logits.data[i * v..(i + 1) * v].to_vec()))
+            .collect())
+    }
+
     /// One decode iteration over the live slots: each **fully
     /// prefilled** claimed slot advances by one token at its own
     /// position. Free slots — and slots mid-way through a chunked
@@ -1799,6 +2055,11 @@ impl<'rt> ModelExecutor<'rt> {
         let tokens: usize = x.shape[..2].iter().product();
         let x2 = HostTensor::new(vec![tokens, m.hidden], x.data.clone());
 
+        if self.pipeline_chunks > 1 && matches!(self.backend, Backend::Host) {
+            let out = self.expert_layer_chunked(&x2, l, grid, m)?;
+            return Ok(HostTensor::new(x.shape.clone(), out.data));
+        }
+
         let t_mod = Instant::now();
         let (outs, per_dev): (Vec<HostTensor>, Vec<f64>) = match self.backend {
             Backend::Host => {
@@ -1844,14 +2105,140 @@ impl<'rt> ModelExecutor<'rt> {
         // Partial-sum within each expert block, then contribution-sum
         // across blocks.
         let t_comb = Instant::now();
-        let table: Vec<Option<HostTensor>> = outs.into_iter().map(Some).collect();
-        let mut leaders: Vec<Option<HostTensor>> = (0..grid.devices).map(|_| None).collect();
-        for g in &grid.expert_reduce {
-            leaders[g.members[0]] = Some(collectives::apply(g, &table)?);
-        }
-        let out = collectives::apply(&grid.expert_combine, &leaders)?;
+        let out = fold_expert(grid, outs)?;
         self.times.collective_s += t_comb.elapsed().as_secs_f64();
         Ok(HostTensor::new(x.shape.clone(), out.data))
+    }
+
+    /// Micro-chunk pipelined expert module (host backend, K ≥ 2): the
+    /// token rows of `x2 [T, H]` split into K contiguous chunks
+    /// ([`collectives::chunk_ranges`]); each chunk's per-device expert
+    /// FFN runs through the ranged kernel entry points while the
+    /// coordinator folds the *previous* chunk's reduce/combine
+    /// collectives. Under [`EngineMode::Parallel`] that fold genuinely
+    /// overlaps the next chunk's compute — it runs between spawning and
+    /// joining the chunk's device threads inside one `thread::scope`.
+    /// (On this shared-memory demo node the dispatch side of the
+    /// collective is the no-op broadcast of `x2`, so compute/combine is
+    /// the overlap the pipeline realizes.)
+    ///
+    /// **Why every K is bit-identical to the unchunked path**: each
+    /// expert-path kernel is row-independent, so a chunk's per-device
+    /// output rows equal the same rows of the full-batch call; each
+    /// chunk's combine folds the same operands in the same group member
+    /// order on the coordinator; and the chunk outputs are explicit row
+    /// ranges stitched by concatenation **in chunk order** — never
+    /// zero-padded partials summed together (which would lose `-0.0`
+    /// signs). [`EngineMode::Sequential`] runs the same chunk loop
+    /// without the overlap and stays the equivalence oracle.
+    ///
+    /// Chunking is internal to one executor op: the fault clock ticked
+    /// once for the op, and every chunk's device pass re-checks the
+    /// same stamped verdicts, so fault schedules are unchanged at any
+    /// K — a faulted device raises at the op's first chunk, before any
+    /// cursor advances.
+    ///
+    /// Module-time attribution under overlap is **span-based**:
+    /// `expert_s` takes each chunk's spawn→join span, `collective_s`
+    /// the fold durations. The two can sum to more than wall-clock —
+    /// that excess is exactly the overlap the planner's
+    /// [`crate::sim::OverlapModel`] calibrates against.
+    fn expert_layer_chunked(
+        &mut self,
+        x2: &HostTensor,
+        l: usize,
+        grid: &DeviceGrid,
+        m: &TinyModelMeta,
+    ) -> Result<HostTensor> {
+        let plan = &grid.plan;
+        let fam = expert_family(plan);
+        let ep = plan.expert.ep;
+        let top_k = m.top_k;
+        let ranges = collectives::chunk_ranges(x2.shape[0], self.pipeline_chunks);
+        let mut combined: Vec<HostTensor> = Vec::with_capacity(ranges.len());
+        let mut pending: Option<Vec<HostTensor>> = None;
+        let mut expert_secs = 0.0f64;
+        let mut fold_secs = 0.0f64;
+        let mut per_dev = vec![0.0f64; self.devices.len()];
+        for &(start, len) in &ranges {
+            match self.mode {
+                EngineMode::Sequential => {
+                    let t0 = Instant::now();
+                    let (outs, dts) = map_devices_timed(self.mode, &mut self.devices, |st| {
+                        let w = st
+                            .shards
+                            .get(&(fam.clone(), l))
+                            .ok_or_else(|| anyhow!("expert shard not resident"))?;
+                        w.expert_module_ranged(x2, ep, top_k, start, len)
+                    })?;
+                    expert_secs += t0.elapsed().as_secs_f64();
+                    for (d, dt) in dts.iter().enumerate() {
+                        per_dev[d] += *dt;
+                    }
+                    let t1 = Instant::now();
+                    combined.push(fold_expert(grid, outs)?);
+                    fold_secs += t1.elapsed().as_secs_f64();
+                }
+                EngineMode::Parallel => {
+                    let famr = &fam;
+                    let t0 = Instant::now();
+                    let (outs, dts) = std::thread::scope(|scope| {
+                        let handles: Vec<_> = self
+                            .devices
+                            .iter_mut()
+                            .map(|st| {
+                                scope.spawn(move || {
+                                    fault_check(st)?;
+                                    let t = Instant::now();
+                                    let w = st
+                                        .shards
+                                        .get(&(famr.clone(), l))
+                                        .ok_or_else(|| anyhow!("expert shard not resident"))?;
+                                    let out = w.expert_module_ranged(x2, ep, top_k, start, len)?;
+                                    Ok((out, t.elapsed().as_secs_f64()))
+                                })
+                            })
+                            .collect();
+                        // The overlap: fold chunk c-1's collectives on
+                        // the coordinator while chunk c's device
+                        // threads compute. Combine operands and fold
+                        // order are untouched — only *when* the fold
+                        // runs moves.
+                        if let Some(prev) = pending.take() {
+                            let tf = Instant::now();
+                            combined.push(fold_expert(grid, prev)?);
+                            fold_secs += tf.elapsed().as_secs_f64();
+                        }
+                        let mut outs = Vec::with_capacity(handles.len());
+                        let mut dts = Vec::with_capacity(handles.len());
+                        for h in handles {
+                            let (o, dt) = h
+                                .join()
+                                .unwrap_or_else(|_| Err(anyhow!("device thread panicked")))?;
+                            outs.push(o);
+                            dts.push(dt);
+                        }
+                        Ok::<_, anyhow::Error>((outs, dts))
+                    })?;
+                    expert_secs += t0.elapsed().as_secs_f64();
+                    for (d, dt) in dts.iter().enumerate() {
+                        per_dev[d] += *dt;
+                    }
+                    pending = Some(outs);
+                }
+            }
+        }
+        if let Some(prev) = pending.take() {
+            let tf = Instant::now();
+            combined.push(fold_expert(grid, prev)?);
+            fold_secs += tf.elapsed().as_secs_f64();
+        }
+        self.times.expert_s += expert_secs;
+        self.times.collective_s += fold_secs;
+        for (d, dt) in per_dev.iter().enumerate() {
+            self.times.add_device(d, *dt);
+        }
+        collectives::concat_chunks(&combined)
     }
 
     /// Final norm + unembed on the last position. Batch size comes from
@@ -1983,6 +2370,18 @@ where
         Ok((out, t0.elapsed().as_secs_f64()))
     })?;
     Ok(timed.into_iter().unzip())
+}
+
+/// Expert-side combine for one token range (a micro-chunk or the whole
+/// batch): partial-sum within each expert block, then contribution-sum
+/// across blocks — always on the coordinator, in group member order.
+fn fold_expert(grid: &DeviceGrid, outs: Vec<HostTensor>) -> Result<HostTensor> {
+    let table: Vec<Option<HostTensor>> = outs.into_iter().map(Some).collect();
+    let mut leaders: Vec<Option<HostTensor>> = (0..grid.devices).map(|_| None).collect();
+    for g in &grid.expert_reduce {
+        leaders[g.members[0]] = Some(collectives::apply(g, &table)?);
+    }
+    collectives::apply(&grid.expert_combine, &leaders)
 }
 
 /// Reduce TP partials per DP group, then concat groups over the batch.
@@ -2179,6 +2578,82 @@ mod tests {
         exec.prefill(&vec![1; m.batch * m.prefill_len], &plan).unwrap();
         assert!(!exec.in_session());
         assert!(exec.claim_slot().is_none());
+    }
+
+    #[test]
+    fn pipelined_expert_layer_bit_identical() {
+        let m = crate::runtime::TinyModelMeta::host_demo();
+        let plan = ShardPlan::new(AttnStrategy::new(4, 1), ExpertStrategy::new(2, 2));
+        let toks: Vec<i32> = (0..(m.batch * m.prefill_len) as i32)
+            .map(|i| i % m.vocab as i32)
+            .collect();
+        let run = |mode: EngineMode, k: usize| -> Vec<f32> {
+            let w = crate::model::WeightStore::synthetic(&m, 1);
+            let mut exec = ModelExecutor::host_with_mode(w, mode);
+            exec.set_pipeline_chunks(k).unwrap();
+            let mut out = exec.prefill(&toks, &plan).unwrap().data;
+            out.extend(exec.decode_step(&vec![1; m.batch], &plan).unwrap().data);
+            out
+        };
+        let oracle = run(EngineMode::Sequential, 1);
+        for k in [2, 3, 5, 8, 1000] {
+            for mode in [EngineMode::Sequential, EngineMode::Parallel] {
+                let got = run(mode, k);
+                let eq = oracle.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(eq, "K={k} {mode:?} must match the unchunked sequential oracle");
+            }
+        }
+        let w = crate::model::WeightStore::synthetic(&m, 1);
+        let mut exec = ModelExecutor::host_with_mode(w, EngineMode::Sequential);
+        assert!(exec.set_pipeline_chunks(0).is_err(), "K=0 is rejected");
+    }
+
+    #[test]
+    fn batched_prefill_slots_match_single_slot_calls() {
+        let m = crate::runtime::TinyModelMeta::host_demo();
+        let plan = ShardPlan::tp(4);
+        let rows: Vec<Vec<i32>> = (0..3)
+            .map(|s| (0..m.prefill_len as i32).map(|i| (i * 7 + s) % m.vocab as i32).collect())
+            .collect();
+        let single = {
+            let w = crate::model::WeightStore::synthetic(&m, 1);
+            let mut exec = ModelExecutor::host_with_mode(w, EngineMode::Sequential);
+            exec.begin_session(&plan, &plan).unwrap();
+            let mut logits = Vec::new();
+            for row in &rows {
+                let slot = exec.claim_slot().unwrap();
+                exec.prefill_slot(slot, &row[..6], &plan).unwrap();
+                logits.push(exec.prefill_slot(slot, &row[6..], &plan).unwrap().data);
+            }
+            logits
+        };
+        let batched = {
+            let w = crate::model::WeightStore::synthetic(&m, 1);
+            let mut exec = ModelExecutor::host_with_mode(w, EngineMode::Sequential);
+            exec.set_pipeline_chunks(3).unwrap();
+            exec.begin_session(&plan, &plan).unwrap();
+            let slots: Vec<usize> = rows.iter().map(|_| exec.claim_slot().unwrap()).collect();
+            let first: Vec<&[i32]> = rows.iter().map(|r| &r[..6]).collect();
+            exec.prefill_slots(&slots, &first, &plan).unwrap();
+            let rest: Vec<&[i32]> = rows.iter().map(|r| &r[6..]).collect();
+            let out = exec.prefill_slots(&slots, &rest, &plan).unwrap();
+            out.into_iter().map(|t| t.data).collect::<Vec<_>>()
+        };
+        for (a, b) in single.iter().zip(&batched) {
+            let eq = a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(eq, "batched same-range prefill must match per-slot calls bit-for-bit");
+        }
+        // Guards: mismatched cursors and duplicate slots are rejected.
+        let w = crate::model::WeightStore::synthetic(&m, 1);
+        let mut exec = ModelExecutor::host_with_mode(w, EngineMode::Sequential);
+        exec.begin_session(&plan, &plan).unwrap();
+        let s0 = exec.claim_slot().unwrap();
+        let s1 = exec.claim_slot().unwrap();
+        exec.prefill_slot(s0, &rows[0][..6], &plan).unwrap();
+        let chunks: Vec<&[i32]> = vec![&rows[0][6..12], &rows[1][..6]];
+        assert!(exec.prefill_slots(&[s0, s1], &chunks, &plan).is_err(), "cursor mismatch");
+        let dup: Vec<&[i32]> = vec![&rows[0][6..12], &rows[0][6..12]];
+        assert!(exec.prefill_slots(&[s0, s0], &dup, &plan).is_err(), "duplicate slot");
     }
 
     #[test]

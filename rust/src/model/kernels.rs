@@ -619,6 +619,32 @@ pub mod reference {
         }
     }
 
+    /// [`expert_module`] over one contiguous **row range** of the token
+    /// batch: rows `start..start + len` of `x [T, H]` → partial output
+    /// `[len, H]`. Every expert-path quantity (RMS norm, gating, FFN,
+    /// per-row gate accumulation) is row-independent, so the ranged
+    /// output rows are bit-identical to the corresponding rows of the
+    /// full-batch call — the kernel-level contract the executor's
+    /// micro-chunk pipeline is built on.
+    pub fn expert_module_ranged(
+        x: &HostTensor,
+        shard: &[HostTensor],
+        ep: usize,
+        top_k: usize,
+        start: usize,
+        len: usize,
+    ) -> Result<HostTensor> {
+        let (t, h) = (x.shape[0], x.shape[1]);
+        if start + len > t {
+            anyhow::bail!("expert chunk {start}..{} outside batch {t}", start + len);
+        }
+        let rows = HostTensor::new(
+            vec![len, h],
+            x.data[start * h..(start + len) * h].to_vec(),
+        );
+        expert_module(&rows, shard, ep, top_k)
+    }
+
     /// Causal GQA prefill attention for one head shard:
     /// `x [B, S, H]` → `(partial_out [B, S, H], k, v [B, S, KVH_l, D])`.
     pub fn attention_prefill(
@@ -839,10 +865,18 @@ pub mod reference {
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
 mod simd {
-    //! Explicit SSE2 lane kernel behind the `simd` cargo feature. SSE2
-    //! is part of the x86_64 baseline, so no runtime detection is
-    //! needed; on other architectures the portable loop compiles in.
-    use std::arch::x86_64::{_mm_add_ps, _mm_loadu_ps, _mm_mul_ps, _mm_set1_ps, _mm_storeu_ps};
+    //! Explicit SSE2/AVX2 lane kernels behind the `simd` cargo feature.
+    //! SSE2 is part of the x86_64 baseline, so it needs no runtime
+    //! detection; AVX2 is probed once via `is_x86_feature_detected!`
+    //! (the result is cached by std, so steady state pays one relaxed
+    //! load per call). On other architectures the portable loop
+    //! compiles in. Both widths map lanes ≡ output columns with
+    //! separate rounded multiply and add, so the choice of width can
+    //! never change any element's bits.
+    use std::arch::x86_64::{
+        _mm256_add_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_storeu_ps,
+        _mm_add_ps, _mm_loadu_ps, _mm_mul_ps, _mm_set1_ps, _mm_storeu_ps,
+    };
 
     /// `acc[j] += av * w[j]` over `NB = 16` lanes. Multiply and add are
     /// separate rounded ops (never contracted to an FMA), so every lane
@@ -860,6 +894,26 @@ mod simd {
             _mm_storeu_ps(acc.add(q * 4), _mm_add_ps(cv, _mm_mul_ps(a, wv)));
         }
     }
+
+    /// AVX2 8-lane variant of [`fmadd16`]: two 256-bit quads instead of
+    /// four 128-bit ones. Same lane ≡ column mapping, same separate
+    /// multiply/add (`_mm256_mul_ps` + `_mm256_add_ps`, never FMA), so
+    /// each lane's rounding sequence is identical to the SSE2 and
+    /// portable paths.
+    ///
+    /// # Safety
+    /// `acc` and `w` must each point at 16 readable (and for `acc`,
+    /// writable) `f32` lanes, and the CPU must support AVX2 (checked at
+    /// runtime by [`fmadd_lanes`](super::fmadd_lanes)).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fmadd16_avx2(acc: *mut f32, w: *const f32, av: f32) {
+        let a = _mm256_set1_ps(av);
+        for q in 0..2 {
+            let wv = _mm256_loadu_ps(w.add(q * 8));
+            let cv = _mm256_loadu_ps(acc.add(q * 8));
+            _mm256_storeu_ps(acc.add(q * 8), _mm256_add_ps(cv, _mm256_mul_ps(a, wv)));
+        }
+    }
 }
 
 /// `acc[j] += av * w[j]` over the panel's [`NB`] lanes: the one
@@ -870,9 +924,14 @@ mod simd {
 fn fmadd_lanes(acc: &mut [f32; NB], w: &[f32], av: f32) {
     debug_assert!(w.len() >= NB);
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
-    // SAFETY: both buffers hold at least NB = 16 f32 lanes.
+    // SAFETY: both buffers hold at least NB = 16 f32 lanes; the AVX2
+    // path is only taken when the CPU reports the feature.
     unsafe {
-        simd::fmadd16(acc.as_mut_ptr(), w.as_ptr(), av);
+        if is_x86_feature_detected!("avx2") {
+            simd::fmadd16_avx2(acc.as_mut_ptr(), w.as_ptr(), av);
+        } else {
+            simd::fmadd16(acc.as_mut_ptr(), w.as_ptr(), av);
+        }
     }
     #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
     for j in 0..NB {
@@ -1417,6 +1476,30 @@ pub fn expert_module(x: &HostTensor, w: &ExpertWeights, top_k: usize) -> Result<
             Ok(expert_ffn_packed(&xn, &gl, &w.wg, &w.wu, &w.wd))
         }
     }
+}
+
+/// [`expert_module`] over one contiguous **row range** of the token
+/// batch: rows `start..start + len` of `x [T, H]` → partial output
+/// `[len, H]`. Bit-identical to the corresponding rows of the
+/// full-batch call because RMS norm, gating, the sparse expert gather,
+/// and per-row gate accumulation are all row-independent (the packed
+/// matmul keeps one accumulator per output element regardless of how
+/// many rows are in flight). This is the blocked-family half of the
+/// micro-chunk contract; [`reference::expert_module_ranged`] is the
+/// scalar oracle.
+pub fn expert_module_ranged(
+    x: &HostTensor,
+    w: &ExpertWeights,
+    top_k: usize,
+    start: usize,
+    len: usize,
+) -> Result<HostTensor> {
+    let (t, h) = (x.shape[0], x.shape[1]);
+    if start + len > t {
+        anyhow::bail!("expert chunk {start}..{} outside batch {t}", start + len);
+    }
+    let rows = HostTensor::new(vec![len, h], x.data[start * h..(start + len) * h].to_vec());
+    expert_module(&rows, w, top_k)
 }
 
 /// Causal GQA prefill attention for one packed head shard (see

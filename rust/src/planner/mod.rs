@@ -15,6 +15,14 @@
 //! a faithful 0-1 ILP, solved exactly by [`crate::ilp`]. The brute-force
 //! cross-check in the tests guarantees the linearization is tight.
 //!
+//! Planners carrying a calibrated [`OverlapModel`] (micro-chunk
+//! pipelined execution, `ModelExecutor::set_pipeline_chunks`) solve one
+//! more axis: per-stage binaries `P_pre`/`P_dec` choose the pipelined
+//! iteration loop, and `ZP`/`WP` AND variables re-price the active comm
+//! pair to the overlap model's effective (overlap-hidden) comm. Without
+//! an overlap model the formulation is byte-identical to the
+//! sequential-only planner.
+//!
 //! # Cost-table hot path
 //!
 //! `cost_tables` is the planner's inner loop: it evaluates the latency
@@ -44,9 +52,9 @@ use crate::config::{hardware::NodeConfig, model::MoEModelConfig, scenario::Scena
 use crate::ilp::{self, LinExpr, Problem, Sense};
 use crate::sim::comm;
 use crate::sim::flops::{self, OpCost, Stage};
-use crate::sim::latency::{LatencyModel, ModuleLatency};
+use crate::sim::latency::{LatencyModel, ModuleLatency, OverlapModel};
 use crate::sim::memory::MemoryModel;
-use crate::strategy::{AttnStrategy, ExpertStrategy, SearchSpace};
+use crate::strategy::{AttnStrategy, ExecMode, ExpertStrategy, SearchSpace};
 use crate::transition::{TransitionCost, TransitionModel};
 use crate::Result;
 use std::sync::Arc;
@@ -81,13 +89,24 @@ pub struct HapPlanner<'a> {
     pub model: &'a MoEModelConfig,
     pub node: &'a NodeConfig,
     pub latency: Arc<LatencyModel>,
+    /// Calibrated micro-chunk overlap model. `None` (the default)
+    /// leaves the search space and ILP formulation byte-identical to
+    /// the sequential-only planner; `Some` widens the search space with
+    /// a per-stage pipelined-execution axis priced by
+    /// [`OverlapModel::effective_comm`].
+    pub overlap: Option<OverlapModel>,
 }
 
 impl<'a> HapPlanner<'a> {
     /// Plan against the platform's (cached) simulation models — trains
     /// them on first use for a platform, reuses them afterwards.
     pub fn new(model: &'a MoEModelConfig, node: &'a NodeConfig) -> Self {
-        HapPlanner { model, node, latency: LatencyModel::cached(&node.gpu, PLANNER_SEED) }
+        HapPlanner {
+            model,
+            node,
+            latency: LatencyModel::cached(&node.gpu, PLANNER_SEED),
+            overlap: None,
+        }
     }
 
     /// Reuse an existing latency model (sweeps, serving, tests).
@@ -96,12 +115,25 @@ impl<'a> HapPlanner<'a> {
         node: &'a NodeConfig,
         latency: Arc<LatencyModel>,
     ) -> Self {
-        HapPlanner { model, node, latency }
+        HapPlanner { model, node, latency, overlap: None }
     }
 
-    /// Build the search space for a scenario.
+    /// Enable the pipelined-execution axis with a calibrated overlap
+    /// model (typically [`OverlapModel::fit`] over measured pipeline
+    /// traces).
+    pub fn with_overlap(mut self, overlap: OverlapModel) -> Self {
+        self.overlap = Some(overlap);
+        self
+    }
+
+    /// Build the search space for a scenario. Planners carrying an
+    /// overlap model widen it with the pipelined-execution axis.
     pub fn search_space(&self, scenario: &Scenario) -> SearchSpace {
-        SearchSpace::enumerate(self.model, self.node, scenario)
+        let mut space = SearchSpace::enumerate(self.model, self.node, scenario);
+        if self.overlap.is_some() {
+            space.exec = vec![ExecMode::Sequential, ExecMode::Pipelined];
+        }
+        space
     }
 
     /// Evaluate all cost tables for the ILP on the batched simulation
@@ -374,6 +406,41 @@ impl<'a> HapPlanner<'a> {
             y.push(yr);
         }
 
+        // Pipelined-execution axis: one binary per stage selects the
+        // micro-chunk pipelined loop, and ZP/WP AND-variables re-price
+        // the active comm pair from the sequential table to the overlap
+        // model's effective comm (the delta can take either sign — the
+        // model's fixed overhead can exceed the hidden fraction on
+        // comm-light pairs, and AND linearization is exact for both).
+        // Without an overlap model the axis is absent and the
+        // formulation stays byte-identical to the sequential planner.
+        let mut p_pre = None;
+        let mut p_dec = None;
+        let mut zp: Vec<Vec<ilp::Var>> = Vec::new();
+        let mut wp: Vec<Vec<ilp::Var>> = Vec::new();
+        if let Some(om) = self.exec_axis(space) {
+            let pre = pipelined_comm(&om, &tables.expert_prefill, &tables.comm_prefill);
+            let dec = pipelined_comm(&om, &tables.expert_decode, &tables.comm_decode);
+            let ppre = p.binary("P_pre");
+            let pdec = p.binary("P_dec");
+            for k in 0..ka {
+                let mut zr = Vec::with_capacity(ke);
+                let mut wr = Vec::with_capacity(ke);
+                for i in 0..ke {
+                    let zv = p.and_var(&format!("ZP[{k}][{i}]"), z[k][i], ppre);
+                    p.set_objective_term(zv, nl * (pre[k][i] - tables.comm_prefill[k][i]));
+                    zr.push(zv);
+                    let wv = p.and_var(&format!("WP[{k}][{i}]"), w[k][i], pdec);
+                    p.set_objective_term(wv, s_out * nl * (dec[k][i] - tables.comm_decode[k][i]));
+                    wr.push(wv);
+                }
+                zp.push(zr);
+                wp.push(wr);
+            }
+            p_pre = Some(ppre);
+            p_dec = Some(pdec);
+        }
+
         // Memory constraint (eq. 5): forbid (attention, expert) pairs
         // that exceed per-device capacity. The expert side must fit in
         // *both* stages' strategies.
@@ -398,7 +465,13 @@ impl<'a> HapPlanner<'a> {
             }
         }
 
-        (p, IlpVars { s, ei, ej, z, w, y })
+        (p, IlpVars { s, ei, ej, z, w, y, p_pre, p_dec, zp, wp })
+    }
+
+    /// The overlap model, when both the planner carries one and the
+    /// space enumerates the pipelined mode (hand-built spaces may not).
+    fn exec_axis(&self, space: &SearchSpace) -> Option<OverlapModel> {
+        self.overlap.filter(|_| space.has_pipelined())
     }
 
     /// Shared tail of `plan` / `plan_reference`: formulate, solve, and
@@ -418,10 +491,11 @@ impl<'a> HapPlanner<'a> {
         let outcome = if reference_solver {
             ilp::solve_reference(&problem)
         } else {
-            match self.brute_force_from_tables(space, tables, scenario) {
-                Some((k, i, j, _)) => {
-                    ilp::solve_warm(&problem, &vars.assignment(problem.num_vars, k, i, j))
-                }
+            match self.brute_force_exec_from_tables(space, tables, scenario) {
+                Some((k, i, j, pre, dec, _)) => ilp::solve_warm(
+                    &problem,
+                    &vars.assignment_exec(problem.num_vars, k, i, j, pre, dec),
+                ),
                 None => ilp::solve(&problem),
             }
         };
@@ -436,15 +510,36 @@ impl<'a> HapPlanner<'a> {
 
         let nl = self.model.layers as f64;
         let s_out = scenario.generate as f64;
+        // Per-stage exec decision, re-derived from the tables rather
+        // than read off the solver's P_pre/P_dec bits: when the
+        // re-pricing delta is exactly zero either bit value is optimal,
+        // and the strict-improvement rule keeps the reported flags (and
+        // the predicted comm below) deterministic across solvers.
+        let exec = self.exec_axis(space);
+        let stage = |expert: f64, comm: f64| match exec {
+            Some(om) => {
+                let eff = om.overlapped(expert, comm) - expert;
+                if eff < comm {
+                    (eff, true)
+                } else {
+                    (comm, false)
+                }
+            }
+            None => (comm, false),
+        };
+        let (pre_comm, pipelined_prefill) =
+            stage(tables.expert_prefill[i], tables.comm_prefill[k][i]);
+        let (dec_comm, pipelined_decode) =
+            stage(tables.expert_decode[j], tables.comm_decode[k][j]);
         let prefill = ModuleLatency {
             attn: nl * tables.attn_prefill[k],
             expert: nl * tables.expert_prefill[i],
-            comm: nl * tables.comm_prefill[k][i],
+            comm: nl * pre_comm,
         };
         let decode = ModuleLatency {
             attn: s_out * nl * tables.attn_decode[k],
             expert: s_out * nl * tables.expert_decode[j],
-            comm: s_out * nl * tables.comm_decode[k][j],
+            comm: s_out * nl * dec_comm,
         };
         Ok(HybridPlan {
             model: self.model.name.clone(),
@@ -454,6 +549,8 @@ impl<'a> HapPlanner<'a> {
             expert_prefill: space.expert[i],
             expert_decode: space.expert[j],
             transition: tables.switching[i][j],
+            pipelined_prefill,
+            pipelined_decode,
             predicted_prefill: prefill,
             predicted_decode: decode,
             predicted_total: objective,
@@ -578,17 +675,48 @@ impl<'a> HapPlanner<'a> {
 
     /// [`Self::brute_force`] over prebuilt cost tables — O(K_a·K_e²)
     /// arithmetic, no simulation. `plan` uses the result as the ILP
-    /// warm-start incumbent (ROADMAP: ILP warm starts).
+    /// warm-start incumbent (ROADMAP: ILP warm starts). When the
+    /// planner carries an overlap model the objective already folds in
+    /// the optimal per-stage exec choice; use
+    /// [`Self::brute_force_exec_from_tables`] to also read the flags.
     pub fn brute_force_from_tables(
         &self,
         space: &SearchSpace,
         tables: &CostTables,
         scenario: &Scenario,
     ) -> Option<(usize, usize, usize, f64)> {
+        self.brute_force_exec_from_tables(space, tables, scenario)
+            .map(|(k, i, j, _, _, obj)| (k, i, j, obj))
+    }
+
+    /// Brute-force optimum over the full decision space including the
+    /// per-stage execution mode: `(k, i, j, pipelined_prefill,
+    /// pipelined_decode, objective)`. Exec flags follow the same
+    /// strict-improvement rule as `plan` (ties stay sequential), so the
+    /// tuple lifts into a warm-start assignment via
+    /// [`IlpVars::assignment_exec`].
+    pub fn brute_force_exec_from_tables(
+        &self,
+        space: &SearchSpace,
+        tables: &CostTables,
+        scenario: &Scenario,
+    ) -> Option<(usize, usize, usize, bool, bool, f64)> {
         let mem = MemoryModel::new(self.model, scenario);
         let nl = self.model.layers as f64;
         let s_out = scenario.generate as f64;
-        let mut best: Option<(usize, usize, usize, f64)> = None;
+        let exec = self.exec_axis(space);
+        let stage = |expert: f64, comm: f64| match exec {
+            Some(om) => {
+                let eff = om.overlapped(expert, comm) - expert;
+                if eff < comm {
+                    (eff, true)
+                } else {
+                    (comm, false)
+                }
+            }
+            None => (comm, false),
+        };
+        let mut best: Option<(usize, usize, usize, bool, bool, f64)> = None;
         for k in 0..space.k_a() {
             for i in 0..space.k_e() {
                 for j in 0..space.k_e() {
@@ -600,24 +728,35 @@ impl<'a> HapPlanner<'a> {
                     if !fits(&space.expert[i]) || !fits(&space.expert[j]) {
                         continue;
                     }
+                    let (pre_comm, pre) =
+                        stage(tables.expert_prefill[i], tables.comm_prefill[k][i]);
+                    let (dec_comm, dec) =
+                        stage(tables.expert_decode[j], tables.comm_decode[k][j]);
                     let obj = nl
-                        * (tables.attn_prefill[k]
-                            + tables.expert_prefill[i]
-                            + tables.comm_prefill[k][i])
+                        * (tables.attn_prefill[k] + tables.expert_prefill[i] + pre_comm)
                         + s_out
                             * nl
-                            * (tables.attn_decode[k]
-                                + tables.expert_decode[j]
-                                + tables.comm_decode[k][j])
+                            * (tables.attn_decode[k] + tables.expert_decode[j] + dec_comm)
                         + tables.switching[i][j].overhead;
-                    if best.map_or(true, |(_, _, _, b)| obj < b) {
-                        best = Some((k, i, j, obj));
+                    if best.map_or(true, |(.., b)| obj < b) {
+                        best = Some((k, i, j, pre, dec, obj));
                     }
                 }
             }
         }
         best
     }
+}
+
+/// Effective per-layer comm table under the micro-chunk pipelined
+/// loop: for each (attention k, expert i) pair the overlap model folds
+/// the collective behind the expert FFN, leaving
+/// `max(e, c) + ε·min(e, c) + o − e` exposed (never negative — see
+/// [`OverlapModel::effective_comm`]).
+fn pipelined_comm(om: &OverlapModel, expert: &[f64], comm: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    comm.iter()
+        .map(|row| row.iter().zip(expert).map(|(&c, &e)| om.overlapped(e, c) - e).collect())
+        .collect()
 }
 
 /// Predicted per-module time shares of a plan, in the observability
@@ -658,6 +797,14 @@ pub struct IlpVars {
     pub w: Vec<Vec<ilp::Var>>,
     /// Y[i][j] = Ei_i ∧ Ej_j (switching pairs).
     pub y: Vec<Vec<ilp::Var>>,
+    /// Per-stage pipelined-execution binaries (absent without an
+    /// overlap model).
+    pub p_pre: Option<ilp::Var>,
+    pub p_dec: Option<ilp::Var>,
+    /// ZP[k][i] = Z[k][i] ∧ P_pre (pipelined prefill comm re-pricing).
+    pub zp: Vec<Vec<ilp::Var>>,
+    /// WP[k][j] = W[k][j] ∧ P_dec (pipelined decode comm re-pricing).
+    pub wp: Vec<Vec<ilp::Var>>,
 }
 
 impl IlpVars {
@@ -665,6 +812,7 @@ impl IlpVars {
     /// AND variable set consistently with its definition — feasible by
     /// construction whenever (k, i) and (k, j) pass the memory
     /// constraints, so it can seed the solver as a warm incumbent.
+    /// Exec binaries (if present) stay sequential.
     pub fn assignment(&self, num_vars: usize, k: usize, i: usize, j: usize) -> Vec<f64> {
         let mut x = vec![0.0; num_vars];
         x[self.s[k].0] = 1.0;
@@ -673,6 +821,31 @@ impl IlpVars {
         x[self.z[k][i].0] = 1.0;
         x[self.w[k][j].0] = 1.0;
         x[self.y[i][j].0] = 1.0;
+        x
+    }
+
+    /// [`Self::assignment`] extended with the per-stage exec decision:
+    /// a stage flagged pipelined turns on its P binary and the active
+    /// pair's re-pricing AND variable, keeping every AND definition
+    /// consistent so the assignment stays feasible by construction.
+    pub fn assignment_exec(
+        &self,
+        num_vars: usize,
+        k: usize,
+        i: usize,
+        j: usize,
+        pre: bool,
+        dec: bool,
+    ) -> Vec<f64> {
+        let mut x = self.assignment(num_vars, k, i, j);
+        if let (Some(p), true) = (self.p_pre, pre) {
+            x[p.0] = 1.0;
+            x[self.zp[k][i].0] = 1.0;
+        }
+        if let (Some(p), true) = (self.p_dec, dec) {
+            x[p.0] = 1.0;
+            x[self.wp[k][j].0] = 1.0;
+        }
         x
     }
 }
@@ -853,6 +1026,112 @@ mod tests {
                 assert!(hn <= cn, "{} on {}: warm {hn} nodes > cold {cn}", sc.name, node.label());
             }
         }
+    }
+
+    #[test]
+    fn overlap_planner_matches_exec_brute_force_and_never_loses() {
+        // The pipelined-execution axis: ILP optimum == brute force over
+        // (k, i, j, exec) for a planner carrying an overlap model, the
+        // lifted warm start stays feasible and tight, and adding the
+        // axis can never worsen the objective (sequential stays in the
+        // space; the model here has zero fixed overhead).
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let seq = HapPlanner::new(&m, &node);
+        let pipe = HapPlanner::new(&m, &node).with_overlap(OverlapModel::new(0.25, 0.0));
+        for sc in Scenario::table2() {
+            let space = pipe.search_space(&sc);
+            assert!(space.has_pipelined(), "overlap planner must widen the space");
+            let tables = pipe.cost_tables(&space, &sc);
+            let (problem, vars) = pipe.formulate(&space, &tables, &sc);
+            let (k, i, j, pre, dec, bf_obj) =
+                pipe.brute_force_exec_from_tables(&space, &tables, &sc).unwrap();
+            let warm = vars.assignment_exec(problem.num_vars, k, i, j, pre, dec);
+            assert!(problem.feasible(&warm, 1e-9), "exec warm assignment infeasible");
+            assert!(
+                (problem.objective_value(&warm) - bf_obj).abs() <= 1e-9 * bf_obj.max(1.0),
+                "lifted exec assignment disagrees with brute-force objective"
+            );
+            let plan = pipe.plan(&sc, sc.generate).unwrap();
+            let rel = (plan.predicted_total - bf_obj).abs() / bf_obj;
+            assert!(rel < 1e-6, "{}: ilp {} vs brute {}", sc.name, plan.predicted_total, bf_obj);
+            let seq_plan = seq.plan(&sc, sc.generate).unwrap();
+            assert!(
+                plan.predicted_total <= seq_plan.predicted_total * (1.0 + 1e-9),
+                "{}: pipelined axis worsened the plan",
+                sc.name
+            );
+        }
+    }
+
+    #[test]
+    fn overlap_model_flips_the_chosen_strategy() {
+        // Synthetic cost tables where the sequential optimum is a
+        // low-comm expert strategy but a full-overlap model hides the
+        // comm-heavy candidate's collective behind its (cheaper) FFN —
+        // the planner must flip strategies AND flag the stage
+        // pipelined. This is the acceptance shape: a pipelined plan the
+        // non-overlap model would never choose.
+        use crate::transition::TransitionMethod;
+        let m = MoEModelConfig::mixtral_8x7b();
+        let node = NodeConfig::a6000x(4);
+        let seq = HapPlanner::new(&m, &node);
+        let pipe = HapPlanner::new(&m, &node).with_overlap(OverlapModel::new(0.0, 0.0));
+        let sc = Scenario::short_constrained();
+        let space = pipe.search_space(&sc);
+        let (ka, ke) = (space.k_a(), space.k_e());
+        assert!(ke >= 2, "need at least two expert candidates");
+        let k_tp = space
+            .attn
+            .iter()
+            .position(|a| *a == AttnStrategy::new(node.num_devices, 1))
+            .expect("TP attention is always feasible");
+        // Attention pinned to TP (zero cost there, 1s elsewhere);
+        // decode pinned to j=0 by a strictly increasing table.
+        let mut attn_prefill = vec![1.0; ka];
+        attn_prefill[k_tp] = 0.0;
+        let mut expert_prefill = vec![10.0; ke];
+        expert_prefill[0] = 2.2; // low-comm candidate: slow FFN
+        expert_prefill[1] = 1.0; // comm-heavy candidate: fast FFN
+        let mut comm_row = vec![10.0; ke];
+        comm_row[0] = 0.1;
+        comm_row[1] = 2.0;
+        let no_switch = TransitionCost {
+            method: TransitionMethod::None,
+            overhead: 0.0,
+            raw_pipeline: 0.0,
+            reshard: 0.0,
+        };
+        let tables = CostTables {
+            attn_prefill,
+            attn_decode: vec![0.0; ka],
+            expert_prefill,
+            expert_decode: (0..ke).map(|j| 1e-3 * (j + 1) as f64).collect(),
+            comm_prefill: vec![comm_row.clone(); ka],
+            comm_decode: vec![vec![0.0; ke]; ka],
+            switching: vec![vec![no_switch; ke]; ke],
+        };
+        let t0 = Instant::now();
+        let seq_space = seq.search_space(&sc);
+        let seq_plan = seq.plan_from_tables(&seq_space, &tables, &sc, t0, false).unwrap();
+        let pipe_plan = pipe.plan_from_tables(&space, &tables, &sc, t0, false).unwrap();
+        // Sequential: 2.2 + 0.1 < 1.0 + 2.0 → the slow-FFN/low-comm
+        // candidate wins. Overlapped: max(2.2, 0.1) > max(1.0, 2.0) →
+        // the fast-FFN/comm-heavy candidate wins, pipelined.
+        assert_eq!(seq_plan.expert_prefill, space.expert[0], "{}", seq_plan.signature());
+        assert!(!seq_plan.pipelined_prefill && !seq_plan.pipelined_decode);
+        assert_eq!(pipe_plan.expert_prefill, space.expert[1], "{}", pipe_plan.signature());
+        assert!(pipe_plan.pipelined_prefill, "stage must be flagged pipelined");
+        assert!(!pipe_plan.pipelined_decode, "zero decode comm cannot profit from overlap");
+        assert!(pipe_plan.signature().contains("exec=pipelined@prefill"));
+        assert!(pipe_plan.predicted_total < seq_plan.predicted_total);
+        // The predicted comm reflects the overlap-hidden collective.
+        let nl = m.layers as f64;
+        assert!((pipe_plan.predicted_prefill.comm - nl * 1.0).abs() < 1e-9);
+        assert!((seq_plan.predicted_prefill.comm - nl * 0.1).abs() < 1e-9);
+        // Objectives agree with the exec-aware brute force on both.
+        let (.., bf) = pipe.brute_force_exec_from_tables(&space, &tables, &sc).unwrap();
+        assert!((pipe_plan.predicted_total - bf).abs() <= 1e-9 * bf.max(1.0));
     }
 
     #[test]

@@ -22,6 +22,13 @@ pub struct HybridPlan {
     pub expert_decode: ExpertStrategy,
     /// Transition mechanism and overhead between the two.
     pub transition: TransitionCost,
+    /// Stage executes the micro-chunk pipelined iteration loop (expert
+    /// FFN overlapping the combine collective) instead of the module-
+    /// sequential loop. Only set by planners carrying a calibrated
+    /// [`crate::sim::OverlapModel`]; token outputs are identical either
+    /// way, so these flags are pure latency decisions.
+    pub pipelined_prefill: bool,
+    pub pipelined_decode: bool,
     /// Predicted stage latencies (whole stage, all layers).
     pub predicted_prefill: ModuleLatency,
     pub predicted_decode: ModuleLatency,
@@ -40,9 +47,12 @@ impl HybridPlan {
         self.expert_prefill != self.expert_decode
     }
 
-    /// Short strategy signature, e.g. `attn=DP4 experts=EP4→TP4`.
+    /// Short strategy signature, e.g. `attn=DP4 experts=EP4→TP4`. Plans
+    /// choosing the pipelined iteration loop carry an `exec=` suffix so
+    /// they are distinct plan identities from their sequential twins
+    /// (the adaptive controller keys mispredict EWMAs on signatures).
     pub fn signature(&self) -> String {
-        if self.has_transition() {
+        let mut sig = if self.has_transition() {
             format!(
                 "attn={} experts={}→{} via {}",
                 self.attn,
@@ -52,7 +62,14 @@ impl HybridPlan {
             )
         } else {
             format!("attn={} experts={}", self.attn, self.expert_prefill)
+        };
+        match (self.pipelined_prefill, self.pipelined_decode) {
+            (false, false) => {}
+            (true, true) => sig.push_str(" exec=pipelined"),
+            (true, false) => sig.push_str(" exec=pipelined@prefill"),
+            (false, true) => sig.push_str(" exec=pipelined@decode"),
         }
+        sig
     }
 
     pub fn to_json(&self) -> Json {
@@ -65,6 +82,8 @@ impl HybridPlan {
             ("expert_decode", self.expert_decode.to_json()),
             ("transition", self.transition.method.name().into()),
             ("transition_overhead_s", self.transition.overhead.into()),
+            ("pipelined_prefill", self.pipelined_prefill.into()),
+            ("pipelined_decode", self.pipelined_decode.into()),
             ("transition_cost", self.transition.to_json()),
             ("predicted_prefill", self.predicted_prefill.to_json()),
             ("predicted_decode", self.predicted_decode.to_json()),
@@ -87,6 +106,13 @@ impl HybridPlan {
             expert_prefill: ExpertStrategy::from_json(j.get("expert_prefill")?)?,
             expert_decode: ExpertStrategy::from_json(j.get("expert_decode")?)?,
             transition: TransitionCost::from_json(j.get("transition_cost")?)?,
+            // Absent in plans persisted before the pipelined-execution
+            // axis existed: those were solved sequential-only.
+            pipelined_prefill: j
+                .get("pipelined_prefill")
+                .and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            pipelined_decode: j.get("pipelined_decode").and_then(|v| v.as_bool()).unwrap_or(false),
             predicted_prefill: ModuleLatency::from_json(j.get("predicted_prefill")?)?,
             predicted_decode: ModuleLatency::from_json(j.get("predicted_decode")?)?,
             predicted_total: j.get("predicted_total_s")?.as_f64()?,
@@ -118,6 +144,14 @@ impl fmt::Display for HybridPlan {
             self.transition.method.name(),
             self.transition.overhead * 1e3
         )?;
+        if self.pipelined_prefill || self.pipelined_decode {
+            writeln!(
+                f,
+                "  execution       : prefill {} / decode {}",
+                if self.pipelined_prefill { "pipelined" } else { "sequential" },
+                if self.pipelined_decode { "pipelined" } else { "sequential" }
+            )?;
+        }
         writeln!(
             f,
             "  predicted       : prefill {:.1} ms + decode {:.1} ms = {:.1} ms total",
@@ -154,6 +188,8 @@ mod tests {
                 raw_pipeline: 0.1,
                 reshard: 0.2,
             },
+            pipelined_prefill: false,
+            pipelined_decode: false,
             predicted_prefill: Default::default(),
             predicted_decode: Default::default(),
             predicted_total: 1.5,
@@ -178,6 +214,25 @@ mod tests {
         let j = p.to_json();
         assert_eq!(j.get("model").unwrap().as_str(), Some("mixtral-8x7b"));
         assert!(j.get("predicted_total_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn pipelined_flags_round_trip_and_default_sequential() {
+        let mut p = dummy_plan(ExpertStrategy::new(1, 4), ExpertStrategy::new(4, 1));
+        p.pipelined_prefill = true;
+        assert!(p.signature().ends_with("exec=pipelined@prefill"), "{}", p.signature());
+        let q = HybridPlan::from_json(&p.to_json()).unwrap();
+        assert!(q.pipelined_prefill && !q.pipelined_decode);
+        assert_eq!(q.signature(), p.signature());
+        // A plan persisted before the exec axis existed has no
+        // pipelined keys — it was solved sequential-only and must
+        // deserialize that way.
+        let Json::Obj(fields) = p.to_json() else { panic!("plan json is an object") };
+        let legacy =
+            Json::Obj(fields.into_iter().filter(|(k, _)| !k.starts_with("pipelined")).collect());
+        let old = HybridPlan::from_json(&legacy).unwrap();
+        assert!(!old.pipelined_prefill && !old.pipelined_decode);
+        assert!(!old.signature().contains("exec="));
     }
 
     #[test]

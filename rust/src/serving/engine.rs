@@ -128,7 +128,7 @@ use crate::model::fault::{classify, faulted_device};
 use crate::model::{
     EngineMode, ExecStats, FaultPlan, KvLayout, ModelExecutor, ShardPlan, WeightStore,
 };
-use crate::obs::{EventKind, Recorder, TraceEvent};
+use crate::obs::{EventKind, ModuleTimes, Recorder, TraceEvent};
 use crate::planner::{HapPlanner, PLANNER_SEED};
 use crate::runtime::literal::argmax_rows;
 use crate::runtime::{PjrtRuntime, TinyModelMeta};
@@ -447,6 +447,13 @@ struct Session {
     /// watermark).
     kv_allocs_seen: u64,
     kv_frees_seen: u64,
+    /// Streaming, budget-driven chunk sizing
+    /// ([`ServeConfig::prefill_budget_ms`]): EWMA of the measured
+    /// prefill rate in tokens/second, updated after every successful
+    /// chunk. `None` until the first measurement (static sizing until
+    /// then). Wall-clock-derived — sizes chunks, never tokens, so
+    /// per-request tokens stay bit-identical regardless of its value.
+    prefill_rate: Option<f64>,
 }
 
 impl Session {
@@ -483,6 +490,7 @@ impl Session {
             iterations: 0,
             kv_allocs_seen: 0,
             kv_frees_seen: 0,
+            prefill_rate: None,
             config,
             scheduling,
             meta,
@@ -1018,16 +1026,42 @@ impl Session {
         self.dwell_tokens = 0;
     }
 
-    /// The prefill chunk this slot gets this iteration: at most
-    /// `config.prefill_chunk` tokens of the `row_len`-token padded
-    /// prompt (0 = unchunked, the whole remaining prompt at once).
+    /// The prefill chunk this slot gets this iteration. Static sizing:
+    /// at most `config.prefill_chunk` tokens of the `row_len`-token
+    /// padded prompt (0 = unchunked, the whole remaining prompt at
+    /// once). Budget sizing (`prefill_budget_ms > 0` under the
+    /// micro-chunk pipeline): as many tokens as the **measured**
+    /// prefill rate fits into one budget window, so a joiner's chunk
+    /// costs about one iteration budget instead of a guessed token
+    /// count — falling back to static sizing until the first
+    /// measurement lands. Chunk size never affects token values
+    /// (ranged prefill is bit-exact at any split), only how admission
+    /// latency is amortized across iterations.
     fn chunk_len(&self, row_len: usize, cursor: usize) -> usize {
-        let chunk = if self.config.prefill_chunk == 0 {
-            row_len
-        } else {
-            self.config.prefill_chunk
+        let budget_s = self.config.prefill_budget_ms / 1e3;
+        let chunk = match self.prefill_rate {
+            Some(rate) if budget_s > 0.0 && self.config.pipeline_chunks > 1 && rate > 0.0 => {
+                ((rate * budget_s) as usize).max(1)
+            }
+            _ if self.config.prefill_chunk == 0 => row_len,
+            _ => self.config.prefill_chunk,
         };
         chunk.min(row_len - cursor)
+    }
+
+    /// Fold one measured prefill call (`tokens` prompt tokens in
+    /// `secs` wall seconds) into the budget-sizing rate EWMA. A light
+    /// smoothing (α = 0.3) rides out per-call jitter while still
+    /// tracking plan switches within a few chunks.
+    fn observe_prefill_rate(&mut self, tokens: usize, secs: f64) {
+        if secs <= 0.0 || tokens == 0 {
+            return;
+        }
+        let obs = tokens as f64 / secs;
+        self.prefill_rate = Some(match self.prefill_rate {
+            Some(rate) => 0.7 * rate + 0.3 * obs,
+            None => obs,
+        });
     }
 
     /// Run ONE prefill chunk for the Prefilling slot at `idx` — its
@@ -1075,6 +1109,7 @@ impl Session {
             }
         };
         self.metrics.prefill_chunks += 1;
+        self.observe_prefill_rate(c, dt);
         let done = cursor + c == row.len();
         if let Some(m0) = snap {
             let modules = exec.module_times().delta_since(&m0);
@@ -1109,6 +1144,112 @@ impl Session {
             return Ok(false);
         }
         Ok(true)
+    }
+
+    /// Batched companion to [`Session::advance_chunk`] for the
+    /// micro-chunk pipeline (`pipeline_chunks > 1`): every Prefilling
+    /// slot in `group` shares one cursor and one chunk length (the
+    /// advance loop groups them so), and the whole group advances in
+    /// ONE ranged [`ModelExecutor::prefill_slots`] call — one
+    /// fault-clock op, one embed, one fan-out per layer — instead of
+    /// `n` sequential single-slot calls. Tokens are bit-identical to
+    /// the per-slot path (each slot's rows ride the batch as an
+    /// explicit row range). Per-slot completion handling (first token,
+    /// TTFT, immediate retirement) mirrors the single-slot path
+    /// exactly. Trace accounting: one `PrefillChunk` event per slot,
+    /// with the shared call's wall seconds and module deltas carried
+    /// by the group's FIRST event only, so summing a trace never
+    /// double-counts the batched call. Returns how many slots retired.
+    fn advance_chunks(
+        &mut self,
+        exec: &mut ModelExecutor,
+        group: &[usize],
+        out: &mut StepOutcome,
+    ) -> Result<usize> {
+        if group.len() == 1 {
+            let still = self.advance_chunk(exec, group[0], out)?;
+            return Ok(usize::from(!still));
+        }
+        let (prefill_plan, _) =
+            self.active.ok_or(EngineError::NoSession { at: "advance_chunks" })?;
+        // Pull every member's chunk state out to keep slot borrows
+        // short; the grouping key guarantees a shared cursor/length.
+        let mut states: Vec<(Vec<i32>, usize)> = Vec::with_capacity(group.len());
+        for &idx in group {
+            let slot = self.slots[idx]
+                .as_mut()
+                .ok_or(EngineError::EmptySlot { slot: idx, at: "advance_chunks" })?;
+            states.push(slot.prefill.take().ok_or(EngineError::NotPrefilling { slot: idx })?);
+        }
+        let cursor = states[0].1;
+        let c = self.chunk_len(states[0].0.len(), cursor);
+        let snap = self.recorder.is_enabled().then(|| exec.module_times().clone());
+        let rows: Vec<&[i32]> = states.iter().map(|(row, _)| &row[cursor..cursor + c]).collect();
+        let t0 = Instant::now();
+        let res = exec.prefill_slots(group, &rows, &prefill_plan);
+        let dt = t0.elapsed().as_secs_f64();
+        self.prefill_time += dt;
+        self.dwell_seconds += dt;
+        let logits = match res {
+            Ok(logits) => logits,
+            Err(e) => {
+                // Put every cursor back (the single-slot recovery
+                // contract): the batched call advanced all members or
+                // none, so each slot resumes from its same chunk.
+                for (&idx, st) in group.iter().zip(states) {
+                    if let Some(slot) = self.slots[idx].as_mut() {
+                        slot.prefill = Some(st);
+                    }
+                }
+                return Err(e);
+            }
+        };
+        self.metrics.prefill_chunks += group.len();
+        self.observe_prefill_rate(group.len() * c, dt);
+        let modules = snap.map(|m0| exec.module_times().delta_since(&m0));
+        let mut retired = 0usize;
+        for (i, (&idx, (row, _))) in group.iter().zip(states).enumerate() {
+            let done = cursor + c == row.len();
+            if let Some(all) = &modules {
+                let (secs, modules) =
+                    if i == 0 { (dt, all.clone()) } else { (0.0, ModuleTimes::default()) };
+                self.record(
+                    exec,
+                    EventKind::PrefillChunk {
+                        slot: idx,
+                        start: cursor,
+                        len: c,
+                        done,
+                        secs,
+                        modules,
+                    },
+                );
+            }
+            let retire_now = {
+                let slot = self.slots[idx]
+                    .as_mut()
+                    .ok_or(EngineError::EmptySlot { slot: idx, at: "advance_chunks/post" })?;
+                if done {
+                    let first = argmax_rows(&logits[i])[0] as i32;
+                    slot.tokens.push(first);
+                    slot.last = first;
+                    slot.ttft = slot.req.arrived.elapsed().as_secs_f64();
+                    slot.remaining = slot.remaining.saturating_sub(1);
+                    slot.remaining == 0
+                } else {
+                    slot.prefill = Some((row, cursor + c));
+                    false
+                }
+            };
+            if done {
+                self.dwell_tokens += 1;
+            }
+            if retire_now {
+                self.retire_slot(exec, idx, out)?;
+                retired += 1;
+            }
+        }
+        Ok(retired)
     }
 
     /// Retire the request occupying `slots[idx]`: free its executor
@@ -1207,14 +1348,38 @@ impl Session {
         // land here. This runs even while an attention-layout switch is
         // pending: prefilling slots are part of the running set that
         // must drain before the switch can apply.
-        for idx in 0..self.slots.len() {
-            let prefilling =
-                self.slots[idx].as_ref().map_or(false, |s| s.prefill.is_some());
-            if !prefilling {
-                continue;
+        if self.config.pipeline_chunks > 1 {
+            // Micro-chunk pipeline: batch same-(cursor, length) joiner
+            // chunks into one ranged prefill call per group. Grouping
+            // is a pure function of slot state (BTreeMap keys iterate
+            // in ascending cursor order; members keep ascending slot
+            // order), so the call sequence — and with it the fault
+            // clock — is deterministic for a given request stream.
+            let mut groups: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
+                std::collections::BTreeMap::new();
+            for idx in 0..self.slots.len() {
+                if let Some((row, cursor)) =
+                    self.slots[idx].as_ref().and_then(|s| s.prefill.as_ref())
+                {
+                    groups
+                        .entry((*cursor, self.chunk_len(row.len(), *cursor)))
+                        .or_default()
+                        .push(idx);
+                }
             }
-            if !self.advance_chunk(exec, idx, &mut out)? {
-                running -= 1;
+            for group in groups.values() {
+                running -= self.advance_chunks(exec, group, &mut out)?;
+            }
+        } else {
+            for idx in 0..self.slots.len() {
+                let prefilling =
+                    self.slots[idx].as_ref().map_or(false, |s| s.prefill.is_some());
+                if !prefilling {
+                    continue;
+                }
+                if !self.advance_chunk(exec, idx, &mut out)? {
+                    running -= 1;
+                }
             }
         }
 
@@ -1804,6 +1969,7 @@ pub fn serve_with_recorder(
     recorder: Recorder,
 ) -> Result<ServeReport> {
     exec.set_quant(config.quant)?;
+    exec.set_pipeline_chunks(config.pipeline_chunks)?;
     if config.kv.is_paged() && scheduling != Scheduling::Streaming {
         anyhow::bail!(
             "paged KV serves the streaming scheduler only: gang prefill owns whole \
@@ -1862,6 +2028,21 @@ impl EngineBuilder {
         self
     }
 
+    /// Micro-chunk pipeline width `K` on the host executor (default 1
+    /// = module-sequential). See [`ServeConfig::pipeline_chunks`].
+    pub fn pipeline_chunks(mut self, chunks: usize) -> EngineBuilder {
+        self.config.pipeline_chunks = chunks;
+        self
+    }
+
+    /// Budget-driven prefill chunk sizing in milliseconds (default 0 =
+    /// static `prefill_chunk` sizing). See
+    /// [`ServeConfig::prefill_budget_ms`].
+    pub fn prefill_budget_ms(mut self, ms: f64) -> EngineBuilder {
+        self.config.prefill_budget_ms = ms;
+        self
+    }
+
     /// Online-adaptive plan selection (consulted per admission
     /// boundary in streaming mode, per batch in gang mode).
     pub fn adaptive(mut self, adaptive: AdaptiveServing) -> EngineBuilder {
@@ -1909,6 +2090,8 @@ impl EngineBuilder {
         );
         exec.set_kv_layout(self.config.kv)
             .expect("host executor accepts the configured KV layout");
+        exec.set_pipeline_chunks(self.config.pipeline_chunks)
+            .expect("the pipeline needs at least one micro-chunk (pipeline_chunks >= 1)");
         let mut session = Session::new(&exec, self.config, self.scheduling);
         if let Some(recorder) = self.recorder {
             session.recorder = recorder;
@@ -1943,6 +2126,12 @@ impl EngineBuilder {
             anyhow::bail!(
                 "paged KV is host-backend only: the fixed-shape PJRT artifacts address \
                  contiguous padded KV rows (drop --kv paged, or use --backend host)"
+            );
+        }
+        if self.config.pipeline_chunks > 1 {
+            anyhow::bail!(
+                "micro-chunk pipelining is host-backend only: the PJRT artifacts are \
+                 monolithic full-batch programs (drop --pipeline-chunks, or use --backend host)"
             );
         }
         let exec = ModelExecutor::new(rt)?;

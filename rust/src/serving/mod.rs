@@ -40,7 +40,9 @@ pub use engine::{
 };
 pub use metrics::Metrics;
 pub use router::{Router, RouterPolicy};
-pub use server::{serve_on, serve_workload, AdaptiveServing, ServeConfig, ServeReport};
+pub use server::{
+    serve_on, serve_workload, AdaptiveServing, GangConfigError, ServeConfig, ServeReport,
+};
 
 use std::time::Instant;
 

@@ -91,6 +91,26 @@ pub struct ServeConfig {
     /// its TTFT) land with the final chunk. Ignored by the gang
     /// scheduler, which has no peers to protect during a prefill.
     pub prefill_chunk: usize,
+    /// Micro-chunk pipeline width `K` for the host executor (`1` =
+    /// module-sequential, the legacy path). With `K > 1` every expert
+    /// layer splits its token batch into `K` ranged chunks so chunk
+    /// `i`'s FFN compute overlaps chunk `i-1`'s combine, and the
+    /// streaming scheduler batches same-length joiner chunks into one
+    /// ranged prefill call. Bit-identical per-request tokens at any
+    /// `K` (chunk outputs are exact row ranges concatenated in chunk
+    /// order; `EngineMode::Sequential` stays the oracle). Host backend
+    /// only. See `hap serve --pipeline-chunks`.
+    pub pipeline_chunks: usize,
+    /// Streaming scheduler, budget-driven chunk sizing: when `> 0` and
+    /// `pipeline_chunks > 1`, joiner prefill chunks are sized from the
+    /// **measured** prefill rate (EWMA of tokens/second) so one chunk
+    /// costs about this many milliseconds — the per-iteration budget —
+    /// instead of the static `prefill_chunk` token count. Sizing is
+    /// wall-clock-derived and therefore run-to-run nondeterministic;
+    /// tokens stay bit-identical regardless (chunking is exact for any
+    /// chunk sizes), but deterministic-trace and fault-schedule
+    /// comparisons should keep this at `0`. `0` = static sizing.
+    pub prefill_budget_ms: f64,
     /// Weight quantization for the packed host shards (`None` = f32).
     /// Host backend + blocked kernels only; applied to the executor by
     /// the engine builder / `serve_with` before any shard goes
@@ -119,6 +139,8 @@ impl ServeConfig {
             policy: RouterPolicy::Fcfs,
             queue_capacity: 1024,
             prefill_chunk: 0,
+            pipeline_chunks: 1,
+            prefill_budget_ms: 0.0,
             quant: None,
             kv: KvLayout::Padded,
             adaptive: None,
@@ -134,6 +156,8 @@ impl ServeConfig {
             policy: RouterPolicy::Fcfs,
             queue_capacity: 1024,
             prefill_chunk: 0,
+            pipeline_chunks: 1,
+            prefill_budget_ms: 0.0,
             quant: None,
             kv: KvLayout::Padded,
             adaptive: None,
@@ -203,6 +227,67 @@ pub struct ServeReport {
     pub trace: Vec<crate::obs::TraceEvent>,
 }
 
+/// Typed config rejection from the deprecated gang-mode wrappers
+/// ([`serve_workload`]/[`serve_on`]): streaming-scheduler knobs used to
+/// be accepted and silently ignored there — a config that *looks* like
+/// it chunks or pipelines prefill but doesn't. The wrappers now refuse
+/// the combination up front; drive [`crate::serving::Engine`] (or
+/// [`serve_with`] with [`Scheduling::Streaming`]) to actually use the
+/// knob, or zero it for gang scheduling.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum GangConfigError {
+    /// `prefill_chunk != 0`: gang prefill owns the whole padded batch
+    /// in one shot; there are no peers to protect between chunks.
+    PrefillChunk { tokens: usize },
+    /// `pipeline_chunks > 1`: micro-chunk pipelining is configured per
+    /// engine run; the deprecated wrappers predate the knob and never
+    /// forwarded it.
+    PipelineChunks { chunks: usize },
+    /// `prefill_budget_ms > 0`: budget-driven chunk sizing is a
+    /// streaming-scheduler feature (it sizes *joiner* chunks against
+    /// peer decode iterations, which gang mode doesn't have).
+    PrefillBudget { ms: f64 },
+}
+
+impl std::fmt::Display for GangConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GangConfigError::PrefillChunk { tokens } => write!(
+                f,
+                "prefill_chunk={tokens} is a streaming-scheduler knob; the deprecated gang \
+                 wrappers would silently ignore it (use the streaming Engine, or set it to 0)"
+            ),
+            GangConfigError::PipelineChunks { chunks } => write!(
+                f,
+                "pipeline_chunks={chunks} is not forwarded by the deprecated gang wrappers \
+                 (use the streaming Engine or serve_with, or set it to 1)"
+            ),
+            GangConfigError::PrefillBudget { ms } => write!(
+                f,
+                "prefill_budget_ms={ms} is a streaming-scheduler knob; gang prefill has no \
+                 per-iteration budget (use the streaming Engine, or set it to 0)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for GangConfigError {}
+
+/// Reject streaming-only knobs on the deprecated gang wrappers with a
+/// typed, downcastable error instead of ignoring the fields.
+fn check_gang_config(config: &ServeConfig) -> Result<()> {
+    if config.prefill_chunk != 0 {
+        return Err(GangConfigError::PrefillChunk { tokens: config.prefill_chunk }.into());
+    }
+    if config.pipeline_chunks > 1 {
+        return Err(GangConfigError::PipelineChunks { chunks: config.pipeline_chunks }.into());
+    }
+    if config.prefill_budget_ms > 0.0 {
+        return Err(GangConfigError::PrefillBudget { ms: config.prefill_budget_ms }.into());
+    }
+    Ok(())
+}
+
 /// Deprecated entry point: serve a whole workload to completion on the
 /// PJRT artifacts (gang-scheduled). Builds one executor for the run and
 /// delegates to [`serve_on`]. New code: [`crate::serving::Engine`].
@@ -211,6 +296,9 @@ pub fn serve_workload(
     config: &ServeConfig,
     workload: Vec<Request>,
 ) -> Result<ServeReport> {
+    // Fail before the executor is built: a rejected config shouldn't
+    // cost an artifact load.
+    check_gang_config(config)?;
     let mut exec = ModelExecutor::new(rt)?;
     serve_on(&mut exec, config, workload)
 }
@@ -220,12 +308,15 @@ pub fn serve_workload(
 /// persists across batches and across calls. Thin wrapper over the
 /// engine core ([`serve_with`] with [`Scheduling::Gang`]); a workload
 /// larger than `queue_capacity` drains through scheduler iterations
-/// instead of aborting.
+/// instead of aborting. Streaming-only knobs (`prefill_chunk`,
+/// `pipeline_chunks`, `prefill_budget_ms`) are rejected with a typed
+/// [`GangConfigError`] rather than silently ignored.
 pub fn serve_on(
     exec: &mut ModelExecutor,
     config: &ServeConfig,
     workload: Vec<Request>,
 ) -> Result<ServeReport> {
+    check_gang_config(config)?;
     serve_with(exec, config, Scheduling::Gang, workload)
 }
 
@@ -299,6 +390,43 @@ mod tests {
         let mut q = ServeConfig::tp(4);
         q.quant = Some(QuantKind::Int8);
         assert_eq!(q.label(), "attn=TP4 experts=TP4 quant=int8");
+    }
+
+    #[test]
+    fn gang_wrappers_reject_streaming_knobs_with_typed_errors() {
+        // Regression: serve_on/serve_workload used to accept
+        // prefill_chunk (and now the pipeline knobs) and silently
+        // ignore them — the run "worked" but did something other than
+        // what the config asked for. They must fail up front with a
+        // downcastable GangConfigError.
+        let m = crate::runtime::TinyModelMeta::host_demo();
+        let mut exec = ModelExecutor::host(crate::model::WeightStore::synthetic(&m, 1));
+        let cases: Vec<(ServeConfig, GangConfigError)> = vec![
+            (
+                ServeConfig { prefill_chunk: 8, ..ServeConfig::tp(4) },
+                GangConfigError::PrefillChunk { tokens: 8 },
+            ),
+            (
+                ServeConfig { pipeline_chunks: 4, ..ServeConfig::tp(4) },
+                GangConfigError::PipelineChunks { chunks: 4 },
+            ),
+            (
+                ServeConfig { prefill_budget_ms: 2.5, ..ServeConfig::tp(4) },
+                GangConfigError::PrefillBudget { ms: 2.5 },
+            ),
+        ];
+        for (config, want) in cases {
+            let err = serve_on(&mut exec, &config, Vec::new())
+                .expect_err("gang wrapper must reject streaming-only knobs");
+            let got = err
+                .downcast_ref::<GangConfigError>()
+                .unwrap_or_else(|| panic!("untyped error: {err:#}"));
+            assert_eq!(*got, want);
+        }
+        // The defaults still serve (empty workload: an immediate,
+        // clean no-op run).
+        let report = serve_on(&mut exec, &ServeConfig::tp(4), Vec::new()).unwrap();
+        assert!(report.responses.is_empty());
     }
 
     #[test]

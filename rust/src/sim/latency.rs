@@ -93,6 +93,119 @@ impl ModuleLatency {
     }
 }
 
+/// Overlap-aware iteration-latency term for the executor's micro-chunk
+/// pipeline (`--pipeline-chunks`): with the expert FFN of chunk `i`
+/// overlapping chunk `i-1`'s combine, a layer's expert+comm span is no
+/// longer `T_expert + T_comm` but
+///
+/// ```text
+/// T_overlap = max(T_expert, T_comm) + ε·min(T_expert, T_comm) + o
+/// ```
+///
+/// where `ε ∈ [0, 1]` is the residual serialization fraction (the
+/// share of the shorter leg the pipeline fails to hide: first-chunk
+/// fill and last-chunk drain, fold ordering) and `o ≥ 0` is a fixed
+/// per-layer pipelining overhead (chunk fan-out, extra fold
+/// scheduling) that lets the pipelined plan lose on compute-dominated
+/// shapes. `ε = 1, o = 0` degenerates to the sequential sum, so a
+/// planner carrying `Some(OverlapModel)` with those values ranks plans
+/// exactly like one carrying `None`.
+///
+/// Both parameters are calibrated from measured traces
+/// ([`OverlapModel::fit`]): the PR-7 recorder attributes per-module
+/// seconds span-based under overlap (expert + collective can sum past
+/// wall time; the excess IS the measured overlap share), which gives
+/// per-iteration `(compute, comm, span)` samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OverlapModel {
+    /// Residual serialization fraction ε ∈ [0, 1].
+    pub eps: f64,
+    /// Fixed per-layer pipelining overhead `o` in seconds (≥ 0).
+    pub overhead: f64,
+}
+
+impl OverlapModel {
+    /// Clamps into the valid region (ε ∈ [0, 1], o ≥ 0) so a noisy fit
+    /// can never produce a model claiming better-than-perfect overlap.
+    pub fn new(eps: f64, overhead: f64) -> OverlapModel {
+        OverlapModel { eps: eps.clamp(0.0, 1.0), overhead: overhead.max(0.0) }
+    }
+
+    /// The no-op model: ranks plans identically to no overlap model.
+    pub fn sequential() -> OverlapModel {
+        OverlapModel { eps: 1.0, overhead: 0.0 }
+    }
+
+    /// Overlapped span of an expert/comm pair (seconds).
+    pub fn overlapped(&self, compute: f64, comm: f64) -> f64 {
+        compute.max(comm) + self.eps * compute.min(comm) + self.overhead
+    }
+
+    /// The comm term that, summed sequentially with `lat.expert`,
+    /// yields the overlapped span: `T_overlap − T_expert`. Non-negative
+    /// (`max(e, c) ≥ e` and `o ≥ 0`), so it slots into any cost table
+    /// or ILP objective built from additive per-module terms.
+    pub fn effective_comm(&self, lat: &ModuleLatency) -> f64 {
+        self.overlapped(lat.expert, lat.comm) - lat.expert
+    }
+
+    /// Rewrite a per-layer latency for pipelined execution: attn and
+    /// expert unchanged, comm replaced by [`Self::effective_comm`], so
+    /// `total()` is `attn + overlapped(expert, comm)`.
+    pub fn pipelined(&self, lat: &ModuleLatency) -> ModuleLatency {
+        ModuleLatency { attn: lat.attn, expert: lat.expert, comm: self.effective_comm(lat) }
+    }
+
+    /// Least-squares calibration from measured samples of
+    /// `(compute_s, comm_s, overlapped_span_s)` — e.g. per-iteration
+    /// expert seconds, collective seconds, and the measured wall span
+    /// of the expert+combine phase from a pipelined-run trace. Solves
+    /// `span − max(compute, comm) = ε·min(compute, comm) + o` in the
+    /// two unknowns via the closed-form normal equations, then clamps
+    /// into the valid region. Falls back to [`Self::sequential`] when
+    /// the samples cannot identify ε (fewer than two points, or no
+    /// variance in the min leg).
+    pub fn fit(samples: &[(f64, f64, f64)]) -> OverlapModel {
+        if samples.len() < 2 {
+            return OverlapModel::sequential();
+        }
+        let n = samples.len() as f64;
+        let (mut sx, mut sy, mut sxx, mut sxy) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        for &(compute, comm, span) in samples {
+            let x = compute.min(comm);
+            let y = span - compute.max(comm);
+            sx += x;
+            sy += y;
+            sxx += x * x;
+            sxy += x * y;
+        }
+        let var = sxx - sx * sx / n;
+        if var <= 0.0 || !var.is_finite() {
+            return OverlapModel::sequential();
+        }
+        let eps = (sxy - sx * sy / n) / var;
+        let overhead = (sy - eps * sx) / n;
+        OverlapModel::new(eps, overhead)
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj(vec![
+            ("eps", self.eps.into()),
+            ("overhead", self.overhead.into()),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> Option<OverlapModel> {
+        Some(OverlapModel { eps: j.get("eps")?.as_f64()?, overhead: j.get("overhead")?.as_f64()? })
+    }
+
+    /// Cache-key fingerprint: the exact parameter bits, so two models
+    /// disagreeing in the last ulp never share cached plans.
+    pub fn fingerprint(&self) -> String {
+        format!("{:016x}/{:016x}", self.eps.to_bits(), self.overhead.to_bits())
+    }
+}
+
 /// Per-stage latency plus the end-to-end total for a scenario.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct StageLatency {
@@ -733,6 +846,42 @@ mod tests {
             };
             assert_eq!(par.comm_time(&ev).to_bits(), ser.comm_time(&ev).to_bits(), "{ev:?}");
         }
+    }
+
+    #[test]
+    fn overlap_model_fit_recovers_parameters() {
+        // Synthetic samples generated from a known (ε, o) must fit
+        // back exactly (the normal equations are exact on noiseless
+        // data), and the degenerate cases fall back to sequential.
+        let truth = OverlapModel::new(0.25, 3e-4);
+        let samples: Vec<(f64, f64, f64)> = [(2e-3, 1e-3), (1e-3, 4e-3), (5e-3, 5e-4), (2e-4, 9e-4)]
+            .iter()
+            .map(|&(e, c)| (e, c, truth.overlapped(e, c)))
+            .collect();
+        let fit = OverlapModel::fit(&samples);
+        assert!((fit.eps - truth.eps).abs() < 1e-9, "eps {}", fit.eps);
+        assert!((fit.overhead - truth.overhead).abs() < 1e-12, "o {}", fit.overhead);
+        assert_eq!(OverlapModel::fit(&[]), OverlapModel::sequential());
+        assert_eq!(OverlapModel::fit(&samples[..1]), OverlapModel::sequential());
+        // No variance in the min leg → unidentifiable → sequential.
+        let flat = vec![(1e-3, 2e-3, 3e-3), (1e-3, 5e-3, 6e-3)];
+        assert_eq!(OverlapModel::fit(&flat), OverlapModel::sequential());
+    }
+
+    #[test]
+    fn overlap_model_sequential_is_identity_and_comm_nonnegative() {
+        let seq = OverlapModel::sequential();
+        let lat = ModuleLatency { attn: 1e-3, expert: 2e-3, comm: 5e-4 };
+        assert_eq!(seq.pipelined(&lat).total().to_bits(), lat.total().to_bits());
+        for eps in [0.0, 0.3, 1.0] {
+            for o in [0.0, 1e-4] {
+                let m = OverlapModel::new(eps, o);
+                assert!(m.effective_comm(&lat) >= 0.0);
+                let round = OverlapModel::from_json(&m.to_json()).unwrap();
+                assert_eq!(round.fingerprint(), m.fingerprint());
+            }
+        }
+        assert_eq!(OverlapModel::new(7.0, -1.0), OverlapModel { eps: 1.0, overhead: 0.0 });
     }
 
     #[test]

@@ -19,4 +19,4 @@ pub mod latency;
 pub mod memory;
 pub mod microbench;
 
-pub use latency::{LatencyModel, LayerQuery, ModuleLatency, StageLatency};
+pub use latency::{LatencyModel, LayerQuery, ModuleLatency, OverlapModel, StageLatency};

@@ -13,6 +13,36 @@ pub use space::{SearchSpace, StrategyPruning};
 use crate::util::json::Json;
 use std::fmt;
 
+/// Per-stage iteration-loop execution mode: the classic module-
+/// sequential loop, or the micro-chunk pipelined loop in which chunk
+/// `i`'s expert FFN overlaps chunk `i−1`'s combine collective (see
+/// [`crate::model::exec::ModelExecutor::set_pipeline_chunks`]). The
+/// planner only enumerates `Pipelined` when it carries a calibrated
+/// [`crate::sim::OverlapModel`]; token outputs are bit-identical either
+/// way, so the axis is purely a latency decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ExecMode {
+    /// One module at a time over the full batch.
+    Sequential,
+    /// Micro-chunk pipeline: expert compute overlaps combine comm.
+    Pipelined,
+}
+
+impl ExecMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Sequential => "sequential",
+            ExecMode::Pipelined => "pipelined",
+        }
+    }
+}
+
+impl fmt::Display for ExecMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Attention-module parallel strategy: `tp × dp = N` devices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct AttnStrategy {

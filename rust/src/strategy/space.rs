@@ -13,7 +13,7 @@
 
 use crate::config::{hardware::NodeConfig, model::MoEModelConfig, scenario::Scenario};
 use crate::sim::memory::{self, MemoryModel};
-use crate::strategy::{AttnStrategy, ExpertStrategy};
+use crate::strategy::{AttnStrategy, ExecMode, ExpertStrategy};
 
 /// Why a candidate strategy was rejected (for `--verbose` output and
 /// tests).
@@ -38,6 +38,11 @@ pub struct SearchSpace {
     /// Feasible Expert strategies (K_e entries) — candidates for both
     /// prefill and decode stages.
     pub expert: Vec<ExpertStrategy>,
+    /// Iteration-loop execution modes available per stage. Enumeration
+    /// yields `[Sequential]`; a planner carrying a calibrated
+    /// [`crate::sim::OverlapModel`] widens this to both modes so the
+    /// ILP can choose the micro-chunk pipelined loop per stage.
+    pub exec: Vec<ExecMode>,
     /// Rejected candidates with reasons (diagnostics).
     pub pruned: Vec<(String, StrategyPruning)>,
 }
@@ -123,7 +128,12 @@ impl SearchSpace {
             }
         }
 
-        SearchSpace { attn: attn_ok, expert: expert_ok, pruned }
+        SearchSpace {
+            attn: attn_ok,
+            expert: expert_ok,
+            exec: vec![ExecMode::Sequential],
+            pruned,
+        }
     }
 
     /// K_a — number of attention strategies.
@@ -137,9 +147,15 @@ impl SearchSpace {
     }
 
     /// Size of the full decision space: attention strategy × expert
-    /// prefill strategy × expert decode strategy.
+    /// prefill strategy × expert decode strategy × per-stage execution
+    /// mode (the exec axis contributes 1 without an overlap model).
     pub fn decision_count(&self) -> usize {
-        self.k_a() * self.k_e() * self.k_e()
+        self.k_a() * self.k_e() * self.k_e() * self.exec.len() * self.exec.len()
+    }
+
+    /// True when the pipelined iteration loop is a candidate.
+    pub fn has_pipelined(&self) -> bool {
+        self.exec.contains(&ExecMode::Pipelined)
     }
 
     /// True if a memory-feasible (attn, expert) pairing exists.

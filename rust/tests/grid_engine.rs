@@ -260,6 +260,8 @@ fn host_serving_tokens_invariant_across_plans() {
         policy: hap::serving::RouterPolicy::Fcfs,
         queue_capacity: 1024,
         prefill_chunk: 0,
+        pipeline_chunks: 1,
+        prefill_budget_ms: 0.0,
         quant: None,
         kv: hap::model::KvLayout::Padded,
         adaptive: None,

@@ -7,7 +7,8 @@
 //! cols, and reduction dims off the `NB = 16` panel size, GQA head
 //! groups, top-k edges) through both paths and compare `to_bits`.
 //! Built with `--features simd`, the same sweeps cover the explicit
-//! SSE2 lane kernel — the blocked path dispatches to it internally.
+//! lane kernels — the blocked path dispatches internally to the AVX2
+//! 8-lane kernel when the host CPU reports the feature, SSE2 otherwise.
 //!
 //! The quantized path promises something weaker by design (int8/int4
 //! round-tripping is lossy) but exact in a testable sense: the fused
@@ -70,6 +71,39 @@ fn blocked_matmul_matches_reference_bitwise() {
             "blocked [{rows}x{k}]@[{k}x{cols}] diverges from reference"
         );
         prop_assert!(bits_eq(&packed.dequantized(), &b), "f32 pack/unpack not lossless");
+        Ok(())
+    });
+}
+
+/// The packed matmul dispatches per-call to the AVX2 8-lane kernel
+/// whenever the host CPU reports the feature (SSE2 4-lane otherwise;
+/// portable scalar off x86_64 or without `--features simd`). Whatever
+/// width this machine lands on, the bits must match the scalar
+/// reference — panel-exact shapes stress the full 16-lane vector path,
+/// ragged ones the zero-padded tail panels.
+#[test]
+fn simd_width_dispatch_is_bitwise_invisible() {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    eprintln!(
+        "simd width under test: {}",
+        if is_x86_feature_detected!("avx2") { "avx2 (8-lane)" } else { "sse2 (4-lane)" }
+    );
+    check_default("native-width matmul ≡ scalar reference", |rng| {
+        let rows = rng.range(1, 9);
+        // Half the draws are exact multiples of NB so every accumulate
+        // runs the full-panel vector path; the rest leave ragged tails.
+        let (k, cols) = if rng.chance(0.5) {
+            (NB * rng.range(1, 5), NB * rng.range(1, 5))
+        } else {
+            (ragged_dim(rng, 4 * NB), ragged_dim(rng, 4 * NB))
+        };
+        let a = rng.normal_vec_f32(rows * k, 0.5);
+        let b = rng.normal_vec_f32(k * cols, 0.5);
+        let packed = PackedRhs::pack_slice(&b, k, cols, None);
+        prop_assert!(
+            bits_eq(&packed.matmul(&a, rows), &reference::matmul(&a, rows, k, &b, cols)),
+            "native-width [{rows}x{k}]@[{k}x{cols}] diverges from scalar reference"
+        );
         Ok(())
     });
 }
